@@ -1,0 +1,75 @@
+//! Replay an Azure-style production trace (Table 3 sample) through the
+//! control plane under virtual time and print the paper-style report.
+//!
+//! ```bash
+//! cargo run --release --example azure_replay [trace_id 0..8] [policy]
+//! ```
+
+use mqfq::experiments::{run, summary_table};
+use mqfq::plane::PlaneConfig;
+use mqfq::scheduler::policies::PolicyKind;
+use mqfq::util::table::Table;
+use mqfq::workload::azure::{self, AzureConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let trace_id: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let policy = args
+        .get(1)
+        .and_then(|s| PolicyKind::parse(s))
+        .unwrap_or(PolicyKind::Mqfq);
+
+    let (workload, trace) = azure::generate(&AzureConfig {
+        trace_id,
+        duration_s: 600.0,
+        load_scale: 1.0,
+    });
+    println!(
+        "Azure sample {trace_id}: {} functions, {} invocations, {:.2} req/s",
+        workload.len(),
+        trace.len(),
+        trace.req_per_sec()
+    );
+
+    let cfg = PlaneConfig {
+        policy,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let (summary, result) = run(
+        &format!("{} trace{trace_id}", policy.name()),
+        workload,
+        &trace,
+        cfg,
+    );
+    println!(
+        "replayed {} virtual seconds in {:.1?}\n",
+        summary.makespan_s.round(),
+        t0.elapsed()
+    );
+    print!("{}", summary_table(std::slice::from_ref(&summary)).render());
+
+    // Per-function breakdown (Fig 6b style).
+    let mut t = Table::new(&[
+        "function",
+        "inv",
+        "mean-lat(s)",
+        "sd(s)",
+        "cold",
+        "host-warm",
+        "gpu-warm",
+    ]);
+    let w = result.plane.workload().clone();
+    for agg in result.recorder().per_function() {
+        t.row(&[
+            w.func(agg.func).name.clone(),
+            agg.invocations.to_string(),
+            format!("{:.2}", agg.mean_latency_s),
+            format!("{:.2}", agg.var_latency.sqrt()),
+            agg.cold.to_string(),
+            agg.host_warm.to_string(),
+            agg.gpu_warm.to_string(),
+        ]);
+    }
+    print!("\n{}", t.render());
+}

@@ -1,0 +1,53 @@
+//! Head-to-head queueing-policy comparison on one workload — the §6.2
+//! experiment as a runnable example.
+//!
+//! ```bash
+//! cargo run --release --example policy_comparison [zipf|azure] [D]
+//! ```
+
+use mqfq::experiments::{run, summary_table};
+use mqfq::plane::PlaneConfig;
+use mqfq::scheduler::policies::PolicyKind;
+use mqfq::workload::azure::{self, AzureConfig};
+use mqfq::workload::zipf::{self, ZipfConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let kind = args.first().map(|s| s.as_str()).unwrap_or("azure");
+    let d: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);
+
+    let make = || match kind {
+        "zipf" => zipf::generate(&ZipfConfig {
+            total_rate: 2.0,
+            duration_s: 600.0,
+            seed: 1,
+            ..Default::default()
+        }),
+        _ => azure::generate(&AzureConfig::default()),
+    };
+
+    let mut rows = Vec::new();
+    for policy in [
+        PolicyKind::Fcfs,
+        PolicyKind::Batch,
+        PolicyKind::PaellaSjf,
+        PolicyKind::Eevdf,
+        PolicyKind::Sfq,
+        PolicyKind::Mqfq,
+    ] {
+        let (w, t) = make();
+        let cfg = PlaneConfig {
+            policy,
+            d,
+            ..Default::default()
+        };
+        rows.push(run(&format!("{} D={d}", policy.name()), w, &t, cfg).0);
+    }
+    println!("== policy comparison on the {kind} workload ==");
+    print!("{}", summary_table(&rows).render());
+    let best = rows
+        .iter()
+        .min_by(|a, b| a.wavg_latency_s.partial_cmp(&b.wavg_latency_s).unwrap())
+        .unwrap();
+    println!("\nbest policy: {}", best.label);
+}

@@ -1,0 +1,99 @@
+"""AOT pipeline: lower every catalog function to HLO text + golden manifest.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (behind the
+Rust `xla` 0.1.6 crate) rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  <name>.hlo.txt     one per catalog function, lowered with return_tuple=True
+  manifest.txt       plain-text manifest the Rust runtime parses:
+                         fn <name>
+                         in <d0>x<d1>... <unit|sym>
+                         out <idx> <d0>x<d1>... l2=<f> first=<f,f,f,f>
+                         end
+
+Golden outputs are computed here with the same deterministic inputs the
+Rust side regenerates (gen.py / goldgen.rs), so `cargo test` can validate
+every artifact end-to-end without binary tensor files.
+
+Usage:  cd python && python -m compile.aot [--out-dir ../artifacts] [--only fn]
+"""
+
+import argparse
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import gen
+from .model import REGISTRY
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def example_inputs(name: str, specs):
+    seed = gen.fnv1a(name)
+    return [
+        gen.fill(seed + i, shape, kind) for i, (shape, kind) in enumerate(specs)
+    ]
+
+
+def shape_str(shape) -> str:
+    return "x".join(str(d) for d in shape)
+
+
+def lower_one(name: str, out_dir: str, manifest_lines: list) -> None:
+    fn, specs = REGISTRY[name]
+    inputs = example_inputs(name, specs)
+    lowered = jax.jit(fn).lower(*inputs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+
+    outputs = fn(*[np.asarray(a) for a in inputs])
+    manifest_lines.append(f"fn {name}")
+    for (shape, kind) in specs:
+        manifest_lines.append(f"in {shape_str(shape)} {kind}")
+    for idx, out in enumerate(outputs):
+        arr = np.asarray(out, dtype=np.float32).reshape(-1)
+        l2 = float(np.sqrt(np.sum(arr.astype(np.float64) ** 2)))
+        first = ",".join(f"{v:.8e}" for v in arr[:4])
+        manifest_lines.append(
+            f"out {idx} {shape_str(np.asarray(out).shape)} l2={l2:.8e} first={first}"
+        )
+    manifest_lines.append("end")
+    print(f"  {name}: {len(text)} chars, {len(outputs)} output(s)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--only", default=None, help="lower a single function")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = [args.only] if args.only else list(REGISTRY)
+    manifest_lines: list = []
+    for name in names:
+        lower_one(name, args.out_dir, manifest_lines)
+
+    if not args.only:
+        with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(manifest_lines) + "\n")
+        print(f"wrote {len(names)} artifacts + manifest.txt to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Deterministic input generation shared (by construction) with Rust.
+
+The Rust runtime regenerates the exact same f32 inputs when validating
+artifacts against the golden manifest, so no binary tensor interchange is
+needed.  Both sides implement:
+
+    splitmix64(state):  state += 0x9E3779B97F4A7C15
+                        z = state
+                        z = (z ^ (z >> 30)) * 0xBF58476D1CE4E5B9
+                        z = (z ^ (z >> 27)) * 0x94D049BB133111EB
+                        return z ^ (z >> 31)
+
+    to_unit_f32(u64):   ((u >> 40) as f32) / 2^24          in [0, 1)
+    sym:                unit - 0.5                          in [-0.5, 0.5)
+
+The Rust twin lives in rust/src/runtime/goldgen.rs — keep in sync.
+"""
+
+import numpy as np
+
+MASK = (1 << 64) - 1
+
+
+class SplitMix64:
+    def __init__(self, seed: int):
+        self.state = seed & MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return (z ^ (z >> 31)) & MASK
+
+
+def fill(seed: int, shape, kind: str = "sym") -> np.ndarray:
+    """Deterministic f32 array; kind is 'unit' ([0,1)) or 'sym' ([-0.5,0.5))."""
+    rng = SplitMix64(seed)
+    n = int(np.prod(shape))
+    out = np.empty(n, dtype=np.float32)
+    for i in range(n):
+        out[i] = np.float32(rng.next_u64() >> 40) / np.float32(1 << 24)
+    if kind == "sym":
+        out -= np.float32(0.5)
+    elif kind != "unit":
+        raise ValueError(f"unknown kind {kind}")
+    return out.reshape(shape)
+
+
+def fnv1a(name: str) -> int:
+    """Stable per-function seed (FNV-1a 64 of the function name)."""
+    h = 0xCBF29CE484222325
+    for b in name.encode():
+        h = ((h ^ b) * 0x100000001B3) & MASK
+    return h

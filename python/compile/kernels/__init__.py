@@ -1,0 +1,25 @@
+"""Layer-1 Pallas kernels for the MQFQ-Sticky function catalog.
+
+Each kernel is the compute hot-spot of one serverless function class from
+the paper's Table 1 (ML inference, HPC, stencil, video).  Kernels are
+written for the TPU execution model (VMEM blocks via BlockSpec, MXU-shaped
+matmul tiles, VPU-friendly elementwise tiles) but lowered with
+``interpret=True`` so the resulting HLO runs on the CPU PJRT client that
+the Rust runtime embeds.  ``ref.py`` holds the pure-jnp oracles used by the
+pytest/hypothesis correctness suite.
+"""
+
+from .matmul import matmul, DEFAULT_BLOCK as MATMUL_DEFAULT_BLOCK
+from .stencil import diffusion_step, diffusion
+from .reduce import block_sum, l2_norm
+from .pointwise import video_filter
+
+__all__ = [
+    "matmul",
+    "MATMUL_DEFAULT_BLOCK",
+    "diffusion_step",
+    "diffusion",
+    "block_sum",
+    "l2_norm",
+    "video_filter",
+]

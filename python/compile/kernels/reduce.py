@@ -1,0 +1,51 @@
+"""Grid-strided block reduction — the HPC post-processing hot-spot.
+
+TPU adaptation of the warp-shuffle tree reductions in the paper's HPC
+functions (``fft`` magnitude/energy, ``isoneural``): instead of warp
+shuffles, each grid step reduces one (bm, cols) VMEM block into a single
+(1, cols) accumulator block that stays resident across the whole grid
+(constant output index map), i.e. a grid-strided partial reduction.  The
+final cross-column fold is a cheap jnp op in the caller.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block_sum_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...], axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def block_sum(x: jax.Array, *, block_rows: int = 64) -> jax.Array:
+    """Column-wise sum of a 2-D array via a grid-strided Pallas reduction.
+
+    Returns a (1, cols) array; callers fold columns as needed.
+    """
+    rows, cols = x.shape
+    bm = min(block_rows, rows)
+    assert rows % bm == 0, f"{rows} rows not divisible by block {bm}"
+    return pl.pallas_call(
+        _block_sum_kernel,
+        grid=(rows // bm,),
+        in_specs=[pl.BlockSpec((bm, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, cols), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, cols), x.dtype),
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def l2_norm(x: jax.Array, *, block_rows: int = 64) -> jax.Array:
+    """Scalar L2 norm computed through the block_sum kernel."""
+    partial = block_sum(x * x, block_rows=block_rows)
+    return jnp.sqrt(jnp.sum(partial))

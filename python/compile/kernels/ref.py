@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Layer-1 Pallas kernel.
+
+These are the correctness ground truth: small, obviously-correct jnp
+implementations with no Pallas, no blocking, no grids.  The pytest +
+hypothesis suite asserts kernel == oracle across shape/dtype/parameter
+sweeps (python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x, y, preferred_element_type=x.dtype)
+
+
+def diffusion_step_ref(x, coeff=0.2):
+    """5-point diffusion with clamp-to-edge boundaries."""
+    up = jnp.concatenate([x[:1, :], x[:-1, :]], axis=0)
+    down = jnp.concatenate([x[1:, :], x[-1:, :]], axis=0)
+    left = jnp.concatenate([x[:, :1], x[:, :-1]], axis=1)
+    right = jnp.concatenate([x[:, 1:], x[:, -1:]], axis=1)
+    return (1.0 - coeff) * x + (coeff / 4.0) * (up + down + left + right)
+
+
+def diffusion_ref(x, iters=4, coeff=0.2):
+    for _ in range(iters):
+        x = diffusion_step_ref(x, coeff)
+    return x
+
+
+def block_sum_ref(x):
+    return jnp.sum(x, axis=0, keepdims=True)
+
+
+def l2_norm_ref(x):
+    return jnp.sqrt(jnp.sum(x * x))
+
+
+def video_filter_ref(x, levels=16, gamma=1.8, contrast=1.2):
+    g = jnp.exp(jnp.log(jnp.maximum(x, 1e-6)) * gamma)
+    q = jnp.round(g * (levels - 1)) / (levels - 1)
+    c = (q - 0.5) * contrast + 0.5
+    return jnp.clip(c, 0.0, 1.0)

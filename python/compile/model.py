@@ -1,0 +1,192 @@
+"""Layer-2 JAX compute graphs: the serverless function catalog.
+
+One entry per function class from the paper's Table 1 (plus ``cupy``,
+``rnn`` and ``srad`` which appear in Figures 3, 5a and 7b).  These are the
+*bodies* of the black-box functions that MQFQ-Sticky schedules: in the
+paper they are TensorFlow / ffmpeg / Rodinia binaries inside CUDA
+containers; here they are JAX graphs whose hot-spots are the Layer-1
+Pallas kernels, AOT-lowered to HLO text by aot.py and executed by the
+Rust runtime via PJRT.
+
+Every function takes a fixed tuple of f32 arrays and returns a tuple of
+f32 arrays (complex intermediates are kept internal), which keeps the Rust
+literal handling uniform.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    matmul,
+    diffusion,
+    block_sum,
+    l2_norm,
+    video_filter,
+)
+
+# ---------------------------------------------------------------------------
+# Function bodies
+# ---------------------------------------------------------------------------
+
+
+def imagenet(x, w1, w2, w3):
+    """CNN-classifier proxy: 3-layer MLP + softmax over 1000-ish classes."""
+    h = jax.nn.relu(matmul(x, w1))
+    h = jax.nn.relu(matmul(h, w2))
+    logits = matmul(h, w3)
+    return (jax.nn.softmax(logits, axis=-1),)
+
+
+def roberta(x, wq, wk, wv, wo, wf1, wf2):
+    """Transformer-encoder-layer proxy: self-attention + GeLU FFN."""
+    q = matmul(x, wq)
+    k = matmul(x, wk)
+    v = matmul(x, wv)
+    scores = jnp.einsum("sd,td->st", q, k) / jnp.sqrt(jnp.float32(q.shape[-1]))
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = matmul(attn.astype(x.dtype), v) if attn.shape[-1] % 8 == 0 else attn @ v
+    y = matmul(ctx, wo) + x
+    h = jax.nn.gelu(matmul(y, wf1))
+    out = matmul(h, wf2) + y
+    return (out,)
+
+
+def ffmpeg(frame):
+    """Video-transcode proxy: fused filter pass + per-frame luma stats."""
+    filtered = video_filter(frame)
+    stats = block_sum(filtered) / jnp.float32(frame.shape[0])
+    return (filtered, stats)
+
+
+def fft(signal):
+    """HPC FFT proxy: low-pass in the frequency domain + spectral energy."""
+    n = signal.shape[0]
+    spec = jnp.fft.rfft(signal)
+    keep = spec.shape[0] // 4
+    mask = (jnp.arange(spec.shape[0]) < keep).astype(spec.dtype)
+    filtered = jnp.fft.irfft(spec * mask, n=n).astype(jnp.float32)
+    mag = jnp.abs(spec).astype(jnp.float32)[: (spec.shape[0] // 128) * 128]
+    energy = l2_norm(mag.reshape(-1, 128))
+    return (filtered, energy.reshape(1))
+
+
+def isoneural(x, w1, w2):
+    """Small-inference proxy (the paper's fastest GPU function)."""
+    h = jnp.tanh(matmul(x, w1))
+    y = matmul(h, w2)
+    stats = block_sum(y)
+    return (y, stats)
+
+
+def lud(a):
+    """Rodinia LU-decomposition proxy: blocked Schur-complement updates.
+
+    The Rodinia kernel's hot-spot is the trailing-submatrix update
+    A22 -= A21 @ A12 — exactly an MXU matmul — iterated over diagonal
+    blocks.  We run the update sweep with the Pallas matmul.
+    """
+    n = a.shape[0]
+    b = n // 2
+    a11, a12 = a[:b, :b], a[:b, b:]
+    a21, a22 = a[b:, :b], a[b:, b:]
+    # One level of blocked elimination (regularized to stay well-conditioned).
+    d = a11 + 2.0 * jnp.eye(b, dtype=a.dtype)
+    schur = a22 - matmul(matmul(a21, _inv_approx(d)), a12)
+    return (schur,)
+
+
+def _inv_approx(d, iters=6):
+    """Newton–Schulz inverse (keeps everything as matmuls for the MXU)."""
+    norm = jnp.sum(jnp.abs(d), axis=1).max()
+    x = d.T / (norm * norm)
+    eye2 = 2.0 * jnp.eye(d.shape[0], dtype=d.dtype)
+    for _ in range(iters):
+        x = matmul(x, eye2 - matmul(d, x))
+    return x
+
+
+def needle(seq_scores):
+    """Needleman–Wunsch proxy: anti-diagonal DP over a similarity matrix."""
+    n = seq_scores.shape[0]
+    gap = jnp.float32(-0.33)
+
+    def row_step(prev_row, sim_row):
+        # DP recurrence vectorized along the row; the column scan is a
+        # cumulative max that lax handles natively.
+        up = prev_row + gap
+        diag = jnp.concatenate([prev_row[:1] + gap, prev_row[:-1]]) + sim_row
+        best = jnp.maximum(up, diag)
+        best = jax.lax.associative_scan(jnp.maximum, best)
+        return best, best
+
+    init = jnp.arange(n, dtype=jnp.float32) * gap
+    final, rows = jax.lax.scan(row_step, init, seq_scores)
+    return (final, rows[-1:, :])
+
+
+def pathfinder(grid):
+    """Rodinia pathfinder proxy: bottom-up min-path DP over a cost grid."""
+    def step(carry, row):
+        left = jnp.concatenate([carry[:1], carry[:-1]])
+        right = jnp.concatenate([carry[1:], carry[-1:]])
+        carry = row + jnp.minimum(carry, jnp.minimum(left, right))
+        return carry, ()
+
+    out, _ = jax.lax.scan(step, grid[0], grid[1:])
+    return (out,)
+
+
+def cupy(x, y):
+    """Generic dense-compute proxy used in the Fig-5a fairness experiment."""
+    z = matmul(x, y)
+    return (jnp.tanh(z),)
+
+
+def rnn(xs, wx, wh):
+    """Sequence-model proxy (Fig 7b): scan of matmul recurrences."""
+    def step(h, x_t):
+        h = jnp.tanh(matmul(x_t, wx) + matmul(h, wh))
+        return h, h
+
+    h0 = jnp.zeros((xs.shape[1], wh.shape[0]), dtype=xs.dtype)
+    h_final, _ = jax.lax.scan(step, h0, xs)
+    return (h_final,)
+
+
+def srad(img):
+    """SRAD despeckling proxy (Figs 3/7b): iterated diffusion stencil."""
+    return (diffusion(img, iters=8, coeff=0.2),)
+
+
+# ---------------------------------------------------------------------------
+# Registry: name -> (fn, [(shape, kind), ...])
+# kind: 'unit' -> U[0,1), 'sym' -> U[-0.5,0.5)   (see gen.py)
+# ---------------------------------------------------------------------------
+
+REGISTRY = {
+    "imagenet": (
+        imagenet,
+        [((8, 256), "sym"), ((256, 512), "sym"), ((512, 512), "sym"),
+         ((512, 256), "sym")],
+    ),
+    "roberta": (
+        roberta,
+        [((64, 256), "sym")] + [((256, 256), "sym")] * 4
+        + [((256, 512), "sym"), ((512, 256), "sym")],
+    ),
+    "ffmpeg": (ffmpeg, [((256, 256), "unit")]),
+    "fft": (fft, [((16384,), "sym")]),
+    "isoneural": (
+        isoneural,
+        [((64, 128), "sym"), ((128, 128), "sym"), ((128, 128), "sym")],
+    ),
+    "lud": (lud, [((256, 256), "sym")]),
+    "needle": (needle, [((128, 128), "sym")]),
+    "pathfinder": (pathfinder, [((128, 256), "unit")]),
+    "cupy": (cupy, [((128, 128), "sym"), ((128, 128), "sym")]),
+    "rnn": (
+        rnn,
+        [((16, 64, 128), "sym"), ((128, 128), "sym"), ((128, 128), "sym")],
+    ),
+    "srad": (srad, [((128, 128), "unit")]),
+}

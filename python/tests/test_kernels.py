@@ -1,0 +1,178 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes, block sizes and kernel parameters; fixed cases
+pin the exact shapes the AOT catalog uses.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    matmul,
+    diffusion,
+    diffusion_step,
+    block_sum,
+    l2_norm,
+    video_filter,
+)
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+settings.register_profile("kernels", deadline=None, max_examples=20)
+settings.load_profile("kernels")
+
+
+def rand(seed, shape, lo=-0.5, hi=0.5):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- matmul ---
+
+MULT8 = st.integers(1, 8).map(lambda k: 8 * k)
+
+
+@given(m=MULT8, k=MULT8, n=MULT8, seed=st.integers(0, 2**32 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    x, y = rand(seed, (m, k)), rand(seed + 1, (k, n))
+    got = matmul(x, y, block=(8, 8, 8))
+    np.testing.assert_allclose(got, ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "m,k,n,block",
+    [
+        (8, 256, 512, (128, 128, 128)),   # imagenet layer-1 shape
+        (64, 256, 256, (128, 128, 128)),  # roberta projections
+        (128, 128, 128, (128, 128, 128)), # cupy / rnn
+        (256, 128, 256, (64, 64, 64)),
+        (128, 128, 128, (32, 128, 64)),   # non-square blocks
+    ],
+)
+def test_matmul_catalog_shapes(m, k, n, block):
+    x, y = rand(m * 31 + k, (m, k)), rand(n * 17 + k, (k, n))
+    got = matmul(x, y, block=block)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_indivisible():
+    with pytest.raises(AssertionError):
+        matmul(rand(0, (9, 8)), rand(1, (8, 8)), block=(8, 8, 8))
+
+
+def test_matmul_identity():
+    x = rand(5, (16, 16))
+    eye = jnp.eye(16, dtype=jnp.float32)
+    np.testing.assert_allclose(matmul(x, eye, block=(8, 8, 8)), x, atol=1e-6)
+
+
+# --------------------------------------------------------------- stencil ---
+
+
+@given(
+    rows_blocks=st.integers(1, 6),
+    block_rows=st.sampled_from([4, 8, 16]),
+    cols=st.sampled_from([8, 16, 128]),
+    coeff=st.floats(0.05, 0.9),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_diffusion_step_matches_ref(rows_blocks, block_rows, cols, coeff, seed):
+    rows = rows_blocks * block_rows
+    x = rand(seed, (rows, cols))
+    got = diffusion_step(x, coeff=float(coeff), block_rows=block_rows)
+    np.testing.assert_allclose(
+        got, ref.diffusion_step_ref(x, float(coeff)), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("iters", [1, 2, 8])
+def test_diffusion_iterated(iters):
+    x = rand(11, (128, 128), lo=0.0, hi=1.0)
+    got = diffusion(x, iters=iters, coeff=0.2)
+    np.testing.assert_allclose(
+        got, ref.diffusion_ref(x, iters, 0.2), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_diffusion_single_block_grid():
+    """Whole field in one block: both halo paths take the clamped branch."""
+    x = rand(13, (16, 32))
+    got = diffusion_step(x, coeff=0.3, block_rows=16)
+    np.testing.assert_allclose(
+        got, ref.diffusion_step_ref(x, 0.3), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_diffusion_conserves_constant_field():
+    """Clamp-to-edge diffusion must leave a constant field unchanged."""
+    x = jnp.full((64, 64), 0.42, dtype=jnp.float32)
+    got = diffusion_step(x, coeff=0.2, block_rows=16)
+    np.testing.assert_allclose(got, x, rtol=1e-6)
+
+
+# ---------------------------------------------------------------- reduce ---
+
+
+@given(
+    rows_blocks=st.integers(1, 8),
+    block_rows=st.sampled_from([4, 16, 64]),
+    cols=st.sampled_from([8, 128]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_block_sum_matches_ref(rows_blocks, block_rows, cols, seed):
+    rows = rows_blocks * block_rows
+    x = rand(seed, (rows, cols))
+    got = block_sum(x, block_rows=block_rows)
+    np.testing.assert_allclose(
+        got, ref.block_sum_ref(x), rtol=1e-4, atol=1e-4
+    )
+
+
+@given(seed=st.integers(0, 2**32 - 1))
+def test_l2_norm_matches_ref(seed):
+    x = rand(seed, (128, 128))
+    np.testing.assert_allclose(
+        l2_norm(x), ref.l2_norm_ref(x), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_block_sum_zeros():
+    x = jnp.zeros((64, 128), dtype=jnp.float32)
+    assert float(jnp.abs(block_sum(x)).max()) == 0.0
+
+
+# ------------------------------------------------------------- pointwise ---
+
+
+@given(
+    levels=st.integers(2, 64),
+    gamma=st.floats(0.5, 3.0),
+    contrast=st.floats(0.5, 2.0),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_video_filter_matches_ref(levels, gamma, contrast, seed):
+    x = rand(seed, (64, 128), lo=0.0, hi=1.0)
+    got = video_filter(
+        x, levels=levels, gamma=float(gamma), contrast=float(contrast),
+        block=(16, 64),
+    )
+    want = ref.video_filter_ref(x, levels, float(gamma), float(contrast))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_video_filter_output_range():
+    x = rand(3, (256, 256), lo=0.0, hi=1.0)
+    y = np.asarray(video_filter(x))
+    assert (y >= 0.0).all() and (y <= 1.0).all()
+
+
+def test_video_filter_catalog_shape():
+    x = rand(4, (256, 256), lo=0.0, hi=1.0)
+    got = video_filter(x)
+    np.testing.assert_allclose(
+        got, ref.video_filter_ref(x), rtol=1e-4, atol=1e-5
+    )

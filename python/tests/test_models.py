@@ -1,0 +1,88 @@
+"""Layer-2 model tests: shapes, finiteness, determinism, and semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import gen
+from compile.model import REGISTRY, pathfinder, needle, lud, fft
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def inputs_for(name):
+    _, specs = REGISTRY[name]
+    seed = gen.fnv1a(name)
+    return [
+        gen.fill(seed + i, shape, kind) for i, (shape, kind) in enumerate(specs)
+    ]
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_model_runs_and_is_finite(name):
+    fn, _ = REGISTRY[name]
+    outs = fn(*inputs_for(name))
+    assert isinstance(outs, tuple) and len(outs) >= 1
+    for o in outs:
+        arr = np.asarray(o)
+        assert arr.dtype == np.float32, f"{name} output dtype {arr.dtype}"
+        assert np.isfinite(arr).all(), f"{name} produced non-finite values"
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_model_deterministic(name):
+    fn, _ = REGISTRY[name]
+    a = fn(*inputs_for(name))
+    b = fn(*inputs_for(name))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_imagenet_softmax_rows_sum_to_one():
+    fn, _ = REGISTRY["imagenet"]
+    (probs,) = fn(*inputs_for("imagenet"))
+    np.testing.assert_allclose(np.asarray(probs).sum(axis=-1), 1.0, rtol=1e-5)
+
+
+def test_pathfinder_matches_naive_dp():
+    rng = np.random.default_rng(0)
+    grid = rng.uniform(0, 1, size=(16, 32)).astype(np.float32)
+    (got,) = pathfinder(jnp.asarray(grid))
+    dp = grid[0].copy()
+    for r in range(1, 16):
+        left = np.concatenate([dp[:1], dp[:-1]])
+        right = np.concatenate([dp[1:], dp[-1:]])
+        dp = grid[r] + np.minimum(dp, np.minimum(left, right))
+    np.testing.assert_allclose(got, dp, rtol=1e-5, atol=1e-6)
+
+
+def test_needle_rows_monotone_along_scan():
+    """The cumulative-max column scan makes each DP row non-decreasing."""
+    (final, last_row) = needle(inputs_for("needle")[0])
+    arr = np.asarray(final)
+    assert (np.diff(arr) >= -1e-6).all()
+
+
+def test_lud_schur_shape_and_scale():
+    (schur,) = lud(*inputs_for("lud"))
+    assert schur.shape == (128, 128)
+    # Regularized Newton–Schulz inverse keeps the update bounded.
+    assert float(np.abs(np.asarray(schur)).max()) < 1e3
+
+
+def test_fft_lowpass_removes_high_frequencies():
+    n = 16384
+    t = np.arange(n, dtype=np.float32)
+    low = np.sin(2 * np.pi * 5 * t / n).astype(np.float32)
+    high = np.sin(2 * np.pi * 6000 * t / n).astype(np.float32)
+    (filt, _) = fft(jnp.asarray(low + high))
+    # keep = n//2//4 ≈ 2048 bins: the 6 kHz-bin component must be gone.
+    np.testing.assert_allclose(np.asarray(filt), low, atol=5e-2)
+
+
+def test_registry_shapes_match_manifest_conventions():
+    for name, (fn, specs) in REGISTRY.items():
+        for shape, kind in specs:
+            assert kind in ("unit", "sym"), (name, kind)
+            assert all(d > 0 for d in shape), (name, shape)

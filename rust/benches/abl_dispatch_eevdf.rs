@@ -1,0 +1,8 @@
+//! `cargo bench --bench abl_dispatch_eevdf` — regenerates the paper's §6.4 ablations (sticky dispatch, EEVDF).
+//! Thin wrapper over `mqfq::experiments::ablation::main` (also: `mqfq-sticky exp`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::ablation::main();
+    println!("[bench abl_dispatch_eevdf completed in {:.2?}]", t0.elapsed());
+}

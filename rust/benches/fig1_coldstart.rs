@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig1_coldstart` — regenerates the paper's Figure 1 (cold-start phase timeline).
+//! Thin wrapper over `mqfq::experiments::fig1::main` (also: `mqfq-sticky exp`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::fig1::main();
+    println!("[bench fig1_coldstart completed in {:.2?}]", t0.elapsed());
+}

@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig3_shim_overhead` — regenerates the paper's Figure 3 (UVM shim overhead).
+//! Thin wrapper over `mqfq::experiments::fig3::main` (also: `mqfq-sticky exp`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::fig3::main();
+    println!("[bench fig3_shim_overhead completed in {:.2?}]", t0.elapsed());
+}

@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig4_memory_policies` — regenerates the paper's Figure 4 (memory-policy comparison).
+//! Thin wrapper over `mqfq::experiments::fig4::main` (also: `mqfq-sticky exp`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::fig4::main();
+    println!("[bench fig4_memory_policies completed in {:.2?}]", t0.elapsed());
+}

@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig5a_fairness_timeline` — regenerates the paper's Figure 5a (service-time fairness).
+//! Thin wrapper over `mqfq::experiments::fig5::fig5a` (also: `mqfq-sticky exp`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::fig5::fig5a();
+    println!("[bench fig5a_fairness_timeline completed in {:.2?}]", t0.elapsed());
+}

@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig5b_fairness_bound` — regenerates the paper's Figure 5b (gap vs Eq-1 bound).
+//! Thin wrapper over `mqfq::experiments::fig5::fig5b` (also: `mqfq-sticky exp`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::fig5::fig5b();
+    println!("[bench fig5b_fairness_bound completed in {:.2?}]", t0.elapsed());
+}

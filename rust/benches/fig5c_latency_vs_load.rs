@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig5c_latency_vs_load` — regenerates the paper's Figure 5c (latency vs load).
+//! Thin wrapper over `mqfq::experiments::fig5::fig5c` (also: `mqfq-sticky exp`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::fig5::fig5c();
+    println!("[bench fig5c_latency_vs_load completed in {:.2?}]", t0.elapsed());
+}

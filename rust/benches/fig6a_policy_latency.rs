@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig6a_policy_latency` — regenerates the paper's Figure 6a (policy x D latency).
+//! Thin wrapper over `mqfq::experiments::fig6::fig6a` (also: `mqfq-sticky exp`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::fig6::fig6a();
+    println!("[bench fig6a_policy_latency completed in {:.2?}]", t0.elapsed());
+}

@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig6b_perfn_latency` — regenerates the paper's Figure 6b (per-function latency).
+//! Thin wrapper over `mqfq::experiments::fig6::fig6b` (also: `mqfq-sticky exp`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::fig6::fig6b();
+    println!("[bench fig6b_perfn_latency completed in {:.2?}]", t0.elapsed());
+}

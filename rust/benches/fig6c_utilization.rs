@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig6c_utilization` — regenerates the paper's Figure 6c (utilization timeline).
+//! Thin wrapper over `mqfq::experiments::fig6::fig6c` (also: `mqfq-sticky exp`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::fig6::fig6c();
+    println!("[bench fig6c_utilization completed in {:.2?}]", t0.elapsed());
+}

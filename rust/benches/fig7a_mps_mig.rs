@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig7a_mps_mig` — regenerates the paper's Figure 7a (MPS/MIG comparison).
+//! Thin wrapper over `mqfq::experiments::fig7::fig7a` (also: `mqfq-sticky exp`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::fig7::fig7a();
+    println!("[bench fig7a_mps_mig completed in {:.2?}]", t0.elapsed());
+}

@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig7b_mig_slowdown` — regenerates the paper's Figure 7b (MIG slice slowdown).
+//! Thin wrapper over `mqfq::experiments::fig7::fig7b` (also: `mqfq-sticky exp`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::fig7::fig7b();
+    println!("[bench fig7b_mig_slowdown completed in {:.2?}]", t0.elapsed());
+}

@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig7c_multigpu` — regenerates the paper's Figure 7c (multi-GPU scaling).
+//! Thin wrapper over `mqfq::experiments::fig7::fig7c` (also: `mqfq-sticky exp`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::fig7::fig7c();
+    println!("[bench fig7c_multigpu completed in {:.2?}]", t0.elapsed());
+}

@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig8a_overrun_sweep` — regenerates the paper's Figure 8a (queue over-run sweep).
+//! Thin wrapper over `mqfq::experiments::fig8::fig8a` (also: `mqfq-sticky exp`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::fig8::fig8a();
+    println!("[bench fig8a_overrun_sweep completed in {:.2?}]", t0.elapsed());
+}

@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig8b_ttl_sweep` — regenerates the paper's Figure 8b (anticipatory TTL sweep).
+//! Thin wrapper over `mqfq::experiments::fig8::fig8b` (also: `mqfq-sticky exp`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::fig8::fig8b();
+    println!("[bench fig8b_ttl_sweep completed in {:.2?}]", t0.elapsed());
+}

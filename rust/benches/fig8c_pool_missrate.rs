@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig8c_pool_missrate` — regenerates the paper's Figure 8c (pool-size miss rates).
+//! Thin wrapper over `mqfq::experiments::fig8::fig8c` (also: `mqfq-sticky exp`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::fig8::fig8c();
+    println!("[bench fig8c_pool_missrate completed in {:.2?}]", t0.elapsed());
+}

@@ -1,0 +1,8 @@
+//! `cargo bench --bench perf_hot_paths` — regenerates the paper's §Perf hot-path microbenchmarks.
+//! Thin wrapper over `mqfq::experiments::perf::main` (also: `mqfq-sticky exp`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::perf::main();
+    println!("[bench perf_hot_paths completed in {:.2?}]", t0.elapsed());
+}

@@ -1,0 +1,8 @@
+//! `cargo bench --bench table1_latency` — regenerates the paper's Table 1 (warm/cold GPU/CPU latencies).
+//! Thin wrapper over `mqfq::experiments::table1::main` (also: `mqfq-sticky exp`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::table1::main();
+    println!("[bench table1_latency completed in {:.2?}]", t0.elapsed());
+}

@@ -1,0 +1,8 @@
+//! `cargo bench --bench table3_traces` — regenerates the paper's Table 3 (Azure trace samples).
+//! Thin wrapper over `mqfq::experiments::table3::main` (also: `mqfq-sticky exp`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::table3::main();
+    println!("[bench table3_traces completed in {:.2?}]", t0.elapsed());
+}

@@ -1,0 +1,343 @@
+//! Hand-rolled CLI (clap is not in the offline vendor set).
+//!
+//! Subcommands:
+//! * `exp <name>|all` — run one (or every) paper experiment.
+//! * `trace gen` — generate a Zipfian or Azure-style trace file.
+//! * `replay` — replay a trace file through the control plane (sim).
+//! * `serve` — real-time serving over TCP, executing PJRT artifacts.
+//! * `validate` — golden-check every AOT artifact via PJRT.
+
+use std::collections::HashMap;
+
+use crate::gpu::MultiplexMode;
+use crate::memory::MemPolicy;
+use crate::plane::PlaneConfig;
+use crate::scheduler::policies::PolicyKind;
+use crate::scheduler::MqfqConfig;
+use crate::workload::azure::AzureConfig;
+use crate::workload::zipf::ZipfConfig;
+use crate::workload::{zipf, Trace};
+
+/// Parsed `--key value` options + positional args.
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Self, String> {
+        let mut positional = Vec::new();
+        let mut options = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = argv
+                    .get(i + 1)
+                    .ok_or_else(|| format!("--{key} needs a value"))?;
+                options.insert(key.to_string(), val.clone());
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Self {
+            positional,
+            options,
+        })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad number {v}")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad integer {v}")),
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+mqfq-sticky — fair queueing for serverless GPU functions (paper reproduction)
+
+USAGE:
+  mqfq-sticky exp <name>|all            run paper experiment(s); see `exp list`
+  mqfq-sticky trace gen --kind zipf|azure --out FILE
+        [--rate R] [--funcs N] [--duration S] [--seed K]        (zipf)
+        [--trace-id 0..8] [--duration S] [--scale X]            (azure)
+  mqfq-sticky replay --trace FILE
+        [--policy fcfs|batch|sjf|eevdf|mqfq|sfq] [--d N] [--gpus N]
+        [--mem stock-uvm|madvise|prefetch-only|prefetch+swap]
+        [--mode plain|mps|mig:N] [--pool N] [--t SECS] [--alpha A]
+  mqfq-sticky serve [--addr HOST:PORT] [--artifacts DIR] [--scale X]
+        [--policy P] [--d N]             real-time TCP serving
+  mqfq-sticky validate [--artifacts DIR] golden-check all artifacts
+";
+
+/// Build a PlaneConfig from common replay/serve options.
+pub fn plane_config(args: &Args) -> Result<PlaneConfig, String> {
+    let mut cfg = PlaneConfig::default();
+    if let Some(p) = args.get("policy") {
+        cfg.policy = PolicyKind::parse(p).ok_or_else(|| format!("unknown policy {p}"))?;
+    }
+    cfg.d = args.get_usize("d", cfg.d)?;
+    cfg.n_gpus = args.get_usize("gpus", cfg.n_gpus)?;
+    cfg.pool_size = args.get_usize("pool", cfg.pool_size)?;
+    if let Some(m) = args.get("mem") {
+        cfg.mem_policy = match m {
+            "stock-uvm" => MemPolicy::StockUvm,
+            "madvise" => MemPolicy::Madvise,
+            "prefetch-only" => MemPolicy::PrefetchOnly,
+            "prefetch+swap" => MemPolicy::PrefetchSwap,
+            _ => return Err(format!("unknown mem policy {m}")),
+        };
+    }
+    if let Some(m) = args.get("mode") {
+        cfg.mode = match m {
+            "plain" => MultiplexMode::Plain,
+            "mps" => MultiplexMode::Mps,
+            _ => match m.strip_prefix("mig:").and_then(|n| n.parse().ok()) {
+                Some(n) => MultiplexMode::Mig(n),
+                None => return Err(format!("unknown mode {m}")),
+            },
+        };
+    }
+    if let Some(p) = args.get("profile") {
+        cfg.profile = match p {
+            "v100" => crate::gpu::V100,
+            "a30" => crate::gpu::A30,
+            _ => return Err(format!("unknown profile {p}")),
+        };
+    }
+    cfg.mqfq = MqfqConfig {
+        t: args.get_f64("t", 10.0)?,
+        ttl_alpha: args.get_f64("alpha", 2.0)?,
+        ..Default::default()
+    };
+    Ok(cfg)
+}
+
+/// Entry point called by main(). Returns process exit code.
+pub fn run(argv: Vec<String>) -> i32 {
+    match dispatch(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{USAGE}");
+            1
+        }
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<(), String> {
+    let Some((cmd, rest)) = argv.split_first() else {
+        return Err("no subcommand".into());
+    };
+    let args = Args::parse(rest)?;
+    match cmd.as_str() {
+        "exp" => cmd_exp(&args),
+        "trace" => cmd_trace(&args),
+        "replay" => cmd_replay(&args),
+        "serve" => cmd_serve(&args),
+        "validate" => cmd_validate(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand {other}")),
+    }
+}
+
+fn cmd_exp(args: &Args) -> Result<(), String> {
+    let name = args
+        .positional
+        .first()
+        .ok_or("exp: which experiment? (or `all`, `list`)")?;
+    match name.as_str() {
+        "list" => {
+            for (n, _) in crate::experiments::ALL {
+                println!("{n}");
+            }
+            Ok(())
+        }
+        "all" => {
+            for (n, f) in crate::experiments::ALL {
+                println!("\n### {n}");
+                f();
+            }
+            Ok(())
+        }
+        n => match crate::experiments::by_name(n) {
+            Some(f) => {
+                f();
+                Ok(())
+            }
+            None => Err(format!("unknown experiment {n} (try `exp list`)")),
+        },
+    }
+}
+
+fn cmd_trace(args: &Args) -> Result<(), String> {
+    if args.positional.first().map(|s| s.as_str()) != Some("gen") {
+        return Err("trace: only `trace gen` is supported".into());
+    }
+    let out = args.get("out").ok_or("trace gen: --out FILE required")?;
+    let (workload, trace) = match args.get("kind").unwrap_or("zipf") {
+        "zipf" => zipf::generate(&ZipfConfig {
+            n_funcs: args.get_usize("funcs", 24)?,
+            total_rate: args.get_f64("rate", 2.0)?,
+            duration_s: args.get_f64("duration", 600.0)?,
+            seed: args.get_usize("seed", 0)? as u64,
+            ..Default::default()
+        }),
+        "azure" => crate::workload::azure::generate(&AzureConfig {
+            trace_id: args.get_usize("trace-id", 4)?,
+            duration_s: args.get_f64("duration", 600.0)?,
+            load_scale: args.get_f64("scale", 1.0)?,
+        }),
+        k => return Err(format!("unknown trace kind {k}")),
+    };
+    trace
+        .save(&workload, out)
+        .map_err(|e| format!("saving {out}: {e}"))?;
+    println!(
+        "wrote {} events / {} functions ({:.2} req/s) to {out}",
+        trace.len(),
+        workload.len(),
+        trace.req_per_sec()
+    );
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> Result<(), String> {
+    let path = args.get("trace").ok_or("replay: --trace FILE required")?;
+    let (workload, trace) =
+        Trace::load(path).map_err(|e| format!("loading {path}: {e}"))?;
+    let cfg = plane_config(args)?;
+    let label = format!("{} D={}", cfg.policy.name(), cfg.d);
+    let t0 = std::time::Instant::now();
+    let (summary, r) = crate::experiments::run(&label, workload, &trace, cfg);
+    let wall = t0.elapsed();
+    print!(
+        "{}",
+        crate::experiments::summary_table(std::slice::from_ref(&summary)).render()
+    );
+    println!(
+        "replayed {} events in {wall:.2?} ({:.0} events/s of sim time)",
+        r.events,
+        r.events as f64 / wall.as_secs_f64().max(1e-9)
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let addr = args.get("addr").unwrap_or("127.0.0.1:8077");
+    let scale = args.get_f64("scale", 0.02)?;
+    let cfg = plane_config(args)?;
+    let artifacts = args.get("artifacts").map(std::path::Path::new);
+    // Default demo workload: one copy of each catalog function.
+    let mut w = crate::workload::Workload::default();
+    for class in crate::workload::catalog::CATALOG {
+        w.register(class, 0, 10.0);
+    }
+    let srv = crate::server::RtServer::new(w, cfg, artifacts, scale)
+        .map_err(|e| format!("starting server: {e}"))?;
+    let local = srv.serve(addr).map_err(|e| format!("binding {addr}: {e}"))?;
+    println!(
+        "serving on {local} (scale={scale}, artifacts={}) — protocol: \
+         `invoke <fn>` | `stats` | `quit`",
+        artifacts.map(|p| p.display().to_string()).unwrap_or_else(|| "model-only".into())
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_validate(args: &Args) -> Result<(), String> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let mut rt = crate::runtime::PjrtRuntime::new(dir)
+        .map_err(|e| format!("PJRT: {e}"))?;
+    let names = rt.load_all().map_err(|e| format!("loading {dir}: {e}"))?;
+    println!("platform: {}", rt.platform());
+    let mut failed = 0;
+    for name in &names {
+        match rt.validate(name) {
+            Ok(rep) => println!("  ok   {name:<12} ({:?})", rep.elapsed),
+            Err(e) => {
+                println!("  FAIL {name:<12} {e}");
+                failed += 1;
+            }
+        }
+    }
+    if failed > 0 {
+        return Err(format!("{failed}/{} artifacts failed validation", names.len()));
+    }
+    println!("all {} artifacts validated against golden outputs", names.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_options_and_positionals() {
+        let a = Args::parse(&argv("gen --kind zipf --rate 2.5 extra")).unwrap();
+        assert_eq!(a.positional, vec!["gen", "extra"]);
+        assert_eq!(a.get("kind"), Some("zipf"));
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_usize("funcs", 24).unwrap(), 24);
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::parse(&argv("--rate")).is_err());
+    }
+
+    #[test]
+    fn plane_config_parses_modes() {
+        let a = Args::parse(&argv("--policy fcfs --d 3 --mode mig:2 --mem madvise")).unwrap();
+        let cfg = plane_config(&a).unwrap();
+        assert_eq!(cfg.policy, PolicyKind::Fcfs);
+        assert_eq!(cfg.d, 3);
+        assert_eq!(cfg.mode, MultiplexMode::Mig(2));
+        assert_eq!(cfg.mem_policy, MemPolicy::Madvise);
+    }
+
+    #[test]
+    fn bad_policy_rejected() {
+        let a = Args::parse(&argv("--policy bogus")).unwrap();
+        assert!(plane_config(&a).is_err());
+    }
+
+    #[test]
+    fn trace_gen_and_replay_roundtrip() {
+        let dir = std::env::temp_dir().join("mqfq_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.trace");
+        let a = Args::parse(&argv(&format!(
+            "gen --kind zipf --funcs 4 --rate 1.0 --duration 30 --out {}",
+            path.display()
+        )))
+        .unwrap();
+        cmd_trace(&a).unwrap();
+        let b = Args::parse(&argv(&format!("--trace {} --policy mqfq", path.display())))
+            .unwrap();
+        cmd_replay(&b).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

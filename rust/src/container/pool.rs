@@ -1,0 +1,335 @@
+//! The GPU container warm pool (§4.2 "Container Warm-pool", §4.4).
+//!
+//! "Creating a GPU context uses physical memory we can't control, so the
+//! monitor only allows a fixed number of containers to exist at one
+//! time." Idle containers are kept warm for reuse (temporal locality)
+//! and evicted in LRU order when the pool is full.
+
+use std::collections::HashMap;
+
+use crate::types::{ContainerId, FuncId, GpuId, Nanos, StartKind};
+use crate::workload::catalog::FuncClass;
+
+use super::{ColdPhases, Container, CtrState};
+
+/// Result of acquiring a container for one dispatch.
+#[derive(Debug)]
+pub struct Acquired {
+    pub id: ContainerId,
+    pub kind: StartKind,
+    /// Cold-boot time to pay before execution (0 for warm starts).
+    pub boot_ns: u64,
+    /// Phase breakdown when `kind == Cold`.
+    pub phases: Option<ColdPhases>,
+    /// Containers destroyed to make room: (gpu, resident MB freed).
+    /// The caller must credit these back to the device memory ledgers.
+    pub evicted: Vec<(GpuId, u64)>,
+}
+
+/// Start-kind counters (drives the Fig-8c cold-hit/miss-rate curves).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolStats {
+    pub gpu_warm: u64,
+    pub host_warm: u64,
+    pub cold: u64,
+}
+
+impl PoolStats {
+    pub fn total(&self) -> u64 {
+        self.gpu_warm + self.host_warm + self.cold
+    }
+
+    /// Fraction of acquisitions that were cold (the paper's "cold-hit %").
+    pub fn cold_ratio(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.cold as f64 / self.total() as f64
+        }
+    }
+}
+
+/// Fixed-capacity warm pool with LRU eviction.
+#[derive(Debug)]
+pub struct ContainerPool {
+    max_size: usize,
+    next_id: u64,
+    containers: HashMap<ContainerId, Container>,
+    stats: PoolStats,
+}
+
+impl ContainerPool {
+    pub fn new(max_size: usize) -> Self {
+        assert!(max_size >= 1);
+        Self {
+            max_size,
+            next_id: 0,
+            containers: HashMap::new(),
+            stats: PoolStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.containers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.containers.is_empty()
+    }
+
+    pub fn max_size(&self) -> usize {
+        self.max_size
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+
+    pub fn get(&self, id: ContainerId) -> Option<&Container> {
+        self.containers.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: ContainerId) -> Option<&mut Container> {
+        self.containers.get_mut(&id)
+    }
+
+    /// Iterate all containers (metrics / memory-manager scans).
+    pub fn iter(&self) -> impl Iterator<Item = &Container> {
+        self.containers.values()
+    }
+
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut Container> {
+        self.containers.values_mut()
+    }
+
+    /// Idle warm containers of `func`, most-resident first.
+    fn best_idle(&self, func: FuncId, prefer_gpu: Option<GpuId>, now: Nanos) -> Option<ContainerId> {
+        self.containers
+            .values()
+            .filter(|c| c.func == func && c.is_idle(now))
+            .max_by_key(|c| {
+                let gpu_match = prefer_gpu.map(|g| c.gpu == g).unwrap_or(false);
+                (gpu_match, c.resident_mb(), std::cmp::Reverse(c.id.0))
+            })
+            .map(|c| c.id)
+    }
+
+    /// Eviction victim: containers of throttled/inactive queues (marked
+    /// for eviction, §4.3) first, then LRU among idle.
+    fn lru_idle(&self, now: Nanos) -> Option<ContainerId> {
+        self.containers
+            .values()
+            .filter(|c| c.is_idle(now))
+            .min_by_key(|c| (!c.marked_evict, c.last_used, c.id.0))
+            .map(|c| c.id)
+    }
+
+    /// Acquire a container for one invocation of `func` placed on `gpu`.
+    ///
+    /// Reuses an idle warm container when possible (GPU-warm if its data
+    /// is resident, host-warm otherwise); otherwise creates a cold one,
+    /// evicting the LRU idle container first if the pool is full.
+    /// Returns `None` if the pool is full of busy containers.
+    pub fn acquire(
+        &mut self,
+        func: FuncId,
+        class: &'static FuncClass,
+        gpu: GpuId,
+        now: Nanos,
+    ) -> Option<Acquired> {
+        if let Some(id) = self.best_idle(func, Some(gpu), now) {
+            let c = self.containers.get_mut(&id).unwrap();
+            let kind = if c.gpu_warm() && c.gpu == gpu {
+                StartKind::GpuWarm
+            } else {
+                StartKind::HostWarm
+            };
+            c.state = CtrState::Busy;
+            c.marked_evict = false;
+            c.last_used = now;
+            // A reused container's memory may live on another GPU (or
+            // MIG slice); it must travel through host memory — evict its
+            // regions there and credit the old device's ledger.
+            let mut evicted = Vec::new();
+            if c.gpu != gpu {
+                let moved = c.ledger.evict_all();
+                c.prefetch_done = None;
+                if moved > 0 {
+                    evicted.push((c.gpu, moved));
+                }
+                c.gpu = gpu;
+            }
+            match kind {
+                StartKind::GpuWarm => self.stats.gpu_warm += 1,
+                StartKind::HostWarm => self.stats.host_warm += 1,
+                StartKind::Cold => unreachable!(),
+            }
+            return Some(Acquired {
+                id,
+                kind,
+                boot_ns: 0,
+                phases: None,
+                evicted,
+            });
+        }
+
+        // Cold path: make room, then create. Verify enough idle victims
+        // exist *before* destroying any, so a failed acquire never loses
+        // device-ledger credits.
+        let needed_evictions = (self.containers.len() + 1).saturating_sub(self.max_size);
+        if needed_evictions > 0 {
+            let idle = self.containers.values().filter(|c| c.is_idle(now)).count();
+            if idle < needed_evictions {
+                return None; // pool saturated with busy containers
+            }
+        }
+        let mut evicted = Vec::new();
+        while self.containers.len() >= self.max_size {
+            let victim = self.lru_idle(now).expect("idle victims pre-checked");
+            let c = self.containers.remove(&victim).unwrap();
+            evicted.push((c.gpu, c.resident_mb()));
+        }
+        let phases = ColdPhases::for_class(class);
+        let boot_ns = phases.total();
+        let id = ContainerId(self.next_id);
+        self.next_id += 1;
+        let mut c = Container::new(id, func, class, gpu, now, boot_ns);
+        c.state = CtrState::Busy; // owned by the acquiring invocation
+        self.containers.insert(id, c);
+        self.stats.cold += 1;
+        Some(Acquired {
+            id,
+            kind: StartKind::Cold,
+            boot_ns,
+            phases: Some(phases),
+            evicted,
+        })
+    }
+
+    /// Return a container to the pool after its invocation completes.
+    pub fn release(&mut self, id: ContainerId, now: Nanos) {
+        if let Some(c) = self.containers.get_mut(&id) {
+            c.state = CtrState::Idle;
+            c.last_used = now;
+        }
+    }
+
+    /// Mark every idle container of `func` for asynchronous eviction
+    /// (queue throttled/inactive, §4.3).
+    pub fn mark_evict(&mut self, func: FuncId) {
+        for c in self.containers.values_mut() {
+            if c.func == func && c.state != CtrState::Busy {
+                c.marked_evict = true;
+            }
+        }
+    }
+
+    /// Clear eviction marks for `func` (queue became active again).
+    pub fn unmark_evict(&mut self, func: FuncId) {
+        for c in self.containers.values_mut() {
+            if c.func == func {
+                c.marked_evict = false;
+            }
+        }
+    }
+
+    /// Destroy a specific container (memory-manager directed); returns
+    /// (gpu, resident MB) the caller must credit back to the device.
+    pub fn destroy(&mut self, id: ContainerId) -> Option<(GpuId, u64)> {
+        self.containers.remove(&id).map(|c| (c.gpu, c.resident_mb()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::catalog::by_name;
+
+    fn class() -> &'static FuncClass {
+        by_name("fft").unwrap()
+    }
+
+    #[test]
+    fn first_acquire_is_cold_then_warm() {
+        let mut p = ContainerPool::new(4);
+        let a = p.acquire(FuncId(0), class(), GpuId(0), 0).unwrap();
+        assert_eq!(a.kind, StartKind::Cold);
+        assert!(a.boot_ns > 0);
+        p.release(a.id, 100);
+        // Data not resident yet → host-warm.
+        let b = p.acquire(FuncId(0), class(), GpuId(0), 200).unwrap();
+        assert_eq!(b.kind, StartKind::HostWarm);
+        assert_eq!(b.id, a.id);
+        // Make resident → gpu-warm next time.
+        p.get_mut(b.id).unwrap().ledger.page_in(u64::MAX);
+        p.release(b.id, 300);
+        let c = p.acquire(FuncId(0), class(), GpuId(0), 400).unwrap();
+        assert_eq!(c.kind, StartKind::GpuWarm);
+        let s = p.stats();
+        assert_eq!((s.cold, s.host_warm, s.gpu_warm), (1, 1, 1));
+    }
+
+    #[test]
+    fn lru_eviction_when_full() {
+        let mut p = ContainerPool::new(2);
+        let a = p.acquire(FuncId(0), class(), GpuId(0), 0).unwrap();
+        p.release(a.id, 10);
+        let b = p.acquire(FuncId(1), class(), GpuId(0), 20).unwrap();
+        p.release(b.id, 30);
+        // Pool full; acquiring a third function evicts FuncId(0) (LRU).
+        let c = p.acquire(FuncId(2), class(), GpuId(0), 40).unwrap();
+        assert_eq!(c.kind, StartKind::Cold);
+        assert_eq!(c.evicted.len(), 1);
+        assert!(p.get(a.id).is_none(), "LRU victim should be destroyed");
+        assert!(p.get(b.id).is_some());
+    }
+
+    #[test]
+    fn acquire_fails_when_all_busy() {
+        let mut p = ContainerPool::new(1);
+        let _a = p.acquire(FuncId(0), class(), GpuId(0), 0).unwrap();
+        assert!(p.acquire(FuncId(1), class(), GpuId(0), 1).is_none());
+    }
+
+    #[test]
+    fn busy_containers_not_reused() {
+        let mut p = ContainerPool::new(4);
+        let a = p.acquire(FuncId(0), class(), GpuId(0), 0).unwrap();
+        // Same function again while busy → new cold container.
+        let b = p.acquire(FuncId(0), class(), GpuId(0), 1).unwrap();
+        assert_eq!(b.kind, StartKind::Cold);
+        assert_ne!(a.id, b.id);
+    }
+
+    #[test]
+    fn booting_container_not_idle_until_done() {
+        let mut p = ContainerPool::new(4);
+        let a = p.acquire(FuncId(0), class(), GpuId(0), 0).unwrap();
+        p.release(a.id, 1); // released before boot finished (not typical, but safe)
+        let c = p.get(a.id).unwrap();
+        assert_eq!(c.state, CtrState::Idle);
+    }
+
+    #[test]
+    fn mark_and_unmark_evict() {
+        let mut p = ContainerPool::new(4);
+        let a = p.acquire(FuncId(0), class(), GpuId(0), 0).unwrap();
+        p.release(a.id, 10);
+        p.mark_evict(FuncId(0));
+        assert!(p.get(a.id).unwrap().marked_evict);
+        p.unmark_evict(FuncId(0));
+        assert!(!p.get(a.id).unwrap().marked_evict);
+    }
+
+    #[test]
+    fn prefers_gpu_matching_container() {
+        let mut p = ContainerPool::new(4);
+        let a = p.acquire(FuncId(0), class(), GpuId(0), 0).unwrap();
+        p.release(a.id, 10);
+        let b = p.acquire(FuncId(0), class(), GpuId(1), 20).unwrap();
+        p.release(b.id, 30);
+        // Two idle containers on different GPUs; ask for gpu1.
+        let c = p.acquire(FuncId(0), class(), GpuId(1), 40).unwrap();
+        assert_eq!(c.id, b.id);
+    }
+}

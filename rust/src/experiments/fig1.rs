@@ -1,0 +1,119 @@
+//! Figure 1: cold-start phase timeline, CPU vs GPU container, for the
+//! TensorFlow-inference function (imagenet). The GPU container adds the
+//! NVIDIA hook (~1.6 s) and GPU library loading to user init (~3 s of
+//! extra latency in the paper's figure).
+
+use crate::container::ColdPhases;
+use crate::util::csv::CsvWriter;
+use crate::util::table::Table;
+use crate::workload::catalog::by_name;
+
+pub struct Timeline {
+    pub target: &'static str,
+    /// (phase name, start s, end s)
+    pub segments: Vec<(&'static str, f64, f64)>,
+}
+
+pub fn timelines() -> (Timeline, Timeline) {
+    let class = by_name("imagenet").unwrap();
+    let cpu = ColdPhases::for_class_cpu(class);
+    let gpu = ColdPhases::for_class(class);
+    let mk = |target, p: &ColdPhases, exec: f64, hook_name| {
+        let mut t = 0.0;
+        let mut segments = Vec::new();
+        for (name, dur) in [
+            ("docker-create", p.docker_s),
+            (hook_name, p.nvidia_hook_s),
+            ("user-code-init", p.user_init_s),
+            ("execution", exec),
+        ] {
+            if dur > 0.0 {
+                segments.push((name, t, t + dur));
+                t += dur;
+            }
+        }
+        Timeline { target, segments }
+    };
+    (
+        mk("cpu", &cpu, class.cpu_warm_s, "(no hook)"),
+        mk("gpu", &gpu, class.gpu_warm_s, "nvidia-hook"),
+    )
+}
+
+pub fn main() {
+    println!("== Figure 1: cold-start timeline (imagenet / TF inference) ==");
+    let (cpu, gpu) = timelines();
+    let mut t = Table::new(&["target", "phase", "start(s)", "end(s)", "dur(s)"]);
+    let mut csv = CsvWriter::create(
+        "results/fig1.csv",
+        &["target", "phase", "start_s", "end_s"],
+    )
+    .unwrap();
+    for tl in [&cpu, &gpu] {
+        for (phase, s, e) in &tl.segments {
+            t.row(&[
+                tl.target.to_string(),
+                phase.to_string(),
+                format!("{s:.2}"),
+                format!("{e:.2}"),
+                format!("{:.2}", e - s),
+            ]);
+            csv.rowv(&[
+                tl.target.to_string(),
+                phase.to_string(),
+                format!("{s:.3}"),
+                format!("{e:.3}"),
+            ])
+            .unwrap();
+        }
+    }
+    csv.flush().unwrap();
+    print!("{}", t.render());
+    let init = |tl: &Timeline| -> f64 {
+        tl.segments
+            .iter()
+            .filter(|(n, _, _)| *n != "execution")
+            .map(|(_, s, e)| e - s)
+            .sum()
+    };
+    println!(
+        "GPU container init {:.2}s vs CPU {:.2}s — +{:.2}s before execution \
+         (paper Fig 1: ~3s of nvidia-hook + GPU library loading)",
+        init(&gpu),
+        init(&cpu),
+        init(&gpu) - init(&cpu)
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpu_timeline_has_hook_cpu_does_not() {
+        let (cpu, gpu) = timelines();
+        assert!(gpu.segments.iter().any(|(n, _, _)| *n == "nvidia-hook"));
+        assert!(!cpu.segments.iter().any(|(n, _, _)| *n == "nvidia-hook"));
+    }
+
+    #[test]
+    fn segments_are_contiguous() {
+        let (_, gpu) = timelines();
+        for w in gpu.segments.windows(2) {
+            assert!((w[0].2 - w[1].1).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gpu_init_exceeds_cpu_init_by_seconds() {
+        let (cpu, gpu) = timelines();
+        let init = |tl: &Timeline| {
+            tl.segments
+                .iter()
+                .filter(|(n, _, _)| *n != "execution")
+                .map(|(_, s, e)| e - s)
+                .sum::<f64>()
+        };
+        assert!(init(&gpu) - init(&cpu) > 3.0);
+    }
+}

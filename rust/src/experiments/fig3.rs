@@ -1,0 +1,120 @@
+//! Figure 3: execution-latency overhead of the CUDA interposition shim
+//! (UVM substitution of cuMemAlloc). Warm invocations per function with
+//! the shim on vs off; most functions see ≤5%, srad ~30%.
+
+use crate::plane::PlaneConfig;
+use crate::types::{secs, StartKind};
+use crate::util::csv::CsvWriter;
+use crate::util::table::Table;
+use crate::workload::catalog::CATALOG;
+use crate::workload::trace::{Trace, TraceEvent, Workload};
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub name: &'static str,
+    pub no_shim_s: f64,
+    pub shim_s: f64,
+    pub overhead_pct: f64,
+}
+
+/// Warm execution time of one function, with/without the shim,
+/// averaged over `trials` warm invocations (paper: 10 trials).
+fn warm_exec(class: &'static crate::workload::FuncClass, shim: bool, trials: usize) -> f64 {
+    let mut w = Workload::default();
+    let f = w.register(class, 0, 10.0);
+    let mut t = Trace::default();
+    let gap = class.gpu_cold_s() + 5.0;
+    for i in 0..=trials {
+        t.events.push(TraceEvent {
+            at: secs(i as f64 * gap),
+            func: f,
+        });
+    }
+    let cfg = PlaneConfig {
+        shim,
+        d: 1,
+        ..Default::default()
+    };
+    let r = crate::sim::replay(w, &t, cfg);
+    let warm: Vec<f64> = r
+        .recorder()
+        .records
+        .iter()
+        .filter(|rec| rec.start_kind != StartKind::Cold)
+        .map(|rec| rec.exec_s())
+        .collect();
+    assert_eq!(warm.len(), trials, "{}", class.name);
+    crate::util::stats::mean(&warm)
+}
+
+pub fn rows() -> Vec<Row> {
+    CATALOG
+        .iter()
+        .map(|class| {
+            let off = warm_exec(class, false, 10);
+            let on = warm_exec(class, true, 10);
+            Row {
+                name: class.name,
+                no_shim_s: off,
+                shim_s: on,
+                overhead_pct: (on / off - 1.0) * 100.0,
+            }
+        })
+        .collect()
+}
+
+pub fn main() {
+    println!("== Figure 3: UVM interposition shim overhead (10 warm trials) ==");
+    let rows = rows();
+    let mut t = Table::new(&["Function", "no-shim(s)", "shim(s)", "overhead%"]);
+    let mut csv = CsvWriter::create(
+        "results/fig3.csv",
+        &["function", "no_shim_s", "shim_s", "overhead_pct"],
+    )
+    .unwrap();
+    for r in &rows {
+        t.row(&[
+            r.name.to_string(),
+            format!("{:.3}", r.no_shim_s),
+            format!("{:.3}", r.shim_s),
+            format!("{:.1}", r.overhead_pct),
+        ]);
+        csv.rowv(&[
+            r.name.to_string(),
+            format!("{:.4}", r.no_shim_s),
+            format!("{:.4}", r.shim_s),
+            format!("{:.2}", r.overhead_pct),
+        ])
+        .unwrap();
+    }
+    csv.flush().unwrap();
+    print!("{}", t.render());
+    println!("(paper Fig 3: negligible for most functions, srad ≈ 30%)");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn srad_is_outlier_rest_small() {
+        let rows = rows();
+        for r in &rows {
+            if r.name == "srad" {
+                assert!(
+                    (r.overhead_pct - 30.0).abs() < 3.0,
+                    "srad overhead {}",
+                    r.overhead_pct
+                );
+            } else {
+                assert!(
+                    r.overhead_pct < 10.0,
+                    "{}: overhead {}",
+                    r.name,
+                    r.overhead_pct
+                );
+                assert!(r.overhead_pct >= 0.0);
+            }
+        }
+    }
+}

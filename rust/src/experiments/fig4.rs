@@ -1,0 +1,155 @@
+//! Figure 4: memory-management policy comparison under oversubscription.
+//!
+//! The paper's setup: 16 copies of the FFT function, each using 1.5 GB —
+//! 24 GB of demand on a 16 GB V100 (150%). Each copy is sequentially
+//! invoked 20 times. Policies: stock UVM, madvise, prefetch-only, and
+//! the integrated prefetch+swap (default). Expected shape: stock ≈ +40%
+//! exec time, madvise slightly worse, prefetch+swap ≈ ideal warm time.
+
+use crate::memory::MemPolicy;
+use crate::plane::PlaneConfig;
+use crate::scheduler::policies::PolicyKind;
+use crate::types::{secs, StartKind};
+use crate::util::csv::CsvWriter;
+use crate::util::table::Table;
+use crate::workload::catalog::by_name;
+use crate::workload::trace::{Trace, TraceEvent, Workload};
+
+pub const COPIES: usize = 16;
+pub const ROUNDS: usize = 20;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub policy: &'static str,
+    /// Mean warm execution time (kernel incl. fault stalls), seconds.
+    pub exec_s: f64,
+    /// Mean in-shim blocking time, seconds.
+    pub in_shim_s: f64,
+    /// Total = what the user experiences per invocation.
+    pub total_s: f64,
+}
+
+fn workload() -> (Workload, Trace) {
+    let class = by_name("fft").unwrap();
+    let mut w = Workload::default();
+    let mut t = Trace::default();
+    let mut funcs = Vec::new();
+    for c in 0..COPIES {
+        funcs.push(w.register(class, c, 30.0));
+    }
+    // Round-robin sequential invocations: copy 0..15, repeat — each
+    // round touches all 16 working sets, forcing the 150% churn.
+    let spacing = 2.0; // > warm exec (0.897 s): sequential, D=1 drains
+    for round in 0..ROUNDS {
+        for (c, f) in funcs.iter().enumerate() {
+            t.events.push(TraceEvent {
+                at: secs((round * COPIES + c) as f64 * spacing),
+                func: *f,
+            });
+        }
+    }
+    t.sort();
+    (w, t)
+}
+
+pub fn measure(policy: MemPolicy) -> Row {
+    let (w, t) = workload();
+    let cfg = PlaneConfig {
+        policy: PolicyKind::Mqfq,
+        mem_policy: policy,
+        d: 1,
+        pool_size: COPIES + 1,
+        ..Default::default()
+    };
+    let r = crate::sim::replay(w, &t, cfg);
+    let warm: Vec<&crate::metrics::InvRecord> = r
+        .recorder()
+        .records
+        .iter()
+        .filter(|rec| rec.start_kind != StartKind::Cold)
+        .collect();
+    assert!(!warm.is_empty());
+    let exec = warm.iter().map(|r| r.exec_s()).sum::<f64>() / warm.len() as f64;
+    let shim = warm.iter().map(|r| r.in_shim_s()).sum::<f64>() / warm.len() as f64;
+    Row {
+        policy: policy.name(),
+        exec_s: exec,
+        in_shim_s: shim,
+        total_s: exec + shim,
+    }
+}
+
+pub fn rows() -> Vec<Row> {
+    [
+        MemPolicy::StockUvm,
+        MemPolicy::Madvise,
+        MemPolicy::PrefetchOnly,
+        MemPolicy::PrefetchSwap,
+    ]
+    .into_iter()
+    .map(measure)
+    .collect()
+}
+
+pub fn main() {
+    println!(
+        "== Figure 4: memory policies, {COPIES}×1.5GB FFT on 16GB V100 \
+         (150% oversubscription), {ROUNDS} sequential rounds =="
+    );
+    let rows = rows();
+    let ideal = by_name("fft").unwrap().gpu_warm_s;
+    let mut t = Table::new(&["policy", "exec(s)", "in-shim(s)", "total(s)", "vs-ideal%"]);
+    let mut csv = CsvWriter::create(
+        "results/fig4.csv",
+        &["policy", "exec_s", "in_shim_s", "total_s"],
+    )
+    .unwrap();
+    for r in &rows {
+        t.row(&[
+            r.policy.to_string(),
+            format!("{:.3}", r.exec_s),
+            format!("{:.3}", r.in_shim_s),
+            format!("{:.3}", r.total_s),
+            format!("{:+.1}", (r.total_s / ideal - 1.0) * 100.0),
+        ]);
+        csv.rowv(&[
+            r.policy.to_string(),
+            format!("{:.4}", r.exec_s),
+            format!("{:.4}", r.in_shim_s),
+            format!("{:.4}", r.total_s),
+        ])
+        .unwrap();
+    }
+    csv.flush().unwrap();
+    print!("{}", t.render());
+    println!("(ideal non-UVM warm exec: {ideal:.3}s; paper: stock +40%, prefetch+swap ≈ ideal)");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_ordering_matches_fig4() {
+        let stock = measure(MemPolicy::StockUvm);
+        let madv = measure(MemPolicy::Madvise);
+        let swap = measure(MemPolicy::PrefetchSwap);
+        // Madvise slightly worse than stock; prefetch+swap best.
+        assert!(madv.total_s > stock.total_s, "{madv:?} vs {stock:?}");
+        assert!(swap.total_s < stock.total_s, "{swap:?} vs {stock:?}");
+        // Stock UVM meaningfully above ideal; prefetch+swap near ideal.
+        let ideal = by_name("fft").unwrap().gpu_warm_s;
+        assert!(
+            stock.total_s / ideal > 1.25,
+            "stock {} vs ideal {ideal}",
+            stock.total_s
+        );
+        // Near-ideal: the residual is the exposed PCIe transfer on
+        // sequential (no queue wait to hide it) invocations.
+        assert!(
+            swap.total_s / ideal < 1.25,
+            "prefetch+swap {} vs ideal {ideal}",
+            swap.total_s
+        );
+    }
+}

@@ -1,0 +1,206 @@
+//! Figure 7: hardware multiplexing (MPS, MIG) and multi-GPU scaling.
+//!
+//! * 7a — A30: MQFQ alone vs MQFQ+MIG vs pure MPS (no queueing policy,
+//!   high D) vs MQFQ+MPS, normalized to MQFQ alone, across Azure traces.
+//! * 7b — per-function slowdown on a half-GPU MIG slice.
+//! * 7c — 1 vs 2 V100s across D on a high-load trace.
+
+use crate::gpu::{Device, MultiplexMode, A30, V100};
+use crate::plane::PlaneConfig;
+use crate::scheduler::policies::PolicyKind;
+use crate::types::GpuId;
+use crate::util::csv::CsvWriter;
+use crate::util::table::Table;
+use crate::workload::azure::{self, AzureConfig};
+use crate::workload::catalog::CATALOG;
+
+use super::{run, RunSummary};
+
+/// One 7a configuration on one Azure trace.
+fn run_7a(trace_id: usize, label: &str, cfg: PlaneConfig) -> RunSummary {
+    let (w, t) = azure::generate(&AzureConfig {
+        trace_id,
+        duration_s: 600.0,
+        load_scale: 1.0,
+    });
+    run(&format!("trace{trace_id} {label}"), w, &t, cfg).0
+}
+
+pub fn fig7a_rows(trace_id: usize) -> Vec<(String, f64)> {
+    let base = PlaneConfig {
+        profile: A30,
+        policy: PolicyKind::Mqfq,
+        d: 2,
+        ..Default::default()
+    };
+    let configs: Vec<(&str, PlaneConfig)> = vec![
+        ("mqfq", base.clone()),
+        (
+            "mqfq+mig",
+            PlaneConfig {
+                mode: MultiplexMode::Mig(2),
+                ..base.clone()
+            },
+        ),
+        (
+            // Pure MPS: hardware multiplexes kernel launches, control
+            // plane just shovels work in arrival order at high D.
+            "mps-only",
+            PlaneConfig {
+                mode: MultiplexMode::Mps,
+                policy: PolicyKind::Fcfs,
+                d: 8,
+                ..base.clone()
+            },
+        ),
+        (
+            "mqfq+mps",
+            PlaneConfig {
+                mode: MultiplexMode::Mps,
+                ..base.clone()
+            },
+        ),
+    ];
+    let runs: Vec<(String, f64)> = configs
+        .into_iter()
+        .map(|(label, cfg)| {
+            let s = run_7a(trace_id, label, cfg);
+            (label.to_string(), s.wavg_latency_s)
+        })
+        .collect();
+    let baseline = runs[0].1;
+    runs.into_iter()
+        .map(|(l, v)| (l, v / baseline))
+        .collect()
+}
+
+pub fn fig7a() {
+    println!("== Figure 7a: MPS/MIG latency normalized to MQFQ (A30) ==");
+    let mut t = Table::new(&["trace", "mqfq", "mqfq+mig", "mps-only", "mqfq+mps"]);
+    let mut csv = CsvWriter::create(
+        "results/fig7a.csv",
+        &["trace", "mqfq", "mqfq_mig", "mps_only", "mqfq_mps"],
+    )
+    .unwrap();
+    for trace_id in [2, 4, 6] {
+        let rows = fig7a_rows(trace_id);
+        t.row(&[
+            format!("{trace_id}"),
+            format!("{:.2}", rows[0].1),
+            format!("{:.2}", rows[1].1),
+            format!("{:.2}", rows[2].1),
+            format!("{:.2}", rows[3].1),
+        ]);
+        csv.rowv(&[
+            trace_id.to_string(),
+            format!("{:.3}", rows[0].1),
+            format!("{:.3}", rows[1].1),
+            format!("{:.3}", rows[2].1),
+            format!("{:.3}", rows[3].1),
+        ])
+        .unwrap();
+    }
+    csv.flush().unwrap();
+    print!("{}", t.render());
+    println!("(paper: MIG hurts; pure MPS +3–240%; MQFQ+MPS best — up to −80%)");
+}
+
+pub fn fig7b_rows() -> Vec<(&'static str, f64)> {
+    let full = Device::new(GpuId(0), A30, MultiplexMode::Plain);
+    let slice = Device::mig_slice(GpuId(1), A30, 2);
+    CATALOG
+        .iter()
+        .map(|c| {
+            let ratio =
+                slice.exec_time(c, true) as f64 / full.exec_time(c, true) as f64;
+            (c.name, ratio)
+        })
+        .collect()
+}
+
+pub fn fig7b() {
+    println!("== Figure 7b: execution slowdown on a half-GPU MIG slice ==");
+    let mut t = Table::new(&["function", "slowdown×"]);
+    let mut csv = CsvWriter::create("results/fig7b.csv", &["function", "slowdown"]).unwrap();
+    for (name, ratio) in fig7b_rows() {
+        t.row(&[name.to_string(), format!("{ratio:.2}")]);
+        csv.rowv(&[name.to_string(), format!("{ratio:.3}")]).unwrap();
+    }
+    csv.flush().unwrap();
+    print!("{}", t.render());
+    println!("(paper: RNN/SRAD/FFT see the largest slowdowns)");
+}
+
+pub fn fig7c_rows() -> Vec<RunSummary> {
+    // High-load trace: scale trace 6 (80% util on one GPU) up.
+    let mut rows = Vec::new();
+    for n_gpus in [1usize, 2] {
+        for d in [1usize, 2, 3] {
+            let (w, t) = azure::generate(&AzureConfig {
+                trace_id: 6,
+                duration_s: 600.0,
+                load_scale: 1.4,
+            });
+            let cfg = PlaneConfig {
+                profile: V100,
+                n_gpus,
+                d,
+                policy: PolicyKind::Mqfq,
+                ..Default::default()
+            };
+            let (s, _) = run(&format!("{n_gpus}xV100 D={d}"), w, &t, cfg);
+            rows.push(s);
+        }
+    }
+    rows
+}
+
+pub fn fig7c() {
+    println!("== Figure 7c: multi-GPU scaling (high-load trace) ==");
+    let rows = fig7c_rows();
+    print!("{}", super::summary_table(&rows).render());
+    super::write_summary_csv("fig7c", &rows).unwrap();
+    println!("(paper: 2 GPUs give 2.3× at D=1, ~4× at higher D)");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mig_slowdown_ordering() {
+        let rows = fig7b_rows();
+        let get = |n: &str| rows.iter().find(|(name, _)| *name == n).unwrap().1;
+        assert!(get("rnn") > 2.0);
+        assert!(get("srad") > 2.0);
+        assert!(get("fft") > 1.5);
+        assert!(get("isoneural") < 1.3);
+    }
+
+    #[test]
+    fn mqfq_mps_beats_mps_only() {
+        let rows = fig7a_rows(4);
+        let get = |n: &str| rows.iter().find(|(name, _)| name == n).unwrap().1;
+        assert!(
+            get("mqfq+mps") < get("mps-only"),
+            "mqfq+mps {:.2} vs mps-only {:.2}",
+            get("mqfq+mps"),
+            get("mps-only")
+        );
+        // MQFQ+MPS should also beat plain MQFQ (lower interference).
+        assert!(get("mqfq+mps") <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn two_gpus_scale_latency_down() {
+        let rows = fig7c_rows();
+        let one_d2 = rows.iter().find(|r| r.label == "1xV100 D=2").unwrap();
+        let two_d2 = rows.iter().find(|r| r.label == "2xV100 D=2").unwrap();
+        assert!(
+            two_d2.wavg_latency_s < one_d2.wavg_latency_s / 1.5,
+            "2 GPUs {:.2}s vs 1 GPU {:.2}s",
+            two_d2.wavg_latency_s,
+            one_d2.wavg_latency_s
+        );
+    }
+}

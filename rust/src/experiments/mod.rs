@@ -1,0 +1,162 @@
+//! The experiment harness: one function per table/figure of the paper's
+//! evaluation (see DESIGN.md §4 for the index). Shared by the bench
+//! binaries (`cargo bench --bench <exp>`) and the CLI (`mqfq-sticky exp
+//! <exp>`). Every experiment prints a paper-style table and writes a CSV
+//! under `results/`.
+
+pub mod ablation;
+pub mod fig1;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod perf;
+pub mod table1;
+pub mod table3;
+
+use crate::plane::PlaneConfig;
+use crate::sim::{replay, ReplayResult};
+use crate::util::csv::CsvWriter;
+use crate::util::table::Table;
+use crate::workload::{Trace, Workload};
+
+/// Summary of one replay (the common row unit across experiments).
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub label: String,
+    pub invocations: usize,
+    pub wavg_latency_s: f64,
+    pub mean_exec_s: f64,
+    pub p99_latency_s: f64,
+    pub cold_ratio: f64,
+    pub mean_util: f64,
+    pub inter_fn_variance: f64,
+    pub makespan_s: f64,
+}
+
+/// Run one replay and summarize.
+pub fn run(label: &str, workload: Workload, trace: &Trace, cfg: PlaneConfig) -> (RunSummary, ReplayResult) {
+    let r = replay(workload, trace, cfg);
+    let rec = r.recorder();
+    let p99 = crate::util::stats::percentiles(&rec.latencies_s(), &[99.0])[0];
+    let summary = RunSummary {
+        label: label.to_string(),
+        invocations: rec.len(),
+        wavg_latency_s: rec.weighted_avg_latency_s(),
+        mean_exec_s: rec.mean_exec_s(),
+        p99_latency_s: p99,
+        cold_ratio: r.plane.pool_stats().cold_ratio(),
+        mean_util: r.mean_util,
+        inter_fn_variance: rec.inter_function_variance(),
+        makespan_s: crate::types::to_secs(r.makespan),
+    };
+    (summary, r)
+}
+
+/// Render a set of run summaries as the standard comparison table.
+pub fn summary_table(rows: &[RunSummary]) -> Table {
+    let mut t = Table::new(&[
+        "config",
+        "invocations",
+        "avg-lat(s)",
+        "p99-lat(s)",
+        "exec(s)",
+        "cold%",
+        "util%",
+        "var(fn)",
+    ]);
+    for s in rows {
+        t.row(&[
+            s.label.clone(),
+            s.invocations.to_string(),
+            format!("{:.3}", s.wavg_latency_s),
+            format!("{:.3}", s.p99_latency_s),
+            format!("{:.3}", s.mean_exec_s),
+            format!("{:.1}", s.cold_ratio * 100.0),
+            format!("{:.1}", s.mean_util * 100.0),
+            format!("{:.1}", s.inter_fn_variance),
+        ]);
+    }
+    t
+}
+
+/// Write summaries to `results/<name>.csv`.
+pub fn write_summary_csv(name: &str, rows: &[RunSummary]) -> std::io::Result<()> {
+    let mut w = CsvWriter::create(
+        format!("results/{name}.csv"),
+        &[
+            "config",
+            "invocations",
+            "wavg_latency_s",
+            "p99_latency_s",
+            "mean_exec_s",
+            "cold_ratio",
+            "mean_util",
+            "inter_fn_variance",
+            "makespan_s",
+        ],
+    )?;
+    for s in rows {
+        w.rowv(&[
+            s.label.clone(),
+            s.invocations.to_string(),
+            format!("{:.6}", s.wavg_latency_s),
+            format!("{:.6}", s.p99_latency_s),
+            format!("{:.6}", s.mean_exec_s),
+            format!("{:.6}", s.cold_ratio),
+            format!("{:.6}", s.mean_util),
+            format!("{:.6}", s.inter_fn_variance),
+            format!("{:.3}", s.makespan_s),
+        ])?;
+    }
+    w.flush()
+}
+
+/// Experiment registry for the CLI.
+pub const ALL: &[(&str, fn())] = &[
+    ("table1", table1::main),
+    ("fig1", fig1::main),
+    ("fig3", fig3::main),
+    ("fig4", fig4::main),
+    ("table3", table3::main),
+    ("fig5a", fig5::fig5a),
+    ("fig5b", fig5::fig5b),
+    ("fig5c", fig5::fig5c),
+    ("fig6a", fig6::fig6a),
+    ("fig6b", fig6::fig6b),
+    ("fig6c", fig6::fig6c),
+    ("fig7a", fig7::fig7a),
+    ("fig7b", fig7::fig7b),
+    ("fig7c", fig7::fig7c),
+    ("fig8a", fig8::fig8a),
+    ("fig8b", fig8::fig8b),
+    ("fig8c", fig8::fig8c),
+    ("ablation", ablation::main),
+    ("perf", perf::main),
+];
+
+/// Look up an experiment by name.
+pub fn by_name(name: &str) -> Option<fn()> {
+    ALL.iter().find(|(n, _)| *n == name).map(|(_, f)| *f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_every_table_and_figure() {
+        let names: Vec<&str> = ALL.iter().map(|(n, _)| *n).collect();
+        for expect in [
+            "table1", "fig1", "fig3", "fig4", "table3", "fig5a", "fig5b", "fig5c",
+            "fig6a", "fig6b", "fig6c", "fig7a", "fig7b", "fig7c", "fig8a", "fig8b",
+            "fig8c", "ablation", "perf",
+        ] {
+            assert!(names.contains(&expect), "{expect} missing");
+        }
+        assert!(by_name("table1").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

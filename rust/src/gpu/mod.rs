@@ -1,0 +1,373 @@
+//! GPU device model — the hardware substitution substrate (DESIGN.md §1).
+//!
+//! The scheduler only ever observes a GPU through (a) utilization
+//! samples (the paper polls NVML every 200 ms), (b) device-memory
+//! headroom (tracked via the interposition shim), and (c) completion
+//! latencies. This module produces all three for the paper's two
+//! testbeds (V100 16 GB, A30 24 GB) under the three multiplexing regimes
+//! (plain concurrent dispatch, MPS, MIG slices) and for multi-GPU
+//! servers.
+
+pub mod pool;
+
+pub use pool::DevicePool;
+
+use crate::types::{DurNanos, FuncId, GpuId, InvocationId, Nanos};
+use crate::workload::catalog::FuncClass;
+
+/// Hardware multiplexing regime (§4.2 "Architecture").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MultiplexMode {
+    /// No hardware support: the scheduler dispatches concurrent
+    /// invocations and the driver time-slices them (the V100 testbed).
+    Plain,
+    /// NVIDIA MPS: kernel-level sharing, much lower interference.
+    Mps,
+    /// MIG: the physical GPU is split into `n` isolated slices; each is
+    /// exposed as a vGPU with D=1 (handled in [`pool`]).
+    Mig(u32),
+}
+
+/// Static hardware profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuProfile {
+    pub name: &'static str,
+    pub vram_mb: u64,
+    /// Execution-time multiplier relative to the V100 baseline the
+    /// catalog was calibrated on (A30 is slightly faster on most of the
+    /// catalog's kernels).
+    pub speed: f64,
+    /// Bulk host↔device copy bandwidth (cuMemPrefetchAsync), GB/s.
+    pub pcie_gbps: f64,
+    /// Effective on-demand UVM page-fault migration bandwidth, GB/s.
+    /// An order of magnitude below bulk prefetch: each fault stalls the
+    /// SM, migrates 2 MB chunks, and serializes on the fault handler —
+    /// this is what makes "stock UVM" 40% slower in Fig 4.
+    pub uvm_fault_gbps: f64,
+    /// Interference coefficient for concurrent plain dispatch.
+    pub interference_coef: f64,
+    /// Interference coefficient under MPS (kernel-level scheduling).
+    pub mps_interference_coef: f64,
+}
+
+/// The paper's first testbed: NVIDIA V100 16 GB (no MIG, broken MPS).
+pub const V100: GpuProfile = GpuProfile {
+    name: "v100",
+    vram_mb: 16_384,
+    speed: 1.0,
+    pcie_gbps: 12.0,
+    uvm_fault_gbps: 2.2,
+    interference_coef: 0.45,
+    mps_interference_coef: 0.07,
+};
+
+/// The paper's second testbed: NVIDIA A30 24 GB (MPS + MIG capable).
+pub const A30: GpuProfile = GpuProfile {
+    name: "a30",
+    vram_mb: 24_576,
+    speed: 0.92,
+    pcie_gbps: 16.0,
+    uvm_fault_gbps: 2.9,
+    interference_coef: 0.40,
+    mps_interference_coef: 0.06,
+};
+
+/// An invocation currently executing on the device.
+#[derive(Debug, Clone, Copy)]
+pub struct Running {
+    pub inv: InvocationId,
+    pub func: FuncId,
+    pub intensity: f64,
+    pub started: Nanos,
+}
+
+/// One schedulable device: a physical GPU, or one MIG slice (vGPU).
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub id: GpuId,
+    pub profile: GpuProfile,
+    pub mode: MultiplexMode,
+    /// Fraction of the physical GPU's compute this device owns
+    /// (1.0, or 1/slices for a MIG vGPU).
+    pub compute_frac: f64,
+    /// VRAM owned by this device (sliced under MIG), MB.
+    pub vram_mb: u64,
+    running: Vec<Running>,
+    /// Device memory currently resident (shim ledger roll-up), MB.
+    resident_mb: u64,
+    // Exact utilization integral: Σ min(1, load) dt over state changes.
+    busy_integral_ns: f64,
+    last_change: Nanos,
+}
+
+impl Device {
+    pub fn new(id: GpuId, profile: GpuProfile, mode: MultiplexMode) -> Self {
+        Self {
+            id,
+            profile,
+            mode,
+            compute_frac: 1.0,
+            vram_mb: profile.vram_mb,
+            running: Vec::new(),
+            resident_mb: 0,
+            busy_integral_ns: 0.0,
+            last_change: 0,
+        }
+    }
+
+    /// Create one MIG slice (vGPU) of `slices` on `profile`.
+    pub fn mig_slice(id: GpuId, profile: GpuProfile, slices: u32) -> Self {
+        let mut d = Self::new(id, profile, MultiplexMode::Mig(slices));
+        d.compute_frac = 1.0 / slices as f64;
+        d.vram_mb = profile.vram_mb / slices as u64;
+        d
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn running(&self) -> &[Running] {
+        &self.running
+    }
+
+    /// Invocations of `func` currently executing here.
+    pub fn in_flight_of(&self, func: FuncId) -> usize {
+        self.running.iter().filter(|r| r.func == func).count()
+    }
+
+    /// Instantaneous compute load: Σ intensity / compute_frac, uncapped.
+    pub fn load(&self) -> f64 {
+        let total: f64 = self.running.iter().map(|r| r.intensity).sum();
+        total / self.compute_frac
+    }
+
+    /// Instantaneous utilization in [0, 1] — what NVML reports: the
+    /// fraction of time *any* kernel is resident on the device, not an
+    /// SM-occupancy average. Busy ⇒ 1.0, idle ⇒ 0.0 (the 200 ms monitor
+    /// then averages samples into the paper's "GPU Util %").
+    pub fn utilization(&self) -> f64 {
+        if self.running.is_empty() {
+            0.0
+        } else {
+            1.0
+        }
+    }
+
+    pub fn resident_mb(&self) -> u64 {
+        self.resident_mb
+    }
+
+    /// Free device memory, MB.
+    pub fn free_mb(&self) -> u64 {
+        self.vram_mb.saturating_sub(self.resident_mb)
+    }
+
+    /// Memory pressure: resident / vram (can exceed 1.0 under UVM
+    /// oversubscription).
+    pub fn pressure(&self) -> f64 {
+        self.resident_mb as f64 / self.vram_mb as f64
+    }
+
+    /// Adjust the resident-memory ledger (called by the shim/memory
+    /// manager as regions prefetch in and swap out).
+    pub fn add_resident(&mut self, mb: u64) {
+        self.resident_mb += mb;
+    }
+
+    pub fn sub_resident(&mut self, mb: u64) {
+        self.resident_mb = self.resident_mb.saturating_sub(mb);
+    }
+
+    fn integrate(&mut self, now: Nanos) {
+        if now > self.last_change {
+            self.busy_integral_ns += (now - self.last_change) as f64 * self.utilization();
+            self.last_change = now;
+        }
+    }
+
+    /// Begin executing an invocation here.
+    pub fn begin(&mut self, inv: InvocationId, func: FuncId, class: &FuncClass, now: Nanos) {
+        self.integrate(now);
+        self.running.push(Running {
+            inv,
+            func,
+            intensity: class.intensity,
+            started: now,
+        });
+    }
+
+    /// Complete an invocation; returns false if it wasn't running here.
+    pub fn complete(&mut self, inv: InvocationId, now: Nanos) -> bool {
+        self.integrate(now);
+        let before = self.running.len();
+        self.running.retain(|r| r.inv != inv);
+        before != self.running.len()
+    }
+
+    /// Mean utilization over [0, now] from the exact integral.
+    pub fn mean_utilization(&mut self, now: Nanos) -> f64 {
+        self.integrate(now);
+        if now == 0 {
+            0.0
+        } else {
+            self.busy_integral_ns / now as f64
+        }
+    }
+
+    /// Execution-time model for one invocation of `class` dispatched now
+    /// (DESIGN.md §1): warm time × device speed × MIG slowdown ×
+    /// capacity congestion × interference overhead × shim overhead.
+    ///
+    /// The factor is frozen at dispatch time from the current running
+    /// set — a standard discrete-event approximation (documented in
+    /// DESIGN.md §8).
+    pub fn exec_time(&self, class: &FuncClass, shim_enabled: bool) -> DurNanos {
+        let base = class.gpu_warm_s * self.profile.speed;
+        let mig = match self.mode {
+            MultiplexMode::Mig(_) => {
+                // Fig 7b calibrates the half-GPU slice; scale the extra
+                // slowdown linearly with the lost fraction.
+                let half_extra = class.mig_slowdown - 1.0;
+                1.0 + half_extra * (1.0 - self.compute_frac) / 0.5
+            }
+            _ => 1.0,
+        };
+        // Concurrency effects: the new invocation sees the *current*
+        // running set as contenders.
+        let others: f64 = self.running.iter().map(|r| r.intensity).sum::<f64>() / self.compute_frac;
+        let total = others + class.intensity / self.compute_frac;
+        let congestion = total.max(1.0);
+        let coef = match self.mode {
+            MultiplexMode::Plain => self.profile.interference_coef,
+            MultiplexMode::Mps => self.profile.mps_interference_coef,
+            MultiplexMode::Mig(_) => 0.0, // isolated slices
+        };
+        // Superlinear in co-runner intensity: two heavy co-runners
+        // thrash caches/DRAM far worse than one (the Fig-6a D=3
+        // degradation: "the device cannot handle the higher
+        // concurrency").
+        let overhead = 1.0 + coef * others.powf(2.0);
+        let shim = if shim_enabled {
+            1.0 + class.shim_overhead
+        } else {
+            1.0
+        };
+        crate::types::secs(base * mig * congestion * overhead * shim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::catalog::by_name;
+
+    fn dev() -> Device {
+        Device::new(GpuId(0), V100, MultiplexMode::Plain)
+    }
+
+    #[test]
+    fn empty_device_runs_at_warm_speed() {
+        let d = dev();
+        let fft = by_name("fft").unwrap();
+        let t = d.exec_time(fft, false);
+        assert_eq!(t, crate::types::secs(0.897));
+    }
+
+    #[test]
+    fn shim_overhead_applies() {
+        let d = dev();
+        let srad = by_name("srad").unwrap();
+        let plain = d.exec_time(srad, false) as f64;
+        let shimmed = d.exec_time(srad, true) as f64;
+        assert!((shimmed / plain - 1.30).abs() < 1e-6);
+    }
+
+    #[test]
+    fn interference_grows_with_concurrency() {
+        let mut d = dev();
+        let lud = by_name("lud").unwrap();
+        let solo = d.exec_time(lud, true);
+        d.begin(InvocationId(1), FuncId(0), by_name("ffmpeg").unwrap(), 0);
+        let with_one = d.exec_time(lud, true);
+        d.begin(InvocationId(2), FuncId(1), by_name("needle").unwrap(), 0);
+        let with_two = d.exec_time(lud, true);
+        assert!(with_one > solo);
+        assert!(with_two > with_one);
+        // D=3 with heavy functions must degrade sharply (Fig 6a shape):
+        // total intensity 0.70+0.70+0.75 > 2 ⇒ >2× slowdown.
+        assert!(with_two as f64 / solo as f64 > 1.8);
+    }
+
+    #[test]
+    fn mps_interferes_less_than_plain() {
+        let mut plain = Device::new(GpuId(0), A30, MultiplexMode::Plain);
+        let mut mps = Device::new(GpuId(1), A30, MultiplexMode::Mps);
+        let fft = by_name("fft").unwrap();
+        for d in [&mut plain, &mut mps] {
+            d.begin(InvocationId(1), FuncId(0), by_name("ffmpeg").unwrap(), 0);
+        }
+        assert!(mps.exec_time(fft, true) < plain.exec_time(fft, true));
+    }
+
+    #[test]
+    fn mig_slice_slows_down_per_fig7b() {
+        let slice = Device::mig_slice(GpuId(0), A30, 2);
+        assert_eq!(slice.vram_mb, A30.vram_mb / 2);
+        let rnn = by_name("rnn").unwrap();
+        let full = Device::new(GpuId(1), A30, MultiplexMode::Plain);
+        let ratio =
+            slice.exec_time(rnn, false) as f64 / full.exec_time(rnn, false) as f64;
+        assert!((ratio - 2.60).abs() < 0.01, "rnn on half-slice: {ratio}");
+    }
+
+    #[test]
+    fn utilization_is_busy_fraction() {
+        let mut d = dev();
+        assert_eq!(d.utilization(), 0.0);
+        d.begin(InvocationId(1), FuncId(0), by_name("lud").unwrap(), 0);
+        // NVML-style: any resident kernel ⇒ 100% busy.
+        assert_eq!(d.utilization(), 1.0);
+        d.begin(InvocationId(2), FuncId(1), by_name("needle").unwrap(), 0);
+        assert_eq!(d.utilization(), 1.0);
+        assert!(d.load() > 1.0); // compute load is intensity-weighted
+        assert!(d.complete(InvocationId(1), 100));
+        assert!(!d.complete(InvocationId(1), 100));
+        assert_eq!(d.utilization(), 1.0);
+        assert!(d.complete(InvocationId(2), 200));
+        assert_eq!(d.utilization(), 0.0);
+    }
+
+    #[test]
+    fn mean_utilization_integral() {
+        let mut d = dev();
+        let lud = by_name("lud").unwrap();
+        d.begin(InvocationId(1), FuncId(0), lud, 0);
+        d.complete(InvocationId(1), 1000);
+        // busy for [0,1000], idle for [1000,2000] ⇒ 50%.
+        let mu = d.mean_utilization(2000);
+        assert!((mu - 0.5).abs() < 1e-9, "{mu}");
+    }
+
+    #[test]
+    fn memory_ledger_saturates() {
+        let mut d = dev();
+        d.add_resident(10_000);
+        assert_eq!(d.free_mb(), 6_384);
+        d.sub_resident(20_000);
+        assert_eq!(d.resident_mb(), 0);
+        assert!(d.pressure() < 1e-12);
+    }
+
+    #[test]
+    fn in_flight_of_counts_per_function() {
+        let mut d = dev();
+        let c = by_name("fft").unwrap();
+        d.begin(InvocationId(1), FuncId(3), c, 0);
+        d.begin(InvocationId(2), FuncId(3), c, 0);
+        d.begin(InvocationId(3), FuncId(5), c, 0);
+        assert_eq!(d.in_flight_of(FuncId(3)), 2);
+        assert_eq!(d.in_flight_of(FuncId(5)), 1);
+        assert_eq!(d.in_flight(), 3);
+    }
+}

@@ -1,0 +1,215 @@
+//! Multi-GPU device pool with sticky, late-binding placement (§5).
+//!
+//! The paper keeps a single dispatcher per server which late-binds each
+//! chosen invocation to a GPU: "sticky" load balancing prefers the GPU
+//! the function last ran on (warm data locality), falling back to the
+//! least-loaded device. Under MIG, every slice is a separate vGPU here.
+
+use std::collections::HashMap;
+
+use crate::types::{FuncId, GpuId, InvocationId, Nanos};
+use crate::workload::catalog::FuncClass;
+
+use super::{Device, GpuProfile, MultiplexMode};
+
+/// A set of schedulable devices on one server.
+#[derive(Debug, Clone)]
+pub struct DevicePool {
+    devices: Vec<Device>,
+    /// Last GPU each function ran on (stickiness).
+    sticky: HashMap<FuncId, GpuId>,
+    /// Where each in-flight invocation is running.
+    placements: HashMap<InvocationId, GpuId>,
+}
+
+impl DevicePool {
+    /// `n` physical GPUs of `profile` in `mode`. Under `Mig(s)`, each
+    /// physical GPU contributes `s` vGPU slices.
+    pub fn new(n: usize, profile: GpuProfile, mode: MultiplexMode) -> Self {
+        let mut devices = Vec::new();
+        match mode {
+            MultiplexMode::Mig(slices) => {
+                for _ in 0..n {
+                    for _ in 0..slices {
+                        let id = GpuId(devices.len() as u32);
+                        devices.push(Device::mig_slice(id, profile, slices));
+                    }
+                }
+            }
+            _ => {
+                for i in 0..n {
+                    devices.push(Device::new(GpuId(i as u32), profile, mode));
+                }
+            }
+        }
+        Self {
+            devices,
+            sticky: HashMap::new(),
+            placements: HashMap::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+
+    pub fn device(&self, id: GpuId) -> &Device {
+        &self.devices[id.0 as usize]
+    }
+
+    pub fn device_mut(&mut self, id: GpuId) -> &mut Device {
+        &mut self.devices[id.0 as usize]
+    }
+
+    /// Total in-flight invocations across devices.
+    pub fn in_flight(&self) -> usize {
+        self.devices.iter().map(|d| d.in_flight()).sum()
+    }
+
+    /// In-flight invocations of one function across devices.
+    pub fn in_flight_of(&self, func: FuncId) -> usize {
+        self.devices.iter().map(|d| d.in_flight_of(func)).sum()
+    }
+
+    /// Pick a device for `func`, bounded by `per_gpu_limit` concurrent
+    /// invocations per device (the D level under the current controller
+    /// setting; MIG slices are implicitly limit-1 per §4.2, enforced by
+    /// the caller passing 1).
+    ///
+    /// Placement preference (§5 "sticky load balancing among GPUs"):
+    /// 1. the sticky device, if it has a slot;
+    /// 2. otherwise the least-loaded device with a slot.
+    pub fn pick(&self, func: FuncId, per_gpu_limit: usize) -> Option<GpuId> {
+        let has_slot = |d: &Device| d.in_flight() < per_gpu_limit;
+        if let Some(&g) = self.sticky.get(&func) {
+            if has_slot(&self.devices[g.0 as usize]) {
+                return Some(g);
+            }
+        }
+        self.devices
+            .iter()
+            .filter(|d| has_slot(d))
+            .min_by(|a, b| a.load().partial_cmp(&b.load()).unwrap())
+            .map(|d| d.id)
+    }
+
+    /// Begin an invocation on `gpu` (updates stickiness + placement).
+    pub fn begin(
+        &mut self,
+        gpu: GpuId,
+        inv: InvocationId,
+        func: FuncId,
+        class: &FuncClass,
+        now: Nanos,
+    ) {
+        self.devices[gpu.0 as usize].begin(inv, func, class, now);
+        self.sticky.insert(func, gpu);
+        self.placements.insert(inv, gpu);
+    }
+
+    /// Complete an invocation; returns the device it ran on.
+    pub fn complete(&mut self, inv: InvocationId, now: Nanos) -> Option<GpuId> {
+        let gpu = self.placements.remove(&inv)?;
+        self.devices[gpu.0 as usize].complete(inv, now);
+        Some(gpu)
+    }
+
+    pub fn placement(&self, inv: InvocationId) -> Option<GpuId> {
+        self.placements.get(&inv).copied()
+    }
+
+    pub fn sticky_gpu(&self, func: FuncId) -> Option<GpuId> {
+        self.sticky.get(&func).copied()
+    }
+
+    /// Mean utilization across devices at `now` (exact integral).
+    pub fn mean_utilization(&mut self, now: Nanos) -> f64 {
+        if self.devices.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .devices
+            .iter_mut()
+            .map(|d| d.mean_utilization(now))
+            .sum();
+        sum / self.devices.len() as f64
+    }
+
+    /// Instantaneous utilization across devices (NVML-style sample).
+    pub fn utilization(&self) -> f64 {
+        if self.devices.is_empty() {
+            return 0.0;
+        }
+        self.devices.iter().map(|d| d.utilization()).sum::<f64>() / self.devices.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::V100;
+    use crate::workload::catalog::by_name;
+
+    #[test]
+    fn mig_pool_exposes_slices_as_vgpus() {
+        let pool = DevicePool::new(1, crate::gpu::A30, MultiplexMode::Mig(2));
+        assert_eq!(pool.len(), 2);
+        assert_eq!(pool.device(GpuId(0)).vram_mb, crate::gpu::A30.vram_mb / 2);
+    }
+
+    #[test]
+    fn pick_prefers_sticky_gpu() {
+        let mut pool = DevicePool::new(2, V100, MultiplexMode::Plain);
+        let f = FuncId(0);
+        let c = by_name("fft").unwrap();
+        // First placement: least-loaded (gpu0), then sticky.
+        let g = pool.pick(f, 2).unwrap();
+        pool.begin(g, InvocationId(1), f, c, 0);
+        pool.complete(InvocationId(1), 10);
+        // Load gpu0 with another function; sticky should still win while
+        // it has a slot.
+        pool.begin(g, InvocationId(2), FuncId(9), c, 10);
+        assert_eq!(pool.pick(f, 2), Some(g));
+        // Fill it: falls over to the other device.
+        pool.begin(g, InvocationId(3), FuncId(9), c, 10);
+        let other = pool.pick(f, 2).unwrap();
+        assert_ne!(other, g);
+    }
+
+    #[test]
+    fn pick_none_when_all_full() {
+        let mut pool = DevicePool::new(1, V100, MultiplexMode::Plain);
+        let c = by_name("fft").unwrap();
+        pool.begin(GpuId(0), InvocationId(1), FuncId(0), c, 0);
+        assert_eq!(pool.pick(FuncId(1), 1), None);
+        assert_eq!(pool.in_flight(), 1);
+    }
+
+    #[test]
+    fn complete_clears_placement() {
+        let mut pool = DevicePool::new(2, V100, MultiplexMode::Plain);
+        let c = by_name("lud").unwrap();
+        pool.begin(GpuId(1), InvocationId(7), FuncId(2), c, 0);
+        assert_eq!(pool.placement(InvocationId(7)), Some(GpuId(1)));
+        assert_eq!(pool.complete(InvocationId(7), 5), Some(GpuId(1)));
+        assert_eq!(pool.placement(InvocationId(7)), None);
+        assert_eq!(pool.complete(InvocationId(7), 5), None);
+    }
+
+    #[test]
+    fn least_loaded_balances() {
+        let mut pool = DevicePool::new(2, V100, MultiplexMode::Plain);
+        let c = by_name("ffmpeg").unwrap(); // intensity 0.7
+        pool.begin(GpuId(0), InvocationId(1), FuncId(0), c, 0);
+        // New function (no stickiness) goes to the idle device.
+        assert_eq!(pool.pick(FuncId(5), 2), Some(GpuId(1)));
+    }
+}

@@ -1,0 +1,37 @@
+//! # MQFQ-Sticky: Fair Queueing For Serverless GPU Functions
+//!
+//! A from-scratch reproduction of the CS.DC 2025 paper as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the MQFQ-Sticky locality-enhanced fair
+//!   queueing scheduler with integrated GPU memory management, plus every
+//!   substrate it needs: a GPU device model (V100/A30, MPS/MIG/multi-GPU),
+//!   a CUDA/UVM interposition-shim model, container lifecycle + warm pool,
+//!   workload generators (Zipfian + Azure-style samples), a metrics stack,
+//!   a discrete-event simulator and a real-time driver, an invocation
+//!   server, and a benchmark harness regenerating every table and figure
+//!   of the paper's evaluation.
+//! * **Layer 2/1 (python/, build-time only)** — the function bodies as JAX
+//!   graphs whose hot-spots are Pallas kernels, AOT-lowered to HLO text in
+//!   `artifacts/` and executed by [`runtime`] through the PJRT CPU client.
+//!
+//! Start with [`plane::ControlPlane`] (the per-server control plane) or
+//! [`sim::replay`] (trace replay used by the experiment harness); the
+//! scheduling policies live in [`scheduler::policies`].
+
+pub mod cli;
+pub mod clock;
+pub mod container;
+pub mod experiments;
+pub mod gpu;
+pub mod memory;
+pub mod metrics;
+pub mod plane;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod shim;
+pub mod sim;
+pub mod types;
+pub mod util;
+pub mod workload;

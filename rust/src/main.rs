@@ -1,0 +1,7 @@
+//! `mqfq-sticky` — leader binary: experiments, trace tooling, replay,
+//! real-time serving, artifact validation. See `mqfq-sticky help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(mqfq::cli::run(argv));
+}

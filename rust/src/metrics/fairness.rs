@@ -1,0 +1,190 @@
+//! Fairness accounting (Figs 5a/5b): per-function GPU service over
+//! 30-second windows and the Eq-1 theoretical bound.
+
+use crate::types::{to_secs, DurNanos, Nanos};
+
+use super::InvRecord;
+
+/// Service received per function within one time window (Fig 5a series).
+#[derive(Debug, Clone)]
+pub struct FairnessWindow {
+    pub start: Nanos,
+    pub end: Nanos,
+    /// GPU service seconds per function id (dense, indexed by FuncId).
+    pub service_s: Vec<f64>,
+    /// Functions that were backlogged (had queued or running work) at
+    /// any point during the window.
+    pub backlogged: Vec<bool>,
+}
+
+impl FairnessWindow {
+    /// Max−min service gap among backlogged functions (Fig 5b metric).
+    pub fn max_gap_s(&self) -> f64 {
+        let vals: Vec<f64> = (0..self.service_s.len())
+            .filter(|&i| self.backlogged[i])
+            .map(|i| self.service_s[i])
+            .collect();
+        if vals.len() < 2 {
+            return 0.0;
+        }
+        let max = vals.iter().cloned().fold(f64::MIN, f64::max);
+        let min = vals.iter().cloned().fold(f64::MAX, f64::min);
+        max - min
+    }
+}
+
+/// Slice execution records into fixed windows, attributing each record's
+/// on-device service time proportionally to overlapping windows.
+///
+/// Backlog attribution follows the fairness theorem's premise: a
+/// function counts as backlogged in a window only if its [arrived,
+/// completed] spans cover (nearly) the *whole* window — Eq 1 bounds the
+/// service gap between *continuously* backlogged functions, and a
+/// function with work during only a sliver of the window would make the
+/// measured gap meaningless.
+pub fn service_windows(
+    records: &[InvRecord],
+    n_funcs: usize,
+    window: DurNanos,
+    horizon: Nanos,
+) -> Vec<FairnessWindow> {
+    assert!(window > 0);
+    let n_windows = horizon.div_ceil(window) as usize;
+    let mut out: Vec<FairnessWindow> = (0..n_windows)
+        .map(|w| FairnessWindow {
+            start: w as Nanos * window,
+            end: (w as Nanos + 1) * window,
+            service_s: vec![0.0; n_funcs],
+            backlogged: vec![false; n_funcs],
+        })
+        .collect();
+    // Per (window, func): coverage extent of [arrived, completed] spans.
+    let mut cover: Vec<Vec<Option<(Nanos, Nanos)>>> = vec![vec![None; n_funcs]; n_windows];
+    for r in records {
+        let f = r.func.0 as usize;
+        if f >= n_funcs {
+            continue;
+        }
+        // Service attribution over [exec_start, completed].
+        let exec_start = r.completed.saturating_sub(r.exec);
+        let (mut w, last) = (
+            (exec_start / window) as usize,
+            (r.completed.saturating_sub(1) / window) as usize,
+        );
+        while w <= last && w < n_windows {
+            let ws = out[w].start.max(exec_start);
+            let we = out[w].end.min(r.completed);
+            if we > ws {
+                out[w].service_s[f] += to_secs(we - ws);
+            }
+            w += 1;
+        }
+        // Backlog-coverage extents over [arrived, completed].
+        let (mut w, last) = (
+            (r.arrived / window) as usize,
+            (r.completed.saturating_sub(1) / window) as usize,
+        );
+        while w <= last && w < n_windows {
+            let ws = out[w].start.max(r.arrived);
+            let we = out[w].end.min(r.completed);
+            let e = &mut cover[w][f];
+            *e = match *e {
+                None => Some((ws, we)),
+                Some((a, b)) => Some((a.min(ws), b.max(we))),
+            };
+            w += 1;
+        }
+    }
+    // Continuously backlogged ⇔ coverage extends over ≥90% of the window
+    // on both ends.
+    for (w, win) in out.iter_mut().enumerate() {
+        let slack = window / 20;
+        for f in 0..n_funcs {
+            if let Some((a, b)) = cover[w][f] {
+                win.backlogged[f] = a <= win.start + slack && b >= win.end - slack;
+            }
+        }
+    }
+    out
+}
+
+/// The Eq-1 fairness upper bound (w=1 for all functions):
+/// |S_i − S_j| ≤ (D−1)(2T + τ_i − τ_j) — evaluated with the catalog's
+/// extreme τ values to get the workload-level bound the paper plots as
+/// the horizontal line in Fig 5b.
+pub fn fairness_bound_eq1(d: usize, t_s: f64, tau_max_s: f64, tau_min_s: f64) -> f64 {
+    // At D=1 classic fair queueing's bound degenerates; the paper's plot
+    // uses the configured D. Guard the subtraction for safety.
+    let d_term = (d as f64 - 1.0).max(1.0);
+    d_term * (2.0 * t_s + (tau_max_s - tau_min_s).max(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{FuncId, GpuId, InvocationId, StartKind, SEC};
+
+    fn rec(func: u32, arrived: Nanos, disp: Nanos, done: Nanos) -> InvRecord {
+        InvRecord {
+            inv: InvocationId(arrived + func as u64),
+            func: FuncId(func),
+            gpu: GpuId(0),
+            arrived,
+            dispatched: disp,
+            completed: done,
+            start_kind: StartKind::GpuWarm,
+            boot: 0,
+            blocking: 0,
+            exec: done - disp,
+        }
+    }
+
+    #[test]
+    fn service_attributed_to_windows() {
+        // One execution spanning both 3 s windows fully ([arrived=0,
+        // completed=6s]): continuously backlogged in both.
+        let records = [rec(0, 0, SEC, 6 * SEC)];
+        let ws = service_windows(&records, 1, 3 * SEC, 6 * SEC);
+        assert_eq!(ws.len(), 2);
+        assert!((ws[0].service_s[0] - 2.0).abs() < 1e-9);
+        assert!((ws[1].service_s[0] - 3.0).abs() < 1e-9);
+        assert!(ws[0].backlogged[0] && ws[1].backlogged[0]);
+    }
+
+    #[test]
+    fn max_gap_over_backlogged_only() {
+        let records = [
+            rec(0, 0, 0, 10 * SEC),     // 10 s service, covers the window
+            rec(1, 0, 3 * SEC, 10 * SEC), // 7 s service, covers the window
+        ];
+        let ws = service_windows(&records, 3, 10 * SEC, 10 * SEC);
+        // Function 2 never appears: excluded from the gap.
+        assert!((ws[0].max_gap_s() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sliver_of_backlog_does_not_count() {
+        // Work only in the first 20% of the window ⇒ not continuously
+        // backlogged ⇒ excluded from the fairness gap.
+        let records = [rec(0, 0, 0, 2 * SEC)];
+        let ws = service_windows(&records, 1, 10 * SEC, 10 * SEC);
+        assert!(!ws[0].backlogged[0]);
+        assert!(ws[0].service_s[0] > 0.0); // service still attributed
+    }
+
+    #[test]
+    fn bound_matches_paper_magnitude() {
+        // Paper §6.1: D=2, T=10, catalog τ spread ≈ 4.5 s ⇒ bound ≈ 24.5;
+        // their Fig-5b line is 411 for their exact workload — the shape
+        // check is that measured gaps stay far below the bound.
+        let b = fairness_bound_eq1(2, 10.0, 4.5, 0.026);
+        assert!(b > 20.0 && b < 30.0, "{b}");
+    }
+
+    #[test]
+    fn single_function_has_zero_gap() {
+        let records = [rec(0, 0, 0, SEC)];
+        let ws = service_windows(&records, 1, SEC, SEC);
+        assert_eq!(ws[0].max_gap_s(), 0.0);
+    }
+}

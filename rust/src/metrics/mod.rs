@@ -1,0 +1,246 @@
+//! Metrics: per-invocation records, per-function aggregates, fairness
+//! windows (Fig 5a/5b), and utilization timelines (Fig 6c).
+
+pub mod fairness;
+
+pub use fairness::{fairness_bound_eq1, service_windows, FairnessWindow};
+
+use std::collections::HashMap;
+
+use crate::types::{to_secs, DurNanos, FuncId, GpuId, InvocationId, Nanos, StartKind};
+use crate::util::stats::{variance, Welford};
+
+/// Full life-cycle record of one completed invocation.
+#[derive(Debug, Clone, Copy)]
+pub struct InvRecord {
+    pub inv: InvocationId,
+    pub func: FuncId,
+    pub gpu: GpuId,
+    pub arrived: Nanos,
+    pub dispatched: Nanos,
+    pub completed: Nanos,
+    pub start_kind: StartKind,
+    /// Cold-boot time paid (0 for warm starts).
+    pub boot: DurNanos,
+    /// Shim blocking before the kernel started (prefetch/madvise).
+    pub blocking: DurNanos,
+    /// On-device service time (incl. interference + UVM faults).
+    pub exec: DurNanos,
+}
+
+impl InvRecord {
+    /// End-to-end latency (queueing + overheads + service), seconds.
+    pub fn latency_s(&self) -> f64 {
+        to_secs(self.completed - self.arrived)
+    }
+
+    /// Queue waiting time, seconds.
+    pub fn queue_s(&self) -> f64 {
+        to_secs(self.dispatched - self.arrived)
+    }
+
+    pub fn exec_s(&self) -> f64 {
+        to_secs(self.exec)
+    }
+
+    /// Fig-4 "in-shim" time, seconds.
+    pub fn in_shim_s(&self) -> f64 {
+        to_secs(self.blocking)
+    }
+}
+
+/// Per-function aggregate (Fig 6b rows).
+#[derive(Debug, Clone)]
+pub struct FuncAgg {
+    pub func: FuncId,
+    pub invocations: u64,
+    pub mean_latency_s: f64,
+    pub var_latency: f64,
+    pub mean_exec_s: f64,
+    pub mean_queue_s: f64,
+    pub cold: u64,
+    pub host_warm: u64,
+    pub gpu_warm: u64,
+}
+
+/// Collects invocation records + utilization samples during a run.
+#[derive(Debug, Default, Clone)]
+pub struct Recorder {
+    pub records: Vec<InvRecord>,
+    /// (time, instantaneous device utilization) at monitor ticks.
+    pub util_timeline: Vec<(Nanos, f64)>,
+    /// (time, current D level) at monitor ticks.
+    pub d_timeline: Vec<(Nanos, usize)>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, r: InvRecord) {
+        self.records.push(r);
+    }
+
+    pub fn sample_util(&mut self, now: Nanos, util: f64, d: usize) {
+        self.util_timeline.push((now, util));
+        self.d_timeline.push((now, d));
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Weighted average latency (§6.1): Σ N_i L_i / Σ N_i — i.e. the
+    /// plain mean over all invocations.
+    pub fn weighted_avg_latency_s(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.latency_s()).sum::<f64>() / self.records.len() as f64
+    }
+
+    pub fn mean_exec_s(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.exec_s()).sum::<f64>() / self.records.len() as f64
+    }
+
+    /// All latencies (seconds), for percentile reporting.
+    pub fn latencies_s(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.latency_s()).collect()
+    }
+
+    /// Cold-start fraction (Fig 8c "cold-hit %").
+    pub fn cold_ratio(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let cold = self
+            .records
+            .iter()
+            .filter(|r| r.start_kind == StartKind::Cold)
+            .count();
+        cold as f64 / self.records.len() as f64
+    }
+
+    /// Per-function aggregates, sorted by FuncId.
+    pub fn per_function(&self) -> Vec<FuncAgg> {
+        let mut map: HashMap<FuncId, (Welford, Welford, Welford, [u64; 3])> = HashMap::new();
+        for r in &self.records {
+            let e = map
+                .entry(r.func)
+                .or_insert_with(|| (Welford::new(), Welford::new(), Welford::new(), [0; 3]));
+            e.0.push(r.latency_s());
+            e.1.push(r.exec_s());
+            e.2.push(r.queue_s());
+            match r.start_kind {
+                StartKind::Cold => e.3[0] += 1,
+                StartKind::HostWarm => e.3[1] += 1,
+                StartKind::GpuWarm => e.3[2] += 1,
+            }
+        }
+        let mut out: Vec<FuncAgg> = map
+            .into_iter()
+            .map(|(func, (lat, exec, queue, kinds))| FuncAgg {
+                func,
+                invocations: lat.count(),
+                mean_latency_s: lat.mean(),
+                var_latency: lat.variance(),
+                mean_exec_s: exec.mean(),
+                mean_queue_s: queue.mean(),
+                cold: kinds[0],
+                host_warm: kinds[1],
+                gpu_warm: kinds[2],
+            })
+            .collect();
+        out.sort_by_key(|a| a.func);
+        out
+    }
+
+    /// Variance of the per-function mean latencies — the paper's
+    /// "global inter-function latency variance" (Fig 6b).
+    pub fn inter_function_variance(&self) -> f64 {
+        let means: Vec<f64> = self.per_function().iter().map(|a| a.mean_latency_s).collect();
+        variance(&means)
+    }
+
+    /// Mean utilization over the sampled timeline.
+    pub fn mean_util(&self) -> f64 {
+        if self.util_timeline.is_empty() {
+            return 0.0;
+        }
+        self.util_timeline.iter().map(|(_, u)| u).sum::<f64>()
+            / self.util_timeline.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::SEC;
+
+    fn rec(func: u32, arrived: Nanos, disp: Nanos, done: Nanos, kind: StartKind) -> InvRecord {
+        InvRecord {
+            inv: InvocationId(arrived),
+            func: FuncId(func),
+            gpu: GpuId(0),
+            arrived,
+            dispatched: disp,
+            completed: done,
+            start_kind: kind,
+            boot: 0,
+            blocking: 0,
+            exec: done - disp,
+        }
+    }
+
+    #[test]
+    fn weighted_avg_is_mean_over_invocations() {
+        let mut m = Recorder::new();
+        m.record(rec(0, 0, SEC, 2 * SEC, StartKind::GpuWarm)); // 2 s
+        m.record(rec(0, 0, SEC, 4 * SEC, StartKind::GpuWarm)); // 4 s
+        m.record(rec(1, 0, SEC, 6 * SEC, StartKind::Cold)); // 6 s
+        assert!((m.weighted_avg_latency_s() - 4.0).abs() < 1e-9);
+        assert!((m.cold_ratio() - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_function_aggregates() {
+        let mut m = Recorder::new();
+        m.record(rec(0, 0, SEC, 2 * SEC, StartKind::Cold));
+        m.record(rec(0, 0, SEC, 4 * SEC, StartKind::GpuWarm));
+        m.record(rec(2, 0, 2 * SEC, 3 * SEC, StartKind::HostWarm));
+        let aggs = m.per_function();
+        assert_eq!(aggs.len(), 2);
+        assert_eq!(aggs[0].func, FuncId(0));
+        assert_eq!(aggs[0].invocations, 2);
+        assert!((aggs[0].mean_latency_s - 3.0).abs() < 1e-9);
+        assert_eq!(aggs[0].cold, 1);
+        assert_eq!(aggs[0].gpu_warm, 1);
+        assert_eq!(aggs[1].func, FuncId(2));
+        assert!((aggs[1].mean_queue_s - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inter_function_variance_zero_for_identical() {
+        let mut m = Recorder::new();
+        m.record(rec(0, 0, SEC, 2 * SEC, StartKind::GpuWarm));
+        m.record(rec(1, 0, SEC, 2 * SEC, StartKind::GpuWarm));
+        assert_eq!(m.inter_function_variance(), 0.0);
+    }
+
+    #[test]
+    fn util_timeline_mean() {
+        let mut m = Recorder::new();
+        m.sample_util(0, 0.5, 2);
+        m.sample_util(SEC, 0.7, 2);
+        assert!((m.mean_util() - 0.6).abs() < 1e-12);
+        assert_eq!(m.d_timeline.len(), 2);
+    }
+}

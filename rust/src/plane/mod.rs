@@ -1,0 +1,572 @@
+//! The per-server control plane: policy + device pool + container pool
+//! + memory manager + concurrency controller, composed exactly as §5
+//! describes (a dedicated dispatch loop notified on arrivals,
+//! completions, and 200 ms monitor ticks).
+//!
+//! The plane is clock-agnostic: every entry point takes `now`. The
+//! discrete-event engine ([`crate::sim`]) passes virtual time and
+//! schedules the returned [`Dispatch`] records; the real-time driver
+//! ([`crate::server`], examples) passes wall time and executes the
+//! dispatched function on the PJRT runtime instead.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::container::ContainerPool;
+use crate::gpu::{DevicePool, GpuProfile, MultiplexMode};
+use crate::memory::{MemPolicy, MemoryManager};
+use crate::metrics::{InvRecord, Recorder};
+use crate::scheduler::policies::PolicyKind;
+use crate::scheduler::{
+    ConcurrencyController, Invocation, MqfqConfig, Policy, PolicyCtx, QState,
+};
+use crate::types::{ContainerId, DurNanos, FuncId, GpuId, InvocationId, Nanos, StartKind, MS};
+use crate::workload::Workload;
+
+/// Control-plane configuration for one experiment/server.
+#[derive(Clone)]
+pub struct PlaneConfig {
+    pub policy: PolicyKind,
+    pub mqfq: MqfqConfig,
+    pub mem_policy: MemPolicy,
+    pub n_gpus: usize,
+    pub profile: GpuProfile,
+    pub mode: MultiplexMode,
+    /// Fixed D level (per GPU). Ignored if `dynamic_d` is set.
+    pub d: usize,
+    /// Dynamic D: (max_d, utilization threshold) — §4.4.
+    pub dynamic_d: Option<(usize, f64)>,
+    /// Warm-pool capacity (paper default: 32).
+    pub pool_size: usize,
+    /// CUDA interposition shim enabled (Fig 3 toggles this off).
+    pub shim: bool,
+    /// NVML polling cadence (paper: 200 ms).
+    pub monitor_period: DurNanos,
+    /// When false, containers are destroyed after each invocation — the
+    /// "FCFS Naïve" nvidia-docker baseline of §6.2 (no container pool,
+    /// every start cold, ~300× latency overhead).
+    pub keep_warm: bool,
+}
+
+impl Default for PlaneConfig {
+    fn default() -> Self {
+        Self {
+            policy: PolicyKind::Mqfq,
+            mqfq: MqfqConfig::default(),
+            mem_policy: MemPolicy::PrefetchSwap,
+            n_gpus: 1,
+            profile: crate::gpu::V100,
+            mode: MultiplexMode::Plain,
+            d: 2,
+            dynamic_d: None,
+            pool_size: 32,
+            shim: true,
+            monitor_period: 200 * MS,
+            keep_warm: true,
+        }
+    }
+}
+
+/// One dispatch decision with its modeled timeline.
+#[derive(Debug, Clone, Copy)]
+pub struct Dispatch {
+    pub inv: InvocationId,
+    pub func: FuncId,
+    pub gpu: GpuId,
+    pub ctr: ContainerId,
+    /// Decision time.
+    pub at: Nanos,
+    /// When the kernel actually starts (after boot + blocking).
+    pub exec_start: Nanos,
+    /// Modeled completion time (sim mode schedules this; real mode
+    /// replaces it with the measured completion).
+    pub complete_at: Nanos,
+    pub start_kind: StartKind,
+    pub boot: DurNanos,
+    pub blocking: DurNanos,
+    /// Modeled on-device service (incl. interference + UVM faults).
+    pub exec: DurNanos,
+}
+
+struct InFlight {
+    func: FuncId,
+    ctr: ContainerId,
+    arrived: Nanos,
+    dispatch: Dispatch,
+}
+
+/// The control plane.
+pub struct ControlPlane {
+    pub cfg: PlaneConfig,
+    workload: Workload,
+    policy: Box<dyn Policy>,
+    gpus: DevicePool,
+    ctrs: ContainerPool,
+    mem: MemoryManager,
+    dctl: ConcurrencyController,
+    pub recorder: Recorder,
+    in_flight_per_func: Vec<usize>,
+    in_flight: HashMap<InvocationId, InFlight>,
+    /// Invocations popped from the policy that could not be placed
+    /// (container pool saturated); retried before the policy.
+    stash: VecDeque<Invocation>,
+    next_inv: u64,
+}
+
+impl ControlPlane {
+    pub fn new(workload: Workload, cfg: PlaneConfig) -> Self {
+        let n_funcs = workload.len();
+        let policy = cfg.policy.build_mqfq(n_funcs, cfg.mqfq.clone());
+        let gpus = DevicePool::new(cfg.n_gpus, cfg.profile, cfg.mode);
+        let dctl = match cfg.dynamic_d {
+            Some((max_d, thr)) => ConcurrencyController::dynamic(max_d, thr),
+            None => ConcurrencyController::fixed(cfg.d),
+        };
+        Self {
+            ctrs: ContainerPool::new(cfg.pool_size),
+            mem: MemoryManager::new(cfg.mem_policy),
+            dctl,
+            recorder: Recorder::new(),
+            in_flight_per_func: vec![0; n_funcs],
+            in_flight: HashMap::new(),
+            stash: VecDeque::new(),
+            next_inv: 0,
+            policy,
+            gpus,
+            workload,
+            cfg,
+        }
+    }
+
+    pub fn workload(&self) -> &Workload {
+        &self.workload
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.policy.pending() + self.stash.len()
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    pub fn pool_stats(&self) -> crate::container::pool::PoolStats {
+        self.ctrs.stats()
+    }
+
+    pub fn current_d(&self) -> usize {
+        self.dctl.limit()
+    }
+
+    pub fn mean_utilization(&mut self, now: Nanos) -> f64 {
+        self.gpus.mean_utilization(now)
+    }
+
+    /// Per-GPU concurrency limit under the current mode/controller.
+    fn per_gpu_limit(&self) -> usize {
+        match self.cfg.mode {
+            // Each MIG slice runs exactly one function (§4.2).
+            MultiplexMode::Mig(_) => 1,
+            _ => self.dctl.limit(),
+        }
+    }
+
+    /// A new invocation of `func` arrived (open-loop trace or server).
+    /// Returns its id and any dispatches it unlocked.
+    pub fn on_arrival(&mut self, func: FuncId, now: Nanos) -> (InvocationId, Vec<Dispatch>) {
+        let id = InvocationId(self.next_inv);
+        self.next_inv += 1;
+        self.policy.enqueue(
+            Invocation {
+                id,
+                func,
+                arrived: now,
+            },
+            now,
+        );
+        self.apply_state_changes(now);
+        (id, self.try_dispatch(now))
+    }
+
+    /// An invocation finished at `now` (modeled or measured). Frees its
+    /// slot, updates the policy's service estimate, records metrics, and
+    /// dispatches any unlocked work.
+    pub fn on_complete(&mut self, inv: InvocationId, now: Nanos) -> Vec<Dispatch> {
+        let Some(fli) = self.in_flight.remove(&inv) else {
+            return Vec::new();
+        };
+        self.gpus.complete(inv, now);
+        if self.cfg.keep_warm {
+            self.ctrs.release(fli.ctr, now);
+        } else if let Some((g, mb)) = self.ctrs.destroy(fli.ctr) {
+            self.gpus.device_mut(g).sub_resident(mb);
+        }
+        self.in_flight_per_func[fli.func.0 as usize] -= 1;
+        // Observed service = time since the kernel started (real mode
+        // feeds measured time; sim mode reproduces the model).
+        let service = now.saturating_sub(fli.dispatch.exec_start);
+        self.policy.on_complete(fli.func, service, now);
+        self.recorder.record(InvRecord {
+            inv,
+            func: fli.func,
+            gpu: fli.dispatch.gpu,
+            arrived: fli.arrived,
+            dispatched: fli.dispatch.at,
+            completed: now,
+            start_kind: fli.dispatch.start_kind,
+            boot: fli.dispatch.boot,
+            blocking: fli.dispatch.blocking,
+            exec: service,
+        });
+        self.apply_state_changes(now);
+        self.try_dispatch(now)
+    }
+
+    /// 200 ms monitor tick (§4.4/§5 "Utilization monitoring"): sample
+    /// utilization, adjust D, expire idle queues, dispatch.
+    pub fn on_monitor_tick(&mut self, now: Nanos) -> Vec<Dispatch> {
+        let util = self.gpus.utilization();
+        self.dctl.on_sample(util);
+        self.recorder.sample_util(now, util, self.dctl.limit());
+        // Background memory maintenance: async swap-out of marked/LRU
+        // regions keeps headroom for upcoming prefetches (§4.3).
+        self.mem.maintain(&mut self.ctrs, &mut self.gpus, now);
+        #[cfg(debug_assertions)]
+        if let Err(e) = self.check_invariants() {
+            panic!("control-plane invariant violated at t={now}: {e}");
+        }
+        let d = self.try_dispatch(now);
+        // try_dispatch runs the policy's update_state pass, which may
+        // expire queues; propagate to memory management.
+        self.apply_state_changes(now);
+        d
+    }
+
+    /// Exact utilization-integral touch (sim engine, at exec starts).
+    pub fn touch(&mut self, now: Nanos) {
+        self.gpus.mean_utilization(now);
+    }
+
+    /// Deep structural invariants, used by the property-test suite and
+    /// asserted at monitor ticks in debug builds:
+    /// 1. per-device in-flight ≤ the current per-GPU limit;
+    /// 2. every device's resident-memory ledger equals the sum of its
+    ///    containers' resident regions (shim/device consistency);
+    /// 3. container-pool size within capacity;
+    /// 4. per-function in-flight counters match the device pool.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        // Run-to-completion: a dynamic-D reduction never preempts, so
+        // the hard bound is the controller's ceiling, not its current
+        // setting (MIG slices are a constant 1).
+        let limit = match self.cfg.mode {
+            MultiplexMode::Mig(_) => 1,
+            _ => match self.cfg.dynamic_d {
+                Some((max_d, _)) => max_d,
+                None => self.cfg.d,
+            },
+        };
+        for d in self.gpus.devices() {
+            if d.in_flight() > limit {
+                return Err(format!(
+                    "{}: {} in flight exceeds limit {limit}",
+                    d.id,
+                    d.in_flight()
+                ));
+            }
+            let ctr_resident: u64 = self
+                .ctrs
+                .iter()
+                .filter(|c| c.gpu == d.id)
+                .map(|c| c.resident_mb())
+                .sum();
+            if ctr_resident != d.resident_mb() {
+                return Err(format!(
+                    "{}: device ledger {} != container ledgers {}",
+                    d.id,
+                    d.resident_mb(),
+                    ctr_resident
+                ));
+            }
+        }
+        if self.ctrs.len() > self.cfg.pool_size {
+            return Err(format!(
+                "pool {} exceeds capacity {}",
+                self.ctrs.len(),
+                self.cfg.pool_size
+            ));
+        }
+        let mut per_func = vec![0usize; self.in_flight_per_func.len()];
+        for d in self.gpus.devices() {
+            for r in d.running() {
+                per_func[r.func.0 as usize] += 1;
+            }
+        }
+        if per_func != self.in_flight_per_func {
+            return Err("per-function in-flight counters out of sync".into());
+        }
+        Ok(())
+    }
+
+    fn apply_state_changes(&mut self, now: Nanos) {
+        for (func, state) in self.policy.drain_state_changes() {
+            match state {
+                QState::Active => {
+                    self.mem
+                        .on_queue_active(func, &mut self.ctrs, &mut self.gpus, now)
+                }
+                QState::Throttled | QState::Inactive => self.mem.on_queue_deactivate(
+                    func,
+                    &mut self.ctrs,
+                    &mut self.gpus,
+                    now,
+                ),
+            }
+        }
+    }
+
+    /// The dispatch loop: while a device slot is free and the policy
+    /// yields work, place it (Algorithm 1's token check + §5 late
+    /// binding to a GPU).
+    pub fn try_dispatch(&mut self, now: Nanos) -> Vec<Dispatch> {
+        let mut out = Vec::new();
+        loop {
+            let limit = self.per_gpu_limit();
+            // Token check: any device with a free slot?
+            let any_slot = self
+                .gpus
+                .devices()
+                .iter()
+                .any(|d| d.in_flight() < limit);
+            if !any_slot {
+                break;
+            }
+            // Stash (placement-failed invocations) takes priority.
+            let inv = match self.stash.pop_front() {
+                Some(i) => i,
+                None => {
+                    let ctx = PolicyCtx {
+                        in_flight: &self.in_flight_per_func,
+                        d: limit,
+                    };
+                    match self.policy.dispatch(now, &ctx) {
+                        Some(i) => i,
+                        None => break,
+                    }
+                }
+            };
+            match self.place(inv, now) {
+                Some(d) => out.push(d),
+                None => {
+                    // Container pool saturated with busy containers;
+                    // park the invocation and stop dispatching.
+                    self.stash.push_back(inv);
+                    break;
+                }
+            }
+        }
+        if !out.is_empty() {
+            self.apply_state_changes(now);
+        }
+        out
+    }
+
+    /// Place one invocation: pick GPU, acquire container, settle memory,
+    /// model the execution timeline.
+    fn place(&mut self, inv: Invocation, now: Nanos) -> Option<Dispatch> {
+        let class = self.workload.func(inv.func).class;
+        let limit = self.per_gpu_limit();
+        let gpu = self.gpus.pick(inv.func, limit)?;
+
+        let acq = self.ctrs.acquire(inv.func, class, gpu, now)?;
+        // Destroyed LRU victims free their device memory.
+        for (g, mb) in &acq.evicted {
+            self.gpus.device_mut(*g).sub_resident(*mb);
+        }
+
+        // Memory: prefetch/fault per policy; cold boot hides transfers.
+        let mem_cost = self
+            .mem
+            .before_exec(acq.id, &mut self.ctrs, &mut self.gpus, now, acq.boot_ns);
+
+        // Execution model: frozen at dispatch from the current device
+        // state (see gpu::Device::exec_time).
+        let exec_model = self.gpus.device(gpu).exec_time(class, self.cfg.shim);
+        let exec = exec_model + mem_cost.fault;
+        let exec_start = now + acq.boot_ns + mem_cost.blocking;
+        let complete_at = exec_start + exec;
+
+        self.gpus.begin(gpu, inv.id, inv.func, class, now);
+        self.in_flight_per_func[inv.func.0 as usize] += 1;
+        let dispatch = Dispatch {
+            inv: inv.id,
+            func: inv.func,
+            gpu,
+            ctr: acq.id,
+            at: now,
+            exec_start,
+            complete_at,
+            start_kind: acq.kind,
+            boot: acq.boot_ns,
+            blocking: mem_cost.blocking,
+            exec,
+        };
+        self.in_flight.insert(
+            inv.id,
+            InFlight {
+                func: inv.func,
+                ctr: acq.id,
+                arrived: inv.arrived,
+                dispatch,
+            },
+        );
+        Some(dispatch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::SEC;
+    use crate::workload::catalog::by_name;
+
+    fn workload2() -> Workload {
+        let mut w = Workload::default();
+        w.register(by_name("fft").unwrap(), 0, 1.0);
+        w.register(by_name("imagenet").unwrap(), 0, 2.0);
+        w
+    }
+
+    fn plane(cfg: PlaneConfig) -> ControlPlane {
+        ControlPlane::new(workload2(), cfg)
+    }
+
+    #[test]
+    fn first_arrival_dispatches_cold() {
+        let mut p = plane(PlaneConfig::default());
+        let (id, ds) = p.on_arrival(FuncId(0), 0);
+        assert_eq!(ds.len(), 1);
+        let d = ds[0];
+        assert_eq!(d.inv, id);
+        assert_eq!(d.start_kind, StartKind::Cold);
+        assert!(d.boot > 2 * SEC); // fft cold extra ≈ 2.425 s
+        assert!(d.exec >= crate::types::secs(0.897));
+        assert_eq!(p.in_flight(), 1);
+    }
+
+    #[test]
+    fn warm_start_after_completion() {
+        let mut p = plane(PlaneConfig::default());
+        let (_, ds) = p.on_arrival(FuncId(0), 0);
+        let done = ds[0].complete_at;
+        let more = p.on_complete(ds[0].inv, done);
+        assert!(more.is_empty());
+        assert_eq!(p.recorder.len(), 1);
+        // Second arrival shortly after: warm container, no boot.
+        let (_, ds2) = p.on_arrival(FuncId(0), done + SEC);
+        assert_eq!(ds2.len(), 1);
+        assert_ne!(ds2[0].start_kind, StartKind::Cold);
+        assert_eq!(ds2[0].boot, 0);
+        assert!(ds2[0].complete_at - ds2[0].at < ds[0].complete_at - ds[0].at);
+    }
+
+    #[test]
+    fn d_limits_concurrency() {
+        let cfg = PlaneConfig {
+            d: 2,
+            ..Default::default()
+        };
+        let mut p = plane(cfg);
+        let mut dispatched = 0;
+        for i in 0..5 {
+            let (_, ds) = p.on_arrival(FuncId(0), i);
+            dispatched += ds.len();
+        }
+        assert_eq!(dispatched, 2, "D=2 must cap in-flight work");
+        assert_eq!(p.in_flight(), 2);
+        assert_eq!(p.pending(), 3);
+    }
+
+    #[test]
+    fn completion_unlocks_queued_work() {
+        let cfg = PlaneConfig {
+            d: 1,
+            ..Default::default()
+        };
+        let mut p = plane(cfg);
+        let (_, ds1) = p.on_arrival(FuncId(0), 0);
+        let (_, ds2) = p.on_arrival(FuncId(1), 1);
+        assert_eq!(ds1.len(), 1);
+        assert!(ds2.is_empty());
+        let more = p.on_complete(ds1[0].inv, ds1[0].complete_at);
+        assert_eq!(more.len(), 1);
+        assert_eq!(more[0].func, FuncId(1));
+    }
+
+    #[test]
+    fn mig_mode_caps_slices_at_one() {
+        let cfg = PlaneConfig {
+            mode: MultiplexMode::Mig(2),
+            profile: crate::gpu::A30,
+            d: 4, // ignored under MIG
+            ..Default::default()
+        };
+        let mut p = plane(cfg);
+        let mut total = 0;
+        for i in 0..4 {
+            let (_, ds) = p.on_arrival(FuncId(0), i);
+            total += ds.len();
+        }
+        // Two slices × one invocation each.
+        assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn monitor_tick_records_util() {
+        let mut p = plane(PlaneConfig::default());
+        p.on_arrival(FuncId(0), 0);
+        p.on_monitor_tick(200 * MS);
+        assert_eq!(p.recorder.util_timeline.len(), 1);
+        assert!(p.recorder.util_timeline[0].1 > 0.0);
+    }
+
+    #[test]
+    fn pool_saturation_stashes_instead_of_dropping() {
+        let cfg = PlaneConfig {
+            d: 4,
+            pool_size: 1,
+            ..Default::default()
+        };
+        let mut p = plane(cfg);
+        let (_, d1) = p.on_arrival(FuncId(0), 0);
+        assert_eq!(d1.len(), 1);
+        // Second function can't get a container (pool=1, busy).
+        let (_, d2) = p.on_arrival(FuncId(1), 1);
+        assert!(d2.is_empty());
+        assert_eq!(p.pending(), 1);
+        // Frees up on completion.
+        let more = p.on_complete(d1[0].inv, d1[0].complete_at);
+        assert_eq!(more.len(), 1);
+        assert_eq!(more[0].func, FuncId(1));
+    }
+
+    #[test]
+    fn dynamic_d_reacts_to_utilization() {
+        let cfg = PlaneConfig {
+            dynamic_d: Some((4, 0.9)),
+            ..Default::default()
+        };
+        let mut p = plane(cfg);
+        let d0 = p.current_d();
+        // Saturate the device, then tick repeatedly.
+        for i in 0..8 {
+            p.on_arrival(FuncId(1), i);
+        }
+        for t in 1..6 {
+            p.on_monitor_tick(t * 200 * MS);
+        }
+        assert!(p.current_d() <= d0);
+    }
+}

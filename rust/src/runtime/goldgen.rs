@@ -1,0 +1,84 @@
+//! Deterministic input generation — Rust twin of `python/compile/gen.py`.
+//!
+//! The AOT pipeline computes golden outputs from inputs produced by
+//! SplitMix64 streams seeded with `fnv1a(fn_name) + input_index`; this
+//! module regenerates bit-identical f32 inputs so artifact validation
+//! needs no binary tensor interchange. Keep in sync with gen.py.
+
+use crate::util::rng::{fnv1a, SplitMix64};
+
+/// Input value distribution, matching the manifest `unit` / `sym` kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// U[0, 1)
+    Unit,
+    /// U[-0.5, 0.5)
+    Sym,
+}
+
+impl Kind {
+    pub fn parse(s: &str) -> Option<Kind> {
+        match s {
+            "unit" => Some(Kind::Unit),
+            "sym" => Some(Kind::Sym),
+            _ => None,
+        }
+    }
+}
+
+/// Generate the full f32 buffer for one input tensor.
+pub fn fill(seed: u64, len: usize, kind: Kind) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        let v = rng.next_unit_f32();
+        out.push(match kind {
+            Kind::Unit => v,
+            Kind::Sym => v - 0.5,
+        });
+    }
+    out
+}
+
+/// Seed for input `index` of function `name` (twin of aot.py's
+/// `gen.fnv1a(name) + i`).
+pub fn input_seed(name: &str, index: usize) -> u64 {
+    fnv1a(name).wrapping_add(index as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_unit_matches_python_vectors() {
+        // Same vector as python/tests/test_gen.py::test_fill_unit_known_answers
+        let got = fill(42, 4, Kind::Unit);
+        let want = [0.741_564_87_f32, 0.159_910_38, 0.278_601_1, 0.344_190_66];
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-7, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn sym_is_unit_minus_half() {
+        let u = fill(7, 16, Kind::Unit);
+        let s = fill(7, 16, Kind::Sym);
+        for (a, b) in u.iter().zip(s.iter()) {
+            assert_eq!(a - 0.5, *b);
+        }
+    }
+
+    #[test]
+    fn input_seed_offsets_by_index() {
+        assert_eq!(input_seed("imagenet", 0), fnv1a("imagenet"));
+        assert_eq!(input_seed("imagenet", 3), fnv1a("imagenet") + 3);
+    }
+
+    #[test]
+    fn kind_parse() {
+        assert_eq!(Kind::parse("unit"), Some(Kind::Unit));
+        assert_eq!(Kind::parse("sym"), Some(Kind::Sym));
+        assert_eq!(Kind::parse("weird"), None);
+    }
+}

@@ -1,0 +1,187 @@
+//! Parser for `artifacts/manifest.txt` written by `python/compile/aot.py`.
+//!
+//! Format (plain text, one record per catalog function):
+//! ```text
+//! fn imagenet
+//! in 8x256 sym
+//! in 256x512 sym
+//! out 0 8x256 l2=2.74148041e+00 first=0.0,6.0e-18,4.2e-06,1.8e-35
+//! end
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+use super::goldgen::Kind;
+
+/// Declared input tensor: shape + generation kind.
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub kind: Kind,
+}
+
+impl InputSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Golden record for one output tensor.
+#[derive(Debug, Clone)]
+pub struct GoldenOutput {
+    pub index: usize,
+    pub shape: Vec<usize>,
+    /// L2 norm of the flattened output (f64 accumulation on python side).
+    pub l2: f64,
+    /// First up-to-4 elements.
+    pub first: Vec<f64>,
+}
+
+/// One catalog function's artifact contract.
+#[derive(Debug, Clone)]
+pub struct FunctionSpec {
+    pub name: String,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<GoldenOutput>,
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    s.split('x')
+        .map(|d| d.parse::<usize>().context("bad dim"))
+        .collect()
+}
+
+/// Parse the manifest text into function specs (order preserved).
+pub fn parse(text: &str) -> Result<Vec<FunctionSpec>> {
+    let mut specs = Vec::new();
+    let mut cur: Option<FunctionSpec> = None;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let tag = parts.next().unwrap();
+        let ctx = || format!("manifest line {}: {raw}", lineno + 1);
+        match tag {
+            "fn" => {
+                if cur.is_some() {
+                    bail!("{}: nested fn", ctx());
+                }
+                let name = parts.next().ok_or_else(|| anyhow!("{}: no name", ctx()))?;
+                cur = Some(FunctionSpec {
+                    name: name.to_string(),
+                    inputs: Vec::new(),
+                    outputs: Vec::new(),
+                });
+            }
+            "in" => {
+                let spec = cur.as_mut().ok_or_else(|| anyhow!("{}: in outside fn", ctx()))?;
+                let shape = parse_shape(parts.next().ok_or_else(|| anyhow!("{}: no shape", ctx()))?)?;
+                let kind_s = parts.next().ok_or_else(|| anyhow!("{}: no kind", ctx()))?;
+                let kind = Kind::parse(kind_s)
+                    .ok_or_else(|| anyhow!("{}: bad kind {kind_s}", ctx()))?;
+                spec.inputs.push(InputSpec { shape, kind });
+            }
+            "out" => {
+                let spec = cur.as_mut().ok_or_else(|| anyhow!("{}: out outside fn", ctx()))?;
+                let index: usize = parts
+                    .next()
+                    .ok_or_else(|| anyhow!("{}: no index", ctx()))?
+                    .parse()?;
+                let shape = parse_shape(parts.next().ok_or_else(|| anyhow!("{}: no shape", ctx()))?)?;
+                let mut l2 = None;
+                let mut first = Vec::new();
+                for kv in parts {
+                    if let Some(v) = kv.strip_prefix("l2=") {
+                        l2 = Some(v.parse::<f64>()?);
+                    } else if let Some(v) = kv.strip_prefix("first=") {
+                        for x in v.split(',') {
+                            first.push(x.parse::<f64>()?);
+                        }
+                    }
+                }
+                spec.outputs.push(GoldenOutput {
+                    index,
+                    shape,
+                    l2: l2.ok_or_else(|| anyhow!("{}: missing l2", ctx()))?,
+                    first,
+                });
+            }
+            "end" => {
+                let spec = cur.take().ok_or_else(|| anyhow!("{}: end outside fn", ctx()))?;
+                specs.push(spec);
+            }
+            other => bail!("{}: unknown tag {other}", ctx()),
+        }
+    }
+    if cur.is_some() {
+        bail!("manifest truncated: missing final 'end'");
+    }
+    Ok(specs)
+}
+
+/// Read and parse a manifest file.
+pub fn load<P: AsRef<Path>>(path: P) -> Result<Vec<FunctionSpec>> {
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    parse(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+fn demo
+in 8x256 sym
+in 256 unit
+out 0 8x256 l2=2.74148041e+00 first=1.0,2.0
+end
+fn other
+in 4 sym
+out 0 4 l2=1.0e+00 first=0.5
+end
+";
+
+    #[test]
+    fn parses_two_functions() {
+        let specs = parse(SAMPLE).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "demo");
+        assert_eq!(specs[0].inputs.len(), 2);
+        assert_eq!(specs[0].inputs[0].shape, vec![8, 256]);
+        assert_eq!(specs[0].inputs[0].kind, Kind::Sym);
+        assert_eq!(specs[0].inputs[1].kind, Kind::Unit);
+        assert_eq!(specs[0].outputs[0].first, vec![1.0, 2.0]);
+        assert!((specs[0].outputs[0].l2 - 2.74148041).abs() < 1e-9);
+        assert_eq!(specs[1].inputs[0].len(), 4);
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        assert!(parse("fn demo\nin 4 sym\n").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_tag() {
+        assert!(parse("fn a\nbogus 1\nend\n").is_err());
+    }
+
+    #[test]
+    fn rejects_orphan_records() {
+        assert!(parse("in 4 sym\n").is_err());
+        assert!(parse("out 0 4 l2=1.0 first=1.0\n").is_err());
+        assert!(parse("end\n").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_l2() {
+        assert!(parse("fn a\nout 0 4 first=1.0\nend\n").is_err());
+    }
+}

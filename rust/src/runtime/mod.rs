@@ -1,0 +1,245 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes them on the request path.
+//!
+//! This is the only place the `xla` crate is touched. Interchange is HLO
+//! *text* — jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and DESIGN.md).
+//!
+//! Inputs are staged **once** per function as device buffers
+//! ([`PjRtBuffer`]) at load time — the serving hot path then calls
+//! `execute_b` with the staged buffers, paying no host→device transfer
+//! per invocation (the paper's functions likewise hold their weights
+//! resident; per-request payloads are small).
+
+pub mod goldgen;
+pub mod manifest;
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use manifest::FunctionSpec;
+
+/// A loaded, compiled function artifact with pre-staged inputs.
+pub struct LoadedFunction {
+    pub spec: FunctionSpec,
+    exe: xla::PjRtLoadedExecutable,
+    staged: Vec<xla::PjRtBuffer>,
+}
+
+/// Summary of one execution.
+#[derive(Debug, Clone)]
+pub struct ExecReport {
+    pub name: String,
+    /// Wall-clock execution time (compile excluded).
+    pub elapsed: std::time::Duration,
+    /// Flattened f32 outputs.
+    pub outputs: Vec<Vec<f32>>,
+}
+
+/// The PJRT runtime: one CPU client + a cache of compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    functions: HashMap<String, LoadedFunction>,
+    dir: PathBuf,
+}
+
+impl PjrtRuntime {
+    /// Create a runtime rooted at an artifacts directory (does not load
+    /// anything yet; see [`Self::load_all`] / [`Self::load_function`]).
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            functions: HashMap::new(),
+            dir: artifacts_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Parse the manifest and load + compile every artifact in it.
+    pub fn load_all(&mut self) -> Result<Vec<String>> {
+        let specs = manifest::load(self.dir.join("manifest.txt"))?;
+        let mut names = Vec::new();
+        for spec in specs {
+            names.push(spec.name.clone());
+            self.load_spec(spec)?;
+        }
+        Ok(names)
+    }
+
+    /// Load + compile a single artifact described by `spec`.
+    pub fn load_spec(&mut self, spec: FunctionSpec) -> Result<()> {
+        let path = self.dir.join(format!("{}.hlo.txt", spec.name));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not UTF-8")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", spec.name))?;
+
+        // Stage the deterministic inputs as device buffers once.
+        let device = self
+            .client
+            .addressable_devices()
+            .into_iter()
+            .next()
+            .context("no addressable PJRT device")?;
+        let mut staged = Vec::with_capacity(spec.inputs.len());
+        for (i, input) in spec.inputs.iter().enumerate() {
+            let data = goldgen::fill(
+                goldgen::input_seed(&spec.name, i),
+                input.len(),
+                input.kind,
+            );
+            let dims: Vec<usize> = input.shape.clone();
+            let buf = self
+                .client
+                .buffer_from_host_buffer(&data, &dims, Some(&device))
+                .map_err(|e| anyhow!("staging input {i} of {}: {e:?}", spec.name))?;
+            staged.push(buf);
+        }
+        self.functions
+            .insert(spec.name.clone(), LoadedFunction { spec, exe, staged });
+        Ok(())
+    }
+
+    /// Load one function by name (reads the manifest for its spec).
+    pub fn load_function(&mut self, name: &str) -> Result<()> {
+        let specs = manifest::load(self.dir.join("manifest.txt"))?;
+        let spec = specs
+            .into_iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| anyhow!("{name} not in manifest"))?;
+        self.load_spec(spec)
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.functions.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.functions.contains_key(name)
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&FunctionSpec> {
+        self.functions.get(name).map(|f| &f.spec)
+    }
+
+    /// Execute `name` with its staged inputs; returns flattened outputs.
+    pub fn execute(&self, name: &str) -> Result<ExecReport> {
+        let f = self
+            .functions
+            .get(name)
+            .ok_or_else(|| anyhow!("{name} not loaded"))?;
+        let start = Instant::now();
+        let result = f
+            .exe
+            .execute_b(&f.staged)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        let elapsed = start.elapsed();
+
+        // aot.py lowers with return_tuple=True: always a tuple literal.
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of {name}: {e:?}"))?;
+        let mut outputs = Vec::with_capacity(parts.len());
+        for p in parts {
+            outputs.push(
+                p.to_vec::<f32>()
+                    .map_err(|e| anyhow!("reading output of {name}: {e:?}"))?,
+            );
+        }
+        Ok(ExecReport {
+            name: name.to_string(),
+            elapsed,
+            outputs,
+        })
+    }
+
+    /// Execute and check outputs against the golden manifest records.
+    /// Returns the report on success, an error naming the first mismatch
+    /// otherwise.
+    pub fn validate(&self, name: &str) -> Result<ExecReport> {
+        let report = self.execute(name)?;
+        let spec = &self.functions[name].spec;
+        if report.outputs.len() != spec.outputs.len() {
+            return Err(anyhow!(
+                "{name}: output arity {} != manifest {}",
+                report.outputs.len(),
+                spec.outputs.len()
+            ));
+        }
+        for golden in &spec.outputs {
+            let got = &report.outputs[golden.index];
+            let want_len: usize = golden.shape.iter().product();
+            if got.len() != want_len {
+                return Err(anyhow!(
+                    "{name} out{}: len {} != {}",
+                    golden.index,
+                    got.len(),
+                    want_len
+                ));
+            }
+            let l2 = got.iter().map(|&x| x as f64 * x as f64).sum::<f64>().sqrt();
+            let tol = 1e-3 * golden.l2.abs().max(1e-6);
+            if (l2 - golden.l2).abs() > tol {
+                return Err(anyhow!(
+                    "{name} out{}: l2 {l2:.6e} != golden {:.6e}",
+                    golden.index,
+                    golden.l2
+                ));
+            }
+            for (i, want) in golden.first.iter().enumerate() {
+                let got_v = got[i] as f64;
+                let tol = 1e-3 * want.abs() + 1e-5 * golden.l2.abs().max(1e-6);
+                if (got_v - want).abs() > tol {
+                    return Err(anyhow!(
+                        "{name} out{idx}[{i}]: {got_v:.6e} != golden {want:.6e}",
+                        idx = golden.index
+                    ));
+                }
+            }
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Runtime construction should succeed even with a bogus directory —
+    /// loading is lazy.
+    #[test]
+    fn new_does_not_touch_disk() {
+        let rt = PjrtRuntime::new("/definitely/not/here");
+        assert!(rt.is_ok());
+        let rt = rt.unwrap();
+        assert_eq!(rt.loaded().len(), 0);
+        assert!(!rt.is_loaded("imagenet"));
+    }
+
+    #[test]
+    fn execute_unknown_errors() {
+        let rt = PjrtRuntime::new("/nope").unwrap();
+        assert!(rt.execute("ghost").is_err());
+    }
+}

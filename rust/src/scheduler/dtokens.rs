@@ -1,0 +1,130 @@
+//! Device concurrency control (§4.4): the D parameter, either fixed or
+//! adjusted dynamically from utilization feedback.
+//!
+//! "We take two input parameters: the device utilization threshold (such
+//! as 90%), and the maximum parallelism level. A thread monitors
+//! real-time utilization and changes the D level dynamically to ensure
+//! the utilization is under the threshold."
+
+/// The D controller: exposes the current per-server concurrency limit.
+#[derive(Debug, Clone)]
+pub struct ConcurrencyController {
+    /// Hard upper bound on D (paper: "max GPU concurrency", QoS class).
+    pub max_d: usize,
+    /// Utilization threshold (paper example: 0.9).
+    pub util_threshold: f64,
+    /// Fixed-D mode when false (most experiments sweep fixed D).
+    pub dynamic: bool,
+    cur_d: usize,
+    /// Consecutive samples over/under threshold (hysteresis).
+    over: u32,
+    under: u32,
+}
+
+impl ConcurrencyController {
+    /// Fixed D (the Fig-6a sweeps).
+    pub fn fixed(d: usize) -> Self {
+        assert!(d >= 1);
+        Self {
+            max_d: d,
+            util_threshold: 0.9,
+            dynamic: false,
+            cur_d: d,
+            over: 0,
+            under: 0,
+        }
+    }
+
+    /// Utilization-driven dynamic D in [1, max_d].
+    pub fn dynamic(max_d: usize, util_threshold: f64) -> Self {
+        assert!(max_d >= 1);
+        Self {
+            max_d,
+            util_threshold,
+            dynamic: true,
+            cur_d: 1.max(max_d / 2),
+            over: 0,
+            under: 0,
+        }
+    }
+
+    /// Current D level.
+    pub fn limit(&self) -> usize {
+        self.cur_d
+    }
+
+    /// Feed one utilization sample (monitor tick, 200 ms cadence).
+    /// Raising D requires sustained headroom; lowering reacts faster
+    /// (interference hurts more than queueing, §6.2).
+    pub fn on_sample(&mut self, util: f64) {
+        if !self.dynamic {
+            return;
+        }
+        if util > self.util_threshold {
+            self.over += 1;
+            self.under = 0;
+            if self.over >= 2 && self.cur_d > 1 {
+                self.cur_d -= 1;
+                self.over = 0;
+            }
+        } else if util < self.util_threshold * 0.75 {
+            self.under += 1;
+            self.over = 0;
+            if self.under >= 5 && self.cur_d < self.max_d {
+                self.cur_d += 1;
+                self.under = 0;
+            }
+        } else {
+            self.over = 0;
+            self.under = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_never_moves() {
+        let mut c = ConcurrencyController::fixed(2);
+        for _ in 0..100 {
+            c.on_sample(1.0);
+        }
+        assert_eq!(c.limit(), 2);
+    }
+
+    #[test]
+    fn dynamic_backs_off_under_saturation() {
+        let mut c = ConcurrencyController::dynamic(4, 0.9);
+        let d0 = c.limit();
+        for _ in 0..4 {
+            c.on_sample(0.99);
+        }
+        assert!(c.limit() < d0, "D should drop: {} -> {}", d0, c.limit());
+        // Never below 1.
+        for _ in 0..100 {
+            c.on_sample(1.0);
+        }
+        assert_eq!(c.limit(), 1);
+    }
+
+    #[test]
+    fn dynamic_grows_with_headroom() {
+        let mut c = ConcurrencyController::dynamic(4, 0.9);
+        for _ in 0..100 {
+            c.on_sample(0.2);
+        }
+        assert_eq!(c.limit(), 4);
+    }
+
+    #[test]
+    fn dynamic_holds_in_band() {
+        let mut c = ConcurrencyController::dynamic(4, 0.9);
+        let d0 = c.limit();
+        for _ in 0..100 {
+            c.on_sample(0.8); // between 0.675 and 0.9: hold
+        }
+        assert_eq!(c.limit(), d0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Per-function dispatch queue ("flow") with virtual-time accounting —
+//! the building block of MQFQ-Sticky (§4.1, Table 2).
+
+use std::collections::VecDeque;
+
+use crate::types::{to_secs, FuncId, Nanos};
+use crate::util::stats::Ema;
+
+use super::Invocation;
+
+/// Queue state (§4.1/Algorithm 1): Active queues hold or anticipate
+/// invocations; Throttled queues exceeded the over-run bound T;
+/// Inactive queues expired their keep-alive TTL.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QState {
+    Active,
+    Throttled,
+    Inactive,
+}
+
+/// One function's flow queue.
+#[derive(Debug, Clone)]
+pub struct FlowQueue {
+    pub func: FuncId,
+    pub queue: VecDeque<Invocation>,
+    /// Virtual time: total service accrued by this queue, in seconds of
+    /// GPU service (Table 2 "VT").
+    pub vt: f64,
+    pub state: QState,
+    /// Invocations dispatched but not yet completed.
+    pub in_flight: usize,
+    /// Last dispatch or completion (drives the anticipatory TTL).
+    pub last_exec: Nanos,
+    /// Historical average execution time τ_f (EMA, seconds).
+    avg_exec: Ema,
+    /// Historical mean inter-arrival time (EMA, seconds).
+    iat: Ema,
+    last_arrival: Option<Nanos>,
+    /// Total invocations ever enqueued (metrics).
+    pub total_arrivals: u64,
+}
+
+impl FlowQueue {
+    pub fn new(func: FuncId) -> Self {
+        Self {
+            func,
+            queue: VecDeque::new(),
+            vt: 0.0,
+            state: QState::Inactive,
+            in_flight: 0,
+            last_exec: 0,
+            avg_exec: Ema::new(0.3),
+            iat: Ema::new(0.3),
+            last_arrival: None,
+            total_arrivals: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// τ_f: the service-time estimate used to advance VT on dispatch.
+    /// Defaults to 1 s until the first completion is observed (the
+    /// scheduler is black-box; it has no prior on a new function).
+    pub fn avg_exec_s(&self) -> f64 {
+        let v = self.avg_exec.get();
+        if v > 0.0 {
+            v
+        } else {
+            1.0
+        }
+    }
+
+    /// Mean inter-arrival time estimate (seconds); defaults to 1 s.
+    pub fn mean_iat_s(&self) -> f64 {
+        let v = self.iat.get();
+        if v > 0.0 {
+            v
+        } else {
+            1.0
+        }
+    }
+
+    /// Record an arrival (updates the IAT estimate and enqueues).
+    pub fn push(&mut self, inv: Invocation, now: Nanos) {
+        if let Some(prev) = self.last_arrival {
+            if now > prev {
+                self.iat.push(to_secs(now - prev));
+            }
+        }
+        self.last_arrival = Some(now);
+        self.total_arrivals += 1;
+        self.queue.push_back(inv);
+    }
+
+    /// Pop the head for dispatch; advances VT by `tau` (the caller picks
+    /// wall-time τ_f or 1.0 per the Fig-8a ablation) and tracks in-flight.
+    pub fn pop_dispatch(&mut self, tau: f64, now: Nanos) -> Option<Invocation> {
+        let inv = self.queue.pop_front()?;
+        self.vt += tau;
+        self.in_flight += 1;
+        self.last_exec = now;
+        Some(inv)
+    }
+
+    /// Record a completion with its observed service time.
+    pub fn complete(&mut self, service_s: f64, now: Nanos) {
+        self.in_flight = self.in_flight.saturating_sub(1);
+        self.avg_exec.push(service_s);
+        self.last_exec = now;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{InvocationId, SEC};
+
+    fn inv(id: u64, t: Nanos) -> Invocation {
+        Invocation {
+            id: InvocationId(id),
+            func: FuncId(0),
+            arrived: t,
+        }
+    }
+
+    #[test]
+    fn push_tracks_iat() {
+        let mut q = FlowQueue::new(FuncId(0));
+        assert_eq!(q.mean_iat_s(), 1.0); // default
+        q.push(inv(1, 0), 0);
+        q.push(inv(2, 2 * SEC), 2 * SEC);
+        q.push(inv(3, 4 * SEC), 4 * SEC);
+        assert!((q.mean_iat_s() - 2.0).abs() < 1e-9);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.total_arrivals, 3);
+    }
+
+    #[test]
+    fn dispatch_advances_vt_and_inflight() {
+        let mut q = FlowQueue::new(FuncId(0));
+        q.push(inv(1, 0), 0);
+        q.push(inv(2, 0), 0);
+        let got = q.pop_dispatch(2.5, SEC).unwrap();
+        assert_eq!(got.id, InvocationId(1));
+        assert_eq!(q.vt, 2.5);
+        assert_eq!(q.in_flight, 1);
+        assert_eq!(q.last_exec, SEC);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn complete_updates_avg_exec() {
+        let mut q = FlowQueue::new(FuncId(0));
+        assert_eq!(q.avg_exec_s(), 1.0); // black-box default
+        q.push(inv(1, 0), 0);
+        q.pop_dispatch(1.0, 0);
+        q.complete(3.0, SEC);
+        assert_eq!(q.in_flight, 0);
+        assert!((q.avg_exec_s() - 3.0).abs() < 1e-9);
+        q.complete(1.0, 2 * SEC); // EMA moves toward 1.0
+        assert!(q.avg_exec_s() < 3.0 && q.avg_exec_s() > 1.0);
+    }
+
+    #[test]
+    fn pop_empty_is_none() {
+        let mut q = FlowQueue::new(FuncId(0));
+        assert!(q.pop_dispatch(1.0, 0).is_none());
+        assert_eq!(q.vt, 0.0);
+    }
+}

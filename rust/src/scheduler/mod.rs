@@ -1,0 +1,81 @@
+//! Queueing policies: the paper's MQFQ-Sticky plus every baseline the
+//! evaluation compares against (FCFS, continuous batching, Paella-style
+//! fair SJF, EEVDF) behind one [`Policy`] trait, and the
+//! utilization-driven device concurrency controller (§4.4).
+
+pub mod dtokens;
+pub mod flowq;
+pub mod mqfq;
+pub mod policies;
+
+pub use dtokens::ConcurrencyController;
+pub use flowq::{FlowQueue, QState};
+pub use mqfq::{MqfqConfig, MqfqSticky};
+
+use crate::types::{DurNanos, FuncId, InvocationId, Nanos};
+
+/// One queued request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Invocation {
+    pub id: InvocationId,
+    pub func: FuncId,
+    pub arrived: Nanos,
+}
+
+/// Read-only dispatch context handed to policies.
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyCtx<'a> {
+    /// In-flight invocations per function (indexed by FuncId).
+    pub in_flight: &'a [usize],
+    /// Current device-concurrency level D (total concurrent dispatches).
+    pub d: usize,
+}
+
+/// A queueing policy: owns the pending invocations, decides dispatch
+/// order, and reports queue-state transitions so the memory manager can
+/// prefetch/evict (§4.3 — *all* evaluated policies get the memory
+/// optimizations; only MQFQ-Sticky produces Throttled/Inactive signals).
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+
+    /// A new invocation arrived (open-loop).
+    fn enqueue(&mut self, inv: Invocation, now: Nanos);
+
+    /// Pick the next invocation to dispatch, or None to stay idle.
+    /// Called whenever a D-token is available.
+    fn dispatch(&mut self, now: Nanos, ctx: &PolicyCtx) -> Option<Invocation>;
+
+    /// An invocation of `func` finished after `service` on device.
+    fn on_complete(&mut self, func: FuncId, service: DurNanos, now: Nanos);
+
+    /// Total queued (not yet dispatched) invocations.
+    fn pending(&self) -> usize;
+
+    /// Queue-state transitions since the last call (drained).
+    fn drain_state_changes(&mut self) -> Vec<(FuncId, QState)>;
+
+    /// Current virtual time of a function's queue (metrics/debug; only
+    /// fair-queueing policies report meaningful values).
+    fn queue_vt(&self, _func: FuncId) -> Option<f64> {
+        None
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// Feed `n` invocations of `func` at `t`, ids starting at `id0`.
+    pub fn enqueue_n(p: &mut dyn Policy, func: u32, n: usize, t: Nanos, id0: u64) {
+        for i in 0..n {
+            p.enqueue(
+                Invocation {
+                    id: InvocationId(id0 + i as u64),
+                    func: FuncId(func),
+                    arrived: t,
+                },
+                t,
+            );
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Batch — continuous-batching baseline (§6 "Queueing Policies"):
+//! per-function queues; dispatch drains the *entire* queue containing
+//! the oldest item before moving on ("analogous to continuous batching
+//! used in modern LLM serving"). Greedy locality, no fairness.
+
+use std::collections::VecDeque;
+
+use crate::scheduler::{Invocation, Policy, PolicyCtx, QState};
+use crate::types::{DurNanos, FuncId, Nanos};
+
+pub struct BatchPolicy {
+    queues: Vec<VecDeque<Invocation>>,
+    /// The function whose queue is currently being drained, and how many
+    /// items remain in the batch (snapshot at batch start — continuous
+    /// batching admits *new* requests only into the next batch, keeping
+    /// a hot function from monopolizing the device forever).
+    current: Option<(FuncId, usize)>,
+    changes: Vec<(FuncId, QState)>,
+}
+
+impl BatchPolicy {
+    pub fn new(n_funcs: usize) -> Self {
+        Self {
+            queues: (0..n_funcs).map(|_| VecDeque::new()).collect(),
+            current: None,
+            changes: Vec::new(),
+        }
+    }
+
+    /// Function holding the globally oldest queued invocation.
+    fn oldest(&self) -> Option<FuncId> {
+        self.queues
+            .iter()
+            .enumerate()
+            .filter_map(|(i, q)| q.front().map(|inv| (inv.arrived, inv.id.0, i)))
+            .min()
+            .map(|(_, _, i)| FuncId(i as u32))
+    }
+}
+
+impl Policy for BatchPolicy {
+    fn name(&self) -> &'static str {
+        "batch"
+    }
+
+    fn enqueue(&mut self, inv: Invocation, _now: Nanos) {
+        self.changes.push((inv.func, QState::Active));
+        self.queues[inv.func.0 as usize].push_back(inv);
+    }
+
+    fn dispatch(&mut self, _now: Nanos, _ctx: &PolicyCtx) -> Option<Invocation> {
+        // Keep draining the current batch while it has items.
+        if let Some((f, remaining)) = self.current {
+            if remaining > 0 {
+                if let Some(inv) = self.queues[f.0 as usize].pop_front() {
+                    self.current = Some((f, remaining - 1));
+                    return Some(inv);
+                }
+            }
+            self.current = None;
+        }
+        let f = self.oldest()?;
+        let len = self.queues[f.0 as usize].len();
+        self.current = Some((f, len.saturating_sub(1)));
+        self.queues[f.0 as usize].pop_front()
+    }
+
+    fn on_complete(&mut self, _func: FuncId, _service: DurNanos, _now: Nanos) {}
+
+    fn pending(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    fn drain_state_changes(&mut self) -> Vec<(FuncId, QState)> {
+        std::mem::take(&mut self.changes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::testutil::enqueue_n;
+    use crate::types::SEC;
+
+    #[test]
+    fn drains_oldest_queue_entirely() {
+        let mut p = BatchPolicy::new(2);
+        enqueue_n(&mut p, 0, 1, 0, 1); // oldest
+        enqueue_n(&mut p, 1, 2, SEC, 10);
+        enqueue_n(&mut p, 0, 2, 2 * SEC, 2); // more for fn 0 arrive later
+        let inf = [0usize, 0];
+        let ctx = PolicyCtx { in_flight: &inf, d: 1 };
+        // Whole fn-0 queue first (its head is oldest), despite fn-1's
+        // items arriving before fn-0's tail.
+        let order: Vec<u32> = (0..5)
+            .map(|_| p.dispatch(3 * SEC, &ctx).unwrap().func.0)
+            .collect();
+        assert_eq!(order, vec![0, 0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn new_arrivals_wait_for_the_next_batch() {
+        let mut p = BatchPolicy::new(2);
+        enqueue_n(&mut p, 0, 1, 0, 1);
+        enqueue_n(&mut p, 1, 1, 1, 10);
+        let inf = [0usize, 0];
+        let ctx = PolicyCtx { in_flight: &inf, d: 1 };
+        assert_eq!(p.dispatch(2, &ctx).unwrap().func.0, 0);
+        // A fn-0 arrival after the batch snapshot does NOT jump ahead of
+        // fn-1 (snapshot semantics prevent monopolization).
+        enqueue_n(&mut p, 0, 1, 3, 2);
+        assert_eq!(p.dispatch(4, &ctx).unwrap().func.0, 1);
+        assert_eq!(p.dispatch(5, &ctx).unwrap().func.0, 0);
+    }
+}

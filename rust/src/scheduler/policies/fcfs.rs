@@ -1,0 +1,81 @@
+//! FCFS — the OpenWhisk-style baseline (§2.1): one global queue,
+//! invocations dispatched strictly in arrival order.
+
+use std::collections::VecDeque;
+
+use crate::scheduler::{Invocation, Policy, PolicyCtx, QState};
+use crate::types::{DurNanos, FuncId, Nanos};
+
+pub struct FcfsPolicy {
+    queue: VecDeque<Invocation>,
+    changes: Vec<(FuncId, QState)>,
+    n_funcs: usize,
+}
+
+impl FcfsPolicy {
+    pub fn new(n_funcs: usize) -> Self {
+        Self {
+            queue: VecDeque::new(),
+            changes: Vec::new(),
+            n_funcs,
+        }
+    }
+}
+
+impl Policy for FcfsPolicy {
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn enqueue(&mut self, inv: Invocation, _now: Nanos) {
+        // Arrival makes the function "active" so the shared memory
+        // optimizations (prefetch) apply to every policy (§6).
+        self.changes.push((inv.func, QState::Active));
+        self.queue.push_back(inv);
+    }
+
+    fn dispatch(&mut self, _now: Nanos, _ctx: &PolicyCtx) -> Option<Invocation> {
+        self.queue.pop_front()
+    }
+
+    fn on_complete(&mut self, _func: FuncId, _service: DurNanos, _now: Nanos) {}
+
+    fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn drain_state_changes(&mut self) -> Vec<(FuncId, QState)> {
+        let _ = self.n_funcs;
+        std::mem::take(&mut self.changes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::testutil::enqueue_n;
+    use crate::types::InvocationId;
+
+    #[test]
+    fn strict_arrival_order() {
+        let mut p = FcfsPolicy::new(2);
+        enqueue_n(&mut p, 1, 1, 0, 1);
+        enqueue_n(&mut p, 0, 1, 1, 2);
+        enqueue_n(&mut p, 1, 1, 2, 3);
+        let inf = [0usize, 0];
+        let ctx = PolicyCtx { in_flight: &inf, d: 2 };
+        assert_eq!(p.dispatch(3, &ctx).unwrap().id, InvocationId(1));
+        assert_eq!(p.dispatch(3, &ctx).unwrap().id, InvocationId(2));
+        assert_eq!(p.dispatch(3, &ctx).unwrap().id, InvocationId(3));
+        assert!(p.dispatch(3, &ctx).is_none());
+    }
+
+    #[test]
+    fn reports_active_on_arrival() {
+        let mut p = FcfsPolicy::new(2);
+        enqueue_n(&mut p, 1, 2, 0, 1);
+        let ch = p.drain_state_changes();
+        assert_eq!(ch.len(), 2);
+        assert!(ch.iter().all(|(f, s)| *f == FuncId(1) && *s == QState::Active));
+    }
+}

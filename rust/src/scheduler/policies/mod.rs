@@ -1,0 +1,111 @@
+//! Baseline queueing policies the paper evaluates against (§6):
+//! FCFS (OpenWhisk-style), continuous batching, Paella-style fair SJF,
+//! and the EEVDF CPU-scheduling baseline from §6.4.
+
+pub mod batch;
+pub mod eevdf;
+pub mod fcfs;
+pub mod sjf;
+
+pub use batch::BatchPolicy;
+pub use eevdf::EevdfPolicy;
+pub use fcfs::FcfsPolicy;
+pub use sjf::PaellaSjf;
+
+use super::{MqfqConfig, MqfqSticky, Policy};
+
+/// Policy selector used by the CLI / experiment harness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    Fcfs,
+    Batch,
+    PaellaSjf,
+    Eevdf,
+    Mqfq,
+    /// MQFQ with T=0: classic start-time fair queueing (§6.2 "at D=1,
+    /// MQFQ approximates classic SFQ").
+    Sfq,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "fcfs" => PolicyKind::Fcfs,
+            "batch" => PolicyKind::Batch,
+            "sjf" | "paella" | "paella-sjf" => PolicyKind::PaellaSjf,
+            "eevdf" => PolicyKind::Eevdf,
+            "mqfq" | "mqfq-sticky" => PolicyKind::Mqfq,
+            "sfq" => PolicyKind::Sfq,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Fcfs => "fcfs",
+            PolicyKind::Batch => "batch",
+            PolicyKind::PaellaSjf => "paella-sjf",
+            PolicyKind::Eevdf => "eevdf",
+            PolicyKind::Mqfq => "mqfq-sticky",
+            PolicyKind::Sfq => "sfq",
+        }
+    }
+
+    /// Instantiate the policy for `n_funcs` registered functions.
+    pub fn build(&self, n_funcs: usize) -> Box<dyn Policy> {
+        self.build_mqfq(n_funcs, MqfqConfig::default())
+    }
+
+    /// Instantiate with explicit MQFQ tunables (ignored by baselines).
+    pub fn build_mqfq(&self, n_funcs: usize, cfg: MqfqConfig) -> Box<dyn Policy> {
+        match self {
+            PolicyKind::Fcfs => Box::new(FcfsPolicy::new(n_funcs)),
+            PolicyKind::Batch => Box::new(BatchPolicy::new(n_funcs)),
+            PolicyKind::PaellaSjf => Box::new(PaellaSjf::new(n_funcs)),
+            PolicyKind::Eevdf => Box::new(EevdfPolicy::new(n_funcs)),
+            PolicyKind::Mqfq => Box::new(MqfqSticky::new(n_funcs, cfg)),
+            PolicyKind::Sfq => Box::new(MqfqSticky::new(
+                n_funcs,
+                MqfqConfig {
+                    t: 0.0,
+                    sticky: false,
+                    ..cfg
+                },
+            )),
+        }
+    }
+}
+
+/// All policies compared in the Fig-6 experiments.
+pub const FIG6_POLICIES: [PolicyKind; 4] = [
+    PolicyKind::Fcfs,
+    PolicyKind::Batch,
+    PolicyKind::PaellaSjf,
+    PolicyKind::Mqfq,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in [
+            PolicyKind::Fcfs,
+            PolicyKind::Batch,
+            PolicyKind::PaellaSjf,
+            PolicyKind::Eevdf,
+            PolicyKind::Mqfq,
+            PolicyKind::Sfq,
+        ] {
+            assert_eq!(PolicyKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(PolicyKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn build_produces_named_policies() {
+        assert_eq!(PolicyKind::Fcfs.build(2).name(), "fcfs");
+        assert_eq!(PolicyKind::Mqfq.build(2).name(), "mqfq-sticky");
+    }
+}

@@ -1,0 +1,412 @@
+//! Real-time serving: a wall-clock driver around [`ControlPlane`] plus a
+//! TCP line-protocol front end.
+//!
+//! Python never runs here — dispatched functions execute their AOT HLO
+//! artifact on a dedicated PJRT executor thread (the CPU PJRT client is
+//! the testbed's stand-in for the GPU; see DESIGN.md §1). Modeled
+//! control-plane delays (cold boots, prefetch blocking) are slept at a
+//! configurable time scale so demos finish quickly.
+//!
+//! Protocol (one line per request):
+//! ```text
+//! > invoke <registered-fn-name>
+//! < ok <latency_ms> <exec_ms> <start-kind> <gpu>
+//! > stats
+//! < ok invocations=<n> mean_latency_ms=<x> cold_ratio=<r>
+//! > quit
+//! ```
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use crate::clock::{Clock, RealClock};
+use crate::plane::{ControlPlane, Dispatch, PlaneConfig};
+use crate::runtime::PjrtRuntime;
+use crate::types::{to_secs, FuncId, InvocationId, Nanos, StartKind};
+use crate::workload::Workload;
+
+/// Completion notification delivered to the submitter.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub inv: InvocationId,
+    pub func: FuncId,
+    pub latency: Duration,
+    pub exec: Duration,
+    pub start_kind: StartKind,
+    pub gpu: u32,
+}
+
+/// Job sent to the PJRT executor thread.
+struct ExecJob {
+    artifact: String,
+    reply: Sender<Duration>,
+}
+
+struct Inner {
+    plane: Mutex<ControlPlane>,
+    clock: RealClock,
+    /// Modeled-delay scale: 1 virtual second sleeps `scale` real seconds.
+    scale: f64,
+    exec_tx: Option<Sender<ExecJob>>,
+    waiters: Mutex<HashMap<InvocationId, Sender<Completion>>>,
+    running: AtomicBool,
+}
+
+/// The real-time driver. Construct with [`RtServer::new`], submit with
+/// [`RtServer::submit`], optionally serve TCP with [`RtServer::serve`].
+pub struct RtServer {
+    inner: Arc<Inner>,
+    monitor: Option<thread::JoinHandle<()>>,
+}
+
+impl RtServer {
+    /// `artifacts_dir`: load + compile HLO artifacts and execute them on
+    /// dispatch (real execution). `None`: sleep the modeled service time
+    /// instead (pure control-plane demo).
+    pub fn new(
+        workload: Workload,
+        cfg: PlaneConfig,
+        artifacts_dir: Option<&std::path::Path>,
+        scale: f64,
+    ) -> anyhow::Result<Self> {
+        assert!(scale > 0.0);
+        let exec_tx = match artifacts_dir {
+            Some(dir) => Some(Self::spawn_executor(dir, &workload)?),
+            None => None,
+        };
+        let monitor_period = cfg.monitor_period;
+        let inner = Arc::new(Inner {
+            plane: Mutex::new(ControlPlane::new(workload, cfg)),
+            clock: RealClock::new(),
+            scale,
+            exec_tx,
+            waiters: Mutex::new(HashMap::new()),
+            running: AtomicBool::new(true),
+        });
+        // Monitor thread: scaled 200 ms ticks.
+        let mon_inner = Arc::clone(&inner);
+        let monitor = thread::spawn(move || {
+            let period = Duration::from_nanos((monitor_period as f64) as u64);
+            while mon_inner.running.load(Ordering::SeqCst) {
+                thread::sleep(period);
+                let now = mon_inner.clock.now();
+                let ds = mon_inner.plane.lock().unwrap().on_monitor_tick(now);
+                handle_dispatches(&mon_inner, ds);
+            }
+        });
+        Ok(Self {
+            inner,
+            monitor: Some(monitor),
+        })
+    }
+
+    /// PJRT executor thread: owns the (non-Send) runtime; executes one
+    /// artifact at a time. The serialization is harmless — the CPU PJRT
+    /// client is itself internally parallel and stands in for one GPU.
+    fn spawn_executor(
+        dir: &std::path::Path,
+        workload: &Workload,
+    ) -> anyhow::Result<Sender<ExecJob>> {
+        let (tx, rx): (Sender<ExecJob>, Receiver<ExecJob>) = channel();
+        let dir = dir.to_path_buf();
+        let names: Vec<String> = {
+            let mut v: Vec<String> = workload
+                .funcs
+                .iter()
+                .map(|f| f.class.name.to_string())
+                .collect();
+            v.sort();
+            v.dedup();
+            v
+        };
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        thread::spawn(move || {
+            let mut rt = match PjrtRuntime::new(&dir) {
+                Ok(rt) => rt,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            for name in &names {
+                if let Err(e) = rt.load_function(name) {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            }
+            let _ = ready_tx.send(Ok(()));
+            while let Ok(job) = rx.recv() {
+                let t0 = std::time::Instant::now();
+                let _ = rt.execute(&job.artifact);
+                let _ = job.reply.send(t0.elapsed());
+            }
+        });
+        ready_rx.recv().expect("executor thread died")?;
+        Ok(tx)
+    }
+
+    /// Submit one invocation; returns a receiver for its completion.
+    pub fn submit(&self, func: FuncId) -> Receiver<Completion> {
+        let (tx, rx) = channel();
+        let now = self.inner.clock.now();
+        let ds = {
+            let mut plane = self.inner.plane.lock().unwrap();
+            let (id, ds) = plane.on_arrival(func, now);
+            self.inner.waiters.lock().unwrap().insert(id, tx);
+            ds
+        };
+        handle_dispatches(&self.inner, ds);
+        rx
+    }
+
+    /// Resolve a registered function by name.
+    pub fn func_by_name(&self, name: &str) -> Option<FuncId> {
+        let plane = self.inner.plane.lock().unwrap();
+        plane
+            .workload()
+            .funcs
+            .iter()
+            .find(|f| f.name == name || f.class.name == name)
+            .map(|f| f.id)
+    }
+
+    /// Snapshot of recorder stats: (completed, mean latency s, cold ratio).
+    pub fn stats(&self) -> (usize, f64, f64) {
+        let plane = self.inner.plane.lock().unwrap();
+        (
+            plane.recorder.len(),
+            plane.recorder.weighted_avg_latency_s(),
+            plane.recorder.cold_ratio(),
+        )
+    }
+
+    /// Serve the line protocol on `addr` until `quit` or shutdown.
+    /// Returns the bound address (use port 0 to pick a free one).
+    pub fn serve(&self, addr: &str) -> anyhow::Result<std::net::SocketAddr> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let inner = Arc::clone(&self.inner);
+        let me = RtServer {
+            inner: Arc::clone(&self.inner),
+            monitor: None,
+        };
+        thread::spawn(move || {
+            for stream in listener.incoming() {
+                if !inner.running.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let server = RtServer {
+                    inner: Arc::clone(&me.inner),
+                    monitor: None,
+                };
+                thread::spawn(move || server.handle_conn(stream));
+            }
+        });
+        Ok(local)
+    }
+
+    fn handle_conn(&self, stream: TcpStream) {
+        let peer = stream.peer_addr().ok();
+        let mut writer = match stream.try_clone() {
+            Ok(w) => w,
+            Err(_) => return,
+        };
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let Ok(line) = line else { break };
+            let mut parts = line.trim().split_whitespace();
+            let reply = match parts.next() {
+                Some("invoke") => match parts.next().and_then(|n| self.func_by_name(n)) {
+                    Some(func) => match self.submit(func).recv() {
+                        Ok(c) => format!(
+                            "ok {:.1} {:.1} {} gpu{}",
+                            c.latency.as_secs_f64() * 1e3,
+                            c.exec.as_secs_f64() * 1e3,
+                            c.start_kind,
+                            c.gpu
+                        ),
+                        Err(_) => "err completion channel closed".to_string(),
+                    },
+                    None => "err unknown function".to_string(),
+                },
+                Some("stats") => {
+                    let (n, lat, cold) = self.stats();
+                    format!(
+                        "ok invocations={n} mean_latency_ms={:.1} cold_ratio={:.3}",
+                        lat * 1e3,
+                        cold
+                    )
+                }
+                Some("quit") | None => break,
+                Some(other) => format!("err unknown command {other}"),
+            };
+            if writer.write_all((reply + "\n").as_bytes()).is_err() {
+                break;
+            }
+        }
+        let _ = peer;
+    }
+
+    pub fn shutdown(&mut self) {
+        self.inner.running.store(false, Ordering::SeqCst);
+        if let Some(h) = self.monitor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RtServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Run each dispatch on a worker thread: sleep the scaled pre-exec
+/// delays, execute (PJRT or modeled sleep), then complete.
+fn handle_dispatches(inner: &Arc<Inner>, ds: Vec<Dispatch>) {
+    for d in ds {
+        let inner = Arc::clone(inner);
+        thread::spawn(move || run_dispatch(&inner, d));
+    }
+}
+
+fn run_dispatch(inner: &Arc<Inner>, d: Dispatch) {
+    let scale = inner.scale;
+    let sleep_scaled = |ns: Nanos| {
+        if ns > 0 {
+            thread::sleep(Duration::from_secs_f64(to_secs(ns) * scale));
+        }
+    };
+    // Cold boot + shim blocking (modeled, scaled).
+    sleep_scaled(d.exec_start.saturating_sub(d.at));
+    let exec_t0 = inner.clock.now();
+
+    // Service: real PJRT execution, or the modeled time scaled.
+    let class_name = {
+        let plane = inner.plane.lock().unwrap();
+        plane.workload().func(d.func).class.name.to_string()
+    };
+    let measured = match &inner.exec_tx {
+        Some(tx) => {
+            let (rtx, rrx) = channel();
+            if tx
+                .send(ExecJob {
+                    artifact: class_name,
+                    reply: rtx,
+                })
+                .is_ok()
+            {
+                rrx.recv().unwrap_or_default()
+            } else {
+                Duration::ZERO
+            }
+        }
+        None => {
+            sleep_scaled(d.exec);
+            Duration::ZERO
+        }
+    };
+    let _ = measured;
+
+    let now = inner.clock.now();
+    let (ds, completion) = {
+        let mut plane = inner.plane.lock().unwrap();
+        let ds = plane.on_complete(d.inv, now);
+        let rec = plane.recorder.records.last().copied();
+        (ds, rec)
+    };
+    if let Some(rec) = completion {
+        if rec.inv == d.inv {
+            if let Some(tx) = inner.waiters.lock().unwrap().remove(&d.inv) {
+                let _ = tx.send(Completion {
+                    inv: d.inv,
+                    func: d.func,
+                    latency: Duration::from_nanos(rec.completed - rec.arrived),
+                    exec: Duration::from_nanos(now.saturating_sub(exec_t0)),
+                    start_kind: d.start_kind,
+                    gpu: d.gpu.0,
+                });
+            }
+        }
+    }
+    handle_dispatches(inner, ds);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::catalog::by_name;
+
+    fn workload() -> Workload {
+        let mut w = Workload::default();
+        w.register(by_name("isoneural").unwrap(), 0, 1.0);
+        w.register(by_name("fft").unwrap(), 0, 1.0);
+        w
+    }
+
+    fn fast_cfg() -> PlaneConfig {
+        PlaneConfig {
+            monitor_period: 20 * crate::types::MS,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn submit_completes_in_model_mode() {
+        let srv = RtServer::new(workload(), fast_cfg(), None, 0.001).unwrap();
+        let c = srv
+            .submit(FuncId(0))
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap();
+        assert_eq!(c.func, FuncId(0));
+        assert_eq!(c.start_kind, StartKind::Cold);
+        assert!(c.latency > Duration::ZERO);
+        let (n, lat, cold) = srv.stats();
+        assert_eq!(n, 1);
+        assert!(lat > 0.0);
+        assert!((cold - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrent_submissions_all_complete() {
+        let srv = RtServer::new(workload(), fast_cfg(), None, 0.0005).unwrap();
+        let rxs: Vec<_> = (0..6)
+            .map(|i| srv.submit(FuncId((i % 2) as u32)))
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        }
+        assert_eq!(srv.stats().0, 6);
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let srv = RtServer::new(workload(), fast_cfg(), None, 0.0005).unwrap();
+        let addr = srv.serve("127.0.0.1:0").unwrap();
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(b"invoke isoneural-0\nstats\nquit\n").unwrap();
+        let mut lines = BufReader::new(conn.try_clone().unwrap()).lines();
+        let first = lines.next().unwrap().unwrap();
+        assert!(first.starts_with("ok "), "{first}");
+        let second = lines.next().unwrap().unwrap();
+        assert!(second.contains("invocations=1"), "{second}");
+    }
+
+    #[test]
+    fn unknown_function_rejected() {
+        let srv = RtServer::new(workload(), fast_cfg(), None, 0.001).unwrap();
+        let addr = srv.serve("127.0.0.1:0").unwrap();
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(b"invoke ghost\nquit\n").unwrap();
+        let mut lines = BufReader::new(conn).lines();
+        let first = lines.next().unwrap().unwrap();
+        assert!(first.starts_with("err"), "{first}");
+    }
+}

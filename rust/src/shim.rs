@@ -1,0 +1,165 @@
+//! CUDA interposition shim model (§5.1).
+//!
+//! The paper injects ~500 LoC of C via LD_PRELOAD into every container:
+//! `cuMemAlloc` is intercepted and converted to a UVM
+//! (`cuMemAllocManaged`) allocation, allocation metadata is recorded,
+//! and the control plane directs `cuMemPrefetchAsync` to move regions
+//! host↔device. This module models exactly that contract:
+//!
+//! * an **allocation ledger** per container (sizes + residency),
+//! * **cost helpers** for bulk prefetch (PCIe bandwidth), on-demand UVM
+//!   page-fault migration (an order of magnitude slower — the Fig-4
+//!   "stock UVM" penalty), and madvise directive overhead,
+//! * the per-function **interception overhead** of running under UVM at
+//!   all (Fig 3; applied in the device execution model).
+
+use crate::gpu::GpuProfile;
+use crate::types::{secs, DurNanos};
+
+/// One intercepted allocation region (coarse: MB granularity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    pub size_mb: u64,
+    /// MB of this region currently resident on device.
+    pub resident_mb: u64,
+}
+
+/// Allocation ledger of one container, as reported by its shim
+/// ("a report of memory allocations still held by the function", §5).
+#[derive(Debug, Clone, Default)]
+pub struct AllocLedger {
+    regions: Vec<Region>,
+}
+
+impl AllocLedger {
+    /// Record an intercepted cuMemAlloc → cuMemAllocManaged of `mb`.
+    /// Fresh UVM allocations are not resident until first touch/prefetch.
+    pub fn alloc(&mut self, mb: u64) {
+        self.regions.push(Region {
+            size_mb: mb,
+            resident_mb: 0,
+        });
+    }
+
+    pub fn footprint_mb(&self) -> u64 {
+        self.regions.iter().map(|r| r.size_mb).sum()
+    }
+
+    pub fn resident_mb(&self) -> u64 {
+        self.regions.iter().map(|r| r.resident_mb).sum()
+    }
+
+    pub fn nonresident_mb(&self) -> u64 {
+        self.footprint_mb() - self.resident_mb()
+    }
+
+    /// Make `mb` more MB resident (prefetch/fault-in); returns how much
+    /// actually moved (bounded by what was non-resident).
+    pub fn page_in(&mut self, mut mb: u64) -> u64 {
+        let mut moved = 0;
+        for r in &mut self.regions {
+            if mb == 0 {
+                break;
+            }
+            let take = (r.size_mb - r.resident_mb).min(mb);
+            r.resident_mb += take;
+            mb -= take;
+            moved += take;
+        }
+        moved
+    }
+
+    /// Evict `mb` MB to host (swap-out/UVM reclaim); returns how much
+    /// actually moved.
+    pub fn page_out(&mut self, mut mb: u64) -> u64 {
+        let mut moved = 0;
+        for r in &mut self.regions {
+            if mb == 0 {
+                break;
+            }
+            let take = r.resident_mb.min(mb);
+            r.resident_mb -= take;
+            mb -= take;
+            moved += take;
+        }
+        moved
+    }
+
+    pub fn evict_all(&mut self) -> u64 {
+        self.page_out(u64::MAX)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cost helpers (used by the memory manager).
+// ---------------------------------------------------------------------------
+
+/// Time to bulk-move `mb` MB with cuMemPrefetchAsync at PCIe bandwidth.
+pub fn prefetch_time(mb: u64, profile: &GpuProfile) -> DurNanos {
+    secs(mb as f64 / 1024.0 / profile.pcie_gbps)
+}
+
+/// Time lost to on-demand UVM page faults migrating `mb` MB during
+/// kernel execution. Each fault stalls the SM and serializes on the
+/// driver's fault handler, so effective bandwidth is ~10× below bulk
+/// prefetch (Fig 4's +40% for "stock UVM" calibrates this).
+pub fn fault_time(mb: u64, profile: &GpuProfile) -> DurNanos {
+    secs(mb as f64 / 1024.0 / profile.uvm_fault_gbps)
+}
+
+/// Overhead of issuing cuMemAdvise directives for a footprint. The paper
+/// (Fig 4): "Madvise doesn't move any memory and wastes time sending
+/// memory directives, with no benefit" — a per-MB driver call cost.
+pub fn madvise_overhead(mb: u64) -> DurNanos {
+    // ~60 µs per 2 MB managed range.
+    secs(mb as f64 / 2.0 * 60e-6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::V100;
+
+    #[test]
+    fn ledger_alloc_and_residency() {
+        let mut l = AllocLedger::default();
+        l.alloc(1000);
+        l.alloc(500);
+        assert_eq!(l.footprint_mb(), 1500);
+        assert_eq!(l.resident_mb(), 0);
+        assert_eq!(l.page_in(600), 600);
+        assert_eq!(l.resident_mb(), 600);
+        assert_eq!(l.nonresident_mb(), 900);
+        assert_eq!(l.page_in(10_000), 900); // bounded
+        assert_eq!(l.resident_mb(), 1500);
+    }
+
+    #[test]
+    fn ledger_page_out_bounded() {
+        let mut l = AllocLedger::default();
+        l.alloc(800);
+        l.page_in(800);
+        assert_eq!(l.page_out(300), 300);
+        assert_eq!(l.resident_mb(), 500);
+        assert_eq!(l.evict_all(), 500);
+        assert_eq!(l.resident_mb(), 0);
+        assert_eq!(l.page_out(10), 0);
+    }
+
+    #[test]
+    fn fault_is_order_of_magnitude_slower_than_prefetch() {
+        let p = prefetch_time(1500, &V100);
+        let f = fault_time(1500, &V100);
+        assert!(f > 4 * p, "fault {f} vs prefetch {p}");
+        // 1.5 GB over 12 GB/s ≈ 122 ms.
+        assert!((p as f64 / 1e6 - 122.0).abs() < 5.0);
+    }
+
+    #[test]
+    fn madvise_cost_scales_with_footprint() {
+        assert!(madvise_overhead(3000) > madvise_overhead(300));
+        // 1.5 GB ≈ 750 ranges ≈ 45 ms of directives.
+        let ms = madvise_overhead(1500) as f64 / 1e6;
+        assert!((ms - 45.0).abs() < 1.0, "{ms}");
+    }
+}

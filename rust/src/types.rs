@@ -1,0 +1,118 @@
+//! Core identifier and time types shared across the control plane.
+
+use std::fmt;
+
+/// Virtual or wall-clock time in nanoseconds since experiment start.
+pub type Nanos = u64;
+
+/// Duration in nanoseconds.
+pub type DurNanos = u64;
+
+/// One second in [`Nanos`].
+pub const SEC: Nanos = 1_000_000_000;
+/// One millisecond in [`Nanos`].
+pub const MS: Nanos = 1_000_000;
+/// One microsecond in [`Nanos`].
+pub const US: Nanos = 1_000;
+
+/// Convert seconds (f64) to nanoseconds, saturating at zero.
+#[inline]
+pub fn secs(s: f64) -> Nanos {
+    if s <= 0.0 {
+        0
+    } else {
+        (s * 1e9).round() as Nanos
+    }
+}
+
+/// Convert nanoseconds to seconds (f64).
+#[inline]
+pub fn to_secs(ns: Nanos) -> f64 {
+    ns as f64 / 1e9
+}
+
+/// Index into the registered function catalog for one workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FuncId(pub u32);
+
+impl fmt::Display for FuncId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "f{}", self.0)
+    }
+}
+
+/// Unique id of a single invocation (request).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct InvocationId(pub u64);
+
+impl fmt::Display for InvocationId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "inv{}", self.0)
+    }
+}
+
+/// Physical (or MIG-virtual) GPU identifier on one server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GpuId(pub u32);
+
+impl fmt::Display for GpuId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "gpu{}", self.0)
+    }
+}
+
+/// Identifier of a container instance in the warm pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ContainerId(pub u64);
+
+impl fmt::Display for ContainerId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ctr{}", self.0)
+    }
+}
+
+/// How an invocation's sandbox was provisioned — the paper's three start
+/// classes (§4.3) plus the CPU paths used for Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StartKind {
+    /// Container existed and its memory was resident on device.
+    GpuWarm,
+    /// Container existed but its device regions were swapped to host
+    /// ("GPU-cold but host-warm", §4.3).
+    HostWarm,
+    /// Full sandbox creation: docker + nvidia hook + user code init.
+    Cold,
+}
+
+impl fmt::Display for StartKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            StartKind::GpuWarm => "gpu-warm",
+            StartKind::HostWarm => "host-warm",
+            StartKind::Cold => "cold",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn secs_roundtrip() {
+        assert_eq!(secs(1.0), SEC);
+        assert_eq!(secs(0.0), 0);
+        assert_eq!(secs(-3.0), 0);
+        assert!((to_secs(secs(2.253)) - 2.253).abs() < 1e-9);
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(FuncId(3).to_string(), "f3");
+        assert_eq!(InvocationId(9).to_string(), "inv9");
+        assert_eq!(GpuId(0).to_string(), "gpu0");
+        assert_eq!(ContainerId(1).to_string(), "ctr1");
+        assert_eq!(StartKind::HostWarm.to_string(), "host-warm");
+    }
+}

@@ -1,0 +1,99 @@
+//! Tiny benchmark timer used by the `harness = false` bench binaries
+//! (criterion is not in the offline vendor set).
+
+use std::time::Instant;
+
+/// Result of one timed measurement series.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10} iters  mean {:>12}  min {:>12}  max {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.min_ns),
+            fmt_ns(self.max_ns)
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Time `f` adaptively: warm up, then run batches until ~`budget_ms` of
+/// wall time or `max_iters` is reached. Returns per-iteration stats.
+pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> BenchResult {
+    // Warmup.
+    for _ in 0..3 {
+        f();
+    }
+    let budget = std::time::Duration::from_millis(budget_ms);
+    let start = Instant::now();
+    let mut iters: u64 = 0;
+    let mut min = f64::MAX;
+    let mut max: f64 = 0.0;
+    let mut total: f64 = 0.0;
+    while start.elapsed() < budget && iters < 1_000_000 {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_nanos() as f64;
+        min = min.min(dt);
+        max = max.max(dt);
+        total += dt;
+        iters += 1;
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: total / iters.max(1) as f64,
+        min_ns: if iters == 0 { 0.0 } else { min },
+        max_ns: max,
+    }
+}
+
+/// Prevent the optimizer from eliding a value (std::hint::black_box shim).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let r = bench("noop", 10, || {
+            black_box(1 + 1);
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50us");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200s");
+    }
+}

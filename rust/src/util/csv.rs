@@ -1,0 +1,88 @@
+//! Minimal CSV writer (results/ artifacts for every experiment).
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// A CSV file under construction; commas/quotes in cells are escaped.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncating) `path`, writing `header` as the first row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut w = Self {
+            out: BufWriter::new(File::create(path)?),
+            cols: header.len(),
+        };
+        w.row(header)?;
+        Ok(w)
+    }
+
+    /// Write a row of string cells.
+    pub fn row(&mut self, cells: &[&str]) -> std::io::Result<()> {
+        assert_eq!(cells.len(), self.cols, "column count mismatch");
+        let mut line = String::new();
+        for (i, cell) in cells.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            if cell.contains([',', '"', '\n']) {
+                line.push('"');
+                line.push_str(&cell.replace('"', "\"\""));
+                line.push('"');
+            } else {
+                line.push_str(cell);
+            }
+        }
+        line.push('\n');
+        self.out.write_all(line.as_bytes())
+    }
+
+    /// Write a row of mixed display values.
+    pub fn rowv(&mut self, cells: &[String]) -> std::io::Result<()> {
+        let refs: Vec<&str> = cells.iter().map(|s| s.as_str()).collect();
+        self.row(&refs)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let dir = std::env::temp_dir().join("mqfq_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["1", "plain"]).unwrap();
+            w.row(&["2", "has,comma"]).unwrap();
+            w.row(&["3", "has\"quote"]).unwrap();
+            w.flush().unwrap();
+        }
+        let got = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            got,
+            "a,b\n1,plain\n2,\"has,comma\"\n3,\"has\"\"quote\"\n"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn rejects_bad_row() {
+        let dir = std::env::temp_dir().join("mqfq_csv_test2");
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        let _ = w.row(&["only-one"]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Small self-contained utilities (no external deps — offline build).
+
+pub mod bench;
+pub mod csv;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

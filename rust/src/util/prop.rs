@@ -1,0 +1,141 @@
+//! Minimal property-testing framework (proptest is not in the offline
+//! vendor set). Provides seeded case generation with failure reporting
+//! and a shrink-lite loop: on failure, the failing seed is re-run with
+//! progressively "smaller" size hints to find a more minimal case.
+//!
+//! Used by `rust/tests/prop_scheduler.rs` for the coordinator invariants
+//! (fairness bound, token conservation, memory-ledger safety, ...).
+
+use crate::util::rng::Rng;
+
+/// Context handed to each property case: a seeded RNG plus a size hint
+/// the generator should respect (smaller size => simpler case).
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self {
+            rng: Rng::new(seed),
+            size,
+        }
+    }
+
+    /// Integer in [lo, hi], biased toward the low end as size shrinks.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = (hi - lo + 1).min(self.size.max(1));
+        lo + self.rng.below(span)
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn bool(&mut self, p_true: f64) -> bool {
+        self.rng.f64() < p_true
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Outcome of a property check over many cases.
+#[derive(Debug)]
+pub struct PropResult {
+    pub cases: usize,
+    pub failure: Option<String>,
+}
+
+/// Run `check` over `cases` generated cases. `check` returns
+/// `Err(description)` on a violated property. On failure we retry the
+/// same seed with smaller sizes to report the smallest reproduction.
+pub fn run_prop<F>(name: &str, cases: usize, mut check: F) -> PropResult
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    const BASE_SEED: u64 = 0x5EED_0000;
+    for case in 0..cases {
+        let seed = BASE_SEED + case as u64;
+        let mut g = Gen::new(seed, 64);
+        if let Err(msg) = check(&mut g) {
+            // Shrink-lite: re-run the same seed at smaller sizes.
+            let mut best = (64usize, msg);
+            for size in [32usize, 16, 8, 4, 2].iter() {
+                let mut g = Gen::new(seed, *size);
+                if let Err(msg) = check(&mut g) {
+                    best = (*size, msg);
+                }
+            }
+            return PropResult {
+                cases: case + 1,
+                failure: Some(format!(
+                    "property '{name}' failed (seed={seed:#x}, size={}): {}",
+                    best.0, best.1
+                )),
+            };
+        }
+    }
+    PropResult {
+        cases,
+        failure: None,
+    }
+}
+
+/// Assert wrapper: panics with the failure report.
+pub fn assert_prop<F>(name: &str, cases: usize, check: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let r = run_prop(name, cases, check);
+    if let Some(f) = r.failure {
+        panic!("{f}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let r = run_prop("add-commutes", 100, |g| {
+            let a = g.int(0, 1000) as u64;
+            let b = g.int(0, 1000) as u64;
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+        assert!(r.failure.is_none());
+        assert_eq!(r.cases, 100);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = run_prop("always-small", 100, |g| {
+            let x = g.int(0, 100);
+            if x < 5 {
+                Ok(())
+            } else {
+                Err(format!("x={x}"))
+            }
+        });
+        let f = r.failure.expect("should fail");
+        assert!(f.contains("seed="), "{f}");
+    }
+
+    #[test]
+    fn gen_int_respects_bounds() {
+        let mut g = Gen::new(1, 64);
+        for _ in 0..1000 {
+            let x = g.int(3, 9);
+            assert!((3..=9).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Deterministic PRNGs: SplitMix64 (twin of python/compile/gen.py) and
+//! xoshiro256** for workload generation, plus the distributions the
+//! trace generators need (uniform, exponential, zipf, log-normal, pareto).
+
+/// SplitMix64 — keep bit-for-bit in sync with `python/compile/gen.py`.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// f32 in [0, 1) — exactly `((u >> 40) as f32) / 2^24` like the python twin.
+    #[inline]
+    pub fn next_unit_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u32 << 24) as f32
+    }
+}
+
+/// FNV-1a 64 of a name — twin of `gen.fnv1a` (per-function input seeds).
+pub fn fnv1a(name: &str) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// xoshiro256** — fast, high-quality generator for workload synthesis.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // Seed the state from SplitMix64 per the xoshiro reference.
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Exponential with the given mean (inter-arrival times).
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        let u = 1.0 - self.f64(); // (0, 1]
+        -mean * u.ln()
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = 1.0 - self.f64();
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Log-normal with the given log-scale parameters.
+    pub fn log_normal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Pareto (heavy tail) with scale `xm` and shape `alpha`.
+    pub fn pareto(&mut self, xm: f64, alpha: f64) -> f64 {
+        let u = 1.0 - self.f64();
+        xm / u.powf(1.0 / alpha)
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Zipf-distributed popularity ranks: weight(rank k) ∝ 1 / k^s.
+/// Returns normalized weights for `n` ranks (rank 1 most popular).
+pub fn zipf_weights(n: usize, s: f64) -> Vec<f64> {
+    let mut w: Vec<f64> = (1..=n).map(|k| 1.0 / (k as f64).powf(s)).collect();
+    let sum: f64 = w.iter().sum();
+    for x in &mut w {
+        *x /= sum;
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Known-answer vectors shared with python/tests/test_gen.py.
+    #[test]
+    fn splitmix64_twin_of_python() {
+        let mut r = SplitMix64::new(1);
+        assert_eq!(r.next_u64(), 0x910A_2DEC_8902_5CC1);
+        assert_eq!(r.next_u64(), 0xBEEB_8DA1_658E_EC67);
+        assert_eq!(r.next_u64(), 0xF893_A2EE_FB32_555E);
+        assert_eq!(r.next_u64(), 0x71C1_8690_EE42_C90B);
+    }
+
+    #[test]
+    fn unit_f32_twin_of_python() {
+        let mut r = SplitMix64::new(42);
+        let got: Vec<f32> = (0..4).map(|_| r.next_unit_f32()).collect();
+        let want = [0.741_564_87, 0.159_910_38, 0.278_601_1, 0.344_190_66];
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!((g - w).abs() < 1e-7, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn fnv1a_twin_of_python() {
+        assert_eq!(fnv1a("imagenet"), 0x2EA4_3BCC_8F83_E79D);
+    }
+
+    #[test]
+    fn rng_uniform_moments() {
+        let mut r = Rng::new(7);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn exp_mean_close() {
+        let mut r = Rng::new(9);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.exp(2.5)).sum::<f64>() / n as f64;
+        assert!((mean - 2.5).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn zipf_weights_normalized_and_monotone() {
+        let w = zipf_weights(24, 1.5);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        for i in 1..w.len() {
+            assert!(w[i] < w[i - 1]);
+        }
+    }
+
+    #[test]
+    fn pareto_is_heavy_tailed() {
+        let mut r = Rng::new(3);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.pareto(1.0, 1.2)).collect();
+        let max = xs.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(max > 100.0, "pareto tail too light: max {max}");
+        assert!(xs.iter().all(|&x| x >= 1.0));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,206 @@
+//! Azure-style workload sampler (§6 "Azure" class, Table 3).
+//!
+//! The paper samples and scales the IAT distribution of the Azure 2019
+//! production trace [71], producing nine samples (trace ids 0–8) with
+//! different function mixes and invocation-frequency distributions. The
+//! original trace is not shipped here (hardware/data substitution — see
+//! DESIGN.md §1), so we synthesize samples with the trace's published
+//! shape: heavy-tailed per-function rates spanning orders of magnitude
+//! (Pareto-distributed), bursty arrivals (log-normal IATs with CV > 1),
+//! and the per-sample function counts / utilization bands of Table 3.
+
+use crate::types::{secs, FuncId};
+use crate::util::rng::Rng;
+use crate::workload::catalog;
+use crate::workload::trace::{Trace, TraceEvent, Workload};
+
+/// Target mean GPU utilization per Table-3 trace id (column "GPU Util %").
+pub const TABLE3_UTIL: [f64; 9] = [37.9, 44.3, 48.8, 67.0, 77.1, 43.2, 79.9, 44.9, 54.2];
+
+/// Function-copy counts per sample; trace 4 is the 19-function
+/// "medium-intensity" workload used throughout §6.2.
+pub const TABLE3_NFUNCS: [usize; 9] = [24, 22, 20, 23, 19, 21, 24, 20, 22];
+
+/// Parameters of an Azure-style sample.
+#[derive(Debug, Clone)]
+pub struct AzureConfig {
+    /// Which Table-3 sample (0–8); drives n_funcs, util target and seed.
+    pub trace_id: usize,
+    /// Trace duration, seconds (paper experiments run tens of minutes).
+    pub duration_s: f64,
+    /// Scale the offered load (1.0 = calibrated to the Table-3 util).
+    pub load_scale: f64,
+}
+
+impl Default for AzureConfig {
+    fn default() -> Self {
+        Self {
+            trace_id: 4,
+            duration_s: 600.0,
+            load_scale: 1.0,
+        }
+    }
+}
+
+/// Generate one Azure-style sample.
+pub fn generate(cfg: &AzureConfig) -> (Workload, Trace) {
+    assert!(cfg.trace_id < 9, "trace_id must be 0..9");
+    let mut rng = Rng::new(0xA2_0000 + cfg.trace_id as u64);
+    let n_funcs = TABLE3_NFUNCS[cfg.trace_id];
+    let util_target = TABLE3_UTIL[cfg.trace_id] / 100.0 * cfg.load_scale;
+
+    // Heavy-tailed relative rates (Pareto shape ~1.1: a few dominant
+    // functions, long rare tail — the Azure trace's signature), sorted
+    // so rank 0 is the most popular.
+    let mut rel_rates: Vec<f64> = (0..n_funcs).map(|_| rng.pareto(1.0, 1.1)).collect();
+    rel_rates.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    // Popular functions skew short, as in the production trace
+    // ("dominated by extremely short-running functions", §6).
+    let classes: Vec<&'static catalog::FuncClass> = catalog::CATALOG.iter().collect();
+    let class_of = crate::workload::shortness_biased_assignment(&classes, n_funcs, &mut rng);
+
+    // Scale rates so the expected *busy-time* demand hits the
+    // utilization target (NVML utilization is the busy-time fraction):
+    //   Σ rate_i × gpu_warm_i = util_target  (one-GPU-seconds/second)
+    // The 1.12 divisor compensates for the execution-time inflation the
+    // model adds on top of warm times (interference overlap at D≥2,
+    // shim, memory movement) so *measured* utilization lands near the
+    // Table-3 targets.
+    let demand: f64 = (0..n_funcs)
+        .map(|i| {
+            let c = classes[class_of[i]];
+            rel_rates[i] * c.gpu_warm_s
+        })
+        .sum();
+    let scale = util_target / 1.12 / demand.max(1e-12);
+
+    let mut workload = Workload::default();
+    let mut copies = vec![0usize; classes.len()];
+    let mut sigmas = Vec::with_capacity(n_funcs);
+    for i in 0..n_funcs {
+        let class = classes[class_of[i]];
+        let rate = rel_rates[i] * scale;
+        workload.register(class, copies[class_of[i]], 1.0 / rate.max(1e-12));
+        copies[class_of[i]] += 1;
+        // Burstiness varies per function (CV > 1 for most Azure apps).
+        sigmas.push(rng.range(0.8, 1.8));
+    }
+
+    let mut trace = Trace::default();
+    for (i, f) in workload.funcs.iter().enumerate() {
+        let sigma: f64 = sigmas[i];
+        // Log-normal with mean = mean_iat: mu = ln(mean) - sigma^2/2.
+        let mu = f.mean_iat_s.ln() - sigma * sigma / 2.0;
+        let mut t = rng.log_normal(mu, sigma);
+        while t < cfg.duration_s {
+            trace.events.push(TraceEvent {
+                at: secs(t),
+                func: FuncId(f.id.0),
+            });
+            t += rng.log_normal(mu, sigma);
+        }
+    }
+    trace.sort();
+
+    // Heavy-tailed sampling makes the *realized* demand deviate widely
+    // from the expectation; normalize by uniformly stretching/shrinking
+    // time so the sample actually offers the Table-3 load (burst
+    // structure is preserved, only the global rate shifts).
+    let realized = offered_demand(&workload, &trace);
+    let target = util_target / 1.12;
+    if realized > 1e-9 {
+        let factor = realized / target;
+        for e in &mut trace.events {
+            e.at = (e.at as f64 * factor) as crate::types::Nanos;
+        }
+        for f in &mut workload.funcs {
+            f.mean_iat_s *= factor;
+        }
+    }
+    (workload, trace)
+}
+
+/// Offered busy-time demand of a workload+trace in one-GPU-seconds per
+/// second (Σ invocations × warm-time / duration).
+pub fn offered_demand(workload: &Workload, trace: &Trace) -> f64 {
+    if trace.is_empty() {
+        return 0.0;
+    }
+    let total: f64 = trace
+        .events
+        .iter()
+        .map(|e| workload.func(e.func).class.gpu_warm_s)
+        .sum();
+    total / crate::types::to_secs(trace.duration()).max(1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nine_samples_generate() {
+        for id in 0..9 {
+            let (w, t) = generate(&AzureConfig {
+                trace_id: id,
+                duration_s: 300.0,
+                load_scale: 1.0,
+            });
+            assert_eq!(w.len(), TABLE3_NFUNCS[id], "trace {id}");
+            assert!(t.len() > 10, "trace {id} too sparse: {}", t.len());
+        }
+    }
+
+    #[test]
+    fn demand_tracks_util_target() {
+        for id in [0, 4, 6] {
+            let (w, t) = generate(&AzureConfig {
+                trace_id: id,
+                duration_s: 3000.0,
+                load_scale: 1.0,
+            });
+            let demand = offered_demand(&w, &t);
+            let target = TABLE3_UTIL[id] / 100.0;
+            // Log-normal sampling noise is real; stay within ~40%.
+            assert!(
+                (demand - target).abs() / target < 0.4,
+                "trace {id}: demand {demand:.3} vs target {target:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn rates_are_heavy_tailed() {
+        let (w, t) = generate(&AzureConfig {
+            trace_id: 0,
+            duration_s: 2000.0,
+            load_scale: 1.0,
+        });
+        let mut counts = t.counts(w.len());
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(counts[0] > 10 * counts[counts.len() - 1].max(1) / 2);
+    }
+
+    #[test]
+    fn deterministic_per_trace_id() {
+        let cfg = AzureConfig::default();
+        let (_, a) = generate(&cfg);
+        let (_, b) = generate(&cfg);
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn load_scale_scales() {
+        let lo = generate(&AzureConfig {
+            trace_id: 2,
+            duration_s: 1000.0,
+            load_scale: 0.5,
+        });
+        let hi = generate(&AzureConfig {
+            trace_id: 2,
+            duration_s: 1000.0,
+            load_scale: 2.0,
+        });
+        assert!(hi.1.len() > 2 * lo.1.len());
+    }
+}

@@ -1,0 +1,63 @@
+//! Workloads: the function catalog (Table 1 calibration) and the trace
+//! generators (Zipfian + Azure-style samples) used by every experiment.
+
+pub mod azure;
+pub mod catalog;
+pub mod trace;
+pub mod zipf;
+
+pub use catalog::{FuncClass, CATALOG};
+pub use trace::{Trace, TraceEvent, Workload, WorkloadFunc};
+
+use crate::util::rng::Rng;
+
+/// Assign catalog classes to popularity ranks (rank 0 = most popular)
+/// such that popular functions skew *short* — the Azure production
+/// trace's signature (invocation frequency anti-correlates with
+/// duration) — with multiplicative noise so the correlation is loose.
+pub fn shortness_biased_assignment(
+    classes: &[&'static FuncClass],
+    n_funcs: usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    // Class indices sorted by warm time ascending, cycled to length.
+    let mut by_warm: Vec<usize> = (0..classes.len()).collect();
+    by_warm.sort_by(|&a, &b| {
+        classes[a]
+            .gpu_warm_s
+            .partial_cmp(&classes[b].gpu_warm_s)
+            .unwrap()
+    });
+    let mut order: Vec<usize> = (0..n_funcs)
+        .map(|r| by_warm[(r * by_warm.len()) / n_funcs.max(1)])
+        .collect();
+    // Local noise: swap each slot with a neighbour within a window of 3
+    // so ordering is biased, not deterministic.
+    for i in 0..order.len() {
+        let j = (i + rng.below(3)).min(order.len() - 1);
+        order.swap(i, j);
+    }
+    order
+}
+
+#[cfg(test)]
+mod assignment_tests {
+    use super::*;
+
+    #[test]
+    fn popular_ranks_are_shorter_on_average() {
+        let classes: Vec<&'static FuncClass> = catalog::CATALOG.iter().collect();
+        let mut rng = Rng::new(1);
+        let order = shortness_biased_assignment(&classes, 24, &mut rng);
+        assert_eq!(order.len(), 24);
+        let warm = |r: &[usize]| {
+            r.iter().map(|&i| classes[i].gpu_warm_s).sum::<f64>() / r.len() as f64
+        };
+        let head = warm(&order[..8]);
+        let tail = warm(&order[16..]);
+        assert!(
+            head < tail,
+            "popular (head) should be shorter: {head:.2} vs {tail:.2}"
+        );
+    }
+}

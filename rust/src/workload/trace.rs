@@ -1,0 +1,241 @@
+//! Workload + trace representation and file IO.
+//!
+//! A [`Workload`] is a set of registered functions (copies of catalog
+//! classes, each with its own arrival process — the paper runs e.g. 24
+//! function copies per experiment, §6). A [`Trace`] is the open-loop
+//! invocation timeline generated from it: invocations fire at
+//! pre-determined timestamps regardless of completion (as in §6.2).
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+use crate::types::{secs, to_secs, FuncId, Nanos};
+use crate::workload::catalog::{self, FuncClass};
+
+/// One registered function: a catalog class plus workload identity.
+#[derive(Debug, Clone)]
+pub struct WorkloadFunc {
+    pub id: FuncId,
+    /// Unique registered name, e.g. `fft-3` (third copy of fft).
+    pub name: String,
+    pub class: &'static FuncClass,
+    /// Mean inter-arrival time used to generate this function's arrivals.
+    pub mean_iat_s: f64,
+}
+
+/// A set of registered functions.
+#[derive(Debug, Clone, Default)]
+pub struct Workload {
+    pub funcs: Vec<WorkloadFunc>,
+}
+
+impl Workload {
+    pub fn func(&self, id: FuncId) -> &WorkloadFunc {
+        &self.funcs[id.0 as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.funcs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.funcs.is_empty()
+    }
+
+    /// Register a new function copy of `class`; returns its id.
+    pub fn register(&mut self, class: &'static FuncClass, copy: usize, mean_iat_s: f64) -> FuncId {
+        let id = FuncId(self.funcs.len() as u32);
+        self.funcs.push(WorkloadFunc {
+            id,
+            name: format!("{}-{copy}", class.name),
+            class,
+            mean_iat_s,
+        });
+        id
+    }
+}
+
+/// One open-loop arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub at: Nanos,
+    pub func: FuncId,
+}
+
+/// An open-loop trace: arrivals sorted by timestamp.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn duration(&self) -> Nanos {
+        self.events.last().map(|e| e.at).unwrap_or(0)
+    }
+
+    /// Mean offered load in requests/second.
+    pub fn req_per_sec(&self) -> f64 {
+        if self.events.len() < 2 {
+            return 0.0;
+        }
+        self.events.len() as f64 / to_secs(self.duration()).max(1e-9)
+    }
+
+    pub fn sort(&mut self) {
+        self.events.sort_by_key(|e| (e.at, e.func));
+    }
+
+    /// Per-function invocation counts.
+    pub fn counts(&self, nfuncs: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; nfuncs];
+        for e in &self.events {
+            counts[e.func.0 as usize] += 1;
+        }
+        counts
+    }
+
+    /// Serialize workload + trace to a simple text format:
+    /// `func <class> <copy> <mean_iat_s>` lines, then `ev <t_s> <fid>`.
+    pub fn save<P: AsRef<Path>>(&self, workload: &Workload, path: P) -> Result<()> {
+        let mut out = String::new();
+        for f in &workload.funcs {
+            let copy = f
+                .name
+                .rsplit('-')
+                .next()
+                .and_then(|s| s.parse::<usize>().ok())
+                .unwrap_or(0);
+            out.push_str(&format!(
+                "func {} {} {:.9}\n",
+                f.class.name, copy, f.mean_iat_s
+            ));
+        }
+        for e in &self.events {
+            out.push_str(&format!("ev {:.9} {}\n", to_secs(e.at), e.func.0));
+        }
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&path, out)
+            .with_context(|| format!("writing {}", path.as_ref().display()))?;
+        Ok(())
+    }
+
+    /// Load a workload + trace saved by [`Self::save`].
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<(Workload, Trace)> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let mut workload = Workload::default();
+        let mut trace = Trace::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let ctx = || format!("trace line {}", lineno + 1);
+            match parts.next().unwrap() {
+                "func" => {
+                    let class_name = parts.next().ok_or_else(|| anyhow!("{}: class", ctx()))?;
+                    let copy: usize = parts
+                        .next()
+                        .ok_or_else(|| anyhow!("{}: copy", ctx()))?
+                        .parse()?;
+                    let iat: f64 = parts
+                        .next()
+                        .ok_or_else(|| anyhow!("{}: iat", ctx()))?
+                        .parse()?;
+                    let class = catalog::by_name(class_name)
+                        .ok_or_else(|| anyhow!("{}: unknown class {class_name}", ctx()))?;
+                    workload.register(class, copy, iat);
+                }
+                "ev" => {
+                    let t: f64 = parts
+                        .next()
+                        .ok_or_else(|| anyhow!("{}: time", ctx()))?
+                        .parse()?;
+                    let fid: u32 = parts
+                        .next()
+                        .ok_or_else(|| anyhow!("{}: func id", ctx()))?
+                        .parse()?;
+                    if fid as usize >= workload.len() {
+                        return Err(anyhow!("{}: func id {fid} out of range", ctx()));
+                    }
+                    trace.events.push(TraceEvent {
+                        at: secs(t),
+                        func: FuncId(fid),
+                    });
+                }
+                other => return Err(anyhow!("{}: unknown tag {other}", ctx())),
+            }
+        }
+        trace.sort();
+        Ok((workload, trace))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> (Workload, Trace) {
+        let mut w = Workload::default();
+        let a = w.register(catalog::by_name("fft").unwrap(), 0, 1.0);
+        let b = w.register(catalog::by_name("imagenet").unwrap(), 0, 2.0);
+        let mut t = Trace::default();
+        t.events.push(TraceEvent { at: secs(0.5), func: a });
+        t.events.push(TraceEvent { at: secs(0.1), func: b });
+        t.events.push(TraceEvent { at: secs(1.5), func: a });
+        t.sort();
+        (w, t)
+    }
+
+    #[test]
+    fn sort_orders_by_time() {
+        let (_, t) = tiny();
+        assert_eq!(t.events[0].func, FuncId(1));
+        assert!(t.events.windows(2).all(|w| w[0].at <= w[1].at));
+    }
+
+    #[test]
+    fn counts_per_function() {
+        let (w, t) = tiny();
+        assert_eq!(t.counts(w.len()), vec![2, 1]);
+    }
+
+    #[test]
+    fn req_per_sec_sane() {
+        let (_, t) = tiny();
+        assert!((t.req_per_sec() - 3.0 / 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let (w, t) = tiny();
+        let path = std::env::temp_dir().join("mqfq_trace_test/trace.txt");
+        t.save(&w, &path).unwrap();
+        let (w2, t2) = Trace::load(&path).unwrap();
+        assert_eq!(w2.len(), w.len());
+        assert_eq!(t2.events, t.events);
+        assert_eq!(w2.funcs[0].class.name, "fft");
+        assert!((w2.funcs[0].mean_iat_s - 1.0).abs() < 1e-9);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_func_id() {
+        let path = std::env::temp_dir().join("mqfq_trace_test2/bad.txt");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, "func fft 0 1.0\nev 0.5 7\n").unwrap();
+        assert!(Trace::load(&path).is_err());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+}

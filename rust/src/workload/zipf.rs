@@ -1,0 +1,145 @@
+//! Zipfian open-loop workload generator (§6 "Zipfian" class).
+//!
+//! The paper: "the inter-arrival-times of each function are
+//! exponentially distributed, and the average arrival rates of different
+//! functions are zipfian (parameter=1.5)", with 24 function copies drawn
+//! from the Table-1 catalog.
+
+use crate::types::{secs, FuncId};
+use crate::util::rng::{zipf_weights, Rng};
+use crate::workload::catalog::{self, FuncClass};
+use crate::workload::trace::{Trace, TraceEvent, Workload};
+
+/// Parameters of a Zipfian workload.
+#[derive(Debug, Clone)]
+pub struct ZipfConfig {
+    /// Number of function copies (paper default: 24).
+    pub n_funcs: usize,
+    /// Zipf exponent over function popularity (paper: 1.5).
+    pub s: f64,
+    /// Total offered arrival rate across all functions, req/s.
+    pub total_rate: f64,
+    /// Trace duration, seconds.
+    pub duration_s: f64,
+    /// RNG seed.
+    pub seed: u64,
+    /// Optional filter over catalog classes (e.g. "large functions only",
+    /// Fig 5c's warm-exec > some threshold variant).
+    pub class_filter: Option<fn(&FuncClass) -> bool>,
+}
+
+impl Default for ZipfConfig {
+    fn default() -> Self {
+        Self {
+            n_funcs: 24,
+            s: 1.5,
+            total_rate: 2.0,
+            duration_s: 600.0,
+            seed: 0,
+            class_filter: None,
+        }
+    }
+}
+
+/// Generate the workload (function copies + zipf rates) and its trace.
+pub fn generate(cfg: &ZipfConfig) -> (Workload, Trace) {
+    let mut rng = Rng::new(cfg.seed);
+    let classes: Vec<&'static FuncClass> = catalog::CATALOG
+        .iter()
+        .filter(|c| cfg.class_filter.map(|f| f(c)).unwrap_or(true))
+        .collect();
+    assert!(!classes.is_empty(), "class filter excluded everything");
+
+    let weights = zipf_weights(cfg.n_funcs, cfg.s);
+    let mut workload = Workload::default();
+    let mut copies = vec![0usize; classes.len()];
+    // Popular functions skew short (the web/ML-inference workloads this
+    // class represents; also the Azure trace's signature — §2.1 "the
+    // original Azure trace … is dominated by extremely short-running
+    // functions"): popularity rank anti-correlates with execution time,
+    // with noise so the correlation isn't perfect.
+    let order = super::shortness_biased_assignment(&classes, cfg.n_funcs, &mut rng);
+    for (rank, class_idx) in order.iter().enumerate() {
+        let class = classes[*class_idx];
+        let rate = weights[rank] * cfg.total_rate;
+        let mean_iat = 1.0 / rate.max(1e-9);
+        workload.register(class, copies[*class_idx], mean_iat);
+        copies[*class_idx] += 1;
+    }
+
+    let trace = open_loop_poisson(&workload, cfg.duration_s, &mut rng);
+    (workload, trace)
+}
+
+/// Build an open-loop trace with exponential IATs from per-function means.
+pub fn open_loop_poisson(workload: &Workload, duration_s: f64, rng: &mut Rng) -> Trace {
+    let mut trace = Trace::default();
+    for f in &workload.funcs {
+        let mut t = rng.exp(f.mean_iat_s); // random phase start
+        while t < duration_s {
+            trace.events.push(TraceEvent {
+                at: secs(t),
+                func: FuncId(f.id.0),
+            });
+            t += rng.exp(f.mean_iat_s);
+        }
+    }
+    trace.sort();
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_shape() {
+        let cfg = ZipfConfig {
+            duration_s: 300.0,
+            total_rate: 3.0,
+            ..Default::default()
+        };
+        let (w, t) = generate(&cfg);
+        assert_eq!(w.len(), 24);
+        // Offered load should be near the configured total rate.
+        let rps = t.len() as f64 / cfg.duration_s;
+        assert!((rps - 3.0).abs() < 0.6, "rps {rps}");
+    }
+
+    #[test]
+    fn popularity_is_heavy_tailed() {
+        let cfg = ZipfConfig {
+            duration_s: 2000.0,
+            total_rate: 2.0,
+            seed: 7,
+            ..Default::default()
+        };
+        let (w, t) = generate(&cfg);
+        let mut counts = t.counts(w.len());
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        // Top function should dominate the tail decisively (zipf 1.5).
+        let top: usize = counts[0];
+        let tail: usize = counts[12..].iter().sum();
+        assert!(top > tail, "top {top} vs tail {tail}");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let cfg = ZipfConfig::default();
+        let (_, t1) = generate(&cfg);
+        let (_, t2) = generate(&cfg);
+        assert_eq!(t1.events, t2.events);
+    }
+
+    #[test]
+    fn class_filter_respected() {
+        let cfg = ZipfConfig {
+            class_filter: Some(|c: &FuncClass| c.gpu_warm_s > 1.0),
+            ..Default::default()
+        };
+        let (w, _) = generate(&cfg);
+        for f in &w.funcs {
+            assert!(f.class.gpu_warm_s > 1.0, "{}", f.name);
+        }
+    }
+}

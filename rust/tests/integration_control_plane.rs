@@ -1,0 +1,238 @@
+//! Integration tests across the full control plane: sim replays in
+//! every hardware mode, the real-time TCP server, trace file IO, and
+//! failure/edge scenarios.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use mqfq::gpu::{MultiplexMode, A30, V100};
+use mqfq::memory::MemPolicy;
+use mqfq::plane::PlaneConfig;
+use mqfq::scheduler::policies::PolicyKind;
+use mqfq::server::RtServer;
+use mqfq::sim::replay;
+use mqfq::types::{secs, FuncId, MS};
+use mqfq::workload::catalog::{by_name, CATALOG};
+use mqfq::workload::trace::{Trace, TraceEvent, Workload};
+use mqfq::workload::zipf::{self, ZipfConfig};
+
+fn zipf_small() -> (Workload, Trace) {
+    zipf::generate(&ZipfConfig {
+        n_funcs: 8,
+        total_rate: 1.0,
+        duration_s: 120.0,
+        seed: 42,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn every_mode_replays_cleanly() {
+    for (mode, profile) in [
+        (MultiplexMode::Plain, V100),
+        (MultiplexMode::Mps, A30),
+        (MultiplexMode::Mig(2), A30),
+        (MultiplexMode::Mig(4), A30),
+    ] {
+        let (w, t) = zipf_small();
+        let n = t.len();
+        let cfg = PlaneConfig {
+            mode,
+            profile,
+            ..Default::default()
+        };
+        let r = replay(w, &t, cfg);
+        assert_eq!(r.recorder().len(), n, "{mode:?}");
+        r.plane.check_invariants().unwrap();
+    }
+}
+
+#[test]
+fn every_policy_and_mem_policy_composes() {
+    for policy in [
+        PolicyKind::Fcfs,
+        PolicyKind::Batch,
+        PolicyKind::PaellaSjf,
+        PolicyKind::Eevdf,
+        PolicyKind::Sfq,
+        PolicyKind::Mqfq,
+    ] {
+        for mem in [
+            MemPolicy::StockUvm,
+            MemPolicy::Madvise,
+            MemPolicy::PrefetchOnly,
+            MemPolicy::PrefetchSwap,
+        ] {
+            let (w, t) = zipf_small();
+            let n = t.len();
+            let cfg = PlaneConfig {
+                policy,
+                mem_policy: mem,
+                ..Default::default()
+            };
+            let r = replay(w, &t, cfg);
+            assert_eq!(r.recorder().len(), n, "{} + {}", policy.name(), mem.name());
+        }
+    }
+}
+
+#[test]
+fn multi_gpu_beats_single_gpu_under_load() {
+    let mk = || zipf::generate(&ZipfConfig {
+        n_funcs: 12,
+        total_rate: 3.0,
+        duration_s: 300.0,
+        seed: 7,
+        ..Default::default()
+    });
+    let (w1, t1) = mk();
+    let one = replay(w1, &t1, PlaneConfig { n_gpus: 1, ..Default::default() });
+    let (w2, t2) = mk();
+    let two = replay(w2, &t2, PlaneConfig { n_gpus: 2, ..Default::default() });
+    assert!(
+        two.recorder().weighted_avg_latency_s() < one.recorder().weighted_avg_latency_s(),
+        "2 GPUs {:.2}s vs 1 GPU {:.2}s",
+        two.recorder().weighted_avg_latency_s(),
+        one.recorder().weighted_avg_latency_s()
+    );
+}
+
+#[test]
+fn dynamic_d_stays_within_bounds_and_drains() {
+    let (w, t) = zipf_small();
+    let n = t.len();
+    let cfg = PlaneConfig {
+        dynamic_d: Some((4, 0.9)),
+        ..Default::default()
+    };
+    let r = replay(w, &t, cfg);
+    assert_eq!(r.recorder().len(), n);
+    for (_, d) in &r.recorder().d_timeline {
+        assert!(*d >= 1 && *d <= 4);
+    }
+}
+
+#[test]
+fn burst_of_one_function_respects_d_and_completes() {
+    let mut w = Workload::default();
+    let f = w.register(by_name("roberta").unwrap(), 0, 0.1);
+    let mut t = Trace::default();
+    for i in 0..50 {
+        t.events.push(TraceEvent {
+            at: i * MS,
+            func: f,
+        });
+    }
+    let cfg = PlaneConfig {
+        d: 2,
+        ..Default::default()
+    };
+    let r = replay(w, &t, cfg);
+    assert_eq!(r.recorder().len(), 50);
+    // At most two containers should ever have been created: stickiness
+    // avoids concurrent same-function cold starts beyond the D level.
+    assert!(r.plane.pool_stats().cold <= 2, "{:?}", r.plane.pool_stats());
+}
+
+#[test]
+fn tiny_pool_still_makes_progress() {
+    let (w, t) = zipf_small();
+    let n = t.len();
+    let cfg = PlaneConfig {
+        pool_size: 2,
+        d: 2,
+        ..Default::default()
+    };
+    let r = replay(w, &t, cfg);
+    assert_eq!(r.recorder().len(), n);
+    // Pool of 2 over 8 functions: constant churn, mostly cold starts.
+    assert!(r.recorder().cold_ratio() > 0.3);
+}
+
+#[test]
+fn empty_trace_is_a_noop() {
+    let mut w = Workload::default();
+    w.register(by_name("fft").unwrap(), 0, 1.0);
+    let r = replay(w, &Trace::default(), PlaneConfig::default());
+    assert_eq!(r.recorder().len(), 0);
+    assert_eq!(r.makespan, 0);
+}
+
+#[test]
+fn single_invocation_of_every_class() {
+    let mut w = Workload::default();
+    let mut t = Trace::default();
+    for (i, class) in CATALOG.iter().enumerate() {
+        let f = w.register(class, 0, 60.0);
+        t.events.push(TraceEvent {
+            at: secs(i as f64 * 40.0),
+            func: f,
+        });
+    }
+    let r = replay(w, &t, PlaneConfig::default());
+    assert_eq!(r.recorder().len(), CATALOG.len());
+    // Spaced-out single invocations are all cold.
+    assert_eq!(r.plane.pool_stats().cold as usize, CATALOG.len());
+}
+
+#[test]
+fn trace_file_roundtrip_replays_identically() {
+    let (w, t) = zipf_small();
+    let dir = std::env::temp_dir().join("mqfq_int_trace");
+    let path = dir.join("w.trace");
+    t.save(&w, &path).unwrap();
+    let (w2, t2) = Trace::load(&path).unwrap();
+    let a = replay(w, &t, PlaneConfig::default());
+    let b = replay(w2, &t2, PlaneConfig::default());
+    assert_eq!(a.recorder().len(), b.recorder().len());
+    assert!(
+        (a.recorder().weighted_avg_latency_s() - b.recorder().weighted_avg_latency_s()).abs()
+            < 1e-9
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn tcp_server_serves_invocations_and_stats() {
+    let mut w = Workload::default();
+    w.register(by_name("isoneural").unwrap(), 0, 1.0);
+    let cfg = PlaneConfig {
+        monitor_period: 20 * MS,
+        ..Default::default()
+    };
+    let srv = RtServer::new(w, cfg, None, 0.001).unwrap();
+    let addr = srv.serve("127.0.0.1:0").unwrap();
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    conn.write_all(b"invoke isoneural-0\ninvoke isoneural-0\nstats\nquit\n")
+        .unwrap();
+    let reader = BufReader::new(conn.try_clone().unwrap());
+    let lines: Vec<String> = reader.lines().map_while(Result::ok).collect();
+    assert_eq!(lines.len(), 3, "{lines:?}");
+    assert!(lines[0].starts_with("ok "));
+    assert!(lines[1].starts_with("ok "));
+    assert!(lines[2].contains("invocations=2"), "{}", lines[2]);
+    // Second invocation must have been warm (same container).
+    assert!(lines[1].contains("warm"), "{}", lines[1]);
+}
+
+#[test]
+fn naive_mode_destroys_containers() {
+    let mut w = Workload::default();
+    let f = w.register(by_name("fft").unwrap(), 0, 1.0);
+    let mut t = Trace::default();
+    for i in 0..5 {
+        t.events.push(TraceEvent {
+            at: secs(i as f64 * 30.0),
+            func: f,
+        });
+    }
+    let cfg = PlaneConfig {
+        keep_warm: false,
+        ..Default::default()
+    };
+    let r = replay(w, &t, cfg);
+    assert_eq!(r.recorder().cold_ratio(), 1.0, "naive mode must be all-cold");
+}

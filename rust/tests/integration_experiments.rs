@@ -1,0 +1,68 @@
+//! Integration over the experiment harness: the fast experiments run
+//! end-to-end and leave their CSV artifacts under results/.
+
+use std::path::Path;
+
+#[test]
+fn table1_and_fig1_write_csvs() {
+    mqfq::experiments::table1::main();
+    mqfq::experiments::fig1::main();
+    assert!(Path::new("results/table1.csv").exists());
+    assert!(Path::new("results/fig1.csv").exists());
+    let table1 = std::fs::read_to_string("results/table1.csv").unwrap();
+    assert_eq!(table1.lines().count(), 9, "header + 8 functions");
+    assert!(table1.contains("imagenet"));
+}
+
+#[test]
+fn fig4_rows_cover_all_policies() {
+    let rows = mqfq::experiments::fig4::rows();
+    assert_eq!(rows.len(), 4);
+    let names: Vec<&str> = rows.iter().map(|r| r.policy).collect();
+    assert!(names.contains(&"stock-uvm"));
+    assert!(names.contains(&"prefetch+swap"));
+    for r in &rows {
+        assert!(r.total_s > 0.0 && r.total_s < 10.0, "{r:?}");
+    }
+}
+
+#[test]
+fn fig7b_covers_whole_catalog() {
+    let rows = mqfq::experiments::fig7::fig7b_rows();
+    assert_eq!(rows.len(), mqfq::workload::catalog::CATALOG.len());
+    for (name, slow) in &rows {
+        assert!(*slow >= 1.0, "{name}: {slow}");
+    }
+}
+
+#[test]
+fn cli_exp_dispatcher_knows_every_experiment() {
+    for (name, _) in mqfq::experiments::ALL {
+        assert!(
+            mqfq::experiments::by_name(name).is_some(),
+            "{name} not dispatchable"
+        );
+    }
+}
+
+#[test]
+fn summary_csv_roundtrip() {
+    let (w, t) = mqfq::workload::zipf::generate(&mqfq::workload::zipf::ZipfConfig {
+        n_funcs: 4,
+        total_rate: 0.5,
+        duration_s: 60.0,
+        seed: 3,
+        ..Default::default()
+    });
+    let (s, _) = mqfq::experiments::run(
+        "itest",
+        w,
+        &t,
+        mqfq::plane::PlaneConfig::default(),
+    );
+    mqfq::experiments::write_summary_csv("itest_summary", std::slice::from_ref(&s)).unwrap();
+    let text = std::fs::read_to_string("results/itest_summary.csv").unwrap();
+    assert!(text.lines().count() == 2);
+    assert!(text.contains("itest"));
+    std::fs::remove_file("results/itest_summary.csv").ok();
+}

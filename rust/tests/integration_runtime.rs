@@ -1,0 +1,76 @@
+//! End-to-end artifact validation: every HLO artifact produced by the
+//! python AOT pipeline must load, compile, execute on the PJRT CPU
+//! client, and reproduce the golden outputs recorded in the manifest.
+//!
+//! Requires `make artifacts` to have run (skipped with a message if not).
+
+use mqfq::runtime::{manifest, PjrtRuntime};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first ({} missing)", dir.display());
+        None
+    }
+}
+
+#[test]
+fn all_artifacts_validate_against_golden() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = PjrtRuntime::new(&dir).unwrap();
+    let names = rt.load_all().unwrap();
+    assert!(names.len() >= 11, "expected full catalog, got {names:?}");
+    for name in &names {
+        let report = rt
+            .validate(name)
+            .unwrap_or_else(|e| panic!("golden validation failed: {e:#}"));
+        assert!(!report.outputs.is_empty());
+        eprintln!(
+            "  {name}: {} output(s), exec {:?}",
+            report.outputs.len(),
+            report.elapsed
+        );
+    }
+}
+
+#[test]
+fn manifest_covers_table1_catalog() {
+    let Some(dir) = artifacts_dir() else { return };
+    let specs = manifest::load(dir.join("manifest.txt")).unwrap();
+    let names: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
+    for expect in [
+        "imagenet", "roberta", "ffmpeg", "fft", "isoneural", "lud", "needle",
+        "pathfinder", "cupy", "rnn", "srad",
+    ] {
+        assert!(names.contains(&expect), "{expect} missing from manifest");
+    }
+}
+
+#[test]
+fn execute_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = PjrtRuntime::new(&dir).unwrap();
+    rt.load_function("cupy").unwrap();
+    let a = rt.execute("cupy").unwrap();
+    let b = rt.execute("cupy").unwrap();
+    assert_eq!(a.outputs, b.outputs, "same staged inputs must give same outputs");
+}
+
+#[test]
+fn repeated_execution_is_fast_after_compile() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = PjrtRuntime::new(&dir).unwrap();
+    rt.load_function("isoneural").unwrap();
+    rt.execute("isoneural").unwrap(); // warm
+    let t0 = std::time::Instant::now();
+    for _ in 0..10 {
+        rt.execute("isoneural").unwrap();
+    }
+    let per = t0.elapsed() / 10;
+    assert!(
+        per < std::time::Duration::from_millis(100),
+        "isoneural exec too slow: {per:?}"
+    );
+}

@@ -1,0 +1,299 @@
+//! Property-based tests over the coordinator's invariants (DESIGN.md
+//! deliverable c): randomized workloads, traces and configurations,
+//! checked against structural and algorithmic properties.
+//!
+//! Uses the in-repo `util::prop` mini-framework (proptest is not in the
+//! offline vendor set); python-side property testing uses hypothesis.
+
+use mqfq::gpu::MultiplexMode;
+use mqfq::memory::MemPolicy;
+use mqfq::plane::PlaneConfig;
+use mqfq::scheduler::policies::PolicyKind;
+use mqfq::scheduler::{Invocation, MqfqConfig, MqfqSticky, Policy, PolicyCtx};
+use mqfq::sim::replay;
+use mqfq::types::{secs, FuncId, InvocationId, SEC};
+use mqfq::util::prop::{assert_prop, Gen};
+use mqfq::workload::catalog::CATALOG;
+use mqfq::workload::trace::{Trace, TraceEvent, Workload};
+
+/// Random workload + open-loop trace.
+fn gen_scenario(g: &mut Gen) -> (Workload, Trace) {
+    let n_funcs = g.int(1, 12);
+    let mut w = Workload::default();
+    for i in 0..n_funcs {
+        let class = &CATALOG[g.int(0, CATALOG.len() - 1)];
+        w.register(class, i, g.f64(0.5, 20.0));
+    }
+    let n_events = g.int(1, 120);
+    let horizon = g.f64(10.0, 300.0);
+    let mut t = Trace::default();
+    for _ in 0..n_events {
+        t.events.push(TraceEvent {
+            at: secs(g.f64(0.0, horizon)),
+            func: FuncId(g.int(0, n_funcs - 1) as u32),
+        });
+    }
+    t.sort();
+    (w, t)
+}
+
+fn gen_config(g: &mut Gen) -> PlaneConfig {
+    let policy = *g.choose(&[
+        PolicyKind::Fcfs,
+        PolicyKind::Batch,
+        PolicyKind::PaellaSjf,
+        PolicyKind::Eevdf,
+        PolicyKind::Sfq,
+        PolicyKind::Mqfq,
+    ]);
+    let mode = *g.choose(&[
+        MultiplexMode::Plain,
+        MultiplexMode::Mps,
+        MultiplexMode::Mig(2),
+    ]);
+    PlaneConfig {
+        policy,
+        mode,
+        mem_policy: *g.choose(&[
+            MemPolicy::StockUvm,
+            MemPolicy::Madvise,
+            MemPolicy::PrefetchOnly,
+            MemPolicy::PrefetchSwap,
+        ]),
+        n_gpus: g.int(1, 2),
+        d: g.int(1, 4),
+        pool_size: g.int(2, 32),
+        mqfq: MqfqConfig {
+            t: g.f64(0.0, 20.0),
+            ttl_alpha: g.f64(0.0, 4.0),
+            vt_wall_time: g.bool(0.8),
+            sticky: g.bool(0.8),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Every arrival eventually completes, exactly once, causally ordered —
+/// across random policies, memory managers, modes and D levels. The
+/// plane's deep invariants (ledger consistency, token limits) are also
+/// asserted at every monitor tick in debug builds.
+#[test]
+fn prop_no_invocation_lost_or_duplicated() {
+    assert_prop("conservation", 60, |g| {
+        let (w, t) = gen_scenario(g);
+        let n = t.len();
+        let cfg = gen_config(g);
+        let label = format!("{} d={} pool={}", cfg.policy.name(), cfg.d, cfg.pool_size);
+        let r = replay(w, &t, cfg);
+        if r.recorder().len() != n {
+            return Err(format!(
+                "{label}: {} arrivals but {} completions",
+                n,
+                r.recorder().len()
+            ));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for rec in &r.recorder().records {
+            if !seen.insert(rec.inv) {
+                return Err(format!("{label}: duplicate completion {:?}", rec.inv));
+            }
+            if rec.dispatched < rec.arrived || rec.completed <= rec.dispatched {
+                return Err(format!("{label}: non-causal record {rec:?}"));
+            }
+        }
+        if r.plane.in_flight() != 0 || r.plane.pending() != 0 {
+            return Err(format!("{label}: undrained plane"));
+        }
+        r.plane
+            .check_invariants()
+            .map_err(|e| format!("{label}: {e}"))
+    });
+}
+
+/// MQFQ-Sticky's over-run bound: a flow is never dispatched when its VT
+/// exceeds Global_VT + T, so VT spreads among backlogged flows stay
+/// within T + τ_max of each other.
+#[test]
+fn prop_mqfq_overrun_bounded() {
+    assert_prop("overrun-bound", 80, |g| {
+        let n_flows = g.int(2, 10);
+        let t_overrun = g.f64(0.0, 10.0);
+        let mut p = MqfqSticky::new(
+            n_flows,
+            MqfqConfig {
+                t: t_overrun,
+                vt_wall_time: true,
+                sticky: g.bool(0.5),
+                ..Default::default()
+            },
+        );
+        let in_flight = vec![0usize; n_flows];
+        let mut id = 0u64;
+        let mut services: Vec<f64> = (0..n_flows).map(|_| g.f64(0.1, 5.0)).collect();
+        services.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let tau_max = services[n_flows - 1];
+        // Backlog every flow.
+        for f in 0..n_flows {
+            for _ in 0..g.int(1, 8) {
+                p.enqueue(
+                    Invocation {
+                        id: InvocationId(id),
+                        func: FuncId(f as u32),
+                        arrived: 0,
+                    },
+                    0,
+                );
+                id += 1;
+            }
+        }
+        let steps = g.int(5, 60);
+        for step in 0..steps {
+            let now = step as u64 * SEC;
+            let ctx = PolicyCtx {
+                in_flight: &in_flight,
+                d: 2,
+            };
+            let Some(inv) = p.dispatch(now, &ctx) else {
+                break;
+            };
+            let backlogged: Vec<f64> = (0..n_flows)
+                .filter(|&i| !p.flow(FuncId(i as u32)).is_empty())
+                .map(|i| p.queue_vt(FuncId(i as u32)).unwrap())
+                .collect();
+            if backlogged.len() >= 2 {
+                let max = backlogged.iter().cloned().fold(f64::MIN, f64::max);
+                let min = backlogged.iter().cloned().fold(f64::MAX, f64::min);
+                // Chosen flow had vt ≤ global+T pre-dispatch; its VT then
+                // advanced by at most τ_max (EMA of observed services
+                // never exceeds the largest single service time; 1.0 is
+                // the black-box default before feedback).
+                let bound = t_overrun + tau_max.max(1.0) + 1e-6;
+                if max - min > bound {
+                    return Err(format!(
+                        "VT spread {:.3} > bound {:.3} (T={t_overrun:.2})",
+                        max - min,
+                        bound
+                    ));
+                }
+            }
+            p.on_complete(
+                inv.func,
+                secs(services[inv.func.0 as usize % services.len()]),
+                now,
+            );
+        }
+        Ok(())
+    });
+}
+
+/// FIFO within each flow: invocations of one function dispatch in
+/// arrival order under every policy.
+#[test]
+fn prop_fifo_within_function() {
+    assert_prop("per-flow-fifo", 60, |g| {
+        let (w, t) = gen_scenario(g);
+        let cfg = gen_config(g);
+        let r = replay(w, &t, cfg);
+        let mut recs = r.plane.recorder.records.clone();
+        recs.sort_by_key(|rec| (rec.dispatched, rec.inv.0));
+        let mut last_arrival: std::collections::HashMap<u32, u64> =
+            std::collections::HashMap::new();
+        for rec in &recs {
+            let e = last_arrival.entry(rec.func.0).or_insert(0);
+            if rec.arrived < *e {
+                return Err(format!(
+                    "{} dispatched after a later arrival of the same flow",
+                    rec.inv
+                ));
+            }
+            *e = rec.arrived;
+        }
+        Ok(())
+    });
+}
+
+/// The container pool never exceeds capacity; acquisition stats are
+/// conserved.
+#[test]
+fn prop_pool_accounting() {
+    assert_prop("pool-capacity", 40, |g| {
+        let (w, t) = gen_scenario(g);
+        let n = t.len() as u64;
+        let cfg = gen_config(g);
+        let r = replay(w, &t, cfg);
+        let stats = r.plane.pool_stats();
+        if stats.total() != n {
+            return Err(format!(
+                "{} acquisitions vs {n} invocations",
+                stats.total()
+            ));
+        }
+        if stats.cold == 0 && n > 0 {
+            return Err("first start of every function must be cold".into());
+        }
+        Ok(())
+    });
+}
+
+/// Fairness (Eq 1): under MQFQ, continuously backlogged same-τ functions'
+/// service gap stays below the theoretical bound in every window.
+#[test]
+fn prop_fairness_gap_below_bound() {
+    assert_prop("eq1-bound", 25, |g| {
+        let n_funcs = g.int(2, 8);
+        let mut w = Workload::default();
+        // Same class for all copies: τ_i = τ_j, tight bound (D-1)(2T).
+        let class = &CATALOG[g.int(0, CATALOG.len() - 1)];
+        for i in 0..n_funcs {
+            w.register(class, i, 1.0);
+        }
+        let mut t = Trace::default();
+        // Saturating load so flows stay continuously backlogged.
+        let horizon = 120.0;
+        let per_fn = g.int(30, 80);
+        for f in 0..n_funcs {
+            for k in 0..per_fn {
+                t.events.push(TraceEvent {
+                    at: secs(k as f64 * horizon / per_fn as f64),
+                    func: FuncId(f as u32),
+                });
+            }
+        }
+        t.sort();
+        let d = g.int(1, 3);
+        let t_overrun = g.f64(1.0, 10.0);
+        let cfg = PlaneConfig {
+            policy: PolicyKind::Mqfq,
+            d,
+            mqfq: MqfqConfig {
+                t: t_overrun,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let r = replay(w, &t, cfg);
+        let windows = mqfq::metrics::service_windows(
+            &r.recorder().records,
+            n_funcs,
+            30 * SEC,
+            r.makespan,
+        );
+        // Same-τ flows: Eq-1 bound = (D-1)·2T, plus the service quantum
+        // slack (executions straddle window edges, and interference can
+        // stretch a single service by the congestion factor).
+        let quantum = 2.0 * (class.gpu_warm_s * 3.0 + 1.0);
+        let bound =
+            mqfq::metrics::fairness_bound_eq1(d, t_overrun, 0.0, 0.0) + quantum;
+        for win in &windows {
+            let gap = win.max_gap_s();
+            if gap > bound {
+                return Err(format!(
+                    "gap {gap:.2} > bound {bound:.2} (D={d}, T={t_overrun:.1}, τ={})",
+                    class.gpu_warm_s
+                ));
+            }
+        }
+        Ok(())
+    });
+}
