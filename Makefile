@@ -1,0 +1,19 @@
+# Convenience targets; see ROADMAP.md for the tier-1 verify.
+
+.PHONY: check test bench-perf artifacts
+
+# Build + test + clippy-clean (the full local gate).
+check:
+	bash scripts/check.sh
+
+test:
+	cargo test -q
+
+# Regenerate the §Perf hot-path numbers and BENCH_perf.json.
+bench-perf:
+	cargo bench --bench perf_hot_paths
+
+# AOT-lower the python/JAX function bodies to HLO artifacts where the
+# rust runtime (rust/artifacts/) looks for them.
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../rust/artifacts

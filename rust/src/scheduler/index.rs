@@ -1,0 +1,173 @@
+//! Incremental index structures backing the O(log n) dispatch path of
+//! [`super::MqfqSticky`] (see the "Dispatch-path complexity" section of
+//! the [`super::mqfq`] module docs).
+//!
+//! All three structures follow the *lazy invalidation* discipline: an
+//! index entry is a snapshot `(key, flow)` pushed when the flow's key
+//! changed, and it is validated against the flow's live state only when
+//! it surfaces at the top of its heap. Stale entries are discarded on
+//! pop, so every entry is touched O(1) times and each enqueue/dispatch/
+//! complete pays O(log n) amortized instead of the O(n) full scans the
+//! naive Algorithm-1 transliteration needs per decision.
+
+use std::cmp::Ordering;
+
+/// `f64` with a total order (via [`f64::total_cmp`]) so virtual times
+/// can key a [`std::collections::BinaryHeap`]. VTs are always finite,
+/// so the NaN corner of the total order is never exercised.
+#[derive(Debug, Clone, Copy)]
+pub struct OrdF64(pub f64);
+
+impl PartialEq for OrdF64 {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for OrdF64 {}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// A dense set over a fixed universe `0..n` with O(1) insert, remove,
+/// membership, and allocation-free iteration — the eligible-flow index.
+/// Iteration order is arbitrary (swap-remove), so consumers must pick by
+/// a total order that includes the element id as a tiebreak.
+#[derive(Debug, Clone)]
+pub struct DenseSet {
+    items: Vec<u32>,
+    /// Position of each element in `items`, or `ABSENT`.
+    pos: Vec<u32>,
+}
+
+const ABSENT: u32 = u32::MAX;
+
+impl DenseSet {
+    pub fn new(universe: usize) -> Self {
+        debug_assert!(universe < ABSENT as usize);
+        Self {
+            items: Vec::new(),
+            pos: vec![ABSENT; universe],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn contains(&self, x: u32) -> bool {
+        self.pos[x as usize] != ABSENT
+    }
+
+    /// Insert `x`; returns false if it was already present.
+    pub fn insert(&mut self, x: u32) -> bool {
+        if self.contains(x) {
+            return false;
+        }
+        self.pos[x as usize] = self.items.len() as u32;
+        self.items.push(x);
+        true
+    }
+
+    /// Remove `x` (swap-remove); returns false if it was absent.
+    pub fn remove(&mut self, x: u32) -> bool {
+        let p = self.pos[x as usize];
+        if p == ABSENT {
+            return false;
+        }
+        self.pos[x as usize] = ABSENT;
+        let last = self.items.pop().expect("non-empty: x was present");
+        if last != x {
+            self.items[p as usize] = last;
+            self.pos[last as usize] = p;
+        }
+        true
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = u32> + '_ {
+        self.items.iter().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    #[test]
+    fn ordf64_total_order() {
+        let mut xs = [OrdF64(2.0), OrdF64(-1.0), OrdF64(0.5), OrdF64(0.0)];
+        xs.sort();
+        let got: Vec<f64> = xs.iter().map(|x| x.0).collect();
+        assert_eq!(got, vec![-1.0, 0.0, 0.5, 2.0]);
+        assert_eq!(OrdF64(1.5), OrdF64(1.5));
+        assert!(OrdF64(-0.0) < OrdF64(0.0)); // total order distinguishes zeros
+    }
+
+    #[test]
+    fn ordf64_min_heap_pops_in_vt_order() {
+        let mut h: BinaryHeap<Reverse<(OrdF64, u32)>> = BinaryHeap::new();
+        for (vt, id) in [(3.0, 0u32), (1.0, 1), (2.0, 2)] {
+            h.push(Reverse((OrdF64(vt), id)));
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| h.pop().map(|Reverse((_, i))| i)).collect();
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn dense_set_insert_remove_contains() {
+        let mut s = DenseSet::new(8);
+        assert!(s.is_empty());
+        assert!(s.insert(3));
+        assert!(s.insert(5));
+        assert!(!s.insert(3), "duplicate insert must be a no-op");
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(3) && s.contains(5) && !s.contains(0));
+        assert!(s.remove(3));
+        assert!(!s.remove(3), "double remove must be a no-op");
+        assert!(!s.contains(3) && s.contains(5));
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn dense_set_swap_remove_keeps_iteration_consistent() {
+        let mut s = DenseSet::new(16);
+        for x in 0..10u32 {
+            s.insert(x);
+        }
+        for x in [0u32, 9, 4, 7] {
+            s.remove(x);
+        }
+        let mut got: Vec<u32> = s.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2, 3, 5, 6, 8]);
+        // Every surviving element is still found via contains().
+        for &x in &got {
+            assert!(s.contains(x));
+        }
+    }
+
+    #[test]
+    fn dense_set_remove_last_element() {
+        let mut s = DenseSet::new(4);
+        s.insert(1);
+        s.insert(2);
+        assert!(s.remove(2)); // `2` sits at the tail: pop-only path
+        assert!(s.contains(1));
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![1]);
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod dtokens;
 pub mod flowq;
+pub mod index;
 pub mod mqfq;
 pub mod policies;
 
@@ -48,7 +49,10 @@ pub trait Policy: Send {
     /// An invocation of `func` finished after `service` on device.
     fn on_complete(&mut self, func: FuncId, service: DurNanos, now: Nanos);
 
-    /// Total queued (not yet dispatched) invocations.
+    /// Total queued (not yet dispatched) invocations. The sim engine and
+    /// `plane.try_dispatch` consult this on every event, so every
+    /// implementation keeps it O(1) (a counter, or a single queue's
+    /// `len()`).
     fn pending(&self) -> usize;
 
     /// Queue-state transitions since the last call (drained).

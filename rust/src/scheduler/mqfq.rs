@@ -20,10 +20,48 @@
 //! Fairness (Eq. 1): because eligible flows always satisfy
 //! `VT < Global_VT + T`, MQFQ-Sticky's dispatch choices are a subset of
 //! MQFQ's, retaining its bound |S_i/w_i − S_j/w_j| ≤ (D−1)(2T + τ_i − τ_j).
+//!
+//! ## Dispatch-path complexity
+//!
+//! A dispatch decision fires every time a D-token frees; at provider
+//! scale the registered-function universe is large (thousands) while the
+//! *backlogged* subset is sparse (the Azure-trace shape), so the hot
+//! path must not touch every registered flow. This implementation keeps
+//! incremental indexes ([`super::index`]) instead of per-decision full
+//! scans:
+//!
+//! * **Global_VT** — a lazy min-heap over backlogged flows' VT
+//!   snapshots, refreshed in O(log n) amortized on enqueue/dispatch; it
+//!   replaces the naive two-full-scans-per-dispatch recompute, and makes
+//!   the enqueue catch-up read a *fresh* Global_VT (the naive cached
+//!   value could be stale-low after completions, under-catching-up
+//!   rejoining flows).
+//! * **TTL expiry** — a deadline heap of per-flow keep-alive expiries,
+//!   armed when a flow goes idle; expiry costs O(log n) *at expiry
+//!   time* instead of an O(n) sweep per decision (the Ilúvatar
+//!   timer-wheel idea).
+//! * **Eligible set** — a dense O(1) index of Active ∧ non-empty ∧
+//!   within-T flows, plus a lazily-invalidated min-heap of throttled
+//!   flows keyed by VT that re-admits them as Global_VT advances; the
+//!   sticky longest-queue/least-in-flight pick scans only the E
+//!   currently-eligible flows, with no candidate `Vec` allocation.
+//! * **pending()** — an O(1) counter maintained on enqueue/pop.
+//!
+//! Net: one decision costs O(E + log n) amortized (E = eligible flows;
+//! E ≪ n under sparse activity) versus O(n) for the naive Algorithm-1
+//! transliteration. The naive version is kept as
+//! [`reference::NaiveMqfq`] — the property-test oracle
+//! (`prop_indexed_matches_naive_reference` checks dispatch-sequence,
+//! VT, pending, and state-change-stream equality over randomized Zipf
+//! traces) and the perf-harness baseline recorded in `BENCH_perf.json`.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 use crate::types::{secs, to_secs, DurNanos, FuncId, Nanos};
 
 use super::flowq::{FlowQueue, QState};
+use super::index::{DenseSet, OrdF64};
 use super::{Invocation, Policy, PolicyCtx};
 
 /// Tunables (Table 2) + the ablation switches of §6.4.
@@ -57,13 +95,40 @@ impl Default for MqfqConfig {
     }
 }
 
-/// The MQFQ-Sticky policy over a fixed set of registered functions.
+/// The MQFQ-Sticky policy over a fixed set of registered functions,
+/// built around incremental indexes (see the module docs' complexity
+/// section). Behaviorally equivalent to [`reference::NaiveMqfq`].
 pub struct MqfqSticky {
     cfg: MqfqConfig,
     flows: Vec<FlowQueue>,
     changes: Vec<(FuncId, QState)>,
-    /// Cached Global_VT (recomputed each dispatch round).
+    /// Cached Global_VT, advanced lazily via `vt_heap` (monotone
+    /// non-decreasing; holds its last value while nothing is backlogged,
+    /// like the naive recompute).
     global_vt: f64,
+    /// Total queued (not yet dispatched) invocations — O(1) `pending()`.
+    queued: usize,
+    /// Lazy min-heap of (VT, flow) snapshots over backlogged flows; the
+    /// top valid entry is `min VT over backlogged` (Algorithm 1 line 2).
+    vt_heap: BinaryHeap<Reverse<(OrdF64, u32)>>,
+    /// Deadline heap of keep-alive expiries, armed when a flow goes idle
+    /// (empty, nothing in flight). TTL inputs are frozen while idle, so
+    /// the armed deadline stays exact; entries from superseded idle
+    /// periods are discarded lazily.
+    ttl_heap: BinaryHeap<Reverse<(Nanos, u32)>>,
+    /// Eligible flows: Active ∧ non-empty ∧ within the over-run bound.
+    eligible: DenseSet,
+    /// Flows past the over-run bound, keyed by VT: re-admitted (and
+    /// flipped back to Active) once Global_VT catches up. Also carries
+    /// *empty* over-run flows so their Throttled→Active flip matches the
+    /// naive per-dispatch sweep. Lazily invalidated.
+    throttled: BinaryHeap<Reverse<(OrdF64, u32)>>,
+    /// Flows whose state must be re-derived at the next dispatch (the
+    /// one-shot stand-in for the naive all-flows UPDATE_STATE sweep:
+    /// only flows whose inputs changed since the last decision can
+    /// transition, and all such flows are recorded here or covered by
+    /// the heaps above).
+    reclass: Vec<u32>,
 }
 
 impl MqfqSticky {
@@ -73,6 +138,12 @@ impl MqfqSticky {
             flows: (0..n_funcs).map(|i| FlowQueue::new(FuncId(i as u32))).collect(),
             changes: Vec::new(),
             global_vt: 0.0,
+            queued: 0,
+            vt_heap: BinaryHeap::new(),
+            ttl_heap: BinaryHeap::new(),
+            eligible: DenseSet::new(n_funcs),
+            throttled: BinaryHeap::new(),
+            reclass: Vec::new(),
         }
     }
 
@@ -103,49 +174,134 @@ impl MqfqSticky {
         }
     }
 
-    /// `Global_VT ← min over backlogged flows` (Algorithm 1 line 2).
-    ///
     /// Backlogged = has queued or in-flight work. Empty *Active* queues
     /// (anticipatory keep-alive) deliberately do NOT anchor Global_VT:
     /// anticipation preserves a flow's *memory locality* (containers,
     /// device regions — §4.3), not a service reservation. Letting an
     /// idle flow hold the global minimum would throttle every busy flow
     /// after T seconds of over-run and idle the GPU for up to the TTL.
-    fn recompute_global_vt(&mut self) {
-        let min = self
-            .flows
-            .iter()
-            .filter(|f| !f.is_empty() || f.in_flight > 0)
-            .map(|f| f.vt)
-            .fold(f64::INFINITY, f64::min);
-        if min.is_finite() {
-            self.global_vt = min;
+    fn is_backlogged(f: &FlowQueue) -> bool {
+        !f.is_empty() || f.in_flight > 0
+    }
+
+    /// The naive UPDATE_STATE throttle predicate — kept verbatim so the
+    /// indexed path is bit-for-bit equivalent to the reference.
+    fn over_run(vt: f64, global: f64, t: f64) -> bool {
+        vt - global > t
+    }
+
+    /// Exclusion from the candidate set (Algorithm 1 line 6): throttled
+    /// state *or* past the non-strict dispatch filter. The two float
+    /// comparisons are not identical in rounding corners, so eligibility
+    /// applies both, exactly as the naive filter does.
+    fn ineligible(vt: f64, global: f64, t: f64) -> bool {
+        Self::over_run(vt, global, t) || vt > global + t
+    }
+
+    /// `Global_VT ← min over backlogged flows` (Algorithm 1 line 2),
+    /// incrementally: pop stale snapshots until the top entry matches a
+    /// live backlogged flow. Every backlogged flow always has a snapshot
+    /// of its current VT in the heap (pushed on rejoin and on each
+    /// dispatch), so the top valid entry *is* the minimum. Holds the
+    /// cached value when nothing is backlogged.
+    fn refresh_global_vt(&mut self) {
+        while let Some(&Reverse((OrdF64(vt), idx))) = self.vt_heap.peek() {
+            let f = &self.flows[idx as usize];
+            if Self::is_backlogged(f) && f.vt.to_bits() == vt.to_bits() {
+                if vt > self.global_vt {
+                    self.global_vt = vt;
+                }
+                return;
+            }
+            self.vt_heap.pop();
         }
     }
 
-    /// Algorithm 1 UPDATE_STATE: expire empty queues past their TTL,
-    /// throttle over-run queues, activate the rest.
-    fn update_state(&mut self, idx: usize, now: Nanos) {
-        let global = self.global_vt;
-        let ttl = self.ttl(&self.flows[idx]);
-        let t = self.cfg.t;
-        let flow = &mut self.flows[idx];
-        if flow.state == QState::Inactive {
-            return; // reactivated only by an arrival
-        }
-        if flow.is_empty() && flow.in_flight == 0 {
-            if now.saturating_sub(flow.last_exec) >= ttl {
-                Self::set_state(flow, QState::Inactive, &mut self.changes);
-                return;
+    /// Pop every due keep-alive deadline and expire the flows that are
+    /// still idle — the indexed form of the naive sweep's
+    /// `empty ∧ idle ∧ now − last_exec ≥ TTL → Inactive` branch.
+    fn expire_due(&mut self, now: Nanos) {
+        while let Some(&Reverse((at, idx))) = self.ttl_heap.peek() {
+            if at > now {
+                break;
             }
-            // Anticipatory: stay Active while within the grace period.
-            Self::set_state(flow, QState::Active, &mut self.changes);
+            self.ttl_heap.pop();
+            let i = idx as usize;
+            let f = &self.flows[i];
+            // Entries are snapshots: the flow must still be idle and this
+            // idle period's deadline must actually have passed (stale
+            // entries from superseded idle periods are simply dropped —
+            // the current period pushed its own entry when it began).
+            if f.state == QState::Inactive || Self::is_backlogged(f) {
+                continue;
+            }
+            let due = f.last_exec.saturating_add(self.ttl(f));
+            if due <= now {
+                Self::set_state(&mut self.flows[i], QState::Inactive, &mut self.changes);
+            }
+        }
+    }
+
+    /// Re-admit throttled flows whose VT fell within the over-run bound
+    /// as Global_VT advanced (monotonically), flipping them back to
+    /// Active — the indexed form of the naive sweep's un-throttle.
+    /// Heap order is VT order and eligibility is downward-closed in VT,
+    /// so popping stops at the first beyond-bound entry.
+    fn admit_unthrottled(&mut self) {
+        let global = self.global_vt;
+        let t = self.cfg.t;
+        while let Some(&Reverse((OrdF64(vt), idx))) = self.throttled.peek() {
+            if Self::ineligible(vt, global, t) {
+                break;
+            }
+            self.throttled.pop();
+            let i = idx as usize;
+            let stale = self.flows[i].vt.to_bits() != vt.to_bits()
+                || self.flows[i].state == QState::Inactive
+                || self.eligible.contains(idx);
+            if stale {
+                continue;
+            }
+            Self::set_state(&mut self.flows[i], QState::Active, &mut self.changes);
+            if !self.flows[i].is_empty() {
+                self.eligible.insert(idx);
+            }
+        }
+    }
+
+    /// One-shot per-flow state re-derivation — exactly the naive
+    /// UPDATE_STATE body, applied only to flows whose inputs changed
+    /// since the last decision.
+    fn apply_reclass(&mut self, now: Nanos) {
+        if self.reclass.is_empty() {
             return;
         }
-        if flow.vt - global > t {
-            Self::set_state(flow, QState::Throttled, &mut self.changes);
-        } else {
-            Self::set_state(flow, QState::Active, &mut self.changes);
+        let global = self.global_vt;
+        let t = self.cfg.t;
+        let pending = std::mem::take(&mut self.reclass);
+        for idx in pending {
+            let i = idx as usize;
+            if self.flows[i].state == QState::Inactive {
+                continue; // reactivated only by an arrival
+            }
+            if self.flows[i].is_empty() && self.flows[i].in_flight == 0 {
+                let ttl = self.ttl(&self.flows[i]);
+                let f = &mut self.flows[i];
+                if now.saturating_sub(f.last_exec) >= ttl {
+                    Self::set_state(f, QState::Inactive, &mut self.changes);
+                } else {
+                    // Anticipatory: stay Active while within the grace
+                    // period.
+                    Self::set_state(f, QState::Active, &mut self.changes);
+                }
+                continue;
+            }
+            let f = &mut self.flows[i];
+            if Self::over_run(f.vt, global, t) {
+                Self::set_state(f, QState::Throttled, &mut self.changes);
+            } else {
+                Self::set_state(f, QState::Active, &mut self.changes);
+            }
         }
     }
 }
@@ -157,97 +313,139 @@ impl Policy for MqfqSticky {
 
     fn enqueue(&mut self, inv: Invocation, now: Nanos) {
         let idx = inv.func.0 as usize;
-        // A flow rejoining the backlogged set starts at the current
-        // Global_VT — it gets no credit for its idle past (standard
-        // start-time fair queueing). This applies whether it idled as
-        // Inactive or as empty-Active (anticipation preserves memory
-        // locality, not service credit).
-        if self.flows[idx].is_empty() && self.flows[idx].in_flight == 0 {
+        let was_empty = self.flows[idx].is_empty();
+        if was_empty && self.flows[idx].in_flight == 0 {
+            // A flow rejoining the backlogged set starts at the current
+            // Global_VT — it gets no credit for its idle past (standard
+            // start-time fair queueing). This applies whether it idled
+            // as Inactive or as empty-Active (anticipation preserves
+            // memory locality, not service credit). Refresh first: the
+            // cached Global_VT can be stale-low after completions
+            // removed its anchor flow from the backlogged set.
+            self.refresh_global_vt();
             let catch_up = self.global_vt.max(self.flows[idx].vt);
             let flow = &mut self.flows[idx];
             flow.vt = catch_up;
             Self::set_state(flow, QState::Active, &mut self.changes);
+            self.vt_heap.push(Reverse((OrdF64(catch_up), inv.func.0)));
         }
         self.flows[idx].push(inv, now);
+        self.queued += 1;
+        if was_empty {
+            // Newly non-empty: index into the candidate structures and
+            // let the next decision re-derive its state like the naive
+            // sweep would.
+            let vt = self.flows[idx].vt;
+            if Self::ineligible(vt, self.global_vt, self.cfg.t) {
+                self.throttled.push(Reverse((OrdF64(vt), inv.func.0)));
+            } else {
+                self.eligible.insert(inv.func.0);
+            }
+            self.reclass.push(inv.func.0);
+        }
     }
 
-    /// Algorithm 1 DISPATCH.
+    /// Algorithm 1 DISPATCH, over the incremental indexes.
     fn dispatch(&mut self, now: Nanos, ctx: &PolicyCtx) -> Option<Invocation> {
-        self.recompute_global_vt();
-        for idx in 0..self.flows.len() {
-            self.update_state(idx, now);
-        }
-        let global = self.global_vt;
-        let t = self.cfg.t;
+        // The naive version recomputes Global_VT and sweeps UPDATE_STATE
+        // over every flow here; the indexed equivalents touch only flows
+        // whose answer can have changed.
+        self.refresh_global_vt();
+        self.expire_due(now);
+        self.admit_unthrottled();
+        self.apply_reclass(now);
 
-        // Line 6: candidate filter. Non-strict: at T=0 the minimum-VT
-        // queue (vt == Global_VT) must stay eligible or classic SFQ
-        // would deadlock.
-        let cand: Vec<usize> = (0..self.flows.len())
-            .filter(|&i| {
-                let f = &self.flows[i];
-                f.state == QState::Active && !f.is_empty() && f.vt <= global + t
-            })
-            .collect();
-        if cand.is_empty() {
-            return None;
-        }
-
-        let chosen = if self.cfg.sticky {
+        // Line 6 candidate set == `self.eligible` (non-strict: at T=0
+        // the minimum-VT queue must stay eligible or classic SFQ would
+        // deadlock). The pick keys embed the flow id, so the arbitrary
+        // dense-set iteration order cannot change the choice.
+        let pick = if self.cfg.sticky {
             // Lines 7–9: longest queue first; under device parallelism,
-            // prefer flows with the fewest in-flight invocations. Only
-            // the top candidate is dispatched, so a single-pass min
-            // selection replaces the full sort (perf: §Perf iteration 2,
-            // ~35% off the decision latency at 1000 flows).
+            // prefer flows with the fewest in-flight invocations.
             if ctx.d != 1 {
-                cand.into_iter()
-                    .min_by_key(|&i| {
-                        (
-                            ctx.in_flight[i],
-                            std::cmp::Reverse(self.flows[i].len()),
-                            i,
-                        )
-                    })
-                    .unwrap()
+                self.eligible.iter().min_by_key(|&i| {
+                    (
+                        ctx.in_flight[i as usize],
+                        Reverse(self.flows[i as usize].len()),
+                        i,
+                    )
+                })
             } else {
-                cand.into_iter()
-                    .min_by_key(|&i| (std::cmp::Reverse(self.flows[i].len()), i))
-                    .unwrap()
+                self.eligible
+                    .iter()
+                    .min_by_key(|&i| (Reverse(self.flows[i as usize].len()), i))
             }
         } else {
             // Original MQFQ: any eligible flow; lowest VT is the natural
             // (classic fair queueing) choice.
-            cand.into_iter()
-                .min_by(|&a, &b| {
-                    self.flows[a]
-                        .vt
-                        .partial_cmp(&self.flows[b].vt)
-                        .unwrap()
-                        .then(a.cmp(&b))
-                })
-                .unwrap()
+            self.eligible.iter().min_by(|&a, &b| {
+                self.flows[a as usize]
+                    .vt
+                    .partial_cmp(&self.flows[b as usize].vt)
+                    .expect("VTs are never NaN")
+                    .then(a.cmp(&b))
+            })
         };
+        let chosen = pick?;
+        let ci = chosen as usize;
 
         let tau = if self.cfg.vt_wall_time {
-            self.flows[chosen].avg_exec_s()
+            self.flows[ci].avg_exec_s()
         } else {
             1.0
         };
-        let inv = self.flows[chosen].pop_dispatch(tau, now);
-        // The dispatch may have pushed the flow over the throttle bound
-        // or emptied it; refresh its state (and Global_VT) eagerly so
-        // memory management reacts promptly (§4.3).
-        self.recompute_global_vt();
-        self.update_state(chosen, now);
+        let inv = self.flows[ci].pop_dispatch(tau, now);
+        self.queued -= 1;
+        let new_vt = self.flows[ci].vt;
+        self.vt_heap.push(Reverse((OrdF64(new_vt), chosen)));
+        // The dispatch may have advanced the global minimum, pushed the
+        // flow over the throttle bound, or emptied it; refresh eagerly
+        // so memory management reacts promptly (§4.3).
+        self.refresh_global_vt();
+        let global = self.global_vt;
+        let t = self.cfg.t;
+        let throttle = Self::over_run(new_vt, global, t);
+        {
+            // The chosen flow has in-flight work, so the naive eager
+            // UPDATE_STATE lands in its VT branch even if now empty.
+            let f = &mut self.flows[ci];
+            if throttle {
+                Self::set_state(f, QState::Throttled, &mut self.changes);
+            } else {
+                Self::set_state(f, QState::Active, &mut self.changes);
+            }
+        }
+        if self.flows[ci].is_empty() || Self::ineligible(new_vt, global, t) {
+            self.eligible.remove(chosen);
+            if Self::ineligible(new_vt, global, t) {
+                // Queue for re-admission (state flip + candidate re-entry
+                // if still non-empty) once Global_VT catches up.
+                self.throttled.push(Reverse((OrdF64(new_vt), chosen)));
+            }
+        }
         inv
     }
 
     fn on_complete(&mut self, func: FuncId, service: DurNanos, now: Nanos) {
-        self.flows[func.0 as usize].complete(to_secs(service), now);
+        let i = func.0 as usize;
+        self.flows[i].complete(to_secs(service), now);
+        let f = &self.flows[i];
+        if f.is_empty() && f.in_flight == 0 {
+            // The flow went idle: arm its keep-alive deadline. Its TTL
+            // inputs (last_exec, mean IAT) are frozen until the next
+            // arrival or dispatch, so this deadline is exact.
+            let due = f.last_exec.saturating_add(self.ttl(f));
+            self.ttl_heap.push(Reverse((due, func.0)));
+            if f.state == QState::Throttled {
+                // The naive sweep flips idle Throttled flows to Active
+                // (anticipatory) at the next decision regardless of VT.
+                self.reclass.push(func.0);
+            }
+        }
     }
 
     fn pending(&self) -> usize {
-        self.flows.iter().map(|f| f.len()).sum()
+        self.queued
     }
 
     fn drain_state_changes(&mut self) -> Vec<(FuncId, QState)> {
@@ -259,11 +457,184 @@ impl Policy for MqfqSticky {
     }
 }
 
+pub mod reference {
+    //! The naive O(n)-per-decision transliteration of Algorithm 1 — the
+    //! original implementation, kept as the behavioral oracle for the
+    //! indexed [`MqfqSticky`]: the property suite checks dispatch-
+    //! sequence and VT equality against it over randomized traces, and
+    //! the perf harness benches it as the pre-refactor baseline for
+    //! `BENCH_perf.json`. Not for production use.
+    //!
+    //! One deliberate difference from the historical code: the enqueue
+    //! catch-up recomputes Global_VT first (the historical version read
+    //! a value cached at the previous dispatch, which could be stale-low
+    //! after completions and under-catch-up a rejoining flow).
+
+    use super::*;
+
+    /// Full-scan MQFQ-Sticky: O(registered flows) per decision.
+    pub struct NaiveMqfq {
+        cfg: MqfqConfig,
+        flows: Vec<FlowQueue>,
+        changes: Vec<(FuncId, QState)>,
+        global_vt: f64,
+    }
+
+    impl NaiveMqfq {
+        pub fn new(n_funcs: usize, cfg: MqfqConfig) -> Self {
+            Self {
+                cfg,
+                flows: (0..n_funcs)
+                    .map(|i| FlowQueue::new(FuncId(i as u32)))
+                    .collect(),
+                changes: Vec::new(),
+                global_vt: 0.0,
+            }
+        }
+
+        pub fn global_vt(&self) -> f64 {
+            self.global_vt
+        }
+
+        fn ttl(&self, flow: &FlowQueue) -> DurNanos {
+            match self.cfg.fixed_ttl_s {
+                Some(s) => secs(s),
+                None => secs(self.cfg.ttl_alpha * flow.mean_iat_s()),
+            }
+        }
+
+        /// `Global_VT ← min over backlogged flows` by full scan.
+        fn recompute_global_vt(&mut self) {
+            let min = self
+                .flows
+                .iter()
+                .filter(|f| !f.is_empty() || f.in_flight > 0)
+                .map(|f| f.vt)
+                .fold(f64::INFINITY, f64::min);
+            if min.is_finite() {
+                self.global_vt = min;
+            }
+        }
+
+        /// Algorithm 1 UPDATE_STATE for one flow.
+        fn update_state(&mut self, idx: usize, now: Nanos) {
+            let global = self.global_vt;
+            let ttl = self.ttl(&self.flows[idx]);
+            let t = self.cfg.t;
+            let flow = &mut self.flows[idx];
+            if flow.state == QState::Inactive {
+                return; // reactivated only by an arrival
+            }
+            if flow.is_empty() && flow.in_flight == 0 {
+                if now.saturating_sub(flow.last_exec) >= ttl {
+                    MqfqSticky::set_state(flow, QState::Inactive, &mut self.changes);
+                    return;
+                }
+                MqfqSticky::set_state(flow, QState::Active, &mut self.changes);
+                return;
+            }
+            if flow.vt - global > t {
+                MqfqSticky::set_state(flow, QState::Throttled, &mut self.changes);
+            } else {
+                MqfqSticky::set_state(flow, QState::Active, &mut self.changes);
+            }
+        }
+    }
+
+    impl Policy for NaiveMqfq {
+        fn name(&self) -> &'static str {
+            "mqfq-sticky-naive"
+        }
+
+        fn enqueue(&mut self, inv: Invocation, now: Nanos) {
+            let idx = inv.func.0 as usize;
+            if self.flows[idx].is_empty() && self.flows[idx].in_flight == 0 {
+                self.recompute_global_vt();
+                let catch_up = self.global_vt.max(self.flows[idx].vt);
+                let flow = &mut self.flows[idx];
+                flow.vt = catch_up;
+                MqfqSticky::set_state(flow, QState::Active, &mut self.changes);
+            }
+            self.flows[idx].push(inv, now);
+        }
+
+        // The candidate `Vec` allocation is part of the historical
+        // per-dispatch cost this baseline exists to measure (the index
+        // rebuild eliminates it), so it is kept deliberately.
+        #[allow(clippy::needless_collect)]
+        fn dispatch(&mut self, now: Nanos, ctx: &PolicyCtx) -> Option<Invocation> {
+            self.recompute_global_vt();
+            for idx in 0..self.flows.len() {
+                self.update_state(idx, now);
+            }
+            let global = self.global_vt;
+            let t = self.cfg.t;
+
+            let cand: Vec<usize> = (0..self.flows.len())
+                .filter(|&i| {
+                    let f = &self.flows[i];
+                    f.state == QState::Active && !f.is_empty() && f.vt <= global + t
+                })
+                .collect();
+            if cand.is_empty() {
+                return None;
+            }
+            let pick = if self.cfg.sticky {
+                if ctx.d != 1 {
+                    cand.into_iter().min_by_key(|&i| {
+                        (ctx.in_flight[i], Reverse(self.flows[i].len()), i)
+                    })
+                } else {
+                    cand.into_iter()
+                        .min_by_key(|&i| (Reverse(self.flows[i].len()), i))
+                }
+            } else {
+                cand.into_iter().min_by(|&a, &b| {
+                    self.flows[a]
+                        .vt
+                        .partial_cmp(&self.flows[b].vt)
+                        .expect("VTs are never NaN")
+                        .then(a.cmp(&b))
+                })
+            };
+            let chosen = pick?;
+
+            let tau = if self.cfg.vt_wall_time {
+                self.flows[chosen].avg_exec_s()
+            } else {
+                1.0
+            };
+            let inv = self.flows[chosen].pop_dispatch(tau, now);
+            self.recompute_global_vt();
+            self.update_state(chosen, now);
+            inv
+        }
+
+        fn on_complete(&mut self, func: FuncId, service: DurNanos, now: Nanos) {
+            self.flows[func.0 as usize].complete(to_secs(service), now);
+        }
+
+        fn pending(&self) -> usize {
+            self.flows.iter().map(|f| f.len()).sum()
+        }
+
+        fn drain_state_changes(&mut self) -> Vec<(FuncId, QState)> {
+            std::mem::take(&mut self.changes)
+        }
+
+        fn queue_vt(&self, func: FuncId) -> Option<f64> {
+            Some(self.flows[func.0 as usize].vt)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::scheduler::testutil::enqueue_n;
     use crate::types::{InvocationId, SEC};
+    use crate::util::prop::assert_prop;
+    use crate::util::rng::zipf_weights;
 
     fn ctx<'a>(in_flight: &'a [usize], d: usize) -> PolicyCtx<'a> {
         PolicyCtx { in_flight, d }
@@ -453,6 +824,34 @@ mod tests {
     }
 
     #[test]
+    fn rejoining_flow_catches_up_to_fresh_global_vt() {
+        // Regression for the stale-catch-up bug: the pre-index
+        // implementation read a Global_VT cached at the *previous
+        // dispatch* during the enqueue catch-up. A completion between
+        // that dispatch and the enqueue can remove the minimum-VT flow
+        // from the backlogged set, so the cached value is stale-low and
+        // the rejoining flow under-catches-up (gaining unearned credit).
+        let mut p = mk(3);
+        let inf = [0usize, 0, 0];
+        // Flow 0: one invocation; dispatching it advances flow 0 to VT=1
+        // and leaves it backlogged (in flight), anchoring Global_VT at 1.
+        enqueue_n(&mut p, 0, 1, 0, 1);
+        assert_eq!(p.dispatch(0, &ctx(&inf, 2)).unwrap().func, FuncId(0));
+        // Flow 1 joins at Global_VT=1 and runs ahead to VT=3.
+        enqueue_n(&mut p, 1, 3, 0, 10);
+        assert_eq!(p.dispatch(0, &ctx(&inf, 2)).unwrap().func, FuncId(1));
+        assert_eq!(p.dispatch(0, &ctx(&inf, 2)).unwrap().func, FuncId(1));
+        // Flow 0 completes: the only backlogged flow is now flow 1
+        // (VT=3, one invocation still queued), so the true Global_VT
+        // is 3 — but no dispatch has refreshed any cache since.
+        p.on_complete(FuncId(0), SEC, 0);
+        // Flow 2 rejoins from idle; it must start at 3, not the stale 1.
+        enqueue_n(&mut p, 2, 1, 0, 100);
+        let vt2 = p.queue_vt(FuncId(2)).unwrap();
+        assert!(vt2 >= 3.0 - 1e-9, "under-catch-up: joined at VT {vt2}");
+    }
+
+    #[test]
     fn non_sticky_picks_lowest_vt() {
         let cfg = MqfqConfig {
             sticky: false,
@@ -485,5 +884,154 @@ mod tests {
         let mut p = mk(3);
         let inf = [0usize, 0, 0];
         assert!(p.dispatch(0, &ctx(&inf, 2)).is_none());
+    }
+
+    /// The tentpole guarantee: over randomized Zipf-popularity traces of
+    /// interleaved arrivals, dispatches, and completions, the indexed
+    /// implementation produces the *identical* dispatch sequence, VTs,
+    /// Global_VT, pending count, and per-op state-change stream as the
+    /// naive full-scan reference — i.e. the O(E + log n) rewrite
+    /// provably preserves Algorithm 1 and the memory-manager interface.
+    #[test]
+    fn prop_indexed_matches_naive_reference() {
+        assert_prop("indexed-vs-naive", 80, |g| {
+            let n_flows = g.int(1, 16);
+            let cfg = MqfqConfig {
+                t: g.f64(0.0, 12.0),
+                ttl_alpha: g.f64(0.0, 3.0),
+                fixed_ttl_s: if g.bool(0.3) {
+                    Some(g.f64(0.0, 4.0))
+                } else {
+                    None
+                },
+                vt_wall_time: g.bool(0.8),
+                sticky: g.bool(0.8),
+            };
+            let d = g.int(1, 4);
+            let mut fast = MqfqSticky::new(n_flows, cfg.clone());
+            let mut oracle = reference::NaiveMqfq::new(n_flows, cfg);
+            let weights = zipf_weights(n_flows, 1.2);
+            let pick_func = |g: &mut crate::util::prop::Gen| {
+                let u = g.f64(0.0, 1.0);
+                let mut acc = 0.0;
+                for (i, w) in weights.iter().enumerate() {
+                    acc += w;
+                    if u < acc {
+                        return FuncId(i as u32);
+                    }
+                }
+                FuncId((n_flows - 1) as u32)
+            };
+
+            // The Active/Throttled/Inactive stream drives the memory
+            // manager (plane::apply_state_changes), so it must match
+            // too. Compared as a sorted multiset: transitions for
+            // *different* flows may interleave differently (the naive
+            // sweep walks flows in index order; the indexed path drains
+            // its heaps), which the plane does not depend on.
+            fn drained(p: &mut dyn Policy) -> Vec<(u32, u8)> {
+                let mut v: Vec<(u32, u8)> = p
+                    .drain_state_changes()
+                    .into_iter()
+                    .map(|(f, s)| {
+                        (
+                            f.0,
+                            match s {
+                                QState::Active => 0,
+                                QState::Throttled => 1,
+                                QState::Inactive => 2,
+                            },
+                        )
+                    })
+                    .collect();
+                v.sort_unstable();
+                v
+            }
+
+            let mut now: Nanos = 0;
+            let mut id = 0u64;
+            let mut in_flight = vec![0usize; n_flows];
+            let mut outstanding: Vec<Invocation> = Vec::new();
+            let steps = g.int(10, 250);
+            for step in 0..steps {
+                now += secs(g.f64(0.0, 2.5));
+                match g.int(0, 2) {
+                    0 => {
+                        for _ in 0..g.int(1, 4) {
+                            let inv = Invocation {
+                                id: InvocationId(id),
+                                func: pick_func(g),
+                                arrived: now,
+                            };
+                            id += 1;
+                            fast.enqueue(inv, now);
+                            oracle.enqueue(inv, now);
+                        }
+                    }
+                    1 => {
+                        let c = ctx(&in_flight, d);
+                        let a = fast.dispatch(now, &c);
+                        let b = oracle.dispatch(now, &c);
+                        if a != b {
+                            return Err(format!(
+                                "step {step}: dispatch diverged: indexed={a:?} naive={b:?}"
+                            ));
+                        }
+                        if let Some(inv) = a {
+                            in_flight[inv.func.0 as usize] += 1;
+                            outstanding.push(inv);
+                        }
+                    }
+                    _ => {
+                        if !outstanding.is_empty() {
+                            let k = g.int(0, outstanding.len() - 1);
+                            let inv = outstanding.swap_remove(k);
+                            let svc = secs(g.f64(0.01, 4.0));
+                            fast.on_complete(inv.func, svc, now);
+                            oracle.on_complete(inv.func, svc, now);
+                            in_flight[inv.func.0 as usize] -= 1;
+                        }
+                    }
+                }
+                if fast.pending() != oracle.pending() {
+                    return Err(format!(
+                        "step {step}: pending diverged: {} vs {}",
+                        fast.pending(),
+                        oracle.pending()
+                    ));
+                }
+                let (ca, cb) = (drained(&mut fast), drained(&mut oracle));
+                if ca != cb {
+                    return Err(format!(
+                        "step {step}: state-change stream diverged: indexed={ca:?} naive={cb:?}"
+                    ));
+                }
+            }
+            for f in 0..n_flows {
+                let (a, b) = (
+                    fast.queue_vt(FuncId(f as u32)).unwrap(),
+                    oracle.queue_vt(FuncId(f as u32)).unwrap(),
+                );
+                if a != b {
+                    return Err(format!("flow {f}: final VT diverged: {a} vs {b}"));
+                }
+            }
+            // Equal up to laziness: the indexed cache refreshes on the
+            // next decision, so compare through one.
+            let c = ctx(&in_flight, d);
+            let a = fast.dispatch(now, &c);
+            let b = oracle.dispatch(now, &c);
+            if a != b {
+                return Err(format!("final dispatch diverged: {a:?} vs {b:?}"));
+            }
+            if fast.global_vt() != oracle.global_vt() {
+                return Err(format!(
+                    "Global_VT diverged: {} vs {}",
+                    fast.global_vt(),
+                    oracle.global_vt()
+                ));
+            }
+            Ok(())
+        });
     }
 }

@@ -16,6 +16,8 @@ pub struct BatchPolicy {
     /// a hot function from monopolizing the device forever).
     current: Option<(FuncId, usize)>,
     changes: Vec<(FuncId, QState)>,
+    /// Total queued invocations — keeps `pending()` O(1).
+    queued: usize,
 }
 
 impl BatchPolicy {
@@ -24,6 +26,7 @@ impl BatchPolicy {
             queues: (0..n_funcs).map(|_| VecDeque::new()).collect(),
             current: None,
             changes: Vec::new(),
+            queued: 0,
         }
     }
 
@@ -46,6 +49,7 @@ impl Policy for BatchPolicy {
     fn enqueue(&mut self, inv: Invocation, _now: Nanos) {
         self.changes.push((inv.func, QState::Active));
         self.queues[inv.func.0 as usize].push_back(inv);
+        self.queued += 1;
     }
 
     fn dispatch(&mut self, _now: Nanos, _ctx: &PolicyCtx) -> Option<Invocation> {
@@ -54,6 +58,7 @@ impl Policy for BatchPolicy {
             if remaining > 0 {
                 if let Some(inv) = self.queues[f.0 as usize].pop_front() {
                     self.current = Some((f, remaining - 1));
+                    self.queued -= 1;
                     return Some(inv);
                 }
             }
@@ -62,13 +67,15 @@ impl Policy for BatchPolicy {
         let f = self.oldest()?;
         let len = self.queues[f.0 as usize].len();
         self.current = Some((f, len.saturating_sub(1)));
-        self.queues[f.0 as usize].pop_front()
+        let inv = self.queues[f.0 as usize].pop_front();
+        self.queued -= usize::from(inv.is_some());
+        inv
     }
 
     fn on_complete(&mut self, _func: FuncId, _service: DurNanos, _now: Nanos) {}
 
     fn pending(&self) -> usize {
-        self.queues.iter().map(|q| q.len()).sum()
+        self.queued
     }
 
     fn drain_state_changes(&mut self) -> Vec<(FuncId, QState)> {

@@ -24,6 +24,8 @@ pub struct EevdfPolicy {
     avg_exec: Vec<Ema>,
     last_exec: Vec<Nanos>,
     changes: Vec<(FuncId, QState)>,
+    /// Total queued invocations — keeps `pending()` O(1).
+    queued: usize,
     /// Deadline bonus (seconds) for recently-executed (warm) functions.
     pub locality_bonus_s: f64,
     /// Recency window for the bonus.
@@ -38,6 +40,7 @@ impl EevdfPolicy {
             avg_exec: (0..n_funcs).map(|_| Ema::new(0.3)).collect(),
             last_exec: vec![0; n_funcs],
             changes: Vec::new(),
+            queued: 0,
             locality_bonus_s: 0.5,
             warm_window: 10 * SEC,
         }
@@ -72,6 +75,7 @@ impl Policy for EevdfPolicy {
             }
         }
         self.queues[i].push_back(inv);
+        self.queued += 1;
     }
 
     fn dispatch(&mut self, now: Nanos, _ctx: &PolicyCtx) -> Option<Invocation> {
@@ -87,7 +91,9 @@ impl Policy for EevdfPolicy {
             })?;
         self.vt[chosen] += self.tau(chosen);
         self.last_exec[chosen] = now;
-        self.queues[chosen].pop_front()
+        let inv = self.queues[chosen].pop_front();
+        self.queued -= usize::from(inv.is_some());
+        inv
     }
 
     fn on_complete(&mut self, func: FuncId, service: DurNanos, now: Nanos) {
@@ -97,7 +103,7 @@ impl Policy for EevdfPolicy {
     }
 
     fn pending(&self) -> usize {
-        self.queues.iter().map(|q| q.len()).sum()
+        self.queued
     }
 
     fn drain_state_changes(&mut self) -> Vec<(FuncId, QState)> {

@@ -41,6 +41,7 @@ impl Policy for FcfsPolicy {
     fn on_complete(&mut self, _func: FuncId, _service: DurNanos, _now: Nanos) {}
 
     fn pending(&self) -> usize {
+        // Single global queue: `VecDeque::len` is already O(1).
         self.queue.len()
     }
 

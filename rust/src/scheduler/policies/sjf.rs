@@ -23,6 +23,8 @@ pub struct PaellaSjf {
     /// Accrued GPU service per function (the fairness limiter state).
     service: Vec<f64>,
     changes: Vec<(FuncId, QState)>,
+    /// Total queued invocations — keeps `pending()` O(1).
+    queued: usize,
     /// A function may be at most this many seconds of service ahead of
     /// the least-served backlogged function before being deprioritized.
     pub fairness_slack_s: f64,
@@ -35,6 +37,7 @@ impl PaellaSjf {
             avg_exec: (0..n_funcs).map(|_| Ema::new(0.3)).collect(),
             service: vec![0.0; n_funcs],
             changes: Vec::new(),
+            queued: 0,
             fairness_slack_s: 30.0,
         }
     }
@@ -57,6 +60,7 @@ impl Policy for PaellaSjf {
     fn enqueue(&mut self, inv: Invocation, _now: Nanos) {
         self.changes.push((inv.func, QState::Active));
         self.queues[inv.func.0 as usize].push_back(inv);
+        self.queued += 1;
     }
 
     fn dispatch(&mut self, _now: Nanos, _ctx: &PolicyCtx) -> Option<Invocation> {
@@ -89,7 +93,9 @@ impl Policy for PaellaSjf {
                     .then(a.cmp(&b))
             })
             .unwrap();
-        self.queues[chosen].pop_front()
+        let inv = self.queues[chosen].pop_front();
+        self.queued -= usize::from(inv.is_some());
+        inv
     }
 
     fn on_complete(&mut self, func: FuncId, service: DurNanos, _now: Nanos) {
@@ -100,7 +106,7 @@ impl Policy for PaellaSjf {
     }
 
     fn pending(&self) -> usize {
-        self.queues.iter().map(|q| q.len()).sum()
+        self.queued
     }
 
     fn drain_state_changes(&mut self) -> Vec<(FuncId, QState)> {

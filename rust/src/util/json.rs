@@ -1,0 +1,168 @@
+//! Minimal JSON writer (serde is not in the offline vendor set) — used
+//! for machine-readable benchmark artifacts like `BENCH_perf.json` so
+//! the perf trajectory can be tracked across PRs.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A JSON value under construction. Numbers are split into integer and
+/// float variants so counters render without a fractional part.
+#[derive(Debug, Clone)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn str<S: Into<String>>(s: S) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Render with 2-space indentation and a trailing newline.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(i) => {
+                let _ = write!(out, "{i}");
+            }
+            Json::Num(x) => {
+                // JSON has no NaN/Infinity literals.
+                if x.is_finite() {
+                    let _ = write!(out, "{x}");
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(xs) => {
+                if xs.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent + 1);
+                    x.write(out, indent + 1);
+                }
+                newline_indent(out, indent);
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                if fields.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent + 1);
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write(out, indent + 1);
+                }
+                newline_indent(out, indent);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn newline_indent(out: &mut String, indent: usize) {
+    out.push('\n');
+    for _ in 0..indent {
+        out.push_str("  ");
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Write a rendered JSON document to `path`, creating parent dirs.
+pub fn write_file<P: AsRef<Path>>(path: P, value: &Json) -> std::io::Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, value.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_nested_documents() {
+        let doc = Json::Obj(vec![
+            ("name".into(), Json::str("perf")),
+            ("ok".into(), Json::Bool(true)),
+            ("events".into(), Json::Int(12000)),
+            ("mean_ns".into(), Json::Num(1234.5)),
+            (
+                "rows".into(),
+                Json::Arr(vec![Json::Int(1), Json::Int(2)]),
+            ),
+            ("empty".into(), Json::Arr(vec![])),
+        ]);
+        let got = doc.render();
+        assert!(got.contains("\"name\": \"perf\""));
+        assert!(got.contains("\"mean_ns\": 1234.5"));
+        assert!(got.contains("\"events\": 12000"));
+        assert!(got.contains("\"empty\": []"));
+        assert!(got.ends_with("}\n"));
+    }
+
+    #[test]
+    fn escapes_strings_and_maps_non_finite_to_null() {
+        let doc = Json::Obj(vec![
+            ("s".into(), Json::str("a\"b\\c\nd")),
+            ("nan".into(), Json::Num(f64::NAN)),
+        ]);
+        let got = doc.render();
+        assert!(got.contains(r#""a\"b\\c\nd""#));
+        assert!(got.contains("\"nan\": null"));
+    }
+
+    #[test]
+    fn write_file_creates_parents() {
+        let dir = std::env::temp_dir().join("mqfq_json_test");
+        let path = dir.join("sub").join("x.json");
+        write_file(&path, &Json::Obj(vec![("a".into(), Json::Int(1))])).unwrap();
+        let got = std::fs::read_to_string(&path).unwrap();
+        assert!(got.contains("\"a\": 1"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

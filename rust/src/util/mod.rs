@@ -2,6 +2,7 @@
 
 pub mod bench;
 pub mod csv;
+pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -187,6 +187,75 @@ fn prop_mqfq_overrun_bounded() {
     });
 }
 
+/// `Policy::pending()` is an O(1) counter in every policy; this checks
+/// the counter against externally-tracked conservation (enqueued −
+/// dispatched) through arbitrary interleavings of arrivals, dispatches,
+/// and completions, across all five policies.
+#[test]
+fn prop_pending_counter_is_conserved() {
+    assert_prop("pending-o1-conservation", 40, |g| {
+        let n_funcs = g.int(1, 10);
+        let kind = *g.choose(&[
+            PolicyKind::Fcfs,
+            PolicyKind::Batch,
+            PolicyKind::PaellaSjf,
+            PolicyKind::Eevdf,
+            PolicyKind::Sfq,
+            PolicyKind::Mqfq,
+        ]);
+        let d = g.int(1, 4);
+        let mut p = kind.build(n_funcs);
+        let mut in_flight = vec![0usize; n_funcs];
+        let mut outstanding: Vec<Invocation> = Vec::new();
+        let mut queued = 0usize;
+        let mut id = 0u64;
+        let mut now = 0u64;
+        for step in 0..g.int(5, 150) {
+            now += secs(g.f64(0.0, 2.0));
+            match g.int(0, 2) {
+                0 => {
+                    let inv = Invocation {
+                        id: InvocationId(id),
+                        func: FuncId(g.int(0, n_funcs - 1) as u32),
+                        arrived: now,
+                    };
+                    id += 1;
+                    p.enqueue(inv, now);
+                    queued += 1;
+                }
+                1 => {
+                    let ctx = PolicyCtx {
+                        in_flight: &in_flight,
+                        d,
+                    };
+                    if let Some(inv) = p.dispatch(now, &ctx) {
+                        queued -= 1;
+                        in_flight[inv.func.0 as usize] += 1;
+                        outstanding.push(inv);
+                    }
+                }
+                _ => {
+                    if !outstanding.is_empty() {
+                        let k = g.int(0, outstanding.len() - 1);
+                        let inv = outstanding.swap_remove(k);
+                        in_flight[inv.func.0 as usize] -= 1;
+                        p.on_complete(inv.func, secs(g.f64(0.01, 3.0)), now);
+                    }
+                }
+            }
+            if p.pending() != queued {
+                return Err(format!(
+                    "{} step {step}: pending()={} but {} queued",
+                    kind.name(),
+                    p.pending(),
+                    queued
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// FIFO within each flow: invocations of one function dispatch in
 /// arrival order under every policy.
 #[test]

@@ -1,0 +1,133 @@
+//! Offline stub of the `xla` (xla_extension / PJRT) bindings used by
+//! `mqfq::runtime`. The build container has no registry or native
+//! xla_extension, so this crate keeps the workspace compiling: client
+//! construction succeeds (loading is lazy), and every call that would
+//! touch a real artifact returns [`Error`] with a clear message. Swap in
+//! the real bindings (same API subset) to execute HLO artifacts.
+
+use std::fmt;
+
+/// Error type; formatted with `{:?}` by callers, like the real crate's.
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT backend unavailable (offline `xla` stub — swap in the real \
+         xla_extension bindings to execute artifacts)"
+    ))
+}
+
+/// An HLO module parsed from text. The stub never parses.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// A computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self
+    }
+}
+
+/// An addressable PJRT device.
+pub struct PjRtDevice;
+
+/// A device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// A host-side literal value.
+pub struct Literal;
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+/// The PJRT client. Construction succeeds — runtimes create the client
+/// eagerly but load artifacts lazily, so schedulers/sims/tests that
+/// never execute an artifact run entirely green on the stub.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    pub fn addressable_devices(&self) -> Vec<PjRtDevice> {
+        vec![PjRtDevice]
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_constructs_but_artifact_paths_error() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu-stub");
+        assert_eq!(c.addressable_devices().len(), 1);
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let e = c.compile(&XlaComputation::from_proto(&HloModuleProto)).unwrap_err();
+        assert!(format!("{e:?}").contains("stub"));
+    }
+}

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 gate + lints, from anywhere: build, test, clippy-clean.
+# Usage: scripts/check.sh  (or `make check`)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo clippy -- -D warnings =="
+cargo clippy --all-targets -- -D warnings
+
+echo "check: OK"
