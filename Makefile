@@ -1,6 +1,6 @@
 # Convenience targets; see ROADMAP.md for the tier-1 verify.
 
-.PHONY: check test bench-perf artifacts
+.PHONY: check test bench-perf bench-cluster artifacts
 
 # Build + test + clippy-clean (the full local gate).
 check:
@@ -12,6 +12,11 @@ test:
 # Regenerate the §Perf hot-path numbers and BENCH_perf.json.
 bench-perf:
 	cargo bench --bench perf_hot_paths
+
+# Regenerate the cluster scaling sweep and BENCH_cluster.json.
+# Compare against a previous run: scripts/bench_diff.sh OLD.json BENCH_cluster.json
+bench-cluster:
+	cargo bench --bench fig9_cluster_scaling
 
 # AOT-lower the python/JAX function bodies to HLO artifacts where the
 # rust runtime (rust/artifacts/) looks for them.

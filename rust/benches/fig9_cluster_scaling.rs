@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig9_cluster_scaling` — the cluster scaling sweep (shards × router).
+//! Thin wrapper over `mqfq::experiments::cluster::main` (also: `mqfq-sticky exp cluster`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::cluster::main();
+    println!("[bench fig9_cluster_scaling completed in {:.2?}]", t0.elapsed());
+}

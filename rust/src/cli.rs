@@ -4,11 +4,13 @@
 //! * `exp <name>|all` — run one (or every) paper experiment.
 //! * `trace gen` — generate a Zipfian or Azure-style trace file.
 //! * `replay` — replay a trace file through the control plane (sim).
+//! * `cluster` — replay through a sharded multi-server cluster.
 //! * `serve` — real-time serving over TCP, executing PJRT artifacts.
 //! * `validate` — golden-check every AOT artifact via PJRT.
 
 use std::collections::HashMap;
 
+use crate::cluster::{ClusterConfig, RouterKind};
 use crate::gpu::MultiplexMode;
 use crate::memory::MemPolicy;
 use crate::plane::PlaneConfig;
@@ -79,6 +81,10 @@ USAGE:
         [--policy fcfs|batch|sjf|eevdf|mqfq|sfq] [--d N] [--gpus N]
         [--mem stock-uvm|madvise|prefetch-only|prefetch+swap]
         [--mode plain|mps|mig:N] [--pool N] [--t SECS] [--alpha A]
+  mqfq-sticky cluster [--shards N] [--router rr|random|least|sticky]
+        [--load-factor F] [--seed K] [--trace FILE]
+        [--rate R/shard] [--funcs N] [--duration S]   (generated zipf)
+        [+ replay options]      sharded multi-server replay (sim)
   mqfq-sticky serve [--addr HOST:PORT] [--artifacts DIR] [--scale X]
         [--policy P] [--d N]             real-time TCP serving
   mqfq-sticky validate [--artifacts DIR] golden-check all artifacts
@@ -148,6 +154,7 @@ fn dispatch(argv: Vec<String>) -> Result<(), String> {
         "exp" => cmd_exp(&args),
         "trace" => cmd_trace(&args),
         "replay" => cmd_replay(&args),
+        "cluster" => cmd_cluster(&args),
         "serve" => cmd_serve(&args),
         "validate" => cmd_validate(&args),
         "help" | "--help" | "-h" => {
@@ -240,6 +247,69 @@ fn cmd_replay(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Build a ClusterConfig from `cluster` options (per-shard plane
+/// options are shared with `replay`).
+pub fn cluster_config(args: &Args) -> Result<ClusterConfig, String> {
+    let defaults = ClusterConfig::default();
+    let n_shards = args.get_usize("shards", defaults.n_shards)?;
+    if n_shards == 0 {
+        return Err("--shards must be >= 1".into());
+    }
+    if n_shards > 128 {
+        return Err("--shards must be <= 128 (StickyCh ring bound)".into());
+    }
+    let router = match args.get("router") {
+        Some(r) => RouterKind::parse(r).ok_or_else(|| format!("unknown router {r}"))?,
+        None => defaults.router,
+    };
+    let load_factor = args.get_f64("load-factor", defaults.load_factor)?;
+    if !(load_factor > 0.0 && load_factor.is_finite()) {
+        return Err(format!("--load-factor must be a positive number, got {load_factor}"));
+    }
+    Ok(ClusterConfig {
+        n_shards,
+        router,
+        plane: plane_config(args)?,
+        load_factor,
+        seed: args.get_usize("seed", defaults.seed as usize)? as u64,
+    })
+}
+
+fn cmd_cluster(args: &Args) -> Result<(), String> {
+    let cfg = cluster_config(args)?;
+    let (workload, trace) = match args.get("trace") {
+        Some(path) => Trace::load(path).map_err(|e| format!("loading {path}: {e}"))?,
+        None => {
+            // Generated zipf trace: --rate is per shard (weak scaling).
+            let mut pair = zipf::generate(&ZipfConfig {
+                n_funcs: args.get_usize("funcs", 24)?,
+                total_rate: args.get_f64("rate", 2.0)?,
+                duration_s: args.get_f64("duration", 600.0)?,
+                seed: cfg.seed,
+                ..Default::default()
+            });
+            crate::workload::scale_rate(&mut pair.0, &mut pair.1, cfg.n_shards as f64);
+            pair
+        }
+    };
+    let t0 = std::time::Instant::now();
+    let r = crate::sim::replay_cluster(workload, &trace, cfg.clone());
+    let wall = t0.elapsed();
+    let row = crate::experiments::cluster::ClusterRow::measure(cfg.router, cfg.n_shards, &r);
+    print!(
+        "{}",
+        crate::experiments::cluster::rows_table(std::slice::from_ref(&row)).render()
+    );
+    println!("per-shard arrivals: {:?}", r.cluster.routed);
+    println!(
+        "replayed {} events over {} shards in {wall:.2?} ({:.0} events/s of sim time)",
+        r.events,
+        cfg.n_shards,
+        r.events as f64 / wall.as_secs_f64().max(1e-9)
+    );
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let addr = args.get("addr").unwrap_or("127.0.0.1:8077");
     let scale = args.get_f64("scale", 0.02)?;
@@ -322,6 +392,43 @@ mod tests {
     fn bad_policy_rejected() {
         let a = Args::parse(&argv("--policy bogus")).unwrap();
         assert!(plane_config(&a).is_err());
+    }
+
+    #[test]
+    fn cluster_config_parses_router_and_shards() {
+        let a = Args::parse(&argv(
+            "--shards 8 --router sticky --load-factor 1.5 --seed 7 --policy fcfs",
+        ))
+        .unwrap();
+        let cfg = cluster_config(&a).unwrap();
+        assert_eq!(cfg.n_shards, 8);
+        assert_eq!(cfg.router, RouterKind::StickyCh);
+        assert!((cfg.load_factor - 1.5).abs() < 1e-12);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.plane.policy, PolicyKind::Fcfs);
+    }
+
+    #[test]
+    fn bad_cluster_options_rejected() {
+        for bad in [
+            "--router bogus",
+            "--shards 0",
+            "--shards 200",          // beyond the StickyCh ring bound
+            "--load-factor 0",
+            "--load-factor -1.5",
+        ] {
+            let a = Args::parse(&argv(bad)).unwrap();
+            assert!(cluster_config(&a).is_err(), "{bad} should be rejected");
+        }
+    }
+
+    #[test]
+    fn cluster_subcommand_runs_small_replay() {
+        let a = Args::parse(&argv(
+            "--shards 2 --router least --funcs 4 --rate 1.0 --duration 20",
+        ))
+        .unwrap();
+        cmd_cluster(&a).unwrap();
     }
 
     #[test]

@@ -1,0 +1,364 @@
+//! Sharded multi-server control plane with locality-aware routing.
+//!
+//! MQFQ-Sticky (§5) exploits warm locality *within* one server; this
+//! module scales that out: a [`Cluster`] is N independent
+//! [`ControlPlane`] shards — each with its own MQFQ-Sticky dispatcher,
+//! device pool and container warm pool — behind a pluggable front-end
+//! [`Router`]. Nothing is shared between shards (no cross-shard queue,
+//! no shared pool), exactly like independent servers behind a load
+//! balancer; the *only* cluster-level decision is which shard an
+//! arrival lands on.
+//!
+//! # Routing policies
+//!
+//! * [`router::RoundRobin`] — cycle shards; load- and locality-blind.
+//! * [`router::Random`] — seeded uniform choice; the classic stateless
+//!   load balancer.
+//! * [`router::LeastLoaded`] — smallest `pending() + in_flight()`
+//!   depth; load-aware but locality-blind.
+//! * [`router::StickyCh`] — consistent hashing with bounded loads:
+//!   every function has a load-independent *home shard* (warm
+//!   locality), spilling clockwise along the hash ring only while the
+//!   home's depth is at/above `load_factor ×` the cluster-mean depth.
+//!   This is the cluster-level analog of the paper's per-GPU sticky
+//!   placement, and the reason the fig9 sweep shows it with a lower
+//!   cold-start ratio than the spray routers.
+//!
+//! # Determinism contract
+//!
+//! A cluster replay is a pure function of (workload, trace,
+//! [`ClusterConfig`]): routers are seeded PRNG/state machines, shards
+//! are deterministic control planes, and the discrete-event engine
+//! ([`crate::sim::replay_cluster`]) orders same-instant events by a
+//! stable (time, sequence) key on one global virtual clock — per-shard
+//! completions and monitor ticks interleave identically across runs.
+//! Monitor ticks fire on the global cadence and are delivered to every
+//! shard that has work (idle shards are skipped, as in the single-plane
+//! engine). With `n_shards == 1` every router degenerates to shard 0
+//! and the replay is event-for-event identical to [`crate::sim::replay`]
+//! (property-tested in `rust/tests/prop_cluster.rs`).
+
+pub mod router;
+
+pub use router::{Router, RouterKind, ShardLoad, ALL_ROUTERS};
+
+use crate::container::pool::PoolStats;
+use crate::metrics::Recorder;
+use crate::plane::{ControlPlane, PlaneConfig};
+use crate::sim::{ShardDispatch, SimTarget};
+use crate::types::{FuncId, InvocationId, Nanos};
+use crate::workload::Workload;
+
+/// Cluster-level configuration: shard count, routing policy, and the
+/// per-shard plane config (every shard is identical hardware).
+#[derive(Clone)]
+pub struct ClusterConfig {
+    pub n_shards: usize,
+    pub router: RouterKind,
+    /// Per-shard control-plane config (policy, GPUs, pool, ...).
+    pub plane: PlaneConfig,
+    /// [`router::StickyCh`] bounded-load spill factor (≥ 1.0 keeps some
+    /// locality; large values never spill). Ignored by other routers.
+    pub load_factor: f64,
+    /// Seed for the Random router and the StickyCh ring layout.
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            n_shards: 4,
+            router: RouterKind::StickyCh,
+            plane: PlaneConfig::default(),
+            load_factor: 1.25,
+            seed: 0,
+        }
+    }
+}
+
+/// N independent control-plane shards behind one front-end router.
+///
+/// Entry points mirror [`ControlPlane`]'s clock-agnostic API, with a
+/// shard index added wherever an invocation must be identified
+/// (invocation ids are per-shard; `(shard, InvocationId)` is the
+/// cluster-unique key).
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    pub shards: Vec<ControlPlane>,
+    router: Box<dyn Router>,
+    /// Arrivals routed to each shard (routing-skew diagnostics).
+    pub routed: Vec<u64>,
+}
+
+impl Cluster {
+    /// Build `cfg.n_shards` shards, each registering the full workload
+    /// (any function may run anywhere — placement is the router's call).
+    pub fn new(workload: Workload, cfg: ClusterConfig) -> Self {
+        assert!(cfg.n_shards >= 1, "cluster needs at least one shard");
+        let router = cfg.router.build(cfg.n_shards, cfg.load_factor, cfg.seed);
+        let shards: Vec<ControlPlane> = (0..cfg.n_shards)
+            .map(|_| ControlPlane::new(workload.clone(), cfg.plane.clone()))
+            .collect();
+        Self {
+            routed: vec![0; cfg.n_shards],
+            router,
+            shards,
+            cfg,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn router_name(&self) -> &'static str {
+        self.router.name()
+    }
+
+    /// Invocations routed off their home shard (StickyCh only; 0 else).
+    pub fn spills(&self) -> u64 {
+        self.router.spills()
+    }
+
+    /// Queued (undispatched) invocations across all shards.
+    pub fn pending(&self) -> usize {
+        self.shards.iter().map(|p| p.pending()).sum()
+    }
+
+    /// Executing invocations across all shards.
+    pub fn in_flight(&self) -> usize {
+        self.shards.iter().map(|p| p.in_flight()).sum()
+    }
+
+    fn loads(&self) -> Vec<ShardLoad> {
+        self.shards
+            .iter()
+            .map(|p| ShardLoad {
+                pending: p.pending(),
+                in_flight: p.in_flight(),
+            })
+            .collect()
+    }
+
+    /// Route and ingest one arrival. Returns the chosen shard, the
+    /// shard-local invocation id, and any dispatches it unlocked.
+    pub fn on_arrival(
+        &mut self,
+        func: FuncId,
+        now: Nanos,
+    ) -> (usize, InvocationId, Vec<ShardDispatch>) {
+        let loads = self.loads();
+        let shard = self.router.route(func, &loads);
+        debug_assert!(shard < self.shards.len(), "router out of range");
+        self.routed[shard] += 1;
+        let (id, ds) = self.shards[shard].on_arrival(func, now);
+        (shard, id, tag(shard, ds))
+    }
+
+    /// An invocation completed on `shard` at `now`.
+    pub fn on_complete(
+        &mut self,
+        shard: usize,
+        inv: InvocationId,
+        now: Nanos,
+    ) -> Vec<ShardDispatch> {
+        tag(shard, self.shards[shard].on_complete(inv, now))
+    }
+
+    /// Global monitor tick: delivered to every shard that has work
+    /// (pending or in flight), in shard order.
+    pub fn on_monitor_tick(&mut self, now: Nanos) -> Vec<ShardDispatch> {
+        let mut out = Vec::new();
+        for (s, plane) in self.shards.iter_mut().enumerate() {
+            if plane.pending() > 0 || plane.in_flight() > 0 {
+                out.extend(tag(s, plane.on_monitor_tick(now)));
+            }
+        }
+        out
+    }
+
+    /// Exact utilization-integral touch on one shard (sim engine).
+    pub fn touch(&mut self, shard: usize, now: Nanos) {
+        self.shards[shard].touch(now);
+    }
+
+    /// Summed warm-pool stats across shards (cluster cold-start ratio).
+    pub fn pool_stats(&self) -> PoolStats {
+        let mut total = PoolStats::default();
+        for p in &self.shards {
+            let s = p.pool_stats();
+            total.cold += s.cold;
+            total.host_warm += s.host_warm;
+            total.gpu_warm += s.gpu_warm;
+        }
+        total
+    }
+
+    /// Mean device utilization across every shard's devices at `now`.
+    pub fn mean_utilization(&mut self, now: Nanos) -> f64 {
+        if self.shards.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .shards
+            .iter_mut()
+            .map(|p| p.mean_utilization(now))
+            .sum();
+        sum / self.shards.len() as f64
+    }
+
+    /// Cluster-level recorder: every shard's records merged, sorted by
+    /// completion time (stable: same-instant ties keep shard order).
+    pub fn merged_recorder(&self) -> Recorder {
+        let mut out = Recorder::new();
+        for p in &self.shards {
+            out.merge(&p.recorder);
+        }
+        out.sort_by_time();
+        out
+    }
+
+    /// Largest per-shard share of arrivals relative to a perfectly even
+    /// split (1.0 = balanced; n = everything on one shard of n).
+    pub fn routing_imbalance(&self) -> f64 {
+        let total: u64 = self.routed.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let max = *self.routed.iter().max().unwrap() as f64;
+        max / (total as f64 / self.routed.len() as f64)
+    }
+}
+
+/// Tag a shard's dispatches with its index (shared with the sim
+/// engine's single-plane target, which tags everything shard 0).
+pub(crate) fn tag(shard: usize, ds: Vec<crate::plane::Dispatch>) -> Vec<ShardDispatch> {
+    ds.into_iter()
+        .map(|dispatch| ShardDispatch { shard, dispatch })
+        .collect()
+}
+
+impl SimTarget for Cluster {
+    fn busy(&self) -> bool {
+        self.shards
+            .iter()
+            .any(|p| p.pending() > 0 || p.in_flight() > 0)
+    }
+
+    fn sim_arrival(&mut self, func: FuncId, now: Nanos) -> Vec<ShardDispatch> {
+        let (_, _, ds) = self.on_arrival(func, now);
+        ds
+    }
+
+    fn sim_complete(&mut self, shard: usize, inv: InvocationId, now: Nanos) -> Vec<ShardDispatch> {
+        self.on_complete(shard, inv, now)
+    }
+
+    fn sim_tick(&mut self, now: Nanos) -> Vec<ShardDispatch> {
+        self.on_monitor_tick(now)
+    }
+
+    fn sim_touch(&mut self, shard: usize, now: Nanos) {
+        self.touch(shard, now);
+    }
+
+    fn sim_load(&self) -> (usize, usize) {
+        (self.pending(), self.in_flight())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{secs, SEC};
+    use crate::workload::catalog::by_name;
+
+    fn workload3() -> Workload {
+        let mut w = Workload::default();
+        w.register(by_name("fft").unwrap(), 0, 1.0);
+        w.register(by_name("imagenet").unwrap(), 0, 2.0);
+        w.register(by_name("lud").unwrap(), 0, 1.0);
+        w
+    }
+
+    fn cluster(n: usize, router: RouterKind) -> Cluster {
+        Cluster::new(
+            workload3(),
+            ClusterConfig {
+                n_shards: n,
+                router,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn round_robin_spreads_arrivals() {
+        let mut c = cluster(3, RouterKind::RoundRobin);
+        for i in 0..6 {
+            c.on_arrival(FuncId(0), i * SEC);
+        }
+        assert_eq!(c.routed, vec![2, 2, 2]);
+        assert!((c.routing_imbalance() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sticky_concentrates_a_function() {
+        let mut c = cluster(4, RouterKind::StickyCh);
+        let mut shards_used = std::collections::HashSet::new();
+        for i in 0..8 {
+            let (s, _, ds) = c.on_arrival(FuncId(1), secs(i as f64 * 30.0));
+            shards_used.insert(s);
+            // Drain before the next arrival so every routing decision
+            // sees an idle cluster (light load never spills).
+            for sd in ds {
+                c.on_complete(sd.shard, sd.dispatch.inv, sd.dispatch.complete_at);
+            }
+        }
+        assert_eq!(shards_used.len(), 1, "light load must stay on the home shard");
+        assert_eq!(c.spills(), 0);
+        assert_eq!(c.routed.iter().filter(|&&n| n > 0).count(), 1);
+    }
+
+    #[test]
+    fn completion_flows_back_through_the_right_shard() {
+        let mut c = cluster(2, RouterKind::RoundRobin);
+        let (s, _, ds) = c.on_arrival(FuncId(0), 0);
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds[0].shard, s);
+        assert_eq!(c.in_flight(), 1);
+        let d = ds[0].dispatch;
+        let more = c.on_complete(s, d.inv, d.complete_at);
+        assert!(more.is_empty());
+        assert_eq!(c.in_flight(), 0);
+        assert_eq!(c.merged_recorder().len(), 1);
+    }
+
+    #[test]
+    fn tick_skips_idle_shards() {
+        let mut c = cluster(2, RouterKind::RoundRobin);
+        c.on_arrival(FuncId(0), 0); // lands on shard 0
+        c.on_monitor_tick(200 * crate::types::MS);
+        assert_eq!(c.shards[0].recorder.util_timeline.len(), 1);
+        assert!(c.shards[1].recorder.util_timeline.is_empty());
+    }
+
+    #[test]
+    fn pool_stats_sum_over_shards() {
+        let mut c = cluster(2, RouterKind::RoundRobin);
+        // Same function on both shards: two cold starts cluster-wide.
+        c.on_arrival(FuncId(0), 0);
+        c.on_arrival(FuncId(0), 1);
+        assert_eq!(c.pool_stats().cold, 2);
+    }
+
+    #[test]
+    fn single_shard_pending_in_flight_match_plane() {
+        let mut c = cluster(1, RouterKind::LeastLoaded);
+        for i in 0..5 {
+            c.on_arrival(FuncId(0), i);
+        }
+        assert_eq!(c.pending(), c.shards[0].pending());
+        assert_eq!(c.in_flight(), c.shards[0].in_flight());
+    }
+}

@@ -1,0 +1,378 @@
+//! Front-end routing policies: which shard (server) gets the next
+//! invocation of a function.
+//!
+//! The cluster-level analog of the paper's per-GPU sticky placement
+//! (§5 "sticky load balancing among GPUs"): warm locality is worth
+//! orders of magnitude in start latency, so the router that keeps a
+//! function on its *home shard* ([`StickyCh`]) preserves the container
+//! warm pool's hit rate, while spray routers ([`RoundRobin`],
+//! [`Random`]) re-pay the cold start on every shard a function touches.
+//!
+//! Every router is deterministic given its construction seed, which is
+//! what makes multi-shard replays reproducible (see
+//! [`crate::sim::replay_cluster`]).
+
+use crate::types::FuncId;
+use crate::util::rng::{Rng, SplitMix64};
+
+/// Instantaneous queue depth of one shard, as visible to the front end.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardLoad {
+    /// Invocations queued (not yet dispatched) on the shard.
+    pub pending: usize,
+    /// Invocations currently executing on the shard's devices.
+    pub in_flight: usize,
+}
+
+impl ShardLoad {
+    /// Total outstanding work: the `pending() + in_flight()` depth the
+    /// load-aware routers balance on.
+    pub fn depth(&self) -> usize {
+        self.pending + self.in_flight
+    }
+}
+
+/// A routing policy: picks the shard for each arriving invocation.
+///
+/// Routers see only front-end state (per-shard queue depths) — never
+/// shard internals — mirroring what a real load balancer can observe
+/// cheaply. They may keep mutable state (round-robin cursor, RNG), but
+/// must be deterministic for a fixed seed and call sequence.
+pub trait Router: Send {
+    fn name(&self) -> &'static str;
+
+    /// Shard index in `0..loads.len()` for the next invocation of `func`.
+    fn route(&mut self, func: FuncId, loads: &[ShardLoad]) -> usize;
+
+    /// Invocations routed off their locality-preferred shard (only
+    /// meaningful for [`StickyCh`]; 0 for load-blind routers).
+    fn spills(&self) -> u64 {
+        0
+    }
+}
+
+/// Router selector used by the CLI / experiment harness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterKind {
+    RoundRobin,
+    Random,
+    LeastLoaded,
+    StickyCh,
+}
+
+/// Every router, in the order the fig9 sweep reports them.
+pub const ALL_ROUTERS: [RouterKind; 4] = [
+    RouterKind::RoundRobin,
+    RouterKind::Random,
+    RouterKind::LeastLoaded,
+    RouterKind::StickyCh,
+];
+
+impl RouterKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "rr" | "round-robin" => RouterKind::RoundRobin,
+            "random" => RouterKind::Random,
+            "least" | "least-loaded" => RouterKind::LeastLoaded,
+            "sticky" | "sticky-ch" => RouterKind::StickyCh,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterKind::RoundRobin => "round-robin",
+            RouterKind::Random => "random",
+            RouterKind::LeastLoaded => "least-loaded",
+            RouterKind::StickyCh => "sticky-ch",
+        }
+    }
+
+    /// Instantiate for `n_shards`. `load_factor` and `seed` are used by
+    /// [`StickyCh`] (spill bound, ring layout); `seed` also drives
+    /// [`Random`].
+    pub fn build(&self, n_shards: usize, load_factor: f64, seed: u64) -> Box<dyn Router> {
+        assert!(n_shards >= 1, "cluster needs at least one shard");
+        match self {
+            RouterKind::RoundRobin => Box::new(RoundRobin { next: 0 }),
+            RouterKind::Random => Box::new(Random {
+                rng: Rng::new(seed ^ 0x5A5A_0001),
+            }),
+            RouterKind::LeastLoaded => Box::new(LeastLoaded),
+            RouterKind::StickyCh => Box::new(StickyCh::new(n_shards, load_factor, seed)),
+        }
+    }
+}
+
+/// Cycle through shards regardless of function or load.
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl Router for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&mut self, _func: FuncId, loads: &[ShardLoad]) -> usize {
+        let s = self.next % loads.len();
+        self.next = self.next.wrapping_add(1);
+        s
+    }
+}
+
+/// Uniform random shard (seeded, deterministic).
+pub struct Random {
+    rng: Rng,
+}
+
+impl Router for Random {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn route(&mut self, _func: FuncId, loads: &[ShardLoad]) -> usize {
+        self.rng.below(loads.len())
+    }
+}
+
+/// Smallest `pending + in_flight` depth; ties go to the lowest index.
+pub struct LeastLoaded;
+
+impl Router for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn route(&mut self, _func: FuncId, loads: &[ShardLoad]) -> usize {
+        let mut best = 0;
+        for (s, l) in loads.iter().enumerate().skip(1) {
+            if l.depth() < loads[best].depth() {
+                best = s;
+            }
+        }
+        best
+    }
+}
+
+/// Consistent hashing with a bounded-load spill factor.
+///
+/// Each shard owns [`StickyCh::VNODES`] points on a `u64` ring; a
+/// function's *home shard* is the owner of the first ring point at or
+/// after `hash(func)`. Home assignment never changes with load, so a
+/// function's warm containers concentrate on one shard (the cluster
+/// analog of §5's per-GPU stickiness).
+///
+/// Spill rule (consistent hashing with bounded loads): an invocation
+/// stays home only while the home's depth is below the capacity bound
+///
+/// ```text
+/// cap = ceil(load_factor × (total_depth + 1) / n_shards)
+/// ```
+///
+/// i.e. `load_factor ×` the cluster-mean depth counting the new
+/// arrival. When the home is at/over the bound, the invocation walks
+/// the ring clockwise to the next *distinct* shard below the bound
+/// (deterministic spill order per function). If every shard is at the
+/// bound (uniform overload), it stays home — spilling could not help
+/// and would only shred locality.
+pub struct StickyCh {
+    /// (ring point, shard), sorted by point.
+    ring: Vec<(u64, usize)>,
+    n_shards: usize,
+    load_factor: f64,
+    /// Spills observed (diagnostics; exposed via [`StickyCh::spills`]).
+    spills: u64,
+}
+
+impl StickyCh {
+    /// Virtual nodes per shard: enough to even out ring arcs at 16
+    /// shards without making the ring walk expensive.
+    pub const VNODES: usize = 32;
+
+    pub fn new(n_shards: usize, load_factor: f64, seed: u64) -> Self {
+        assert!(load_factor > 0.0, "load_factor must be positive");
+        assert!(n_shards <= 128, "spill bitset covers up to 128 shards");
+        let mut ring = Vec::with_capacity(n_shards * Self::VNODES);
+        for shard in 0..n_shards {
+            for v in 0..Self::VNODES {
+                ring.push((mix(seed, (shard * Self::VNODES + v) as u64), shard));
+            }
+        }
+        ring.sort_unstable();
+        Self {
+            ring,
+            n_shards,
+            load_factor,
+            spills: 0,
+        }
+    }
+
+    /// Ring position of `func`: (index of its first ring point, owning
+    /// shard). The single source of truth for "home" — [`Self::home`]
+    /// and [`Router::route`] must agree or spills are miscounted.
+    fn ring_start(&self, func: FuncId) -> (usize, usize) {
+        let key = mix(0xF00D_F00D, func.0 as u64);
+        let start = self.ring.partition_point(|(p, _)| *p < key);
+        (start, self.ring[start % self.ring.len()].1)
+    }
+
+    /// The load-independent home shard of `func`.
+    pub fn home(&self, func: FuncId) -> usize {
+        self.ring_start(func).1
+    }
+}
+
+impl Router for StickyCh {
+    fn name(&self) -> &'static str {
+        "sticky-ch"
+    }
+
+    fn spills(&self) -> u64 {
+        self.spills
+    }
+
+    fn route(&mut self, func: FuncId, loads: &[ShardLoad]) -> usize {
+        debug_assert_eq!(loads.len(), self.n_shards);
+        let (start, home) = self.ring_start(func);
+        let total: usize = loads.iter().map(|l| l.depth()).sum();
+        let cap = (self.load_factor * (total as f64 + 1.0) / self.n_shards as f64).ceil();
+        let mut visited: u128 = 0;
+        let mut seen = 0usize;
+        for i in 0..self.ring.len() {
+            let shard = self.ring[(start + i) % self.ring.len()].1;
+            if visited & (1 << shard) != 0 {
+                continue;
+            }
+            visited |= 1 << shard;
+            seen += 1;
+            if (loads[shard].depth() as f64) < cap {
+                if shard != home {
+                    self.spills += 1;
+                }
+                return shard;
+            }
+            if seen == self.n_shards {
+                break;
+            }
+        }
+        home // uniform overload: locality beats a futile spill
+    }
+}
+
+/// Keyed hash of (seed, x) — ring points and function keys. One
+/// SplitMix64 step over a seed-offset state; for a fixed `seed` this is
+/// injective in `x`, so ring points never collide.
+fn mix(seed: u64, x: u64) -> u64 {
+    SplitMix64::new(seed.rotate_left(32).wrapping_add(x)).next_u64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loads(depths: &[usize]) -> Vec<ShardLoad> {
+        depths
+            .iter()
+            .map(|&d| ShardLoad {
+                pending: d,
+                in_flight: 0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = RouterKind::RoundRobin.build(3, 1.25, 0);
+        let l = loads(&[0, 0, 0]);
+        let picks: Vec<usize> = (0..6).map(|_| r.route(FuncId(0), &l)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn random_is_deterministic_and_in_range() {
+        let l = loads(&[0; 5]);
+        let mut a = RouterKind::Random.build(5, 1.25, 9);
+        let mut b = RouterKind::Random.build(5, 1.25, 9);
+        for i in 0..100 {
+            let pa = a.route(FuncId(i), &l);
+            assert_eq!(pa, b.route(FuncId(i), &l));
+            assert!(pa < 5);
+        }
+    }
+
+    #[test]
+    fn least_loaded_picks_min_with_low_index_ties() {
+        let mut r = RouterKind::LeastLoaded.build(4, 1.25, 0);
+        assert_eq!(r.route(FuncId(0), &loads(&[3, 1, 2, 1])), 1);
+        assert_eq!(r.route(FuncId(0), &loads(&[0, 0, 0, 0])), 0);
+    }
+
+    #[test]
+    fn sticky_home_is_stable_and_spread() {
+        let s = StickyCh::new(8, 1.25, 7);
+        // Stability: the home does not depend on load.
+        for f in 0..32 {
+            assert_eq!(s.home(FuncId(f)), s.home(FuncId(f)));
+        }
+        // Spread: 256 functions should not all hash to one shard.
+        let mut hit = [false; 8];
+        for f in 0..256 {
+            hit[s.home(FuncId(f))] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "some shard owns no functions");
+    }
+
+    #[test]
+    fn sticky_routes_home_when_under_capacity() {
+        let mut s = StickyCh::new(4, 2.0, 3);
+        let home = s.home(FuncId(5));
+        let l = loads(&[0, 0, 0, 0]);
+        assert_eq!(s.route(FuncId(5), &l), home);
+        assert_eq!(s.spills(), 0);
+    }
+
+    #[test]
+    fn sticky_spills_when_home_overloaded() {
+        let mut s = StickyCh::new(4, 1.25, 3);
+        let home = s.home(FuncId(5));
+        // Home far above the mean; everyone else empty.
+        let mut d = vec![0usize; 4];
+        d[home] = 40;
+        let picked = s.route(FuncId(5), &loads(&d));
+        assert_ne!(picked, home, "should spill off the hot home shard");
+        assert_eq!(s.spills(), 1);
+        // Spill target is deterministic.
+        let mut s2 = StickyCh::new(4, 1.25, 3);
+        assert_eq!(s2.route(FuncId(5), &loads(&d)), picked);
+    }
+
+    #[test]
+    fn sticky_stays_home_under_uniform_overload() {
+        let mut s = StickyCh::new(4, 1.25, 3);
+        let home = s.home(FuncId(5));
+        // Every shard equally deep: cap < depth everywhere ⇒ stay home.
+        assert_eq!(s.route(FuncId(5), &loads(&[50, 50, 50, 50])), home);
+    }
+
+    #[test]
+    fn router_kind_parse_roundtrip() {
+        for k in ALL_ROUTERS {
+            assert_eq!(RouterKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(RouterKind::parse("rr"), Some(RouterKind::RoundRobin));
+        assert_eq!(RouterKind::parse("sticky"), Some(RouterKind::StickyCh));
+        assert_eq!(RouterKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn single_shard_routers_all_pick_zero() {
+        let l = loads(&[3]);
+        for k in ALL_ROUTERS {
+            let mut r = k.build(1, 1.25, 11);
+            for f in 0..8 {
+                assert_eq!(r.route(FuncId(f), &l), 0, "{}", k.name());
+            }
+        }
+    }
+}

@@ -27,7 +27,7 @@ pub struct Acquired {
 }
 
 /// Start-kind counters (drives the Fig-8c cold-hit/miss-rate curves).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PoolStats {
     pub gpu_warm: u64,
     pub host_warm: u64,

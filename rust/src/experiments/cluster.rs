@@ -1,0 +1,376 @@
+//! §Fig 9 (beyond the paper): cluster scaling sweep — p50/p99 latency,
+//! Jain fairness, and cold-start ratio vs shard count (1–16) and router
+//! policy, under a rate-scaled locality-heavy (Zipf 1.5) trace. The
+//! point of the subsystem: at scale, the locality-aware [`StickyCh`]
+//! router keeps every function's warm containers on its home shard, so
+//! its cold-start ratio stays near the single-server floor while the
+//! spray routers (round-robin / random) re-pay a cold start on every
+//! shard a function touches. Results land in
+//! `results/fig9_cluster_scaling.csv` and machine-readable
+//! `BENCH_cluster.json` for cross-PR tracking (`scripts/bench_diff.sh`).
+//!
+//! [`StickyCh`]: crate::cluster::router::StickyCh
+
+use crate::cluster::{ClusterConfig, RouterKind, ALL_ROUTERS};
+use crate::metrics::jain_index;
+use crate::plane::PlaneConfig;
+use crate::sim::{replay_cluster, ClusterReplayResult};
+use crate::util::csv::CsvWriter;
+use crate::util::json::{self, Json};
+use crate::util::stats::percentiles;
+use crate::util::table::Table;
+use crate::workload::zipf::{self, ZipfConfig};
+use crate::workload::{scale_rate, Trace, Workload};
+
+/// Sweep parameters (the bench uses the defaults; tests shrink them).
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub shard_counts: Vec<usize>,
+    pub routers: Vec<RouterKind>,
+    /// Offered load per shard, req/s (weak scaling: total = rate × N).
+    pub per_shard_rate: f64,
+    pub duration_s: f64,
+    pub n_funcs: usize,
+    pub seed: u64,
+    /// StickyCh bounded-load spill factor.
+    pub load_factor: f64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            shard_counts: vec![1, 2, 4, 8, 16],
+            routers: ALL_ROUTERS.to_vec(),
+            per_shard_rate: 2.0,
+            duration_s: 600.0,
+            n_funcs: 24,
+            seed: 42,
+            load_factor: 1.25,
+        }
+    }
+}
+
+/// One (router, shard count) cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct ClusterRow {
+    pub router: &'static str,
+    pub shards: usize,
+    pub invocations: usize,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub wavg_s: f64,
+    pub cold_ratio: f64,
+    /// Jain index over per-function mean latencies (1.0 = perfectly fair).
+    pub fairness_jain: f64,
+    pub mean_util: f64,
+    pub makespan_s: f64,
+    /// Max per-shard arrival share vs an even split (1.0 = balanced).
+    pub routing_imbalance: f64,
+    /// StickyCh arrivals routed off their home shard (0 for others).
+    pub spills: u64,
+}
+
+impl ClusterRow {
+    /// Measure one replay into a sweep row (shared by the sweep and the
+    /// `cluster` CLI subcommand).
+    pub fn measure(router: RouterKind, shards: usize, r: &ClusterReplayResult) -> ClusterRow {
+        let rec = r.recorder();
+        let lat = rec.latencies_s();
+        let pcts = percentiles(&lat, &[50.0, 99.0]);
+        let per_fn: Vec<f64> = rec.per_function().iter().map(|a| a.mean_latency_s).collect();
+        ClusterRow {
+            router: router.name(),
+            shards,
+            invocations: rec.len(),
+            p50_s: pcts[0],
+            p99_s: pcts[1],
+            wavg_s: rec.weighted_avg_latency_s(),
+            cold_ratio: r.cluster.pool_stats().cold_ratio(),
+            fairness_jain: jain_index(&per_fn),
+            mean_util: r.mean_util,
+            makespan_s: crate::types::to_secs(r.makespan),
+            routing_imbalance: r.cluster.routing_imbalance(),
+            spills: r.cluster.spills(),
+        }
+    }
+}
+
+/// The base single-server trace every cell scales from: Zipf 1.5 over
+/// the catalog — the locality-heavy shape (a few dominant functions)
+/// where sticky routing has the most to win.
+pub fn base_trace(cfg: &SweepConfig) -> (Workload, Trace) {
+    zipf::generate(&ZipfConfig {
+        n_funcs: cfg.n_funcs,
+        total_rate: cfg.per_shard_rate,
+        duration_s: cfg.duration_s,
+        seed: cfg.seed,
+        ..Default::default()
+    })
+}
+
+/// Run the full sweep: every (shard count, router) cell replays the
+/// same base trace rate-scaled to the shard count. Deterministic for a
+/// fixed [`SweepConfig`].
+pub fn sweep(cfg: &SweepConfig) -> Vec<ClusterRow> {
+    let (base_w, base_t) = base_trace(cfg);
+    let mut rows = Vec::new();
+    for &n in &cfg.shard_counts {
+        let mut w = base_w.clone();
+        let mut t = base_t.clone();
+        scale_rate(&mut w, &mut t, n as f64);
+        for &router in &cfg.routers {
+            let ccfg = ClusterConfig {
+                n_shards: n,
+                router,
+                plane: PlaneConfig::default(),
+                load_factor: cfg.load_factor,
+                seed: cfg.seed,
+            };
+            let r = replay_cluster(w.clone(), &t, ccfg);
+            rows.push(ClusterRow::measure(router, n, &r));
+        }
+    }
+    rows
+}
+
+/// Machine-readable form of the sweep (`BENCH_cluster.json`).
+pub fn report_json(cfg: &SweepConfig, rows: &[ClusterRow]) -> Json {
+    let row_json = |r: &ClusterRow| {
+        Json::Obj(vec![
+            ("router".into(), Json::str(r.router)),
+            ("shards".into(), Json::Int(r.shards as i64)),
+            ("invocations".into(), Json::Int(r.invocations as i64)),
+            ("p50_s".into(), Json::Num(r.p50_s)),
+            ("p99_s".into(), Json::Num(r.p99_s)),
+            ("wavg_s".into(), Json::Num(r.wavg_s)),
+            ("cold_ratio".into(), Json::Num(r.cold_ratio)),
+            ("fairness_jain".into(), Json::Num(r.fairness_jain)),
+            ("mean_util".into(), Json::Num(r.mean_util)),
+            ("makespan_s".into(), Json::Num(r.makespan_s)),
+            ("routing_imbalance".into(), Json::Num(r.routing_imbalance)),
+            ("spills".into(), Json::Int(r.spills as i64)),
+        ])
+    };
+    Json::Obj(vec![
+        ("schema".into(), Json::str("mqfq-bench-cluster/v1")),
+        (
+            "config".into(),
+            Json::Obj(vec![
+                ("per_shard_rate".into(), Json::Num(cfg.per_shard_rate)),
+                ("duration_s".into(), Json::Num(cfg.duration_s)),
+                ("n_funcs".into(), Json::Int(cfg.n_funcs as i64)),
+                ("seed".into(), Json::Int(cfg.seed as i64)),
+                ("load_factor".into(), Json::Num(cfg.load_factor)),
+                ("trace".into(), Json::str("zipf-1.5")),
+            ]),
+        ),
+        ("rows".into(), Json::Arr(rows.iter().map(row_json).collect())),
+    ])
+}
+
+/// Render the standard comparison table.
+pub fn rows_table(rows: &[ClusterRow]) -> Table {
+    let mut t = Table::new(&[
+        "router",
+        "shards",
+        "invocations",
+        "p50(s)",
+        "p99(s)",
+        "avg(s)",
+        "cold%",
+        "jain",
+        "util%",
+        "imbal",
+        "spills",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.router.to_string(),
+            r.shards.to_string(),
+            r.invocations.to_string(),
+            format!("{:.3}", r.p50_s),
+            format!("{:.3}", r.p99_s),
+            format!("{:.3}", r.wavg_s),
+            format!("{:.2}", r.cold_ratio * 100.0),
+            format!("{:.3}", r.fairness_jain),
+            format!("{:.1}", r.mean_util * 100.0),
+            format!("{:.2}", r.routing_imbalance),
+            r.spills.to_string(),
+        ]);
+    }
+    t
+}
+
+fn write_csv(rows: &[ClusterRow]) -> std::io::Result<()> {
+    let mut w = CsvWriter::create(
+        "results/fig9_cluster_scaling.csv",
+        &[
+            "router",
+            "shards",
+            "invocations",
+            "p50_s",
+            "p99_s",
+            "wavg_s",
+            "cold_ratio",
+            "fairness_jain",
+            "mean_util",
+            "makespan_s",
+            "routing_imbalance",
+            "spills",
+        ],
+    )?;
+    for r in rows {
+        w.rowv(&[
+            r.router.to_string(),
+            r.shards.to_string(),
+            r.invocations.to_string(),
+            format!("{:.6}", r.p50_s),
+            format!("{:.6}", r.p99_s),
+            format!("{:.6}", r.wavg_s),
+            format!("{:.6}", r.cold_ratio),
+            format!("{:.6}", r.fairness_jain),
+            format!("{:.6}", r.mean_util),
+            format!("{:.3}", r.makespan_s),
+            format!("{:.4}", r.routing_imbalance),
+            r.spills.to_string(),
+        ])?;
+    }
+    w.flush()
+}
+
+/// The locality win the subsystem exists to demonstrate: at every swept
+/// shard count ≥ 8, StickyCh's cold-start ratio must undercut both
+/// spray routers on the Zipf-skewed trace. Behavioral (not timing), so
+/// it gates debug and release runs alike.
+pub fn assert_locality_win(rows: &[ClusterRow]) {
+    let cell = |router: &str, shards: usize| {
+        rows.iter()
+            .find(|r| r.router == router && r.shards == shards)
+    };
+    let mut sizes: Vec<usize> = rows.iter().map(|r| r.shards).filter(|&n| n >= 8).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    for n in sizes {
+        let (Some(sticky), Some(rr), Some(random)) = (
+            cell(RouterKind::StickyCh.name(), n),
+            cell(RouterKind::RoundRobin.name(), n),
+            cell(RouterKind::Random.name(), n),
+        ) else {
+            continue; // sweep didn't include all three at this size
+        };
+        assert!(
+            sticky.cold_ratio < rr.cold_ratio,
+            "StickyCh cold ratio {:.4} not below round-robin {:.4} at {n} shards",
+            sticky.cold_ratio,
+            rr.cold_ratio
+        );
+        assert!(
+            sticky.cold_ratio < random.cold_ratio,
+            "StickyCh cold ratio {:.4} not below random {:.4} at {n} shards",
+            sticky.cold_ratio,
+            random.cold_ratio
+        );
+    }
+}
+
+pub fn main() {
+    println!("== Fig 9: cluster scaling (shards × router, zipf-1.5, weak scaling) ==");
+    let cfg = SweepConfig::default();
+    let t0 = std::time::Instant::now();
+    let rows = sweep(&cfg);
+    print!("{}", rows_table(&rows).render());
+    println!("[swept {} cells in {:.2?}]", rows.len(), t0.elapsed());
+    match write_csv(&rows) {
+        Ok(()) => println!("wrote results/fig9_cluster_scaling.csv"),
+        Err(e) => println!("csv not written: {e}"),
+    }
+    match json::write_file("BENCH_cluster.json", &report_json(&cfg, &rows)) {
+        Ok(()) => println!("wrote BENCH_cluster.json"),
+        Err(e) => println!("BENCH_cluster.json not written: {e}"),
+    }
+    assert_locality_win(&rows);
+    println!("locality gate: StickyCh cold-start ratio beats spray routers at ≥8 shards");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Small sweep the debug-mode tests can afford (still ≥ 8 shards so
+    /// the locality acceptance criterion is exercised for real).
+    fn small_cfg() -> SweepConfig {
+        SweepConfig {
+            shard_counts: vec![1, 8],
+            routers: ALL_ROUTERS.to_vec(),
+            duration_s: 120.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sticky_beats_spray_on_cold_starts_at_8_shards() {
+        let rows = sweep(&small_cfg());
+        assert_locality_win(&rows);
+        // And not vacuously: all four routers actually ran at 8 shards.
+        assert_eq!(rows.iter().filter(|r| r.shards == 8).count(), 4);
+        for r in &rows {
+            assert!(r.invocations > 0, "{} @ {} empty", r.router, r.shards);
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic() {
+        let cfg = SweepConfig {
+            shard_counts: vec![2],
+            duration_s: 60.0,
+            ..Default::default()
+        };
+        let a = report_json(&cfg, &sweep(&cfg)).render();
+        let b = report_json(&cfg, &sweep(&cfg)).render();
+        assert_eq!(a, b, "same seed must produce identical BENCH rows");
+    }
+
+    #[test]
+    fn report_json_has_the_tracked_fields() {
+        let cfg = SweepConfig {
+            shard_counts: vec![1],
+            routers: vec![RouterKind::StickyCh],
+            duration_s: 30.0,
+            ..Default::default()
+        };
+        let rows = sweep(&cfg);
+        assert_eq!(rows.len(), 1);
+        let doc = report_json(&cfg, &rows).render();
+        for key in [
+            "\"schema\"",
+            "mqfq-bench-cluster/v1",
+            "\"rows\"",
+            "\"router\"",
+            "\"shards\"",
+            "\"p50_s\"",
+            "\"p99_s\"",
+            "\"cold_ratio\"",
+            "\"fairness_jain\"",
+            "\"routing_imbalance\"",
+            "\"spills\"",
+        ] {
+            assert!(doc.contains(key), "missing {key} in {doc}");
+        }
+    }
+
+    #[test]
+    fn fairness_and_util_are_sane() {
+        let cfg = SweepConfig {
+            shard_counts: vec![2],
+            routers: vec![RouterKind::LeastLoaded],
+            duration_s: 60.0,
+            ..Default::default()
+        };
+        let rows = sweep(&cfg);
+        let r = &rows[0];
+        assert!(r.fairness_jain > 0.0 && r.fairness_jain <= 1.0 + 1e-12);
+        assert!(r.mean_util >= 0.0 && r.mean_util <= 1.0);
+        assert!(r.p99_s >= r.p50_s);
+        assert!(r.routing_imbalance >= 1.0 - 1e-12);
+    }
+}

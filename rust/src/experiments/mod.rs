@@ -5,6 +5,7 @@
 //! under `results/`.
 
 pub mod ablation;
+pub mod cluster;
 pub mod fig1;
 pub mod fig3;
 pub mod fig4;
@@ -135,6 +136,7 @@ pub const ALL: &[(&str, fn())] = &[
     ("fig8c", fig8::fig8c),
     ("ablation", ablation::main),
     ("perf", perf::main),
+    ("cluster", cluster::main),
 ];
 
 /// Look up an experiment by name.
@@ -152,7 +154,7 @@ mod tests {
         for expect in [
             "table1", "fig1", "fig3", "fig4", "table3", "fig5a", "fig5b", "fig5c",
             "fig6a", "fig6b", "fig6c", "fig7a", "fig7b", "fig7c", "fig8a", "fig8b",
-            "fig8c", "ablation", "perf",
+            "fig8c", "ablation", "perf", "cluster",
         ] {
             assert!(names.contains(&expect), "{expect} missing");
         }

@@ -18,8 +18,14 @@ pub struct DevicePool {
     devices: Vec<Device>,
     /// Last GPU each function ran on (stickiness).
     sticky: HashMap<FuncId, GpuId>,
-    /// Where each in-flight invocation is running.
-    placements: HashMap<InvocationId, GpuId>,
+    /// Where each in-flight invocation is running, and as what function
+    /// (kept here so completion never scans a device's running set).
+    placements: HashMap<InvocationId, (GpuId, FuncId)>,
+    /// Aggregate in-flight counters, maintained by [`Self::begin`] /
+    /// [`Self::complete`] so the dispatch path never scans devices:
+    /// [`Self::in_flight`] and [`Self::in_flight_of`] are O(1).
+    total_in_flight: usize,
+    per_func_in_flight: HashMap<FuncId, usize>,
 }
 
 impl DevicePool {
@@ -46,6 +52,8 @@ impl DevicePool {
             devices,
             sticky: HashMap::new(),
             placements: HashMap::new(),
+            total_in_flight: 0,
+            per_func_in_flight: HashMap::new(),
         }
     }
 
@@ -69,14 +77,14 @@ impl DevicePool {
         &mut self.devices[id.0 as usize]
     }
 
-    /// Total in-flight invocations across devices.
+    /// Total in-flight invocations across devices. O(1).
     pub fn in_flight(&self) -> usize {
-        self.devices.iter().map(|d| d.in_flight()).sum()
+        self.total_in_flight
     }
 
-    /// In-flight invocations of one function across devices.
+    /// In-flight invocations of one function across devices. O(1).
     pub fn in_flight_of(&self, func: FuncId) -> usize {
-        self.devices.iter().map(|d| d.in_flight_of(func)).sum()
+        self.per_func_in_flight.get(&func).copied().unwrap_or(0)
     }
 
     /// Pick a device for `func`, bounded by `per_gpu_limit` concurrent
@@ -112,18 +120,27 @@ impl DevicePool {
     ) {
         self.devices[gpu.0 as usize].begin(inv, func, class, now);
         self.sticky.insert(func, gpu);
-        self.placements.insert(inv, gpu);
+        self.placements.insert(inv, (gpu, func));
+        self.total_in_flight += 1;
+        *self.per_func_in_flight.entry(func).or_insert(0) += 1;
     }
 
     /// Complete an invocation; returns the device it ran on.
     pub fn complete(&mut self, inv: InvocationId, now: Nanos) -> Option<GpuId> {
-        let gpu = self.placements.remove(&inv)?;
+        let (gpu, func) = self.placements.remove(&inv)?;
         self.devices[gpu.0 as usize].complete(inv, now);
+        self.total_in_flight -= 1;
+        if let Some(n) = self.per_func_in_flight.get_mut(&func) {
+            *n -= 1;
+            if *n == 0 {
+                self.per_func_in_flight.remove(&func);
+            }
+        }
         Some(gpu)
     }
 
     pub fn placement(&self, inv: InvocationId) -> Option<GpuId> {
-        self.placements.get(&inv).copied()
+        self.placements.get(&inv).map(|(g, _)| *g)
     }
 
     pub fn sticky_gpu(&self, func: FuncId) -> Option<GpuId> {
@@ -202,6 +219,43 @@ mod tests {
         assert_eq!(pool.complete(InvocationId(7), 5), Some(GpuId(1)));
         assert_eq!(pool.placement(InvocationId(7)), None);
         assert_eq!(pool.complete(InvocationId(7), 5), None);
+    }
+
+    #[test]
+    fn aggregate_counters_track_per_device_sums() {
+        // Random begin/complete interleaving: the O(1) counters must
+        // match a full per-device scan after every operation.
+        let mut pool = DevicePool::new(3, V100, MultiplexMode::Plain);
+        let c = by_name("fft").unwrap();
+        let mut rng = crate::util::rng::Rng::new(0xC0);
+        let mut live: Vec<(InvocationId, FuncId)> = Vec::new();
+        let mut next = 0u64;
+        for _ in 0..400 {
+            if live.is_empty() || rng.f64() < 0.55 {
+                let inv = InvocationId(next);
+                let func = FuncId(rng.below(5) as u32);
+                next += 1;
+                let gpu = GpuId(rng.below(3) as u32);
+                pool.begin(gpu, inv, func, c, next);
+                live.push((inv, func));
+            } else {
+                let (inv, _) = live.swap_remove(rng.below(live.len()));
+                assert!(pool.complete(inv, next).is_some());
+            }
+            let scan_total: usize = pool.devices().iter().map(|d| d.in_flight()).sum();
+            assert_eq!(pool.in_flight(), scan_total);
+            for f in 0..5 {
+                let scan: usize = pool
+                    .devices()
+                    .iter()
+                    .map(|d| d.in_flight_of(FuncId(f)))
+                    .sum();
+                assert_eq!(pool.in_flight_of(FuncId(f)), scan, "func {f}");
+            }
+        }
+        // Unknown invocations/functions stay O(1) no-ops.
+        assert_eq!(pool.complete(InvocationId(u64::MAX), 0), None);
+        assert_eq!(pool.in_flight_of(FuncId(99)), 0);
     }
 
     #[test]

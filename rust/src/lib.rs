@@ -15,12 +15,15 @@
 //!   graphs whose hot-spots are Pallas kernels, AOT-lowered to HLO text in
 //!   `artifacts/` and executed by [`runtime`] through the PJRT CPU client.
 //!
-//! Start with [`plane::ControlPlane`] (the per-server control plane) or
-//! [`sim::replay`] (trace replay used by the experiment harness); the
-//! scheduling policies live in [`scheduler::policies`].
+//! Start with [`plane::ControlPlane`] (the per-server control plane),
+//! [`sim::replay`] (trace replay used by the experiment harness), or
+//! [`cluster::Cluster`] (the sharded multi-server control plane with
+//! locality-aware routing); the scheduling policies live in
+//! [`scheduler::policies`].
 
 pub mod cli;
 pub mod clock;
+pub mod cluster;
 pub mod container;
 pub mod experiments;
 pub mod gpu;

@@ -108,6 +108,23 @@ pub fn service_windows(
     out
 }
 
+/// Jain's fairness index over a set of per-function values (e.g. mean
+/// latencies in the fig9 cluster sweep): `(Σx)² / (n·Σx²)`, in
+/// `(0, 1]` — 1.0 when every function fares identically, → 1/n when one
+/// function takes everything. Empty/degenerate inputs report 1.0
+/// (nothing to be unfair about).
+pub fn jain_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq <= 0.0 {
+        return 1.0;
+    }
+    sum * sum / (xs.len() as f64 * sq)
+}
+
 /// The Eq-1 fairness upper bound (w=1 for all functions):
 /// |S_i − S_j| ≤ (D−1)(2T + τ_i − τ_j) — evaluated with the catalog's
 /// extreme τ values to get the workload-level bound the paper plots as
@@ -179,6 +196,17 @@ mod tests {
         // check is that measured gaps stay far below the bound.
         let b = fairness_bound_eq1(2, 10.0, 4.5, 0.026);
         assert!(b > 20.0 && b < 30.0, "{b}");
+    }
+
+    #[test]
+    fn jain_index_bounds() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+        assert!((jain_index(&[2.0, 2.0, 2.0]) - 1.0).abs() < 1e-12);
+        // One function hogging everything → 1/n.
+        assert!((jain_index(&[9.0, 0.0, 0.0]) - 1.0 / 3.0).abs() < 1e-12);
+        let mixed = jain_index(&[1.0, 2.0, 3.0]);
+        assert!(mixed > 1.0 / 3.0 && mixed < 1.0, "{mixed}");
     }
 
     #[test]

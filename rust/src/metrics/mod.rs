@@ -3,7 +3,7 @@
 
 pub mod fairness;
 
-pub use fairness::{fairness_bound_eq1, service_windows, FairnessWindow};
+pub use fairness::{fairness_bound_eq1, jain_index, service_windows, FairnessWindow};
 
 use std::collections::HashMap;
 
@@ -11,7 +11,11 @@ use crate::types::{to_secs, DurNanos, FuncId, GpuId, InvocationId, Nanos, StartK
 use crate::util::stats::{variance, Welford};
 
 /// Full life-cycle record of one completed invocation.
-#[derive(Debug, Clone, Copy)]
+///
+/// `PartialEq`/`Eq` compare every field — the cluster equivalence
+/// property ("a 1-shard cluster replays event-for-event like a plain
+/// plane") is checked by comparing whole record streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct InvRecord {
     pub inv: InvocationId,
     pub func: FuncId,
@@ -170,6 +174,24 @@ impl Recorder {
         variance(&means)
     }
 
+    /// Append every sample from `other` (cluster-level aggregation:
+    /// shard recorders merge into one). Call [`Self::sort_by_time`]
+    /// after the last merge to restore the completion-time order the
+    /// percentile/fairness reports assume.
+    pub fn merge(&mut self, other: &Recorder) {
+        self.records.extend_from_slice(&other.records);
+        self.util_timeline.extend_from_slice(&other.util_timeline);
+        self.d_timeline.extend_from_slice(&other.d_timeline);
+    }
+
+    /// Re-sort records and timelines by time (stable: same-instant ties
+    /// keep merge order, so merged output is deterministic).
+    pub fn sort_by_time(&mut self) {
+        self.records.sort_by_key(|r| r.completed);
+        self.util_timeline.sort_by_key(|(t, _)| *t);
+        self.d_timeline.sort_by_key(|(t, _)| *t);
+    }
+
     /// Mean utilization over the sampled timeline.
     pub fn mean_util(&self) -> f64 {
         if self.util_timeline.is_empty() {
@@ -233,6 +255,24 @@ mod tests {
         m.record(rec(0, 0, SEC, 2 * SEC, StartKind::GpuWarm));
         m.record(rec(1, 0, SEC, 2 * SEC, StartKind::GpuWarm));
         assert_eq!(m.inter_function_variance(), 0.0);
+    }
+
+    #[test]
+    fn merge_concatenates_and_sorts() {
+        let mut a = Recorder::new();
+        a.record(rec(0, 0, SEC, 4 * SEC, StartKind::GpuWarm));
+        a.sample_util(2 * SEC, 0.5, 2);
+        let mut b = Recorder::new();
+        b.record(rec(1, 0, SEC, 2 * SEC, StartKind::Cold));
+        b.sample_util(SEC, 1.0, 2);
+        a.merge(&b);
+        a.sort_by_time();
+        assert_eq!(a.len(), 2);
+        // Sorted by completion time: b's record (2 s) comes first.
+        assert_eq!(a.records[0].func, FuncId(1));
+        assert_eq!(a.util_timeline[0].0, SEC);
+        assert!((a.weighted_avg_latency_s() - 3.0).abs() < 1e-9);
+        assert!((a.cold_ratio() - 0.5).abs() < 1e-9);
     }
 
     #[test]

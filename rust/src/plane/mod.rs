@@ -256,7 +256,9 @@ impl ControlPlane {
     /// 2. every device's resident-memory ledger equals the sum of its
     ///    containers' resident regions (shim/device consistency);
     /// 3. container-pool size within capacity;
-    /// 4. per-function in-flight counters match the device pool.
+    /// 4. per-function in-flight counters match the device pool;
+    /// 5. the device pool's O(1) in-flight aggregates match the plane's
+    ///    own ledgers.
     pub fn check_invariants(&self) -> Result<(), String> {
         // Run-to-completion: a dynamic-D reduction never preempts, so
         // the hard bound is the controller's ceiling, not its current
@@ -306,6 +308,24 @@ impl ControlPlane {
         }
         if per_func != self.in_flight_per_func {
             return Err("per-function in-flight counters out of sync".into());
+        }
+        // 5. the device pool's O(1) aggregates agree with the plane's
+        //    own ledgers (they are maintained independently — begin/
+        //    complete vs the in-flight map — so drift is detectable).
+        if self.gpus.in_flight() != self.in_flight.len() {
+            return Err(format!(
+                "device-pool in-flight {} != plane in-flight {}",
+                self.gpus.in_flight(),
+                self.in_flight.len()
+            ));
+        }
+        for (f, &n) in per_func.iter().enumerate() {
+            let pool_n = self.gpus.in_flight_of(FuncId(f as u32));
+            if pool_n != n {
+                return Err(format!(
+                    "device-pool in-flight-of f{f} = {pool_n}, devices say {n}"
+                ));
+            }
         }
         Ok(())
     }

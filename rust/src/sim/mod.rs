@@ -1,22 +1,34 @@
-//! Discrete-event engine: replays an open-loop trace through the
-//! control plane under virtual time. Hour-scale paper experiments run
-//! in milliseconds of wall time here, with the *same* control-plane
-//! code the real-time driver uses.
+//! Discrete-event engine: replays an open-loop trace through a control
+//! plane — or a sharded [`Cluster`](crate::cluster::Cluster) — under
+//! virtual time. Hour-scale paper experiments run in milliseconds of
+//! wall time here, with the *same* control-plane code the real-time
+//! driver uses.
+//!
+//! The engine is generic over [`SimTarget`]: the single-server
+//! [`replay`] and the multi-shard [`replay_cluster`] share one event
+//! loop, so a 1-shard cluster is event-for-event identical to a plain
+//! plane replay by construction (property-tested in
+//! `rust/tests/prop_cluster.rs`). All shards advance on one global
+//! virtual clock; per-shard completions, touches, and monitor ticks are
+//! totally ordered by a stable (time, sequence) key, which is what
+//! makes multi-shard replays deterministic.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use crate::cluster::{Cluster, ClusterConfig};
 use crate::plane::{ControlPlane, Dispatch, PlaneConfig};
-use crate::types::{InvocationId, Nanos};
+use crate::types::{DurNanos, FuncId, InvocationId, Nanos};
 use crate::workload::{Trace, Workload};
 
-/// Engine event. Ordering: time, then kind (completions before ticks
-/// before touches at the same instant), then sequence for determinism.
+/// Engine event. Ordering: time, then sequence (unique — assigned in
+/// scheduling order, so same-instant events replay in the order their
+/// causes were processed), then kind for completeness.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 enum EvKind {
-    Complete(InvocationId),
-    /// Exact utilization-integral touch at an exec start.
-    Touch,
+    Complete(usize, InvocationId),
+    /// Exact utilization-integral touch at an exec start, per shard.
+    Touch(usize),
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -24,6 +36,157 @@ struct Ev {
     at: Nanos,
     seq: u64,
     kind: EvKind,
+}
+
+/// One dispatch decision tagged with the shard that made it (shard 0
+/// always, for a plain control plane).
+#[derive(Debug, Clone, Copy)]
+pub struct ShardDispatch {
+    pub shard: usize,
+    pub dispatch: Dispatch,
+}
+
+/// Anything the engine can drive on one global virtual clock: a single
+/// [`ControlPlane`] (every shard index is 0) or a [`Cluster`] of them.
+///
+/// The contract mirrors the plane's clock-agnostic entry points;
+/// implementations must be deterministic functions of the call sequence.
+pub trait SimTarget {
+    /// Work pending or in flight anywhere (monitor ticks fire only then).
+    fn busy(&self) -> bool;
+    fn sim_arrival(&mut self, func: FuncId, now: Nanos) -> Vec<ShardDispatch>;
+    fn sim_complete(&mut self, shard: usize, inv: InvocationId, now: Nanos)
+        -> Vec<ShardDispatch>;
+    fn sim_tick(&mut self, now: Nanos) -> Vec<ShardDispatch>;
+    fn sim_touch(&mut self, shard: usize, now: Nanos);
+    /// (pending, in_flight) totals, for the runaway diagnostic.
+    fn sim_load(&self) -> (usize, usize);
+}
+
+impl SimTarget for ControlPlane {
+    fn busy(&self) -> bool {
+        self.in_flight() > 0 || self.pending() > 0
+    }
+
+    fn sim_arrival(&mut self, func: FuncId, now: Nanos) -> Vec<ShardDispatch> {
+        let (_, ds) = self.on_arrival(func, now);
+        crate::cluster::tag(0, ds)
+    }
+
+    fn sim_complete(
+        &mut self,
+        _shard: usize,
+        inv: InvocationId,
+        now: Nanos,
+    ) -> Vec<ShardDispatch> {
+        crate::cluster::tag(0, self.on_complete(inv, now))
+    }
+
+    fn sim_tick(&mut self, now: Nanos) -> Vec<ShardDispatch> {
+        crate::cluster::tag(0, self.on_monitor_tick(now))
+    }
+
+    fn sim_touch(&mut self, _shard: usize, now: Nanos) {
+        self.touch(now);
+    }
+
+    fn sim_load(&self) -> (usize, usize) {
+        (self.pending(), self.in_flight())
+    }
+}
+
+/// The shared event loop. Runs until every arrival has been ingested
+/// and every dispatched invocation completed; monitor ticks fire on the
+/// configured cadence whenever work is pending or in flight. Returns
+/// (makespan, events processed).
+fn drive<T: SimTarget>(target: &mut T, trace: &Trace, monitor_period: DurNanos) -> (Nanos, u64) {
+    let monitor_period = monitor_period.max(1);
+    let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+    let mut seq: u64 = 0;
+    let mut next_arrival = 0usize;
+    let mut next_tick: Nanos = monitor_period;
+    let mut makespan: Nanos = 0;
+    let mut events: u64 = 0;
+
+    let push = |heap: &mut BinaryHeap<Reverse<Ev>>, seq: &mut u64, at: Nanos, kind: EvKind| {
+        *seq += 1;
+        heap.push(Reverse(Ev { at, seq: *seq, kind }));
+    };
+
+    let schedule_dispatches = |heap: &mut BinaryHeap<Reverse<Ev>>,
+                                   seq: &mut u64,
+                                   ds: &[ShardDispatch]| {
+        for sd in ds {
+            let d = sd.dispatch;
+            if d.exec_start > d.at {
+                push(heap, seq, d.exec_start, EvKind::Touch(sd.shard));
+            }
+            push(heap, seq, d.complete_at, EvKind::Complete(sd.shard, d.inv));
+        }
+    };
+
+    loop {
+        // Next event: earliest of pending trace arrival vs heap.
+        let arrival_at = trace.events.get(next_arrival).map(|e| e.at);
+        let heap_at = heap.peek().map(|Reverse(e)| e.at);
+        let busy = target.busy();
+
+        // Monitor ticks only while the system has work (otherwise an
+        // idle server would tick forever). Known quirk inherited from
+        // the original engine (kept bit-for-bit so replays stay
+        // comparable across PRs): next_tick is not re-synced after an
+        // idle gap, so the first ticks after work resumes are delivered
+        // at stale virtual times until the cadence catches up — they
+        // cannot dispatch (no slot/container frees without a
+        // completion) but do sample the utilization timeline early.
+        // Tracked in ROADMAP; fix alongside a toolchain-verified run.
+        let tick_at = if busy { Some(next_tick) } else { None };
+
+        let candidates = [arrival_at, heap_at, tick_at];
+        let Some(now) = candidates.iter().flatten().min().copied() else {
+            break; // fully drained
+        };
+        events += 1;
+        // Runaway guard: a scheduling deadlock would otherwise tick
+        // forever in virtual time. Fail loudly instead.
+        #[allow(clippy::manual_assert)]
+        if events >= 500_000_000 {
+            let (pending, in_flight) = target.sim_load();
+            panic!(
+                "sim runaway: {pending} pending, {in_flight} in flight at t={}s",
+                crate::types::to_secs(now)
+            );
+        }
+
+        if tick_at == Some(now) && arrival_at.map(|t| t > now).unwrap_or(true)
+            && heap_at.map(|t| t > now).unwrap_or(true)
+        {
+            let ds = target.sim_tick(now);
+            schedule_dispatches(&mut heap, &mut seq, &ds);
+            next_tick = now + monitor_period;
+            continue;
+        }
+
+        if arrival_at == Some(now) && heap_at.map(|t| t >= now).unwrap_or(true) {
+            let ev = trace.events[next_arrival];
+            next_arrival += 1;
+            let ds = target.sim_arrival(ev.func, now);
+            schedule_dispatches(&mut heap, &mut seq, &ds);
+            continue;
+        }
+
+        let Reverse(ev) = heap.pop().unwrap();
+        match ev.kind {
+            EvKind::Complete(shard, inv) => {
+                let ds = target.sim_complete(shard, inv, ev.at);
+                makespan = makespan.max(ev.at);
+                schedule_dispatches(&mut heap, &mut seq, &ds);
+            }
+            EvKind::Touch(shard) => target.sim_touch(shard, ev.at),
+        }
+    }
+
+    (makespan, events)
 }
 
 /// Replay outcome.
@@ -49,84 +212,9 @@ impl ReplayResult {
 /// invocation completed. Monitor ticks fire on the configured cadence
 /// whenever work is pending or in flight.
 pub fn replay(workload: Workload, trace: &Trace, cfg: PlaneConfig) -> ReplayResult {
-    let monitor_period = cfg.monitor_period.max(1);
+    let monitor_period = cfg.monitor_period;
     let mut plane = ControlPlane::new(workload, cfg);
-    let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
-    let mut seq: u64 = 0;
-    let mut next_arrival = 0usize;
-    let mut next_tick: Nanos = monitor_period;
-    let mut makespan: Nanos = 0;
-    let mut events: u64 = 0;
-
-    let push = |heap: &mut BinaryHeap<Reverse<Ev>>, seq: &mut u64, at: Nanos, kind: EvKind| {
-        *seq += 1;
-        heap.push(Reverse(Ev { at, seq: *seq, kind }));
-    };
-
-    let schedule_dispatches = |heap: &mut BinaryHeap<Reverse<Ev>>,
-                                   seq: &mut u64,
-                                   ds: &[Dispatch]| {
-        for d in ds {
-            if d.exec_start > d.at {
-                push(heap, seq, d.exec_start, EvKind::Touch);
-            }
-            push(heap, seq, d.complete_at, EvKind::Complete(d.inv));
-        }
-    };
-
-    loop {
-        // Next event: earliest of pending trace arrival vs heap.
-        let arrival_at = trace.events.get(next_arrival).map(|e| e.at);
-        let heap_at = heap.peek().map(|Reverse(e)| e.at);
-        let busy = plane.in_flight() > 0 || plane.pending() > 0;
-
-        // Monitor ticks only while the system has work (otherwise an
-        // idle server would tick forever).
-        let tick_at = if busy { Some(next_tick) } else { None };
-
-        let candidates = [arrival_at, heap_at, tick_at];
-        let Some(now) = candidates.iter().flatten().min().copied() else {
-            break; // fully drained
-        };
-        events += 1;
-        // Runaway guard: a scheduling deadlock would otherwise tick
-        // forever in virtual time. Fail loudly instead.
-        assert!(
-            events < 500_000_000,
-            "sim runaway: {} pending, {} in flight at t={}s",
-            plane.pending(),
-            plane.in_flight(),
-            crate::types::to_secs(now)
-        );
-
-        if tick_at == Some(now) && arrival_at.map(|t| t > now).unwrap_or(true)
-            && heap_at.map(|t| t > now).unwrap_or(true)
-        {
-            let ds = plane.on_monitor_tick(now);
-            schedule_dispatches(&mut heap, &mut seq, &ds);
-            next_tick = now + monitor_period;
-            continue;
-        }
-
-        if arrival_at == Some(now) && heap_at.map(|t| t >= now).unwrap_or(true) {
-            let ev = trace.events[next_arrival];
-            next_arrival += 1;
-            let (_, ds) = plane.on_arrival(ev.func, now);
-            schedule_dispatches(&mut heap, &mut seq, &ds);
-            continue;
-        }
-
-        let Reverse(ev) = heap.pop().unwrap();
-        match ev.kind {
-            EvKind::Complete(inv) => {
-                let ds = plane.on_complete(inv, ev.at);
-                makespan = makespan.max(ev.at);
-                schedule_dispatches(&mut heap, &mut seq, &ds);
-            }
-            EvKind::Touch => plane.touch(ev.at),
-        }
-    }
-
+    let (makespan, events) = drive(&mut plane, trace, monitor_period);
     let mean_util = plane.mean_utilization(makespan.max(1));
     ReplayResult {
         plane,
@@ -136,9 +224,50 @@ pub fn replay(workload: Workload, trace: &Trace, cfg: PlaneConfig) -> ReplayResu
     }
 }
 
+/// Cluster replay outcome.
+pub struct ClusterReplayResult {
+    pub cluster: Cluster,
+    /// All shards' records merged and completion-ordered, built once at
+    /// the end of the replay (per-shard recorders stay available on
+    /// `cluster.shards[i].recorder`).
+    recorder: crate::metrics::Recorder,
+    /// Virtual time when the last invocation completed (any shard).
+    pub makespan: Nanos,
+    /// Mean device utilization across every shard's devices.
+    pub mean_util: f64,
+    /// Events processed across the whole cluster.
+    pub events: u64,
+}
+
+impl ClusterReplayResult {
+    /// Cluster-level recorder (all shards merged, completion-ordered).
+    pub fn recorder(&self) -> &crate::metrics::Recorder {
+        &self.recorder
+    }
+}
+
+/// Replay `trace` through an N-shard cluster: the router assigns each
+/// arrival to a shard, and all shards advance on one global virtual
+/// clock (see the module docs for the determinism contract).
+pub fn replay_cluster(workload: Workload, trace: &Trace, cfg: ClusterConfig) -> ClusterReplayResult {
+    let monitor_period = cfg.plane.monitor_period;
+    let mut cluster = Cluster::new(workload, cfg);
+    let (makespan, events) = drive(&mut cluster, trace, monitor_period);
+    let mean_util = cluster.mean_utilization(makespan.max(1));
+    let recorder = cluster.merged_recorder();
+    ClusterReplayResult {
+        cluster,
+        recorder,
+        makespan,
+        mean_util,
+        events,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::RouterKind;
     use crate::scheduler::policies::PolicyKind;
     use crate::types::{secs, FuncId};
     use crate::workload::catalog::by_name;
@@ -255,5 +384,66 @@ mod tests {
         t.events[0].func = FuncId(1); // valid
         let r = replay(w, &t, PlaneConfig::default());
         assert_eq!(r.recorder().len(), 1);
+    }
+
+    #[test]
+    fn cluster_replay_completes_and_drains() {
+        let (w, t) = tiny_workload();
+        let r = replay_cluster(
+            w,
+            &t,
+            ClusterConfig {
+                n_shards: 3,
+                router: RouterKind::RoundRobin,
+                ..Default::default()
+            },
+        );
+        assert_eq!(r.recorder().len(), 20);
+        assert_eq!(r.cluster.pending(), 0);
+        assert_eq!(r.cluster.in_flight(), 0);
+        assert!(r.makespan > 0);
+        assert_eq!(r.cluster.routed.iter().sum::<u64>(), 20);
+    }
+
+    #[test]
+    fn cluster_replay_is_deterministic() {
+        let (w, t) = tiny_workload();
+        let cfg = ClusterConfig {
+            n_shards: 4,
+            router: RouterKind::StickyCh,
+            ..Default::default()
+        };
+        let r1 = replay_cluster(w.clone(), &t, cfg.clone());
+        let r2 = replay_cluster(w, &t, cfg);
+        assert_eq!(r1.makespan, r2.makespan);
+        assert_eq!(r1.events, r2.events);
+        assert_eq!(r1.cluster.routed, r2.cluster.routed);
+        assert_eq!(r1.recorder().records, r2.recorder().records);
+    }
+
+    #[test]
+    fn more_shards_cut_latency_under_heavy_load() {
+        // Weak sanity: the same overloaded trace on 4 shards must beat
+        // 1 shard on average latency (more hardware, same work).
+        let (w, t) = tiny_workload();
+        let mut dense = t.clone();
+        for e in &mut dense.events {
+            e.at /= 8; // 8× the offered rate
+        }
+        dense.sort();
+        let one = replay_cluster(w.clone(), &dense, ClusterConfig {
+            n_shards: 1,
+            router: RouterKind::LeastLoaded,
+            ..Default::default()
+        });
+        let four = replay_cluster(w, &dense, ClusterConfig {
+            n_shards: 4,
+            router: RouterKind::LeastLoaded,
+            ..Default::default()
+        });
+        assert!(
+            four.recorder().weighted_avg_latency_s()
+                <= one.recorder().weighted_avg_latency_s()
+        );
     }
 }

@@ -9,7 +9,28 @@ pub mod zipf;
 pub use catalog::{FuncClass, CATALOG};
 pub use trace::{Trace, TraceEvent, Workload, WorkloadFunc};
 
+use crate::types::Nanos;
 use crate::util::rng::Rng;
+
+/// Uniformly rescale the offered load of a workload + trace by `factor`
+/// (> 1 compresses time, multiplying the request rate; < 1 stretches
+/// it). Burst structure and per-function popularity are preserved —
+/// only the global rate shifts — which is how the cluster sweep turns
+/// one calibrated single-server trace into an N-shard offered load
+/// (weak scaling: rate × N against N× the hardware).
+pub fn scale_rate(workload: &mut Workload, trace: &mut trace::Trace, factor: f64) {
+    assert!(factor > 0.0 && factor.is_finite(), "bad rate factor {factor}");
+    for e in &mut trace.events {
+        e.at = (e.at as f64 / factor).round() as Nanos;
+    }
+    for f in &mut workload.funcs {
+        f.mean_iat_s /= factor;
+    }
+    // Division preserves time order, but rounding can collapse distinct
+    // instants into ties — re-sort to restore the canonical (at, func)
+    // order every replay assumes.
+    trace.sort();
+}
 
 /// Assign catalog classes to popularity ranks (rank 0 = most popular)
 /// such that popular functions skew *short* — the Azure production
@@ -38,6 +59,67 @@ pub fn shortness_biased_assignment(
         order.swap(i, j);
     }
     order
+}
+
+#[cfg(test)]
+mod scale_rate_tests {
+    use super::*;
+    use crate::types::secs;
+    use crate::workload::trace::TraceEvent;
+
+    #[test]
+    fn doubling_rate_halves_duration_and_keeps_counts() {
+        let (mut w, mut t) = {
+            let mut w = Workload::default();
+            let a = w.register(catalog::by_name("fft").unwrap(), 0, 2.0);
+            let b = w.register(catalog::by_name("lud").unwrap(), 0, 4.0);
+            let mut t = trace::Trace::default();
+            for i in 0..40 {
+                t.events.push(TraceEvent {
+                    at: secs(i as f64 * 0.7),
+                    func: if i % 3 == 0 { b } else { a },
+                });
+            }
+            t.sort();
+            (w, t)
+        };
+        let before_counts = t.counts(w.len());
+        let before_dur = t.duration();
+        let before_rps = t.req_per_sec();
+        scale_rate(&mut w, &mut t, 2.0);
+        assert_eq!(t.counts(w.len()), before_counts);
+        assert_eq!(t.duration(), before_dur / 2);
+        assert!((t.req_per_sec() - 2.0 * before_rps).abs() < 1e-6);
+        assert!((w.funcs[0].mean_iat_s - 1.0).abs() < 1e-12);
+        assert!((w.funcs[1].mean_iat_s - 2.0).abs() < 1e-12);
+        // Canonical order preserved.
+        assert!(t
+            .events
+            .windows(2)
+            .all(|p| (p[0].at, p[0].func) <= (p[1].at, p[1].func)));
+    }
+
+    #[test]
+    fn identity_factor_is_a_noop() {
+        let mut w = Workload::default();
+        let a = w.register(catalog::by_name("fft").unwrap(), 0, 1.5);
+        let mut t = trace::Trace::default();
+        t.events.push(TraceEvent { at: secs(3.2), func: a });
+        let orig = t.events.clone();
+        scale_rate(&mut w, &mut t, 1.0);
+        assert_eq!(t.events, orig);
+        assert!((w.funcs[0].mean_iat_s - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaling_preserves_func_ids_in_range() {
+        let (mut w, mut t) = zipf::generate(&zipf::ZipfConfig {
+            duration_s: 60.0,
+            ..Default::default()
+        });
+        scale_rate(&mut w, &mut t, 8.0);
+        assert!(t.events.iter().all(|e| (e.func.0 as usize) < w.len()));
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,197 @@
+//! Property tests for the cluster subsystem: the 1-shard equivalence
+//! contract (a single-shard cluster replays event-for-event identically
+//! to the plain single-plane engine, under *any* router) and cluster
+//! conservation/determinism on randomized traces.
+
+use mqfq::cluster::{ClusterConfig, ALL_ROUTERS};
+use mqfq::plane::PlaneConfig;
+use mqfq::scheduler::policies::PolicyKind;
+use mqfq::scheduler::MqfqConfig;
+use mqfq::sim::{replay, replay_cluster};
+use mqfq::types::{secs, FuncId};
+use mqfq::util::prop::{assert_prop, Gen};
+use mqfq::workload::catalog::CATALOG;
+use mqfq::workload::trace::{Trace, TraceEvent, Workload};
+
+/// Random workload + open-loop trace (mirrors prop_scheduler's shape).
+fn gen_scenario(g: &mut Gen) -> (Workload, Trace) {
+    let n_funcs = g.int(1, 10);
+    let mut w = Workload::default();
+    for i in 0..n_funcs {
+        let class = &CATALOG[g.int(0, CATALOG.len() - 1)];
+        w.register(class, i, g.f64(0.5, 20.0));
+    }
+    let n_events = g.int(1, 100);
+    let horizon = g.f64(10.0, 240.0);
+    let mut t = Trace::default();
+    for _ in 0..n_events {
+        t.events.push(TraceEvent {
+            at: secs(g.f64(0.0, horizon)),
+            func: FuncId(g.int(0, n_funcs - 1) as u32),
+        });
+    }
+    t.sort();
+    (w, t)
+}
+
+fn gen_plane_config(g: &mut Gen) -> PlaneConfig {
+    PlaneConfig {
+        policy: *g.choose(&[
+            PolicyKind::Fcfs,
+            PolicyKind::Batch,
+            PolicyKind::PaellaSjf,
+            PolicyKind::Eevdf,
+            PolicyKind::Sfq,
+            PolicyKind::Mqfq,
+        ]),
+        n_gpus: g.int(1, 2),
+        d: g.int(1, 3),
+        pool_size: g.int(2, 32),
+        mqfq: MqfqConfig {
+            t: g.f64(0.0, 20.0),
+            ttl_alpha: g.f64(0.0, 4.0),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// The acceptance criterion: a 1-shard cluster — whichever router
+/// fronts it — replays event-for-event identically to `sim::replay`
+/// (full per-invocation record stream, makespan, event count, pool
+/// stats, utilization integral).
+#[test]
+fn prop_single_shard_cluster_matches_plain_replay() {
+    assert_prop("single-shard equivalence", 40, |g| {
+        let (w, t) = gen_scenario(g);
+        let plane_cfg = gen_plane_config(g);
+        let router = *g.choose(&ALL_ROUTERS);
+        let seed = g.int(0, 1 << 20) as u64;
+
+        let plain = replay(w.clone(), &t, plane_cfg.clone());
+        let one = replay_cluster(
+            w,
+            &t,
+            ClusterConfig {
+                n_shards: 1,
+                router,
+                plane: plane_cfg.clone(),
+                load_factor: g.f64(1.0, 4.0),
+                seed,
+            },
+        );
+
+        let ctx = format!(
+            "router={} policy={} d={} gpus={} pool={}",
+            router.name(),
+            plane_cfg.policy.name(),
+            plane_cfg.d,
+            plane_cfg.n_gpus,
+            plane_cfg.pool_size
+        );
+        if one.events != plain.events {
+            return Err(format!(
+                "{ctx}: events {} != {}",
+                one.events, plain.events
+            ));
+        }
+        if one.makespan != plain.makespan {
+            return Err(format!(
+                "{ctx}: makespan {} != {}",
+                one.makespan, plain.makespan
+            ));
+        }
+        let merged = one.recorder();
+        if merged.records != plain.recorder().records {
+            return Err(format!(
+                "{ctx}: record streams diverge ({} vs {} records)",
+                merged.len(),
+                plain.recorder().len()
+            ));
+        }
+        if one.cluster.pool_stats() != plain.plane.pool_stats() {
+            return Err(format!(
+                "{ctx}: pool stats {:?} != {:?}",
+                one.cluster.pool_stats(),
+                plain.plane.pool_stats()
+            ));
+        }
+        if (one.mean_util - plain.mean_util).abs() > 1e-12 {
+            return Err(format!(
+                "{ctx}: mean util {} != {}",
+                one.mean_util, plain.mean_util
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Multi-shard conservation: every arrival completes exactly once,
+/// whichever shard it was routed to, and the cluster fully drains.
+#[test]
+fn prop_cluster_conserves_invocations() {
+    assert_prop("cluster conservation", 30, |g| {
+        let (w, t) = gen_scenario(g);
+        let n = t.len();
+        let cfg = ClusterConfig {
+            n_shards: g.int(1, 8),
+            router: *g.choose(&ALL_ROUTERS),
+            plane: gen_plane_config(g),
+            load_factor: g.f64(1.0, 3.0),
+            seed: g.int(0, 1 << 20) as u64,
+        };
+        let ctx = format!("shards={} router={}", cfg.n_shards, cfg.router.name());
+        let r = replay_cluster(w, &t, cfg);
+        if r.recorder().len() != n {
+            return Err(format!(
+                "{ctx}: {} arrivals but {} completions",
+                n,
+                r.recorder().len()
+            ));
+        }
+        if r.cluster.pending() != 0 || r.cluster.in_flight() != 0 {
+            return Err(format!(
+                "{ctx}: not drained ({} pending, {} in flight)",
+                r.cluster.pending(),
+                r.cluster.in_flight()
+            ));
+        }
+        let routed: u64 = r.cluster.routed.iter().sum();
+        if routed != n as u64 {
+            return Err(format!("{ctx}: routed {routed} != {n} arrivals"));
+        }
+        Ok(())
+    });
+}
+
+/// Multi-shard determinism: identical seeds ⇒ identical dispatch
+/// sequences and metrics, across every router.
+#[test]
+fn prop_cluster_replay_is_deterministic() {
+    assert_prop("cluster determinism", 20, |g| {
+        let (w, t) = gen_scenario(g);
+        let cfg = ClusterConfig {
+            n_shards: g.int(2, 8),
+            router: *g.choose(&ALL_ROUTERS),
+            plane: gen_plane_config(g),
+            load_factor: g.f64(1.0, 3.0),
+            seed: g.int(0, 1 << 20) as u64,
+        };
+        let a = replay_cluster(w.clone(), &t, cfg.clone());
+        let b = replay_cluster(w, &t, cfg.clone());
+        let ctx = format!("shards={} router={}", cfg.n_shards, cfg.router.name());
+        if a.events != b.events || a.makespan != b.makespan {
+            return Err(format!("{ctx}: event/makespan mismatch"));
+        }
+        if a.cluster.routed != b.cluster.routed {
+            return Err(format!(
+                "{ctx}: routing diverged {:?} vs {:?}",
+                a.cluster.routed, b.cluster.routed
+            ));
+        }
+        if a.recorder().records != b.recorder().records {
+            return Err(format!("{ctx}: record streams diverge"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,124 @@
+#!/usr/bin/env bash
+# Diff two BENCH_*.json artifacts (perf, cluster, ...) for cross-PR
+# trajectory tracking: per-row numeric deltas plus regression flagging.
+#
+# Usage: scripts/bench_diff.sh OLD.json NEW.json [--threshold PCT] [--strict]
+#
+#   --threshold PCT   flag a metric as moved when |delta| > PCT (default 10)
+#   --strict          exit 1 if any flagged move is a *regression*
+#
+# Direction is inferred from the metric name: latency/time/cold-ratio
+# style metrics regress upward; speedup/throughput/fairness style
+# metrics regress downward; unclassified metrics are reported but never
+# flagged as regressions.
+set -euo pipefail
+
+if [[ $# -lt 2 ]]; then
+    echo "usage: $0 OLD.json NEW.json [--threshold PCT] [--strict]" >&2
+    exit 2
+fi
+
+OLD=$1
+NEW=$2
+shift 2
+THRESHOLD=10
+STRICT=0
+while [[ $# -gt 0 ]]; do
+    case "$1" in
+        --threshold) THRESHOLD=$2; shift 2 ;;
+        --strict) STRICT=1; shift ;;
+        *) echo "unknown option $1" >&2; exit 2 ;;
+    esac
+done
+
+python3 - "$OLD" "$NEW" "$THRESHOLD" "$STRICT" <<'PY'
+import json
+import sys
+
+old_path, new_path, threshold, strict = (
+    sys.argv[1],
+    sys.argv[2],
+    float(sys.argv[3]),
+    sys.argv[4] == "1",
+)
+
+# Metrics where bigger is worse / better; anything else is neutral.
+WORSE_UP = ("_ns", "latency", "p50", "p99", "wavg", "cold_ratio", "makespan",
+            "imbalance", "blocking", "queue")
+BETTER_UP = ("speedup", "events_per_sec", "fairness", "jain", "util",
+             "throughput", "iters")
+
+
+def direction(path):
+    leaf = path.rsplit(".", 1)[-1].lower()
+    if any(k in leaf for k in WORSE_UP):
+        return "worse-up"
+    if any(k in leaf for k in BETTER_UP):
+        return "better-up"
+    return "neutral"
+
+
+def flatten(value, prefix, out):
+    """path -> number, with bench rows keyed by their identity fields."""
+    if isinstance(value, dict):
+        # Key sweep/bench rows by what identifies them, not array index,
+        # so adding a row to one file doesn't misalign the rest.
+        for key, sub in value.items():
+            flatten(sub, f"{prefix}.{key}" if prefix else key, out)
+    elif isinstance(value, list):
+        for i, sub in enumerate(value):
+            label = str(i)
+            if isinstance(sub, dict):
+                ident = [str(sub[k]) for k in ("router", "impl", "name", "shards",
+                                               "flows", "active") if k in sub]
+                if ident:
+                    label = ":".join(ident)
+            flatten(sub, f"{prefix}[{label}]", out)
+    elif isinstance(value, (int, float)) and not isinstance(value, bool):
+        out[prefix] = float(value)
+
+
+def load(path):
+    out = {}
+    with open(path) as f:
+        flatten(json.load(f), "", out)
+    return out
+
+
+old, new = load(old_path), load(new_path)
+shared = sorted(set(old) & set(new))
+only_old = sorted(set(old) - set(new))
+only_new = sorted(set(new) - set(old))
+
+moved, regressions = [], []
+for path in shared:
+    a, b = old[path], new[path]
+    if a == b:
+        continue
+    delta = (b - a) / abs(a) * 100.0 if a != 0 else float("inf")
+    if abs(delta) <= threshold:
+        continue
+    d = direction(path)
+    regressed = (d == "worse-up" and b > a) or (d == "better-up" and b < a)
+    moved.append((path, a, b, delta, d, regressed))
+    if regressed:
+        regressions.append(path)
+
+print(f"bench diff: {old_path} -> {new_path}")
+print(f"  {len(shared)} shared metrics, {len(moved)} moved more than {threshold:g}%")
+for path, a, b, delta, d, regressed in moved:
+    flag = " REGRESSION" if regressed else ""
+    sign = "+" if delta >= 0 else ""
+    print(f"  {path}: {a:g} -> {b:g} ({sign}{delta:.1f}%){flag}")
+for path in only_old:
+    print(f"  removed: {path}")
+for path in only_new:
+    print(f"  added:   {path}")
+
+if regressions:
+    print(f"{len(regressions)} regression(s) flagged")
+    if strict:
+        sys.exit(1)
+elif not moved:
+    print("  no metric moved beyond the threshold")
+PY
