@@ -1,6 +1,6 @@
 # Convenience targets; see ROADMAP.md for the tier-1 verify.
 
-.PHONY: check test bench-perf bench-cluster artifacts
+.PHONY: check test bench-perf bench-cluster bench-hetero artifacts
 
 # Build + test + clippy-clean (the full local gate).
 check:
@@ -17,6 +17,11 @@ bench-perf:
 # Compare against a previous run: scripts/bench_diff.sh OLD.json BENCH_cluster.json
 bench-cluster:
 	cargo bench --bench fig9_cluster_scaling
+
+# Regenerate the heterogeneous-fleet sweep and BENCH_hetero.json.
+# Compare against a previous run: scripts/bench_diff.sh OLD.json BENCH_hetero.json
+bench-hetero:
+	cargo bench --bench fig10_heterogeneous
 
 # AOT-lower the python/JAX function bodies to HLO artifacts where the
 # rust runtime (rust/artifacts/) looks for them.

@@ -1,0 +1,8 @@
+//! `cargo bench --bench fig10_heterogeneous` — the heterogeneous-fleet sweep (fleet × router).
+//! Thin wrapper over `mqfq::experiments::hetero::main` (also: `mqfq-sticky hetero`).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::hetero::main();
+    println!("[bench fig10_heterogeneous completed in {:.2?}]", t0.elapsed());
+}

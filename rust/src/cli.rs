@@ -5,13 +5,15 @@
 //! * `trace gen` — generate a Zipfian or Azure-style trace file.
 //! * `replay` — replay a trace file through the control plane (sim).
 //! * `cluster` — replay through a sharded multi-server cluster.
+//! * `hetero` — heterogeneous-fleet sweep (fig10): uniform vs mixed
+//!   hardware × router.
 //! * `serve` — real-time serving over TCP, executing PJRT artifacts.
 //! * `validate` — golden-check every AOT artifact via PJRT.
 
 use std::collections::HashMap;
 
 use crate::cluster::{ClusterConfig, RouterKind};
-use crate::gpu::MultiplexMode;
+use crate::gpu::{uniform_fleet, DeviceSpec, GpuProfile, MultiplexMode};
 use crate::memory::MemPolicy;
 use crate::plane::PlaneConfig;
 use crate::scheduler::policies::PolicyKind;
@@ -81,14 +83,79 @@ USAGE:
         [--policy fcfs|batch|sjf|eevdf|mqfq|sfq] [--d N] [--gpus N]
         [--mem stock-uvm|madvise|prefetch-only|prefetch+swap]
         [--mode plain|mps|mig:N] [--pool N] [--t SECS] [--alpha A]
-  mqfq-sticky cluster [--shards N] [--router rr|random|least|sticky]
+        [--fleet SPEC[,SPEC..]]  heterogeneous fleet, overrides
+              --gpus/--profile/--mode; SPEC = [NX]PROFILE[:mps|:migK][:dD]
+              e.g. --fleet 2xv100,a30:mig2,v100:d1
+  mqfq-sticky cluster [--shards N]
+        [--router rr|random|least|sticky|sticky-blind]
         [--load-factor F] [--seed K] [--trace FILE]
         [--rate R/shard] [--funcs N] [--duration S]   (generated zipf)
-        [+ replay options]      sharded multi-server replay (sim)
+        [+ replay options incl. --fleet]  sharded multi-server replay (sim)
+  mqfq-sticky hetero [--rate R/V100-equiv] [--duration S] [--funcs N]
+        [--seed K] [--load-factor F]     fig10 heterogeneous-fleet sweep:
+              uniform vs mixed shard hardware x router, BENCH_hetero.json
   mqfq-sticky serve [--addr HOST:PORT] [--artifacts DIR] [--scale X]
         [--policy P] [--d N]             real-time TCP serving
   mqfq-sticky validate [--artifacts DIR] golden-check all artifacts
 ";
+
+/// Parse one `--fleet` device spec: `[NX]PROFILE[:mps|:migK][:dD]`,
+/// e.g. `v100`, `2xv100`, `a30:mig2`, `v100:mps:d1`.
+fn parse_fleet_spec(s: &str) -> Result<Vec<DeviceSpec>, String> {
+    let mut parts = s.split(':');
+    let head = parts.next().unwrap_or_default();
+    let (count, prof_name) = match head.split_once('x') {
+        Some((n, p)) if n.chars().all(|c| c.is_ascii_digit()) && !n.is_empty() => {
+            (n.parse::<usize>().map_err(|_| format!("bad count in {s}"))?, p)
+        }
+        _ => (1, head),
+    };
+    if count == 0 {
+        return Err(format!("fleet spec {s}: count must be >= 1"));
+    }
+    let profile = parse_profile(prof_name)?;
+    let mut spec = DeviceSpec::new(profile, MultiplexMode::Plain);
+    for part in parts {
+        if part == "mps" {
+            spec.mode = MultiplexMode::Mps;
+        } else if let Some(k) = part.strip_prefix("mig") {
+            let k: u32 = k.parse().map_err(|_| format!("bad MIG slices in {s}"))?;
+            if k == 0 {
+                return Err(format!("fleet spec {s}: mig slices must be >= 1"));
+            }
+            spec.mode = MultiplexMode::Mig(k);
+        } else if let Some(d) = part.strip_prefix('d') {
+            let d: usize = d.parse().map_err(|_| format!("bad D override in {s}"))?;
+            if d == 0 {
+                return Err(format!("fleet spec {s}: D override must be >= 1"));
+            }
+            spec = spec.with_d(d);
+        } else {
+            return Err(format!("fleet spec {s}: unknown qualifier {part}"));
+        }
+    }
+    Ok(vec![spec; count])
+}
+
+/// Parse a full `--fleet` description (comma-separated specs).
+pub fn parse_fleet(s: &str) -> Result<Vec<DeviceSpec>, String> {
+    let mut fleet = Vec::new();
+    for part in s.split(',').filter(|p| !p.is_empty()) {
+        fleet.extend(parse_fleet_spec(part)?);
+    }
+    if fleet.is_empty() {
+        return Err("--fleet: no device specs given".into());
+    }
+    Ok(fleet)
+}
+
+fn parse_profile(p: &str) -> Result<GpuProfile, String> {
+    match p {
+        "v100" => Ok(crate::gpu::V100),
+        "a30" => Ok(crate::gpu::A30),
+        _ => Err(format!("unknown profile {p}")),
+    }
+}
 
 /// Build a PlaneConfig from common replay/serve options.
 pub fn plane_config(args: &Args) -> Result<PlaneConfig, String> {
@@ -97,7 +164,6 @@ pub fn plane_config(args: &Args) -> Result<PlaneConfig, String> {
         cfg.policy = PolicyKind::parse(p).ok_or_else(|| format!("unknown policy {p}"))?;
     }
     cfg.d = args.get_usize("d", cfg.d)?;
-    cfg.n_gpus = args.get_usize("gpus", cfg.n_gpus)?;
     cfg.pool_size = args.get_usize("pool", cfg.pool_size)?;
     if let Some(m) = args.get("mem") {
         cfg.mem_policy = match m {
@@ -108,23 +174,31 @@ pub fn plane_config(args: &Args) -> Result<PlaneConfig, String> {
             _ => return Err(format!("unknown mem policy {m}")),
         };
     }
-    if let Some(m) = args.get("mode") {
-        cfg.mode = match m {
-            "plain" => MultiplexMode::Plain,
-            "mps" => MultiplexMode::Mps,
-            _ => match m.strip_prefix("mig:").and_then(|n| n.parse().ok()) {
-                Some(n) => MultiplexMode::Mig(n),
+    // Fleet description: `--fleet` wins; otherwise the legacy uniform
+    // `--gpus/--profile/--mode` triple is assembled into one.
+    cfg.devices = if let Some(f) = args.get("fleet") {
+        parse_fleet(f)?
+    } else {
+        let n = args.get_usize("gpus", 1)?;
+        if n == 0 {
+            return Err("--gpus must be >= 1".into());
+        }
+        let profile = match args.get("profile") {
+            Some(p) => parse_profile(p)?,
+            None => crate::gpu::V100,
+        };
+        let mode = match args.get("mode") {
+            None => MultiplexMode::Plain,
+            Some("plain") => MultiplexMode::Plain,
+            Some("mps") => MultiplexMode::Mps,
+            Some(m) => match m.strip_prefix("mig:").and_then(|k| k.parse().ok()) {
+                Some(0) => return Err("--mode mig:N needs N >= 1".into()),
+                Some(k) => MultiplexMode::Mig(k),
                 None => return Err(format!("unknown mode {m}")),
             },
         };
-    }
-    if let Some(p) = args.get("profile") {
-        cfg.profile = match p {
-            "v100" => crate::gpu::V100,
-            "a30" => crate::gpu::A30,
-            _ => return Err(format!("unknown profile {p}")),
-        };
-    }
+        uniform_fleet(n, profile, mode)
+    };
     cfg.mqfq = MqfqConfig {
         t: args.get_f64("t", 10.0)?,
         ttl_alpha: args.get_f64("alpha", 2.0)?,
@@ -155,6 +229,7 @@ fn dispatch(argv: Vec<String>) -> Result<(), String> {
         "trace" => cmd_trace(&args),
         "replay" => cmd_replay(&args),
         "cluster" => cmd_cluster(&args),
+        "hetero" => cmd_hetero(&args),
         "serve" => cmd_serve(&args),
         "validate" => cmd_validate(&args),
         "help" | "--help" | "-h" => {
@@ -270,9 +345,29 @@ pub fn cluster_config(args: &Args) -> Result<ClusterConfig, String> {
         n_shards,
         router,
         plane: plane_config(args)?,
+        shard_planes: Vec::new(),
         load_factor,
         seed: args.get_usize("seed", defaults.seed as usize)? as u64,
     })
+}
+
+/// Run the fig10 heterogeneous-fleet sweep with optional overrides.
+fn cmd_hetero(args: &Args) -> Result<(), String> {
+    let defaults = crate::experiments::hetero::SweepConfig::default();
+    let load_factor = args.get_f64("load-factor", defaults.load_factor)?;
+    if !(load_factor > 0.0 && load_factor.is_finite()) {
+        return Err(format!("--load-factor must be a positive number, got {load_factor}"));
+    }
+    let cfg = crate::experiments::hetero::SweepConfig {
+        per_capacity_rate: args.get_f64("rate", defaults.per_capacity_rate)?,
+        duration_s: args.get_f64("duration", defaults.duration_s)?,
+        n_funcs: args.get_usize("funcs", defaults.n_funcs)?,
+        seed: args.get_usize("seed", defaults.seed as usize)? as u64,
+        load_factor,
+        ..defaults
+    };
+    crate::experiments::hetero::run(&cfg);
+    Ok(())
 }
 
 fn cmd_cluster(args: &Args) -> Result<(), String> {
@@ -384,8 +479,52 @@ mod tests {
         let cfg = plane_config(&a).unwrap();
         assert_eq!(cfg.policy, PolicyKind::Fcfs);
         assert_eq!(cfg.d, 3);
-        assert_eq!(cfg.mode, MultiplexMode::Mig(2));
+        assert_eq!(cfg.devices, uniform_fleet(1, crate::gpu::V100, MultiplexMode::Mig(2)));
         assert_eq!(cfg.mem_policy, MemPolicy::Madvise);
+        // Legacy triple: --gpus/--profile/--mode assemble a uniform fleet.
+        let a = Args::parse(&argv("--gpus 2 --profile a30 --mode mps")).unwrap();
+        let cfg = plane_config(&a).unwrap();
+        assert_eq!(cfg.devices, uniform_fleet(2, crate::gpu::A30, MultiplexMode::Mps));
+    }
+
+    #[test]
+    fn fleet_option_builds_mixed_hardware() {
+        let a = Args::parse(&argv("--fleet 2xv100,a30:mig2,v100:mps:d1")).unwrap();
+        let cfg = plane_config(&a).unwrap();
+        assert_eq!(cfg.devices.len(), 4);
+        assert_eq!(cfg.devices[0], DeviceSpec::new(crate::gpu::V100, MultiplexMode::Plain));
+        assert_eq!(cfg.devices[1], cfg.devices[0]);
+        assert_eq!(
+            cfg.devices[2],
+            DeviceSpec::new(crate::gpu::A30, MultiplexMode::Mig(2))
+        );
+        assert_eq!(
+            cfg.devices[3],
+            DeviceSpec::new(crate::gpu::V100, MultiplexMode::Mps).with_d(1)
+        );
+        // --fleet wins over the legacy triple.
+        let a = Args::parse(&argv("--fleet a30 --gpus 4 --profile v100")).unwrap();
+        assert_eq!(
+            plane_config(&a).unwrap().devices,
+            vec![DeviceSpec::new(crate::gpu::A30, MultiplexMode::Plain)]
+        );
+    }
+
+    #[test]
+    fn bad_fleet_specs_rejected() {
+        for bad in [
+            "--fleet bogus",
+            "--fleet v100:mig0",
+            "--fleet v100:d0",
+            "--fleet 0xv100",
+            "--fleet v100:warp9",
+            "--fleet ,",
+            "--mode mig:0",
+            "--gpus 0",
+        ] {
+            let a = Args::parse(&argv(bad)).unwrap();
+            assert!(plane_config(&a).is_err(), "{bad} should be rejected");
+        }
     }
 
     #[test]

@@ -9,20 +9,36 @@
 //! balancer; the *only* cluster-level decision is which shard an
 //! arrival lands on.
 //!
+//! # Heterogeneous shards
+//!
+//! Shards need not be identical hardware: [`ClusterConfig::shard_planes`]
+//! gives every shard its own [`PlaneConfig`] (fleet of
+//! [`crate::gpu::DeviceSpec`]s, D level, pool size, ...), so a 4×V100
+//! server can sit behind the same front end as a single MIG-sliced A30.
+//! Each shard's static service capacity
+//! ([`PlaneConfig::fleet_capacity`], V100-equivalents) is exposed to
+//! the router through [`router::ShardLoad::capacity`]; the fig10
+//! heterogeneity sweep (`experiments::hetero`) measures how much
+//! capacity-aware routing buys on skewed fleets.
+//!
 //! # Routing policies
 //!
 //! * [`router::RoundRobin`] — cycle shards; load- and locality-blind.
 //! * [`router::Random`] — seeded uniform choice; the classic stateless
 //!   load balancer.
-//! * [`router::LeastLoaded`] — smallest `pending() + in_flight()`
-//!   depth; load-aware but locality-blind.
-//! * [`router::StickyCh`] — consistent hashing with bounded loads:
-//!   every function has a load-independent *home shard* (warm
-//!   locality), spilling clockwise along the hash ring only while the
-//!   home's depth is at/above `load_factor ×` the cluster-mean depth.
+//! * [`router::LeastLoaded`] — smallest capacity-normalized
+//!   `pending() + in_flight()` depth; load-aware but locality-blind.
+//! * [`router::StickyCh`] — capacity-weighted consistent hashing with
+//!   bounded loads: every function has a load-independent *home shard*
+//!   (warm locality) on a ring where a shard's arc scales with its
+//!   capacity, spilling clockwise only while the home's depth is
+//!   at/above its capacity share of `load_factor ×` the cluster depth.
 //!   This is the cluster-level analog of the paper's per-GPU sticky
 //!   placement, and the reason the fig9 sweep shows it with a lower
 //!   cold-start ratio than the spray routers.
+//! * [`router::RouterKind::StickyChBlind`] — the same ring with
+//!   capacities ignored; the ablation baseline the fig10 gate compares
+//!   against (identical to StickyCh when shards are uniform).
 //!
 //! # Determinism contract
 //!
@@ -50,13 +66,18 @@ use crate::types::{FuncId, InvocationId, Nanos};
 use crate::workload::Workload;
 
 /// Cluster-level configuration: shard count, routing policy, and the
-/// per-shard plane config (every shard is identical hardware).
+/// shard hardware — one shared plane config, or one per shard.
 #[derive(Clone)]
 pub struct ClusterConfig {
     pub n_shards: usize,
     pub router: RouterKind,
-    /// Per-shard control-plane config (policy, GPUs, pool, ...).
+    /// Control-plane config every shard clones when [`Self::shard_planes`]
+    /// is empty (policy, fleet, pool, ...).
     pub plane: PlaneConfig,
+    /// Heterogeneous cluster: explicit per-shard plane configs (must
+    /// hold exactly `n_shards` entries). Empty ⇒ a uniform cluster of
+    /// [`Self::plane`] clones.
+    pub shard_planes: Vec<PlaneConfig>,
     /// [`router::StickyCh`] bounded-load spill factor (≥ 1.0 keeps some
     /// locality; large values never spill). Ignored by other routers.
     pub load_factor: f64,
@@ -70,9 +91,29 @@ impl Default for ClusterConfig {
             n_shards: 4,
             router: RouterKind::StickyCh,
             plane: PlaneConfig::default(),
+            shard_planes: Vec::new(),
             load_factor: 1.25,
             seed: 0,
         }
+    }
+}
+
+impl ClusterConfig {
+    /// The plane config shard `shard` runs.
+    pub fn plane_for(&self, shard: usize) -> &PlaneConfig {
+        if self.shard_planes.is_empty() {
+            &self.plane
+        } else {
+            &self.shard_planes[shard]
+        }
+    }
+
+    /// Per-shard static service capacity (V100-equivalents), the
+    /// weights behind capacity-aware routing.
+    pub fn shard_capacities(&self) -> Vec<f64> {
+        (0..self.n_shards)
+            .map(|s| self.plane_for(s).fleet_capacity())
+            .collect()
     }
 }
 
@@ -86,6 +127,9 @@ pub struct Cluster {
     pub cfg: ClusterConfig,
     pub shards: Vec<ControlPlane>,
     router: Box<dyn Router>,
+    /// Per-shard fleet capacity (V100-equivalents), precomputed for the
+    /// router's [`ShardLoad`] snapshots.
+    capacities: Vec<f64>,
     /// Arrivals routed to each shard (routing-skew diagnostics).
     pub routed: Vec<u64>,
 }
@@ -95,12 +139,20 @@ impl Cluster {
     /// (any function may run anywhere — placement is the router's call).
     pub fn new(workload: Workload, cfg: ClusterConfig) -> Self {
         assert!(cfg.n_shards >= 1, "cluster needs at least one shard");
-        let router = cfg.router.build(cfg.n_shards, cfg.load_factor, cfg.seed);
+        assert!(
+            cfg.shard_planes.is_empty() || cfg.shard_planes.len() == cfg.n_shards,
+            "shard_planes must be empty or hold one config per shard"
+        );
+        let capacities = cfg.shard_capacities();
+        let router = cfg
+            .router
+            .build(cfg.n_shards, cfg.load_factor, cfg.seed, &capacities);
         let shards: Vec<ControlPlane> = (0..cfg.n_shards)
-            .map(|_| ControlPlane::new(workload.clone(), cfg.plane.clone()))
+            .map(|s| ControlPlane::new(workload.clone(), cfg.plane_for(s).clone()))
             .collect();
         Self {
             routed: vec![0; cfg.n_shards],
+            capacities,
             router,
             shards,
             cfg,
@@ -130,12 +182,19 @@ impl Cluster {
         self.shards.iter().map(|p| p.in_flight()).sum()
     }
 
+    /// Per-shard fleet capacities (V100-equivalents).
+    pub fn capacities(&self) -> &[f64] {
+        &self.capacities
+    }
+
     fn loads(&self) -> Vec<ShardLoad> {
         self.shards
             .iter()
-            .map(|p| ShardLoad {
+            .enumerate()
+            .map(|(s, p)| ShardLoad {
                 pending: p.pending(),
                 in_flight: p.in_flight(),
+                capacity: self.capacities[s],
             })
             .collect()
     }
@@ -350,6 +409,57 @@ mod tests {
         c.on_arrival(FuncId(0), 0);
         c.on_arrival(FuncId(0), 1);
         assert_eq!(c.pool_stats().cold, 2);
+    }
+
+    #[test]
+    fn per_shard_planes_build_mixed_hardware() {
+        use crate::gpu::{uniform_fleet, MultiplexMode, A30, V100};
+        let planes = vec![
+            PlaneConfig::uniform(2, V100, MultiplexMode::Plain),
+            PlaneConfig::uniform(1, A30, MultiplexMode::Mig(2)),
+        ];
+        let mut c = Cluster::new(
+            workload3(),
+            ClusterConfig {
+                n_shards: 2,
+                router: RouterKind::LeastLoaded,
+                shard_planes: planes,
+                ..Default::default()
+            },
+        );
+        // Capacities: 2×V100 = 2.0; one MIG-sliced A30 = 1/0.92.
+        assert!((c.capacities()[0] - 2.0).abs() < 1e-12);
+        assert!((c.capacities()[1] - 1.0 / 0.92).abs() < 1e-12);
+        // LeastLoaded on an idle cluster: lowest index first, and the
+        // MIG shard really exposes two slice vGPUs.
+        let (s, _, ds) = c.on_arrival(FuncId(0), 0);
+        assert_eq!(s, 0);
+        assert_eq!(ds.len(), 1);
+        assert_eq!(c.shards[1].device_utilizations(1).len(), 2);
+        // Uniform default still applies when shard_planes is empty.
+        let u = Cluster::new(
+            workload3(),
+            ClusterConfig {
+                n_shards: 3,
+                ..Default::default()
+            },
+        );
+        assert_eq!(u.capacities(), &[1.0, 1.0, 1.0]);
+        assert_eq!(
+            u.cfg.plane_for(2).devices,
+            uniform_fleet(1, V100, MultiplexMode::Plain)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "shard_planes")]
+    fn mismatched_shard_planes_rejected() {
+        let cfg = ClusterConfig {
+            n_shards: 3,
+            shard_planes: vec![PlaneConfig::default()],
+            ..Default::default()
+        };
+        Cluster::new(workload3(), cfg);
     }
 
     #[test]

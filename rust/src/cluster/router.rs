@@ -8,6 +8,24 @@
 //! warm pool's hit rate, while spray routers ([`RoundRobin`],
 //! [`Random`]) re-pay the cold start on every shard a function touches.
 //!
+//! # Heterogeneous shards
+//!
+//! Shards are not assumed identical: every [`ShardLoad`] carries the
+//! shard's static service `capacity` (V100-equivalents of its fleet,
+//! see [`crate::plane::PlaneConfig::fleet_capacity`]). [`LeastLoaded`]
+//! balances *normalized* depth (depth ÷ capacity), and [`StickyCh`] is
+//! a capacity-**weighted** ring: a shard's virtual-node count and its
+//! bounded-load share both scale with its capacity, so a 4×-GPU shard
+//! owns ~4× the functions and absorbs ~4× the depth before spilling —
+//! and because fat shards own proportionally more ring points, the
+//! deterministic clockwise spill walk reaches them sooner, making the
+//! spill order itself speed-aware. [`RouterKind::StickyChBlind`] keeps
+//! the capacity-*blind* ring (uniform vnodes + mean-depth bound) as the
+//! ablation baseline the fig10 heterogeneity gate compares against.
+//! With equal capacities the weighted and blind rings are constructed
+//! identically, so uniform clusters behave exactly as before
+//! (property-tested in `rust/tests/prop_hetero.rs`).
+//!
 //! Every router is deterministic given its construction seed, which is
 //! what makes multi-shard replays reproducible (see
 //! [`crate::sim::replay_cluster`]).
@@ -16,12 +34,25 @@ use crate::types::FuncId;
 use crate::util::rng::{Rng, SplitMix64};
 
 /// Instantaneous queue depth of one shard, as visible to the front end.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct ShardLoad {
     /// Invocations queued (not yet dispatched) on the shard.
     pub pending: usize,
     /// Invocations currently executing on the shard's devices.
     pub in_flight: usize,
+    /// Static service capacity of the shard's fleet in V100-equivalents
+    /// (1.0 for a single baseline GPU). Strictly positive.
+    pub capacity: f64,
+}
+
+impl Default for ShardLoad {
+    fn default() -> Self {
+        Self {
+            pending: 0,
+            in_flight: 0,
+            capacity: 1.0,
+        }
+    }
 }
 
 impl ShardLoad {
@@ -58,9 +89,14 @@ pub enum RouterKind {
     Random,
     LeastLoaded,
     StickyCh,
+    /// [`StickyCh`] with capacities ignored (uniform ring + mean-depth
+    /// bound) — the ablation baseline for heterogeneous fleets.
+    StickyChBlind,
 }
 
-/// Every router, in the order the fig9 sweep reports them.
+/// The fig9 sweep's router set, in reporting order. (The capacity-blind
+/// sticky ablation is omitted: on the uniform fleets fig9 sweeps it is
+/// identical to [`RouterKind::StickyCh`] by construction.)
 pub const ALL_ROUTERS: [RouterKind; 4] = [
     RouterKind::RoundRobin,
     RouterKind::Random,
@@ -75,6 +111,7 @@ impl RouterKind {
             "random" => RouterKind::Random,
             "least" | "least-loaded" => RouterKind::LeastLoaded,
             "sticky" | "sticky-ch" => RouterKind::StickyCh,
+            "sticky-blind" | "blind" => RouterKind::StickyChBlind,
             _ => return None,
         })
     }
@@ -85,21 +122,44 @@ impl RouterKind {
             RouterKind::Random => "random",
             RouterKind::LeastLoaded => "least-loaded",
             RouterKind::StickyCh => "sticky-ch",
+            RouterKind::StickyChBlind => "sticky-blind",
         }
     }
 
     /// Instantiate for `n_shards`. `load_factor` and `seed` are used by
     /// [`StickyCh`] (spill bound, ring layout); `seed` also drives
-    /// [`Random`].
-    pub fn build(&self, n_shards: usize, load_factor: f64, seed: u64) -> Box<dyn Router> {
+    /// [`Random`]. `capacities` (one entry per shard, or empty for a
+    /// uniform cluster) weights the [`RouterKind::StickyCh`] ring;
+    /// [`RouterKind::StickyChBlind`] deliberately drops it.
+    pub fn build(
+        &self,
+        n_shards: usize,
+        load_factor: f64,
+        seed: u64,
+        capacities: &[f64],
+    ) -> Box<dyn Router> {
         assert!(n_shards >= 1, "cluster needs at least one shard");
+        assert!(
+            capacities.is_empty() || capacities.len() == n_shards,
+            "capacities must be empty or one per shard"
+        );
         match self {
             RouterKind::RoundRobin => Box::new(RoundRobin { next: 0 }),
             RouterKind::Random => Box::new(Random {
                 rng: Rng::new(seed ^ 0x5A5A_0001),
             }),
             RouterKind::LeastLoaded => Box::new(LeastLoaded),
-            RouterKind::StickyCh => Box::new(StickyCh::new(n_shards, load_factor, seed)),
+            RouterKind::StickyCh => Box::new(StickyCh::weighted(
+                n_shards,
+                load_factor,
+                seed,
+                capacities,
+            )),
+            RouterKind::StickyChBlind => {
+                let mut r = StickyCh::new(n_shards, load_factor, seed);
+                r.name = "sticky-blind";
+                Box::new(r)
+            }
         }
     }
 }
@@ -136,7 +196,9 @@ impl Router for Random {
     }
 }
 
-/// Smallest `pending + in_flight` depth; ties go to the lowest index.
+/// Smallest capacity-normalized depth (`(pending + in_flight) /
+/// capacity`); ties go to the lowest index. On a uniform cluster the
+/// normalization cancels and this is the plain least-depth rule.
 pub struct LeastLoaded;
 
 impl Router for LeastLoaded {
@@ -147,7 +209,11 @@ impl Router for LeastLoaded {
     fn route(&mut self, _func: FuncId, loads: &[ShardLoad]) -> usize {
         let mut best = 0;
         for (s, l) in loads.iter().enumerate().skip(1) {
-            if l.depth() < loads[best].depth() {
+            // depth/capacity comparison, cross-multiplied so equal
+            // capacities reduce to the exact integer depth comparison.
+            if (l.depth() as f64) * loads[best].capacity
+                < (loads[best].depth() as f64) * l.capacity
+            {
                 best = s;
             }
         }
@@ -155,48 +221,112 @@ impl Router for LeastLoaded {
     }
 }
 
-/// Consistent hashing with a bounded-load spill factor.
+/// Consistent hashing with a bounded-load spill factor, optionally
+/// capacity-weighted for heterogeneous shards.
 ///
-/// Each shard owns [`StickyCh::VNODES`] points on a `u64` ring; a
-/// function's *home shard* is the owner of the first ring point at or
-/// after `hash(func)`. Home assignment never changes with load, so a
-/// function's warm containers concentrate on one shard (the cluster
-/// analog of §5's per-GPU stickiness).
+/// Each shard owns a number of points on a `u64` ring — a uniform
+/// [`StickyCh::VNODES`] when capacity-blind, or a count proportional to
+/// its fleet capacity when weighted (a 4×-GPU shard owns ~4× the arc,
+/// and therefore homes ~4× the functions). A function's *home shard* is
+/// the owner of the first ring point at or after `hash(func)`. Home
+/// assignment never changes with load, so a function's warm containers
+/// concentrate on one shard (the cluster analog of §5's per-GPU
+/// stickiness).
 ///
 /// Spill rule (consistent hashing with bounded loads): an invocation
-/// stays home only while the home's depth is below the capacity bound
+/// stays home only while the home's depth is below its capacity share
+/// of the bound
 ///
 /// ```text
-/// cap = ceil(load_factor × (total_depth + 1) / n_shards)
+/// bound(s) = ceil(load_factor × (total_depth + 1) × share(s))
 /// ```
 ///
-/// i.e. `load_factor ×` the cluster-mean depth counting the new
-/// arrival. When the home is at/over the bound, the invocation walks
-/// the ring clockwise to the next *distinct* shard below the bound
-/// (deterministic spill order per function). If every shard is at the
-/// bound (uniform overload), it stays home — spilling could not help
-/// and would only shred locality.
+/// where `share(s)` is the shard's fraction of cluster capacity (`1/n`
+/// when blind/uniform — exactly the classic mean-depth bound). When the
+/// home is at/over its bound, the invocation walks the ring clockwise
+/// to the next *distinct* shard below its own bound (deterministic
+/// spill order per function; on a weighted ring fat shards own more
+/// points, so the walk reaches them sooner — the spill order itself is
+/// speed-aware). If every shard is at its bound (uniform overload), it
+/// stays home — spilling could not help and would only shred locality.
 pub struct StickyCh {
     /// (ring point, shard), sorted by point.
     ring: Vec<(u64, usize)>,
     n_shards: usize,
     load_factor: f64,
+    /// Per-shard fraction of the bounded-load budget (sums to 1).
+    shares: Vec<f64>,
+    /// Reported router name ("sticky-ch", or "sticky-blind" for the
+    /// capacity-ignoring ablation).
+    name: &'static str,
     /// Spills observed (diagnostics; exposed via [`StickyCh::spills`]).
     spills: u64,
 }
 
 impl StickyCh {
-    /// Virtual nodes per shard: enough to even out ring arcs at 16
-    /// shards without making the ring walk expensive.
+    /// Virtual nodes per unit-capacity shard: enough to even out ring
+    /// arcs at 16 shards without making the ring walk expensive.
     pub const VNODES: usize = 32;
+    /// Hard cap on one shard's vnodes (bounds ring size under extreme
+    /// capacity skew).
+    const MAX_VNODES: usize = 1024;
+    /// Salt for vnodes beyond the base [`Self::VNODES`] layout, so the
+    /// weighted ring's extra points can never collide with (or reorder)
+    /// the uniform layout's points.
+    const EXTRA_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
 
+    /// Capacity-blind ring: every shard owns [`Self::VNODES`] points
+    /// and a `1/n` share of the bounded-load budget.
     pub fn new(n_shards: usize, load_factor: f64, seed: u64) -> Self {
+        Self::weighted(n_shards, load_factor, seed, &[])
+    }
+
+    /// Capacity-weighted ring. `capacities` holds one positive weight
+    /// per shard; empty — or all-equal — degenerates to the blind
+    /// layout *exactly* (same ring points, same `1/n` shares), which is
+    /// what keeps uniform clusters byte-identical to the
+    /// pre-heterogeneity router.
+    pub fn weighted(n_shards: usize, load_factor: f64, seed: u64, capacities: &[f64]) -> Self {
         assert!(load_factor > 0.0, "load_factor must be positive");
         assert!(n_shards <= 128, "spill bitset covers up to 128 shards");
-        let mut ring = Vec::with_capacity(n_shards * Self::VNODES);
+        assert!(
+            capacities.is_empty() || capacities.len() == n_shards,
+            "capacities must be empty or one per shard"
+        );
+        let uniform = capacities.is_empty()
+            || capacities.windows(2).all(|w| w[0] == w[1]);
+        let (vnodes, shares): (Vec<usize>, Vec<f64>) = if uniform {
+            (
+                vec![Self::VNODES; n_shards],
+                vec![1.0 / n_shards as f64; n_shards],
+            )
+        } else {
+            assert!(
+                capacities.iter().all(|&c| c > 0.0 && c.is_finite()),
+                "shard capacities must be positive"
+            );
+            let total: f64 = capacities.iter().sum();
+            let mean = total / n_shards as f64;
+            let vnodes = capacities
+                .iter()
+                .map(|&c| {
+                    ((Self::VNODES as f64 * c / mean).round() as usize)
+                        .clamp(1, Self::MAX_VNODES)
+                })
+                .collect();
+            let shares = capacities.iter().map(|&c| c / total).collect();
+            (vnodes, shares)
+        };
+        let mut ring = Vec::with_capacity(vnodes.iter().sum());
         for shard in 0..n_shards {
-            for v in 0..Self::VNODES {
+            for v in 0..vnodes[shard].min(Self::VNODES) {
                 ring.push((mix(seed, (shard * Self::VNODES + v) as u64), shard));
+            }
+            for v in Self::VNODES..vnodes[shard] {
+                ring.push((
+                    mix(seed ^ Self::EXTRA_SALT, (shard * Self::MAX_VNODES + v) as u64),
+                    shard,
+                ));
             }
         }
         ring.sort_unstable();
@@ -204,6 +334,8 @@ impl StickyCh {
             ring,
             n_shards,
             load_factor,
+            shares,
+            name: "sticky-ch",
             spills: 0,
         }
     }
@@ -225,7 +357,7 @@ impl StickyCh {
 
 impl Router for StickyCh {
     fn name(&self) -> &'static str {
-        "sticky-ch"
+        self.name
     }
 
     fn spills(&self) -> u64 {
@@ -236,7 +368,7 @@ impl Router for StickyCh {
         debug_assert_eq!(loads.len(), self.n_shards);
         let (start, home) = self.ring_start(func);
         let total: usize = loads.iter().map(|l| l.depth()).sum();
-        let cap = (self.load_factor * (total as f64 + 1.0) / self.n_shards as f64).ceil();
+        let budget = self.load_factor * (total as f64 + 1.0);
         let mut visited: u128 = 0;
         let mut seen = 0usize;
         for i in 0..self.ring.len() {
@@ -246,7 +378,10 @@ impl Router for StickyCh {
             }
             visited |= 1 << shard;
             seen += 1;
-            if (loads[shard].depth() as f64) < cap {
+            // Each shard absorbs its capacity share of the bounded-load
+            // budget (1/n when blind/uniform).
+            let bound = (budget * self.shares[shard]).ceil();
+            if (loads[shard].depth() as f64) < bound {
                 if shard != home {
                     self.spills += 1;
                 }
@@ -276,14 +411,24 @@ mod tests {
             .iter()
             .map(|&d| ShardLoad {
                 pending: d,
+                ..Default::default()
+            })
+            .collect()
+    }
+
+    fn loads_cap(rows: &[(usize, f64)]) -> Vec<ShardLoad> {
+        rows.iter()
+            .map(|&(d, c)| ShardLoad {
+                pending: d,
                 in_flight: 0,
+                capacity: c,
             })
             .collect()
     }
 
     #[test]
     fn round_robin_cycles() {
-        let mut r = RouterKind::RoundRobin.build(3, 1.25, 0);
+        let mut r = RouterKind::RoundRobin.build(3, 1.25, 0, &[]);
         let l = loads(&[0, 0, 0]);
         let picks: Vec<usize> = (0..6).map(|_| r.route(FuncId(0), &l)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
@@ -292,8 +437,8 @@ mod tests {
     #[test]
     fn random_is_deterministic_and_in_range() {
         let l = loads(&[0; 5]);
-        let mut a = RouterKind::Random.build(5, 1.25, 9);
-        let mut b = RouterKind::Random.build(5, 1.25, 9);
+        let mut a = RouterKind::Random.build(5, 1.25, 9, &[]);
+        let mut b = RouterKind::Random.build(5, 1.25, 9, &[]);
         for i in 0..100 {
             let pa = a.route(FuncId(i), &l);
             assert_eq!(pa, b.route(FuncId(i), &l));
@@ -303,9 +448,19 @@ mod tests {
 
     #[test]
     fn least_loaded_picks_min_with_low_index_ties() {
-        let mut r = RouterKind::LeastLoaded.build(4, 1.25, 0);
+        let mut r = RouterKind::LeastLoaded.build(4, 1.25, 0, &[]);
         assert_eq!(r.route(FuncId(0), &loads(&[3, 1, 2, 1])), 1);
         assert_eq!(r.route(FuncId(0), &loads(&[0, 0, 0, 0])), 0);
+    }
+
+    #[test]
+    fn least_loaded_normalizes_by_capacity() {
+        let mut r = RouterKind::LeastLoaded.build(2, 1.25, 0, &[]);
+        // Depth 4 on a 4×-capacity shard (norm 1.0) beats depth 2 on a
+        // 1× shard (norm 2.0).
+        assert_eq!(r.route(FuncId(0), &loads_cap(&[(2, 1.0), (4, 4.0)])), 1);
+        // Equal normalized depth: lowest index wins.
+        assert_eq!(r.route(FuncId(0), &loads_cap(&[(1, 1.0), (4, 4.0)])), 0);
     }
 
     #[test]
@@ -357,22 +512,99 @@ mod tests {
 
     #[test]
     fn router_kind_parse_roundtrip() {
-        for k in ALL_ROUTERS {
+        for k in ALL_ROUTERS.into_iter().chain([RouterKind::StickyChBlind]) {
             assert_eq!(RouterKind::parse(k.name()), Some(k));
         }
         assert_eq!(RouterKind::parse("rr"), Some(RouterKind::RoundRobin));
         assert_eq!(RouterKind::parse("sticky"), Some(RouterKind::StickyCh));
+        assert_eq!(RouterKind::parse("blind"), Some(RouterKind::StickyChBlind));
         assert_eq!(RouterKind::parse("nope"), None);
     }
 
     #[test]
     fn single_shard_routers_all_pick_zero() {
         let l = loads(&[3]);
-        for k in ALL_ROUTERS {
-            let mut r = k.build(1, 1.25, 11);
+        for k in ALL_ROUTERS.into_iter().chain([RouterKind::StickyChBlind]) {
+            let mut r = k.build(1, 1.25, 11, &[1.0]);
             for f in 0..8 {
                 assert_eq!(r.route(FuncId(f), &l), 0, "{}", k.name());
             }
         }
+    }
+
+    #[test]
+    fn weighted_ring_with_equal_capacities_matches_blind() {
+        // The uniform-fleet equivalence backbone: equal capacities must
+        // reproduce the blind ring bit-for-bit — homes, routes, spills.
+        let caps = vec![1.25f64; 8];
+        let weighted = StickyCh::weighted(8, 1.25, 7, &caps);
+        let blind = StickyCh::new(8, 1.25, 7);
+        assert_eq!(weighted.ring, blind.ring);
+        for f in 0..256 {
+            assert_eq!(weighted.home(FuncId(f)), blind.home(FuncId(f)));
+        }
+        let mut w = RouterKind::StickyCh.build(4, 1.25, 3, &[2.0; 4]);
+        let mut b = RouterKind::StickyChBlind.build(4, 1.25, 3, &[2.0; 4]);
+        let mut d = vec![0usize; 4];
+        for f in 0..64 {
+            let l = loads(&d);
+            let pw = w.route(FuncId(f), &l);
+            assert_eq!(pw, b.route(FuncId(f), &l));
+            d[pw] += 1; // build up skewed depths as we go
+        }
+        assert_eq!(w.spills(), b.spills());
+    }
+
+    #[test]
+    fn weighted_ring_skews_homes_toward_fat_shards() {
+        // 4× capacity on shard 0: it should own roughly 4/7 of the
+        // function space instead of 1/4.
+        let caps = [4.0, 1.0, 1.0, 1.0];
+        let s = StickyCh::weighted(4, 1.25, 7, &caps);
+        let mut owned = [0usize; 4];
+        let n_funcs = 4096;
+        for f in 0..n_funcs {
+            owned[s.home(FuncId(f))] += 1;
+        }
+        let fat_share = owned[0] as f64 / n_funcs as f64;
+        assert!(
+            (0.45..0.70).contains(&fat_share),
+            "fat shard owns {fat_share:.3}, expected ≈ 4/7"
+        );
+        for (i, &o) in owned.iter().enumerate().skip(1) {
+            assert!(o > 0, "shard {i} owns nothing");
+            assert!(o < owned[0], "shard {i} out-owns the fat shard");
+        }
+    }
+
+    #[test]
+    fn weighted_bound_protects_small_shards() {
+        // Weighted StickyCh spills off a *small* home sooner than the
+        // blind mean-depth bound would: depth 6 on a 1/8-capacity home
+        // exceeds its weighted bound but sits below the blind mean.
+        let caps = [4.0, 2.0, 1.0, 1.0];
+        let mut s = StickyCh::weighted(4, 1.25, 7, &caps);
+        // Find a function homed on a small shard (share 1/8) under
+        // *both* rings, so the comparison isolates the bound.
+        let blind_ring = StickyCh::new(4, 1.25, 7);
+        let f = (0..1024)
+            .map(FuncId)
+            .find(|&f| s.home(f) >= 2 && blind_ring.home(f) == s.home(f))
+            .expect("some function homes on a small shard in both rings");
+        let home = s.home(f);
+        let mut d = [8usize, 8, 0, 0];
+        d[home] = 6; // total ≈ 22 ⇒ weighted bound ≈ ceil(1.25·23/8) = 4
+        let l = loads_cap(&[
+            (d[0], 4.0),
+            (d[1], 2.0),
+            (d[2], 1.0),
+            (d[3], 1.0),
+        ]);
+        let picked = s.route(f, &l);
+        assert_ne!(picked, home, "small overloaded home must shed load");
+        assert_eq!(s.spills(), 1);
+        // Blind bound: ceil(1.25·23/4) = 8 > 6 ⇒ stays home.
+        let mut blind = RouterKind::StickyChBlind.build(4, 1.25, 7, &[]);
+        assert_eq!(blind.route(f, &l), home);
     }
 }

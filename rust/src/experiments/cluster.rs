@@ -123,6 +123,7 @@ pub fn sweep(cfg: &SweepConfig) -> Vec<ClusterRow> {
                 n_shards: n,
                 router,
                 plane: PlaneConfig::default(),
+                shard_planes: Vec::new(),
                 load_factor: cfg.load_factor,
                 seed: cfg.seed,
             };

@@ -5,7 +5,7 @@
 //! * 7b — per-function slowdown on a half-GPU MIG slice.
 //! * 7c — 1 vs 2 V100s across D on a high-load trace.
 
-use crate::gpu::{Device, MultiplexMode, A30, V100};
+use crate::gpu::{uniform_fleet, Device, DeviceSpec, MultiplexMode, A30, V100};
 use crate::plane::PlaneConfig;
 use crate::scheduler::policies::PolicyKind;
 use crate::types::GpuId;
@@ -28,7 +28,7 @@ fn run_7a(trace_id: usize, label: &str, cfg: PlaneConfig) -> RunSummary {
 
 pub fn fig7a_rows(trace_id: usize) -> Vec<(String, f64)> {
     let base = PlaneConfig {
-        profile: A30,
+        devices: uniform_fleet(1, A30, MultiplexMode::Plain),
         policy: PolicyKind::Mqfq,
         d: 2,
         ..Default::default()
@@ -38,7 +38,7 @@ pub fn fig7a_rows(trace_id: usize) -> Vec<(String, f64)> {
         (
             "mqfq+mig",
             PlaneConfig {
-                mode: MultiplexMode::Mig(2),
+                devices: uniform_fleet(1, A30, MultiplexMode::Mig(2)),
                 ..base.clone()
             },
         ),
@@ -47,7 +47,7 @@ pub fn fig7a_rows(trace_id: usize) -> Vec<(String, f64)> {
             // plane just shovels work in arrival order at high D.
             "mps-only",
             PlaneConfig {
-                mode: MultiplexMode::Mps,
+                devices: uniform_fleet(1, A30, MultiplexMode::Mps),
                 policy: PolicyKind::Fcfs,
                 d: 8,
                 ..base.clone()
@@ -56,7 +56,7 @@ pub fn fig7a_rows(trace_id: usize) -> Vec<(String, f64)> {
         (
             "mqfq+mps",
             PlaneConfig {
-                mode: MultiplexMode::Mps,
+                devices: uniform_fleet(1, A30, MultiplexMode::Mps),
                 ..base.clone()
             },
         ),
@@ -106,8 +106,8 @@ pub fn fig7a() {
 }
 
 pub fn fig7b_rows() -> Vec<(&'static str, f64)> {
-    let full = Device::new(GpuId(0), A30, MultiplexMode::Plain);
-    let slice = Device::mig_slice(GpuId(1), A30, 2);
+    let full = Device::new(GpuId(0), DeviceSpec::new(A30, MultiplexMode::Plain));
+    let slice = Device::new(GpuId(1), DeviceSpec::new(A30, MultiplexMode::Mig(2)));
     CATALOG
         .iter()
         .map(|c| {
@@ -142,8 +142,7 @@ pub fn fig7c_rows() -> Vec<RunSummary> {
                 load_scale: 1.4,
             });
             let cfg = PlaneConfig {
-                profile: V100,
-                n_gpus,
+                devices: uniform_fleet(n_gpus, V100, MultiplexMode::Plain),
                 d,
                 policy: PolicyKind::Mqfq,
                 ..Default::default()

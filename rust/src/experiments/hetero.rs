@@ -1,0 +1,558 @@
+//! §Fig 10 (beyond the paper): heterogeneous-fleet sweep — what does
+//! capacity-aware routing buy when shards stop being identical?
+//!
+//! Sweeps fleet shapes (uniform 4×V100, mixed V100/A30, V100 beside
+//! MIG-sliced A30s, and 2×/4× capacity-skewed V100 clusters) × router
+//! on the Zipf-1.5 trace, with offered load proportional to total
+//! fleet capacity (constant per-V100-equivalent rate, so every fleet
+//! sees the same relative pressure). Reports p50/p99 latency, Jain
+//! fairness, cold-start ratio, and utilization imbalance per device
+//! class and per shard. Results land in
+//! `results/fig10_heterogeneous.csv` and machine-readable
+//! `BENCH_hetero.json` (`scripts/bench_diff.sh`, identity-keyed by
+//! fleet + router).
+//!
+//! The gate ([`assert_capacity_win`]): on fleets with ≥ 2× capacity
+//! skew, the capacity-weighted [`StickyCh`] must not lose to the
+//! capacity-blind ablation on p99 — the weighted ring homes
+//! proportionally more functions on fat shards and sheds load off thin
+//! ones sooner, which is the whole point of threading `DeviceSpec`
+//! capacities up to the front end.
+//!
+//! [`StickyCh`]: crate::cluster::router::StickyCh
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{ClusterConfig, RouterKind};
+use crate::gpu::{uniform_fleet, DeviceSpec, MultiplexMode, A30, V100};
+use crate::metrics::jain_index;
+use crate::plane::PlaneConfig;
+use crate::sim::{replay_cluster, ClusterReplayResult};
+use crate::util::csv::CsvWriter;
+use crate::util::json::{self, Json};
+use crate::util::stats::percentiles;
+use crate::util::table::Table;
+use crate::workload::zipf::{self, ZipfConfig};
+
+/// One swept cluster shape: a name plus each shard's fleet.
+#[derive(Debug, Clone)]
+pub struct Fleet {
+    pub name: &'static str,
+    pub shard_fleets: Vec<Vec<DeviceSpec>>,
+}
+
+impl Fleet {
+    pub fn n_shards(&self) -> usize {
+        self.shard_fleets.len()
+    }
+
+    /// Per-shard capacities (V100-equivalents).
+    pub fn capacities(&self) -> Vec<f64> {
+        self.shard_fleets
+            .iter()
+            .map(|f| f.iter().map(|s| s.capacity()).sum())
+            .collect()
+    }
+
+    pub fn total_capacity(&self) -> f64 {
+        self.capacities().iter().sum()
+    }
+
+    /// Max/min shard-capacity ratio (1.0 = uniform).
+    pub fn capacity_skew(&self) -> f64 {
+        let caps = self.capacities();
+        let max = caps.iter().cloned().fold(f64::MIN, f64::max);
+        let min = caps.iter().cloned().fold(f64::MAX, f64::min);
+        max / min
+    }
+}
+
+/// The standard fig10 fleet shapes (4 shards each).
+pub fn standard_fleets() -> Vec<Fleet> {
+    let v100 = |n| uniform_fleet(n, V100, MultiplexMode::Plain);
+    let a30 = uniform_fleet(1, A30, MultiplexMode::Plain);
+    let a30_mig = uniform_fleet(1, A30, MultiplexMode::Mig(2));
+    vec![
+        Fleet {
+            name: "uniform-4xv100",
+            shard_fleets: vec![v100(1), v100(1), v100(1), v100(1)],
+        },
+        Fleet {
+            name: "mixed-v100-a30",
+            shard_fleets: vec![v100(1), v100(1), a30.clone(), a30],
+        },
+        Fleet {
+            name: "mig-mixed",
+            shard_fleets: vec![v100(1), v100(1), a30_mig.clone(), a30_mig],
+        },
+        Fleet {
+            name: "skew2x",
+            shard_fleets: vec![v100(2), v100(2), v100(1), v100(1)],
+        },
+        Fleet {
+            name: "skew4x",
+            shard_fleets: vec![v100(4), v100(1), v100(1), v100(1)],
+        },
+    ]
+}
+
+/// Sweep parameters (the bench uses the defaults; tests shrink them).
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub fleets: Vec<Fleet>,
+    pub routers: Vec<RouterKind>,
+    /// Offered load per V100-equivalent of fleet capacity, req/s (the
+    /// total rate scales with each fleet's capacity).
+    pub per_capacity_rate: f64,
+    pub duration_s: f64,
+    pub n_funcs: usize,
+    pub seed: u64,
+    /// StickyCh bounded-load spill factor.
+    pub load_factor: f64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            fleets: standard_fleets(),
+            routers: vec![
+                RouterKind::RoundRobin,
+                RouterKind::LeastLoaded,
+                RouterKind::StickyChBlind,
+                RouterKind::StickyCh,
+            ],
+            per_capacity_rate: 2.0,
+            duration_s: 600.0,
+            n_funcs: 24,
+            seed: 42,
+            load_factor: 1.25,
+        }
+    }
+}
+
+/// One (fleet, router) cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct HeteroRow {
+    pub fleet: &'static str,
+    pub router: &'static str,
+    pub capacity_skew: f64,
+    pub total_capacity: f64,
+    pub invocations: usize,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub wavg_s: f64,
+    pub cold_ratio: f64,
+    /// Jain index over per-function mean latencies (1.0 = perfectly fair).
+    pub fairness_jain: f64,
+    pub mean_util: f64,
+    /// Max − min mean utilization across device *classes* (v100,
+    /// a30/mig2, ...); 0 when the fleet has one class.
+    pub class_util_spread: f64,
+    /// Max − min mean utilization across *shards* — the imbalance
+    /// capacity-blind routing leaves on skewed fleets.
+    pub shard_util_spread: f64,
+    pub makespan_s: f64,
+    /// Max per-shard arrival share vs an even split (1.0 = balanced;
+    /// note on skewed fleets an even split is *not* the goal).
+    pub routing_imbalance: f64,
+    /// StickyCh arrivals routed off their home shard (0 for others).
+    pub spills: u64,
+}
+
+/// Measure one replay into a sweep row (needs `&mut` for the exact
+/// per-device utilization integrals).
+pub fn measure(fleet: &Fleet, router: RouterKind, r: &mut ClusterReplayResult) -> HeteroRow {
+    let rec = r.recorder();
+    let lat = rec.latencies_s();
+    let pcts = percentiles(&lat, &[50.0, 99.0]);
+    let per_fn: Vec<f64> = rec.per_function().iter().map(|a| a.mean_latency_s).collect();
+    let row_basics = (
+        rec.len(),
+        pcts[0],
+        pcts[1],
+        rec.weighted_avg_latency_s(),
+        r.cluster.pool_stats().cold_ratio(),
+        jain_index(&per_fn),
+        crate::types::to_secs(r.makespan),
+        r.cluster.routing_imbalance(),
+        r.cluster.spills(),
+    );
+    // Per-class and per-shard utilization imbalance from the exact
+    // integrals at the makespan.
+    let at = r.makespan.max(1);
+    let mut class_sum: BTreeMap<String, (f64, usize)> = BTreeMap::new();
+    let mut shard_means = Vec::new();
+    for shard in &mut r.cluster.shards {
+        let rows = shard.device_utilizations(at);
+        let mean = rows.iter().map(|(_, u)| u).sum::<f64>() / rows.len().max(1) as f64;
+        shard_means.push(mean);
+        for (label, u) in rows {
+            let e = class_sum.entry(label).or_insert((0.0, 0));
+            e.0 += u;
+            e.1 += 1;
+        }
+    }
+    let spread = |means: &[f64]| -> f64 {
+        if means.len() <= 1 {
+            return 0.0;
+        }
+        let max = means.iter().cloned().fold(f64::MIN, f64::max);
+        let min = means.iter().cloned().fold(f64::MAX, f64::min);
+        max - min
+    };
+    let class_means: Vec<f64> = class_sum.values().map(|(s, n)| s / *n as f64).collect();
+    let (invocations, p50_s, p99_s, wavg_s, cold_ratio, fairness_jain, makespan_s, imbal, spills) =
+        row_basics;
+    HeteroRow {
+        fleet: fleet.name,
+        router: router.name(),
+        capacity_skew: fleet.capacity_skew(),
+        total_capacity: fleet.total_capacity(),
+        invocations,
+        p50_s,
+        p99_s,
+        wavg_s,
+        cold_ratio,
+        fairness_jain,
+        mean_util: r.mean_util,
+        class_util_spread: spread(&class_means),
+        shard_util_spread: spread(&shard_means),
+        makespan_s,
+        routing_imbalance: imbal,
+        spills,
+    }
+}
+
+/// Run the full sweep: every (fleet, router) cell replays the same
+/// capacity-scaled Zipf-1.5 trace. Deterministic for a fixed
+/// [`SweepConfig`].
+pub fn sweep(cfg: &SweepConfig) -> Vec<HeteroRow> {
+    let mut rows = Vec::new();
+    for fleet in &cfg.fleets {
+        let (w, t) = zipf::generate(&ZipfConfig {
+            n_funcs: cfg.n_funcs,
+            total_rate: cfg.per_capacity_rate * fleet.total_capacity(),
+            duration_s: cfg.duration_s,
+            seed: cfg.seed,
+            ..Default::default()
+        });
+        let shard_planes: Vec<PlaneConfig> = fleet
+            .shard_fleets
+            .iter()
+            .map(|devs| PlaneConfig {
+                devices: devs.clone(),
+                ..Default::default()
+            })
+            .collect();
+        for &router in &cfg.routers {
+            let ccfg = ClusterConfig {
+                n_shards: fleet.n_shards(),
+                router,
+                plane: PlaneConfig::default(),
+                shard_planes: shard_planes.clone(),
+                load_factor: cfg.load_factor,
+                seed: cfg.seed,
+            };
+            let mut r = replay_cluster(w.clone(), &t, ccfg);
+            rows.push(measure(fleet, router, &mut r));
+        }
+    }
+    rows
+}
+
+/// Machine-readable form of the sweep (`BENCH_hetero.json`).
+pub fn report_json(cfg: &SweepConfig, rows: &[HeteroRow]) -> Json {
+    let row_json = |r: &HeteroRow| {
+        Json::Obj(vec![
+            ("fleet".into(), Json::str(r.fleet)),
+            ("router".into(), Json::str(r.router)),
+            ("capacity_skew".into(), Json::Num(r.capacity_skew)),
+            ("total_capacity".into(), Json::Num(r.total_capacity)),
+            ("invocations".into(), Json::Int(r.invocations as i64)),
+            ("p50_s".into(), Json::Num(r.p50_s)),
+            ("p99_s".into(), Json::Num(r.p99_s)),
+            ("wavg_s".into(), Json::Num(r.wavg_s)),
+            ("cold_ratio".into(), Json::Num(r.cold_ratio)),
+            ("fairness_jain".into(), Json::Num(r.fairness_jain)),
+            ("mean_util".into(), Json::Num(r.mean_util)),
+            ("class_util_spread".into(), Json::Num(r.class_util_spread)),
+            ("shard_util_spread".into(), Json::Num(r.shard_util_spread)),
+            ("makespan_s".into(), Json::Num(r.makespan_s)),
+            ("routing_imbalance".into(), Json::Num(r.routing_imbalance)),
+            ("spills".into(), Json::Int(r.spills as i64)),
+        ])
+    };
+    Json::Obj(vec![
+        ("schema".into(), Json::str("mqfq-bench-hetero/v1")),
+        (
+            "config".into(),
+            Json::Obj(vec![
+                (
+                    "per_capacity_rate".into(),
+                    Json::Num(cfg.per_capacity_rate),
+                ),
+                ("duration_s".into(), Json::Num(cfg.duration_s)),
+                ("n_funcs".into(), Json::Int(cfg.n_funcs as i64)),
+                ("seed".into(), Json::Int(cfg.seed as i64)),
+                ("load_factor".into(), Json::Num(cfg.load_factor)),
+                ("trace".into(), Json::str("zipf-1.5")),
+            ]),
+        ),
+        ("rows".into(), Json::Arr(rows.iter().map(row_json).collect())),
+    ])
+}
+
+/// Render the standard comparison table.
+pub fn rows_table(rows: &[HeteroRow]) -> Table {
+    let mut t = Table::new(&[
+        "fleet",
+        "router",
+        "skew",
+        "invocations",
+        "p50(s)",
+        "p99(s)",
+        "avg(s)",
+        "cold%",
+        "jain",
+        "util%",
+        "Δclass",
+        "Δshard",
+        "spills",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.fleet.to_string(),
+            r.router.to_string(),
+            format!("{:.1}", r.capacity_skew),
+            r.invocations.to_string(),
+            format!("{:.3}", r.p50_s),
+            format!("{:.3}", r.p99_s),
+            format!("{:.3}", r.wavg_s),
+            format!("{:.2}", r.cold_ratio * 100.0),
+            format!("{:.3}", r.fairness_jain),
+            format!("{:.1}", r.mean_util * 100.0),
+            format!("{:.3}", r.class_util_spread),
+            format!("{:.3}", r.shard_util_spread),
+            r.spills.to_string(),
+        ]);
+    }
+    t
+}
+
+fn write_csv(rows: &[HeteroRow]) -> std::io::Result<()> {
+    let mut w = CsvWriter::create(
+        "results/fig10_heterogeneous.csv",
+        &[
+            "fleet",
+            "router",
+            "capacity_skew",
+            "total_capacity",
+            "invocations",
+            "p50_s",
+            "p99_s",
+            "wavg_s",
+            "cold_ratio",
+            "fairness_jain",
+            "mean_util",
+            "class_util_spread",
+            "shard_util_spread",
+            "makespan_s",
+            "routing_imbalance",
+            "spills",
+        ],
+    )?;
+    for r in rows {
+        w.rowv(&[
+            r.fleet.to_string(),
+            r.router.to_string(),
+            format!("{:.4}", r.capacity_skew),
+            format!("{:.4}", r.total_capacity),
+            r.invocations.to_string(),
+            format!("{:.6}", r.p50_s),
+            format!("{:.6}", r.p99_s),
+            format!("{:.6}", r.wavg_s),
+            format!("{:.6}", r.cold_ratio),
+            format!("{:.6}", r.fairness_jain),
+            format!("{:.6}", r.mean_util),
+            format!("{:.6}", r.class_util_spread),
+            format!("{:.6}", r.shard_util_spread),
+            format!("{:.3}", r.makespan_s),
+            format!("{:.4}", r.routing_imbalance),
+            r.spills.to_string(),
+        ])?;
+    }
+    w.flush()
+}
+
+/// The capacity win the refactor exists to demonstrate: on every swept
+/// fleet with ≥ 2× capacity skew, capacity-weighted StickyCh must not
+/// lose to the capacity-blind ablation on p99 latency. Behavioral (not
+/// timing), so it gates debug and release runs alike. (If a future
+/// calibration change trips this on real numbers, tune per the ROADMAP
+/// protocol and record it in CHANGES.md.)
+pub fn assert_capacity_win(rows: &[HeteroRow]) {
+    let cell = |fleet: &str, router: &str| {
+        rows.iter()
+            .find(|r| r.fleet == fleet && r.router == router)
+    };
+    let mut checked = 0;
+    let fleets: Vec<&'static str> = {
+        let mut f: Vec<&'static str> = rows
+            .iter()
+            .filter(|r| r.capacity_skew >= 2.0)
+            .map(|r| r.fleet)
+            .collect();
+        f.dedup();
+        f
+    };
+    for fleet in fleets {
+        let (Some(weighted), Some(blind)) = (
+            cell(fleet, RouterKind::StickyCh.name()),
+            cell(fleet, RouterKind::StickyChBlind.name()),
+        ) else {
+            continue; // sweep didn't include both sticky variants
+        };
+        assert!(
+            weighted.p99_s <= blind.p99_s + 1e-9,
+            "{fleet}: capacity-weighted StickyCh p99 {:.4}s loses to blind {:.4}s",
+            weighted.p99_s,
+            blind.p99_s
+        );
+        checked += 1;
+    }
+    assert!(
+        checked > 0,
+        "capacity gate never exercised: no skewed fleet with both sticky variants"
+    );
+}
+
+/// Run the sweep with `cfg`, print, persist, and gate.
+pub fn run(cfg: &SweepConfig) {
+    println!("== Fig 10: heterogeneous fleets (fleet × router, zipf-1.5, capacity-scaled) ==");
+    let t0 = std::time::Instant::now();
+    let rows = sweep(cfg);
+    print!("{}", rows_table(&rows).render());
+    println!("[swept {} cells in {:.2?}]", rows.len(), t0.elapsed());
+    match write_csv(&rows) {
+        Ok(()) => println!("wrote results/fig10_heterogeneous.csv"),
+        Err(e) => println!("csv not written: {e}"),
+    }
+    match json::write_file("BENCH_hetero.json", &report_json(cfg, &rows)) {
+        Ok(()) => println!("wrote BENCH_hetero.json"),
+        Err(e) => println!("BENCH_hetero.json not written: {e}"),
+    }
+    assert_capacity_win(&rows);
+    println!("capacity gate: weighted StickyCh holds p99 against the blind ring at ≥2× skew");
+}
+
+pub fn main() {
+    run(&SweepConfig::default());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Small sweep the debug-mode tests can afford: the most skewed
+    /// fleet (strongest capacity signal) plus the uniform control.
+    fn small_cfg() -> SweepConfig {
+        let fleets = standard_fleets();
+        SweepConfig {
+            fleets: fleets
+                .into_iter()
+                .filter(|f| f.name == "uniform-4xv100" || f.name == "skew4x")
+                .collect(),
+            routers: vec![
+                RouterKind::RoundRobin,
+                RouterKind::StickyChBlind,
+                RouterKind::StickyCh,
+            ],
+            duration_s: 120.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn standard_fleets_cover_the_shapes() {
+        let fleets = standard_fleets();
+        assert_eq!(fleets.len(), 5);
+        let get = |n: &str| fleets.iter().find(|f| f.name == n).unwrap();
+        assert!((get("uniform-4xv100").capacity_skew() - 1.0).abs() < 1e-12);
+        assert!((get("skew2x").capacity_skew() - 2.0).abs() < 1e-12);
+        assert!((get("skew4x").capacity_skew() - 4.0).abs() < 1e-12);
+        assert!(get("mixed-v100-a30").capacity_skew() > 1.0);
+        // The MIG fleet expands to two vGPUs on its A30 shards.
+        let mig = get("mig-mixed");
+        assert_eq!(mig.shard_fleets[2][0].n_vgpus(), 2);
+        assert!((mig.total_capacity() - (2.0 + 2.0 / 0.92)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weighted_sticky_holds_p99_at_4x_skew() {
+        let rows = sweep(&small_cfg());
+        assert_capacity_win(&rows);
+        for r in &rows {
+            assert!(r.invocations > 0, "{} @ {} empty", r.fleet, r.router);
+            assert!(r.p99_s >= r.p50_s);
+            assert!(r.fairness_jain > 0.0 && r.fairness_jain <= 1.0 + 1e-12);
+        }
+        // On the uniform fleet the two sticky variants are the same
+        // router by construction: identical cells.
+        let cell = |router: &str| {
+            rows.iter()
+                .find(|r| r.fleet == "uniform-4xv100" && r.router == router)
+                .unwrap()
+        };
+        let (w, b) = (cell("sticky-ch"), cell("sticky-blind"));
+        assert_eq!(w.invocations, b.invocations);
+        assert!((w.p99_s - b.p99_s).abs() < 1e-12);
+        assert_eq!(w.spills, b.spills);
+    }
+
+    #[test]
+    fn sweep_is_deterministic() {
+        let cfg = SweepConfig {
+            fleets: standard_fleets()
+                .into_iter()
+                .filter(|f| f.name == "skew2x")
+                .collect(),
+            routers: vec![RouterKind::StickyCh],
+            duration_s: 60.0,
+            ..Default::default()
+        };
+        let a = report_json(&cfg, &sweep(&cfg)).render();
+        let b = report_json(&cfg, &sweep(&cfg)).render();
+        assert_eq!(a, b, "same seed must produce identical BENCH rows");
+    }
+
+    #[test]
+    fn report_json_has_the_tracked_fields() {
+        let cfg = SweepConfig {
+            fleets: standard_fleets()
+                .into_iter()
+                .filter(|f| f.name == "mixed-v100-a30")
+                .collect(),
+            routers: vec![RouterKind::LeastLoaded],
+            duration_s: 30.0,
+            ..Default::default()
+        };
+        let rows = sweep(&cfg);
+        assert_eq!(rows.len(), 1);
+        // Two device classes on this fleet: the spread is meaningful.
+        let doc = report_json(&cfg, &rows).render();
+        for key in [
+            "\"schema\"",
+            "mqfq-bench-hetero/v1",
+            "\"fleet\"",
+            "\"router\"",
+            "\"capacity_skew\"",
+            "\"p99_s\"",
+            "\"cold_ratio\"",
+            "\"class_util_spread\"",
+            "\"shard_util_spread\"",
+            "\"spills\"",
+        ] {
+            assert!(doc.contains(key), "missing {key} in {doc}");
+        }
+    }
+}

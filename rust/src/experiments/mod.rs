@@ -13,6 +13,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod hetero;
 pub mod perf;
 pub mod table1;
 pub mod table3;
@@ -137,6 +138,7 @@ pub const ALL: &[(&str, fn())] = &[
     ("ablation", ablation::main),
     ("perf", perf::main),
     ("cluster", cluster::main),
+    ("hetero", hetero::main),
 ];
 
 /// Look up an experiment by name.
@@ -154,7 +156,7 @@ mod tests {
         for expect in [
             "table1", "fig1", "fig3", "fig4", "table3", "fig5a", "fig5b", "fig5c",
             "fig6a", "fig6b", "fig6c", "fig7a", "fig7b", "fig7c", "fig8a", "fig8b",
-            "fig8c", "ablation", "perf", "cluster",
+            "fig8c", "ablation", "perf", "cluster", "hetero",
         ] {
             assert!(names.contains(&expect), "{expect} missing");
         }

@@ -7,6 +7,20 @@
 //! testbeds (V100 16 GB, A30 24 GB) under the three multiplexing regimes
 //! (plain concurrent dispatch, MPS, MIG slices) and for multi-GPU
 //! servers.
+//!
+//! # Heterogeneous fleets
+//!
+//! Real clusters mix device generations, MIG slices, and MPS-shared
+//! parts, so nothing here assumes a uniform fleet: a server's hardware
+//! is a `Vec<`[`DeviceSpec`]`>` — one spec per *physical* GPU (profile +
+//! multiplex mode + optional per-device concurrency override). A MIG
+//! spec expands into one schedulable [`Device`] per slice; everything
+//! else expands 1:1. [`uniform_fleet`] recreates the classic
+//! `(n, profile, mode)` shape as a one-liner, and
+//! [`DevicePool::uniform`] keeps old call sites short. Placement over a
+//! mixed fleet is cost-aware (see [`pool`]): candidates are scored by
+//! estimated completion — warm locality against raw speed and current
+//! interference — instead of blindly trusting stickiness.
 
 pub mod pool;
 
@@ -72,6 +86,69 @@ pub const A30: GpuProfile = GpuProfile {
     mps_interference_coef: 0.06,
 };
 
+/// Description of one *physical* GPU in a fleet: hardware profile,
+/// multiplexing regime, and an optional per-device concurrency (D)
+/// override. The unit of heterogeneity — a server is a
+/// `Vec<DeviceSpec>`, threaded from [`crate::plane::PlaneConfig`]
+/// through [`DevicePool::new`] down to each [`Device`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceSpec {
+    pub profile: GpuProfile,
+    pub mode: MultiplexMode,
+    /// Per-device D override. `None` defers to the plane-level fixed D
+    /// or dynamic controller. Ignored under MIG, where every slice pins
+    /// D = 1 (§4.2).
+    pub d: Option<usize>,
+}
+
+impl DeviceSpec {
+    pub const fn new(profile: GpuProfile, mode: MultiplexMode) -> Self {
+        Self {
+            profile,
+            mode,
+            d: None,
+        }
+    }
+
+    /// Same spec with a fixed per-device concurrency limit.
+    pub const fn with_d(mut self, d: usize) -> Self {
+        self.d = Some(d);
+        self
+    }
+
+    /// Schedulable devices this physical GPU contributes (MIG: one per
+    /// slice; otherwise one).
+    pub fn n_vgpus(&self) -> usize {
+        match self.mode {
+            MultiplexMode::Mig(s) => s as usize,
+            _ => 1,
+        }
+    }
+
+    /// Relative service capacity in V100-equivalents: the reciprocal of
+    /// the profile's execution-time multiplier. A first-order weight for
+    /// capacity-aware routing — MIG slices of one GPU jointly count as
+    /// the whole GPU, and concurrency effects are deliberately ignored
+    /// (they are workload-dependent; the router only needs a static
+    /// relative weight).
+    pub fn capacity(&self) -> f64 {
+        1.0 / self.profile.speed
+    }
+
+    /// Expand into schedulable devices with ids starting at `first_id`.
+    pub fn expand(&self, first_id: u32) -> Vec<Device> {
+        (0..self.n_vgpus() as u32)
+            .map(|i| Device::new(GpuId(first_id + i), *self))
+            .collect()
+    }
+}
+
+/// `n` identical physical GPUs — the old `(n, profile, mode)`
+/// constructor shape expressed as a fleet description.
+pub fn uniform_fleet(n: usize, profile: GpuProfile, mode: MultiplexMode) -> Vec<DeviceSpec> {
+    vec![DeviceSpec::new(profile, mode); n]
+}
+
 /// An invocation currently executing on the device.
 #[derive(Debug, Clone, Copy)]
 pub struct Running {
@@ -92,6 +169,8 @@ pub struct Device {
     pub compute_frac: f64,
     /// VRAM owned by this device (sliced under MIG), MB.
     pub vram_mb: u64,
+    /// Per-device D override from the spec (None ⇒ plane-level D).
+    d_override: Option<usize>,
     running: Vec<Running>,
     /// Device memory currently resident (shim ledger roll-up), MB.
     resident_mb: u64,
@@ -101,13 +180,24 @@ pub struct Device {
 }
 
 impl Device {
-    pub fn new(id: GpuId, profile: GpuProfile, mode: MultiplexMode) -> Self {
+    /// Build one schedulable device from a spec. Under `Mig(s)` every
+    /// schedulable device *is* one slice, so this yields a vGPU with
+    /// 1/s of the compute and VRAM; [`DeviceSpec::expand`] calls it
+    /// once per slice.
+    pub fn new(id: GpuId, spec: DeviceSpec) -> Self {
+        let (compute_frac, vram_mb) = match spec.mode {
+            MultiplexMode::Mig(slices) => {
+                (1.0 / slices as f64, spec.profile.vram_mb / slices as u64)
+            }
+            _ => (1.0, spec.profile.vram_mb),
+        };
         Self {
             id,
-            profile,
-            mode,
-            compute_frac: 1.0,
-            vram_mb: profile.vram_mb,
+            profile: spec.profile,
+            mode: spec.mode,
+            compute_frac,
+            vram_mb,
+            d_override: spec.d,
             running: Vec::new(),
             resident_mb: 0,
             busy_integral_ns: 0.0,
@@ -115,12 +205,26 @@ impl Device {
         }
     }
 
-    /// Create one MIG slice (vGPU) of `slices` on `profile`.
-    pub fn mig_slice(id: GpuId, profile: GpuProfile, slices: u32) -> Self {
-        let mut d = Self::new(id, profile, MultiplexMode::Mig(slices));
-        d.compute_frac = 1.0 / slices as f64;
-        d.vram_mb = profile.vram_mb / slices as u64;
-        d
+    /// Concurrency limit of *this* device under the plane-level setting
+    /// `plane_d`: MIG slices pin 1 (§4.2), a spec override wins next,
+    /// otherwise the plane's fixed/dynamic D applies. On a mixed plane
+    /// (a MIG slice next to an MPS device) each device holds its own
+    /// limit.
+    pub fn limit(&self, plane_d: usize) -> usize {
+        match self.mode {
+            MultiplexMode::Mig(_) => 1,
+            _ => self.d_override.unwrap_or(plane_d),
+        }
+    }
+
+    /// Device-class label for per-class reporting: profile name plus
+    /// the multiplex regime (e.g. `v100`, `a30+mps`, `a30/mig2`).
+    pub fn class_label(&self) -> String {
+        match self.mode {
+            MultiplexMode::Plain => self.profile.name.to_string(),
+            MultiplexMode::Mps => format!("{}+mps", self.profile.name),
+            MultiplexMode::Mig(s) => format!("{}/mig{s}", self.profile.name),
+        }
     }
 
     pub fn in_flight(&self) -> usize {
@@ -263,7 +367,7 @@ mod tests {
     use crate::workload::catalog::by_name;
 
     fn dev() -> Device {
-        Device::new(GpuId(0), V100, MultiplexMode::Plain)
+        Device::new(GpuId(0), DeviceSpec::new(V100, MultiplexMode::Plain))
     }
 
     #[test]
@@ -301,8 +405,8 @@ mod tests {
 
     #[test]
     fn mps_interferes_less_than_plain() {
-        let mut plain = Device::new(GpuId(0), A30, MultiplexMode::Plain);
-        let mut mps = Device::new(GpuId(1), A30, MultiplexMode::Mps);
+        let mut plain = Device::new(GpuId(0), DeviceSpec::new(A30, MultiplexMode::Plain));
+        let mut mps = Device::new(GpuId(1), DeviceSpec::new(A30, MultiplexMode::Mps));
         let fft = by_name("fft").unwrap();
         for d in [&mut plain, &mut mps] {
             d.begin(InvocationId(1), FuncId(0), by_name("ffmpeg").unwrap(), 0);
@@ -312,10 +416,10 @@ mod tests {
 
     #[test]
     fn mig_slice_slows_down_per_fig7b() {
-        let slice = Device::mig_slice(GpuId(0), A30, 2);
+        let slice = Device::new(GpuId(0), DeviceSpec::new(A30, MultiplexMode::Mig(2)));
         assert_eq!(slice.vram_mb, A30.vram_mb / 2);
         let rnn = by_name("rnn").unwrap();
-        let full = Device::new(GpuId(1), A30, MultiplexMode::Plain);
+        let full = Device::new(GpuId(1), DeviceSpec::new(A30, MultiplexMode::Plain));
         let ratio =
             slice.exec_time(rnn, false) as f64 / full.exec_time(rnn, false) as f64;
         assert!((ratio - 2.60).abs() < 0.01, "rnn on half-slice: {ratio}");
@@ -369,5 +473,46 @@ mod tests {
         assert_eq!(d.in_flight_of(FuncId(3)), 2);
         assert_eq!(d.in_flight_of(FuncId(5)), 1);
         assert_eq!(d.in_flight(), 3);
+    }
+
+    #[test]
+    fn spec_expansion_and_limits() {
+        // Plain spec: one device, plane-level D.
+        let plain = DeviceSpec::new(V100, MultiplexMode::Plain);
+        let devs = plain.expand(0);
+        assert_eq!(devs.len(), 1);
+        assert_eq!(devs[0].limit(3), 3);
+        assert_eq!(devs[0].class_label(), "v100");
+        // Override pins the device regardless of the plane setting.
+        let pinned = DeviceSpec::new(V100, MultiplexMode::Mps).with_d(1);
+        let d = &pinned.expand(5)[0];
+        assert_eq!(d.id, GpuId(5));
+        assert_eq!(d.limit(4), 1);
+        assert_eq!(d.class_label(), "v100+mps");
+        // MIG spec: one device per slice, D pinned to 1, sliced VRAM.
+        let mig = DeviceSpec::new(A30, MultiplexMode::Mig(2)).with_d(4);
+        let slices = mig.expand(2);
+        assert_eq!(slices.len(), 2);
+        assert_eq!(slices[1].id, GpuId(3));
+        for s in &slices {
+            assert_eq!(s.limit(4), 1, "MIG slices ignore overrides");
+            assert_eq!(s.vram_mb, A30.vram_mb / 2);
+            assert!((s.compute_frac - 0.5).abs() < 1e-12);
+            assert_eq!(s.class_label(), "a30/mig2");
+        }
+    }
+
+    #[test]
+    fn fleet_capacity_is_speed_weighted() {
+        let fleet = uniform_fleet(2, V100, MultiplexMode::Plain);
+        assert_eq!(fleet.len(), 2);
+        assert!((fleet.iter().map(|s| s.capacity()).sum::<f64>() - 2.0).abs() < 1e-12);
+        // A30 is slightly faster than the V100 baseline (speed 0.92).
+        let a30 = DeviceSpec::new(A30, MultiplexMode::Plain);
+        assert!(a30.capacity() > 1.0);
+        // MIG slices jointly weigh as the whole physical GPU.
+        let mig = DeviceSpec::new(A30, MultiplexMode::Mig(2));
+        assert!((mig.capacity() - a30.capacity()).abs() < 1e-12);
+        assert_eq!(mig.n_vgpus(), 2);
     }
 }

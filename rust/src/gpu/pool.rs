@@ -1,21 +1,35 @@
-//! Multi-GPU device pool with sticky, late-binding placement (§5).
+//! Multi-GPU device pool with sticky, late-binding, cost-aware
+//! placement (§5, extended to heterogeneous fleets).
 //!
 //! The paper keeps a single dispatcher per server which late-binds each
-//! chosen invocation to a GPU: "sticky" load balancing prefers the GPU
-//! the function last ran on (warm data locality), falling back to the
-//! least-loaded device. Under MIG, every slice is a separate vGPU here.
+//! chosen invocation to a GPU. On a *uniform* fleet the placement rule
+//! is the paper's verbatim: "sticky" load balancing prefers the GPU the
+//! function last ran on (warm data locality), falling back to the
+//! least-loaded device (ties to the lowest [`GpuId`]). On a *mixed*
+//! fleet (any two [`DeviceSpec`]s differing) blind stickiness is wrong —
+//! a warm slot on a half-MIG slice can lose to a cold full-speed device
+//! — so [`DevicePool::pick`] scores every candidate by estimated
+//! completion: modeled execution time on that device (speed, MIG slice
+//! fraction, current interference) plus a warm-locality migration
+//! penalty (the function's footprint re-crossing PCIe) when leaving the
+//! sticky device. With all specs equal the scored path is bypassed
+//! entirely, keeping uniform-fleet behavior bit-identical to the
+//! classic rule (property-tested in `rust/tests/prop_hetero.rs`).
 
 use std::collections::HashMap;
 
-use crate::types::{FuncId, GpuId, InvocationId, Nanos};
+use crate::types::{secs, FuncId, GpuId, InvocationId, Nanos};
 use crate::workload::catalog::FuncClass;
 
-use super::{Device, GpuProfile, MultiplexMode};
+use super::{uniform_fleet, Device, DeviceSpec, GpuProfile, MultiplexMode};
 
 /// A set of schedulable devices on one server.
 #[derive(Debug, Clone)]
 pub struct DevicePool {
     devices: Vec<Device>,
+    /// All specs identical ⇒ the classic sticky-then-least-loaded rule
+    /// applies verbatim; otherwise picks are cost-scored.
+    uniform: bool,
     /// Last GPU each function ran on (stickiness).
     sticky: HashMap<FuncId, GpuId>,
     /// Where each in-flight invocation is running, and as what function
@@ -29,32 +43,29 @@ pub struct DevicePool {
 }
 
 impl DevicePool {
-    /// `n` physical GPUs of `profile` in `mode`. Under `Mig(s)`, each
-    /// physical GPU contributes `s` vGPU slices.
-    pub fn new(n: usize, profile: GpuProfile, mode: MultiplexMode) -> Self {
+    /// Build the pool from a fleet description — one [`DeviceSpec`] per
+    /// physical GPU. A `Mig(s)` spec contributes `s` vGPU slices;
+    /// everything else contributes one device.
+    pub fn new(specs: Vec<DeviceSpec>) -> Self {
+        let uniform = specs.windows(2).all(|w| w[0] == w[1]);
         let mut devices = Vec::new();
-        match mode {
-            MultiplexMode::Mig(slices) => {
-                for _ in 0..n {
-                    for _ in 0..slices {
-                        let id = GpuId(devices.len() as u32);
-                        devices.push(Device::mig_slice(id, profile, slices));
-                    }
-                }
-            }
-            _ => {
-                for i in 0..n {
-                    devices.push(Device::new(GpuId(i as u32), profile, mode));
-                }
-            }
+        for spec in &specs {
+            devices.extend(spec.expand(devices.len() as u32));
         }
         Self {
             devices,
+            uniform,
             sticky: HashMap::new(),
             placements: HashMap::new(),
             total_in_flight: 0,
             per_func_in_flight: HashMap::new(),
         }
+    }
+
+    /// `n` physical GPUs of `profile` in `mode` — the pre-heterogeneity
+    /// constructor, kept so uniform call sites stay one-liners.
+    pub fn uniform(n: usize, profile: GpuProfile, mode: MultiplexMode) -> Self {
+        Self::new(uniform_fleet(n, profile, mode))
     }
 
     pub fn len(&self) -> usize {
@@ -87,26 +98,77 @@ impl DevicePool {
         self.per_func_in_flight.get(&func).copied().unwrap_or(0)
     }
 
-    /// Pick a device for `func`, bounded by `per_gpu_limit` concurrent
-    /// invocations per device (the D level under the current controller
-    /// setting; MIG slices are implicitly limit-1 per §4.2, enforced by
-    /// the caller passing 1).
+    /// Any device with a free slot under the plane-level `plane_d`
+    /// (each device applies its own [`Device::limit`])?
+    pub fn has_free_slot(&self, plane_d: usize) -> bool {
+        self.devices
+            .iter()
+            .any(|d| d.in_flight() < d.limit(plane_d))
+    }
+
+    /// Most permissive per-device concurrency limit on this pool under
+    /// `plane_d` — what the policy layer should treat as "the D level"
+    /// on a mixed fleet (uniform fleets: exactly the shared limit).
+    pub fn max_limit(&self, plane_d: usize) -> usize {
+        self.devices
+            .iter()
+            .map(|d| d.limit(plane_d))
+            .max()
+            .unwrap_or(plane_d)
+    }
+
+    /// Pick a device for one invocation of `func` (of class `class`),
+    /// each device bounded by its own [`Device::limit`] under the
+    /// plane-level `plane_d`.
     ///
-    /// Placement preference (§5 "sticky load balancing among GPUs"):
+    /// Uniform fleet — §5 "sticky load balancing among GPUs", verbatim:
     /// 1. the sticky device, if it has a slot;
-    /// 2. otherwise the least-loaded device with a slot.
-    pub fn pick(&self, func: FuncId, per_gpu_limit: usize) -> Option<GpuId> {
-        let has_slot = |d: &Device| d.in_flight() < per_gpu_limit;
-        if let Some(&g) = self.sticky.get(&func) {
-            if has_slot(&self.devices[g.0 as usize]) {
-                return Some(g);
+    /// 2. otherwise the least-loaded device with a slot (ties to the
+    ///    lowest [`GpuId`]).
+    ///
+    /// Mixed fleet — cost-aware: every device with a slot is scored by
+    /// estimated completion, `exec_time(class)` (speed × MIG fraction ×
+    /// current interference, see [`Device::exec_time`]) plus a
+    /// warm-locality migration penalty when the candidate is not the
+    /// sticky device (the function's footprint must re-cross PCIe via
+    /// host memory — see `ContainerPool::acquire`). Lowest score wins,
+    /// ties to the lowest id — so a fast cold device beats the slow
+    /// warm one exactly when its speed advantage outweighs the
+    /// transfer.
+    pub fn pick(
+        &self,
+        func: FuncId,
+        class: &FuncClass,
+        plane_d: usize,
+        shim: bool,
+    ) -> Option<GpuId> {
+        let has_slot = |d: &Device| d.in_flight() < d.limit(plane_d);
+        let sticky = self.sticky.get(&func).copied();
+        if self.uniform {
+            if let Some(g) = sticky {
+                if has_slot(&self.devices[g.0 as usize]) {
+                    return Some(g);
+                }
             }
+            return self
+                .devices
+                .iter()
+                .filter(|d| has_slot(d))
+                .min_by(|a, b| a.load().total_cmp(&b.load()).then(a.id.cmp(&b.id)))
+                .map(|d| d.id);
         }
         self.devices
             .iter()
             .filter(|d| has_slot(d))
-            .min_by(|a, b| a.load().partial_cmp(&b.load()).unwrap())
-            .map(|d| d.id)
+            .map(|d| {
+                let mut cost = d.exec_time(class, shim);
+                if sticky.is_some() && sticky != Some(d.id) {
+                    cost += migrate_penalty(class, d);
+                }
+                (cost, d.id)
+            })
+            .min() // (cost, id) lexicographic: lowest id breaks ties
+            .map(|(_, id)| id)
     }
 
     /// Begin an invocation on `gpu` (updates stickiness + placement).
@@ -167,6 +229,23 @@ impl DevicePool {
         }
         self.devices.iter().map(|d| d.utilization()).sum::<f64>() / self.devices.len() as f64
     }
+
+    /// Per-device `(class label, mean utilization)` at `now` — the raw
+    /// rows the heterogeneity sweep aggregates into per-class
+    /// utilization imbalance.
+    pub fn device_utilizations(&mut self, now: Nanos) -> Vec<(String, f64)> {
+        self.devices
+            .iter_mut()
+            .map(|d| (d.class_label(), d.mean_utilization(now)))
+            .collect()
+    }
+}
+
+/// Warm-locality migration cost of placing `class` away from its sticky
+/// device: its device-memory footprint travels through host memory and
+/// back over the destination's PCIe link (bulk-prefetch bandwidth).
+fn migrate_penalty(class: &FuncClass, to: &Device) -> u64 {
+    secs((class.mem_mb as f64 / 1024.0) / to.profile.pcie_gbps)
 }
 
 #[cfg(test)]
@@ -177,42 +256,42 @@ mod tests {
 
     #[test]
     fn mig_pool_exposes_slices_as_vgpus() {
-        let pool = DevicePool::new(1, crate::gpu::A30, MultiplexMode::Mig(2));
+        let pool = DevicePool::uniform(1, crate::gpu::A30, MultiplexMode::Mig(2));
         assert_eq!(pool.len(), 2);
         assert_eq!(pool.device(GpuId(0)).vram_mb, crate::gpu::A30.vram_mb / 2);
     }
 
     #[test]
     fn pick_prefers_sticky_gpu() {
-        let mut pool = DevicePool::new(2, V100, MultiplexMode::Plain);
+        let mut pool = DevicePool::uniform(2, V100, MultiplexMode::Plain);
         let f = FuncId(0);
         let c = by_name("fft").unwrap();
         // First placement: least-loaded (gpu0), then sticky.
-        let g = pool.pick(f, 2).unwrap();
+        let g = pool.pick(f, c, 2, true).unwrap();
         pool.begin(g, InvocationId(1), f, c, 0);
         pool.complete(InvocationId(1), 10);
         // Load gpu0 with another function; sticky should still win while
         // it has a slot.
         pool.begin(g, InvocationId(2), FuncId(9), c, 10);
-        assert_eq!(pool.pick(f, 2), Some(g));
+        assert_eq!(pool.pick(f, c, 2, true), Some(g));
         // Fill it: falls over to the other device.
         pool.begin(g, InvocationId(3), FuncId(9), c, 10);
-        let other = pool.pick(f, 2).unwrap();
+        let other = pool.pick(f, c, 2, true).unwrap();
         assert_ne!(other, g);
     }
 
     #[test]
     fn pick_none_when_all_full() {
-        let mut pool = DevicePool::new(1, V100, MultiplexMode::Plain);
+        let mut pool = DevicePool::uniform(1, V100, MultiplexMode::Plain);
         let c = by_name("fft").unwrap();
         pool.begin(GpuId(0), InvocationId(1), FuncId(0), c, 0);
-        assert_eq!(pool.pick(FuncId(1), 1), None);
+        assert_eq!(pool.pick(FuncId(1), c, 1, true), None);
         assert_eq!(pool.in_flight(), 1);
     }
 
     #[test]
     fn complete_clears_placement() {
-        let mut pool = DevicePool::new(2, V100, MultiplexMode::Plain);
+        let mut pool = DevicePool::uniform(2, V100, MultiplexMode::Plain);
         let c = by_name("lud").unwrap();
         pool.begin(GpuId(1), InvocationId(7), FuncId(2), c, 0);
         assert_eq!(pool.placement(InvocationId(7)), Some(GpuId(1)));
@@ -225,7 +304,7 @@ mod tests {
     fn aggregate_counters_track_per_device_sums() {
         // Random begin/complete interleaving: the O(1) counters must
         // match a full per-device scan after every operation.
-        let mut pool = DevicePool::new(3, V100, MultiplexMode::Plain);
+        let mut pool = DevicePool::uniform(3, V100, MultiplexMode::Plain);
         let c = by_name("fft").unwrap();
         let mut rng = crate::util::rng::Rng::new(0xC0);
         let mut live: Vec<(InvocationId, FuncId)> = Vec::new();
@@ -260,10 +339,113 @@ mod tests {
 
     #[test]
     fn least_loaded_balances() {
-        let mut pool = DevicePool::new(2, V100, MultiplexMode::Plain);
+        let mut pool = DevicePool::uniform(2, V100, MultiplexMode::Plain);
         let c = by_name("ffmpeg").unwrap(); // intensity 0.7
         pool.begin(GpuId(0), InvocationId(1), FuncId(0), c, 0);
         // New function (no stickiness) goes to the idle device.
-        assert_eq!(pool.pick(FuncId(5), 2), Some(GpuId(1)));
+        assert_eq!(pool.pick(FuncId(5), c, 2, true), Some(GpuId(1)));
+    }
+
+    #[test]
+    fn equal_load_ties_break_to_lowest_gpu_id() {
+        // Regression: the least-loaded fallback must be deterministic on
+        // equal loads — lowest GpuId wins, under total_cmp (no unwrap
+        // on partial_cmp).
+        let mut pool = DevicePool::uniform(3, V100, MultiplexMode::Plain);
+        let c = by_name("fft").unwrap();
+        assert_eq!(pool.pick(FuncId(0), c, 2, true), Some(GpuId(0)));
+        pool.begin(GpuId(0), InvocationId(1), FuncId(7), c, 0);
+        // gpu1 and gpu2 now tie at zero load: lowest id wins.
+        assert_eq!(pool.pick(FuncId(0), c, 2, true), Some(GpuId(1)));
+        pool.begin(GpuId(1), InvocationId(2), FuncId(8), c, 0);
+        assert_eq!(pool.pick(FuncId(0), c, 2, true), Some(GpuId(2)));
+        // All equally loaded again: back to gpu0.
+        pool.begin(GpuId(2), InvocationId(3), FuncId(9), c, 0);
+        assert_eq!(pool.pick(FuncId(0), c, 2, true), Some(GpuId(0)));
+    }
+
+    #[test]
+    fn per_device_limits_gate_slots() {
+        // A D=1-pinned device next to an unconstrained one: mixed
+        // limits on a single pool.
+        let specs = vec![
+            DeviceSpec::new(V100, MultiplexMode::Plain).with_d(1),
+            DeviceSpec::new(V100, MultiplexMode::Plain),
+        ];
+        let mut pool = DevicePool::new(specs);
+        assert_eq!(pool.max_limit(3), 3);
+        let c = by_name("fft").unwrap();
+        pool.begin(GpuId(0), InvocationId(1), FuncId(0), c, 0);
+        pool.begin(GpuId(1), InvocationId(2), FuncId(1), c, 0);
+        // gpu0 is full at its override (1); gpu1 still has plane slots.
+        assert!(pool.has_free_slot(3));
+        assert_eq!(pool.pick(FuncId(0), c, 3, true), Some(GpuId(1)));
+        pool.begin(GpuId(1), InvocationId(3), FuncId(2), c, 0);
+        pool.begin(GpuId(1), InvocationId(4), FuncId(3), c, 0);
+        assert!(!pool.has_free_slot(3));
+        assert_eq!(pool.pick(FuncId(0), c, 3, true), None);
+    }
+
+    #[test]
+    fn hetero_pick_prefers_faster_idle_device() {
+        // V100 (speed 1.0) next to A30 (speed 0.92): with no warm data
+        // anywhere, the cost-aware pick lands on the faster A30.
+        let specs = vec![
+            DeviceSpec::new(V100, MultiplexMode::Plain),
+            DeviceSpec::new(crate::gpu::A30, MultiplexMode::Plain),
+        ];
+        let pool = DevicePool::new(specs);
+        let c = by_name("ffmpeg").unwrap(); // long-running: speed dominates
+        assert_eq!(pool.pick(FuncId(0), c, 2, true), Some(GpuId(1)));
+    }
+
+    #[test]
+    fn hetero_pick_weighs_warm_locality_against_speed() {
+        // Warm home on a half-MIG A30 slice vs an idle full V100: the
+        // slice's MIG slowdown on fft (1.9× on top of congestion) far
+        // exceeds the ~128 ms PCIe migration penalty, so the cold full
+        // GPU wins — "the fast cold device beats the slow warm one".
+        let specs = vec![
+            DeviceSpec::new(crate::gpu::A30, MultiplexMode::Mig(2)),
+            DeviceSpec::new(V100, MultiplexMode::Plain),
+        ];
+        let mut pool = DevicePool::new(specs);
+        let c = by_name("fft").unwrap();
+        let f = FuncId(0);
+        // Make slice gpu0 the warm home.
+        pool.begin(GpuId(0), InvocationId(1), f, c, 0);
+        pool.complete(InvocationId(1), 10);
+        assert_eq!(pool.sticky_gpu(f), Some(GpuId(0)));
+        assert_eq!(pool.pick(f, c, 2, true), Some(GpuId(2)));
+
+        // Converse: near-identical speeds (plain A30 home vs V100
+        // alternative) — the migration penalty dominates and the warm
+        // home keeps the work.
+        let specs = vec![
+            DeviceSpec::new(crate::gpu::A30, MultiplexMode::Plain),
+            DeviceSpec::new(V100, MultiplexMode::Plain),
+        ];
+        let mut pool = DevicePool::new(specs);
+        pool.begin(GpuId(1), InvocationId(1), f, c, 0);
+        pool.complete(InvocationId(1), 10);
+        assert_eq!(pool.pick(f, c, 2, true), Some(GpuId(1)));
+    }
+
+    #[test]
+    fn identical_specs_take_the_uniform_path() {
+        // A pool built from explicitly identical specs must behave
+        // exactly like the uniform convenience constructor: sticky wins
+        // regardless of relative load (the classic §5 rule, which the
+        // cost-scored path would not guarantee).
+        let spec = DeviceSpec::new(V100, MultiplexMode::Plain);
+        let mut pool = DevicePool::new(vec![spec, spec]);
+        let c = by_name("ffmpeg").unwrap();
+        let f = FuncId(0);
+        pool.begin(GpuId(0), InvocationId(1), f, c, 0);
+        pool.complete(InvocationId(1), 5);
+        // Load the sticky device heavily; device 1 stays idle. Uniform
+        // rule: sticky still wins while it has a slot.
+        pool.begin(GpuId(0), InvocationId(2), FuncId(9), c, 5);
+        assert_eq!(pool.pick(f, c, 2, true), Some(GpuId(0)));
     }
 }

@@ -385,7 +385,7 @@ mod tests {
     fn setup() -> (ContainerPool, DevicePool, MemoryManager) {
         (
             ContainerPool::new(32),
-            DevicePool::new(1, V100, MultiplexMode::Plain),
+            DevicePool::uniform(1, V100, MultiplexMode::Plain),
             MemoryManager::new(MemPolicy::PrefetchSwap),
         )
     }

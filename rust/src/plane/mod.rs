@@ -12,7 +12,7 @@
 use std::collections::{HashMap, VecDeque};
 
 use crate::container::ContainerPool;
-use crate::gpu::{DevicePool, GpuProfile, MultiplexMode};
+use crate::gpu::{uniform_fleet, DevicePool, DeviceSpec, GpuProfile, MultiplexMode};
 use crate::memory::{MemPolicy, MemoryManager};
 use crate::metrics::{InvRecord, Recorder};
 use crate::scheduler::policies::PolicyKind;
@@ -28,10 +28,15 @@ pub struct PlaneConfig {
     pub policy: PolicyKind,
     pub mqfq: MqfqConfig,
     pub mem_policy: MemPolicy,
-    pub n_gpus: usize,
-    pub profile: GpuProfile,
-    pub mode: MultiplexMode,
-    /// Fixed D level (per GPU). Ignored if `dynamic_d` is set.
+    /// The server's fleet: one [`DeviceSpec`] per physical GPU (MIG
+    /// specs expand into slices). Replaces the old uniform
+    /// `n_gpus/profile/mode` triple — [`PlaneConfig::uniform`] and
+    /// [`uniform_fleet`] re-express that shape in one line, and mixed
+    /// fleets (V100 beside a MIG-sliced A30, per-device D pins) are
+    /// now first-class.
+    pub devices: Vec<DeviceSpec>,
+    /// Fixed plane-level D (per device without a spec override).
+    /// Ignored if `dynamic_d` is set.
     pub d: usize,
     /// Dynamic D: (max_d, utilization threshold) — §4.4.
     pub dynamic_d: Option<(usize, f64)>,
@@ -53,9 +58,7 @@ impl Default for PlaneConfig {
             policy: PolicyKind::Mqfq,
             mqfq: MqfqConfig::default(),
             mem_policy: MemPolicy::PrefetchSwap,
-            n_gpus: 1,
-            profile: crate::gpu::V100,
-            mode: MultiplexMode::Plain,
+            devices: uniform_fleet(1, crate::gpu::V100, MultiplexMode::Plain),
             d: 2,
             dynamic_d: None,
             pool_size: 32,
@@ -63,6 +66,29 @@ impl Default for PlaneConfig {
             monitor_period: 200 * MS,
             keep_warm: true,
         }
+    }
+}
+
+impl PlaneConfig {
+    /// Uniform fleet of `n` × `profile` in `mode` — the shape the old
+    /// `n_gpus/profile/mode` fields described.
+    pub fn uniform(n: usize, profile: GpuProfile, mode: MultiplexMode) -> Self {
+        Self {
+            devices: uniform_fleet(n, profile, mode),
+            ..Default::default()
+        }
+    }
+
+    /// Aggregate service capacity of the fleet in V100-equivalents
+    /// (Σ [`DeviceSpec::capacity`]) — the weight capacity-aware cluster
+    /// routing normalizes shard depth by.
+    pub fn fleet_capacity(&self) -> f64 {
+        self.devices.iter().map(|s| s.capacity()).sum()
+    }
+
+    /// Schedulable devices (vGPUs) this fleet expands to.
+    pub fn n_devices(&self) -> usize {
+        self.devices.iter().map(|s| s.n_vgpus()).sum()
     }
 }
 
@@ -116,7 +142,7 @@ impl ControlPlane {
     pub fn new(workload: Workload, cfg: PlaneConfig) -> Self {
         let n_funcs = workload.len();
         let policy = cfg.policy.build_mqfq(n_funcs, cfg.mqfq.clone());
-        let gpus = DevicePool::new(cfg.n_gpus, cfg.profile, cfg.mode);
+        let gpus = DevicePool::new(cfg.devices.clone());
         let dctl = match cfg.dynamic_d {
             Some((max_d, thr)) => ConcurrencyController::dynamic(max_d, thr),
             None => ConcurrencyController::fixed(cfg.d),
@@ -165,13 +191,19 @@ impl ControlPlane {
         self.gpus.mean_utilization(now)
     }
 
-    /// Per-GPU concurrency limit under the current mode/controller.
-    fn per_gpu_limit(&self) -> usize {
-        match self.cfg.mode {
-            // Each MIG slice runs exactly one function (§4.2).
-            MultiplexMode::Mig(_) => 1,
-            _ => self.dctl.limit(),
-        }
+    /// Per-device `(class label, mean utilization)` rows at `now` (the
+    /// heterogeneity sweep's per-class imbalance input).
+    pub fn device_utilizations(&mut self, now: Nanos) -> Vec<(String, f64)> {
+        self.gpus.device_utilizations(now)
+    }
+
+    /// The concurrency level the *policy layer* should assume. Limits
+    /// are per-device on a mixed fleet (MIG slices pin 1 per §4.2, spec
+    /// overrides pin their device, everything else follows the
+    /// controller); the policy's token math uses the most permissive of
+    /// them — on a uniform fleet exactly the old per-GPU limit.
+    fn policy_d(&self) -> usize {
+        self.gpus.max_limit(self.dctl.limit())
     }
 
     /// A new invocation of `func` arrived (open-loop trace or server).
@@ -262,15 +294,15 @@ impl ControlPlane {
     pub fn check_invariants(&self) -> Result<(), String> {
         // Run-to-completion: a dynamic-D reduction never preempts, so
         // the hard bound is the controller's ceiling, not its current
-        // setting (MIG slices are a constant 1).
-        let limit = match self.cfg.mode {
-            MultiplexMode::Mig(_) => 1,
-            _ => match self.cfg.dynamic_d {
-                Some((max_d, _)) => max_d,
-                None => self.cfg.d,
-            },
+        // setting. The ceiling is *per device*: MIG slices are a
+        // constant 1 and spec overrides pin their own device, so a
+        // mixed plane holds mixed limits side by side.
+        let plane_ceiling = match self.cfg.dynamic_d {
+            Some((max_d, _)) => max_d,
+            None => self.cfg.d,
         };
         for d in self.gpus.devices() {
+            let limit = d.limit(plane_ceiling);
             if d.in_flight() > limit {
                 return Err(format!(
                     "{}: {} in flight exceeds limit {limit}",
@@ -353,14 +385,10 @@ impl ControlPlane {
     pub fn try_dispatch(&mut self, now: Nanos) -> Vec<Dispatch> {
         let mut out = Vec::new();
         loop {
-            let limit = self.per_gpu_limit();
-            // Token check: any device with a free slot?
-            let any_slot = self
-                .gpus
-                .devices()
-                .iter()
-                .any(|d| d.in_flight() < limit);
-            if !any_slot {
+            let plane_d = self.dctl.limit();
+            // Token check: any device with a free slot (per-device
+            // limits on a mixed fleet)?
+            if !self.gpus.has_free_slot(plane_d) {
                 break;
             }
             // Stash (placement-failed invocations) takes priority.
@@ -369,7 +397,7 @@ impl ControlPlane {
                 None => {
                     let ctx = PolicyCtx {
                         in_flight: &self.in_flight_per_func,
-                        d: limit,
+                        d: self.policy_d(),
                     };
                     match self.policy.dispatch(now, &ctx) {
                         Some(i) => i,
@@ -397,8 +425,9 @@ impl ControlPlane {
     /// model the execution timeline.
     fn place(&mut self, inv: Invocation, now: Nanos) -> Option<Dispatch> {
         let class = self.workload.func(inv.func).class;
-        let limit = self.per_gpu_limit();
-        let gpu = self.gpus.pick(inv.func, limit)?;
+        let gpu = self
+            .gpus
+            .pick(inv.func, class, self.dctl.limit(), self.cfg.shim)?;
 
         let acq = self.ctrs.acquire(inv.func, class, gpu, now)?;
         // Destroyed LRU victims free their device memory.
@@ -528,8 +557,7 @@ mod tests {
     #[test]
     fn mig_mode_caps_slices_at_one() {
         let cfg = PlaneConfig {
-            mode: MultiplexMode::Mig(2),
-            profile: crate::gpu::A30,
+            devices: uniform_fleet(1, crate::gpu::A30, MultiplexMode::Mig(2)),
             d: 4, // ignored under MIG
             ..Default::default()
         };
@@ -541,6 +569,31 @@ mod tests {
         }
         // Two slices × one invocation each.
         assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn mixed_fleet_holds_mixed_limits() {
+        // A D-pinned device and a MIG pair beside an unconstrained
+        // V100 on one plane: slot math and invariants are per-device.
+        let cfg = PlaneConfig {
+            devices: vec![
+                DeviceSpec::new(crate::gpu::V100, MultiplexMode::Plain).with_d(1),
+                DeviceSpec::new(crate::gpu::A30, MultiplexMode::Mig(2)),
+                DeviceSpec::new(crate::gpu::V100, MultiplexMode::Plain),
+            ],
+            d: 2,
+            ..Default::default()
+        };
+        let mut p = plane(cfg);
+        let mut dispatched = 0;
+        for i in 0..8 {
+            let (_, ds) = p.on_arrival(FuncId(i % 2), i as u64);
+            dispatched += ds.len();
+        }
+        // Capacity: 1 (pinned) + 1 + 1 (slices) + 2 (plane D) = 5.
+        assert_eq!(dispatched, 5);
+        assert_eq!(p.in_flight(), 5);
+        p.check_invariants().unwrap();
     }
 
     #[test]

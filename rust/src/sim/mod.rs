@@ -132,14 +132,11 @@ fn drive<T: SimTarget>(target: &mut T, trace: &Trace, monitor_period: DurNanos) 
         let busy = target.busy();
 
         // Monitor ticks only while the system has work (otherwise an
-        // idle server would tick forever). Known quirk inherited from
-        // the original engine (kept bit-for-bit so replays stay
-        // comparable across PRs): next_tick is not re-synced after an
-        // idle gap, so the first ticks after work resumes are delivered
-        // at stale virtual times until the cadence catches up — they
-        // cannot dispatch (no slot/container frees without a
-        // completion) but do sample the utilization timeline early.
-        // Tracked in ROADMAP; fix alongside a toolchain-verified run.
+        // idle server would tick forever). When busyness resumes after
+        // an idle gap, the arrival handler below fast-forwards
+        // `next_tick` past the resume instant, so post-idle ticks fire
+        // at current virtual time instead of the stale cadence the
+        // original seed engine kept.
         let tick_at = if busy { Some(next_tick) } else { None };
 
         let candidates = [arrival_at, heap_at, tick_at];
@@ -168,6 +165,15 @@ fn drive<T: SimTarget>(target: &mut T, trace: &Trace, monitor_period: DurNanos) 
         }
 
         if arrival_at == Some(now) && heap_at.map(|t| t >= now).unwrap_or(true) {
+            // Busyness resumes with this arrival (only arrivals can wake
+            // an idle system): re-sync the monitor cadence so the next
+            // tick fires after `now`, not at the virtual time the clock
+            // had when the system went idle. Phase-preserving: advance
+            // in whole periods past `now`.
+            if !busy && next_tick < now {
+                let behind = (now - next_tick) / monitor_period + 1;
+                next_tick += behind * monitor_period;
+            }
             let ev = trace.events[next_arrival];
             next_arrival += 1;
             let ds = target.sim_arrival(ev.func, now);
@@ -248,9 +254,15 @@ impl ClusterReplayResult {
 
 /// Replay `trace` through an N-shard cluster: the router assigns each
 /// arrival to a shard, and all shards advance on one global virtual
-/// clock (see the module docs for the determinism contract).
+/// clock (see the module docs for the determinism contract). Monitor
+/// ticks are cluster-global, so on a heterogeneous cluster they fire at
+/// the *finest* per-shard cadence — every shard is sampled at least as
+/// often as its own `monitor_period` asks.
 pub fn replay_cluster(workload: Workload, trace: &Trace, cfg: ClusterConfig) -> ClusterReplayResult {
-    let monitor_period = cfg.plane.monitor_period;
+    let monitor_period = (0..cfg.n_shards)
+        .map(|s| cfg.plane_for(s).monitor_period)
+        .min()
+        .unwrap_or(cfg.plane.monitor_period);
     let mut cluster = Cluster::new(workload, cfg);
     let (makespan, events) = drive(&mut cluster, trace, monitor_period);
     let mean_util = cluster.mean_utilization(makespan.max(1));
@@ -373,6 +385,61 @@ mod tests {
             heavy.recorder().weighted_avg_latency_s()
                 > light.recorder().weighted_avg_latency_s()
         );
+    }
+
+    #[test]
+    fn post_idle_ticks_fire_at_current_virtual_time() {
+        // Bursty trace with a long idle gap: a burst at t≈0 drains in a
+        // few seconds, then nothing until t=50s. The seed engine never
+        // re-synced next_tick across the gap, so the first monitor tick
+        // after the resume fired at a stale pre-gap virtual time; now
+        // the cadence fast-forwards past the resume instant.
+        let mut w = Workload::default();
+        let f = w.register(by_name("fft").unwrap(), 0, 1.0);
+        let mut t = Trace::default();
+        for i in 0..3 {
+            t.events.push(TraceEvent {
+                at: secs(i as f64 * 0.3),
+                func: f,
+            });
+        }
+        t.events.push(TraceEvent {
+            at: secs(50.0),
+            func: f,
+        });
+        t.sort();
+        let r = replay(w, &t, PlaneConfig::default());
+        assert_eq!(r.recorder().len(), 4);
+        let period = 200 * crate::types::MS;
+        // End of the first busy window: last completion of the burst.
+        let drain1 = r
+            .recorder()
+            .records
+            .iter()
+            .map(|rec| rec.completed)
+            .filter(|&c| c < secs(50.0))
+            .max()
+            .unwrap();
+        let samples = &r.plane.recorder.util_timeline;
+        assert!(!samples.is_empty());
+        let mut resumed = false;
+        let mut prev = 0;
+        for &(at, _) in samples {
+            assert!(at > prev, "tick timestamps must be strictly increasing");
+            prev = at;
+            assert!(
+                at <= drain1 + period || at > secs(50.0),
+                "stale tick at {:.3}s inside the idle gap ({:.3}s..50s)",
+                crate::types::to_secs(at),
+                crate::types::to_secs(drain1)
+            );
+            resumed |= at > secs(50.0);
+        }
+        assert!(resumed, "post-resume window must be sampled");
+        // Phase preserved: post-resume ticks stay on the 200 ms grid.
+        let first_post = samples.iter().find(|(at, _)| *at > secs(50.0)).unwrap().0;
+        assert_eq!(first_post % period, 0);
+        assert!(first_post - secs(50.0) <= period);
     }
 
     #[test]

@@ -87,9 +87,9 @@ fn multi_gpu_beats_single_gpu_under_load() {
         ..Default::default()
     });
     let (w1, t1) = mk();
-    let one = replay(w1, &t1, PlaneConfig { n_gpus: 1, ..Default::default() });
+    let one = replay(w1, &t1, PlaneConfig::uniform(1, mqfq::gpu::V100, mqfq::gpu::MultiplexMode::Plain));
     let (w2, t2) = mk();
-    let two = replay(w2, &t2, PlaneConfig { n_gpus: 2, ..Default::default() });
+    let two = replay(w2, &t2, PlaneConfig::uniform(2, mqfq::gpu::V100, mqfq::gpu::MultiplexMode::Plain));
     assert!(
         two.recorder().weighted_avg_latency_s() < one.recorder().weighted_avg_latency_s(),
         "2 GPUs {:.2}s vs 1 GPU {:.2}s",

@@ -4,6 +4,7 @@
 //! conservation/determinism on randomized traces.
 
 use mqfq::cluster::{ClusterConfig, ALL_ROUTERS};
+use mqfq::gpu::{uniform_fleet, MultiplexMode, V100};
 use mqfq::plane::PlaneConfig;
 use mqfq::scheduler::policies::PolicyKind;
 use mqfq::scheduler::MqfqConfig;
@@ -44,7 +45,7 @@ fn gen_plane_config(g: &mut Gen) -> PlaneConfig {
             PolicyKind::Sfq,
             PolicyKind::Mqfq,
         ]),
-        n_gpus: g.int(1, 2),
+        devices: uniform_fleet(g.int(1, 2), V100, MultiplexMode::Plain),
         d: g.int(1, 3),
         pool_size: g.int(2, 32),
         mqfq: MqfqConfig {
@@ -76,6 +77,7 @@ fn prop_single_shard_cluster_matches_plain_replay() {
                 n_shards: 1,
                 router,
                 plane: plane_cfg.clone(),
+                shard_planes: Vec::new(),
                 load_factor: g.f64(1.0, 4.0),
                 seed,
             },
@@ -86,7 +88,7 @@ fn prop_single_shard_cluster_matches_plain_replay() {
             router.name(),
             plane_cfg.policy.name(),
             plane_cfg.d,
-            plane_cfg.n_gpus,
+            plane_cfg.n_devices(),
             plane_cfg.pool_size
         );
         if one.events != plain.events {
@@ -137,6 +139,7 @@ fn prop_cluster_conserves_invocations() {
             n_shards: g.int(1, 8),
             router: *g.choose(&ALL_ROUTERS),
             plane: gen_plane_config(g),
+            shard_planes: Vec::new(),
             load_factor: g.f64(1.0, 3.0),
             seed: g.int(0, 1 << 20) as u64,
         };
@@ -174,6 +177,7 @@ fn prop_cluster_replay_is_deterministic() {
             n_shards: g.int(2, 8),
             router: *g.choose(&ALL_ROUTERS),
             plane: gen_plane_config(g),
+            shard_planes: Vec::new(),
             load_factor: g.f64(1.0, 3.0),
             seed: g.int(0, 1 << 20) as u64,
         };

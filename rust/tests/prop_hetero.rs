@@ -1,0 +1,289 @@
+//! Property tests for the heterogeneous-fleet refactor's equivalence
+//! contract: building a fleet from *identical* `DeviceSpec`s must be
+//! event-for-event indistinguishable from the pre-refactor uniform
+//! construction (now the `uniform`/`PlaneConfig::uniform` conveniences,
+//! which transcribe the old `(n, profile, mode)` rule verbatim), across
+//! all policies and routers — full `InvRecord`-stream equality. Plus:
+//! the capacity-weighted StickyCh ring with equal shard capacities must
+//! be bit-identical to the capacity-blind ablation, and genuinely mixed
+//! clusters must still conserve and drain every invocation.
+
+use mqfq::cluster::{ClusterConfig, RouterKind, ALL_ROUTERS};
+use mqfq::gpu::{uniform_fleet, DeviceSpec, MultiplexMode, A30, V100};
+use mqfq::plane::PlaneConfig;
+use mqfq::scheduler::policies::PolicyKind;
+use mqfq::scheduler::MqfqConfig;
+use mqfq::sim::{replay, replay_cluster};
+use mqfq::types::{secs, FuncId};
+use mqfq::util::prop::{assert_prop, Gen};
+use mqfq::workload::catalog::CATALOG;
+use mqfq::workload::trace::{Trace, TraceEvent, Workload};
+
+const ALL_POLICIES: [PolicyKind; 6] = [
+    PolicyKind::Fcfs,
+    PolicyKind::Batch,
+    PolicyKind::PaellaSjf,
+    PolicyKind::Eevdf,
+    PolicyKind::Sfq,
+    PolicyKind::Mqfq,
+];
+
+/// Random workload + open-loop trace (mirrors prop_cluster's shape).
+fn gen_scenario(g: &mut Gen) -> (Workload, Trace) {
+    let n_funcs = g.int(1, 10);
+    let mut w = Workload::default();
+    for i in 0..n_funcs {
+        let class = &CATALOG[g.int(0, CATALOG.len() - 1)];
+        w.register(class, i, g.f64(0.5, 20.0));
+    }
+    let n_events = g.int(1, 100);
+    let horizon = g.f64(10.0, 240.0);
+    let mut t = Trace::default();
+    for _ in 0..n_events {
+        t.events.push(TraceEvent {
+            at: secs(g.f64(0.0, horizon)),
+            func: FuncId(g.int(0, n_funcs - 1) as u32),
+        });
+    }
+    t.sort();
+    (w, t)
+}
+
+fn gen_uniform_spec(g: &mut Gen) -> DeviceSpec {
+    let profile = *g.choose(&[V100, A30]);
+    let mode = *g.choose(&[
+        MultiplexMode::Plain,
+        MultiplexMode::Mps,
+        MultiplexMode::Mig(2),
+    ]);
+    let mut spec = DeviceSpec::new(profile, mode);
+    if g.bool(0.3) {
+        spec = spec.with_d(g.int(1, 3));
+    }
+    spec
+}
+
+fn base_plane(g: &mut Gen, policy: PolicyKind) -> PlaneConfig {
+    PlaneConfig {
+        policy,
+        d: g.int(1, 3),
+        pool_size: g.int(2, 32),
+        mqfq: MqfqConfig {
+            t: g.f64(0.0, 20.0),
+            ttl_alpha: g.f64(0.0, 4.0),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Plane level: the pre-refactor uniform construction (plane-level D,
+/// no overrides — `PlaneConfig::uniform`'s shape) replays
+/// byte-identically to a fleet of explicitly repeated identical specs
+/// that pin the *same* D per device while the plane-level `d` field is
+/// set to an unrelated value. Non-vacuous: the two configs differ (the
+/// override path must fully shadow the plane-level D in slot math,
+/// `policy_d`, and `check_invariants`), yet every policy must produce
+/// the same record stream, makespan, events, pool stats, and
+/// utilization integral.
+#[test]
+fn prop_identical_specs_match_uniform_plane() {
+    assert_prop("identical-spec plane equivalence", 36, |g| {
+        let (w, t) = gen_scenario(g);
+        let policy = *g.choose(&ALL_POLICIES);
+        let profile = *g.choose(&[V100, A30]);
+        let mode = *g.choose(&[
+            MultiplexMode::Plain,
+            MultiplexMode::Mps,
+            MultiplexMode::Mig(2),
+        ]);
+        let n = g.int(1, 3);
+        let plane_d = g.int(1, 3);
+
+        // Old shape: uniform fleet, concurrency from the plane-level D.
+        let mut uniform_cfg = base_plane(g, policy);
+        uniform_cfg.d = plane_d;
+        uniform_cfg.devices = uniform_fleet(n, profile, mode);
+        // New shape: the same D pinned per device; the plane-level `d`
+        // is deliberately different and must be fully shadowed.
+        let mut explicit_cfg = uniform_cfg.clone();
+        explicit_cfg.d = g.int(1, 4);
+        let spec = DeviceSpec::new(profile, mode).with_d(plane_d);
+        explicit_cfg.devices = (0..n).map(|_| spec).collect();
+
+        let a = replay(w.clone(), &t, uniform_cfg);
+        let b = replay(w, &t, explicit_cfg);
+        let ctx = format!(
+            "policy={} n={n} profile={} mode={mode:?} d={plane_d}",
+            policy.name(),
+            profile.name,
+        );
+        if a.events != b.events || a.makespan != b.makespan {
+            return Err(format!("{ctx}: events/makespan diverged"));
+        }
+        if a.recorder().records != b.recorder().records {
+            return Err(format!("{ctx}: record streams diverged"));
+        }
+        if a.plane.pool_stats() != b.plane.pool_stats() {
+            return Err(format!("{ctx}: pool stats diverged"));
+        }
+        if (a.mean_util - b.mean_util).abs() > 1e-12 {
+            return Err(format!("{ctx}: mean util diverged"));
+        }
+        Ok(())
+    });
+}
+
+/// Cluster level: explicit per-shard plane configs, all identical, must
+/// replay byte-identically to the shared-plane construction under every
+/// router (including the capacity-blind sticky ablation) — the
+/// shard-capacity plumbing and weighted ring must vanish when shards
+/// are equal.
+#[test]
+fn prop_identical_shard_planes_match_shared_plane() {
+    let routers: Vec<RouterKind> = ALL_ROUTERS
+        .into_iter()
+        .chain([RouterKind::StickyChBlind])
+        .collect();
+    assert_prop("identical shard-plane equivalence", 30, |g| {
+        let (w, t) = gen_scenario(g);
+        let policy = *g.choose(&ALL_POLICIES);
+        let mut plane = base_plane(g, policy);
+        let spec = gen_uniform_spec(g);
+        plane.devices = (0..g.int(1, 2)).map(|_| spec).collect();
+        let n_shards = g.int(1, 6);
+        let router = *g.choose(&routers);
+        let seed = g.int(0, 1 << 20) as u64;
+        let load_factor = g.f64(1.0, 3.0);
+
+        let shared = ClusterConfig {
+            n_shards,
+            router,
+            plane: plane.clone(),
+            shard_planes: Vec::new(),
+            load_factor,
+            seed,
+        };
+        let explicit = ClusterConfig {
+            shard_planes: vec![plane.clone(); n_shards],
+            ..shared.clone()
+        };
+        let a = replay_cluster(w.clone(), &t, shared);
+        let b = replay_cluster(w, &t, explicit);
+        let ctx = format!(
+            "router={} policy={} shards={n_shards}",
+            router.name(),
+            policy.name()
+        );
+        if a.events != b.events || a.makespan != b.makespan {
+            return Err(format!("{ctx}: events/makespan diverged"));
+        }
+        if a.cluster.routed != b.cluster.routed {
+            return Err(format!(
+                "{ctx}: routing diverged {:?} vs {:?}",
+                a.cluster.routed, b.cluster.routed
+            ));
+        }
+        if a.cluster.spills() != b.cluster.spills() {
+            return Err(format!("{ctx}: spill counts diverged"));
+        }
+        if a.recorder().records != b.recorder().records {
+            return Err(format!("{ctx}: record streams diverged"));
+        }
+        Ok(())
+    });
+}
+
+/// Uniform capacities make the weighted StickyCh ring identical to the
+/// blind one: full replay equality between the two router kinds on any
+/// uniform cluster.
+#[test]
+fn prop_weighted_sticky_equals_blind_on_uniform_clusters() {
+    assert_prop("weighted≡blind sticky on uniform fleets", 24, |g| {
+        let (w, t) = gen_scenario(g);
+        let mut plane = base_plane(g, *g.choose(&ALL_POLICIES));
+        let spec = gen_uniform_spec(g);
+        plane.devices = (0..g.int(1, 2)).map(|_| spec).collect();
+        let base = ClusterConfig {
+            n_shards: g.int(1, 8),
+            router: RouterKind::StickyCh,
+            plane,
+            shard_planes: Vec::new(),
+            load_factor: g.f64(1.0, 3.0),
+            seed: g.int(0, 1 << 20) as u64,
+        };
+        let blind_cfg = ClusterConfig {
+            router: RouterKind::StickyChBlind,
+            ..base.clone()
+        };
+        let a = replay_cluster(w.clone(), &t, base.clone());
+        let b = replay_cluster(w, &t, blind_cfg);
+        let ctx = format!("shards={}", base.n_shards);
+        if a.cluster.routed != b.cluster.routed {
+            return Err(format!(
+                "{ctx}: routing diverged {:?} vs {:?}",
+                a.cluster.routed, b.cluster.routed
+            ));
+        }
+        if a.cluster.spills() != b.cluster.spills() {
+            return Err(format!("{ctx}: spill counts diverged"));
+        }
+        if a.recorder().records != b.recorder().records {
+            return Err(format!("{ctx}: record streams diverged"));
+        }
+        Ok(())
+    });
+}
+
+/// Genuinely mixed clusters (random per-shard fleets, including MIG
+/// slices and D overrides) conserve work: every arrival completes
+/// exactly once and the cluster fully drains, under every router.
+#[test]
+fn prop_mixed_clusters_conserve_invocations() {
+    let routers: Vec<RouterKind> = ALL_ROUTERS
+        .into_iter()
+        .chain([RouterKind::StickyChBlind])
+        .collect();
+    assert_prop("mixed-fleet conservation", 24, |g| {
+        let (w, t) = gen_scenario(g);
+        let n = t.len();
+        let n_shards = g.int(2, 5);
+        let shard_planes: Vec<PlaneConfig> = (0..n_shards)
+            .map(|_| {
+                let mut p = base_plane(g, *g.choose(&ALL_POLICIES));
+                let n_gpus = g.int(1, 2);
+                p.devices = (0..n_gpus).map(|_| gen_uniform_spec(g)).collect();
+                p
+            })
+            .collect();
+        let cfg = ClusterConfig {
+            n_shards,
+            router: *g.choose(&routers),
+            plane: PlaneConfig::default(),
+            shard_planes,
+            load_factor: g.f64(1.0, 3.0),
+            seed: g.int(0, 1 << 20) as u64,
+        };
+        let ctx = format!("shards={n_shards} router={}", cfg.router.name());
+        let r = replay_cluster(w, &t, cfg);
+        if r.recorder().len() != n {
+            return Err(format!(
+                "{ctx}: {n} arrivals but {} completions",
+                r.recorder().len()
+            ));
+        }
+        if r.cluster.pending() != 0 || r.cluster.in_flight() != 0 {
+            return Err(format!(
+                "{ctx}: not drained ({} pending, {} in flight)",
+                r.cluster.pending(),
+                r.cluster.in_flight()
+            ));
+        }
+        for (s, shard) in r.cluster.shards.iter().enumerate() {
+            if let Err(e) = shard.check_invariants() {
+                return Err(format!("{ctx}: shard {s} invariants: {e}"));
+            }
+        }
+        Ok(())
+    });
+}

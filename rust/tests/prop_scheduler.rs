@@ -5,7 +5,7 @@
 //! Uses the in-repo `util::prop` mini-framework (proptest is not in the
 //! offline vendor set); python-side property testing uses hypothesis.
 
-use mqfq::gpu::MultiplexMode;
+use mqfq::gpu::{uniform_fleet, MultiplexMode};
 use mqfq::memory::MemPolicy;
 use mqfq::plane::PlaneConfig;
 use mqfq::scheduler::policies::PolicyKind;
@@ -53,14 +53,13 @@ fn gen_config(g: &mut Gen) -> PlaneConfig {
     ]);
     PlaneConfig {
         policy,
-        mode,
+        devices: uniform_fleet(g.int(1, 2), mqfq::gpu::V100, mode),
         mem_policy: *g.choose(&[
             MemPolicy::StockUvm,
             MemPolicy::Madvise,
             MemPolicy::PrefetchOnly,
             MemPolicy::PrefetchSwap,
         ]),
-        n_gpus: g.int(1, 2),
         d: g.int(1, 4),
         pool_size: g.int(2, 32),
         mqfq: MqfqConfig {

@@ -69,8 +69,8 @@ def flatten(value, prefix, out):
         for i, sub in enumerate(value):
             label = str(i)
             if isinstance(sub, dict):
-                ident = [str(sub[k]) for k in ("router", "impl", "name", "shards",
-                                               "flows", "active") if k in sub]
+                ident = [str(sub[k]) for k in ("fleet", "router", "impl", "name",
+                                               "shards", "flows", "active") if k in sub]
                 if ident:
                     label = ":".join(ident)
             flatten(sub, f"{prefix}[{label}]", out)
