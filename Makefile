@@ -1,13 +1,19 @@
 # Convenience targets; see ROADMAP.md for the tier-1 verify.
 
-.PHONY: check test bench-perf bench-cluster bench-hetero artifacts
+.PHONY: check test smoke bench-perf bench-cluster bench-hetero artifacts
 
-# Build + test + clippy-clean (the full local gate).
+# Build + test + clippy-clean + serving smoke (the full local gate).
 check:
 	bash scripts/check.sh
+	bash scripts/serve_smoke.sh
 
 test:
 	cargo test -q
+
+# End-to-end serving smoke: `serve --shards 4 --router sticky` driven
+# by a python3 protocol-v1 client (sync, async tickets, errors, legacy).
+smoke:
+	bash scripts/serve_smoke.sh
 
 # Regenerate the §Perf hot-path numbers and BENCH_perf.json.
 bench-perf:

@@ -1,10 +1,14 @@
-//! **End-to-end serving driver** — proves all three layers compose:
+//! **End-to-end serving driver** — proves all the layers compose, now
+//! over the real wire:
 //!
 //! Layer 1/2 (build time): Pallas kernels inside JAX function bodies,
 //! AOT-lowered to `artifacts/*.hlo.txt` by `make artifacts`.
 //! Layer 3 (this binary): the MQFQ-Sticky control plane under a wall
-//! clock, serving an open-loop batch of requests; every dispatched
-//! invocation *executes its real HLO artifact* on the PJRT CPU client.
+//! clock behind the protocol-v1 TCP frontend; an [`ApiClient`] submits
+//! an open-loop batch of *async* invocations (tickets) and redeems
+//! them, so the requests traverse the same JSON-lines protocol any
+//! external client would use; every dispatched invocation *executes
+//! its real HLO artifact* on the PJRT CPU client.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example e2e_serving
@@ -13,12 +17,12 @@
 //! Reports per-function and aggregate latency/throughput; the run is
 //! recorded in EXPERIMENTS.md §End-to-end.
 
-use std::sync::mpsc::Receiver;
 use std::time::{Duration, Instant};
 
+use mqfq::api::{ApiClient, Ticket};
 use mqfq::plane::PlaneConfig;
-use mqfq::server::{Completion, RtServer};
-use mqfq::types::FuncId;
+use mqfq::server::RtServer;
+use mqfq::types::StartKind;
 use mqfq::util::stats::percentiles;
 use mqfq::util::table::Table;
 use mqfq::workload::{catalog, Workload};
@@ -48,13 +52,23 @@ fn main() -> anyhow::Result<()> {
         artifacts.display()
     );
     let server = RtServer::new(workload, cfg, Some(&artifacts), SCALE)?;
+    let addr = server.serve("127.0.0.1:0")?;
+    let mut client = ApiClient::connect(addr)?;
+    let described = client.describe()?;
+    println!(
+        "connected to {} at {addr}, protocol v{}, functions: {:?}",
+        described.server,
+        client.proto(),
+        described.functions
+    );
 
-    // Open-loop: one request every 20 ms round-robin across functions.
+    // Open-loop: one async request every 20 ms round-robin across
+    // functions; tickets are redeemed after the submission window.
     let t0 = Instant::now();
-    let mut pending: Vec<(FuncId, Receiver<Completion>)> = Vec::new();
+    let mut pending: Vec<(usize, Ticket)> = Vec::new();
     for i in 0..REQUESTS_PER_FUNC * FUNCS.len() {
-        let func = FuncId((i % FUNCS.len()) as u32);
-        pending.push((func, server.submit(func)));
+        let fi = i % FUNCS.len();
+        pending.push((fi, client.invoke_async(FUNCS[fi])?));
         std::thread::sleep(Duration::from_millis(20));
     }
     let submit_wall = t0.elapsed();
@@ -62,11 +76,11 @@ fn main() -> anyhow::Result<()> {
     let mut lat_by_func: Vec<Vec<f64>> = vec![Vec::new(); FUNCS.len()];
     let mut exec_by_func: Vec<Vec<f64>> = vec![Vec::new(); FUNCS.len()];
     let mut colds = 0usize;
-    for (func, rx) in pending {
-        let c = rx.recv_timeout(Duration::from_secs(120))?;
-        lat_by_func[func.0 as usize].push(c.latency.as_secs_f64());
-        exec_by_func[func.0 as usize].push(c.exec.as_secs_f64());
-        if c.start_kind == mqfq::types::StartKind::Cold {
+    for (fi, ticket) in pending {
+        let o = client.wait(ticket, Some(120_000))?;
+        lat_by_func[fi].push(o.latency_ms / 1e3);
+        exec_by_func[fi].push(o.exec_ms / 1e3);
+        if o.start_kind == StartKind::Cold {
             colds += 1;
         }
     }
@@ -109,6 +123,15 @@ fn main() -> anyhow::Result<()> {
         ps[2] * 1e3,
         colds
     );
-    println!("all layers composed: JAX/Pallas HLO executed via PJRT behind MQFQ-Sticky");
+    let stats = client.stats()?;
+    println!(
+        "server stats: {} invocations, mean latency {:.1} ms, cold ratio {:.3}",
+        stats.invocations, stats.mean_latency_ms, stats.cold_ratio
+    );
+    client.quit();
+    println!(
+        "all layers composed: JAX/Pallas HLO executed via PJRT behind \
+         MQFQ-Sticky, over protocol v1"
+    );
     Ok(())
 }

@@ -1,24 +1,27 @@
 //! Quickstart: stand up the MQFQ-Sticky control plane, invoke a few
-//! functions, and print what happened.
+//! functions through the serving API, and print what happened.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Uses the real-time driver in model mode (no artifacts needed); see
-//! `examples/e2e_serving.rs` for the full PJRT-executing pipeline.
+//! Uses the real-time driver in model mode (no artifacts needed) via
+//! the in-process [`Frontend`] API — submit returns a ticket, wait
+//! redeems it; see `examples/e2e_serving.rs` for the full
+//! PJRT-executing pipeline over TCP.
 
 use std::time::Duration;
 
+use mqfq::api::Frontend;
 use mqfq::plane::PlaneConfig;
 use mqfq::server::RtServer;
-use mqfq::types::FuncId;
 use mqfq::workload::{catalog, Workload};
 
 fn main() -> anyhow::Result<()> {
     // 1. Register a workload: one copy of three catalog functions.
     let mut workload = Workload::default();
-    for name in ["isoneural", "fft", "imagenet"] {
+    let names = ["isoneural", "fft", "imagenet"];
+    for name in names {
         workload.register(catalog::by_name(name).unwrap(), 0, 5.0);
     }
 
@@ -29,28 +32,33 @@ fn main() -> anyhow::Result<()> {
     //    transfers) are scaled 100× down so the demo finishes fast.
     let server = RtServer::new(workload, cfg, None, 0.01)?;
 
-    // 4. Invoke each function twice: first cold, then warm.
+    // 4. Invoke each function twice: first cold, then warm. Async
+    //    tickets let the three submissions overlap.
     for round in 0..2 {
         println!(
             "--- round {} ({}) ---",
             round + 1,
             if round == 0 { "cold" } else { "warm" }
         );
-        let rxs: Vec<_> = (0..3).map(|f| server.submit(FuncId(f))).collect();
-        for rx in rxs {
-            let c = rx.recv_timeout(Duration::from_secs(60))?;
+        let tickets: Vec<_> = names
+            .iter()
+            .map(|name| server.submit(name))
+            .collect::<Result<_, _>>()?;
+        for ticket in tickets {
+            let o = server.wait(ticket, Some(Duration::from_secs(60)))?;
             println!(
-                "  f{} -> {:>9.1?} end-to-end  ({} start on gpu{})",
-                c.func.0, c.latency, c.start_kind, c.gpu
+                "  {} -> {:>9.1} ms end-to-end  ({} start on gpu{})",
+                o.func, o.latency_ms, o.start_kind, o.gpu
             );
         }
     }
 
-    let (n, mean_lat, cold) = server.stats();
+    let s = server.stats();
     println!(
-        "\n{n} invocations, mean latency {:.0} ms, cold ratio {:.0}%",
-        mean_lat * 1e3,
-        cold * 100.0
+        "\n{} invocations, mean latency {:.0} ms, cold ratio {:.0}%",
+        s.invocations,
+        s.mean_latency_ms,
+        s.cold_ratio * 100.0
     );
     Ok(())
 }

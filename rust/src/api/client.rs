@@ -1,0 +1,157 @@
+//! Blocking protocol-v1 client: one TCP connection, JSON-lines framing,
+//! `hello` handshake on connect. Used by the CLI `invoke` subcommand,
+//! `examples/e2e_serving.rs`, and the wire-protocol conformance tests.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use super::types::{
+    ApiError, DescribeInfo, InvokeMode, InvokeOutcome, Request, Response, StatsSnapshot,
+    Ticket, PROTOCOL_VERSION,
+};
+use super::wire;
+
+/// A connected, version-negotiated client. One request in flight at a
+/// time (the protocol is strictly request/reply per connection); async
+/// concurrency comes from tickets, not pipelining.
+pub struct ApiClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    proto: u32,
+}
+
+fn io_err<E: std::fmt::Display>(e: E) -> ApiError {
+    ApiError::Io {
+        detail: e.to_string(),
+    }
+}
+
+impl ApiClient {
+    /// Connect and negotiate the protocol version (hello handshake).
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self, ApiError> {
+        let stream = TcpStream::connect(addr).map_err(io_err)?;
+        let writer = stream.try_clone().map_err(io_err)?;
+        let mut client = Self {
+            reader: BufReader::new(stream),
+            writer,
+            proto: 0,
+        };
+        match client.call(&Request::Hello {
+            version: PROTOCOL_VERSION,
+        })? {
+            Response::Hello { proto, .. } => {
+                client.proto = proto;
+                Ok(client)
+            }
+            other => Err(unexpected("hello", &other)),
+        }
+    }
+
+    /// Negotiated protocol version.
+    pub fn proto(&self) -> u32 {
+        self.proto
+    }
+
+    /// Bound how long any single reply may take (e.g. sync invokes on a
+    /// loaded server). `None` restores fully blocking reads.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> Result<(), ApiError> {
+        self.writer.set_read_timeout(timeout).map_err(io_err)
+    }
+
+    /// One request/reply round trip. Server-side failures come back as
+    /// `Err` with the decoded [`ApiError`]; transport failures as
+    /// [`ApiError::Io`].
+    fn call(&mut self, req: &Request) -> Result<Response, ApiError> {
+        let line = wire::encode_request(req);
+        self.writer
+            .write_all((line + "\n").as_bytes())
+            .map_err(io_err)?;
+        let mut buf = String::new();
+        let n = self.reader.read_line(&mut buf).map_err(io_err)?;
+        if n == 0 {
+            return Err(ApiError::Io {
+                detail: "server closed the connection".into(),
+            });
+        }
+        match wire::decode_response(buf.trim()).map_err(io_err)? {
+            Response::Error(e) => Err(e),
+            resp => Ok(resp),
+        }
+    }
+
+    pub fn describe(&mut self) -> Result<DescribeInfo, ApiError> {
+        match self.call(&Request::Describe)? {
+            Response::Described(d) => Ok(d),
+            other => Err(unexpected("describe", &other)),
+        }
+    }
+
+    /// Sync invoke: blocks until the invocation completes (or the
+    /// server-side `deadline_ms` expires).
+    pub fn invoke(
+        &mut self,
+        func: &str,
+        deadline_ms: Option<u64>,
+    ) -> Result<InvokeOutcome, ApiError> {
+        match self.call(&Request::Invoke {
+            func: func.to_string(),
+            mode: InvokeMode::Sync,
+            deadline_ms,
+        })? {
+            Response::Done(o) => Ok(o),
+            other => Err(unexpected("invoke", &other)),
+        }
+    }
+
+    /// Async invoke: returns the completion ticket immediately.
+    pub fn invoke_async(&mut self, func: &str) -> Result<Ticket, ApiError> {
+        match self.call(&Request::Invoke {
+            func: func.to_string(),
+            mode: InvokeMode::Async,
+            deadline_ms: None,
+        })? {
+            Response::Accepted { ticket } => Ok(ticket),
+            other => Err(unexpected("invoke async", &other)),
+        }
+    }
+
+    /// Redeem a ticket, blocking until completion (optionally bounded).
+    pub fn wait(
+        &mut self,
+        ticket: Ticket,
+        deadline_ms: Option<u64>,
+    ) -> Result<InvokeOutcome, ApiError> {
+        match self.call(&Request::Wait { ticket, deadline_ms })? {
+            Response::Done(o) => Ok(o),
+            other => Err(unexpected("wait", &other)),
+        }
+    }
+
+    /// Non-blocking completion check: `Some` consumes the ticket.
+    pub fn poll(&mut self, ticket: Ticket) -> Result<Option<InvokeOutcome>, ApiError> {
+        match self.call(&Request::Poll { ticket })? {
+            Response::Done(o) => Ok(Some(o)),
+            Response::Pending { .. } => Ok(None),
+            other => Err(unexpected("poll", &other)),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<StatsSnapshot, ApiError> {
+        match self.call(&Request::Stats)? {
+            Response::Stats(s) => Ok(s),
+            other => Err(unexpected("stats", &other)),
+        }
+    }
+
+    /// Close the connection gracefully (server replies `bye`).
+    pub fn quit(mut self) {
+        let _ = self.call(&Request::Shutdown);
+    }
+}
+
+fn unexpected(what: &str, got: &Response) -> ApiError {
+    ApiError::Io {
+        detail: format!("unexpected {what} reply: {got:?}"),
+    }
+}

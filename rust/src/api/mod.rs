@@ -1,0 +1,81 @@
+//! The serving API: a versioned, typed wire protocol and the
+//! [`Frontend`] contract every real-traffic server implements.
+//!
+//! The paper's system is a *serving* system — MQFQ-Sticky schedules
+//! live invocations arriving over RPC — so the serving surface is a
+//! first-class, versioned API rather than an ad-hoc debug socket,
+//! following the front-end/backend split of OpenWhisk-style FaaS
+//! stacks:
+//!
+//! * [`types`] — protocol v1 vocabulary: [`types::Request`] /
+//!   [`types::Response`] enums, async [`types::Ticket`]s, per-request
+//!   deadlines, and the structured [`types::ApiError`] taxonomy.
+//! * [`wire`] — JSON-lines framing with a `hello` version handshake;
+//!   the pre-v1 word protocol (`invoke <fn>`/`stats`/`quit`) is kept
+//!   as legacy aliases.
+//! * [`client`] — blocking Rust client ([`client::ApiClient`]) used by
+//!   the CLI `invoke` subcommand, the examples, and the conformance
+//!   tests.
+//! * [`Frontend`] — the server-side contract, implemented by the
+//!   single-plane [`crate::server::RtServer`] and the sharded
+//!   [`crate::server::RtCluster`]; [`wire::serve_connection`] speaks
+//!   the protocol over any of them.
+
+pub mod client;
+pub mod types;
+pub mod wire;
+
+pub use client::ApiClient;
+pub use types::{
+    ApiError, DescribeInfo, InvokeMode, InvokeOutcome, Request, Response, StatsSnapshot,
+    Ticket, PROTOCOL_VERSION,
+};
+
+use std::time::Duration;
+
+/// A serving frontend: submit work, redeem tickets, observe stats.
+///
+/// Submission and retrieval are decoupled so one contract covers both
+/// invoke modes: a sync invoke is `submit` + `wait` on the server side
+/// of one request, an async invoke returns the [`Ticket`] to the client
+/// and lets it `wait`/`poll` later (possibly on another connection —
+/// tickets are frontend-scoped, not connection-scoped).
+///
+/// Implementations are shared-state handles (`&self` everywhere) so one
+/// frontend serves many connections concurrently.
+pub trait Frontend: Send + Sync {
+    /// What this frontend is and what it serves.
+    fn describe(&self) -> DescribeInfo;
+
+    /// Admit one invocation of the named function. Errors are the
+    /// admission taxonomy: [`ApiError::UnknownFunction`],
+    /// [`ApiError::Overloaded`] (backpressure), [`ApiError::ShuttingDown`].
+    fn submit(&self, func: &str) -> Result<Ticket, ApiError>;
+
+    /// Block until the ticket's invocation completes. A `deadline`
+    /// bounds the wait ([`ApiError::DeadlineExceeded`] on expiry — the
+    /// invocation itself runs to completion and can be waited again).
+    /// Completed tickets are reclaimed on delivery: every waiter
+    /// blocked at completion time is served, after which the ticket is
+    /// forgotten and further waits return [`ApiError::UnknownTicket`].
+    fn wait(&self, ticket: Ticket, deadline: Option<Duration>) -> Result<InvokeOutcome, ApiError>;
+
+    /// Non-blocking check: `Ok(Some)` consumes the ticket (same
+    /// reclamation rule as [`Self::wait`]), `Ok(None)` means still
+    /// running.
+    fn poll(&self, ticket: Ticket) -> Result<Option<InvokeOutcome>, ApiError>;
+
+    /// Aggregate serving stats across all shards.
+    fn stats(&self) -> StatsSnapshot;
+
+    /// Stop admitting work ([`Self::submit`] returns
+    /// [`ApiError::ShuttingDown`]) and wind down background threads.
+    /// In-flight invocations run to completion.
+    fn shutdown(&self);
+
+    /// Sync convenience: submit and wait in one call.
+    fn invoke(&self, func: &str, deadline: Option<Duration>) -> Result<InvokeOutcome, ApiError> {
+        let ticket = self.submit(func)?;
+        self.wait(ticket, deadline)
+    }
+}

@@ -1,0 +1,310 @@
+//! Protocol v1 surface types: versioned requests/responses, async
+//! completion tickets, and the structured [`ApiError`] taxonomy.
+//!
+//! These are the *semantic* types — [`super::wire`] maps them onto the
+//! JSON-lines framing, [`super::client`] speaks them over TCP, and the
+//! [`super::Frontend`] trait serves them from a control plane (single
+//! [`crate::server::RtServer`] or sharded [`crate::server::RtCluster`]).
+//! Keeping the enum layer separate from the framing is what lets the
+//! legacy line protocol (`invoke <fn>` / `stats` / `quit`) coexist as
+//! aliases: both framings decode into the same [`Request`]s.
+
+use std::fmt;
+
+use crate::types::StartKind;
+
+/// The wire-protocol version this build speaks. Bump on any change to
+/// the request/response vocabulary that an old client could misread;
+/// the `hello` handshake negotiates down to the client's version while
+/// `min(client, server)` is still a language both sides speak.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Handle for an accepted asynchronous invocation. Server-unique for
+/// the lifetime of one frontend (tickets are never reused).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Ticket(pub u64);
+
+impl fmt::Display for Ticket {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "#{}", self.0)
+    }
+}
+
+/// How an `invoke` wants its reply: block until done, or return a
+/// [`Ticket`] immediately (Shahrad et al.'s production traces are
+/// dominated by async triggers — queues, timers — so async submission
+/// is first-class, not an afterthought).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum InvokeMode {
+    #[default]
+    Sync,
+    Async,
+}
+
+impl InvokeMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            InvokeMode::Sync => "sync",
+            InvokeMode::Async => "async",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "sync" => InvokeMode::Sync,
+            "async" => InvokeMode::Async,
+            _ => return None,
+        })
+    }
+}
+
+/// One client request. The legacy line protocol decodes into the same
+/// vocabulary: `invoke <fn>` ⇒ sync [`Request::Invoke`], `stats` ⇒
+/// [`Request::Stats`], `quit` ⇒ [`Request::Shutdown`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Version handshake; the first request a v1 client sends.
+    Hello { version: u32 },
+    /// What does this frontend serve? (functions, policy, shards, router)
+    Describe,
+    /// Submit one invocation of a registered function.
+    Invoke {
+        func: String,
+        mode: InvokeMode,
+        /// Sync mode: bound end-to-end (queueing + execution) waiting;
+        /// exceeded ⇒ [`ApiError::DeadlineExceeded`] (the invocation
+        /// itself still runs to completion — no preemption, §4.4).
+        deadline_ms: Option<u64>,
+    },
+    /// Block until the ticket's invocation completes (optionally bounded).
+    Wait {
+        ticket: Ticket,
+        deadline_ms: Option<u64>,
+    },
+    /// Non-blocking completion check.
+    Poll { ticket: Ticket },
+    /// Aggregate serving stats.
+    Stats,
+    /// Close this connection (the server keeps running; stopping the
+    /// server is the owning process's call, not a network client's).
+    Shutdown,
+}
+
+/// Completion record of one served invocation, as reported to clients.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InvokeOutcome {
+    pub ticket: Ticket,
+    /// Registered function name (e.g. `fft-0`).
+    pub func: String,
+    /// Shard that served it (always 0 on a single-plane server).
+    pub shard: usize,
+    pub gpu: u32,
+    pub start_kind: StartKind,
+    /// End-to-end latency: arrival to completion, wall-clock ms.
+    pub latency_ms: f64,
+    /// Measured on-device execution time (PJRT wall time in real mode,
+    /// the scaled modeled service in model mode), ms.
+    pub exec_ms: f64,
+}
+
+/// `describe` reply: what this frontend is and what it serves.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DescribeInfo {
+    pub proto: u32,
+    /// Frontend kind: `rt-server` (single plane) or `rt-cluster`.
+    pub server: String,
+    /// Scheduling policy on the shards (e.g. `mqfq-sticky`).
+    pub policy: String,
+    pub shards: usize,
+    /// Router name (`single` on a single-plane server).
+    pub router: String,
+    /// Registered function names, invocable via [`Request::Invoke`].
+    pub functions: Vec<String>,
+}
+
+/// `stats` reply: aggregate serving counters across all shards.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct StatsSnapshot {
+    pub invocations: usize,
+    pub mean_latency_ms: f64,
+    pub cold_ratio: f64,
+    /// Queued (not yet dispatched) across all shards.
+    pub pending: usize,
+    /// Executing on devices across all shards.
+    pub in_flight: usize,
+}
+
+/// One server reply. Every response carries `ok` on the wire; errors
+/// are a first-class variant, not a stringly-typed prefix.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Hello { proto: u32, server: String },
+    Described(DescribeInfo),
+    /// Async invoke accepted; redeem with `wait`/`poll`.
+    Accepted { ticket: Ticket },
+    /// Sync invoke / `wait` / successful `poll` completion.
+    Done(InvokeOutcome),
+    /// `poll` on a still-running invocation.
+    Pending { ticket: Ticket },
+    Stats(StatsSnapshot),
+    /// Connection-close acknowledgement.
+    Bye,
+    Error(ApiError),
+}
+
+/// Structured error taxonomy. `code()` is the stable wire identifier;
+/// `Display` adds human detail.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiError {
+    /// Hello requested a protocol this server cannot speak.
+    UnsupportedVersion { requested: u32, supported: u32 },
+    UnknownFunction { name: String },
+    UnknownTicket { ticket: Ticket },
+    /// Admission control: queued work is at/over the backpressure bound.
+    Overloaded { pending: usize, limit: usize },
+    /// A sync invoke or `wait` outlived its deadline. The invocation
+    /// keeps running (run-to-completion); `ticket` is its handle, so
+    /// even a deadline-tripped *sync* invoke can be redeemed with a
+    /// later `wait`/`poll`.
+    DeadlineExceeded {
+        waited_ms: u64,
+        ticket: Option<Ticket>,
+    },
+    ShuttingDown,
+    /// Malformed request (bad JSON, missing field, unknown command).
+    BadRequest { detail: String },
+    /// Client-side transport failure (connect/read/write).
+    Io { detail: String },
+}
+
+impl ApiError {
+    /// Stable wire identifier for this error class.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ApiError::UnsupportedVersion { .. } => "unsupported-version",
+            ApiError::UnknownFunction { .. } => "unknown-function",
+            ApiError::UnknownTicket { .. } => "unknown-ticket",
+            ApiError::Overloaded { .. } => "overloaded",
+            ApiError::DeadlineExceeded { .. } => "deadline-exceeded",
+            ApiError::ShuttingDown => "shutting-down",
+            ApiError::BadRequest { .. } => "bad-request",
+            ApiError::Io { .. } => "io",
+        }
+    }
+
+    /// Human-readable detail (the part `Display` appends to the code).
+    pub fn detail(&self) -> String {
+        match self {
+            ApiError::UnsupportedVersion {
+                requested,
+                supported,
+            } => format!("client asked for v{requested}, server speaks up to v{supported}"),
+            ApiError::UnknownFunction { name } => name.clone(),
+            ApiError::UnknownTicket { ticket } => ticket.to_string(),
+            ApiError::Overloaded { pending, limit } => {
+                format!("{pending} pending >= limit {limit}")
+            }
+            ApiError::DeadlineExceeded { waited_ms, ticket } => match ticket {
+                Some(t) => format!("waited {waited_ms} ms ({t} still running)"),
+                None => format!("waited {waited_ms} ms"),
+            },
+            ApiError::ShuttingDown => "server is shutting down".into(),
+            ApiError::BadRequest { detail } => detail.clone(),
+            ApiError::Io { detail } => detail.clone(),
+        }
+    }
+
+    /// Rebuild from a wire `(code, detail)` pair — the client-side
+    /// inverse of [`Self::code`]/[`Self::detail`]. Structured fields
+    /// that do not survive the trip (counts, versions) decode to zero;
+    /// the code is what clients should branch on.
+    pub fn from_wire(code: &str, detail: &str) -> ApiError {
+        match code {
+            "unsupported-version" => ApiError::UnsupportedVersion {
+                requested: 0,
+                supported: 0,
+            },
+            "unknown-function" => ApiError::UnknownFunction {
+                name: detail.to_string(),
+            },
+            "unknown-ticket" => ApiError::UnknownTicket {
+                ticket: Ticket(
+                    detail.trim_start_matches('#').parse().unwrap_or(0),
+                ),
+            },
+            "overloaded" => ApiError::Overloaded {
+                pending: 0,
+                limit: 0,
+            },
+            "deadline-exceeded" => ApiError::DeadlineExceeded {
+                waited_ms: 0,
+                ticket: None,
+            },
+            "shutting-down" => ApiError::ShuttingDown,
+            "io" => ApiError::Io {
+                detail: detail.to_string(),
+            },
+            _ => ApiError::BadRequest {
+                detail: detail.to_string(),
+            },
+        }
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code(), self.detail())
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_codes_are_stable_and_distinct() {
+        let all = [
+            ApiError::UnsupportedVersion {
+                requested: 9,
+                supported: 1,
+            },
+            ApiError::UnknownFunction { name: "x".into() },
+            ApiError::UnknownTicket { ticket: Ticket(7) },
+            ApiError::Overloaded {
+                pending: 4,
+                limit: 4,
+            },
+            ApiError::DeadlineExceeded {
+                waited_ms: 10,
+                ticket: Some(Ticket(3)),
+            },
+            ApiError::ShuttingDown,
+            ApiError::BadRequest { detail: "d".into() },
+            ApiError::Io { detail: "d".into() },
+        ];
+        let codes: std::collections::HashSet<_> =
+            all.iter().map(|e| e.code()).collect();
+        assert_eq!(codes.len(), all.len());
+        for e in &all {
+            // Code survives the wire round-trip (detail is advisory).
+            assert_eq!(ApiError::from_wire(e.code(), &e.detail()).code(), e.code());
+            assert!(e.to_string().starts_with(e.code()));
+        }
+    }
+
+    #[test]
+    fn unknown_wire_code_degrades_to_bad_request() {
+        assert_eq!(ApiError::from_wire("warp-failure", "x").code(), "bad-request");
+    }
+
+    #[test]
+    fn invoke_mode_roundtrip() {
+        for m in [InvokeMode::Sync, InvokeMode::Async] {
+            assert_eq!(InvokeMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(InvokeMode::parse("batch"), None);
+        assert_eq!(InvokeMode::default(), InvokeMode::Sync);
+    }
+}

@@ -1,0 +1,909 @@
+//! Protocol v1 framing: one JSON document per line, both directions,
+//! with the legacy word protocol (`invoke <fn>` / `stats` / `quit`)
+//! kept as aliases on the server side.
+//!
+//! ```text
+//! > {"cmd":"hello","v":1}
+//! < {"ok":true,"type":"hello","proto":1,"server":"rt-cluster"}
+//! > {"cmd":"invoke","func":"fft-0","mode":"sync","deadline_ms":5000}
+//! < {"ok":true,"type":"done","ticket":0,"func":"fft-0","shard":2,
+//!    "gpu":0,"start":"cold","latency_ms":412.0,"exec_ms":9.1}
+//! > {"cmd":"invoke","func":"fft-0","mode":"async"}
+//! < {"ok":true,"type":"ticket","ticket":1}
+//! > {"cmd":"poll","ticket":1}
+//! < {"ok":true,"type":"pending","ticket":1}
+//! > {"cmd":"wait","ticket":1}
+//! < {"ok":true,"type":"done", ...}
+//! > {"cmd":"stats"}
+//! < {"ok":true,"type":"stats","invocations":2, ...}
+//! > bogus
+//! < {"ok":false,"type":"error","error":"bad-request","detail":"..."}
+//! ```
+//!
+//! A line starting with `{` is a v1 request; anything else is parsed as
+//! a legacy command and answered in the legacy `ok ...`/`err ...` line
+//! format, so pre-v1 scripts keep working unchanged. The serde-free
+//! JSON layer reuses [`crate::util::json::Json`] for encoding and adds
+//! the matching parser here.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use super::types::{
+    ApiError, DescribeInfo, InvokeMode, InvokeOutcome, Request, Response, StatsSnapshot,
+    Ticket, PROTOCOL_VERSION,
+};
+use super::Frontend;
+use crate::types::StartKind;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------
+// JSON parsing (the write side lives in util::json).
+// ---------------------------------------------------------------------
+
+/// Parse one JSON document. Integral numbers without exponent/fraction
+/// decode as [`Json::Int`]; everything else numeric as [`Json::Num`].
+pub fn parse_json(s: &str) -> Result<Json, String> {
+    let mut p = Parser {
+        b: s.as_bytes(),
+        i: 0,
+    };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing data at byte {}", p.i));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&c) = self.b.get(self.i) {
+            if c == b' ' || c == b'\t' || c == b'\n' || c == b'\r' {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!(
+                "expected '{}' at byte {}",
+                c as char, self.i
+            ))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            None => Err("unexpected end of input".into()),
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(format!("unexpected '{}' at byte {}", c as char, self.i)),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        let mut float = false;
+        while let Some(c) = self.peek() {
+            match c {
+                b'0'..=b'9' | b'-' | b'+' => self.i += 1,
+                b'.' | b'e' | b'E' => {
+                    float = true;
+                    self.i += 1;
+                }
+                _ => break,
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        if float {
+            text.parse::<f64>()
+                .map(Json::Num)
+                .map_err(|_| format!("bad number {text}"))
+        } else {
+            // i64 first (counters, tickets); huge magnitudes fall back
+            // to f64 like every other JSON reader.
+            match text.parse::<i64>() {
+                Ok(i) => Ok(Json::Int(i)),
+                Err(_) => text
+                    .parse::<f64>()
+                    .map(Json::Num)
+                    .map_err(|_| format!("bad number {text}")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(c) = self.peek() else {
+                return Err("unterminated string".into());
+            };
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(e) = self.peek() else {
+                        return Err("unterminated escape".into());
+                    };
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let cp = self.hex4()?;
+                            // Surrogate pair: a high surrogate must be
+                            // followed by \uDC00..DFFF.
+                            let ch = if (0xD800..0xDC00).contains(&cp) {
+                                if self.peek() == Some(b'\\') {
+                                    self.i += 1;
+                                    self.eat(b'u')?;
+                                    let lo = self.hex4()?;
+                                    let c = 0x10000
+                                        + ((cp - 0xD800) << 10)
+                                        + (lo.wrapping_sub(0xDC00) & 0x3FF);
+                                    char::from_u32(c)
+                                } else {
+                                    None
+                                }
+                            } else {
+                                char::from_u32(cp)
+                            };
+                            out.push(ch.unwrap_or('\u{fffd}'));
+                        }
+                        _ => return Err(format!("bad escape \\{}", e as char)),
+                    }
+                }
+                _ => {
+                    // Re-sync to the char boundary: strings are UTF-8.
+                    let s = &self.b[self.i - 1..];
+                    let w = utf8_len(c);
+                    if s.len() < w {
+                        return Err("truncated UTF-8".into());
+                    }
+                    let chunk = std::str::from_utf8(&s[..w])
+                        .map_err(|_| "invalid UTF-8 in string".to_string())?;
+                    out.push_str(chunk);
+                    self.i += w - 1;
+                }
+            }
+        }
+    }
+
+    /// Four hex digits after `\u`. Byte-wise (never `from_utf8`): the
+    /// 4-byte window of a malformed escape may clip a multibyte UTF-8
+    /// character, which must be a decode error, not a panic.
+    fn hex4(&mut self) -> Result<u32, String> {
+        if self.i + 4 > self.b.len() {
+            return Err("truncated \\u escape".into());
+        }
+        let mut v: u32 = 0;
+        for k in 0..4 {
+            let c = self.b[self.i + k];
+            let digit = match c {
+                b'0'..=b'9' => c - b'0',
+                b'a'..=b'f' => c - b'a' + 10,
+                b'A'..=b'F' => c - b'A' + 10,
+                _ => return Err(format!("bad \\u escape at byte {}", self.i + k)),
+            };
+            v = v * 16 + digit as u32;
+        }
+        self.i += 4;
+        Ok(v)
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            self.skip_ws();
+            out.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            out.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+            }
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Accessors over parsed documents.
+// ---------------------------------------------------------------------
+
+/// Field lookup on an object (None for non-objects/missing keys).
+pub fn get<'a>(v: &'a Json, key: &str) -> Option<&'a Json> {
+    match v {
+        Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+        _ => None,
+    }
+}
+
+pub fn get_str<'a>(v: &'a Json, key: &str) -> Option<&'a str> {
+    match get(v, key) {
+        Some(Json::Str(s)) => Some(s),
+        _ => None,
+    }
+}
+
+pub fn get_u64(v: &Json, key: &str) -> Option<u64> {
+    match get(v, key) {
+        Some(Json::Int(i)) if *i >= 0 => Some(*i as u64),
+        Some(Json::Num(x)) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as u64),
+        _ => None,
+    }
+}
+
+pub fn get_f64(v: &Json, key: &str) -> Option<f64> {
+    match get(v, key) {
+        Some(Json::Int(i)) => Some(*i as f64),
+        Some(Json::Num(x)) => Some(*x),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Request codec.
+// ---------------------------------------------------------------------
+
+/// Encode one request as a single wire line (no trailing newline).
+pub fn encode_request(req: &Request) -> String {
+    let mut f: Vec<(String, Json)> = Vec::new();
+    let cmd = |c: &str| ("cmd".to_string(), Json::str(c));
+    match req {
+        Request::Hello { version } => {
+            f.push(cmd("hello"));
+            f.push(("v".into(), Json::Int(*version as i64)));
+        }
+        Request::Describe => f.push(cmd("describe")),
+        Request::Invoke {
+            func,
+            mode,
+            deadline_ms,
+        } => {
+            f.push(cmd("invoke"));
+            f.push(("func".into(), Json::str(func.clone())));
+            f.push(("mode".into(), Json::str(mode.name())));
+            if let Some(d) = deadline_ms {
+                f.push(("deadline_ms".into(), Json::Int(*d as i64)));
+            }
+        }
+        Request::Wait {
+            ticket,
+            deadline_ms,
+        } => {
+            f.push(cmd("wait"));
+            f.push(("ticket".into(), Json::Int(ticket.0 as i64)));
+            if let Some(d) = deadline_ms {
+                f.push(("deadline_ms".into(), Json::Int(*d as i64)));
+            }
+        }
+        Request::Poll { ticket } => {
+            f.push(cmd("poll"));
+            f.push(("ticket".into(), Json::Int(ticket.0 as i64)));
+        }
+        Request::Stats => f.push(cmd("stats")),
+        Request::Shutdown => f.push(cmd("quit")),
+    }
+    Json::Obj(f).render_compact()
+}
+
+/// Decode one v1 request line (must start with `{`).
+pub fn decode_request(line: &str) -> Result<Request, ApiError> {
+    let bad = |detail: String| ApiError::BadRequest { detail };
+    let v = parse_json(line).map_err(|e| bad(format!("bad JSON: {e}")))?;
+    let cmd = get_str(&v, "cmd").ok_or_else(|| bad("missing \"cmd\"".into()))?;
+    let ticket = |v: &Json| -> Result<Ticket, ApiError> {
+        get_u64(v, "ticket")
+            .map(Ticket)
+            .ok_or_else(|| bad("missing \"ticket\"".into()))
+    };
+    Ok(match cmd {
+        "hello" => {
+            let version = match get(&v, "v") {
+                // Absent version ⇒ the client wants whatever is current.
+                None => PROTOCOL_VERSION as u64,
+                // Present but malformed (string, fractional, negative)
+                // must NOT silently negotiate to the default.
+                Some(_) => get_u64(&v, "v").ok_or_else(|| {
+                    bad("hello: \"v\" must be a non-negative integer".into())
+                })?,
+            };
+            Request::Hello {
+                // Saturate instead of truncating: 2^32+1 must read as
+                // "far future" and be rejected, not wrap to v1.
+                version: u32::try_from(version).unwrap_or(u32::MAX),
+            }
+        }
+        "describe" => Request::Describe,
+        "invoke" => {
+            let func = get_str(&v, "func")
+                .ok_or_else(|| bad("invoke: missing \"func\"".into()))?
+                .to_string();
+            let mode = match get_str(&v, "mode") {
+                None => InvokeMode::Sync,
+                Some(m) => InvokeMode::parse(m)
+                    .ok_or_else(|| bad(format!("invoke: unknown mode {m}")))?,
+            };
+            Request::Invoke {
+                func,
+                mode,
+                deadline_ms: get_u64(&v, "deadline_ms"),
+            }
+        }
+        "wait" => Request::Wait {
+            ticket: ticket(&v)?,
+            deadline_ms: get_u64(&v, "deadline_ms"),
+        },
+        "poll" => Request::Poll { ticket: ticket(&v)? },
+        "stats" => Request::Stats,
+        "quit" | "shutdown" => Request::Shutdown,
+        other => return Err(bad(format!("unknown command {other}"))),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Response codec.
+// ---------------------------------------------------------------------
+
+/// Encode one response as a single wire line (no trailing newline).
+pub fn encode_response(resp: &Response) -> String {
+    let mut f: Vec<(String, Json)> = vec![(
+        "ok".into(),
+        Json::Bool(!matches!(resp, Response::Error(_))),
+    )];
+    let ty = |t: &str| ("type".to_string(), Json::str(t));
+    match resp {
+        Response::Hello { proto, server } => {
+            f.push(ty("hello"));
+            f.push(("proto".into(), Json::Int(*proto as i64)));
+            f.push(("server".into(), Json::str(server.clone())));
+        }
+        Response::Described(d) => {
+            f.push(ty("describe"));
+            f.push(("proto".into(), Json::Int(d.proto as i64)));
+            f.push(("server".into(), Json::str(d.server.clone())));
+            f.push(("policy".into(), Json::str(d.policy.clone())));
+            f.push(("shards".into(), Json::Int(d.shards as i64)));
+            f.push(("router".into(), Json::str(d.router.clone())));
+            f.push((
+                "functions".into(),
+                Json::Arr(d.functions.iter().map(|name| Json::str(name.clone())).collect()),
+            ));
+        }
+        Response::Accepted { ticket } => {
+            f.push(ty("ticket"));
+            f.push(("ticket".into(), Json::Int(ticket.0 as i64)));
+        }
+        Response::Done(o) => {
+            f.push(ty("done"));
+            f.push(("ticket".into(), Json::Int(o.ticket.0 as i64)));
+            f.push(("func".into(), Json::str(o.func.clone())));
+            f.push(("shard".into(), Json::Int(o.shard as i64)));
+            f.push(("gpu".into(), Json::Int(o.gpu as i64)));
+            f.push(("start".into(), Json::str(o.start_kind.to_string())));
+            f.push(("latency_ms".into(), Json::Num(o.latency_ms)));
+            f.push(("exec_ms".into(), Json::Num(o.exec_ms)));
+        }
+        Response::Pending { ticket } => {
+            f.push(ty("pending"));
+            f.push(("ticket".into(), Json::Int(ticket.0 as i64)));
+        }
+        Response::Stats(s) => {
+            f.push(ty("stats"));
+            f.push(("invocations".into(), Json::Int(s.invocations as i64)));
+            f.push(("mean_latency_ms".into(), Json::Num(s.mean_latency_ms)));
+            f.push(("cold_ratio".into(), Json::Num(s.cold_ratio)));
+            f.push(("pending".into(), Json::Int(s.pending as i64)));
+            f.push(("in_flight".into(), Json::Int(s.in_flight as i64)));
+        }
+        Response::Bye => f.push(ty("bye")),
+        Response::Error(e) => {
+            f.push(ty("error"));
+            f.push(("error".into(), Json::str(e.code())));
+            f.push(("detail".into(), Json::str(e.detail())));
+            // Deadline-tripped work keeps running: surface its ticket
+            // as a structured field so clients can redeem it later.
+            if let ApiError::DeadlineExceeded {
+                ticket: Some(t), ..
+            } = e
+            {
+                f.push(("ticket".into(), Json::Int(t.0 as i64)));
+            }
+        }
+    }
+    Json::Obj(f).render_compact()
+}
+
+/// Decode one response line (client side).
+pub fn decode_response(line: &str) -> Result<Response, String> {
+    let v = parse_json(line)?;
+    if let Some(Json::Bool(false)) = get(&v, "ok") {
+        let code = get_str(&v, "error").unwrap_or("bad-request");
+        let detail = get_str(&v, "detail").unwrap_or("");
+        let mut err = ApiError::from_wire(code, detail);
+        // Structured extra: the still-running invocation's ticket.
+        if let ApiError::DeadlineExceeded { ticket, .. } = &mut err {
+            *ticket = get_u64(&v, "ticket").map(Ticket);
+        }
+        return Ok(Response::Error(err));
+    }
+    let ty = get_str(&v, "type").ok_or("missing \"type\"")?;
+    let ticket = |v: &Json| get_u64(v, "ticket").map(Ticket).ok_or("missing \"ticket\"");
+    Ok(match ty {
+        "hello" => Response::Hello {
+            proto: get_u64(&v, "proto").ok_or("missing \"proto\"")? as u32,
+            server: get_str(&v, "server").unwrap_or("").to_string(),
+        },
+        "describe" => Response::Described(DescribeInfo {
+            proto: get_u64(&v, "proto").ok_or("missing \"proto\"")? as u32,
+            server: get_str(&v, "server").unwrap_or("").to_string(),
+            policy: get_str(&v, "policy").unwrap_or("").to_string(),
+            shards: get_u64(&v, "shards").unwrap_or(1) as usize,
+            router: get_str(&v, "router").unwrap_or("").to_string(),
+            functions: match get(&v, "functions") {
+                Some(Json::Arr(xs)) => xs
+                    .iter()
+                    .filter_map(|x| match x {
+                        Json::Str(s) => Some(s.clone()),
+                        _ => None,
+                    })
+                    .collect(),
+                _ => Vec::new(),
+            },
+        }),
+        "ticket" => Response::Accepted { ticket: ticket(&v)? },
+        "done" => Response::Done(InvokeOutcome {
+            ticket: ticket(&v)?,
+            func: get_str(&v, "func").unwrap_or("").to_string(),
+            shard: get_u64(&v, "shard").unwrap_or(0) as usize,
+            gpu: get_u64(&v, "gpu").unwrap_or(0) as u32,
+            start_kind: get_str(&v, "start")
+                .and_then(StartKind::parse)
+                .ok_or("bad \"start\"")?,
+            latency_ms: get_f64(&v, "latency_ms").ok_or("missing \"latency_ms\"")?,
+            exec_ms: get_f64(&v, "exec_ms").unwrap_or(0.0),
+        }),
+        "pending" => Response::Pending { ticket: ticket(&v)? },
+        "stats" => Response::Stats(StatsSnapshot {
+            invocations: get_u64(&v, "invocations").unwrap_or(0) as usize,
+            mean_latency_ms: get_f64(&v, "mean_latency_ms").unwrap_or(0.0),
+            cold_ratio: get_f64(&v, "cold_ratio").unwrap_or(0.0),
+            pending: get_u64(&v, "pending").unwrap_or(0) as usize,
+            in_flight: get_u64(&v, "in_flight").unwrap_or(0) as usize,
+        }),
+        "bye" => Response::Bye,
+        other => return Err(format!("unknown response type {other}")),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Connection loop: v1 lines + legacy aliases over one Frontend.
+// ---------------------------------------------------------------------
+
+/// Serve one TCP connection over `frontend` until the client quits or
+/// the stream errors. Shared by [`crate::server::RtServer`] and
+/// [`crate::server::RtCluster`] — the protocol never sees which one it
+/// is talking to, only the [`Frontend`] contract.
+pub fn serve_connection(frontend: &dyn Frontend, stream: TcpStream) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (reply, close) = if line.starts_with('{') {
+            handle_v1(frontend, line)
+        } else {
+            handle_legacy(frontend, line)
+        };
+        if let Some(reply) = reply {
+            if writer.write_all((reply + "\n").as_bytes()).is_err() {
+                break;
+            }
+        }
+        if close {
+            break;
+        }
+    }
+}
+
+/// Deadline option → `Duration` (ms granularity, as on the wire).
+fn deadline(ms: Option<u64>) -> Option<Duration> {
+    ms.map(Duration::from_millis)
+}
+
+fn handle_v1(frontend: &dyn Frontend, line: &str) -> (Option<String>, bool) {
+    let resp = match decode_request(line) {
+        Err(e) => Response::Error(e),
+        Ok(req) => match req {
+            Request::Hello { version } => {
+                if version == 0 || version > PROTOCOL_VERSION {
+                    Response::Error(ApiError::UnsupportedVersion {
+                        requested: version,
+                        supported: PROTOCOL_VERSION,
+                    })
+                } else {
+                    Response::Hello {
+                        proto: version,
+                        server: frontend.describe().server,
+                    }
+                }
+            }
+            Request::Describe => Response::Described(frontend.describe()),
+            Request::Invoke {
+                func,
+                mode,
+                deadline_ms,
+            } => match frontend.submit(&func) {
+                Err(e) => Response::Error(e),
+                Ok(ticket) => match mode {
+                    InvokeMode::Async => Response::Accepted { ticket },
+                    InvokeMode::Sync => {
+                        match frontend.wait(ticket, deadline(deadline_ms)) {
+                            Ok(o) => Response::Done(o),
+                            Err(e) => Response::Error(e),
+                        }
+                    }
+                },
+            },
+            Request::Wait {
+                ticket,
+                deadline_ms,
+            } => match frontend.wait(ticket, deadline(deadline_ms)) {
+                Ok(o) => Response::Done(o),
+                Err(e) => Response::Error(e),
+            },
+            Request::Poll { ticket } => match frontend.poll(ticket) {
+                Ok(Some(o)) => Response::Done(o),
+                Ok(None) => Response::Pending { ticket },
+                Err(e) => Response::Error(e),
+            },
+            Request::Stats => Response::Stats(frontend.stats()),
+            Request::Shutdown => {
+                return (Some(encode_response(&Response::Bye)), true)
+            }
+        },
+    };
+    (Some(encode_response(&resp)), false)
+}
+
+/// Legacy aliases: the pre-v1 word protocol, answered in its original
+/// reply format (scripts from before the redesign keep working).
+fn handle_legacy(frontend: &dyn Frontend, line: &str) -> (Option<String>, bool) {
+    let mut parts = line.split_whitespace();
+    let reply = match parts.next() {
+        Some("invoke") => match parts.next() {
+            None => "err unknown function".to_string(),
+            Some(name) => match frontend.invoke(name, None) {
+                Ok(o) => format!(
+                    "ok {:.1} {:.1} {} gpu{}",
+                    o.latency_ms, o.exec_ms, o.start_kind, o.gpu
+                ),
+                Err(ApiError::UnknownFunction { .. }) => "err unknown function".into(),
+                Err(e) => format!("err {}", e.code()),
+            },
+        },
+        Some("stats") => {
+            let s = frontend.stats();
+            format!(
+                "ok invocations={} mean_latency_ms={:.1} cold_ratio={:.3}",
+                s.invocations, s.mean_latency_ms, s.cold_ratio
+            )
+        }
+        Some("quit") | None => return (None, true),
+        Some(other) => format!("err unknown command {other}"),
+    };
+    (Some(reply), false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_parser_roundtrips_rendered_documents() {
+        let doc = Json::Obj(vec![
+            ("s".into(), Json::str("a\"b\\c\nd — ü")),
+            ("i".into(), Json::Int(-42)),
+            ("x".into(), Json::Num(1.5)),
+            ("b".into(), Json::Bool(true)),
+            ("n".into(), Json::Null),
+            (
+                "arr".into(),
+                Json::Arr(vec![Json::Int(1), Json::str("two"), Json::Null]),
+            ),
+            ("obj".into(), Json::Obj(vec![("k".into(), Json::Int(7))])),
+            ("empty".into(), Json::Arr(vec![])),
+        ]);
+        for text in [doc.render(), doc.render_compact()] {
+            let back = parse_json(&text).unwrap();
+            assert_eq!(get_str(&back, "s"), Some("a\"b\\c\nd — ü"));
+            assert_eq!(get_u64(&back, "i"), None); // negative
+            assert_eq!(get_f64(&back, "i"), Some(-42.0));
+            assert_eq!(get_f64(&back, "x"), Some(1.5));
+            assert!(matches!(get(&back, "b"), Some(Json::Bool(true))));
+            assert!(matches!(get(&back, "n"), Some(Json::Null)));
+            let Some(Json::Arr(xs)) = get(&back, "arr") else {
+                panic!("arr")
+            };
+            assert_eq!(xs.len(), 3);
+            assert_eq!(get_u64(get(&back, "obj").unwrap(), "k"), Some(7));
+        }
+    }
+
+    #[test]
+    fn json_parser_handles_escapes_and_unicode() {
+        let v = parse_json(r#"{"u":"é€","sp":"😀","t":"\t"}"#).unwrap();
+        assert_eq!(get_str(&v, "u"), Some("é€"));
+        assert_eq!(get_str(&v, "sp"), Some("😀"));
+        assert_eq!(get_str(&v, "t"), Some("\t"));
+    }
+
+    #[test]
+    fn json_parser_rejects_malformed_input() {
+        for bad in [
+            "",
+            "{",
+            "[1,]",
+            "{\"a\":}",
+            "{\"a\" 1}",
+            "tru",
+            "\"unterminated",
+            "{\"a\":1} extra",
+            "{'a':1}",
+        ] {
+            assert!(parse_json(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn request_codec_roundtrips() {
+        let reqs = [
+            Request::Hello { version: 1 },
+            Request::Describe,
+            Request::Invoke {
+                func: "fft-0".into(),
+                mode: InvokeMode::Sync,
+                deadline_ms: Some(5000),
+            },
+            Request::Invoke {
+                func: "lud-0".into(),
+                mode: InvokeMode::Async,
+                deadline_ms: None,
+            },
+            Request::Wait {
+                ticket: Ticket(7),
+                deadline_ms: None,
+            },
+            Request::Poll { ticket: Ticket(8) },
+            Request::Stats,
+            Request::Shutdown,
+        ];
+        for req in reqs {
+            let line = encode_request(&req);
+            assert!(!line.contains('\n'));
+            assert_eq!(decode_request(&line).unwrap(), req, "{line}");
+        }
+    }
+
+    #[test]
+    fn request_decode_defaults_and_errors() {
+        // mode defaults to sync; hello without v means "current".
+        assert_eq!(
+            decode_request(r#"{"cmd":"invoke","func":"f"}"#).unwrap(),
+            Request::Invoke {
+                func: "f".into(),
+                mode: InvokeMode::Sync,
+                deadline_ms: None
+            }
+        );
+        assert_eq!(
+            decode_request(r#"{"cmd":"hello"}"#).unwrap(),
+            Request::Hello {
+                version: PROTOCOL_VERSION
+            }
+        );
+        for bad in [
+            "{not json",
+            r#"{"v":1}"#,
+            r#"{"cmd":"warp"}"#,
+            r#"{"cmd":"invoke"}"#,
+            r#"{"cmd":"invoke","func":"f","mode":"batch"}"#,
+            r#"{"cmd":"wait"}"#,
+            // A present-but-malformed hello version must not silently
+            // negotiate to the default.
+            r#"{"cmd":"hello","v":"2"}"#,
+            r#"{"cmd":"hello","v":1.5}"#,
+            r#"{"cmd":"hello","v":-1}"#,
+        ] {
+            let err = decode_request(bad).unwrap_err();
+            assert_eq!(err.code(), "bad-request", "{bad}");
+        }
+        // Out-of-range versions saturate (rejected by the handshake as
+        // "far future") instead of truncating into an accepted version.
+        assert_eq!(
+            decode_request(r#"{"cmd":"hello","v":4294967297}"#).unwrap(),
+            Request::Hello { version: u32::MAX }
+        );
+        // Malformed \u escapes are decode errors, never panics.
+        assert_eq!(
+            decode_request("{\"cmd\":\"hello\",\"s\":\"\\u00zz\"}")
+                .unwrap_err()
+                .code(),
+            "bad-request"
+        );
+        assert_eq!(
+            decode_request("{\"cmd\":\"hello\",\"s\":\"\\u000é\"}")
+                .unwrap_err()
+                .code(),
+            "bad-request"
+        );
+    }
+
+    #[test]
+    fn response_codec_roundtrips() {
+        let resps = [
+            Response::Hello {
+                proto: 1,
+                server: "rt-server".into(),
+            },
+            Response::Described(DescribeInfo {
+                proto: 1,
+                server: "rt-cluster".into(),
+                policy: "mqfq-sticky".into(),
+                shards: 4,
+                router: "sticky-ch".into(),
+                functions: vec!["fft-0".into(), "lud-0".into()],
+            }),
+            Response::Accepted { ticket: Ticket(3) },
+            Response::Done(InvokeOutcome {
+                ticket: Ticket(3),
+                func: "fft-0".into(),
+                shard: 2,
+                gpu: 1,
+                start_kind: StartKind::HostWarm,
+                latency_ms: 412.25,
+                exec_ms: 9.5,
+            }),
+            Response::Pending { ticket: Ticket(4) },
+            Response::Stats(StatsSnapshot {
+                invocations: 10,
+                mean_latency_ms: 51.5,
+                cold_ratio: 0.2,
+                pending: 1,
+                in_flight: 2,
+            }),
+            Response::Bye,
+        ];
+        for resp in resps {
+            let line = encode_response(&resp);
+            assert!(!line.contains('\n'));
+            assert_eq!(decode_response(&line).unwrap(), resp, "{line}");
+        }
+    }
+
+    #[test]
+    fn error_responses_roundtrip_their_code() {
+        for e in [
+            ApiError::UnknownFunction { name: "ghost".into() },
+            ApiError::ShuttingDown,
+            ApiError::Overloaded {
+                pending: 9,
+                limit: 8,
+            },
+            ApiError::DeadlineExceeded {
+                waited_ms: 5,
+                ticket: Some(Ticket(12)),
+            },
+        ] {
+            let line = encode_response(&Response::Error(e.clone()));
+            let Response::Error(back) = decode_response(&line).unwrap() else {
+                panic!("expected error, got {line}");
+            };
+            assert_eq!(back.code(), e.code());
+        }
+        // The deadline error's ticket survives the wire: clients can
+        // redeem the still-running invocation.
+        let line = encode_response(&Response::Error(ApiError::DeadlineExceeded {
+            waited_ms: 5,
+            ticket: Some(Ticket(12)),
+        }));
+        let Response::Error(ApiError::DeadlineExceeded {
+            ticket: Some(t), ..
+        }) = decode_response(&line).unwrap()
+        else {
+            panic!("ticket lost: {line}");
+        };
+        assert_eq!(t, Ticket(12));
+    }
+}

@@ -7,7 +7,10 @@
 //! * `cluster` — replay through a sharded multi-server cluster.
 //! * `hetero` — heterogeneous-fleet sweep (fig10): uniform vs mixed
 //!   hardware × router.
-//! * `serve` — real-time serving over TCP, executing PJRT artifacts.
+//! * `serve` — real-traffic serving over TCP (protocol v1 + legacy
+//!   aliases): single plane, or `--shards N --router R` for the
+//!   cluster frontend.
+//! * `invoke` — protocol-v1 client against a running `serve`.
 //! * `validate` — golden-check every AOT artifact via PJRT.
 
 use std::collections::HashMap;
@@ -95,7 +98,18 @@ USAGE:
         [--seed K] [--load-factor F]     fig10 heterogeneous-fleet sweep:
               uniform vs mixed shard hardware x router, BENCH_hetero.json
   mqfq-sticky serve [--addr HOST:PORT] [--artifacts DIR] [--scale X]
-        [--policy P] [--d N]             real-time TCP serving
+        [--shards N] [--router rr|random|least|sticky|sticky-blind]
+        [--load-factor F] [--seed K] [--max-pending N]
+        [+ plane options incl. --policy/--d/--fleet]
+              real-traffic TCP serving: protocol v1 (JSON lines, hello
+              handshake, sync/async invoke tickets, deadlines; legacy
+              `invoke <fn>`|`stats`|`quit` lines kept as aliases).
+              --shards >1 (or --router) serves an RtCluster: N control
+              planes behind the live capacity-weighted router.
+  mqfq-sticky invoke <fn> [--addr HOST:PORT] [--mode sync|async]
+        [--deadline-ms D] [--n N]        protocol-v1 client: run N
+              invocations against a running `serve`, print outcomes
+              and aggregate server stats
   mqfq-sticky validate [--artifacts DIR] golden-check all artifacts
 ";
 
@@ -231,6 +245,7 @@ fn dispatch(argv: Vec<String>) -> Result<(), String> {
         "cluster" => cmd_cluster(&args),
         "hetero" => cmd_hetero(&args),
         "serve" => cmd_serve(&args),
+        "invoke" => cmd_invoke(&args),
         "validate" => cmd_validate(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -408,24 +423,112 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let addr = args.get("addr").unwrap_or("127.0.0.1:8077");
     let scale = args.get_f64("scale", 0.02)?;
-    let cfg = plane_config(args)?;
     let artifacts = args.get("artifacts").map(std::path::Path::new);
+    let max_pending = args.get_usize("max-pending", 0)?; // 0 = unlimited
     // Default demo workload: one copy of each catalog function.
     let mut w = crate::workload::Workload::default();
     for class in crate::workload::catalog::CATALOG {
         w.register(class, 0, 10.0);
     }
-    let srv = crate::server::RtServer::new(w, cfg, artifacts, scale)
-        .map_err(|e| format!("starting server: {e}"))?;
-    let local = srv.serve(addr).map_err(|e| format!("binding {addr}: {e}"))?;
+    let artifacts_label = artifacts
+        .map(|p| p.display().to_string())
+        .unwrap_or_else(|| "model-only".into());
+    // --shards >1 (or an explicit --router) serves the sharded cluster
+    // frontend; otherwise the single-plane server.
+    let clustered =
+        args.get_usize("shards", 1)? > 1 || args.get("router").is_some();
+    let local = if clustered {
+        let cfg = cluster_config(args)?;
+        let srv = crate::server::RtCluster::new(w, cfg.clone(), artifacts, scale)
+            .map_err(|e| format!("starting cluster server: {e}"))?;
+        if max_pending > 0 {
+            srv.set_max_pending(max_pending);
+        }
+        let local = srv.serve(addr).map_err(|e| format!("binding {addr}: {e}"))?;
+        println!(
+            "serving rt-cluster on {local}: {} shards, router {}, scale={scale}, \
+             artifacts={artifacts_label}",
+            cfg.n_shards,
+            cfg.router.name()
+        );
+        std::mem::forget(srv); // keep the guard alive for the process lifetime
+        local
+    } else {
+        let cfg = plane_config(args)?;
+        let srv = crate::server::RtServer::new(w, cfg, artifacts, scale)
+            .map_err(|e| format!("starting server: {e}"))?;
+        if max_pending > 0 {
+            srv.set_max_pending(max_pending);
+        }
+        let local = srv.serve(addr).map_err(|e| format!("binding {addr}: {e}"))?;
+        println!(
+            "serving rt-server on {local} (scale={scale}, artifacts={artifacts_label})"
+        );
+        std::mem::forget(srv);
+        local
+    };
     println!(
-        "serving on {local} (scale={scale}, artifacts={}) — protocol: \
-         `invoke <fn>` | `stats` | `quit`",
-        artifacts.map(|p| p.display().to_string()).unwrap_or_else(|| "model-only".into())
+        "protocol v1 (JSON lines): {{\"cmd\":\"hello\",\"v\":1}} | invoke/wait/poll/\
+         describe/stats; legacy `invoke <fn>` | `stats` | `quit` kept — \
+         try: mqfq-sticky invoke isoneural-0 --addr {local}"
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// Protocol-v1 client: drive a running `serve` over TCP.
+fn cmd_invoke(args: &Args) -> Result<(), String> {
+    let func = args
+        .positional
+        .first()
+        .ok_or("invoke: which function? (see `serve` output or `describe`)")?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:8077");
+    let n = args.get_usize("n", 1)?;
+    let deadline_ms = match args.get_usize("deadline-ms", 0)? {
+        0 => None,
+        d => Some(d as u64),
+    };
+    let mut client = crate::api::ApiClient::connect(addr)
+        .map_err(|e| format!("connecting {addr}: {e}"))?;
+    let print_outcome = |o: &crate::api::InvokeOutcome| {
+        println!(
+            "{} {}: {} on shard {} gpu{}  latency {:.1} ms  exec {:.1} ms",
+            o.ticket, o.func, o.start_kind, o.shard, o.gpu, o.latency_ms, o.exec_ms
+        );
+    };
+    match args.get("mode").unwrap_or("sync") {
+        "sync" => {
+            for _ in 0..n {
+                let o = client
+                    .invoke(func, deadline_ms)
+                    .map_err(|e| format!("invoke {func}: {e}"))?;
+                print_outcome(&o);
+            }
+        }
+        "async" => {
+            let tickets: Vec<_> = (0..n)
+                .map(|_| client.invoke_async(func))
+                .collect::<Result<_, _>>()
+                .map_err(|e| format!("invoke {func}: {e}"))?;
+            println!("submitted {n} async invocation(s) of {func}");
+            for t in tickets {
+                let o = client
+                    .wait(t, deadline_ms)
+                    .map_err(|e| format!("wait {t}: {e}"))?;
+                print_outcome(&o);
+            }
+        }
+        m => return Err(format!("unknown mode {m} (sync|async)")),
+    }
+    let s = client.stats().map_err(|e| format!("stats: {e}"))?;
+    println!(
+        "server stats: {} invocations, mean latency {:.1} ms, cold ratio {:.3}, \
+         {} pending, {} in flight",
+        s.invocations, s.mean_latency_ms, s.cold_ratio, s.pending, s.in_flight
+    );
+    client.quit();
+    Ok(())
 }
 
 fn cmd_validate(args: &Args) -> Result<(), String> {

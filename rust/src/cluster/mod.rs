@@ -59,7 +59,7 @@ pub mod router;
 pub use router::{Router, RouterKind, ShardLoad, ALL_ROUTERS};
 
 use crate::container::pool::PoolStats;
-use crate::metrics::Recorder;
+use crate::metrics::{InvRecord, Recorder};
 use crate::plane::{ControlPlane, PlaneConfig};
 use crate::sim::{ShardDispatch, SimTarget};
 use crate::types::{FuncId, InvocationId, Nanos};
@@ -214,14 +214,18 @@ impl Cluster {
         (shard, id, tag(shard, ds))
     }
 
-    /// An invocation completed on `shard` at `now`.
+    /// An invocation completed on `shard` at `now`. Returns the
+    /// completed invocation's own [`InvRecord`] (the wall-clock driver's
+    /// completion-matching handle — see [`ControlPlane::on_complete`])
+    /// plus any dispatches it unlocked.
     pub fn on_complete(
         &mut self,
         shard: usize,
         inv: InvocationId,
         now: Nanos,
-    ) -> Vec<ShardDispatch> {
-        tag(shard, self.shards[shard].on_complete(inv, now))
+    ) -> (Option<InvRecord>, Vec<ShardDispatch>) {
+        let (rec, ds) = self.shards[shard].on_complete(inv, now);
+        (rec, tag(shard, ds))
     }
 
     /// Global monitor tick: delivered to every shard that has work
@@ -310,7 +314,7 @@ impl SimTarget for Cluster {
     }
 
     fn sim_complete(&mut self, shard: usize, inv: InvocationId, now: Nanos) -> Vec<ShardDispatch> {
-        self.on_complete(shard, inv, now)
+        self.on_complete(shard, inv, now).1
     }
 
     fn sim_tick(&mut self, now: Nanos) -> Vec<ShardDispatch> {
@@ -387,7 +391,8 @@ mod tests {
         assert_eq!(ds[0].shard, s);
         assert_eq!(c.in_flight(), 1);
         let d = ds[0].dispatch;
-        let more = c.on_complete(s, d.inv, d.complete_at);
+        let (rec, more) = c.on_complete(s, d.inv, d.complete_at);
+        assert_eq!(rec.unwrap().inv, d.inv);
         assert!(more.is_empty());
         assert_eq!(c.in_flight(), 0);
         assert_eq!(c.merged_recorder().len(), 1);

@@ -19,8 +19,12 @@
 //! [`sim::replay`] (trace replay used by the experiment harness), or
 //! [`cluster::Cluster`] (the sharded multi-server control plane with
 //! locality-aware routing); the scheduling policies live in
-//! [`scheduler::policies`].
+//! [`scheduler::policies`]. Real traffic enters through [`api`] — the
+//! versioned wire protocol and [`api::Frontend`] contract served by
+//! [`server::RtServer`] (one plane) and [`server::RtCluster`] (N shards
+//! behind a live router).
 
+pub mod api;
 pub mod cli;
 pub mod clock;
 pub mod cluster;

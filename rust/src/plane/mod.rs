@@ -226,9 +226,20 @@ impl ControlPlane {
     /// An invocation finished at `now` (modeled or measured). Frees its
     /// slot, updates the policy's service estimate, records metrics, and
     /// dispatches any unlocked work.
-    pub fn on_complete(&mut self, inv: InvocationId, now: Nanos) -> Vec<Dispatch> {
+    ///
+    /// Returns the completed invocation's own [`InvRecord`] (None for an
+    /// unknown id) alongside the unlocked dispatches, so wall-clock
+    /// drivers can hand the completion to the matching waiter directly
+    /// instead of guessing from `recorder.records.last()` — under
+    /// concurrent completions "last" may belong to someone else, which
+    /// used to strand the original submitter forever.
+    pub fn on_complete(
+        &mut self,
+        inv: InvocationId,
+        now: Nanos,
+    ) -> (Option<InvRecord>, Vec<Dispatch>) {
         let Some(fli) = self.in_flight.remove(&inv) else {
-            return Vec::new();
+            return (None, Vec::new());
         };
         self.gpus.complete(inv, now);
         if self.cfg.keep_warm {
@@ -241,7 +252,7 @@ impl ControlPlane {
         // feeds measured time; sim mode reproduces the model).
         let service = now.saturating_sub(fli.dispatch.exec_start);
         self.policy.on_complete(fli.func, service, now);
-        self.recorder.record(InvRecord {
+        let rec = InvRecord {
             inv,
             func: fli.func,
             gpu: fli.dispatch.gpu,
@@ -252,9 +263,10 @@ impl ControlPlane {
             boot: fli.dispatch.boot,
             blocking: fli.dispatch.blocking,
             exec: service,
-        });
+        };
+        self.recorder.record(rec);
         self.apply_state_changes(now);
-        self.try_dispatch(now)
+        (Some(rec), self.try_dispatch(now))
     }
 
     /// 200 ms monitor tick (§4.4/§5 "Utilization monitoring"): sample
@@ -510,9 +522,16 @@ mod tests {
         let mut p = plane(PlaneConfig::default());
         let (_, ds) = p.on_arrival(FuncId(0), 0);
         let done = ds[0].complete_at;
-        let more = p.on_complete(ds[0].inv, done);
+        let (rec, more) = p.on_complete(ds[0].inv, done);
         assert!(more.is_empty());
         assert_eq!(p.recorder.len(), 1);
+        // The returned record is the completed invocation's own.
+        let rec = rec.unwrap();
+        assert_eq!(rec.inv, ds[0].inv);
+        assert_eq!(rec.completed, done);
+        assert_eq!(Some(&rec), p.recorder.records.last());
+        // Unknown ids report nothing (idempotent completion).
+        assert_eq!(p.on_complete(ds[0].inv, done).0, None);
         // Second arrival shortly after: warm container, no boot.
         let (_, ds2) = p.on_arrival(FuncId(0), done + SEC);
         assert_eq!(ds2.len(), 1);
@@ -549,7 +568,7 @@ mod tests {
         let (_, ds2) = p.on_arrival(FuncId(1), 1);
         assert_eq!(ds1.len(), 1);
         assert!(ds2.is_empty());
-        let more = p.on_complete(ds1[0].inv, ds1[0].complete_at);
+        let (_, more) = p.on_complete(ds1[0].inv, ds1[0].complete_at);
         assert_eq!(more.len(), 1);
         assert_eq!(more[0].func, FuncId(1));
     }
@@ -620,7 +639,7 @@ mod tests {
         assert!(d2.is_empty());
         assert_eq!(p.pending(), 1);
         // Frees up on completion.
-        let more = p.on_complete(d1[0].inv, d1[0].complete_at);
+        let (_, more) = p.on_complete(d1[0].inv, d1[0].complete_at);
         assert_eq!(more.len(), 1);
         assert_eq!(more[0].func, FuncId(1));
     }

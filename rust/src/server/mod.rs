@@ -1,5 +1,17 @@
-//! Real-time serving: a wall-clock driver around [`ControlPlane`] plus a
-//! TCP line-protocol front end.
+//! Real-traffic serving: wall-clock frontends around the control plane,
+//! speaking protocol v1 ([`crate::api`]) over TCP.
+//!
+//! Two [`Frontend`] implementations share one engine:
+//!
+//! * [`RtServer`] — a single [`ControlPlane`] (the original per-server
+//!   driver, now behind the typed API).
+//! * [`RtCluster`] — N independent [`ControlPlane`] shards behind a
+//!   [`crate::cluster::Router`] (StickyCh / least-loaded / ...), the
+//!   wall-clock sibling of [`crate::sim::replay_cluster`]: per-shard
+//!   monitor threads, capacity-weighted routing on live queue depths,
+//!   and completion feedback through each shard's own plane. This is
+//!   the ROADMAP's "RPC front end so `serve` can run the router for
+//!   real traffic".
 //!
 //! Python never runs here — dispatched functions execute their AOT HLO
 //! artifact on a dedicated PJRT executor thread (the CPU PJRT client is
@@ -7,40 +19,61 @@
 //! control-plane delays (cold boots, prefetch blocking) are slept at a
 //! configurable time scale so demos finish quickly.
 //!
-//! Protocol (one line per request):
+//! # Protocol
+//!
+//! One JSON document per line, both directions, after a `hello`
+//! version handshake (see [`crate::api::wire`] for the full grammar):
+//!
 //! ```text
-//! > invoke <registered-fn-name>
-//! < ok <latency_ms> <exec_ms> <start-kind> <gpu>
-//! > stats
-//! < ok invocations=<n> mean_latency_ms=<x> cold_ratio=<r>
-//! > quit
+//! > {"cmd":"hello","v":1}
+//! < {"ok":true,"type":"hello","proto":1,"server":"rt-cluster"}
+//! > {"cmd":"invoke","func":"fft-0","mode":"sync","deadline_ms":5000}
+//! < {"ok":true,"type":"done","ticket":0,"func":"fft-0","shard":1,
+//!    "gpu":0,"start":"cold","latency_ms":412.0,"exec_ms":9.1}
+//! > {"cmd":"invoke","func":"fft-0","mode":"async"}
+//! < {"ok":true,"type":"ticket","ticket":1}
+//! > {"cmd":"wait","ticket":1}
+//! < {"ok":true,"type":"done", ...}
+//! > {"cmd":"stats"}
+//! < {"ok":true,"type":"stats","invocations":2, ...}
 //! ```
+//!
+//! Errors are structured (`{"ok":false,"error":"unknown-function",...}`;
+//! taxonomy in [`crate::api::ApiError`]). The pre-v1 word protocol —
+//! `invoke <fn>` / `stats` / `quit` with `ok ...`/`err ...` replies —
+//! survives as legacy aliases on the same port: any line not starting
+//! with `{` is parsed as a legacy command.
+//!
+//! # Ownership: handles vs the shutdown guard
+//!
+//! All serving state lives in one shared `Inner`. [`RtHandle`] is a
+//! cloneable `Arc` view of it — connections, the accept loop, and
+//! embedders hold handles, and dropping a handle is inert. The
+//! constructor-returned guard ([`RtServer`]/[`RtCluster`]) is the
+//! *single* owner of shutdown: only its `shutdown()`/`Drop` stops the
+//! monitor threads and the accept loop. (The previous design cloned the
+//! guard itself into every connection, so the first client disconnect
+//! ran `Drop::drop → shutdown()` and silently killed the server for
+//! everyone — the regression test lives in `rust/tests/wire_protocol.rs`.)
 
-use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::collections::{HashMap, VecDeque};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::Duration;
 
+use crate::api::types::{
+    ApiError, DescribeInfo, InvokeOutcome, StatsSnapshot, Ticket, PROTOCOL_VERSION,
+};
+use crate::api::Frontend;
 use crate::clock::{Clock, RealClock};
+use crate::cluster::{ClusterConfig, Router, RouterKind, ShardLoad};
 use crate::plane::{ControlPlane, Dispatch, PlaneConfig};
 use crate::runtime::PjrtRuntime;
-use crate::types::{to_secs, FuncId, InvocationId, Nanos, StartKind};
+use crate::types::{to_secs, InvocationId, Nanos};
 use crate::workload::Workload;
-
-/// Completion notification delivered to the submitter.
-#[derive(Debug, Clone)]
-pub struct Completion {
-    pub inv: InvocationId,
-    pub func: FuncId,
-    pub latency: Duration,
-    pub exec: Duration,
-    pub start_kind: StartKind,
-    pub gpu: u32,
-}
 
 /// Job sent to the PJRT executor thread.
 struct ExecJob {
@@ -48,236 +81,475 @@ struct ExecJob {
     reply: Sender<Duration>,
 }
 
+/// Completion bookkeeping for one accepted invocation.
+enum TicketEntry {
+    /// Still running; waiters are woken (all of them) on completion.
+    Pending { waiters: Vec<Sender<InvokeOutcome>> },
+    /// Completed but not yet claimed by `wait`/`poll`.
+    Done(InvokeOutcome),
+}
+
+/// Ticket registry with a bound on completed-but-unclaimed entries, so
+/// fire-and-forget async clients (or crashed ones) cannot grow the
+/// table without limit on a long-running server: beyond
+/// [`TicketTable::DEFAULT_MAX_DONE`] unclaimed completions, the oldest
+/// are evicted (a later `wait` on one gets `unknown-ticket`, exactly as
+/// if it had been claimed).
+struct TicketTable {
+    entries: HashMap<u64, TicketEntry>,
+    /// Completion order of `Done` entries; may contain stale ids of
+    /// since-claimed tickets (filtered during eviction — ids are never
+    /// reused, so staleness is unambiguous).
+    done_order: VecDeque<u64>,
+    /// Live `Done` entries (kept ≤ `max_done`).
+    done_count: usize,
+    max_done: usize,
+}
+
+impl TicketTable {
+    /// Unclaimed completions retained before the oldest are dropped.
+    const DEFAULT_MAX_DONE: usize = 1 << 16;
+
+    fn new() -> Self {
+        Self {
+            entries: HashMap::new(),
+            done_order: VecDeque::new(),
+            done_count: 0,
+            max_done: Self::DEFAULT_MAX_DONE,
+        }
+    }
+
+    fn insert_pending(&mut self, id: u64) {
+        self.entries.insert(
+            id,
+            TicketEntry::Pending {
+                waiters: Vec::new(),
+            },
+        );
+    }
+
+    /// Remove an entry, keeping the unclaimed-done count in sync.
+    fn remove(&mut self, id: u64) -> Option<TicketEntry> {
+        let entry = self.entries.remove(&id);
+        if matches!(entry, Some(TicketEntry::Done(_))) {
+            self.done_count -= 1;
+        }
+        entry
+    }
+
+    /// Mark `id` done, returning the displaced entry (the waiters to
+    /// wake). Evicts the oldest unclaimed completions over the bound.
+    fn complete(&mut self, id: u64, outcome: InvokeOutcome) -> Option<TicketEntry> {
+        let prev = self.entries.insert(id, TicketEntry::Done(outcome));
+        if !matches!(prev, Some(TicketEntry::Done(_))) {
+            self.done_count += 1;
+        }
+        self.done_order.push_back(id);
+        while self.done_count > self.max_done {
+            let Some(old) = self.done_order.pop_front() else {
+                break;
+            };
+            if matches!(self.entries.get(&old), Some(TicketEntry::Done(_))) {
+                self.entries.remove(&old);
+                self.done_count -= 1;
+            }
+        }
+        // The order queue accumulates stale ids of promptly-claimed
+        // tickets; compact it once it doubles past the live bound
+        // (amortized O(1) per completion, keeps both structures bounded).
+        if self.done_order.len() > self.max_done.saturating_mul(2).max(64) {
+            let entries = &self.entries;
+            self.done_order
+                .retain(|id| matches!(entries.get(id), Some(TicketEntry::Done(_))));
+        }
+        prev
+    }
+}
+
+/// Shared serving state: shards, router, tickets, executor.
 struct Inner {
-    plane: Mutex<ControlPlane>,
+    /// Frontend kind for `describe`: `rt-server` or `rt-cluster`.
+    kind: &'static str,
+    router_name: &'static str,
+    shards: Vec<Mutex<ControlPlane>>,
+    /// Routing decision for each arrival (a single-shard server uses a
+    /// trivial ring that always answers 0).
+    router: Mutex<Box<dyn Router>>,
+    /// Per-shard fleet capacity (V100-equivalents) for [`ShardLoad`].
+    capacities: Vec<f64>,
     clock: RealClock,
     /// Modeled-delay scale: 1 virtual second sleeps `scale` real seconds.
     scale: f64,
     exec_tx: Option<Sender<ExecJob>>,
-    waiters: Mutex<HashMap<InvocationId, Sender<Completion>>>,
+    /// `(shard, shard-local invocation id) → (ticket, function name)`,
+    /// registered under the shard's plane lock at submit time so a
+    /// racing completion can never observe an unmapped invocation.
+    inv_tickets: Mutex<HashMap<(usize, InvocationId), (Ticket, String)>>,
+    tickets: Mutex<TicketTable>,
+    /// Lock-free admission lookup: registered name *and* class name →
+    /// (id, registered name), precomputed from the workload (identical
+    /// on every shard) so submits never scan under a plane lock.
+    func_index: HashMap<String, (crate::types::FuncId, String)>,
+    next_ticket: AtomicU64,
+    /// Admission bound on total queued work (`usize::MAX` = unlimited).
+    max_pending: AtomicUsize,
     running: AtomicBool,
 }
 
-/// The real-time driver. Construct with [`RtServer::new`], submit with
-/// [`RtServer::submit`], optionally serve TCP with [`RtServer::serve`].
-pub struct RtServer {
-    inner: Arc<Inner>,
-    monitor: Option<thread::JoinHandle<()>>,
+impl Inner {
+    fn loads(&self) -> Vec<ShardLoad> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(s, p)| {
+                let p = p.lock().unwrap();
+                ShardLoad {
+                    pending: p.pending(),
+                    in_flight: p.in_flight(),
+                    capacity: self.capacities[s],
+                }
+            })
+            .collect()
+    }
 }
 
-impl RtServer {
-    /// `artifacts_dir`: load + compile HLO artifacts and execute them on
-    /// dispatch (real execution). `None`: sleep the modeled service time
-    /// instead (pure control-plane demo).
-    pub fn new(
-        workload: Workload,
-        cfg: PlaneConfig,
-        artifacts_dir: Option<&std::path::Path>,
-        scale: f64,
-    ) -> anyhow::Result<Self> {
-        assert!(scale > 0.0);
-        let exec_tx = match artifacts_dir {
-            Some(dir) => Some(Self::spawn_executor(dir, &workload)?),
-            None => None,
-        };
-        let monitor_period = cfg.monitor_period;
-        let inner = Arc::new(Inner {
-            plane: Mutex::new(ControlPlane::new(workload, cfg)),
-            clock: RealClock::new(),
-            scale,
-            exec_tx,
-            waiters: Mutex::new(HashMap::new()),
-            running: AtomicBool::new(true),
-        });
-        // Monitor thread: scaled 200 ms ticks.
-        let mon_inner = Arc::clone(&inner);
-        let monitor = thread::spawn(move || {
-            let period = Duration::from_nanos((monitor_period as f64) as u64);
-            while mon_inner.running.load(Ordering::SeqCst) {
-                thread::sleep(period);
-                let now = mon_inner.clock.now();
-                let ds = mon_inner.plane.lock().unwrap().on_monitor_tick(now);
-                handle_dispatches(&mon_inner, ds);
-            }
-        });
-        Ok(Self {
-            inner,
-            monitor: Some(monitor),
-        })
-    }
+/// Cloneable, shutdown-free view of a running frontend. Connections and
+/// embedders hold these; only the constructor-returned guard can stop
+/// the server.
+#[derive(Clone)]
+pub struct RtHandle {
+    inner: Arc<Inner>,
+}
 
-    /// PJRT executor thread: owns the (non-Send) runtime; executes one
-    /// artifact at a time. The serialization is harmless — the CPU PJRT
-    /// client is itself internally parallel and stands in for one GPU.
-    fn spawn_executor(
-        dir: &std::path::Path,
-        workload: &Workload,
-    ) -> anyhow::Result<Sender<ExecJob>> {
-        let (tx, rx): (Sender<ExecJob>, Receiver<ExecJob>) = channel();
-        let dir = dir.to_path_buf();
-        let names: Vec<String> = {
-            let mut v: Vec<String> = workload
-                .funcs
-                .iter()
-                .map(|f| f.class.name.to_string())
-                .collect();
-            v.sort();
-            v.dedup();
-            v
-        };
-        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
-        thread::spawn(move || {
-            let mut rt = match PjrtRuntime::new(&dir) {
-                Ok(rt) => rt,
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
+// ---------------------------------------------------------------------
+// Frontend implementation over Inner.
+// ---------------------------------------------------------------------
+
+fn describe_inner(inner: &Arc<Inner>) -> DescribeInfo {
+    let plane = inner.shards[0].lock().unwrap();
+    DescribeInfo {
+        proto: PROTOCOL_VERSION,
+        server: inner.kind.to_string(),
+        policy: plane.policy_name().to_string(),
+        shards: inner.shards.len(),
+        router: inner.router_name.to_string(),
+        functions: plane.workload().funcs.iter().map(|f| f.name.clone()).collect(),
+    }
+}
+
+fn submit_inner(inner: &Arc<Inner>, name: &str) -> Result<Ticket, ApiError> {
+    if !inner.running.load(Ordering::SeqCst) {
+        return Err(ApiError::ShuttingDown);
+    }
+    let Some((func, reg_name)) = inner.func_index.get(name).cloned() else {
+        return Err(ApiError::UnknownFunction {
+            name: name.to_string(),
+        });
+    };
+    // Admission control: bound total queued work before routing.
+    let loads = inner.loads();
+    let pending: usize = loads.iter().map(|l| l.pending).sum();
+    let limit = inner.max_pending.load(Ordering::SeqCst);
+    if pending >= limit {
+        return Err(ApiError::Overloaded { pending, limit });
+    }
+    let shard = inner.router.lock().unwrap().route(func, &loads);
+    debug_assert!(shard < inner.shards.len(), "router out of range");
+    let ticket = Ticket(inner.next_ticket.fetch_add(1, Ordering::SeqCst));
+    inner.tickets.lock().unwrap().insert_pending(ticket.0);
+    let ds = {
+        let mut plane = inner.shards[shard].lock().unwrap();
+        let now = inner.clock.now();
+        let (inv, ds) = plane.on_arrival(func, now);
+        // Map under the plane lock (see Inner::inv_tickets).
+        inner
+            .inv_tickets
+            .lock()
+            .unwrap()
+            .insert((shard, inv), (ticket, reg_name));
+        ds
+    };
+    handle_dispatches(inner, shard, ds);
+    Ok(ticket)
+}
+
+fn wait_inner(
+    inner: &Arc<Inner>,
+    ticket: Ticket,
+    deadline: Option<Duration>,
+) -> Result<InvokeOutcome, ApiError> {
+    let rx = {
+        let mut tickets = inner.tickets.lock().unwrap();
+        match tickets.remove(ticket.0) {
+            None => return Err(ApiError::UnknownTicket { ticket }),
+            // Already completed: claiming removes the entry.
+            Some(TicketEntry::Done(o)) => return Ok(o),
+            Some(TicketEntry::Pending { mut waiters }) => {
+                let (tx, rx) = channel();
+                waiters.push(tx);
+                tickets
+                    .entries
+                    .insert(ticket.0, TicketEntry::Pending { waiters });
+                rx
+            }
+        }
+    };
+    let outcome = match deadline {
+        // Expired: report the ticket so the (possibly sync-invoking)
+        // client can still redeem the run-to-completion invocation.
+        Some(dl) => rx.recv_timeout(dl).map_err(|_| ApiError::DeadlineExceeded {
+            waited_ms: dl.as_millis() as u64,
+            ticket: Some(ticket),
+        })?,
+        // Sender-side drop (process teardown) surfaces as shutdown.
+        None => rx.recv().map_err(|_| ApiError::ShuttingDown)?,
+    };
+    // Claimed: reclaim the entry (concurrent waiters were all woken by
+    // the same fulfillment; whichever removes second is a no-op).
+    inner.tickets.lock().unwrap().remove(ticket.0);
+    Ok(outcome)
+}
+
+fn poll_inner(inner: &Arc<Inner>, ticket: Ticket) -> Result<Option<InvokeOutcome>, ApiError> {
+    let mut tickets = inner.tickets.lock().unwrap();
+    match tickets.remove(ticket.0) {
+        None => Err(ApiError::UnknownTicket { ticket }),
+        // Done: claiming removes the entry, like a successful wait.
+        Some(TicketEntry::Done(o)) => Ok(Some(o)),
+        Some(pending @ TicketEntry::Pending { .. }) => {
+            tickets.entries.insert(ticket.0, pending);
+            Ok(None)
+        }
+    }
+}
+
+fn stats_inner(inner: &Arc<Inner>) -> StatsSnapshot {
+    let mut s = StatsSnapshot::default();
+    let mut lat_sum = 0.0;
+    let mut cold_sum = 0.0;
+    for shard in &inner.shards {
+        let plane = shard.lock().unwrap();
+        let n = plane.recorder.len();
+        lat_sum += plane.recorder.weighted_avg_latency_s() * n as f64;
+        cold_sum += plane.recorder.cold_ratio() * n as f64;
+        s.invocations += n;
+        s.pending += plane.pending();
+        s.in_flight += plane.in_flight();
+    }
+    if s.invocations > 0 {
+        s.mean_latency_ms = lat_sum / s.invocations as f64 * 1e3;
+        s.cold_ratio = cold_sum / s.invocations as f64;
+    }
+    s
+}
+
+/// Single copy of the [`Frontend`] wiring, stamped onto every type that
+/// exposes the shared `Inner` (the handle and both guards — identical
+/// behavior by construction). `shutdown` only flips admission; joining
+/// the monitor threads needs a guard's own `stop()` or `Drop`.
+macro_rules! impl_frontend_via_inner {
+    ($ty:ty) => {
+        impl Frontend for $ty {
+            fn describe(&self) -> DescribeInfo {
+                describe_inner(&self.inner)
+            }
+            fn submit(&self, func: &str) -> Result<Ticket, ApiError> {
+                submit_inner(&self.inner, func)
+            }
+            fn wait(
+                &self,
+                ticket: Ticket,
+                deadline: Option<Duration>,
+            ) -> Result<InvokeOutcome, ApiError> {
+                wait_inner(&self.inner, ticket, deadline)
+            }
+            fn poll(&self, ticket: Ticket) -> Result<Option<InvokeOutcome>, ApiError> {
+                poll_inner(&self.inner, ticket)
+            }
+            fn stats(&self) -> StatsSnapshot {
+                stats_inner(&self.inner)
+            }
+            fn shutdown(&self) {
+                self.inner.running.store(false, Ordering::SeqCst);
+            }
+        }
+    };
+}
+
+impl_frontend_via_inner!(RtHandle);
+impl_frontend_via_inner!(RtServer);
+impl_frontend_via_inner!(RtCluster);
+
+/// Single copy of the shutdown-guard surface, stamped onto both guards
+/// (`RtServer`, `RtCluster`): handle/serve/backpressure plus the
+/// stop-and-join that only a guard — never a dropped connection handle
+/// — may trigger.
+macro_rules! impl_guard {
+    ($ty:ty) => {
+        impl $ty {
+            /// Cloneable, shutdown-free view for connections and embedding.
+            pub fn handle(&self) -> RtHandle {
+                RtHandle {
+                    inner: Arc::clone(&self.inner),
                 }
-            };
-            for name in &names {
-                if let Err(e) = rt.load_function(name) {
-                    let _ = ready_tx.send(Err(e));
-                    return;
+            }
+
+            /// Serve the protocol on `addr` (port 0 picks a free one).
+            pub fn serve(&self, addr: &str) -> anyhow::Result<std::net::SocketAddr> {
+                serve_on(self.handle(), addr)
+            }
+
+            /// Backpressure bound: reject (`overloaded`) when total
+            /// queued work is at/above `limit` at submit time.
+            pub fn set_max_pending(&self, limit: usize) {
+                self.inner.max_pending.store(limit, Ordering::SeqCst);
+            }
+
+            /// Stop admissions and join the monitor thread(s).
+            /// Idempotent; also runs on `Drop`. Only this guard stops
+            /// the server — dropped connection handles never do.
+            pub fn stop(&self) {
+                self.inner.running.store(false, Ordering::SeqCst);
+                for h in self.monitors.lock().unwrap().drain(..) {
+                    let _ = h.join();
                 }
             }
-            let _ = ready_tx.send(Ok(()));
-            while let Ok(job) = rx.recv() {
-                let t0 = std::time::Instant::now();
-                let _ = rt.execute(&job.artifact);
-                let _ = job.reply.send(t0.elapsed());
+        }
+
+        impl Drop for $ty {
+            fn drop(&mut self) {
+                self.stop();
             }
-        });
-        ready_rx.recv().expect("executor thread died")?;
-        Ok(tx)
-    }
+        }
+    };
+}
 
-    /// Submit one invocation; returns a receiver for its completion.
-    pub fn submit(&self, func: FuncId) -> Receiver<Completion> {
-        let (tx, rx) = channel();
-        let now = self.inner.clock.now();
-        let ds = {
-            let mut plane = self.inner.plane.lock().unwrap();
-            let (id, ds) = plane.on_arrival(func, now);
-            self.inner.waiters.lock().unwrap().insert(id, tx);
-            ds
-        };
-        handle_dispatches(&self.inner, ds);
-        rx
-    }
+// ---------------------------------------------------------------------
+// Construction + background threads.
+// ---------------------------------------------------------------------
 
-    /// Resolve a registered function by name.
-    pub fn func_by_name(&self, name: &str) -> Option<FuncId> {
-        let plane = self.inner.plane.lock().unwrap();
-        plane
-            .workload()
+#[allow(clippy::too_many_arguments)]
+fn build_inner(
+    kind: &'static str,
+    router_name: &'static str,
+    workload: Workload,
+    plane_cfgs: Vec<PlaneConfig>,
+    router: Box<dyn Router>,
+    capacities: Vec<f64>,
+    artifacts_dir: Option<&std::path::Path>,
+    scale: f64,
+) -> anyhow::Result<Arc<Inner>> {
+    assert!(scale > 0.0);
+    let exec_tx = match artifacts_dir {
+        Some(dir) => Some(spawn_executor(dir, &workload)?),
+        None => None,
+    };
+    // Admission index, first match wins like the old linear scan:
+    // registered name (unique) and class name (first copy).
+    let mut func_index = HashMap::new();
+    for f in &workload.funcs {
+        func_index
+            .entry(f.name.clone())
+            .or_insert((f.id, f.name.clone()));
+        func_index
+            .entry(f.class.name.to_string())
+            .or_insert((f.id, f.name.clone()));
+    }
+    let shards = plane_cfgs
+        .into_iter()
+        .map(|cfg| Mutex::new(ControlPlane::new(workload.clone(), cfg)))
+        .collect();
+    Ok(Arc::new(Inner {
+        kind,
+        router_name,
+        shards,
+        router: Mutex::new(router),
+        capacities,
+        clock: RealClock::new(),
+        scale,
+        exec_tx,
+        inv_tickets: Mutex::new(HashMap::new()),
+        tickets: Mutex::new(TicketTable::new()),
+        func_index,
+        next_ticket: AtomicU64::new(0),
+        max_pending: AtomicUsize::new(usize::MAX),
+        running: AtomicBool::new(true),
+    }))
+}
+
+/// Monitor thread for one shard: scaled-free 200 ms-class ticks (the
+/// shard's own `monitor_period`, real time), exactly like the paper's
+/// NVML poller — utilization sampling, dynamic D, TTL expiry.
+fn spawn_monitor(inner: &Arc<Inner>, shard: usize) -> thread::JoinHandle<()> {
+    let mon = Arc::clone(inner);
+    thread::spawn(move || {
+        let period =
+            Duration::from_nanos(mon.shards[shard].lock().unwrap().cfg.monitor_period);
+        while mon.running.load(Ordering::SeqCst) {
+            thread::sleep(period);
+            let now = mon.clock.now();
+            let ds = mon.shards[shard].lock().unwrap().on_monitor_tick(now);
+            handle_dispatches(&mon, shard, ds);
+        }
+    })
+}
+
+/// PJRT executor thread: owns the (non-Send) runtime; executes one
+/// artifact at a time. The serialization is harmless — the CPU PJRT
+/// client is itself internally parallel and stands in for one GPU.
+fn spawn_executor(
+    dir: &std::path::Path,
+    workload: &Workload,
+) -> anyhow::Result<Sender<ExecJob>> {
+    let (tx, rx): (Sender<ExecJob>, Receiver<ExecJob>) = channel();
+    let dir = dir.to_path_buf();
+    let names: Vec<String> = {
+        let mut v: Vec<String> = workload
             .funcs
             .iter()
-            .find(|f| f.name == name || f.class.name == name)
-            .map(|f| f.id)
-    }
-
-    /// Snapshot of recorder stats: (completed, mean latency s, cold ratio).
-    pub fn stats(&self) -> (usize, f64, f64) {
-        let plane = self.inner.plane.lock().unwrap();
-        (
-            plane.recorder.len(),
-            plane.recorder.weighted_avg_latency_s(),
-            plane.recorder.cold_ratio(),
-        )
-    }
-
-    /// Serve the line protocol on `addr` until `quit` or shutdown.
-    /// Returns the bound address (use port 0 to pick a free one).
-    pub fn serve(&self, addr: &str) -> anyhow::Result<std::net::SocketAddr> {
-        let listener = TcpListener::bind(addr)?;
-        let local = listener.local_addr()?;
-        let inner = Arc::clone(&self.inner);
-        let me = RtServer {
-            inner: Arc::clone(&self.inner),
-            monitor: None,
-        };
-        thread::spawn(move || {
-            for stream in listener.incoming() {
-                if !inner.running.load(Ordering::SeqCst) {
-                    break;
-                }
-                let Ok(stream) = stream else { continue };
-                let server = RtServer {
-                    inner: Arc::clone(&me.inner),
-                    monitor: None,
-                };
-                thread::spawn(move || server.handle_conn(stream));
+            .map(|f| f.class.name.to_string())
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    };
+    let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+    thread::spawn(move || {
+        let mut rt = match PjrtRuntime::new(&dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                let _ = ready_tx.send(Err(e));
+                return;
             }
-        });
-        Ok(local)
-    }
-
-    fn handle_conn(&self, stream: TcpStream) {
-        let peer = stream.peer_addr().ok();
-        let mut writer = match stream.try_clone() {
-            Ok(w) => w,
-            Err(_) => return,
         };
-        let reader = BufReader::new(stream);
-        for line in reader.lines() {
-            let Ok(line) = line else { break };
-            let mut parts = line.trim().split_whitespace();
-            let reply = match parts.next() {
-                Some("invoke") => match parts.next().and_then(|n| self.func_by_name(n)) {
-                    Some(func) => match self.submit(func).recv() {
-                        Ok(c) => format!(
-                            "ok {:.1} {:.1} {} gpu{}",
-                            c.latency.as_secs_f64() * 1e3,
-                            c.exec.as_secs_f64() * 1e3,
-                            c.start_kind,
-                            c.gpu
-                        ),
-                        Err(_) => "err completion channel closed".to_string(),
-                    },
-                    None => "err unknown function".to_string(),
-                },
-                Some("stats") => {
-                    let (n, lat, cold) = self.stats();
-                    format!(
-                        "ok invocations={n} mean_latency_ms={:.1} cold_ratio={:.3}",
-                        lat * 1e3,
-                        cold
-                    )
-                }
-                Some("quit") | None => break,
-                Some(other) => format!("err unknown command {other}"),
-            };
-            if writer.write_all((reply + "\n").as_bytes()).is_err() {
-                break;
+        for name in &names {
+            if let Err(e) = rt.load_function(name) {
+                let _ = ready_tx.send(Err(e));
+                return;
             }
         }
-        let _ = peer;
-    }
-
-    pub fn shutdown(&mut self) {
-        self.inner.running.store(false, Ordering::SeqCst);
-        if let Some(h) = self.monitor.take() {
-            let _ = h.join();
+        let _ = ready_tx.send(Ok(()));
+        while let Ok(job) = rx.recv() {
+            let t0 = std::time::Instant::now();
+            let _ = rt.execute(&job.artifact);
+            let _ = job.reply.send(t0.elapsed());
         }
-    }
-}
-
-impl Drop for RtServer {
-    fn drop(&mut self) {
-        self.shutdown();
-    }
+    });
+    ready_rx.recv().expect("executor thread died")?;
+    Ok(tx)
 }
 
 /// Run each dispatch on a worker thread: sleep the scaled pre-exec
-/// delays, execute (PJRT or modeled sleep), then complete.
-fn handle_dispatches(inner: &Arc<Inner>, ds: Vec<Dispatch>) {
+/// delays, execute (PJRT or modeled sleep), then complete and fulfill
+/// the submitter's ticket.
+fn handle_dispatches(inner: &Arc<Inner>, shard: usize, ds: Vec<Dispatch>) {
     for d in ds {
         let inner = Arc::clone(inner);
-        thread::spawn(move || run_dispatch(&inner, d));
+        thread::spawn(move || run_dispatch(&inner, shard, d));
     }
 }
 
-fn run_dispatch(inner: &Arc<Inner>, d: Dispatch) {
+fn run_dispatch(inner: &Arc<Inner>, shard: usize, d: Dispatch) {
     let scale = inner.scale;
     let sleep_scaled = |ns: Nanos| {
         if ns > 0 {
@@ -290,58 +562,190 @@ fn run_dispatch(inner: &Arc<Inner>, d: Dispatch) {
 
     // Service: real PJRT execution, or the modeled time scaled.
     let class_name = {
-        let plane = inner.plane.lock().unwrap();
+        let mut plane = inner.shards[shard].lock().unwrap();
+        // Exact utilization-integral touch at the wall-clock exec start
+        // (the sim engine's Touch event, live).
+        plane.touch(exec_t0);
         plane.workload().func(d.func).class.name.to_string()
     };
-    let measured = match &inner.exec_tx {
-        Some(tx) => {
-            let (rtx, rrx) = channel();
-            if tx
-                .send(ExecJob {
-                    artifact: class_name,
-                    reply: rtx,
-                })
-                .is_ok()
-            {
-                rrx.recv().unwrap_or_default()
-            } else {
-                Duration::ZERO
-            }
+    if let Some(tx) = &inner.exec_tx {
+        let (rtx, rrx) = channel();
+        if tx
+            .send(ExecJob {
+                artifact: class_name,
+                reply: rtx,
+            })
+            .is_ok()
+        {
+            let _ = rrx.recv();
         }
-        None => {
-            sleep_scaled(d.exec);
-            Duration::ZERO
-        }
-    };
-    let _ = measured;
+    } else {
+        sleep_scaled(d.exec);
+    }
 
     let now = inner.clock.now();
-    let (ds, completion) = {
-        let mut plane = inner.plane.lock().unwrap();
-        let ds = plane.on_complete(d.inv, now);
-        let rec = plane.recorder.records.last().copied();
-        (ds, rec)
-    };
-    if let Some(rec) = completion {
-        if rec.inv == d.inv {
-            if let Some(tx) = inner.waiters.lock().unwrap().remove(&d.inv) {
-                let _ = tx.send(Completion {
-                    inv: d.inv,
-                    func: d.func,
-                    latency: Duration::from_nanos(rec.completed - rec.arrived),
-                    exec: Duration::from_nanos(now.saturating_sub(exec_t0)),
-                    start_kind: d.start_kind,
-                    gpu: d.gpu.0,
-                });
-            }
+    let (rec, ds) = inner.shards[shard].lock().unwrap().on_complete(d.inv, now);
+    // Completion matching: the plane hands back the completed
+    // invocation's own record (not `records.last()`, which under
+    // concurrent completions may belong to someone else).
+    if let Some(rec) = rec {
+        debug_assert_eq!(rec.inv, d.inv);
+        let mapped = inner.inv_tickets.lock().unwrap().remove(&(shard, d.inv));
+        if let Some((ticket, func_name)) = mapped {
+            fulfill(
+                inner,
+                ticket,
+                InvokeOutcome {
+                    ticket,
+                    func: func_name,
+                    shard,
+                    gpu: rec.gpu.0,
+                    start_kind: rec.start_kind,
+                    latency_ms: to_secs(rec.completed.saturating_sub(rec.arrived)) * 1e3,
+                    exec_ms: to_secs(now.saturating_sub(exec_t0)) * 1e3,
+                },
+            );
         }
     }
-    handle_dispatches(inner, ds);
+    handle_dispatches(inner, shard, ds);
 }
+
+/// Mark a ticket done and wake every waiter blocked on it.
+fn fulfill(inner: &Arc<Inner>, ticket: Ticket, outcome: InvokeOutcome) {
+    let prev = inner
+        .tickets
+        .lock()
+        .unwrap()
+        .complete(ticket.0, outcome.clone());
+    if let Some(TicketEntry::Pending { waiters }) = prev {
+        for w in waiters {
+            let _ = w.send(outcome.clone());
+        }
+    }
+}
+
+/// Accept loop on `addr`; every connection is served over a cloned
+/// [`RtHandle`] (never the shutdown guard — see the module docs).
+fn serve_on(handle: RtHandle, addr: &str) -> anyhow::Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    thread::spawn(move || {
+        for stream in listener.incoming() {
+            if !handle.inner.running.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let conn = handle.clone();
+            thread::spawn(move || crate::api::wire::serve_connection(&conn, stream));
+        }
+    });
+    Ok(local)
+}
+
+// ---------------------------------------------------------------------
+// RtServer: the single-plane frontend.
+// ---------------------------------------------------------------------
+
+/// Single-plane wall-clock frontend; the shutdown-owning guard.
+/// Construct with [`RtServer::new`], serve TCP with [`RtServer::serve`],
+/// embed via [`RtServer::handle`] or the [`Frontend`] impl.
+pub struct RtServer {
+    inner: Arc<Inner>,
+    monitors: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+impl RtServer {
+    /// `artifacts_dir`: load + compile HLO artifacts and execute them on
+    /// dispatch (real execution). `None`: sleep the modeled service time
+    /// instead (pure control-plane demo).
+    pub fn new(
+        workload: Workload,
+        cfg: PlaneConfig,
+        artifacts_dir: Option<&std::path::Path>,
+        scale: f64,
+    ) -> anyhow::Result<Self> {
+        let capacities = vec![cfg.fleet_capacity()];
+        // Trivial ring: every routing question answers shard 0.
+        let router = RouterKind::RoundRobin.build(1, 1.0, 0, &capacities);
+        let inner = build_inner(
+            "rt-server",
+            "single",
+            workload,
+            vec![cfg],
+            router,
+            capacities,
+            artifacts_dir,
+            scale,
+        )?;
+        let monitors = Mutex::new(vec![spawn_monitor(&inner, 0)]);
+        Ok(Self { inner, monitors })
+    }
+}
+
+impl_guard!(RtServer);
+
+// ---------------------------------------------------------------------
+// RtCluster: N shards behind a live router.
+// ---------------------------------------------------------------------
+
+/// Sharded wall-clock frontend: N independent control planes behind a
+/// [`crate::cluster::Router`], serving real TCP traffic. The shutdown-
+/// owning guard, like [`RtServer`].
+pub struct RtCluster {
+    inner: Arc<Inner>,
+    monitors: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+impl RtCluster {
+    /// Build `cfg.n_shards` planes (heterogeneous via
+    /// [`ClusterConfig::shard_planes`]), the capacity-weighted router,
+    /// and one monitor thread per shard.
+    pub fn new(
+        workload: Workload,
+        cfg: ClusterConfig,
+        artifacts_dir: Option<&std::path::Path>,
+        scale: f64,
+    ) -> anyhow::Result<Self> {
+        assert!(cfg.n_shards >= 1, "cluster needs at least one shard");
+        assert!(
+            cfg.shard_planes.is_empty() || cfg.shard_planes.len() == cfg.n_shards,
+            "shard_planes must be empty or hold one config per shard"
+        );
+        let capacities = cfg.shard_capacities();
+        let router = cfg
+            .router
+            .build(cfg.n_shards, cfg.load_factor, cfg.seed, &capacities);
+        let planes: Vec<PlaneConfig> =
+            (0..cfg.n_shards).map(|s| cfg.plane_for(s).clone()).collect();
+        let inner = build_inner(
+            "rt-cluster",
+            cfg.router.name(),
+            workload,
+            planes,
+            router,
+            capacities,
+            artifacts_dir,
+            scale,
+        )?;
+        let monitors = Mutex::new(
+            (0..cfg.n_shards)
+                .map(|s| spawn_monitor(&inner, s))
+                .collect(),
+        );
+        Ok(Self { inner, monitors })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.inner.shards.len()
+    }
+}
+
+impl_guard!(RtCluster);
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::types::{StartKind, MS};
     use crate::workload::catalog::by_name;
 
     fn workload() -> Workload {
@@ -353,60 +757,246 @@ mod tests {
 
     fn fast_cfg() -> PlaneConfig {
         PlaneConfig {
-            monitor_period: 20 * crate::types::MS,
+            monitor_period: 20 * MS,
             ..Default::default()
         }
     }
 
+    const WAIT: Option<Duration> = Some(Duration::from_secs(30));
+
     #[test]
     fn submit_completes_in_model_mode() {
         let srv = RtServer::new(workload(), fast_cfg(), None, 0.001).unwrap();
-        let c = srv
-            .submit(FuncId(0))
-            .recv_timeout(Duration::from_secs(30))
-            .unwrap();
-        assert_eq!(c.func, FuncId(0));
+        let ticket = srv.submit("isoneural-0").unwrap();
+        let c = srv.wait(ticket, WAIT).unwrap();
+        assert_eq!(c.ticket, ticket);
+        assert_eq!(c.func, "isoneural-0");
+        assert_eq!(c.shard, 0);
         assert_eq!(c.start_kind, StartKind::Cold);
-        assert!(c.latency > Duration::ZERO);
-        let (n, lat, cold) = srv.stats();
-        assert_eq!(n, 1);
-        assert!(lat > 0.0);
-        assert!((cold - 1.0).abs() < 1e-9);
+        assert!(c.latency_ms > 0.0);
+        let s = srv.stats();
+        assert_eq!(s.invocations, 1);
+        assert!(s.mean_latency_ms > 0.0);
+        assert!((s.cold_ratio - 1.0).abs() < 1e-9);
+        // Claimed tickets are reclaimed.
+        assert_eq!(
+            srv.wait(ticket, WAIT).unwrap_err().code(),
+            "unknown-ticket"
+        );
+    }
+
+    #[test]
+    fn class_name_resolves_like_registered_name() {
+        let srv = RtServer::new(workload(), fast_cfg(), None, 0.001).unwrap();
+        let t = srv.submit("fft").unwrap();
+        assert_eq!(srv.wait(t, WAIT).unwrap().func, "fft-0");
     }
 
     #[test]
     fn concurrent_submissions_all_complete() {
         let srv = RtServer::new(workload(), fast_cfg(), None, 0.0005).unwrap();
-        let rxs: Vec<_> = (0..6)
-            .map(|i| srv.submit(FuncId((i % 2) as u32)))
+        let names = ["isoneural-0", "fft-0"];
+        let tickets: Vec<Ticket> = (0..6)
+            .map(|i| srv.submit(names[i % 2]).unwrap())
             .collect();
-        for rx in rxs {
-            rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        for t in tickets {
+            srv.wait(t, WAIT).unwrap();
         }
-        assert_eq!(srv.stats().0, 6);
+        assert_eq!(srv.stats().invocations, 6);
     }
 
     #[test]
-    fn tcp_roundtrip() {
-        let srv = RtServer::new(workload(), fast_cfg(), None, 0.0005).unwrap();
-        let addr = srv.serve("127.0.0.1:0").unwrap();
-        let mut conn = TcpStream::connect(addr).unwrap();
-        conn.write_all(b"invoke isoneural-0\nstats\nquit\n").unwrap();
-        let mut lines = BufReader::new(conn.try_clone().unwrap()).lines();
-        let first = lines.next().unwrap().unwrap();
-        assert!(first.starts_with("ok "), "{first}");
-        let second = lines.next().unwrap().unwrap();
-        assert!(second.contains("invocations=1"), "{second}");
+    fn poll_observes_pending_then_done() {
+        let srv = RtServer::new(workload(), fast_cfg(), None, 0.005).unwrap();
+        let t = srv.submit("fft-0").unwrap();
+        // fft's cold boot is seconds of model time — milliseconds here —
+        // so the first poll observes it still running.
+        assert_eq!(srv.poll(t).unwrap(), None);
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        let outcome = loop {
+            if let Some(o) = srv.poll(t).unwrap() {
+                break o;
+            }
+            assert!(std::time::Instant::now() < deadline, "poll never completed");
+            thread::sleep(Duration::from_millis(2));
+        };
+        assert_eq!(outcome.ticket, t);
+        // Consumed by the successful poll.
+        assert_eq!(srv.poll(t).unwrap_err().code(), "unknown-ticket");
     }
 
     #[test]
-    fn unknown_function_rejected() {
+    fn unknown_function_is_structured() {
         let srv = RtServer::new(workload(), fast_cfg(), None, 0.001).unwrap();
-        let addr = srv.serve("127.0.0.1:0").unwrap();
-        let mut conn = TcpStream::connect(addr).unwrap();
-        conn.write_all(b"invoke ghost\nquit\n").unwrap();
-        let mut lines = BufReader::new(conn).lines();
-        let first = lines.next().unwrap().unwrap();
-        assert!(first.starts_with("err"), "{first}");
+        let err = srv.submit("ghost").unwrap_err();
+        assert_eq!(err.code(), "unknown-function");
+    }
+
+    #[test]
+    fn backpressure_rejects_overload_deterministically() {
+        let srv = RtServer::new(workload(), fast_cfg(), None, 0.001).unwrap();
+        srv.set_max_pending(1);
+        // Default D=2 on one GPU: two dispatch immediately, the third
+        // queues (pending=1), so the fourth submit hits the bound.
+        let t1 = srv.submit("fft-0").unwrap();
+        let t2 = srv.submit("fft-0").unwrap();
+        let t3 = srv.submit("fft-0").unwrap();
+        let err = srv.submit("fft-0").unwrap_err();
+        assert_eq!(err.code(), "overloaded");
+        for t in [t1, t2, t3] {
+            srv.wait(t, WAIT).unwrap();
+        }
+    }
+
+    #[test]
+    fn shutdown_rejects_new_work_and_is_guard_owned() {
+        let srv = RtServer::new(workload(), fast_cfg(), None, 0.001).unwrap();
+        let handle = srv.handle();
+        // Dropping handles is inert — admission stays open.
+        drop(handle.clone());
+        assert!(handle.submit("isoneural-0").is_ok());
+        srv.stop();
+        assert_eq!(handle.submit("isoneural-0").unwrap_err().code(), "shutting-down");
+        assert_eq!(srv.submit("isoneural-0").unwrap_err().code(), "shutting-down");
+    }
+
+    #[test]
+    fn describe_reports_shape() {
+        let srv = RtServer::new(workload(), fast_cfg(), None, 0.001).unwrap();
+        let d = srv.describe();
+        assert_eq!(d.proto, PROTOCOL_VERSION);
+        assert_eq!(d.server, "rt-server");
+        assert_eq!(d.shards, 1);
+        assert_eq!(d.router, "single");
+        assert_eq!(d.policy, "mqfq-sticky");
+        assert_eq!(d.functions, vec!["isoneural-0", "fft-0"]);
+    }
+
+    #[test]
+    fn cluster_frontend_spreads_and_aggregates() {
+        let cfg = ClusterConfig {
+            n_shards: 2,
+            router: RouterKind::RoundRobin,
+            plane: fast_cfg(),
+            ..Default::default()
+        };
+        let srv = RtCluster::new(workload(), cfg, None, 0.001).unwrap();
+        assert_eq!(srv.n_shards(), 2);
+        let d = srv.describe();
+        assert_eq!(d.server, "rt-cluster");
+        assert_eq!(d.shards, 2);
+        assert_eq!(d.router, "round-robin");
+        let tickets: Vec<Ticket> = (0..4)
+            .map(|_| srv.submit("isoneural-0").unwrap())
+            .collect();
+        let shards: std::collections::HashSet<usize> = tickets
+            .into_iter()
+            .map(|t| srv.wait(t, WAIT).unwrap().shard)
+            .collect();
+        assert_eq!(shards.len(), 2, "round-robin must hit both shards");
+        assert_eq!(srv.stats().invocations, 4);
+    }
+
+    #[test]
+    fn cluster_sticky_keeps_a_function_home() {
+        let cfg = ClusterConfig {
+            n_shards: 4,
+            router: RouterKind::StickyCh,
+            plane: fast_cfg(),
+            ..Default::default()
+        };
+        let srv = RtCluster::new(workload(), cfg, None, 0.0005).unwrap();
+        let mut shards = std::collections::HashSet::new();
+        for _ in 0..6 {
+            let t = srv.submit("fft-0").unwrap();
+            shards.insert(srv.wait(t, WAIT).unwrap().shard);
+        }
+        assert_eq!(shards.len(), 1, "light sticky load must stay home");
+    }
+
+    #[test]
+    fn wait_deadline_trips_then_completion_is_recoverable() {
+        let srv = RtServer::new(workload(), fast_cfg(), None, 0.01).unwrap();
+        // fft cold boot ≈ 2.4 s model time → ≈ 24 ms wall; 1 ms deadline
+        // trips long before that.
+        let t = srv.submit("fft-0").unwrap();
+        let err = srv.wait(t, Some(Duration::from_millis(1))).unwrap_err();
+        assert_eq!(err.code(), "deadline-exceeded");
+        // Run-to-completion: the invocation still finishes and the
+        // ticket stays redeemable.
+        let o = srv.wait(t, WAIT).unwrap();
+        assert_eq!(o.ticket, t);
+        assert_eq!(srv.stats().invocations, 1);
+    }
+
+    #[test]
+    fn unknown_ticket_rejected() {
+        let srv = RtServer::new(workload(), fast_cfg(), None, 0.001).unwrap();
+        assert_eq!(
+            srv.wait(Ticket(999), WAIT).unwrap_err().code(),
+            "unknown-ticket"
+        );
+        assert_eq!(srv.poll(Ticket(999)).unwrap_err().code(), "unknown-ticket");
+    }
+
+    #[test]
+    fn ticket_table_bounds_unclaimed_completions() {
+        let outcome = |n: u64| InvokeOutcome {
+            ticket: Ticket(n),
+            func: "f".into(),
+            shard: 0,
+            gpu: 0,
+            start_kind: StartKind::Cold,
+            latency_ms: 1.0,
+            exec_ms: 1.0,
+        };
+        let mut t = TicketTable::new();
+        t.max_done = 2;
+        for id in 0..5 {
+            t.insert_pending(id);
+            t.complete(id, outcome(id));
+        }
+        // Oldest unclaimed completions evicted down to the bound.
+        assert_eq!(t.done_count, 2);
+        assert!(t.remove(0).is_none());
+        assert!(t.remove(1).is_none());
+        assert!(t.remove(2).is_none());
+        assert!(matches!(t.remove(3), Some(TicketEntry::Done(_))));
+        assert!(matches!(t.remove(4), Some(TicketEntry::Done(_))));
+        assert_eq!(t.done_count, 0);
+        // Promptly-claimed tickets leave stale order ids behind; the
+        // compaction keeps both structures bounded.
+        for id in 5..500 {
+            t.insert_pending(id);
+            t.complete(id, outcome(id));
+            assert!(matches!(t.remove(id), Some(TicketEntry::Done(_))));
+        }
+        assert!(t.entries.is_empty());
+        assert_eq!(t.done_count, 0);
+        assert!(t.done_order.len() <= t.max_done.saturating_mul(2).max(64) + 1);
+    }
+
+    #[test]
+    fn frontend_trait_objects_serve_both_impls() {
+        // The serving layer only sees `&dyn Frontend` — both frontends
+        // must be usable through it.
+        let server = RtServer::new(workload(), fast_cfg(), None, 0.001).unwrap();
+        let cluster = RtCluster::new(
+            workload(),
+            ClusterConfig {
+                n_shards: 1,
+                plane: fast_cfg(),
+                ..Default::default()
+            },
+            None,
+            0.001,
+        )
+        .unwrap();
+        let fronts: [&dyn Frontend; 2] = [&server, &cluster];
+        for f in fronts {
+            let o = f.invoke("isoneural-0", WAIT).unwrap();
+            assert_eq!(o.func, "isoneural-0");
+            assert_eq!(f.stats().invocations, 1);
+        }
     }
 }

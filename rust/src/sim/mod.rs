@@ -79,7 +79,7 @@ impl SimTarget for ControlPlane {
         inv: InvocationId,
         now: Nanos,
     ) -> Vec<ShardDispatch> {
-        crate::cluster::tag(0, self.on_complete(inv, now))
+        crate::cluster::tag(0, self.on_complete(inv, now).1)
     }
 
     fn sim_tick(&mut self, now: Nanos) -> Vec<ShardDispatch> {

@@ -95,6 +95,18 @@ impl fmt::Display for StartKind {
     }
 }
 
+impl StartKind {
+    /// Inverse of `Display` — wire-protocol decode ([`crate::api`]).
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "gpu-warm" => StartKind::GpuWarm,
+            "host-warm" => StartKind::HostWarm,
+            "cold" => StartKind::Cold,
+            _ => return None,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,5 +126,13 @@ mod tests {
         assert_eq!(GpuId(0).to_string(), "gpu0");
         assert_eq!(ContainerId(1).to_string(), "ctr1");
         assert_eq!(StartKind::HostWarm.to_string(), "host-warm");
+    }
+
+    #[test]
+    fn start_kind_parse_is_display_inverse() {
+        for k in [StartKind::GpuWarm, StartKind::HostWarm, StartKind::Cold] {
+            assert_eq!(StartKind::parse(&k.to_string()), Some(k));
+        }
+        assert_eq!(StartKind::parse("lukewarm"), None);
     }
 }

@@ -31,6 +31,45 @@ impl Json {
         out
     }
 
+    /// Single-line rendering, no trailing newline — the JSON-lines wire
+    /// framing ([`crate::api::wire`]) needs exactly one document per
+    /// line (string escapes keep embedded newlines off the wire).
+    pub fn render_compact(&self) -> String {
+        let mut out = String::new();
+        self.write_compact(&mut out);
+        out
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Null | Json::Bool(_) | Json::Int(_) | Json::Num(_) | Json::Str(_) => {
+                self.write(out, 0)
+            }
+            Json::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     fn write(&self, out: &mut String, indent: usize) {
         match self {
             Json::Null => out.push_str("null"),
@@ -143,6 +182,18 @@ mod tests {
         assert!(got.contains("\"events\": 12000"));
         assert!(got.contains("\"empty\": []"));
         assert!(got.ends_with("}\n"));
+    }
+
+    #[test]
+    fn compact_rendering_is_one_line() {
+        let doc = Json::Obj(vec![
+            ("a".into(), Json::Int(1)),
+            ("b".into(), Json::Arr(vec![Json::str("x\ny"), Json::Null])),
+            ("c".into(), Json::Obj(vec![])),
+        ]);
+        let got = doc.render_compact();
+        assert_eq!(got, "{\"a\":1,\"b\":[\"x\\ny\",null],\"c\":{}}");
+        assert!(!got.contains('\n'));
     }
 
     #[test]

@@ -1,0 +1,361 @@
+//! Protocol-v1 conformance suite: hello/version negotiation, sync and
+//! async invoke round-trips, the structured error taxonomy, deadline
+//! handling, legacy line-protocol aliases, the connection-drop
+//! regression (a disconnecting client must not shut the server down),
+//! and RtServer ≡ RtCluster(1 shard) behavioral equivalence over the
+//! same wire.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use mqfq::api::{ApiClient, ApiError, Frontend, PROTOCOL_VERSION};
+use mqfq::cluster::{ClusterConfig, RouterKind};
+use mqfq::plane::PlaneConfig;
+use mqfq::server::{RtCluster, RtServer};
+use mqfq::types::{StartKind, MS};
+use mqfq::workload::catalog::by_name;
+use mqfq::workload::Workload;
+
+fn workload() -> Workload {
+    let mut w = Workload::default();
+    w.register(by_name("isoneural").unwrap(), 0, 1.0);
+    w.register(by_name("fft").unwrap(), 0, 1.0);
+    w
+}
+
+fn fast_cfg() -> PlaneConfig {
+    PlaneConfig {
+        monitor_period: 20 * MS,
+        ..Default::default()
+    }
+}
+
+fn server() -> (RtServer, SocketAddr) {
+    let srv = RtServer::new(workload(), fast_cfg(), None, 0.001).unwrap();
+    let addr = srv.serve("127.0.0.1:0").unwrap();
+    (srv, addr)
+}
+
+fn cluster(n: usize, router: RouterKind) -> (RtCluster, SocketAddr) {
+    let cfg = ClusterConfig {
+        n_shards: n,
+        router,
+        plane: fast_cfg(),
+        ..Default::default()
+    };
+    let srv = RtCluster::new(workload(), cfg, None, 0.001).unwrap();
+    let addr = srv.serve("127.0.0.1:0").unwrap();
+    (srv, addr)
+}
+
+/// Raw line round-trip (bypasses ApiClient to pin the wire bytes).
+fn raw_call(conn: &mut TcpStream, line: &str) -> String {
+    conn.write_all((line.to_string() + "\n").as_bytes()).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut buf = String::new();
+    reader.read_line(&mut buf).unwrap();
+    buf.trim().to_string()
+}
+
+#[test]
+fn hello_negotiates_and_rejects_unknown_versions() {
+    let (_srv, addr) = server();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    // Current version accepted.
+    let ok = raw_call(&mut conn, r#"{"cmd":"hello","v":1}"#);
+    assert!(ok.contains(r#""ok":true"#), "{ok}");
+    assert!(ok.contains(r#""type":"hello""#), "{ok}");
+    assert!(ok.contains(r#""proto":1"#), "{ok}");
+    assert!(ok.contains(r#""server":"rt-server""#), "{ok}");
+    // Future version rejected with the structured taxonomy...
+    let err = raw_call(&mut conn, r#"{"cmd":"hello","v":99}"#);
+    assert!(err.contains(r#""ok":false"#), "{err}");
+    assert!(err.contains(r#""error":"unsupported-version""#), "{err}");
+    // ...but the connection survives for a retry at a spoken version.
+    let retry = raw_call(&mut conn, r#"{"cmd":"hello","v":1}"#);
+    assert!(retry.contains(r#""proto":1"#), "{retry}");
+    // v0 is not a protocol.
+    let zero = raw_call(&mut conn, r#"{"cmd":"hello","v":0}"#);
+    assert!(zero.contains("unsupported-version"), "{zero}");
+    // Malformed versions must not silently negotiate to the default...
+    for bad in [r#"{"cmd":"hello","v":"2"}"#, r#"{"cmd":"hello","v":1.5}"#] {
+        let reply = raw_call(&mut conn, bad);
+        assert!(reply.contains(r#""error":"bad-request""#), "{bad} → {reply}");
+    }
+    // ...and huge versions must not truncate into an accepted one.
+    let huge = raw_call(&mut conn, r#"{"cmd":"hello","v":4294967297}"#);
+    assert!(huge.contains("unsupported-version"), "{huge}");
+    // Malformed \u escapes (even ones clipping multibyte UTF-8) are a
+    // structured decode error, not a dead connection.
+    let clipped = raw_call(&mut conn, "{\"cmd\":\"hello\",\"s\":\"\\u000é\"}");
+    assert!(clipped.contains(r#""error":"bad-request""#), "{clipped}");
+    let alive = raw_call(&mut conn, r#"{"cmd":"hello","v":1}"#);
+    assert!(alive.contains(r#""proto":1"#), "{alive}");
+}
+
+#[test]
+fn client_connect_performs_handshake() {
+    let (_srv, addr) = server();
+    let client = ApiClient::connect(addr).unwrap();
+    assert_eq!(client.proto(), PROTOCOL_VERSION);
+}
+
+#[test]
+fn describe_reports_functions_policy_and_shape() {
+    let (_srv, addr) = cluster(3, RouterKind::StickyCh);
+    let mut client = ApiClient::connect(addr).unwrap();
+    let d = client.describe().unwrap();
+    assert_eq!(d.proto, PROTOCOL_VERSION);
+    assert_eq!(d.server, "rt-cluster");
+    assert_eq!(d.shards, 3);
+    assert_eq!(d.router, "sticky-ch");
+    assert_eq!(d.policy, "mqfq-sticky");
+    assert_eq!(d.functions, vec!["isoneural-0", "fft-0"]);
+}
+
+#[test]
+fn sync_invoke_roundtrip() {
+    let (_srv, addr) = server();
+    let mut client = ApiClient::connect(addr).unwrap();
+    let o = client.invoke("isoneural-0", Some(30_000)).unwrap();
+    assert_eq!(o.func, "isoneural-0");
+    assert_eq!(o.shard, 0);
+    assert_eq!(o.start_kind, StartKind::Cold);
+    assert!(o.latency_ms > 0.0);
+    let s = client.stats().unwrap();
+    assert_eq!(s.invocations, 1);
+    assert!((s.cold_ratio - 1.0).abs() < 1e-9);
+    assert_eq!(s.pending, 0);
+    assert_eq!(s.in_flight, 0);
+}
+
+#[test]
+fn async_invoke_ticket_poll_wait_lifecycle() {
+    let (_srv, addr) = server();
+    let mut client = ApiClient::connect(addr).unwrap();
+    let t = client.invoke_async("fft-0").unwrap();
+    // Still booting (seconds of model time, ms of wall time).
+    assert_eq!(client.poll(t).unwrap(), None);
+    let o = client.wait(t, Some(30_000)).unwrap();
+    assert_eq!(o.ticket, t);
+    assert_eq!(o.func, "fft-0");
+    // Redeemed tickets are reclaimed.
+    let err = client.wait(t, Some(1_000)).unwrap_err();
+    assert_eq!(err.code(), "unknown-ticket");
+    let err = client.poll(t).unwrap_err();
+    assert_eq!(err.code(), "unknown-ticket");
+}
+
+#[test]
+fn tickets_outlive_their_connection() {
+    let (_srv, addr) = server();
+    let mut a = ApiClient::connect(addr).unwrap();
+    let t = a.invoke_async("fft-0").unwrap();
+    a.quit();
+    // Tickets are frontend-scoped: a second connection redeems them.
+    let mut b = ApiClient::connect(addr).unwrap();
+    let o = b.wait(t, Some(30_000)).unwrap();
+    assert_eq!(o.ticket, t);
+}
+
+#[test]
+fn error_taxonomy_over_the_wire() {
+    let (srv, addr) = server();
+    let mut client = ApiClient::connect(addr).unwrap();
+    assert_eq!(
+        client.invoke("ghost", None).unwrap_err().code(),
+        "unknown-function"
+    );
+    assert_eq!(
+        client
+            .wait(mqfq::api::Ticket(404), Some(1_000))
+            .unwrap_err()
+            .code(),
+        "unknown-ticket"
+    );
+    // Malformed requests.
+    let mut conn = TcpStream::connect(addr).unwrap();
+    for bad in [
+        "{not json",
+        r#"{"cmd":"warp"}"#,
+        r#"{"cmd":"invoke"}"#,
+        r#"{"cmd":"invoke","func":"f","mode":"batch"}"#,
+    ] {
+        let reply = raw_call(&mut conn, bad);
+        assert!(reply.contains(r#""error":"bad-request""#), "{bad} → {reply}");
+    }
+    // Backpressure: D=2 dispatches two, the third queues, the fourth
+    // submit sees pending >= limit.
+    srv.set_max_pending(1);
+    let mut tickets = Vec::new();
+    let mut overloaded = false;
+    for _ in 0..4 {
+        match client.invoke_async("fft-0") {
+            Ok(t) => tickets.push(t),
+            Err(e) => {
+                assert_eq!(e.code(), "overloaded");
+                overloaded = true;
+                break;
+            }
+        }
+    }
+    assert!(overloaded, "4th submit must hit the backpressure bound");
+    for t in tickets {
+        client.wait(t, Some(30_000)).unwrap();
+    }
+}
+
+#[test]
+fn deadline_exceeded_then_recoverable() {
+    let (_srv, addr) = server();
+    let mut client = ApiClient::connect(addr).unwrap();
+    // fft's modeled cold start dwarfs a 1 ms deadline.
+    let err = client.invoke("fft-0", Some(1)).unwrap_err();
+    assert_eq!(err.code(), "deadline-exceeded");
+    // Run-to-completion: the error carries the still-running
+    // invocation's ticket, so even a sync invoke stays redeemable.
+    let ApiError::DeadlineExceeded {
+        ticket: Some(t), ..
+    } = err
+    else {
+        panic!("deadline error must carry the ticket: {err}");
+    };
+    let o = client.wait(t, Some(30_000)).unwrap();
+    assert_eq!(o.func, "fft-0");
+    assert_eq!(client.stats().unwrap().invocations, 1);
+}
+
+#[test]
+fn legacy_aliases_still_speak_the_old_lines() {
+    let (_srv, addr) = server();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.write_all(b"invoke isoneural-0\nstats\nquit\n").unwrap();
+    let mut lines = BufReader::new(conn.try_clone().unwrap()).lines();
+    let first = lines.next().unwrap().unwrap();
+    assert!(first.starts_with("ok "), "{first}");
+    assert!(first.contains("gpu0"), "{first}");
+    assert!(first.contains("cold"), "{first}");
+    let second = lines.next().unwrap().unwrap();
+    assert!(second.contains("invocations=1"), "{second}");
+    assert!(second.contains("cold_ratio="), "{second}");
+    // quit closes the stream.
+    assert!(lines.next().is_none());
+}
+
+#[test]
+fn legacy_unknown_function_and_command() {
+    let (_srv, addr) = server();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    assert_eq!(raw_call(&mut conn, "invoke ghost"), "err unknown function");
+    assert_eq!(raw_call(&mut conn, "warp 9"), "err unknown command warp");
+}
+
+#[test]
+fn legacy_and_v1_share_one_port_and_one_state() {
+    let (_srv, addr) = server();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let legacy = raw_call(&mut conn, "invoke isoneural-0");
+    assert!(legacy.starts_with("ok "), "{legacy}");
+    // The same connection switches to v1 mid-stream; the v1 stats see
+    // the legacy invocation.
+    let stats = raw_call(&mut conn, r#"{"cmd":"stats"}"#);
+    assert!(stats.contains(r#""invocations":1"#), "{stats}");
+}
+
+#[test]
+fn disconnecting_client_does_not_kill_the_server() {
+    // Regression: per-connection guard clones used to run
+    // Drop::drop → shutdown() on first disconnect, storing running=false
+    // and killing the monitor + accept loop for every later client.
+    let (srv, addr) = server();
+    {
+        let mut first = ApiClient::connect(addr).unwrap();
+        first.invoke("isoneural-0", Some(30_000)).unwrap();
+        first.quit(); // graceful disconnect (server sees EOF after bye)
+    }
+    {
+        // Ungraceful disconnect too: just drop the socket.
+        let _ = TcpStream::connect(addr).unwrap();
+    }
+    // A later, fully separate connection must still be served — accept
+    // loop alive, monitor alive, admission open.
+    let mut second = ApiClient::connect(addr).unwrap();
+    let o = second.invoke("isoneural-0", Some(30_000)).unwrap();
+    assert_ne!(o.start_kind, StartKind::Cold, "warm pool must survive");
+    assert_eq!(second.stats().unwrap().invocations, 2);
+    // Only the guard shuts down.
+    srv.stop();
+    assert_eq!(
+        second.invoke("isoneural-0", None).unwrap_err().code(),
+        "shutting-down"
+    );
+}
+
+#[test]
+fn one_shard_cluster_behaves_like_the_server() {
+    let (_a, server_addr) = server();
+    let (_b, cluster_addr) = cluster(1, RouterKind::StickyCh);
+    let mut outcomes = Vec::new();
+    for addr in [server_addr, cluster_addr] {
+        let mut client = ApiClient::connect(addr).unwrap();
+        let o1 = client.invoke("fft-0", Some(30_000)).unwrap();
+        let o2 = client.invoke("fft-0", Some(30_000)).unwrap();
+        let s = client.stats().unwrap();
+        outcomes.push((
+            o1.shard,
+            o1.start_kind == StartKind::Cold,
+            o2.start_kind == StartKind::Cold,
+            s.invocations,
+        ));
+    }
+    // Same observable behavior on both frontends: everything on shard
+    // 0, cold then warm, two served.
+    assert_eq!(outcomes[0], (0, true, false, 2));
+    assert_eq!(outcomes[0], outcomes[1]);
+}
+
+#[test]
+fn four_shard_cluster_serves_real_traffic_through_the_router() {
+    // load_factor is plumbed to the live router: a huge bound never
+    // spills, so sticky locality holds even for an async burst.
+    let cfg = ClusterConfig {
+        n_shards: 4,
+        router: RouterKind::StickyCh,
+        plane: fast_cfg(),
+        load_factor: 100.0,
+        ..Default::default()
+    };
+    let srv = RtCluster::new(workload(), cfg, None, 0.001).unwrap();
+    let addr = srv.serve("127.0.0.1:0").unwrap();
+    let mut client = ApiClient::connect(addr).unwrap();
+    // Async burst across both functions, all redeemed.
+    let tickets: Vec<_> = (0..8)
+        .map(|i| {
+            client
+                .invoke_async(["isoneural-0", "fft-0"][i % 2])
+                .unwrap()
+        })
+        .collect();
+    let mut shards_by_func =
+        [std::collections::HashSet::new(), std::collections::HashSet::new()];
+    for (i, t) in tickets.into_iter().enumerate() {
+        let o = client.wait(t, Some(30_000)).unwrap();
+        assert!(o.shard < 4);
+        shards_by_func[i % 2].insert(o.shard);
+    }
+    // Sticky locality: each function concentrates on its home shard.
+    assert_eq!(shards_by_func[0].len(), 1);
+    assert_eq!(shards_by_func[1].len(), 1);
+    assert_eq!(client.stats().unwrap().invocations, 8);
+}
+
+#[test]
+fn frontend_shutdown_surfaces_via_the_wire() {
+    let (srv, addr) = server();
+    let mut client = ApiClient::connect(addr).unwrap();
+    Frontend::shutdown(&srv); // trait-level: admission closes
+    let err = client.invoke("isoneural-0", None).unwrap_err();
+    assert_eq!(err.code(), "shutting-down");
+    assert!(matches!(err, ApiError::ShuttingDown));
+}

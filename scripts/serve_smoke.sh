@@ -1,0 +1,93 @@
+#!/usr/bin/env bash
+# End-to-end serving smoke test: start `serve` in model mode (no PJRT
+# artifacts needed), drive sync + async invocations through an
+# independent python3 client speaking protocol v1 (plus one legacy
+# line), and assert the server's stats. Wired into `make check` and CI.
+# Usage: scripts/serve_smoke.sh  (or `make smoke`)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=target/release/mqfq-sticky
+# Always (re)build: a no-op when fresh, and guarantees the smoke never
+# exercises a stale binary when run standalone via `make smoke`.
+echo "== cargo build --release (serve smoke) =="
+cargo build --release
+
+PORT="${SERVE_SMOKE_PORT:-18077}"
+LOG="$(mktemp)"
+"$BIN" serve --addr "127.0.0.1:$PORT" --scale 0.001 --shards 4 --router sticky \
+  >"$LOG" 2>&1 &
+SRV=$!
+trap 'kill "$SRV" 2>/dev/null || true; rm -f "$LOG"' EXIT
+
+python3 - "$PORT" <<'EOF'
+import json, socket, sys, time
+
+port = int(sys.argv[1])
+
+# Wait for the listener (the server prints its banner after binding).
+deadline = time.time() + 30
+while True:
+    try:
+        s = socket.create_connection(("127.0.0.1", port), timeout=2)
+        break
+    except OSError:
+        if time.time() > deadline:
+            sys.exit("serve never came up on port %d" % port)
+        time.sleep(0.1)
+
+s.settimeout(60)
+f = s.makefile("rwb")
+
+def call(req):
+    f.write((json.dumps(req) + "\n").encode())
+    f.flush()
+    line = f.readline()
+    assert line, "server closed the connection"
+    return json.loads(line)
+
+def legacy(line):
+    f.write((line + "\n").encode())
+    f.flush()
+    return f.readline().decode().strip()
+
+# hello handshake + version negotiation.
+hello = call({"cmd": "hello", "v": 1})
+assert hello["ok"] and hello["proto"] == 1, hello
+assert hello["server"] == "rt-cluster", hello
+bad = call({"cmd": "hello", "v": 99})
+assert not bad["ok"] and bad["error"] == "unsupported-version", bad
+
+# describe: cluster shape + functions.
+desc = call({"cmd": "describe"})
+assert desc["shards"] == 4 and desc["router"] == "sticky-ch", desc
+assert "isoneural-0" in desc["functions"], desc
+
+# sync invoke.
+done = call({"cmd": "invoke", "func": "isoneural-0", "mode": "sync",
+             "deadline_ms": 60000})
+assert done["ok"] and done["type"] == "done", done
+assert done["start"] == "cold" and done["latency_ms"] > 0, done
+
+# async invoke: ticket -> wait.
+acc = call({"cmd": "invoke", "func": "fft-0", "mode": "async"})
+assert acc["ok"] and acc["type"] == "ticket", acc
+out = call({"cmd": "wait", "ticket": acc["ticket"], "deadline_ms": 60000})
+assert out["ok"] and out["type"] == "done" and out["func"] == "fft-0", out
+
+# error taxonomy.
+err = call({"cmd": "invoke", "func": "ghost"})
+assert not err["ok"] and err["error"] == "unknown-function", err
+
+# stats: both invocations served, nothing stuck.
+stats = call({"cmd": "stats"})
+assert stats["invocations"] == 2, stats
+assert stats["pending"] == 0 and stats["in_flight"] == 0, stats
+
+# legacy alias on the same connection.
+line = legacy("stats")
+assert line.startswith("ok invocations=2"), line
+
+call({"cmd": "quit"})
+print("serve smoke: OK (sync + async + errors + legacy over protocol v1)")
+EOF
