@@ -1,6 +1,6 @@
 # Convenience targets; see ROADMAP.md for the tier-1 verify.
 
-.PHONY: check test smoke bench-perf bench-cluster bench-hetero artifacts
+.PHONY: check test smoke bench-perf bench-cluster bench-hetero bench-serving artifacts
 
 # Build + test + clippy-clean + serving smoke (the full local gate).
 check:
@@ -28,6 +28,13 @@ bench-cluster:
 # Compare against a previous run: scripts/bench_diff.sh OLD.json BENCH_hetero.json
 bench-hetero:
 	cargo bench --bench fig10_heterogeneous
+
+# Regenerate the serving-path throughput sweep and BENCH_serving.json
+# (closed/open-loop load generators over loopback TCP). Quick smoke:
+# SERVING_QUICK=1 make bench-serving.
+# Compare against a previous run: scripts/bench_diff.sh OLD.json BENCH_serving.json
+bench-serving:
+	cargo bench --bench serving_throughput
 
 # AOT-lower the python/JAX function bodies to HLO artifacts where the
 # rust runtime (rust/artifacts/) looks for them.

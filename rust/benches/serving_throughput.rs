@@ -1,0 +1,12 @@
+//! `cargo bench --bench serving_throughput` — the §Serving wall-clock
+//! serving-path sweep: closed-loop + open-loop load generators over
+//! real loopback TCP (1-shard and 4-shard sticky, sync and async-ticket
+//! mixes), emitting `BENCH_serving.json` and holding the scaling gates.
+//! Thin wrapper over `mqfq::experiments::serving::main` (also:
+//! `mqfq-sticky exp serving`; `SERVING_QUICK=1` for a smoke run).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::serving::main();
+    println!("[bench serving_throughput completed in {:.2?}]", t0.elapsed());
+}

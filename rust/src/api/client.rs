@@ -15,10 +15,18 @@ use super::wire;
 /// A connected, version-negotiated client. One request in flight at a
 /// time (the protocol is strictly request/reply per connection); async
 /// concurrency comes from tickets, not pipelining.
+///
+/// The request and reply line buffers live for the whole connection,
+/// so a tight invoke loop (the serving load generator, the CLI `--n`
+/// client) does not allocate per round trip on the wire path.
 pub struct ApiClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
     proto: u32,
+    /// Reused request-line buffer (encoded request + trailing newline).
+    wbuf: String,
+    /// Reused reply-line buffer.
+    rbuf: String,
 }
 
 fn io_err<E: std::fmt::Display>(e: E) -> ApiError {
@@ -36,6 +44,8 @@ impl ApiClient {
             reader: BufReader::new(stream),
             writer,
             proto: 0,
+            wbuf: String::with_capacity(128),
+            rbuf: String::with_capacity(256),
         };
         match client.call(&Request::Hello {
             version: PROTOCOL_VERSION,
@@ -63,18 +73,20 @@ impl ApiClient {
     /// `Err` with the decoded [`ApiError`]; transport failures as
     /// [`ApiError::Io`].
     fn call(&mut self, req: &Request) -> Result<Response, ApiError> {
-        let line = wire::encode_request(req);
+        self.wbuf.clear();
+        wire::encode_request_into(req, &mut self.wbuf);
+        self.wbuf.push('\n');
         self.writer
-            .write_all((line + "\n").as_bytes())
+            .write_all(self.wbuf.as_bytes())
             .map_err(io_err)?;
-        let mut buf = String::new();
-        let n = self.reader.read_line(&mut buf).map_err(io_err)?;
+        self.rbuf.clear();
+        let n = self.reader.read_line(&mut self.rbuf).map_err(io_err)?;
         if n == 0 {
             return Err(ApiError::Io {
                 detail: "server closed the connection".into(),
             });
         }
-        match wire::decode_response(buf.trim()).map_err(io_err)? {
+        match wire::decode_response(self.rbuf.trim()).map_err(io_err)? {
             Response::Error(e) => Err(e),
             resp => Ok(resp),
         }

@@ -22,10 +22,36 @@
 //!
 //! A line starting with `{` is a v1 request; anything else is parsed as
 //! a legacy command and answered in the legacy `ok ...`/`err ...` line
-//! format, so pre-v1 scripts keep working unchanged. The serde-free
-//! JSON layer reuses [`crate::util::json::Json`] for encoding and adds
-//! the matching parser here.
+//! format, so pre-v1 scripts keep working unchanged.
+//!
+//! # Steady-state allocation discipline
+//!
+//! The connection loop is built to stop allocating once warm, because
+//! at cluster scale the envelope around the (microsecond) scheduler is
+//! what bounds throughput:
+//!
+//! * **Parsing is zero-copy.** [`parse_jval`] produces a borrowed
+//!   [`JVal`] whose strings are `&str` slices of the input line
+//!   (`Cow::Owned` only when a string actually contains escapes), and
+//!   the server decodes requests into a borrowed view, so hot fields
+//!   (`func`, `mode`) never round-trip through `to_string`. The owned
+//!   [`parse_json`]/[`crate::util::json::Json`] form remains for
+//!   clients and tools that want a tree.
+//! * **Encoding is writer-based.** [`encode_response_into`] /
+//!   [`encode_request_into`] append directly to a caller-owned buffer —
+//!   no `String`-keyed `Json::Obj` tree per message (byte-identical
+//!   output; pinned by tests against tree rendering).
+//! * **Buffers are per-connection.** [`serve_connection`] reuses one
+//!   read and one write buffer across all requests on a connection.
+//!
+//! Number grammar note: integral numbers without exponent/fraction
+//! decode as [`JVal::Int`]; everything else numeric as [`JVal::Num`].
+//! The scanner classifies while it walks the digits, so each number is
+//! parsed exactly once (the old reader tried `i64` and then re-parsed
+//! the same text as `f64`).
 
+use std::borrow::Cow;
+use std::fmt::Write as _;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::Duration;
@@ -36,16 +62,65 @@ use super::types::{
 };
 use super::Frontend;
 use crate::types::StartKind;
-use crate::util::json::Json;
+use crate::util::json::{self, Json};
 
 // ---------------------------------------------------------------------
-// JSON parsing (the write side lives in util::json).
+// Borrowed JSON values + the single parser.
 // ---------------------------------------------------------------------
 
-/// Parse one JSON document. Integral numbers without exponent/fraction
-/// decode as [`Json::Int`]; everything else numeric as [`Json::Num`].
-pub fn parse_json(s: &str) -> Result<Json, String> {
+/// A parsed JSON value borrowing from the input line. Escape-free
+/// strings (the overwhelmingly common case on this protocol) are
+/// `Cow::Borrowed` slices of the input; only strings containing
+/// escapes are decoded into owned buffers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JVal<'a> {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Num(f64),
+    Str(Cow<'a, str>),
+    Arr(Vec<JVal<'a>>),
+    Obj(Vec<(Cow<'a, str>, JVal<'a>)>),
+}
+
+impl<'a> JVal<'a> {
+    /// Field lookup on an object (None for non-objects/missing keys).
+    pub fn get(&self, key: &str) -> Option<&JVal<'a>> {
+        match self {
+            JVal::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        match self.get(key) {
+            Some(JVal::Str(s)) => Some(s.as_ref()),
+            _ => None,
+        }
+    }
+
+    pub fn get_u64(&self, key: &str) -> Option<u64> {
+        match self.get(key) {
+            Some(JVal::Int(i)) if *i >= 0 => Some(*i as u64),
+            Some(JVal::Num(x)) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as u64),
+            _ => None,
+        }
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        match self.get(key) {
+            Some(JVal::Int(i)) => Some(*i as f64),
+            Some(JVal::Num(x)) => Some(*x),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one JSON document into the borrowed form (the zero-copy fast
+/// path the serving loop runs on).
+pub fn parse_jval(s: &str) -> Result<JVal<'_>, String> {
     let mut p = Parser {
+        s,
         b: s.as_bytes(),
         i: 0,
     };
@@ -58,12 +133,36 @@ pub fn parse_json(s: &str) -> Result<Json, String> {
     Ok(v)
 }
 
+/// Parse one JSON document into the owned [`Json`] tree (clients,
+/// tools, tests). Same grammar as [`parse_jval`].
+pub fn parse_json(s: &str) -> Result<Json, String> {
+    parse_jval(s).map(to_owned_json)
+}
+
+fn to_owned_json(v: JVal) -> Json {
+    match v {
+        JVal::Null => Json::Null,
+        JVal::Bool(b) => Json::Bool(b),
+        JVal::Int(i) => Json::Int(i),
+        JVal::Num(x) => Json::Num(x),
+        JVal::Str(s) => Json::Str(s.into_owned()),
+        JVal::Arr(xs) => Json::Arr(xs.into_iter().map(to_owned_json).collect()),
+        JVal::Obj(fields) => Json::Obj(
+            fields
+                .into_iter()
+                .map(|(k, v)| (k.into_owned(), to_owned_json(v)))
+                .collect(),
+        ),
+    }
+}
+
 struct Parser<'a> {
+    s: &'a str,
     b: &'a [u8],
     i: usize,
 }
 
-impl Parser<'_> {
+impl<'a> Parser<'a> {
     fn skip_ws(&mut self) {
         while let Some(&c) = self.b.get(self.i) {
             if c == b' ' || c == b'\t' || c == b'\n' || c == b'\r' {
@@ -90,21 +189,21 @@ impl Parser<'_> {
         }
     }
 
-    fn value(&mut self) -> Result<Json, String> {
+    fn value(&mut self) -> Result<JVal<'a>, String> {
         match self.peek() {
             None => Err("unexpected end of input".into()),
             Some(b'{') => self.object(),
             Some(b'[') => self.array(),
-            Some(b'"') => Ok(Json::Str(self.string()?)),
-            Some(b't') => self.literal("true", Json::Bool(true)),
-            Some(b'f') => self.literal("false", Json::Bool(false)),
-            Some(b'n') => self.literal("null", Json::Null),
+            Some(b'"') => Ok(JVal::Str(self.string()?)),
+            Some(b't') => self.literal("true", JVal::Bool(true)),
+            Some(b'f') => self.literal("false", JVal::Bool(false)),
+            Some(b'n') => self.literal("null", JVal::Null),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             Some(c) => Err(format!("unexpected '{}' at byte {}", c as char, self.i)),
         }
     }
 
-    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+    fn literal(&mut self, word: &str, v: JVal<'a>) -> Result<JVal<'a>, String> {
         if self.b[self.i..].starts_with(word.as_bytes()) {
             self.i += word.len();
             Ok(v)
@@ -113,12 +212,41 @@ impl Parser<'_> {
         }
     }
 
-    fn number(&mut self) -> Result<Json, String> {
+    /// One pass over the digits classifies the number (int vs float,
+    /// sign, magnitude, overflow) so at most one string parse ever runs
+    /// — and only on the float / overflow / malformed fallback path.
+    fn number(&mut self) -> Result<JVal<'a>, String> {
         let start = self.i;
         let mut float = false;
+        // `simple` = optional leading '-' plus digits only; a stray
+        // sign mid-run falls through to the f64 parse, which rejects it
+        // exactly like the old double-parse path did.
+        let mut simple = true;
+        let mut neg = false;
+        let mut digits = 0usize;
+        let mut mag: u64 = 0;
+        let mut overflow = false;
         while let Some(c) = self.peek() {
             match c {
-                b'0'..=b'9' | b'-' | b'+' => self.i += 1,
+                b'0'..=b'9' => {
+                    match mag
+                        .checked_mul(10)
+                        .and_then(|m| m.checked_add((c - b'0') as u64))
+                    {
+                        Some(m) => mag = m,
+                        None => overflow = true,
+                    }
+                    digits += 1;
+                    self.i += 1;
+                }
+                b'-' if self.i == start => {
+                    neg = true;
+                    self.i += 1;
+                }
+                b'-' | b'+' => {
+                    simple = false;
+                    self.i += 1;
+                }
                 b'.' | b'e' | b'E' => {
                     float = true;
                     self.i += 1;
@@ -126,34 +254,54 @@ impl Parser<'_> {
                 _ => break,
             }
         }
-        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
-        if float {
-            text.parse::<f64>()
-                .map(Json::Num)
-                .map_err(|_| format!("bad number {text}"))
-        } else {
-            // i64 first (counters, tickets); huge magnitudes fall back
-            // to f64 like every other JSON reader.
-            match text.parse::<i64>() {
-                Ok(i) => Ok(Json::Int(i)),
-                Err(_) => text
-                    .parse::<f64>()
-                    .map(Json::Num)
-                    .map_err(|_| format!("bad number {text}")),
+        if !float && simple && !overflow && digits > 0 {
+            // In-range integer, already accumulated: no string parse.
+            let limit = if neg { 1u64 << 63 } else { i64::MAX as u64 };
+            if mag <= limit {
+                let i = if neg {
+                    (mag as i64).wrapping_neg()
+                } else {
+                    mag as i64
+                };
+                return Ok(JVal::Int(i));
             }
         }
+        // Floats, huge magnitudes, and malformed runs: one f64 parse,
+        // which also produces the error for garbage like "1-2".
+        let text = &self.s[start..self.i];
+        text.parse::<f64>()
+            .map(JVal::Num)
+            .map_err(|_| format!("bad number {text}"))
     }
 
-    fn string(&mut self) -> Result<String, String> {
+    fn string(&mut self) -> Result<Cow<'a, str>, String> {
         self.eat(b'"')?;
-        let mut out = String::new();
+        let start = self.i;
+        // Fast path: scan to the closing quote; escape-free strings are
+        // borrowed slices of the input (zero-copy). Multibyte UTF-8
+        // bytes are all >= 0x80 and cannot collide with '"' or '\\'.
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => {
+                    let out = &self.s[start..self.i];
+                    self.i += 1;
+                    return Ok(Cow::Borrowed(out));
+                }
+                Some(b'\\') => break,
+                Some(_) => self.i += 1,
+            }
+        }
+        // Slow path: the string contains escapes — copy the clean
+        // prefix, then decode the rest into an owned buffer.
+        let mut out = String::from(&self.s[start..self.i]);
         loop {
             let Some(c) = self.peek() else {
                 return Err("unterminated string".into());
             };
             self.i += 1;
             match c {
-                b'"' => return Ok(out),
+                b'"' => return Ok(Cow::Owned(out)),
                 b'\\' => {
                     let Some(e) = self.peek() else {
                         return Err("unterminated escape".into());
@@ -193,15 +341,10 @@ impl Parser<'_> {
                     }
                 }
                 _ => {
-                    // Re-sync to the char boundary: strings are UTF-8.
-                    let s = &self.b[self.i - 1..];
+                    // Copy one whole character: the input is a `&str`,
+                    // so the width implied by the lead byte is exact.
                     let w = utf8_len(c);
-                    if s.len() < w {
-                        return Err("truncated UTF-8".into());
-                    }
-                    let chunk = std::str::from_utf8(&s[..w])
-                        .map_err(|_| "invalid UTF-8 in string".to_string())?;
-                    out.push_str(chunk);
+                    out.push_str(&self.s[self.i - 1..self.i - 1 + w]);
                     self.i += w - 1;
                 }
             }
@@ -230,13 +373,13 @@ impl Parser<'_> {
         Ok(v)
     }
 
-    fn array(&mut self) -> Result<Json, String> {
+    fn array(&mut self) -> Result<JVal<'a>, String> {
         self.eat(b'[')?;
         let mut out = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.i += 1;
-            return Ok(Json::Arr(out));
+            return Ok(JVal::Arr(out));
         }
         loop {
             self.skip_ws();
@@ -246,20 +389,20 @@ impl Parser<'_> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
-                    return Ok(Json::Arr(out));
+                    return Ok(JVal::Arr(out));
                 }
                 _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
             }
         }
     }
 
-    fn object(&mut self) -> Result<Json, String> {
+    fn object(&mut self) -> Result<JVal<'a>, String> {
         self.eat(b'{')?;
         let mut out = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
-            return Ok(Json::Obj(out));
+            return Ok(JVal::Obj(out));
         }
         loop {
             self.skip_ws();
@@ -274,7 +417,7 @@ impl Parser<'_> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
-                    return Ok(Json::Obj(out));
+                    return Ok(JVal::Obj(out));
                 }
                 _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
             }
@@ -292,7 +435,7 @@ fn utf8_len(first: u8) -> usize {
 }
 
 // ---------------------------------------------------------------------
-// Accessors over parsed documents.
+// Accessors over owned documents (kept for clients/tools/tests).
 // ---------------------------------------------------------------------
 
 /// Field lookup on an object (None for non-objects/missing keys).
@@ -327,102 +470,194 @@ pub fn get_f64(v: &Json, key: &str) -> Option<f64> {
 }
 
 // ---------------------------------------------------------------------
+// Direct-writer primitives (bytes identical to tree rendering).
+// ---------------------------------------------------------------------
+
+/// `,"key":` — keys on this protocol are static ASCII identifiers, so
+/// they never need escaping and the quoted form matches
+/// [`crate::util::json`]'s escaper byte for byte.
+fn push_key(out: &mut String, key: &str) {
+    out.push_str(",\"");
+    out.push_str(key);
+    out.push_str("\":");
+}
+
+fn push_str_field(out: &mut String, key: &str, val: &str) {
+    push_key(out, key);
+    json::write_escaped(out, val);
+}
+
+fn push_int_field(out: &mut String, key: &str, val: i64) {
+    push_key(out, key);
+    let _ = write!(out, "{val}");
+}
+
+fn push_num_field(out: &mut String, key: &str, val: f64) {
+    push_key(out, key);
+    json::write_f64(out, val);
+}
+
+// ---------------------------------------------------------------------
 // Request codec.
 // ---------------------------------------------------------------------
 
-/// Encode one request as a single wire line (no trailing newline).
-pub fn encode_request(req: &Request) -> String {
-    let mut f: Vec<(String, Json)> = Vec::new();
-    let cmd = |c: &str| ("cmd".to_string(), Json::str(c));
+/// Borrowed decode of one request: the server routes straight off this
+/// view, so the function name never round-trips through a `String`.
+enum ReqRef<'a> {
+    Hello {
+        version: u32,
+    },
+    Describe,
+    Invoke {
+        func: &'a str,
+        mode: InvokeMode,
+        deadline_ms: Option<u64>,
+    },
+    Wait {
+        ticket: Ticket,
+        deadline_ms: Option<u64>,
+    },
+    Poll {
+        ticket: Ticket,
+    },
+    Stats,
+    Shutdown,
+}
+
+fn decode_request_ref<'b>(v: &'b JVal<'_>) -> Result<ReqRef<'b>, ApiError> {
+    let bad = |detail: String| ApiError::BadRequest { detail };
+    let cmd = v.get_str("cmd").ok_or_else(|| bad("missing \"cmd\"".into()))?;
+    let ticket = |v: &JVal| -> Result<Ticket, ApiError> {
+        v.get_u64("ticket")
+            .map(Ticket)
+            .ok_or_else(|| bad("missing \"ticket\"".into()))
+    };
+    Ok(match cmd {
+        "hello" => {
+            let version = match v.get("v") {
+                // Absent version ⇒ the client wants whatever is current.
+                None => PROTOCOL_VERSION as u64,
+                // Present but malformed (string, fractional, negative)
+                // must NOT silently negotiate to the default.
+                Some(_) => v.get_u64("v").ok_or_else(|| {
+                    bad("hello: \"v\" must be a non-negative integer".into())
+                })?,
+            };
+            ReqRef::Hello {
+                // Saturate instead of truncating: 2^32+1 must read as
+                // "far future" and be rejected, not wrap to v1.
+                version: u32::try_from(version).unwrap_or(u32::MAX),
+            }
+        }
+        "describe" => ReqRef::Describe,
+        "invoke" => {
+            let func = v
+                .get_str("func")
+                .ok_or_else(|| bad("invoke: missing \"func\"".into()))?;
+            let mode = match v.get_str("mode") {
+                None => InvokeMode::Sync,
+                Some(m) => InvokeMode::parse(m)
+                    .ok_or_else(|| bad(format!("invoke: unknown mode {m}")))?,
+            };
+            ReqRef::Invoke {
+                func,
+                mode,
+                deadline_ms: v.get_u64("deadline_ms"),
+            }
+        }
+        "wait" => ReqRef::Wait {
+            ticket: ticket(v)?,
+            deadline_ms: v.get_u64("deadline_ms"),
+        },
+        "poll" => ReqRef::Poll { ticket: ticket(v)? },
+        "stats" => ReqRef::Stats,
+        "quit" | "shutdown" => ReqRef::Shutdown,
+        other => return Err(bad(format!("unknown command {other}"))),
+    })
+}
+
+/// Encode one request onto `out` as a single wire line (no trailing
+/// newline) — writer-based, no intermediate tree.
+pub fn encode_request_into(req: &Request, out: &mut String) {
+    let cmd = |out: &mut String, c: &str| {
+        out.push_str("{\"cmd\":\"");
+        out.push_str(c);
+        out.push('"');
+    };
     match req {
         Request::Hello { version } => {
-            f.push(cmd("hello"));
-            f.push(("v".into(), Json::Int(*version as i64)));
+            cmd(out, "hello");
+            push_int_field(out, "v", *version as i64);
         }
-        Request::Describe => f.push(cmd("describe")),
+        Request::Describe => cmd(out, "describe"),
         Request::Invoke {
             func,
             mode,
             deadline_ms,
         } => {
-            f.push(cmd("invoke"));
-            f.push(("func".into(), Json::str(func.clone())));
-            f.push(("mode".into(), Json::str(mode.name())));
+            cmd(out, "invoke");
+            push_str_field(out, "func", func);
+            push_str_field(out, "mode", mode.name());
             if let Some(d) = deadline_ms {
-                f.push(("deadline_ms".into(), Json::Int(*d as i64)));
+                push_int_field(out, "deadline_ms", *d as i64);
             }
         }
         Request::Wait {
             ticket,
             deadline_ms,
         } => {
-            f.push(cmd("wait"));
-            f.push(("ticket".into(), Json::Int(ticket.0 as i64)));
+            cmd(out, "wait");
+            push_int_field(out, "ticket", ticket.0 as i64);
             if let Some(d) = deadline_ms {
-                f.push(("deadline_ms".into(), Json::Int(*d as i64)));
+                push_int_field(out, "deadline_ms", *d as i64);
             }
         }
         Request::Poll { ticket } => {
-            f.push(cmd("poll"));
-            f.push(("ticket".into(), Json::Int(ticket.0 as i64)));
+            cmd(out, "poll");
+            push_int_field(out, "ticket", ticket.0 as i64);
         }
-        Request::Stats => f.push(cmd("stats")),
-        Request::Shutdown => f.push(cmd("quit")),
+        Request::Stats => cmd(out, "stats"),
+        Request::Shutdown => cmd(out, "quit"),
     }
-    Json::Obj(f).render_compact()
+    out.push('}');
 }
 
-/// Decode one v1 request line (must start with `{`).
+/// Encode one request as a single wire line (no trailing newline).
+pub fn encode_request(req: &Request) -> String {
+    let mut out = String::new();
+    encode_request_into(req, &mut out);
+    out
+}
+
+/// Decode one v1 request line (must start with `{`) into the owned
+/// [`Request`]. The server's own loop uses the borrowed decode and
+/// never materializes this form.
 pub fn decode_request(line: &str) -> Result<Request, ApiError> {
-    let bad = |detail: String| ApiError::BadRequest { detail };
-    let v = parse_json(line).map_err(|e| bad(format!("bad JSON: {e}")))?;
-    let cmd = get_str(&v, "cmd").ok_or_else(|| bad("missing \"cmd\"".into()))?;
-    let ticket = |v: &Json| -> Result<Ticket, ApiError> {
-        get_u64(v, "ticket")
-            .map(Ticket)
-            .ok_or_else(|| bad("missing \"ticket\"".into()))
-    };
-    Ok(match cmd {
-        "hello" => {
-            let version = match get(&v, "v") {
-                // Absent version ⇒ the client wants whatever is current.
-                None => PROTOCOL_VERSION as u64,
-                // Present but malformed (string, fractional, negative)
-                // must NOT silently negotiate to the default.
-                Some(_) => get_u64(&v, "v").ok_or_else(|| {
-                    bad("hello: \"v\" must be a non-negative integer".into())
-                })?,
-            };
-            Request::Hello {
-                // Saturate instead of truncating: 2^32+1 must read as
-                // "far future" and be rejected, not wrap to v1.
-                version: u32::try_from(version).unwrap_or(u32::MAX),
-            }
-        }
-        "describe" => Request::Describe,
-        "invoke" => {
-            let func = get_str(&v, "func")
-                .ok_or_else(|| bad("invoke: missing \"func\"".into()))?
-                .to_string();
-            let mode = match get_str(&v, "mode") {
-                None => InvokeMode::Sync,
-                Some(m) => InvokeMode::parse(m)
-                    .ok_or_else(|| bad(format!("invoke: unknown mode {m}")))?,
-            };
-            Request::Invoke {
-                func,
-                mode,
-                deadline_ms: get_u64(&v, "deadline_ms"),
-            }
-        }
-        "wait" => Request::Wait {
-            ticket: ticket(&v)?,
-            deadline_ms: get_u64(&v, "deadline_ms"),
+    let v = parse_jval(line).map_err(|e| ApiError::BadRequest {
+        detail: format!("bad JSON: {e}"),
+    })?;
+    Ok(match decode_request_ref(&v)? {
+        ReqRef::Hello { version } => Request::Hello { version },
+        ReqRef::Describe => Request::Describe,
+        ReqRef::Invoke {
+            func,
+            mode,
+            deadline_ms,
+        } => Request::Invoke {
+            func: func.to_string(),
+            mode,
+            deadline_ms,
         },
-        "poll" => Request::Poll { ticket: ticket(&v)? },
-        "stats" => Request::Stats,
-        "quit" | "shutdown" => Request::Shutdown,
-        other => return Err(bad(format!("unknown command {other}"))),
+        ReqRef::Wait {
+            ticket,
+            deadline_ms,
+        } => Request::Wait {
+            ticket,
+            deadline_ms,
+        },
+        ReqRef::Poll { ticket } => Request::Poll { ticket },
+        ReqRef::Stats => Request::Stats,
+        ReqRef::Shutdown => Request::Shutdown,
     })
 }
 
@@ -430,106 +665,122 @@ pub fn decode_request(line: &str) -> Result<Request, ApiError> {
 // Response codec.
 // ---------------------------------------------------------------------
 
-/// Encode one response as a single wire line (no trailing newline).
-pub fn encode_response(resp: &Response) -> String {
-    let mut f: Vec<(String, Json)> = vec![(
-        "ok".into(),
-        Json::Bool(!matches!(resp, Response::Error(_))),
-    )];
-    let ty = |t: &str| ("type".to_string(), Json::str(t));
+/// Encode one response onto `out` as a single wire line (no trailing
+/// newline). Writer-based: field order and bytes are identical to the
+/// old `Json::Obj` tree rendering (pinned by a test), with zero
+/// intermediate allocation.
+pub fn encode_response_into(resp: &Response, out: &mut String) {
+    out.push_str(if matches!(resp, Response::Error(_)) {
+        "{\"ok\":false"
+    } else {
+        "{\"ok\":true"
+    });
     match resp {
         Response::Hello { proto, server } => {
-            f.push(ty("hello"));
-            f.push(("proto".into(), Json::Int(*proto as i64)));
-            f.push(("server".into(), Json::str(server.clone())));
+            push_str_field(out, "type", "hello");
+            push_int_field(out, "proto", *proto as i64);
+            push_str_field(out, "server", server);
         }
         Response::Described(d) => {
-            f.push(ty("describe"));
-            f.push(("proto".into(), Json::Int(d.proto as i64)));
-            f.push(("server".into(), Json::str(d.server.clone())));
-            f.push(("policy".into(), Json::str(d.policy.clone())));
-            f.push(("shards".into(), Json::Int(d.shards as i64)));
-            f.push(("router".into(), Json::str(d.router.clone())));
-            f.push((
-                "functions".into(),
-                Json::Arr(d.functions.iter().map(|name| Json::str(name.clone())).collect()),
-            ));
+            push_str_field(out, "type", "describe");
+            push_int_field(out, "proto", d.proto as i64);
+            push_str_field(out, "server", &d.server);
+            push_str_field(out, "policy", &d.policy);
+            push_int_field(out, "shards", d.shards as i64);
+            push_str_field(out, "router", &d.router);
+            push_key(out, "functions");
+            out.push('[');
+            for (i, name) in d.functions.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                json::write_escaped(out, name);
+            }
+            out.push(']');
         }
         Response::Accepted { ticket } => {
-            f.push(ty("ticket"));
-            f.push(("ticket".into(), Json::Int(ticket.0 as i64)));
+            push_str_field(out, "type", "ticket");
+            push_int_field(out, "ticket", ticket.0 as i64);
         }
         Response::Done(o) => {
-            f.push(ty("done"));
-            f.push(("ticket".into(), Json::Int(o.ticket.0 as i64)));
-            f.push(("func".into(), Json::str(o.func.clone())));
-            f.push(("shard".into(), Json::Int(o.shard as i64)));
-            f.push(("gpu".into(), Json::Int(o.gpu as i64)));
-            f.push(("start".into(), Json::str(o.start_kind.to_string())));
-            f.push(("latency_ms".into(), Json::Num(o.latency_ms)));
-            f.push(("exec_ms".into(), Json::Num(o.exec_ms)));
+            push_str_field(out, "type", "done");
+            push_int_field(out, "ticket", o.ticket.0 as i64);
+            push_str_field(out, "func", &o.func);
+            push_int_field(out, "shard", o.shard as i64);
+            push_int_field(out, "gpu", o.gpu as i64);
+            push_key(out, "start");
+            let _ = write!(out, "\"{}\"", o.start_kind);
+            push_num_field(out, "latency_ms", o.latency_ms);
+            push_num_field(out, "exec_ms", o.exec_ms);
         }
         Response::Pending { ticket } => {
-            f.push(ty("pending"));
-            f.push(("ticket".into(), Json::Int(ticket.0 as i64)));
+            push_str_field(out, "type", "pending");
+            push_int_field(out, "ticket", ticket.0 as i64);
         }
         Response::Stats(s) => {
-            f.push(ty("stats"));
-            f.push(("invocations".into(), Json::Int(s.invocations as i64)));
-            f.push(("mean_latency_ms".into(), Json::Num(s.mean_latency_ms)));
-            f.push(("cold_ratio".into(), Json::Num(s.cold_ratio)));
-            f.push(("pending".into(), Json::Int(s.pending as i64)));
-            f.push(("in_flight".into(), Json::Int(s.in_flight as i64)));
+            push_str_field(out, "type", "stats");
+            push_int_field(out, "invocations", s.invocations as i64);
+            push_num_field(out, "mean_latency_ms", s.mean_latency_ms);
+            push_num_field(out, "cold_ratio", s.cold_ratio);
+            push_int_field(out, "pending", s.pending as i64);
+            push_int_field(out, "in_flight", s.in_flight as i64);
         }
-        Response::Bye => f.push(ty("bye")),
+        Response::Bye => push_str_field(out, "type", "bye"),
         Response::Error(e) => {
-            f.push(ty("error"));
-            f.push(("error".into(), Json::str(e.code())));
-            f.push(("detail".into(), Json::str(e.detail())));
+            push_str_field(out, "type", "error");
+            push_str_field(out, "error", e.code());
+            push_str_field(out, "detail", &e.detail());
             // Deadline-tripped work keeps running: surface its ticket
             // as a structured field so clients can redeem it later.
             if let ApiError::DeadlineExceeded {
                 ticket: Some(t), ..
             } = e
             {
-                f.push(("ticket".into(), Json::Int(t.0 as i64)));
+                push_int_field(out, "ticket", t.0 as i64);
             }
         }
     }
-    Json::Obj(f).render_compact()
+    out.push('}');
+}
+
+/// Encode one response as a single wire line (no trailing newline).
+pub fn encode_response(resp: &Response) -> String {
+    let mut out = String::new();
+    encode_response_into(resp, &mut out);
+    out
 }
 
 /// Decode one response line (client side).
 pub fn decode_response(line: &str) -> Result<Response, String> {
-    let v = parse_json(line)?;
-    if let Some(Json::Bool(false)) = get(&v, "ok") {
-        let code = get_str(&v, "error").unwrap_or("bad-request");
-        let detail = get_str(&v, "detail").unwrap_or("");
+    let v = parse_jval(line)?;
+    if let Some(JVal::Bool(false)) = v.get("ok") {
+        let code = v.get_str("error").unwrap_or("bad-request");
+        let detail = v.get_str("detail").unwrap_or("");
         let mut err = ApiError::from_wire(code, detail);
         // Structured extra: the still-running invocation's ticket.
         if let ApiError::DeadlineExceeded { ticket, .. } = &mut err {
-            *ticket = get_u64(&v, "ticket").map(Ticket);
+            *ticket = v.get_u64("ticket").map(Ticket);
         }
         return Ok(Response::Error(err));
     }
-    let ty = get_str(&v, "type").ok_or("missing \"type\"")?;
-    let ticket = |v: &Json| get_u64(v, "ticket").map(Ticket).ok_or("missing \"ticket\"");
+    let ty = v.get_str("type").ok_or("missing \"type\"")?;
+    let ticket = |v: &JVal| v.get_u64("ticket").map(Ticket).ok_or("missing \"ticket\"");
     Ok(match ty {
         "hello" => Response::Hello {
-            proto: get_u64(&v, "proto").ok_or("missing \"proto\"")? as u32,
-            server: get_str(&v, "server").unwrap_or("").to_string(),
+            proto: v.get_u64("proto").ok_or("missing \"proto\"")? as u32,
+            server: v.get_str("server").unwrap_or("").to_string(),
         },
         "describe" => Response::Described(DescribeInfo {
-            proto: get_u64(&v, "proto").ok_or("missing \"proto\"")? as u32,
-            server: get_str(&v, "server").unwrap_or("").to_string(),
-            policy: get_str(&v, "policy").unwrap_or("").to_string(),
-            shards: get_u64(&v, "shards").unwrap_or(1) as usize,
-            router: get_str(&v, "router").unwrap_or("").to_string(),
-            functions: match get(&v, "functions") {
-                Some(Json::Arr(xs)) => xs
+            proto: v.get_u64("proto").ok_or("missing \"proto\"")? as u32,
+            server: v.get_str("server").unwrap_or("").to_string(),
+            policy: v.get_str("policy").unwrap_or("").to_string(),
+            shards: v.get_u64("shards").unwrap_or(1) as usize,
+            router: v.get_str("router").unwrap_or("").to_string(),
+            functions: match v.get("functions") {
+                Some(JVal::Arr(xs)) => xs
                     .iter()
                     .filter_map(|x| match x {
-                        Json::Str(s) => Some(s.clone()),
+                        JVal::Str(s) => Some(s.as_ref().to_string()),
                         _ => None,
                     })
                     .collect(),
@@ -539,22 +790,23 @@ pub fn decode_response(line: &str) -> Result<Response, String> {
         "ticket" => Response::Accepted { ticket: ticket(&v)? },
         "done" => Response::Done(InvokeOutcome {
             ticket: ticket(&v)?,
-            func: get_str(&v, "func").unwrap_or("").to_string(),
-            shard: get_u64(&v, "shard").unwrap_or(0) as usize,
-            gpu: get_u64(&v, "gpu").unwrap_or(0) as u32,
-            start_kind: get_str(&v, "start")
+            func: v.get_str("func").unwrap_or("").to_string(),
+            shard: v.get_u64("shard").unwrap_or(0) as usize,
+            gpu: v.get_u64("gpu").unwrap_or(0) as u32,
+            start_kind: v
+                .get_str("start")
                 .and_then(StartKind::parse)
                 .ok_or("bad \"start\"")?,
-            latency_ms: get_f64(&v, "latency_ms").ok_or("missing \"latency_ms\"")?,
-            exec_ms: get_f64(&v, "exec_ms").unwrap_or(0.0),
+            latency_ms: v.get_f64("latency_ms").ok_or("missing \"latency_ms\"")?,
+            exec_ms: v.get_f64("exec_ms").unwrap_or(0.0),
         }),
         "pending" => Response::Pending { ticket: ticket(&v)? },
         "stats" => Response::Stats(StatsSnapshot {
-            invocations: get_u64(&v, "invocations").unwrap_or(0) as usize,
-            mean_latency_ms: get_f64(&v, "mean_latency_ms").unwrap_or(0.0),
-            cold_ratio: get_f64(&v, "cold_ratio").unwrap_or(0.0),
-            pending: get_u64(&v, "pending").unwrap_or(0) as usize,
-            in_flight: get_u64(&v, "in_flight").unwrap_or(0) as usize,
+            invocations: v.get_u64("invocations").unwrap_or(0) as usize,
+            mean_latency_ms: v.get_f64("mean_latency_ms").unwrap_or(0.0),
+            cold_ratio: v.get_f64("cold_ratio").unwrap_or(0.0),
+            pending: v.get_u64("pending").unwrap_or(0) as usize,
+            in_flight: v.get_u64("in_flight").unwrap_or(0) as usize,
         }),
         "bye" => Response::Bye,
         other => return Err(format!("unknown response type {other}")),
@@ -569,25 +821,37 @@ pub fn decode_response(line: &str) -> Result<Response, String> {
 /// the stream errors. Shared by [`crate::server::RtServer`] and
 /// [`crate::server::RtCluster`] — the protocol never sees which one it
 /// is talking to, only the [`Frontend`] contract.
+///
+/// One read buffer and one write buffer live for the whole connection;
+/// in steady state the loop performs no per-request allocation beyond
+/// what the frontend's own reply values need.
 pub fn serve_connection(frontend: &dyn Frontend, stream: TcpStream) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        let line = line.trim();
-        if line.is_empty() {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::with_capacity(256);
+    let mut out = String::with_capacity(256);
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        let req = line.trim();
+        if req.is_empty() {
             continue;
         }
-        let (reply, close) = if line.starts_with('{') {
-            handle_v1(frontend, line)
+        out.clear();
+        let close = if req.starts_with('{') {
+            handle_v1(frontend, req, &mut out)
         } else {
-            handle_legacy(frontend, line)
+            handle_legacy(frontend, req, &mut out)
         };
-        if let Some(reply) = reply {
-            if writer.write_all((reply + "\n").as_bytes()).is_err() {
+        if !out.is_empty() {
+            out.push('\n');
+            if writer.write_all(out.as_bytes()).is_err() {
                 break;
             }
         }
@@ -602,11 +866,21 @@ fn deadline(ms: Option<u64>) -> Option<Duration> {
     ms.map(Duration::from_millis)
 }
 
-fn handle_v1(frontend: &dyn Frontend, line: &str) -> (Option<String>, bool) {
-    let resp = match decode_request(line) {
+/// Handle one v1 line, appending the reply to `out`. Returns whether
+/// the connection should close. Decodes through the borrowed view, so
+/// the hot invoke path hands `func` to the frontend without copying it.
+fn handle_v1(frontend: &dyn Frontend, line: &str, out: &mut String) -> bool {
+    let parsed = parse_jval(line).map_err(|e| ApiError::BadRequest {
+        detail: format!("bad JSON: {e}"),
+    });
+    let req = match &parsed {
+        Err(e) => Err(e.clone()),
+        Ok(v) => decode_request_ref(v),
+    };
+    let resp = match req {
         Err(e) => Response::Error(e),
         Ok(req) => match req {
-            Request::Hello { version } => {
+            ReqRef::Hello { version } => {
                 if version == 0 || version > PROTOCOL_VERSION {
                     Response::Error(ApiError::UnsupportedVersion {
                         requested: version,
@@ -619,12 +893,12 @@ fn handle_v1(frontend: &dyn Frontend, line: &str) -> (Option<String>, bool) {
                     }
                 }
             }
-            Request::Describe => Response::Described(frontend.describe()),
-            Request::Invoke {
+            ReqRef::Describe => Response::Described(frontend.describe()),
+            ReqRef::Invoke {
                 func,
                 mode,
                 deadline_ms,
-            } => match frontend.submit(&func) {
+            } => match frontend.submit(func) {
                 Err(e) => Response::Error(e),
                 Ok(ticket) => match mode {
                     InvokeMode::Async => Response::Accepted { ticket },
@@ -636,54 +910,68 @@ fn handle_v1(frontend: &dyn Frontend, line: &str) -> (Option<String>, bool) {
                     }
                 },
             },
-            Request::Wait {
+            ReqRef::Wait {
                 ticket,
                 deadline_ms,
             } => match frontend.wait(ticket, deadline(deadline_ms)) {
                 Ok(o) => Response::Done(o),
                 Err(e) => Response::Error(e),
             },
-            Request::Poll { ticket } => match frontend.poll(ticket) {
+            ReqRef::Poll { ticket } => match frontend.poll(ticket) {
                 Ok(Some(o)) => Response::Done(o),
                 Ok(None) => Response::Pending { ticket },
                 Err(e) => Response::Error(e),
             },
-            Request::Stats => Response::Stats(frontend.stats()),
-            Request::Shutdown => {
-                return (Some(encode_response(&Response::Bye)), true)
+            ReqRef::Stats => Response::Stats(frontend.stats()),
+            ReqRef::Shutdown => {
+                encode_response_into(&Response::Bye, out);
+                return true;
             }
         },
     };
-    (Some(encode_response(&resp)), false)
+    encode_response_into(&resp, out);
+    false
 }
 
 /// Legacy aliases: the pre-v1 word protocol, answered in its original
 /// reply format (scripts from before the redesign keep working).
-fn handle_legacy(frontend: &dyn Frontend, line: &str) -> (Option<String>, bool) {
+/// Appends the reply to `out` (nothing for `quit`); returns whether the
+/// connection should close.
+fn handle_legacy(frontend: &dyn Frontend, line: &str, out: &mut String) -> bool {
     let mut parts = line.split_whitespace();
-    let reply = match parts.next() {
+    match parts.next() {
         Some("invoke") => match parts.next() {
-            None => "err unknown function".to_string(),
+            None => out.push_str("err unknown function"),
             Some(name) => match frontend.invoke(name, None) {
-                Ok(o) => format!(
-                    "ok {:.1} {:.1} {} gpu{}",
-                    o.latency_ms, o.exec_ms, o.start_kind, o.gpu
-                ),
-                Err(ApiError::UnknownFunction { .. }) => "err unknown function".into(),
-                Err(e) => format!("err {}", e.code()),
+                Ok(o) => {
+                    let _ = write!(
+                        out,
+                        "ok {:.1} {:.1} {} gpu{}",
+                        o.latency_ms, o.exec_ms, o.start_kind, o.gpu
+                    );
+                }
+                Err(ApiError::UnknownFunction { .. }) => {
+                    out.push_str("err unknown function")
+                }
+                Err(e) => {
+                    let _ = write!(out, "err {}", e.code());
+                }
             },
         },
         Some("stats") => {
             let s = frontend.stats();
-            format!(
+            let _ = write!(
+                out,
                 "ok invocations={} mean_latency_ms={:.1} cold_ratio={:.3}",
                 s.invocations, s.mean_latency_ms, s.cold_ratio
-            )
+            );
         }
-        Some("quit") | None => return (None, true),
-        Some(other) => format!("err unknown command {other}"),
-    };
-    (Some(reply), false)
+        Some("quit") | None => return true,
+        Some(other) => {
+            let _ = write!(out, "err unknown command {other}");
+        }
+    }
+    false
 }
 
 #[cfg(test)]
@@ -727,6 +1015,58 @@ mod tests {
         assert_eq!(get_str(&v, "u"), Some("é€"));
         assert_eq!(get_str(&v, "sp"), Some("😀"));
         assert_eq!(get_str(&v, "t"), Some("\t"));
+    }
+
+    #[test]
+    fn borrowed_parse_borrows_escape_free_strings() {
+        // The zero-copy contract: strings without escapes are slices of
+        // the input line; escaped strings (and escaped keys) decode to
+        // owned buffers with identical contents.
+        let line = r#"{"cmd":"invoke","func":"fft-0","note":"a\nb","sp":"😀"}"#;
+        let v = parse_jval(line).unwrap();
+        assert!(matches!(v.get("cmd"), Some(JVal::Str(Cow::Borrowed("invoke")))));
+        assert!(matches!(v.get("func"), Some(JVal::Str(Cow::Borrowed("fft-0")))));
+        assert!(matches!(v.get("sp"), Some(JVal::Str(Cow::Borrowed("😀")))));
+        assert!(matches!(v.get("note"), Some(JVal::Str(Cow::Owned(_)))));
+        assert_eq!(v.get_str("note"), Some("a\nb"));
+        // Escapes mid-string keep the clean prefix + suffix intact.
+        let v = parse_jval(r#"{"s":"pre\t💠post"}"#).unwrap();
+        assert_eq!(v.get_str("s"), Some("pre\t💠post"));
+    }
+
+    #[test]
+    fn number_scanner_classifies_in_one_pass() {
+        // Integers in range (including both extremes) decode as Int.
+        for (text, want) in [
+            ("0", 0i64),
+            ("42", 42),
+            ("-7", -7),
+            ("9223372036854775807", i64::MAX),
+            ("-9223372036854775808", i64::MIN),
+            ("0123", 123), // leniency preserved from the old reader
+        ] {
+            match parse_jval(text).unwrap() {
+                JVal::Int(i) => assert_eq!(i, want, "{text}"),
+                other => panic!("{text} decoded as {other:?}"),
+            }
+        }
+        // Floats, exponents, and i64-overflowing magnitudes are Num.
+        for (text, want) in [
+            ("1.5", 1.5f64),
+            ("-2.25", -2.25),
+            ("1e3", 1000.0),
+            ("9223372036854775808", 9.223372036854776e18),
+            ("-9223372036854775809", -9.223372036854776e18),
+        ] {
+            match parse_jval(text).unwrap() {
+                JVal::Num(x) => assert!((x - want).abs() <= want.abs() * 1e-12, "{text}"),
+                other => panic!("{text} decoded as {other:?}"),
+            }
+        }
+        // Garbage digit runs still error (via the single fallback parse).
+        for bad in ["1-2", "--5", "5+3", "1.2.3", "1ee5"] {
+            assert!(parse_jval(bad).is_err(), "{bad} should be rejected");
+        }
     }
 
     #[test]
@@ -870,6 +1210,74 @@ mod tests {
             assert!(!line.contains('\n'));
             assert_eq!(decode_response(&line).unwrap(), resp, "{line}");
         }
+    }
+
+    #[test]
+    fn direct_writers_match_tree_rendering_byte_for_byte() {
+        // The writer-based encoders replaced `Json::Obj` construction;
+        // the wire bytes must not have moved. Rebuild the old trees
+        // here and compare.
+        let done = Response::Done(InvokeOutcome {
+            ticket: Ticket(12),
+            func: "fft-0".into(),
+            shard: 3,
+            gpu: 1,
+            start_kind: StartKind::Cold,
+            latency_ms: 412.0,
+            exec_ms: 9.125,
+        });
+        let done_tree = Json::Obj(vec![
+            ("ok".into(), Json::Bool(true)),
+            ("type".into(), Json::str("done")),
+            ("ticket".into(), Json::Int(12)),
+            ("func".into(), Json::str("fft-0")),
+            ("shard".into(), Json::Int(3)),
+            ("gpu".into(), Json::Int(1)),
+            ("start".into(), Json::str("cold")),
+            ("latency_ms".into(), Json::Num(412.0)),
+            ("exec_ms".into(), Json::Num(9.125)),
+        ]);
+        assert_eq!(encode_response(&done), done_tree.render_compact());
+
+        let stats = Response::Stats(StatsSnapshot {
+            invocations: 7,
+            mean_latency_ms: 3.5,
+            cold_ratio: 0.25,
+            pending: 2,
+            in_flight: 1,
+        });
+        let stats_tree = Json::Obj(vec![
+            ("ok".into(), Json::Bool(true)),
+            ("type".into(), Json::str("stats")),
+            ("invocations".into(), Json::Int(7)),
+            ("mean_latency_ms".into(), Json::Num(3.5)),
+            ("cold_ratio".into(), Json::Num(0.25)),
+            ("pending".into(), Json::Int(2)),
+            ("in_flight".into(), Json::Int(1)),
+        ]);
+        assert_eq!(encode_response(&stats), stats_tree.render_compact());
+
+        let err = Response::Error(ApiError::UnknownFunction { name: "gh\"ost".into() });
+        let err_tree = Json::Obj(vec![
+            ("ok".into(), Json::Bool(false)),
+            ("type".into(), Json::str("error")),
+            ("error".into(), Json::str("unknown-function")),
+            ("detail".into(), Json::str("gh\"ost")),
+        ]);
+        assert_eq!(encode_response(&err), err_tree.render_compact());
+
+        let req = Request::Invoke {
+            func: "fft-0".into(),
+            mode: InvokeMode::Sync,
+            deadline_ms: Some(5000),
+        };
+        let req_tree = Json::Obj(vec![
+            ("cmd".into(), Json::str("invoke")),
+            ("func".into(), Json::str("fft-0")),
+            ("mode".into(), Json::str("sync")),
+            ("deadline_ms".into(), Json::Int(5000)),
+        ]);
+        assert_eq!(encode_request(&req), req_tree.render_compact());
     }
 
     #[test]

@@ -99,13 +99,15 @@ USAGE:
               uniform vs mixed shard hardware x router, BENCH_hetero.json
   mqfq-sticky serve [--addr HOST:PORT] [--artifacts DIR] [--scale X]
         [--shards N] [--router rr|random|least|sticky|sticky-blind]
-        [--load-factor F] [--seed K] [--max-pending N]
+        [--load-factor F] [--seed K] [--max-pending N] [--workers W]
         [+ plane options incl. --policy/--d/--fleet]
               real-traffic TCP serving: protocol v1 (JSON lines, hello
               handshake, sync/async invoke tickets, deadlines; legacy
               `invoke <fn>`|`stats`|`quit` lines kept as aliases).
               --shards >1 (or --router) serves an RtCluster: N control
               planes behind the live capacity-weighted router.
+              --workers sizes the fixed per-shard executor pool (thread
+              count is shards x workers + 1 timer, independent of load).
   mqfq-sticky invoke <fn> [--addr HOST:PORT] [--mode sync|async]
         [--deadline-ms D] [--n N]        protocol-v1 client: run N
               invocations against a running `serve`, print outcomes
@@ -425,6 +427,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let scale = args.get_f64("scale", 0.02)?;
     let artifacts = args.get("artifacts").map(std::path::Path::new);
     let max_pending = args.get_usize("max-pending", 0)?; // 0 = unlimited
+    let workers = args.get_usize("workers", crate::server::DEFAULT_WORKERS)?;
+    if workers == 0 {
+        return Err("serve: --workers must be >= 1".into());
+    }
     // Default demo workload: one copy of each catalog function.
     let mut w = crate::workload::Workload::default();
     for class in crate::workload::catalog::CATALOG {
@@ -439,8 +445,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         args.get_usize("shards", 1)? > 1 || args.get("router").is_some();
     let local = if clustered {
         let cfg = cluster_config(args)?;
-        let srv = crate::server::RtCluster::new(w, cfg.clone(), artifacts, scale)
-            .map_err(|e| format!("starting cluster server: {e}"))?;
+        let srv =
+            crate::server::RtCluster::with_workers(w, cfg.clone(), artifacts, scale, workers)
+                .map_err(|e| format!("starting cluster server: {e}"))?;
         if max_pending > 0 {
             srv.set_max_pending(max_pending);
         }
@@ -455,7 +462,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         local
     } else {
         let cfg = plane_config(args)?;
-        let srv = crate::server::RtServer::new(w, cfg, artifacts, scale)
+        let srv = crate::server::RtServer::with_workers(w, cfg, artifacts, scale, workers)
             .map_err(|e| format!("starting server: {e}"))?;
         if max_pending > 0 {
             srv.set_max_pending(max_pending);

@@ -29,6 +29,21 @@
 //! Every router is deterministic given its construction seed, which is
 //! what makes multi-shard replays reproducible (see
 //! [`crate::sim::replay_cluster`]).
+//!
+//! # Concurrency
+//!
+//! [`Router::route`] takes `&self`: the wall-clock serving path
+//! ([`crate::server`]) routes concurrent submits without an exclusive
+//! lock, so router-internal state is interior-mutable — an atomic
+//! cursor for [`RoundRobin`], an atomic spill counter for [`StickyCh`]
+//! (whose ring is immutable after construction), and a small mutex
+//! around [`Random`]'s generator (the only truly sequential state).
+//! Under a single caller (the sim engine) the call sequence — and
+//! therefore the decision stream — is bit-identical to the old
+//! `&mut self` design.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::types::FuncId;
 use crate::util::rng::{Rng, SplitMix64};
@@ -67,13 +82,14 @@ impl ShardLoad {
 ///
 /// Routers see only front-end state (per-shard queue depths) — never
 /// shard internals — mirroring what a real load balancer can observe
-/// cheaply. They may keep mutable state (round-robin cursor, RNG), but
-/// must be deterministic for a fixed seed and call sequence.
-pub trait Router: Send {
+/// cheaply. They may keep mutable state (round-robin cursor, RNG)
+/// behind interior mutability, but must be deterministic for a fixed
+/// seed and call sequence.
+pub trait Router: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Shard index in `0..loads.len()` for the next invocation of `func`.
-    fn route(&mut self, func: FuncId, loads: &[ShardLoad]) -> usize;
+    fn route(&self, func: FuncId, loads: &[ShardLoad]) -> usize;
 
     /// Invocations routed off their locality-preferred shard (only
     /// meaningful for [`StickyCh`]; 0 for load-blind routers).
@@ -144,9 +160,11 @@ impl RouterKind {
             "capacities must be empty or one per shard"
         );
         match self {
-            RouterKind::RoundRobin => Box::new(RoundRobin { next: 0 }),
+            RouterKind::RoundRobin => Box::new(RoundRobin {
+                next: AtomicUsize::new(0),
+            }),
             RouterKind::Random => Box::new(Random {
-                rng: Rng::new(seed ^ 0x5A5A_0001),
+                rng: Mutex::new(Rng::new(seed ^ 0x5A5A_0001)),
             }),
             RouterKind::LeastLoaded => Box::new(LeastLoaded),
             RouterKind::StickyCh => Box::new(StickyCh::weighted(
@@ -164,9 +182,10 @@ impl RouterKind {
     }
 }
 
-/// Cycle through shards regardless of function or load.
+/// Cycle through shards regardless of function or load. The cursor is
+/// a lone atomic, so concurrent submitters cycle without locking.
 pub struct RoundRobin {
-    next: usize,
+    next: AtomicUsize,
 }
 
 impl Router for RoundRobin {
@@ -174,16 +193,16 @@ impl Router for RoundRobin {
         "round-robin"
     }
 
-    fn route(&mut self, _func: FuncId, loads: &[ShardLoad]) -> usize {
-        let s = self.next % loads.len();
-        self.next = self.next.wrapping_add(1);
-        s
+    fn route(&self, _func: FuncId, loads: &[ShardLoad]) -> usize {
+        self.next.fetch_add(1, Ordering::Relaxed) % loads.len()
     }
 }
 
-/// Uniform random shard (seeded, deterministic).
+/// Uniform random shard (seeded, deterministic). The xoshiro state is
+/// inherently sequential, so it sits behind a short mutex — the spray
+/// baseline, not the production router.
 pub struct Random {
-    rng: Rng,
+    rng: Mutex<Rng>,
 }
 
 impl Router for Random {
@@ -191,8 +210,8 @@ impl Router for Random {
         "random"
     }
 
-    fn route(&mut self, _func: FuncId, loads: &[ShardLoad]) -> usize {
-        self.rng.below(loads.len())
+    fn route(&self, _func: FuncId, loads: &[ShardLoad]) -> usize {
+        self.rng.lock().unwrap().below(loads.len())
     }
 }
 
@@ -206,7 +225,7 @@ impl Router for LeastLoaded {
         "least-loaded"
     }
 
-    fn route(&mut self, _func: FuncId, loads: &[ShardLoad]) -> usize {
+    fn route(&self, _func: FuncId, loads: &[ShardLoad]) -> usize {
         let mut best = 0;
         for (s, l) in loads.iter().enumerate().skip(1) {
             // depth/capacity comparison, cross-multiplied so equal
@@ -260,7 +279,9 @@ pub struct StickyCh {
     /// capacity-ignoring ablation).
     name: &'static str,
     /// Spills observed (diagnostics; exposed via [`StickyCh::spills`]).
-    spills: u64,
+    /// Atomic so concurrent routes only touch the counter, never a lock
+    /// — the ring itself is immutable after construction.
+    spills: AtomicU64,
 }
 
 impl StickyCh {
@@ -336,7 +357,7 @@ impl StickyCh {
             load_factor,
             shares,
             name: "sticky-ch",
-            spills: 0,
+            spills: AtomicU64::new(0),
         }
     }
 
@@ -361,10 +382,10 @@ impl Router for StickyCh {
     }
 
     fn spills(&self) -> u64 {
-        self.spills
+        self.spills.load(Ordering::Relaxed)
     }
 
-    fn route(&mut self, func: FuncId, loads: &[ShardLoad]) -> usize {
+    fn route(&self, func: FuncId, loads: &[ShardLoad]) -> usize {
         debug_assert_eq!(loads.len(), self.n_shards);
         let (start, home) = self.ring_start(func);
         let total: usize = loads.iter().map(|l| l.depth()).sum();
@@ -383,7 +404,7 @@ impl Router for StickyCh {
             let bound = (budget * self.shares[shard]).ceil();
             if (loads[shard].depth() as f64) < bound {
                 if shard != home {
-                    self.spills += 1;
+                    self.spills.fetch_add(1, Ordering::Relaxed);
                 }
                 return shard;
             }
@@ -428,7 +449,7 @@ mod tests {
 
     #[test]
     fn round_robin_cycles() {
-        let mut r = RouterKind::RoundRobin.build(3, 1.25, 0, &[]);
+        let r = RouterKind::RoundRobin.build(3, 1.25, 0, &[]);
         let l = loads(&[0, 0, 0]);
         let picks: Vec<usize> = (0..6).map(|_| r.route(FuncId(0), &l)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
@@ -437,8 +458,8 @@ mod tests {
     #[test]
     fn random_is_deterministic_and_in_range() {
         let l = loads(&[0; 5]);
-        let mut a = RouterKind::Random.build(5, 1.25, 9, &[]);
-        let mut b = RouterKind::Random.build(5, 1.25, 9, &[]);
+        let a = RouterKind::Random.build(5, 1.25, 9, &[]);
+        let b = RouterKind::Random.build(5, 1.25, 9, &[]);
         for i in 0..100 {
             let pa = a.route(FuncId(i), &l);
             assert_eq!(pa, b.route(FuncId(i), &l));
@@ -448,14 +469,14 @@ mod tests {
 
     #[test]
     fn least_loaded_picks_min_with_low_index_ties() {
-        let mut r = RouterKind::LeastLoaded.build(4, 1.25, 0, &[]);
+        let r = RouterKind::LeastLoaded.build(4, 1.25, 0, &[]);
         assert_eq!(r.route(FuncId(0), &loads(&[3, 1, 2, 1])), 1);
         assert_eq!(r.route(FuncId(0), &loads(&[0, 0, 0, 0])), 0);
     }
 
     #[test]
     fn least_loaded_normalizes_by_capacity() {
-        let mut r = RouterKind::LeastLoaded.build(2, 1.25, 0, &[]);
+        let r = RouterKind::LeastLoaded.build(2, 1.25, 0, &[]);
         // Depth 4 on a 4×-capacity shard (norm 1.0) beats depth 2 on a
         // 1× shard (norm 2.0).
         assert_eq!(r.route(FuncId(0), &loads_cap(&[(2, 1.0), (4, 4.0)])), 1);
@@ -480,7 +501,7 @@ mod tests {
 
     #[test]
     fn sticky_routes_home_when_under_capacity() {
-        let mut s = StickyCh::new(4, 2.0, 3);
+        let s = StickyCh::new(4, 2.0, 3);
         let home = s.home(FuncId(5));
         let l = loads(&[0, 0, 0, 0]);
         assert_eq!(s.route(FuncId(5), &l), home);
@@ -489,7 +510,7 @@ mod tests {
 
     #[test]
     fn sticky_spills_when_home_overloaded() {
-        let mut s = StickyCh::new(4, 1.25, 3);
+        let s = StickyCh::new(4, 1.25, 3);
         let home = s.home(FuncId(5));
         // Home far above the mean; everyone else empty.
         let mut d = vec![0usize; 4];
@@ -498,13 +519,13 @@ mod tests {
         assert_ne!(picked, home, "should spill off the hot home shard");
         assert_eq!(s.spills(), 1);
         // Spill target is deterministic.
-        let mut s2 = StickyCh::new(4, 1.25, 3);
+        let s2 = StickyCh::new(4, 1.25, 3);
         assert_eq!(s2.route(FuncId(5), &loads(&d)), picked);
     }
 
     #[test]
     fn sticky_stays_home_under_uniform_overload() {
-        let mut s = StickyCh::new(4, 1.25, 3);
+        let s = StickyCh::new(4, 1.25, 3);
         let home = s.home(FuncId(5));
         // Every shard equally deep: cap < depth everywhere ⇒ stay home.
         assert_eq!(s.route(FuncId(5), &loads(&[50, 50, 50, 50])), home);
@@ -525,7 +546,7 @@ mod tests {
     fn single_shard_routers_all_pick_zero() {
         let l = loads(&[3]);
         for k in ALL_ROUTERS.into_iter().chain([RouterKind::StickyChBlind]) {
-            let mut r = k.build(1, 1.25, 11, &[1.0]);
+            let r = k.build(1, 1.25, 11, &[1.0]);
             for f in 0..8 {
                 assert_eq!(r.route(FuncId(f), &l), 0, "{}", k.name());
             }
@@ -543,8 +564,8 @@ mod tests {
         for f in 0..256 {
             assert_eq!(weighted.home(FuncId(f)), blind.home(FuncId(f)));
         }
-        let mut w = RouterKind::StickyCh.build(4, 1.25, 3, &[2.0; 4]);
-        let mut b = RouterKind::StickyChBlind.build(4, 1.25, 3, &[2.0; 4]);
+        let w = RouterKind::StickyCh.build(4, 1.25, 3, &[2.0; 4]);
+        let b = RouterKind::StickyChBlind.build(4, 1.25, 3, &[2.0; 4]);
         let mut d = vec![0usize; 4];
         for f in 0..64 {
             let l = loads(&d);
@@ -583,7 +604,7 @@ mod tests {
         // blind mean-depth bound would: depth 6 on a 1/8-capacity home
         // exceeds its weighted bound but sits below the blind mean.
         let caps = [4.0, 2.0, 1.0, 1.0];
-        let mut s = StickyCh::weighted(4, 1.25, 7, &caps);
+        let s = StickyCh::weighted(4, 1.25, 7, &caps);
         // Find a function homed on a small shard (share 1/8) under
         // *both* rings, so the comparison isolates the bound.
         let blind_ring = StickyCh::new(4, 1.25, 7);
@@ -604,7 +625,7 @@ mod tests {
         assert_ne!(picked, home, "small overloaded home must shed load");
         assert_eq!(s.spills(), 1);
         // Blind bound: ceil(1.25·23/4) = 8 > 6 ⇒ stays home.
-        let mut blind = RouterKind::StickyChBlind.build(4, 1.25, 7, &[]);
+        let blind = RouterKind::StickyChBlind.build(4, 1.25, 7, &[]);
         assert_eq!(blind.route(f, &l), home);
     }
 }

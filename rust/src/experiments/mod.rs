@@ -15,6 +15,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod hetero;
 pub mod perf;
+pub mod serving;
 pub mod table1;
 pub mod table3;
 
@@ -139,6 +140,7 @@ pub const ALL: &[(&str, fn())] = &[
     ("perf", perf::main),
     ("cluster", cluster::main),
     ("hetero", hetero::main),
+    ("serving", serving::main),
 ];
 
 /// Look up an experiment by name.
@@ -156,7 +158,7 @@ mod tests {
         for expect in [
             "table1", "fig1", "fig3", "fig4", "table3", "fig5a", "fig5b", "fig5c",
             "fig6a", "fig6b", "fig6c", "fig7a", "fig7b", "fig7c", "fig8a", "fig8b",
-            "fig8c", "ablation", "perf", "cluster", "hetero",
+            "fig8c", "ablation", "perf", "cluster", "hetero", "serving",
         ] {
             assert!(names.contains(&expect), "{expect} missing");
         }

@@ -1,0 +1,420 @@
+//! §Serving: wall-clock serving-path throughput over real loopback TCP.
+//!
+//! The dispatch *decision* is microseconds (§Perf), so at cluster scale
+//! the serving envelope — wire framing, submit-path locking, executor
+//! threading — is what bounds invocations/second. This harness measures
+//! that envelope end to end: a multi-threaded load generator drives a
+//! model-mode `serve` frontend over real TCP in two loop disciplines:
+//!
+//! * **Closed loop** — C client threads, each issuing the next invoke
+//!   as soon as the previous reply lands (sync, and an async
+//!   ticket+wait mix). Measures saturation throughput and per-request
+//!   wire latency.
+//! * **Open loop** — paced submitters firing async invokes on a fixed
+//!   schedule regardless of completions, with paired waiter
+//!   connections redeeming tickets concurrently. Measures latency at a
+//!   controlled offered rate (the Azure-trace regime: arrivals don't
+//!   wait for you).
+//!
+//! Shapes cover a 1-shard [`crate::server::RtServer`] and a 4-shard
+//! sticky [`crate::server::RtCluster`], reporting invokes/s and
+//! p50/p99 wire latency per shape, emitting `BENCH_serving.json`
+//! (diffable via `scripts/bench_diff.sh`), and gating in release mode:
+//! 4-shard sticky throughput must hold ≥ [`SCALE_GATE`] × the 1-shard
+//! figure. Set `SERVING_QUICK=1` for a seconds-scale smoke run
+//! (CI): smaller volumes, no gates.
+//!
+//! Model time is scaled so far down that modeled service is negligible
+//! against the wire path — the numbers isolate the serving envelope,
+//! not the GPU model.
+
+use std::net::SocketAddr;
+use std::sync::mpsc::channel;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::api::ApiClient;
+use crate::cluster::{ClusterConfig, RouterKind};
+use crate::plane::PlaneConfig;
+use crate::server::{RtCluster, RtServer};
+use crate::util::json::{self, Json};
+use crate::util::stats::percentiles;
+use crate::workload::catalog::by_name;
+use crate::workload::Workload;
+
+/// Release-mode gate: 4-shard sticky closed-loop throughput over the
+/// 1-shard figure. Per the ROADMAP bench protocol, the first
+/// cargo-capable session tunes this on real numbers if it trips
+/// (recording which in CHANGES.md).
+pub const SCALE_GATE: f64 = 2.0;
+
+/// Sanity floor on 1-shard sync closed-loop throughput (invokes/s),
+/// release mode. Deliberately generous — loopback TCP on any modern
+/// machine clears this by orders of magnitude.
+pub const MIN_THROUGHPUT: f64 = 1_000.0;
+
+/// Functions registered for the sweep (clients round-robin over them,
+/// so sticky routing spreads load across shard homes).
+const N_FUNCS: usize = 16;
+
+/// Model-time scale: modeled delays become sub-microsecond wall time,
+/// so measurements isolate the serving envelope.
+const SCALE: f64 = 1e-6;
+
+fn serving_workload() -> Workload {
+    let mut w = Workload::default();
+    let class = by_name("isoneural").expect("catalog has isoneural");
+    for i in 0..N_FUNCS {
+        w.register(class, i, 1.0);
+    }
+    w
+}
+
+fn func_name(i: usize) -> String {
+    format!("isoneural-{}", i % N_FUNCS)
+}
+
+/// A running model-mode target; held only for its guard semantics
+/// (dropping it stops the server).
+#[allow(dead_code)]
+enum Target {
+    Single(RtServer),
+    Cluster(RtCluster),
+}
+
+fn start_target(shards: usize) -> (Target, SocketAddr) {
+    let w = serving_workload();
+    if shards <= 1 {
+        let srv = RtServer::new(w, PlaneConfig::default(), None, SCALE).unwrap();
+        let addr = srv.serve("127.0.0.1:0").unwrap();
+        (Target::Single(srv), addr)
+    } else {
+        let cfg = ClusterConfig {
+            n_shards: shards,
+            router: RouterKind::StickyCh,
+            plane: PlaneConfig::default(),
+            ..Default::default()
+        };
+        let srv = RtCluster::new(w, cfg, None, SCALE).unwrap();
+        let addr = srv.serve("127.0.0.1:0").unwrap();
+        (Target::Cluster(srv), addr)
+    }
+}
+
+/// One measured shape of the sweep.
+#[derive(Debug, Clone)]
+pub struct ServingRow {
+    /// Identity: "sync-closed" | "async-closed" | "open".
+    pub shape: &'static str,
+    /// Identity: loop discipline, "closed" | "open".
+    pub loop_mode: &'static str,
+    pub shards: usize,
+    pub clients: usize,
+    pub invokes: usize,
+    pub wall_s: f64,
+    /// Completed invokes per wall second.
+    pub throughput: f64,
+    /// Wire latency percentiles (ms): request issue → completion reply.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+fn row(
+    shape: &'static str,
+    loop_mode: &'static str,
+    shards: usize,
+    clients: usize,
+    wall: Duration,
+    lats_ms: Vec<f64>,
+) -> ServingRow {
+    let wall_s = wall.as_secs_f64().max(1e-9);
+    let p = percentiles(&lats_ms, &[50.0, 99.0]);
+    ServingRow {
+        shape,
+        loop_mode,
+        shards,
+        clients,
+        invokes: lats_ms.len(),
+        wall_s,
+        throughput: lats_ms.len() as f64 / wall_s,
+        p50_ms: p[0],
+        p99_ms: p[1],
+    }
+}
+
+/// Closed loop, sync invokes: each client thread drives one connection
+/// flat out for `per_client` invokes.
+pub fn closed_loop_sync(shards: usize, clients: usize, per_client: usize) -> ServingRow {
+    let (_guard, addr) = start_target(shards);
+    let t0 = Instant::now();
+    let clients_spawned: Vec<_> = (0..clients).map(|c| {
+        thread::spawn(move || {
+            let mut cl = ApiClient::connect(addr).unwrap();
+            let func = func_name(c);
+            let mut lats = Vec::with_capacity(per_client);
+            for _ in 0..per_client {
+                let s = Instant::now();
+                cl.invoke(&func, Some(60_000)).unwrap();
+                lats.push(s.elapsed().as_secs_f64() * 1e3);
+            }
+            lats
+        })
+    })
+    .collect();
+    let lats = join_all(clients_spawned);
+    row("sync-closed", "closed", shards, clients, t0.elapsed(), lats)
+}
+
+/// Closed loop, async ticket mix: each iteration submits async and
+/// immediately redeems the ticket (two round trips per invocation —
+/// the ticket-table path under load).
+pub fn closed_loop_async(shards: usize, clients: usize, per_client: usize) -> ServingRow {
+    let (_guard, addr) = start_target(shards);
+    let t0 = Instant::now();
+    let clients_spawned: Vec<_> = (0..clients).map(|c| {
+        thread::spawn(move || {
+            let mut cl = ApiClient::connect(addr).unwrap();
+            let func = func_name(c);
+            let mut lats = Vec::with_capacity(per_client);
+            for _ in 0..per_client {
+                let s = Instant::now();
+                let t = cl.invoke_async(&func).unwrap();
+                cl.wait(t, Some(60_000)).unwrap();
+                lats.push(s.elapsed().as_secs_f64() * 1e3);
+            }
+            lats
+        })
+    })
+    .collect();
+    let lats = join_all(clients_spawned);
+    row("async-closed", "closed", shards, clients, t0.elapsed(), lats)
+}
+
+/// Open loop: each client pair is a paced submitter (async invokes on a
+/// fixed schedule, never waiting) plus a waiter connection redeeming
+/// tickets concurrently in submit order. Latency is submit instant →
+/// completion observed over the wire.
+pub fn open_loop(
+    shards: usize,
+    clients: usize,
+    rate_per_client: f64,
+    per_client: usize,
+) -> ServingRow {
+    let (_guard, addr) = start_target(shards);
+    let t0 = Instant::now();
+    let clients_spawned: Vec<_> = (0..clients).map(|c| {
+        thread::spawn(move || {
+            let (tx, rx) = channel::<(crate::api::Ticket, Instant)>();
+            let waiter = thread::spawn(move || {
+                let mut w = ApiClient::connect(addr).unwrap();
+                let mut lats = Vec::new();
+                for (ticket, s) in rx {
+                    w.wait(ticket, Some(60_000)).unwrap();
+                    lats.push(s.elapsed().as_secs_f64() * 1e3);
+                }
+                lats
+            });
+            let mut sub = ApiClient::connect(addr).unwrap();
+            let func = func_name(c);
+            let interval = Duration::from_secs_f64(1.0 / rate_per_client);
+            let start = Instant::now();
+            for i in 0..per_client {
+                let due = start + interval.mul_f64(i as f64);
+                let now = Instant::now();
+                if due > now {
+                    thread::sleep(due - now);
+                }
+                let s = Instant::now();
+                let ticket = sub.invoke_async(&func).unwrap();
+                // Waiter gone ⇒ an earlier wait failed; surface below.
+                if tx.send((ticket, s)).is_err() {
+                    break;
+                }
+            }
+            drop(tx);
+            waiter.join().unwrap()
+        })
+    })
+    .collect();
+    let lats = join_all(clients_spawned);
+    row("open", "open", shards, clients, t0.elapsed(), lats)
+}
+
+/// Join a fully-spawned client fleet (spawn-all-then-join keeps the
+/// clients concurrent) and merge their latency samples.
+fn join_all(handles: Vec<thread::JoinHandle<Vec<f64>>>) -> Vec<f64> {
+    let mut all = Vec::new();
+    for h in handles {
+        all.extend(h.join().expect("load-generator client panicked"));
+    }
+    all
+}
+
+/// The full §Serving sweep.
+pub struct ServingReport {
+    pub rows: Vec<ServingRow>,
+    /// 4-shard sticky over 1-shard sync closed-loop throughput — the
+    /// scaling headline the release gate holds.
+    pub scale_4x1: f64,
+}
+
+fn find<'a>(rows: &'a [ServingRow], shape: &str, shards: usize) -> &'a ServingRow {
+    rows.iter()
+        .find(|r| r.shape == shape && r.shards == shards)
+        .expect("sweep row present")
+}
+
+/// Run the sweep. `quick` shrinks volumes to a seconds-scale smoke
+/// (used by CI; gates are skipped by the caller in that mode).
+pub fn collect(quick: bool) -> ServingReport {
+    let (sync_n, async_n, open_n) = if quick { (50, 30, 40) } else { (2_000, 1_000, 800) };
+    let open_rate = if quick { 200.0 } else { 500.0 };
+    let rows = vec![
+        closed_loop_sync(1, 4, sync_n),
+        closed_loop_sync(4, 16, sync_n),
+        closed_loop_async(1, 4, async_n),
+        closed_loop_async(4, 16, async_n),
+        open_loop(1, 4, open_rate, open_n),
+        open_loop(4, 8, open_rate, open_n),
+    ];
+    let scale_4x1 = find(&rows, "sync-closed", 4).throughput
+        / find(&rows, "sync-closed", 1).throughput.max(1e-9);
+    ServingReport { rows, scale_4x1 }
+}
+
+/// Machine-readable form of the report (`BENCH_serving.json`).
+pub fn report_json(r: &ServingReport) -> Json {
+    let rows = r
+        .rows
+        .iter()
+        .map(|row| {
+            Json::Obj(vec![
+                ("shape".into(), Json::str(row.shape)),
+                ("loop".into(), Json::str(row.loop_mode)),
+                ("shards".into(), Json::Int(row.shards as i64)),
+                ("clients".into(), Json::Int(row.clients as i64)),
+                ("invokes".into(), Json::Int(row.invokes as i64)),
+                ("wall_s".into(), Json::Num(row.wall_s)),
+                (
+                    "throughput_invokes_per_sec".into(),
+                    Json::Num(row.throughput),
+                ),
+                ("p50_ms".into(), Json::Num(row.p50_ms)),
+                ("p99_ms".into(), Json::Num(row.p99_ms)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("schema".into(), Json::str("mqfq-bench-serving/v1")),
+        ("serving".into(), Json::Arr(rows)),
+        (
+            "throughput_ratio_4shard_over_1shard".into(),
+            Json::Num(r.scale_4x1),
+        ),
+    ])
+}
+
+fn print_rows(rows: &[ServingRow]) {
+    println!(
+        "{:<14} {:>6} {:>8} {:>9} {:>12} {:>10} {:>10}",
+        "shape", "shards", "clients", "invokes", "invokes/s", "p50(ms)", "p99(ms)"
+    );
+    for r in rows {
+        println!(
+            "{:<14} {:>6} {:>8} {:>9} {:>12.0} {:>10.3} {:>10.3}",
+            r.shape, r.shards, r.clients, r.invokes, r.throughput, r.p50_ms, r.p99_ms
+        );
+    }
+}
+
+pub fn main() {
+    let quick = std::env::var("SERVING_QUICK").is_ok();
+    println!(
+        "== §Serving: wall-clock serving-path throughput{} ==",
+        if quick { " (quick)" } else { "" }
+    );
+    let report = collect(quick);
+    print_rows(&report.rows);
+    println!(
+        "4-shard sticky / 1-shard sync closed-loop throughput: {:.2}x",
+        report.scale_4x1
+    );
+    match json::write_file("BENCH_serving.json", &report_json(&report)) {
+        Ok(()) => println!("wrote BENCH_serving.json"),
+        Err(e) => println!("BENCH_serving.json not written: {e}"),
+    }
+
+    // Release-bench regression gates (debug builds and quick runs are
+    // untimed). Tunable on first real numbers per the ROADMAP protocol.
+    if !cfg!(debug_assertions) && !quick {
+        let one = find(&report.rows, "sync-closed", 1);
+        assert!(
+            one.throughput >= MIN_THROUGHPUT,
+            "1-shard sync closed-loop throughput {:.0}/s below the {MIN_THROUGHPUT:.0}/s floor",
+            one.throughput
+        );
+        assert!(
+            report.scale_4x1 >= SCALE_GATE,
+            "4-shard sticky throughput only {:.2}x the 1-shard figure (gate {SCALE_GATE:.1}x)",
+            report.scale_4x1
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_loop_smoke_conserves_invocations() {
+        // Tiny end-to-end run over real loopback TCP: every issued
+        // invoke completes and is measured exactly once.
+        let r = closed_loop_sync(1, 2, 10);
+        assert_eq!(r.invokes, 20);
+        assert_eq!(r.shards, 1);
+        assert!(r.throughput > 0.0);
+        assert!(r.p50_ms > 0.0 && r.p99_ms >= r.p50_ms);
+    }
+
+    #[test]
+    fn async_and_open_loops_smoke() {
+        let a = closed_loop_async(1, 2, 5);
+        assert_eq!(a.invokes, 10);
+        let o = open_loop(1, 2, 500.0, 10);
+        assert_eq!(o.invokes, 20);
+        assert!(o.p99_ms >= o.p50_ms);
+    }
+
+    #[test]
+    fn report_json_has_identity_and_metric_keys() {
+        let report = ServingReport {
+            rows: vec![ServingRow {
+                shape: "sync-closed",
+                loop_mode: "closed",
+                shards: 4,
+                clients: 16,
+                invokes: 1000,
+                wall_s: 0.5,
+                throughput: 2000.0,
+                p50_ms: 0.4,
+                p99_ms: 1.9,
+            }],
+            scale_4x1: 2.5,
+        };
+        let doc = report_json(&report).render();
+        for key in [
+            "\"schema\"",
+            "\"serving\"",
+            "\"shape\"",
+            "\"loop\"",
+            "\"shards\"",
+            "\"clients\"",
+            "\"throughput_invokes_per_sec\"",
+            "\"p50_ms\"",
+            "\"p99_ms\"",
+            "\"throughput_ratio_4shard_over_1shard\"",
+        ] {
+            assert!(doc.contains(key), "missing {key} in {doc}");
+        }
+    }
+}

@@ -7,11 +7,7 @@
 //!   driver, now behind the typed API).
 //! * [`RtCluster`] — N independent [`ControlPlane`] shards behind a
 //!   [`crate::cluster::Router`] (StickyCh / least-loaded / ...), the
-//!   wall-clock sibling of [`crate::sim::replay_cluster`]: per-shard
-//!   monitor threads, capacity-weighted routing on live queue depths,
-//!   and completion feedback through each shard's own plane. This is
-//!   the ROADMAP's "RPC front end so `serve` can run the router for
-//!   real traffic".
+//!   wall-clock sibling of [`crate::sim::replay_cluster`].
 //!
 //! Python never runs here — dispatched functions execute their AOT HLO
 //! artifact on a dedicated PJRT executor thread (the CPU PJRT client is
@@ -44,6 +40,57 @@
 //! survives as legacy aliases on the same port: any line not starting
 //! with `{` is parsed as a legacy command.
 //!
+//! # Threading model: fixed pools, a timer wheel, and no per-request spawns
+//!
+//! The serving engine's thread count is a function of *configuration*,
+//! never of offered load:
+//!
+//! * **One timer thread** owns a binary-heap timer wheel of pending
+//!   wall-clock events — each dispatch's `exec_start` instant (cold
+//!   boot + prefetch blocking, scaled) and, in model mode, its
+//!   completion instant. When an event comes due the timer hands it to
+//!   the owning shard's worker pool and goes back to sleep until the
+//!   next deadline; it never touches a plane lock itself.
+//! * **A fixed worker pool per shard** ([`DEFAULT_WORKERS`] threads
+//!   unless overridden via `with_workers`) drains the shard's work
+//!   queue: exec-start touches, PJRT execution (workers block on the
+//!   executor, bounding concurrent jobs), completion bookkeeping, and
+//!   ticket fulfillment. Model-mode workers never sleep — modeled
+//!   service time is a timer event, so a worker's cost per invocation
+//!   is bookkeeping only.
+//! * **One monitor thread per shard** drives the paper's 200 ms-class
+//!   NVML poll (utilization sampling, dynamic D, TTL expiry). Idle
+//!   shards park on a condvar instead of ticking: the monitor only
+//!   sleeps-and-locks while the shard has work, and a submit to an
+//!   idle shard wakes it. An idle server generates *zero* tick-driven
+//!   plane-lock traffic (asserted by test via [`RtServer::monitor_ticks`]).
+//! * **One accept thread + one thread per live connection** speak the
+//!   wire protocol ([`crate::api::wire::serve_connection`]).
+//!
+//! The previous design spawned a fresh OS thread per dispatch, so
+//! thread count — and scheduler pressure — grew with load;
+//! [`RtServer::exec_threads`] exposes the (constant) executor-side
+//! count so tests can pin the invariant under a burst.
+//!
+//! # Lock discipline on the submit path
+//!
+//! A submit on an M-shard cluster locks at most one [`ControlPlane`]
+//! — the routed shard's:
+//!
+//! * Shard load snapshots ([`crate::cluster::ShardLoad`]) read per-shard
+//!   atomics published under the plane lock at every mutation, so
+//!   admission control and routing never lock any plane.
+//! * The router sits behind a read-mostly `RwLock` and
+//!   [`crate::cluster::Router::route`] takes `&self` (StickyCh's ring
+//!   is immutable after build; RoundRobin keeps an atomic cursor), so
+//!   concurrent submits route in parallel.
+//! * The ticket registry is sharded by ticket id ([`TICKET_SHARDS`]
+//!   slots), and invocation→ticket maps are per plane-shard, so
+//!   concurrent clients don't serialize on one mutex.
+//! * `stats` is O(shards) over atomics — the aggregate counters
+//!   (completions, latency sum, cold starts) are maintained at
+//!   completion time, and no plane is ever locked to answer it.
+//!
 //! # Ownership: handles vs the shutdown guard
 //!
 //! All serving state lives in one shared `Inner`. [`RtHandle`] is a
@@ -51,18 +98,22 @@
 //! embedders hold handles, and dropping a handle is inert. The
 //! constructor-returned guard ([`RtServer`]/[`RtCluster`]) is the
 //! *single* owner of shutdown: only its `shutdown()`/`Drop` stops the
-//! monitor threads and the accept loop. (The previous design cloned the
-//! guard itself into every connection, so the first client disconnect
-//! ran `Drop::drop → shutdown()` and silently killed the server for
-//! everyone — the regression test lives in `rust/tests/wire_protocol.rs`.)
+//! background threads (timer, workers, monitors) and the accept loop.
+//! Stopping the guard abandons modeled in-flight work still parked on
+//! the timer (their waiters see a deadline/unknown-ticket, exactly as
+//! under process teardown); in-flight PJRT executions finish their
+//! current job. (The historical drop bug — per-connection guard clones
+//! running `Drop::drop → shutdown()` on first disconnect — is still
+//! pinned by a regression test in `rust/tests/wire_protocol.rs`.)
 
-use std::collections::{HashMap, VecDeque};
-use std::net::{TcpListener, TcpStream};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::api::types::{
     ApiError, DescribeInfo, InvokeOutcome, StatsSnapshot, Ticket, PROTOCOL_VERSION,
@@ -72,12 +123,20 @@ use crate::clock::{Clock, RealClock};
 use crate::cluster::{ClusterConfig, Router, RouterKind, ShardLoad};
 use crate::plane::{ControlPlane, Dispatch, PlaneConfig};
 use crate::runtime::PjrtRuntime;
-use crate::types::{to_secs, InvocationId, Nanos};
+use crate::types::{to_secs, FuncId, InvocationId, Nanos, StartKind};
 use crate::workload::Workload;
+
+/// Worker threads per shard unless overridden (`with_workers`). Total
+/// executor-side threads = `shards × workers + 1` (the timer).
+pub const DEFAULT_WORKERS: usize = 4;
+
+/// Ticket-registry shards: tickets hash to a slot by id, so concurrent
+/// clients touching different tickets never contend on one mutex.
+pub const TICKET_SHARDS: usize = 16;
 
 /// Job sent to the PJRT executor thread.
 struct ExecJob {
-    artifact: String,
+    artifact: &'static str,
     reply: Sender<Duration>,
 }
 
@@ -89,12 +148,13 @@ enum TicketEntry {
     Done(InvokeOutcome),
 }
 
-/// Ticket registry with a bound on completed-but-unclaimed entries, so
-/// fire-and-forget async clients (or crashed ones) cannot grow the
-/// table without limit on a long-running server: beyond
-/// [`TicketTable::DEFAULT_MAX_DONE`] unclaimed completions, the oldest
-/// are evicted (a later `wait` on one gets `unknown-ticket`, exactly as
-/// if it had been claimed).
+/// Ticket registry slot with a bound on completed-but-unclaimed
+/// entries, so fire-and-forget async clients (or crashed ones) cannot
+/// grow the table without limit on a long-running server: beyond the
+/// slot's `max_done` unclaimed completions, the oldest are evicted (a
+/// later `wait` on one gets `unknown-ticket`, exactly as if it had
+/// been claimed). The server keeps [`TICKET_SHARDS`] slots whose
+/// bounds sum to [`TicketTable::DEFAULT_MAX_DONE`].
 struct TicketTable {
     entries: HashMap<u64, TicketEntry>,
     /// Completion order of `Done` entries; may contain stale ids of
@@ -107,15 +167,16 @@ struct TicketTable {
 }
 
 impl TicketTable {
-    /// Unclaimed completions retained before the oldest are dropped.
+    /// Unclaimed completions retained across all slots before the
+    /// oldest are dropped.
     const DEFAULT_MAX_DONE: usize = 1 << 16;
 
-    fn new() -> Self {
+    fn with_max(max_done: usize) -> Self {
         Self {
             entries: HashMap::new(),
             done_order: VecDeque::new(),
             done_count: 0,
-            max_done: Self::DEFAULT_MAX_DONE,
+            max_done,
         }
     }
 
@@ -166,50 +227,214 @@ impl TicketTable {
     }
 }
 
-/// Shared serving state: shards, router, tickets, executor.
+/// Work handed to a shard's worker pool by the timer thread.
+enum WorkItem {
+    /// The dispatch's scaled pre-exec delay (boot + blocking) elapsed:
+    /// touch the plane at the wall-clock exec start, then execute
+    /// (PJRT inline, or schedule the modeled completion on the timer).
+    ExecStart(Dispatch),
+    /// The modeled service time elapsed (model mode only): complete
+    /// the invocation and fulfill its ticket.
+    Complete { d: Dispatch, exec_t0: Nanos },
+}
+
+/// One timer-wheel entry; ordered by `(due, seq)` so same-instant
+/// events fire in schedule order.
+struct TimerEntry {
+    due: Instant,
+    seq: u64,
+    shard: usize,
+    item: WorkItem,
+}
+
+impl PartialEq for TimerEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.due == other.due && self.seq == other.seq
+    }
+}
+impl Eq for TimerEntry {}
+impl PartialOrd for TimerEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for TimerEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.due, self.seq).cmp(&(other.due, other.seq))
+    }
+}
+
+/// Binary-heap timer wheel: one thread sleeps until the earliest
+/// deadline and hands due events to shard worker queues. Scheduling is
+/// lock + push + notify; O(log n) in outstanding events.
+struct Timer {
+    heap: Mutex<BinaryHeap<Reverse<TimerEntry>>>,
+    cv: Condvar,
+    seq: AtomicU64,
+}
+
+impl Timer {
+    fn new() -> Self {
+        Self {
+            heap: Mutex::new(BinaryHeap::new()),
+            cv: Condvar::new(),
+            seq: AtomicU64::new(0),
+        }
+    }
+
+    fn schedule(&self, due: Instant, shard: usize, item: WorkItem) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        self.heap
+            .lock()
+            .unwrap()
+            .push(Reverse(TimerEntry {
+                due,
+                seq,
+                shard,
+                item,
+            }));
+        self.cv.notify_one();
+    }
+}
+
+/// Per-shard serving state: the plane, its published load snapshot,
+/// the worker inbox, and the monitor's park gate.
+struct ShardState {
+    plane: Mutex<ControlPlane>,
+    /// Load snapshot published under the plane lock at every mutation;
+    /// admission control, routing, and `stats` read these without ever
+    /// locking the plane.
+    pending: AtomicUsize,
+    in_flight: AtomicUsize,
+    /// Fleet capacity (V100-equivalents) for [`ShardLoad`].
+    capacity: f64,
+    /// Worker-pool inbox, fed by the timer thread.
+    work: Mutex<VecDeque<WorkItem>>,
+    work_cv: Condvar,
+    /// Monitor park gate: true ⇒ a submit woke an idle shard.
+    gate: Mutex<bool>,
+    gate_cv: Condvar,
+    /// Monitor ticks that actually locked the plane (diagnostics; an
+    /// idle shard's count must not grow).
+    ticks: AtomicU64,
+    /// shard-local invocation id → ticket, registered under the plane
+    /// lock at submit time so a racing completion can never observe an
+    /// unmapped invocation.
+    inv_tickets: Mutex<HashMap<InvocationId, Ticket>>,
+}
+
+impl ShardState {
+    fn new(plane: ControlPlane, capacity: f64) -> Self {
+        Self {
+            plane: Mutex::new(plane),
+            pending: AtomicUsize::new(0),
+            in_flight: AtomicUsize::new(0),
+            capacity,
+            work: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            gate: Mutex::new(false),
+            gate_cv: Condvar::new(),
+            ticks: AtomicU64::new(0),
+            inv_tickets: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn depth(&self) -> usize {
+        self.pending.load(Ordering::SeqCst) + self.in_flight.load(Ordering::SeqCst)
+    }
+
+    fn load(&self) -> ShardLoad {
+        ShardLoad {
+            pending: self.pending.load(Ordering::SeqCst),
+            in_flight: self.in_flight.load(Ordering::SeqCst),
+            capacity: self.capacity,
+        }
+    }
+
+    /// Publish the plane's load counters (call under the plane lock).
+    fn publish(&self, plane: &ControlPlane) {
+        self.pending.store(plane.pending(), Ordering::SeqCst);
+        self.in_flight.store(plane.in_flight(), Ordering::SeqCst);
+    }
+
+    fn push_work(&self, item: WorkItem) {
+        self.work.lock().unwrap().push_back(item);
+        self.work_cv.notify_one();
+    }
+
+    /// Wake a (possibly) parked monitor: a submit landed on this shard.
+    fn wake_monitor(&self) {
+        let mut g = self.gate.lock().unwrap();
+        *g = true;
+        self.gate_cv.notify_one();
+    }
+}
+
+/// Shared serving state: shards, router, tickets, executor, timer.
 struct Inner {
     /// Frontend kind for `describe`: `rt-server` or `rt-cluster`.
     kind: &'static str,
     router_name: &'static str,
-    shards: Vec<Mutex<ControlPlane>>,
-    /// Routing decision for each arrival (a single-shard server uses a
-    /// trivial ring that always answers 0).
-    router: Mutex<Box<dyn Router>>,
-    /// Per-shard fleet capacity (V100-equivalents) for [`ShardLoad`].
-    capacities: Vec<f64>,
+    shards: Vec<ShardState>,
+    /// Routing decision for each arrival. Read-mostly: every submit
+    /// takes the read lock (routers mutate through atomics), so
+    /// concurrent submits route in parallel.
+    router: RwLock<Box<dyn Router>>,
     clock: RealClock,
     /// Modeled-delay scale: 1 virtual second sleeps `scale` real seconds.
     scale: f64,
     exec_tx: Option<Sender<ExecJob>>,
-    /// `(shard, shard-local invocation id) → (ticket, function name)`,
-    /// registered under the shard's plane lock at submit time so a
-    /// racing completion can never observe an unmapped invocation.
-    inv_tickets: Mutex<HashMap<(usize, InvocationId), (Ticket, String)>>,
-    tickets: Mutex<TicketTable>,
+    /// Ticket registry, sharded by `ticket % TICKET_SHARDS`.
+    tickets: Vec<Mutex<TicketTable>>,
     /// Lock-free admission lookup: registered name *and* class name →
-    /// (id, registered name), precomputed from the workload (identical
-    /// on every shard) so submits never scan under a plane lock.
-    func_index: HashMap<String, (crate::types::FuncId, String)>,
+    /// id, precomputed from the workload (identical on every shard) so
+    /// submits never scan — or allocate — under a plane lock.
+    func_index: HashMap<String, FuncId>,
+    /// FuncId → registered name (reply field), precomputed so the
+    /// completion path never locks a plane for a name.
+    func_names: Vec<String>,
+    /// FuncId → catalog class name (PJRT artifact key).
+    class_names: Vec<&'static str>,
+    /// Precomputed `describe` fields (identical on every shard).
+    policy: String,
+    functions: Vec<String>,
+    timer: Timer,
     next_ticket: AtomicU64,
     /// Admission bound on total queued work (`usize::MAX` = unlimited).
     max_pending: AtomicUsize,
     running: AtomicBool,
+    // O(1) stats aggregates, maintained at completion time.
+    completed: AtomicUsize,
+    lat_sum_ns: AtomicU64,
+    cold_starts: AtomicUsize,
+    /// Executor-side threads spawned (timer + workers): a function of
+    /// configuration, asserted by tests to be load-independent.
+    exec_threads: AtomicUsize,
 }
 
 impl Inner {
-    fn loads(&self) -> Vec<ShardLoad> {
-        self.shards
-            .iter()
-            .enumerate()
-            .map(|(s, p)| {
-                let p = p.lock().unwrap();
-                ShardLoad {
-                    pending: p.pending(),
-                    in_flight: p.in_flight(),
-                    capacity: self.capacities[s],
-                }
-            })
-            .collect()
+    fn ticket_slot(&self, id: u64) -> &Mutex<TicketTable> {
+        &self.tickets[(id % TICKET_SHARDS as u64) as usize]
+    }
+
+    /// Wake every parked/sleeping background thread for shutdown. Each
+    /// notify holds the matching mutex so a thread between its
+    /// `running` check and its wait cannot miss the wakeup.
+    fn wake_all(&self) {
+        {
+            let _g = self.timer.heap.lock().unwrap();
+            self.timer.cv.notify_all();
+        }
+        for s in &self.shards {
+            {
+                let _g = s.work.lock().unwrap();
+                s.work_cv.notify_all();
+            }
+            {
+                let _g = s.gate.lock().unwrap();
+                s.gate_cv.notify_all();
+            }
+        }
     }
 }
 
@@ -226,14 +451,13 @@ pub struct RtHandle {
 // ---------------------------------------------------------------------
 
 fn describe_inner(inner: &Arc<Inner>) -> DescribeInfo {
-    let plane = inner.shards[0].lock().unwrap();
     DescribeInfo {
         proto: PROTOCOL_VERSION,
         server: inner.kind.to_string(),
-        policy: plane.policy_name().to_string(),
+        policy: inner.policy.clone(),
         shards: inner.shards.len(),
         router: inner.router_name.to_string(),
-        functions: plane.workload().funcs.iter().map(|f| f.name.clone()).collect(),
+        functions: inner.functions.clone(),
     }
 }
 
@@ -241,35 +465,54 @@ fn submit_inner(inner: &Arc<Inner>, name: &str) -> Result<Ticket, ApiError> {
     if !inner.running.load(Ordering::SeqCst) {
         return Err(ApiError::ShuttingDown);
     }
-    let Some((func, reg_name)) = inner.func_index.get(name).cloned() else {
+    let Some(&func) = inner.func_index.get(name) else {
         return Err(ApiError::UnknownFunction {
             name: name.to_string(),
         });
     };
-    // Admission control: bound total queued work before routing.
-    let loads = inner.loads();
-    let pending: usize = loads.iter().map(|l| l.pending).sum();
-    let limit = inner.max_pending.load(Ordering::SeqCst);
-    if pending >= limit {
-        return Err(ApiError::Overloaded { pending, limit });
+    // Admission control + routing over the published atomics: no plane
+    // lock until the routed shard is known, and no steady-state
+    // allocation — the load snapshot lives in a per-thread buffer.
+    thread_local! {
+        static LOADS_BUF: std::cell::RefCell<Vec<ShardLoad>> =
+            const { std::cell::RefCell::new(Vec::new()) };
     }
-    let shard = inner.router.lock().unwrap().route(func, &loads);
+    let shard = LOADS_BUF.with(|buf| -> Result<usize, ApiError> {
+        let mut loads = buf.borrow_mut();
+        loads.clear();
+        loads.extend(inner.shards.iter().map(|s| s.load()));
+        let pending: usize = loads.iter().map(|l| l.pending).sum();
+        let limit = inner.max_pending.load(Ordering::SeqCst);
+        if pending >= limit {
+            return Err(ApiError::Overloaded { pending, limit });
+        }
+        Ok(inner.router.read().unwrap().route(func, &loads))
+    })?;
     debug_assert!(shard < inner.shards.len(), "router out of range");
     let ticket = Ticket(inner.next_ticket.fetch_add(1, Ordering::SeqCst));
-    inner.tickets.lock().unwrap().insert_pending(ticket.0);
-    let ds = {
-        let mut plane = inner.shards[shard].lock().unwrap();
+    inner
+        .ticket_slot(ticket.0)
+        .lock()
+        .unwrap()
+        .insert_pending(ticket.0);
+    let st = &inner.shards[shard];
+    let (was_idle, ds) = {
+        // The only plane lock on the submit path: the routed shard's.
+        let mut plane = st.plane.lock().unwrap();
+        // Exact idle check under the lock (a pre-lock snapshot could
+        // race a completion and leave the monitor parked with work).
+        let was_idle = plane.pending() + plane.in_flight() == 0;
         let now = inner.clock.now();
         let (inv, ds) = plane.on_arrival(func, now);
-        // Map under the plane lock (see Inner::inv_tickets).
-        inner
-            .inv_tickets
-            .lock()
-            .unwrap()
-            .insert((shard, inv), (ticket, reg_name));
-        ds
+        // Map under the plane lock (see ShardState::inv_tickets).
+        st.inv_tickets.lock().unwrap().insert(inv, ticket);
+        st.publish(&plane);
+        (was_idle, ds)
     };
-    handle_dispatches(inner, shard, ds);
+    if was_idle {
+        st.wake_monitor();
+    }
+    schedule_dispatches(inner, shard, ds);
     Ok(ticket)
 }
 
@@ -279,7 +522,7 @@ fn wait_inner(
     deadline: Option<Duration>,
 ) -> Result<InvokeOutcome, ApiError> {
     let rx = {
-        let mut tickets = inner.tickets.lock().unwrap();
+        let mut tickets = inner.ticket_slot(ticket.0).lock().unwrap();
         match tickets.remove(ticket.0) {
             None => return Err(ApiError::UnknownTicket { ticket }),
             // Already completed: claiming removes the entry.
@@ -306,12 +549,12 @@ fn wait_inner(
     };
     // Claimed: reclaim the entry (concurrent waiters were all woken by
     // the same fulfillment; whichever removes second is a no-op).
-    inner.tickets.lock().unwrap().remove(ticket.0);
+    inner.ticket_slot(ticket.0).lock().unwrap().remove(ticket.0);
     Ok(outcome)
 }
 
 fn poll_inner(inner: &Arc<Inner>, ticket: Ticket) -> Result<Option<InvokeOutcome>, ApiError> {
-    let mut tickets = inner.tickets.lock().unwrap();
+    let mut tickets = inner.ticket_slot(ticket.0).lock().unwrap();
     match tickets.remove(ticket.0) {
         None => Err(ApiError::UnknownTicket { ticket }),
         // Done: claiming removes the entry, like a successful wait.
@@ -323,22 +566,23 @@ fn poll_inner(inner: &Arc<Inner>, ticket: Ticket) -> Result<Option<InvokeOutcome
     }
 }
 
+/// O(shards) over atomics — never locks a plane. The aggregates
+/// (completions, latency sum, cold starts) are bumped on the completion
+/// path *after* the plane publishes its load, so a waiter that has just
+/// been fulfilled observes its own invocation in the totals.
 fn stats_inner(inner: &Arc<Inner>) -> StatsSnapshot {
-    let mut s = StatsSnapshot::default();
-    let mut lat_sum = 0.0;
-    let mut cold_sum = 0.0;
-    for shard in &inner.shards {
-        let plane = shard.lock().unwrap();
-        let n = plane.recorder.len();
-        lat_sum += plane.recorder.weighted_avg_latency_s() * n as f64;
-        cold_sum += plane.recorder.cold_ratio() * n as f64;
-        s.invocations += n;
-        s.pending += plane.pending();
-        s.in_flight += plane.in_flight();
+    let n = inner.completed.load(Ordering::SeqCst);
+    let mut s = StatsSnapshot {
+        invocations: n,
+        ..Default::default()
+    };
+    for st in &inner.shards {
+        s.pending += st.pending.load(Ordering::SeqCst);
+        s.in_flight += st.in_flight.load(Ordering::SeqCst);
     }
-    if s.invocations > 0 {
-        s.mean_latency_ms = lat_sum / s.invocations as f64 * 1e3;
-        s.cold_ratio = cold_sum / s.invocations as f64;
+    if n > 0 {
+        s.mean_latency_ms = inner.lat_sum_ns.load(Ordering::SeqCst) as f64 / n as f64 / 1e6;
+        s.cold_ratio = inner.cold_starts.load(Ordering::SeqCst) as f64 / n as f64;
     }
     s
 }
@@ -346,7 +590,7 @@ fn stats_inner(inner: &Arc<Inner>) -> StatsSnapshot {
 /// Single copy of the [`Frontend`] wiring, stamped onto every type that
 /// exposes the shared `Inner` (the handle and both guards — identical
 /// behavior by construction). `shutdown` only flips admission; joining
-/// the monitor threads needs a guard's own `stop()` or `Drop`.
+/// the background threads needs a guard's own `stop()` or `Drop`.
 macro_rules! impl_frontend_via_inner {
     ($ty:ty) => {
         impl Frontend for $ty {
@@ -381,9 +625,9 @@ impl_frontend_via_inner!(RtServer);
 impl_frontend_via_inner!(RtCluster);
 
 /// Single copy of the shutdown-guard surface, stamped onto both guards
-/// (`RtServer`, `RtCluster`): handle/serve/backpressure plus the
-/// stop-and-join that only a guard — never a dropped connection handle
-/// — may trigger.
+/// (`RtServer`, `RtCluster`): handle/serve/backpressure/diagnostics
+/// plus the stop-and-join that only a guard — never a dropped
+/// connection handle — may trigger.
 macro_rules! impl_guard {
     ($ty:ty) => {
         impl $ty {
@@ -405,12 +649,30 @@ macro_rules! impl_guard {
                 self.inner.max_pending.store(limit, Ordering::SeqCst);
             }
 
-            /// Stop admissions and join the monitor thread(s).
-            /// Idempotent; also runs on `Drop`. Only this guard stops
-            /// the server — dropped connection handles never do.
+            /// Executor-side threads spawned (timer + worker pools) —
+            /// a function of configuration, never of offered load.
+            pub fn exec_threads(&self) -> usize {
+                self.inner.exec_threads.load(Ordering::SeqCst)
+            }
+
+            /// Monitor ticks that locked a plane, summed over shards.
+            /// Stays flat while the server is idle (monitors park).
+            pub fn monitor_ticks(&self) -> u64 {
+                self.inner
+                    .shards
+                    .iter()
+                    .map(|s| s.ticks.load(Ordering::SeqCst))
+                    .sum()
+            }
+
+            /// Stop admissions and join the background threads (timer,
+            /// workers, monitors). Idempotent; also runs on `Drop`.
+            /// Only this guard stops the server — dropped connection
+            /// handles never do.
             pub fn stop(&self) {
                 self.inner.running.store(false, Ordering::SeqCst);
-                for h in self.monitors.lock().unwrap().drain(..) {
+                self.inner.wake_all();
+                for h in self.threads.lock().unwrap().drain(..) {
                     let _ = h.join();
                 }
             }
@@ -445,53 +707,180 @@ fn build_inner(
         None => None,
     };
     // Admission index, first match wins like the old linear scan:
-    // registered name (unique) and class name (first copy).
+    // registered name (unique) and class name (first copy). Names are
+    // precomputed per FuncId so neither submit nor completion ever
+    // allocates or locks a plane for one.
     let mut func_index = HashMap::new();
+    let mut func_names = vec![String::new(); workload.len()];
+    let mut class_names = vec![""; workload.len()];
+    let mut functions = Vec::with_capacity(workload.len());
     for f in &workload.funcs {
-        func_index
-            .entry(f.name.clone())
-            .or_insert((f.id, f.name.clone()));
-        func_index
-            .entry(f.class.name.to_string())
-            .or_insert((f.id, f.name.clone()));
+        func_index.entry(f.name.clone()).or_insert(f.id);
+        func_index.entry(f.class.name.to_string()).or_insert(f.id);
+        func_names[f.id.0 as usize] = f.name.clone();
+        class_names[f.id.0 as usize] = f.class.name;
+        functions.push(f.name.clone());
     }
-    let shards = plane_cfgs
+    let planes: Vec<ControlPlane> = plane_cfgs
         .into_iter()
-        .map(|cfg| Mutex::new(ControlPlane::new(workload.clone(), cfg)))
+        .map(|cfg| ControlPlane::new(workload.clone(), cfg))
+        .collect();
+    let policy = planes[0].policy_name().to_string();
+    let shards = planes
+        .into_iter()
+        .zip(capacities)
+        .map(|(plane, cap)| ShardState::new(plane, cap))
         .collect();
     Ok(Arc::new(Inner {
         kind,
         router_name,
         shards,
-        router: Mutex::new(router),
-        capacities,
+        router: RwLock::new(router),
         clock: RealClock::new(),
         scale,
         exec_tx,
-        inv_tickets: Mutex::new(HashMap::new()),
-        tickets: Mutex::new(TicketTable::new()),
+        tickets: (0..TICKET_SHARDS)
+            .map(|_| Mutex::new(TicketTable::with_max(
+                TicketTable::DEFAULT_MAX_DONE / TICKET_SHARDS,
+            )))
+            .collect(),
         func_index,
+        func_names,
+        class_names,
+        policy,
+        functions,
+        timer: Timer::new(),
         next_ticket: AtomicU64::new(0),
         max_pending: AtomicUsize::new(usize::MAX),
         running: AtomicBool::new(true),
+        completed: AtomicUsize::new(0),
+        lat_sum_ns: AtomicU64::new(0),
+        cold_starts: AtomicUsize::new(0),
+        exec_threads: AtomicUsize::new(0),
     }))
+}
+
+/// Spawn the fixed background set: the timer thread, `workers` pool
+/// threads per shard, and one monitor per shard. This is the *only*
+/// place serving threads are created — nothing on the per-request or
+/// per-dispatch path spawns.
+fn spawn_threads(inner: &Arc<Inner>, workers: usize) -> Vec<thread::JoinHandle<()>> {
+    assert!(workers >= 1, "worker pool needs at least one thread");
+    let mut hs = Vec::with_capacity(1 + inner.shards.len() * (workers + 1));
+    inner.exec_threads.fetch_add(1, Ordering::SeqCst);
+    {
+        let t = Arc::clone(inner);
+        hs.push(thread::spawn(move || timer_loop(t)));
+    }
+    for shard in 0..inner.shards.len() {
+        for _ in 0..workers {
+            inner.exec_threads.fetch_add(1, Ordering::SeqCst);
+            let t = Arc::clone(inner);
+            hs.push(thread::spawn(move || worker_loop(t, shard)));
+        }
+        let t = Arc::clone(inner);
+        hs.push(thread::spawn(move || monitor_loop(t, shard)));
+    }
+    hs
+}
+
+/// Timer thread: sleep until the earliest deadline, then hand the due
+/// event to its shard's worker pool. Never locks a plane.
+fn timer_loop(inner: Arc<Inner>) {
+    let mut heap = inner.timer.heap.lock().unwrap();
+    loop {
+        if !inner.running.load(Ordering::SeqCst) {
+            return;
+        }
+        let now = Instant::now();
+        let next_due = heap.peek().map(|r| r.0.due);
+        match next_due {
+            None => {
+                heap = inner.timer.cv.wait(heap).unwrap();
+            }
+            Some(due) if due <= now => {
+                let Reverse(e) = heap.pop().unwrap();
+                drop(heap);
+                inner.shards[e.shard].push_work(e.item);
+                heap = inner.timer.heap.lock().unwrap();
+            }
+            Some(due) => {
+                let (h, _) = inner
+                    .timer
+                    .cv
+                    .wait_timeout(heap, due - now)
+                    .unwrap();
+                heap = h;
+            }
+        }
+    }
+}
+
+/// Worker thread: drain the shard's inbox. Model-mode items are pure
+/// bookkeeping (no sleeping); PJRT items block on the executor, which
+/// bounds concurrent jobs at the pool size.
+fn worker_loop(inner: Arc<Inner>, shard: usize) {
+    loop {
+        let item = {
+            let mut q = inner.shards[shard].work.lock().unwrap();
+            loop {
+                if let Some(item) = q.pop_front() {
+                    break Some(item);
+                }
+                if !inner.running.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = inner.shards[shard].work_cv.wait(q).unwrap();
+            }
+        };
+        match item {
+            None => return,
+            Some(WorkItem::ExecStart(d)) => run_exec_start(&inner, shard, d),
+            Some(WorkItem::Complete { d, exec_t0 }) => {
+                run_complete(&inner, shard, d, exec_t0)
+            }
+        }
+    }
 }
 
 /// Monitor thread for one shard: scaled-free 200 ms-class ticks (the
 /// shard's own `monitor_period`, real time), exactly like the paper's
-/// NVML poller — utilization sampling, dynamic D, TTL expiry.
-fn spawn_monitor(inner: &Arc<Inner>, shard: usize) -> thread::JoinHandle<()> {
-    let mon = Arc::clone(inner);
-    thread::spawn(move || {
-        let period =
-            Duration::from_nanos(mon.shards[shard].lock().unwrap().cfg.monitor_period);
-        while mon.running.load(Ordering::SeqCst) {
-            thread::sleep(period);
-            let now = mon.clock.now();
-            let ds = mon.shards[shard].lock().unwrap().on_monitor_tick(now);
-            handle_dispatches(&mon, shard, ds);
+/// NVML poller — utilization sampling, dynamic D, TTL expiry. Parks on
+/// the shard's gate while idle: an idle server's planes see no
+/// tick-driven lock traffic at all (TTL expiry resumes with the next
+/// submit, whose tick fires at current wall time).
+fn monitor_loop(inner: Arc<Inner>, shard: usize) {
+    let st = &inner.shards[shard];
+    let period = Duration::from_nanos(st.plane.lock().unwrap().cfg.monitor_period);
+    // Failsafe recheck while parked: the submit-side wake is exact
+    // (idleness is decided under the plane lock), so this is pure
+    // defense in depth — a recheck wakes the thread but never ticks an
+    // idle plane.
+    let failsafe = period.saturating_mul(64).max(Duration::from_millis(100));
+    while inner.running.load(Ordering::SeqCst) {
+        if st.depth() == 0 {
+            let mut g = st.gate.lock().unwrap();
+            while !*g && inner.running.load(Ordering::SeqCst) && st.depth() == 0 {
+                let (gg, _) = st.gate_cv.wait_timeout(g, failsafe).unwrap();
+                g = gg;
+            }
+            *g = false;
+            continue;
         }
-    })
+        thread::sleep(period);
+        if !inner.running.load(Ordering::SeqCst) {
+            return;
+        }
+        let now = inner.clock.now();
+        let ds = {
+            let mut plane = st.plane.lock().unwrap();
+            let ds = plane.on_monitor_tick(now);
+            st.publish(&plane);
+            ds
+        };
+        st.ticks.fetch_add(1, Ordering::SeqCst);
+        schedule_dispatches(&inner, shard, ds);
+    }
 }
 
 /// PJRT executor thread: owns the (non-Send) runtime; executes one
@@ -503,13 +892,10 @@ fn spawn_executor(
 ) -> anyhow::Result<Sender<ExecJob>> {
     let (tx, rx): (Sender<ExecJob>, Receiver<ExecJob>) = channel();
     let dir = dir.to_path_buf();
-    let names: Vec<String> = {
-        let mut v: Vec<String> = workload
-            .funcs
-            .iter()
-            .map(|f| f.class.name.to_string())
-            .collect();
-        v.sort();
+    let names: Vec<&'static str> = {
+        let mut v: Vec<&'static str> =
+            workload.funcs.iter().map(|f| f.class.name).collect();
+        v.sort_unstable();
         v.dedup();
         v
     };
@@ -531,7 +917,7 @@ fn spawn_executor(
         let _ = ready_tx.send(Ok(()));
         while let Ok(job) = rx.recv() {
             let t0 = std::time::Instant::now();
-            let _ = rt.execute(&job.artifact);
+            let _ = rt.execute(job.artifact);
             let _ = job.reply.send(t0.elapsed());
         }
     });
@@ -539,81 +925,104 @@ fn spawn_executor(
     Ok(tx)
 }
 
-/// Run each dispatch on a worker thread: sleep the scaled pre-exec
-/// delays, execute (PJRT or modeled sleep), then complete and fulfill
-/// the submitter's ticket.
-fn handle_dispatches(inner: &Arc<Inner>, shard: usize, ds: Vec<Dispatch>) {
+/// Scaled model-time → wall-clock duration.
+fn scaled(scale: f64, ns: Nanos) -> Duration {
+    Duration::from_secs_f64(to_secs(ns) * scale)
+}
+
+/// Park each dispatch on the timer until its (scaled) exec start. The
+/// per-dispatch cost is one heap push — no thread is spawned anywhere
+/// on this path.
+fn schedule_dispatches(inner: &Arc<Inner>, shard: usize, ds: Vec<Dispatch>) {
+    if ds.is_empty() {
+        return;
+    }
+    let now = Instant::now();
     for d in ds {
-        let inner = Arc::clone(inner);
-        thread::spawn(move || run_dispatch(&inner, shard, d));
+        let delay = scaled(inner.scale, d.exec_start.saturating_sub(d.at));
+        inner
+            .timer
+            .schedule(now + delay, shard, WorkItem::ExecStart(d));
     }
 }
 
-fn run_dispatch(inner: &Arc<Inner>, shard: usize, d: Dispatch) {
-    let scale = inner.scale;
-    let sleep_scaled = |ns: Nanos| {
-        if ns > 0 {
-            thread::sleep(Duration::from_secs_f64(to_secs(ns) * scale));
-        }
-    };
-    // Cold boot + shim blocking (modeled, scaled).
-    sleep_scaled(d.exec_start.saturating_sub(d.at));
+/// The dispatch reached its exec start: touch the plane (the sim
+/// engine's Touch event, live), then execute — PJRT inline on this
+/// worker, or the modeled service as a timer event.
+fn run_exec_start(inner: &Arc<Inner>, shard: usize, d: Dispatch) {
     let exec_t0 = inner.clock.now();
-
-    // Service: real PJRT execution, or the modeled time scaled.
-    let class_name = {
-        let mut plane = inner.shards[shard].lock().unwrap();
-        // Exact utilization-integral touch at the wall-clock exec start
-        // (the sim engine's Touch event, live).
-        plane.touch(exec_t0);
-        plane.workload().func(d.func).class.name.to_string()
-    };
+    // Exact utilization-integral touch at the wall-clock exec start.
+    inner.shards[shard].plane.lock().unwrap().touch(exec_t0);
     if let Some(tx) = &inner.exec_tx {
         let (rtx, rrx) = channel();
         if tx
             .send(ExecJob {
-                artifact: class_name,
+                artifact: inner.class_names[d.func.0 as usize],
                 reply: rtx,
             })
             .is_ok()
         {
             let _ = rrx.recv();
         }
+        run_complete(inner, shard, d, exec_t0);
     } else {
-        sleep_scaled(d.exec);
+        // Model mode: the worker never sleeps — completion fires from
+        // the timer after the scaled modeled service time.
+        inner.timer.schedule(
+            Instant::now() + scaled(inner.scale, d.exec),
+            shard,
+            WorkItem::Complete { d, exec_t0 },
+        );
     }
+}
 
+/// Completion: retire the invocation on its plane, bump the stats
+/// aggregates, fulfill the submitter's ticket, and schedule any
+/// unlocked dispatches.
+fn run_complete(inner: &Arc<Inner>, shard: usize, d: Dispatch, exec_t0: Nanos) {
+    let st = &inner.shards[shard];
     let now = inner.clock.now();
-    let (rec, ds) = inner.shards[shard].lock().unwrap().on_complete(d.inv, now);
+    let (rec, ds) = {
+        let mut plane = st.plane.lock().unwrap();
+        let r = plane.on_complete(d.inv, now);
+        st.publish(&plane);
+        r
+    };
     // Completion matching: the plane hands back the completed
     // invocation's own record (not `records.last()`, which under
     // concurrent completions may belong to someone else).
     if let Some(rec) = rec {
         debug_assert_eq!(rec.inv, d.inv);
-        let mapped = inner.inv_tickets.lock().unwrap().remove(&(shard, d.inv));
-        if let Some((ticket, func_name)) = mapped {
+        let lat_ns = rec.completed.saturating_sub(rec.arrived);
+        inner.lat_sum_ns.fetch_add(lat_ns, Ordering::SeqCst);
+        if rec.start_kind == StartKind::Cold {
+            inner.cold_starts.fetch_add(1, Ordering::SeqCst);
+        }
+        inner.completed.fetch_add(1, Ordering::SeqCst);
+        let mapped = st.inv_tickets.lock().unwrap().remove(&d.inv);
+        if let Some(ticket) = mapped {
             fulfill(
                 inner,
                 ticket,
                 InvokeOutcome {
                     ticket,
-                    func: func_name,
+                    func: inner.func_names[d.func.0 as usize].clone(),
                     shard,
                     gpu: rec.gpu.0,
                     start_kind: rec.start_kind,
-                    latency_ms: to_secs(rec.completed.saturating_sub(rec.arrived)) * 1e3,
+                    latency_ms: to_secs(lat_ns) * 1e3,
                     exec_ms: to_secs(now.saturating_sub(exec_t0)) * 1e3,
                 },
             );
         }
     }
-    handle_dispatches(inner, shard, ds);
+    schedule_dispatches(inner, shard, ds);
 }
 
 /// Mark a ticket done and wake every waiter blocked on it.
 fn fulfill(inner: &Arc<Inner>, ticket: Ticket, outcome: InvokeOutcome) {
     let prev = inner
-        .tickets
+        .ticket_slot(ticket.0)
         .lock()
         .unwrap()
         .complete(ticket.0, outcome.clone());
@@ -651,18 +1060,30 @@ fn serve_on(handle: RtHandle, addr: &str) -> anyhow::Result<std::net::SocketAddr
 /// embed via [`RtServer::handle`] or the [`Frontend`] impl.
 pub struct RtServer {
     inner: Arc<Inner>,
-    monitors: Mutex<Vec<thread::JoinHandle<()>>>,
+    threads: Mutex<Vec<thread::JoinHandle<()>>>,
 }
 
 impl RtServer {
     /// `artifacts_dir`: load + compile HLO artifacts and execute them on
     /// dispatch (real execution). `None`: sleep the modeled service time
-    /// instead (pure control-plane demo).
+    /// instead (pure control-plane demo). Worker pool defaults to
+    /// [`DEFAULT_WORKERS`]; see [`RtServer::with_workers`].
     pub fn new(
         workload: Workload,
         cfg: PlaneConfig,
         artifacts_dir: Option<&std::path::Path>,
         scale: f64,
+    ) -> anyhow::Result<Self> {
+        Self::with_workers(workload, cfg, artifacts_dir, scale, DEFAULT_WORKERS)
+    }
+
+    /// [`RtServer::new`] with an explicit per-shard worker-pool size.
+    pub fn with_workers(
+        workload: Workload,
+        cfg: PlaneConfig,
+        artifacts_dir: Option<&std::path::Path>,
+        scale: f64,
+        workers: usize,
     ) -> anyhow::Result<Self> {
         let capacities = vec![cfg.fleet_capacity()];
         // Trivial ring: every routing question answers shard 0.
@@ -677,8 +1098,8 @@ impl RtServer {
             artifacts_dir,
             scale,
         )?;
-        let monitors = Mutex::new(vec![spawn_monitor(&inner, 0)]);
-        Ok(Self { inner, monitors })
+        let threads = Mutex::new(spawn_threads(&inner, workers));
+        Ok(Self { inner, threads })
     }
 }
 
@@ -693,18 +1114,30 @@ impl_guard!(RtServer);
 /// owning guard, like [`RtServer`].
 pub struct RtCluster {
     inner: Arc<Inner>,
-    monitors: Mutex<Vec<thread::JoinHandle<()>>>,
+    threads: Mutex<Vec<thread::JoinHandle<()>>>,
 }
 
 impl RtCluster {
     /// Build `cfg.n_shards` planes (heterogeneous via
     /// [`ClusterConfig::shard_planes`]), the capacity-weighted router,
-    /// and one monitor thread per shard.
+    /// and the fixed background set (timer, [`DEFAULT_WORKERS`] workers
+    /// per shard, one monitor per shard).
     pub fn new(
         workload: Workload,
         cfg: ClusterConfig,
         artifacts_dir: Option<&std::path::Path>,
         scale: f64,
+    ) -> anyhow::Result<Self> {
+        Self::with_workers(workload, cfg, artifacts_dir, scale, DEFAULT_WORKERS)
+    }
+
+    /// [`RtCluster::new`] with an explicit per-shard worker-pool size.
+    pub fn with_workers(
+        workload: Workload,
+        cfg: ClusterConfig,
+        artifacts_dir: Option<&std::path::Path>,
+        scale: f64,
+        workers: usize,
     ) -> anyhow::Result<Self> {
         assert!(cfg.n_shards >= 1, "cluster needs at least one shard");
         assert!(
@@ -727,12 +1160,8 @@ impl RtCluster {
             artifacts_dir,
             scale,
         )?;
-        let monitors = Mutex::new(
-            (0..cfg.n_shards)
-                .map(|s| spawn_monitor(&inner, s))
-                .collect(),
-        );
-        Ok(Self { inner, monitors })
+        let threads = Mutex::new(spawn_threads(&inner, workers));
+        Ok(Self { inner, threads })
     }
 
     pub fn n_shards(&self) -> usize {
@@ -745,7 +1174,7 @@ impl_guard!(RtCluster);
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::types::{StartKind, MS};
+    use crate::types::MS;
     use crate::workload::catalog::by_name;
 
     fn workload() -> Workload {
@@ -950,8 +1379,7 @@ mod tests {
             latency_ms: 1.0,
             exec_ms: 1.0,
         };
-        let mut t = TicketTable::new();
-        t.max_done = 2;
+        let mut t = TicketTable::with_max(2);
         for id in 0..5 {
             t.insert_pending(id);
             t.complete(id, outcome(id));
@@ -998,5 +1426,77 @@ mod tests {
             assert_eq!(o.func, "isoneural-0");
             assert_eq!(f.stats().invocations, 1);
         }
+    }
+
+    #[test]
+    fn executor_thread_count_is_config_not_load() {
+        // shards × workers + 1 timer, fixed at construction...
+        let srv = RtServer::with_workers(workload(), fast_cfg(), None, 0.0005, 3).unwrap();
+        assert_eq!(srv.exec_threads(), 3 + 1);
+        // ...and unchanged by a burst (the 1k-invoke version lives in
+        // rust/tests/wire_protocol.rs; this pins the unit invariant).
+        let tickets: Vec<Ticket> = (0..64)
+            .map(|_| srv.submit("isoneural-0").unwrap())
+            .collect();
+        for t in tickets {
+            srv.wait(t, WAIT).unwrap();
+        }
+        assert_eq!(srv.exec_threads(), 3 + 1);
+        assert_eq!(srv.stats().invocations, 64);
+    }
+
+    #[test]
+    fn idle_monitor_parks_without_tick_lock_traffic() {
+        // 20 ms monitor period: an idle server must not tick at all.
+        let srv = RtServer::new(workload(), fast_cfg(), None, 0.001).unwrap();
+        thread::sleep(Duration::from_millis(200));
+        assert_eq!(srv.monitor_ticks(), 0, "idle monitor must stay parked");
+        // Work wakes the monitor; ticks flow while the shard is busy.
+        let t = srv.submit("fft-0").unwrap();
+        srv.wait(t, WAIT).unwrap();
+        // After the shard drains, at most one trailing tick can land;
+        // then the count must freeze again.
+        thread::sleep(Duration::from_millis(200));
+        let settled = srv.monitor_ticks();
+        thread::sleep(Duration::from_millis(300));
+        assert_eq!(
+            srv.monitor_ticks(),
+            settled,
+            "drained shard's monitor must re-park"
+        );
+    }
+
+    #[test]
+    fn stats_fast_path_matches_plane_recorders() {
+        // The O(1) stats aggregates must agree with the ground truth in
+        // the per-shard recorders once the server quiesces.
+        let cfg = ClusterConfig {
+            n_shards: 2,
+            router: RouterKind::RoundRobin,
+            plane: fast_cfg(),
+            ..Default::default()
+        };
+        let srv = RtCluster::new(workload(), cfg, None, 0.0005).unwrap();
+        let tickets: Vec<Ticket> = (0..10)
+            .map(|i| srv.submit(["isoneural-0", "fft-0"][i % 2]).unwrap())
+            .collect();
+        for t in tickets {
+            srv.wait(t, WAIT).unwrap();
+        }
+        let s = srv.stats();
+        assert_eq!(s.invocations, 10);
+        assert_eq!(s.pending, 0);
+        assert_eq!(s.in_flight, 0);
+        let (mut n, mut lat_sum, mut cold_sum) = (0usize, 0.0f64, 0.0f64);
+        for st in srv.inner.shards.iter() {
+            let plane = st.plane.lock().unwrap();
+            let k = plane.recorder.len();
+            n += k;
+            lat_sum += plane.recorder.weighted_avg_latency_s() * k as f64;
+            cold_sum += plane.recorder.cold_ratio() * k as f64;
+        }
+        assert_eq!(n, 10);
+        assert!((s.mean_latency_ms - lat_sum / n as f64 * 1e3).abs() < 1e-6);
+        assert!((s.cold_ratio - cold_sum / n as f64).abs() < 1e-9);
     }
 }

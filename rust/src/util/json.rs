@@ -40,6 +40,15 @@ impl Json {
         out
     }
 
+    /// Writer-based [`Self::render_compact`]: append the single-line
+    /// rendering to `out` instead of allocating a fresh `String`. The
+    /// serving wire loop renders every reply through this into a
+    /// per-connection buffer, so steady-state responses reuse one
+    /// allocation instead of churning one per message.
+    pub fn render_compact_into(&self, out: &mut String) {
+        self.write_compact(out);
+    }
+
     fn write_compact(&self, out: &mut String) {
         match self {
             Json::Null | Json::Bool(_) | Json::Int(_) | Json::Num(_) | Json::Str(_) => {
@@ -77,14 +86,7 @@ impl Json {
             Json::Int(i) => {
                 let _ = write!(out, "{i}");
             }
-            Json::Num(x) => {
-                // JSON has no NaN/Infinity literals.
-                if x.is_finite() {
-                    let _ = write!(out, "{x}");
-                } else {
-                    out.push_str("null");
-                }
-            }
+            Json::Num(x) => write_f64(out, *x),
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(xs) => {
                 if xs.is_empty() {
@@ -131,7 +133,20 @@ fn newline_indent(out: &mut String, indent: usize) {
     }
 }
 
-fn write_escaped(out: &mut String, s: &str) {
+/// Append `x` using the JSON number rules shared by [`Json::Num`]
+/// rendering and the direct response writers in [`crate::api::wire`]
+/// (JSON has no NaN/Infinity literals — they render as `null`).
+pub(crate) fn write_f64(out: &mut String, x: f64) {
+    if x.is_finite() {
+        let _ = write!(out, "{x}");
+    } else {
+        out.push_str("null");
+    }
+}
+
+/// Append `s` as a quoted, escaped JSON string. Shared with the direct
+/// wire writers so their bytes match tree-based rendering exactly.
+pub(crate) fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {
@@ -194,6 +209,22 @@ mod tests {
         let got = doc.render_compact();
         assert_eq!(got, "{\"a\":1,\"b\":[\"x\\ny\",null],\"c\":{}}");
         assert!(!got.contains('\n'));
+    }
+
+    #[test]
+    fn render_compact_into_appends_and_reuses_the_buffer() {
+        let doc = Json::Obj(vec![("a".into(), Json::Int(1))]);
+        let mut out = String::with_capacity(64);
+        doc.render_compact_into(&mut out);
+        assert_eq!(out, "{\"a\":1}");
+        let cap = out.capacity();
+        for _ in 0..100 {
+            out.clear();
+            doc.render_compact_into(&mut out);
+        }
+        assert_eq!(out, "{\"a\":1}");
+        // Steady state: the warmed buffer is never regrown.
+        assert_eq!(out.capacity(), cap);
     }
 
     #[test]

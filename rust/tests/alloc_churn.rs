@@ -1,0 +1,138 @@
+//! Wire-path allocation-churn gates: the serving loop's encode/parse
+//! primitives must stop allocating once warm (the PR-4 loop built a
+//! `String`-keyed `Json::Obj` tree per message and a fresh `String`
+//! per line).
+//!
+//! A counting global allocator measures heap events (alloc/realloc)
+//! around each primitive. This binary intentionally holds exactly ONE
+//! `#[test]` so no concurrent test can pollute the global counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use mqfq::api::types::{InvokeOutcome, Response, StatsSnapshot, Ticket};
+use mqfq::api::wire;
+use mqfq::types::StartKind;
+use mqfq::util::json::Json;
+
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, new)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs_during<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    let before = ALLOC_EVENTS.load(Ordering::SeqCst);
+    let r = f();
+    (ALLOC_EVENTS.load(Ordering::SeqCst) - before, r)
+}
+
+#[test]
+fn wire_path_steady_state_allocation_churn() {
+    const ITERS: u64 = 100;
+
+    // -- 1. Writer-based response encoding into a warmed buffer: the
+    // steady-state serving reply path performs ZERO heap events.
+    let done = Response::Done(InvokeOutcome {
+        ticket: Ticket(42),
+        func: "fft-0".to_string(),
+        shard: 3,
+        gpu: 1,
+        start_kind: StartKind::GpuWarm,
+        latency_ms: 12.375,
+        exec_ms: 9.0625,
+    });
+    let stats = Response::Stats(StatsSnapshot {
+        invocations: 123456,
+        mean_latency_ms: 3.25,
+        cold_ratio: 0.125,
+        pending: 7,
+        in_flight: 5,
+    });
+    let mut out = String::with_capacity(512);
+    wire::encode_response_into(&done, &mut out); // warm the buffer
+    let (n, _) = allocs_during(|| {
+        for _ in 0..ITERS {
+            out.clear();
+            wire::encode_response_into(&done, &mut out);
+            out.clear();
+            wire::encode_response_into(&stats, &mut out);
+        }
+    });
+    assert_eq!(
+        n, 0,
+        "writer-based response encoding must not allocate into a warm buffer"
+    );
+
+    // -- 2. render_compact_into on a prebuilt tree reuses the caller's
+    // buffer: zero heap events once warm.
+    let tree = Json::Obj(vec![
+        ("ok".into(), Json::Bool(true)),
+        ("type".into(), Json::str("stats")),
+        ("invocations".into(), Json::Int(99)),
+        ("mean_latency_ms".into(), Json::Num(1.5)),
+    ]);
+    let mut buf = String::with_capacity(512);
+    tree.render_compact_into(&mut buf);
+    let (n, _) = allocs_during(|| {
+        for _ in 0..ITERS {
+            buf.clear();
+            tree.render_compact_into(&mut buf);
+        }
+    });
+    assert_eq!(n, 0, "render_compact_into must reuse the warm buffer");
+
+    // -- 3. The borrowed request parse allocates strictly less than the
+    // owned tree parse: escape-free strings stay slices of the line, so
+    // only the object's field vector touches the heap.
+    let line = r#"{"cmd":"invoke","func":"fft-0","mode":"sync","deadline_ms":5000}"#;
+    let (owned, _) = allocs_during(|| {
+        for _ in 0..ITERS {
+            std::hint::black_box(wire::parse_json(line).unwrap());
+        }
+    });
+    let (borrowed, _) = allocs_during(|| {
+        for _ in 0..ITERS {
+            std::hint::black_box(wire::parse_jval(line).unwrap());
+        }
+    });
+    assert!(
+        borrowed < owned,
+        "borrowed parse ({borrowed} heap events) must undercut the owned parse ({owned})"
+    );
+    // Field-vector growth only: well under one heap event per field,
+    // and nothing per string (4 keys + 3 string values stay borrowed).
+    assert!(
+        borrowed <= ITERS * 5,
+        "borrowed parse churns too much: {borrowed} heap events over {ITERS} parses"
+    );
+
+    // -- 4. End-to-end line handling sanity: the borrowed value really
+    // borrows (no silent fallback to owned strings).
+    let v = wire::parse_jval(line).unwrap();
+    assert_eq!(v.get_str("cmd"), Some("invoke"));
+    assert_eq!(v.get_str("func"), Some("fft-0"));
+    assert!(matches!(
+        v.get("func"),
+        Some(wire::JVal::Str(std::borrow::Cow::Borrowed("fft-0")))
+    ));
+}

@@ -359,3 +359,112 @@ fn frontend_shutdown_surfaces_via_the_wire() {
     assert_eq!(err.code(), "shutting-down");
     assert!(matches!(err, ApiError::ShuttingDown));
 }
+
+#[test]
+fn concurrent_clients_conserve_every_invocation() {
+    // N client threads hammer mixed sync / async+wait / async+poll /
+    // stats against a 4-shard sticky cluster over real loopback TCP.
+    // Conservation: every submitted invoke is claimed exactly once (a
+    // second claim sees unknown-ticket), no tickets strand, and the
+    // aggregate stats match the offered total with nothing left queued.
+    let cfg = ClusterConfig {
+        n_shards: 4,
+        router: RouterKind::StickyCh,
+        plane: fast_cfg(),
+        ..Default::default()
+    };
+    let srv = RtCluster::new(workload(), cfg, None, 0.0002).unwrap();
+    let addr = srv.serve("127.0.0.1:0").unwrap();
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 30;
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut cl = ApiClient::connect(addr).unwrap();
+                let names = ["isoneural-0", "fft-0"];
+                let mut claimed = 0usize;
+                for i in 0..PER_CLIENT {
+                    let func = names[(c + i) % 2];
+                    match i % 3 {
+                        0 => {
+                            let o = cl.invoke(func, Some(30_000)).unwrap();
+                            assert!(o.shard < 4);
+                            claimed += 1;
+                        }
+                        1 => {
+                            let t = cl.invoke_async(func).unwrap();
+                            let o = loop {
+                                match cl.poll(t).unwrap() {
+                                    Some(o) => break o,
+                                    None => std::thread::sleep(
+                                        Duration::from_micros(200),
+                                    ),
+                                }
+                            };
+                            assert_eq!(o.ticket, t);
+                            claimed += 1;
+                            // Claimed exactly once: re-claim must fail.
+                            assert_eq!(
+                                cl.poll(t).unwrap_err().code(),
+                                "unknown-ticket"
+                            );
+                        }
+                        _ => {
+                            let t = cl.invoke_async(func).unwrap();
+                            let o = cl.wait(t, Some(30_000)).unwrap();
+                            assert_eq!(o.ticket, t);
+                            claimed += 1;
+                            assert_eq!(
+                                cl.wait(t, Some(1_000)).unwrap_err().code(),
+                                "unknown-ticket"
+                            );
+                        }
+                    }
+                    if i % 7 == 0 {
+                        // Interleaved stats reads never lock a plane and
+                        // must not wedge the submit path.
+                        let _ = cl.stats().unwrap();
+                    }
+                }
+                claimed
+            })
+        })
+        .collect();
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, CLIENTS * PER_CLIENT, "every invoke claimed exactly once");
+    let mut client = ApiClient::connect(addr).unwrap();
+    let s = client.stats().unwrap();
+    assert_eq!(s.invocations, CLIENTS * PER_CLIENT, "stats totals conserve");
+    assert_eq!(s.pending, 0, "no stranded queue entries");
+    assert_eq!(s.in_flight, 0, "no stranded in-flight work");
+    assert!(s.mean_latency_ms > 0.0);
+}
+
+#[test]
+fn executor_thread_count_is_config_not_load_under_burst() {
+    // The serving path must not spawn per dispatch: executor-side
+    // thread count is shards × workers + 1 (timer), before and after a
+    // 1k-invoke burst far beyond the pool size.
+    let cfg = ClusterConfig {
+        n_shards: 4,
+        router: RouterKind::StickyCh,
+        plane: fast_cfg(),
+        ..Default::default()
+    };
+    let srv = RtCluster::with_workers(workload(), cfg, None, 0.0002, 2).unwrap();
+    let before = srv.exec_threads();
+    assert_eq!(before, 4 * 2 + 1, "shards × pool_size + timer");
+    let tickets: Vec<_> = (0..1000)
+        .map(|i| srv.submit(["isoneural-0", "fft-0"][i % 2]).unwrap())
+        .collect();
+    for t in tickets {
+        srv.wait(t, Some(Duration::from_secs(60))).unwrap();
+    }
+    assert_eq!(
+        srv.exec_threads(),
+        before,
+        "burst must not change executor thread count"
+    );
+    assert_eq!(srv.stats().invocations, 1000);
+    assert_eq!(srv.stats().pending, 0);
+}

@@ -70,6 +70,7 @@ def flatten(value, prefix, out):
             label = str(i)
             if isinstance(sub, dict):
                 ident = [str(sub[k]) for k in ("fleet", "router", "impl", "name",
+                                               "shape", "loop", "clients",
                                                "shards", "flows", "active") if k in sub]
                 if ident:
                     label = ":".join(ident)

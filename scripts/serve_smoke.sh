@@ -88,6 +88,23 @@ assert stats["pending"] == 0 and stats["in_flight"] == 0, stats
 line = legacy("stats")
 assert line.startswith("ok invocations=2"), line
 
+# Minimum smoke throughput: 100 sequential sync invokes must complete
+# under a generous wall bound (catches a serving path that limps —
+# e.g. a wedged worker pool or timer — without being a benchmark).
+N, BOUND_S = 100, 30.0
+t0 = time.time()
+for i in range(N):
+    done = call({"cmd": "invoke", "func": "isoneural-0", "mode": "sync",
+                 "deadline_ms": 60000})
+    assert done["ok"] and done["type"] == "done", done
+wall = time.time() - t0
+assert wall < BOUND_S, "throughput smoke: %d invokes took %.1fs (bound %.0fs)" % (
+    N, wall, BOUND_S)
+stats = call({"cmd": "stats"})
+assert stats["invocations"] == 2 + N, stats
+assert stats["pending"] == 0 and stats["in_flight"] == 0, stats
+
 call({"cmd": "quit"})
-print("serve smoke: OK (sync + async + errors + legacy over protocol v1)")
+print("serve smoke: OK (sync + async + errors + legacy + %d invokes in %.2fs)"
+      % (N, wall))
 EOF
