@@ -1,6 +1,6 @@
 # Convenience targets; see ROADMAP.md for the tier-1 verify.
 
-.PHONY: check test smoke bench-perf bench-cluster bench-hetero bench-serving artifacts
+.PHONY: check test smoke bench-perf bench-cluster bench-hetero bench-serving bench-elastic artifacts
 
 # Build + test + clippy-clean + serving smoke (the full local gate).
 check:
@@ -35,6 +35,12 @@ bench-hetero:
 # Compare against a previous run: scripts/bench_diff.sh OLD.json BENCH_serving.json
 bench-serving:
 	cargo bench --bench serving_throughput
+
+# Regenerate the elastic-membership storm (sim + TCP kill storm) and
+# BENCH_elastic.json. Quick smoke: ELASTIC_QUICK=1 make bench-elastic.
+# Compare against a previous run: scripts/bench_diff.sh OLD.json BENCH_elastic.json
+bench-elastic:
+	cargo bench --bench elastic_membership
 
 # AOT-lower the python/JAX function bodies to HLO artifacts where the
 # rust runtime (rust/artifacts/) looks for them.

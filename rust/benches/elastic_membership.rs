@@ -1,0 +1,12 @@
+//! `cargo bench --bench elastic_membership` — the §Elastic membership
+//! storm: a deterministic sim drain/kill/join script plus the
+//! wall-clock kill-one-of-four storm over real loopback TCP, emitting
+//! `BENCH_elastic.json` and holding the ticket-fate and recovery gates.
+//! Thin wrapper over `mqfq::experiments::elastic::main` (also:
+//! `mqfq-sticky exp elastic`; `ELASTIC_QUICK=1` for a smoke run).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::elastic::main();
+    println!("[bench elastic_membership completed in {:.2?}]", t0.elapsed());
+}

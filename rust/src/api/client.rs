@@ -1,16 +1,86 @@
 //! Blocking protocol-v1 client: one TCP connection, JSON-lines framing,
 //! `hello` handshake on connect. Used by the CLI `invoke` subcommand,
 //! `examples/e2e_serving.rs`, and the wire-protocol conformance tests.
+//!
+//! Optional bounded retry ([`RetryPolicy`], off by default): transient
+//! failures — `overloaded` backpressure and transport errors — are
+//! retried with jittered exponential backoff; an I/O failure
+//! reconnects and re-handshakes before the resend. Non-transient
+//! errors (unknown function, shard lost, bad request, ...) are never
+//! retried: they are answers, not weather.
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use super::types::{
-    ApiError, DescribeInfo, InvokeMode, InvokeOutcome, Request, Response, StatsSnapshot,
-    Ticket, PROTOCOL_VERSION,
+    ApiError, DescribeInfo, InvokeMode, InvokeOutcome, MembershipInfo, Request, Response,
+    StatsSnapshot, Ticket, PROTOCOL_VERSION,
 };
 use super::wire;
+use crate::util::rng::Rng;
+
+/// Bounded-retry policy for transient errors ([`ApiError::Overloaded`],
+/// [`ApiError::Io`]). Delay for retry *k* (0-based) is drawn uniformly
+/// from `[d/2, d]` with `d = min(base · 2^k, max)` — exponential
+/// backoff with jitter, so a herd of clients bounced by the same
+/// overload spike does not re-arrive in lockstep.
+///
+/// The default policy is **off** (`attempts == 0`): retrying a submit
+/// over a dropped connection can double-invoke (the server may have
+/// accepted the first copy before the transport died), so opting in is
+/// the caller's statement that its traffic tolerates that.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Retries after the initial attempt; 0 disables retrying.
+    pub attempts: u32,
+    /// First backoff delay (doubled each retry).
+    pub base_delay: Duration,
+    /// Backoff ceiling.
+    pub max_delay: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
+impl RetryPolicy {
+    /// No retrying: the first error is the answer.
+    pub fn off() -> Self {
+        Self {
+            attempts: 0,
+            base_delay: Duration::from_millis(10),
+            max_delay: Duration::from_secs(1),
+        }
+    }
+
+    /// Retry transient errors up to `attempts` times with the default
+    /// 10 ms base / 1 s cap backoff.
+    pub fn new(attempts: u32) -> Self {
+        Self {
+            attempts,
+            ..Self::off()
+        }
+    }
+
+    /// Is this error worth retrying? Backpressure and transport faults
+    /// are transient; everything else is a real answer.
+    pub fn transient(e: &ApiError) -> bool {
+        matches!(e, ApiError::Overloaded { .. } | ApiError::Io { .. })
+    }
+
+    /// Jittered backoff before retry `attempt` (0-based): uniform in
+    /// `[d/2, d]`, `d = min(base · 2^attempt, max)`.
+    fn backoff(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let exp = self
+            .base_delay
+            .saturating_mul(2u32.saturating_pow(attempt.min(20)));
+        let d = exp.min(self.max_delay);
+        Duration::from_secs_f64(rng.range(d.as_secs_f64() / 2.0, d.as_secs_f64()))
+    }
+}
 
 /// A connected, version-negotiated client. One request in flight at a
 /// time (the protocol is strictly request/reply per connection); async
@@ -27,6 +97,14 @@ pub struct ApiClient {
     wbuf: String,
     /// Reused reply-line buffer.
     rbuf: String,
+    /// Transient-error retry policy; [`RetryPolicy::off`] by default.
+    retry: RetryPolicy,
+    /// Remembered peer for reconnect-on-I/O-failure retries.
+    peer: Option<SocketAddr>,
+    /// Backoff jitter source (deterministic seed; jitter decorrelates
+    /// clients through their independent retry counts and timing, not
+    /// through entropy).
+    rng: Rng,
 }
 
 fn io_err<E: std::fmt::Display>(e: E) -> ApiError {
@@ -39,15 +117,20 @@ impl ApiClient {
     /// Connect and negotiate the protocol version (hello handshake).
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self, ApiError> {
         let stream = TcpStream::connect(addr).map_err(io_err)?;
+        let peer = stream.peer_addr().ok();
         let writer = stream.try_clone().map_err(io_err)?;
+        let seed = 0x9E37_79B9_7F4A_7C15 ^ peer.map_or(0, |p| p.port() as u64);
         let mut client = Self {
             reader: BufReader::new(stream),
             writer,
             proto: 0,
             wbuf: String::with_capacity(128),
             rbuf: String::with_capacity(256),
+            retry: RetryPolicy::off(),
+            peer,
+            rng: Rng::new(seed),
         };
-        match client.call(&Request::Hello {
+        match client.call_once(&Request::Hello {
             version: PROTOCOL_VERSION,
         })? {
             Response::Hello { proto, .. } => {
@@ -63,16 +146,66 @@ impl ApiClient {
         self.proto
     }
 
+    /// Opt into bounded transient-error retries (see [`RetryPolicy`]).
+    pub fn set_retry(&mut self, policy: RetryPolicy) {
+        self.retry = policy;
+    }
+
     /// Bound how long any single reply may take (e.g. sync invokes on a
     /// loaded server). `None` restores fully blocking reads.
     pub fn set_read_timeout(&self, timeout: Option<Duration>) -> Result<(), ApiError> {
         self.writer.set_read_timeout(timeout).map_err(io_err)
     }
 
+    /// One round trip under the retry policy: transient failures
+    /// (overload, transport) back off and retry up to
+    /// `retry.attempts` times; an I/O failure reconnects first.
+    fn call(&mut self, req: &Request) -> Result<Response, ApiError> {
+        let mut attempt = 0;
+        loop {
+            let err = match self.call_once(req) {
+                Ok(resp) => return Ok(resp),
+                Err(e) => e,
+            };
+            if attempt >= self.retry.attempts || !RetryPolicy::transient(&err) {
+                return Err(err);
+            }
+            std::thread::sleep(self.retry.backoff(attempt, &mut self.rng));
+            if matches!(err, ApiError::Io { .. }) {
+                // The connection is gone; a resend needs a fresh one.
+                // A failed reconnect is itself the (transport) answer.
+                self.reconnect()?;
+            }
+            attempt += 1;
+        }
+    }
+
+    /// Reconnect to the remembered peer and redo the hello handshake.
+    fn reconnect(&mut self) -> Result<(), ApiError> {
+        let Some(peer) = self.peer else {
+            return Err(ApiError::Io {
+                detail: "no remembered peer address to reconnect to".into(),
+            });
+        };
+        let stream = TcpStream::connect(peer).map_err(io_err)?;
+        let writer = stream.try_clone().map_err(io_err)?;
+        self.reader = BufReader::new(stream);
+        self.writer = writer;
+        match self.call_once(&Request::Hello {
+            version: PROTOCOL_VERSION,
+        })? {
+            Response::Hello { proto, .. } => {
+                self.proto = proto;
+                Ok(())
+            }
+            other => Err(unexpected("hello", &other)),
+        }
+    }
+
     /// One request/reply round trip. Server-side failures come back as
     /// `Err` with the decoded [`ApiError`]; transport failures as
     /// [`ApiError::Io`].
-    fn call(&mut self, req: &Request) -> Result<Response, ApiError> {
+    fn call_once(&mut self, req: &Request) -> Result<Response, ApiError> {
         self.wbuf.clear();
         wire::encode_request_into(req, &mut self.wbuf);
         self.wbuf.push('\n');
@@ -156,14 +289,204 @@ impl ApiClient {
         }
     }
 
+    /// Admin: stop routing new work to `shard` (in-flight finishes).
+    pub fn drain(&mut self, shard: usize) -> Result<MembershipInfo, ApiError> {
+        self.membership_verb(&Request::Drain { shard }, "drain")
+    }
+
+    /// Admin: (re)insert `shard` into the routable set.
+    pub fn join(&mut self, shard: usize) -> Result<MembershipInfo, ApiError> {
+        self.membership_verb(&Request::Join { shard }, "join")
+    }
+
+    /// Admin: abrupt shard failure — stranded tickets resolve to
+    /// `shard-lost`, the routing ring heals.
+    pub fn kill(&mut self, shard: usize) -> Result<MembershipInfo, ApiError> {
+        self.membership_verb(&Request::Kill { shard }, "kill")
+    }
+
+    /// Admin: per-shard health/epoch snapshot + conservation counters.
+    pub fn membership(&mut self) -> Result<MembershipInfo, ApiError> {
+        self.membership_verb(&Request::Membership, "membership")
+    }
+
+    fn membership_verb(
+        &mut self,
+        req: &Request,
+        what: &str,
+    ) -> Result<MembershipInfo, ApiError> {
+        match self.call(req)? {
+            Response::Membership(m) => Ok(m),
+            other => Err(unexpected(what, &other)),
+        }
+    }
+
     /// Close the connection gracefully (server replies `bye`).
     pub fn quit(mut self) {
-        let _ = self.call(&Request::Shutdown);
+        let _ = self.call_once(&Request::Shutdown);
     }
 }
 
 fn unexpected(what: &str, got: &Response) -> ApiError {
     ApiError::Io {
         detail: format!("unexpected {what} reply: {got:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::thread;
+
+    /// A deliberately flaky protocol server on a real TCP socket:
+    /// the first `overloads` stats requests get an `overloaded` error,
+    /// the next `drops` get their connection cut before the reply (the
+    /// client sees a transport error), and everything after that
+    /// succeeds. Counts every stats request it sees.
+    fn flaky_server(overloads: usize, drops: usize) -> (SocketAddr, Arc<AtomicUsize>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let seen = Arc::new(AtomicUsize::new(0));
+        let seen_srv = Arc::clone(&seen);
+        thread::spawn(move || {
+            let mut overloads = overloads;
+            let mut drops = drops;
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { break };
+                let mut reader = BufReader::new(match stream.try_clone() {
+                    Ok(s) => s,
+                    Err(_) => continue,
+                });
+                let mut writer = stream;
+                let mut line = String::new();
+                'conn: loop {
+                    line.clear();
+                    if reader.read_line(&mut line).unwrap_or(0) == 0 {
+                        break;
+                    }
+                    let Ok(req) = wire::decode_request(line.trim()) else {
+                        break;
+                    };
+                    let resp = match req {
+                        Request::Hello { .. } => Response::Hello {
+                            proto: PROTOCOL_VERSION,
+                            server: "flaky-mock".to_string(),
+                        },
+                        Request::Stats => {
+                            seen_srv.fetch_add(1, Ordering::SeqCst);
+                            if overloads > 0 {
+                                overloads -= 1;
+                                Response::Error(ApiError::Overloaded {
+                                    pending: 9,
+                                    limit: 1,
+                                })
+                            } else if drops > 0 {
+                                drops -= 1;
+                                // Cut the connection instead of replying.
+                                break 'conn;
+                            } else {
+                                Response::Stats(StatsSnapshot::default())
+                            }
+                        }
+                        Request::Invoke { .. } => Response::Error(ApiError::BadRequest {
+                            detail: "mock serves stats only".to_string(),
+                        }),
+                        _ => Response::Bye,
+                    };
+                    let mut out = String::new();
+                    wire::encode_response_into(&resp, &mut out);
+                    out.push('\n');
+                    if writer.write_all(out.as_bytes()).is_err() {
+                        break;
+                    }
+                    if matches!(resp, Response::Bye) {
+                        break;
+                    }
+                }
+            }
+        });
+        (addr, seen)
+    }
+
+    #[test]
+    fn backoff_is_jittered_exponential_and_capped() {
+        let p = RetryPolicy {
+            attempts: 8,
+            base_delay: Duration::from_millis(10),
+            max_delay: Duration::from_millis(60),
+        };
+        let mut rng = Rng::new(7);
+        for attempt in 0..8 {
+            let uncapped = 10u64 << attempt; // ms
+            let d = p.backoff(attempt, &mut rng).as_secs_f64() * 1e3;
+            let ceil = (uncapped as f64).min(60.0);
+            assert!(
+                d >= ceil / 2.0 - 1e-9 && d <= ceil + 1e-9,
+                "attempt {attempt}: {d} ms outside [{}, {ceil}]",
+                ceil / 2.0
+            );
+        }
+        // Transience taxonomy: backpressure and transport only.
+        assert!(RetryPolicy::transient(&ApiError::Overloaded { pending: 1, limit: 1 }));
+        assert!(RetryPolicy::transient(&ApiError::Io { detail: "x".into() }));
+        assert!(!RetryPolicy::transient(&ApiError::ShuttingDown));
+        assert!(!RetryPolicy::transient(&ApiError::ShardLost {
+            shard: 0,
+            ticket: Ticket(1),
+        }));
+    }
+
+    #[test]
+    fn retry_is_off_by_default() {
+        let (addr, seen) = flaky_server(2, 0);
+        let mut c = ApiClient::connect(addr).unwrap();
+        assert_eq!(c.stats().unwrap_err().code(), "overloaded");
+        assert_eq!(seen.load(Ordering::SeqCst), 1, "no retry without opt-in");
+    }
+
+    #[test]
+    fn retry_rides_through_transient_overload() {
+        let (addr, seen) = flaky_server(2, 0);
+        let mut c = ApiClient::connect(addr).unwrap();
+        c.set_retry(RetryPolicy {
+            attempts: 3,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(5),
+        });
+        assert_eq!(c.stats().unwrap(), StatsSnapshot::default());
+        assert_eq!(seen.load(Ordering::SeqCst), 3, "two overloads + success");
+    }
+
+    #[test]
+    fn retry_exhaustion_returns_the_transient_error() {
+        let (addr, _seen) = flaky_server(10, 0);
+        let mut c = ApiClient::connect(addr).unwrap();
+        c.set_retry(RetryPolicy {
+            attempts: 2,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(2),
+        });
+        assert_eq!(c.stats().unwrap_err().code(), "overloaded");
+    }
+
+    #[test]
+    fn io_failure_reconnects_and_resends() {
+        let (addr, seen) = flaky_server(0, 1);
+        let mut c = ApiClient::connect(addr).unwrap();
+        c.set_retry(RetryPolicy {
+            attempts: 2,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(5),
+        });
+        // First stats gets its connection cut → reconnect + handshake
+        // on a fresh connection → resend succeeds.
+        assert_eq!(c.stats().unwrap(), StatsSnapshot::default());
+        assert_eq!(c.proto(), PROTOCOL_VERSION);
+        assert_eq!(seen.load(Ordering::SeqCst), 2, "dropped + resent");
+        // Non-transient server answers are never retried.
+        assert_eq!(c.invoke("f", None).unwrap_err().code(), "bad-request");
     }
 }

@@ -25,10 +25,10 @@ pub mod client;
 pub mod types;
 pub mod wire;
 
-pub use client::ApiClient;
+pub use client::{ApiClient, RetryPolicy};
 pub use types::{
-    ApiError, DescribeInfo, InvokeMode, InvokeOutcome, Request, Response, StatsSnapshot,
-    Ticket, PROTOCOL_VERSION,
+    ApiError, DescribeInfo, InvokeMode, InvokeOutcome, MembershipInfo, Request, Response,
+    ShardHealth, ShardInfo, StatsSnapshot, Ticket, PROTOCOL_VERSION,
 };
 
 use std::time::Duration;
@@ -77,5 +77,41 @@ pub trait Frontend: Send + Sync {
     fn invoke(&self, func: &str, deadline: Option<Duration>) -> Result<InvokeOutcome, ApiError> {
         let ticket = self.submit(func)?;
         self.wait(ticket, deadline)
+    }
+
+    // --- elastic membership (admin verbs) ---------------------------
+    //
+    // Default implementations reject: a frontend without dynamic
+    // membership (e.g. a test mock) is a fixed fleet, and admin verbs
+    // against it are a client error, not a panic.
+
+    /// Stop routing new work to `shard`; in-flight work finishes.
+    fn drain(&self, _shard: usize) -> Result<MembershipInfo, ApiError> {
+        Err(ApiError::BadRequest {
+            detail: "this frontend does not support membership changes".into(),
+        })
+    }
+
+    /// (Re)insert `shard` into the routable set.
+    fn join(&self, _shard: usize) -> Result<MembershipInfo, ApiError> {
+        Err(ApiError::BadRequest {
+            detail: "this frontend does not support membership changes".into(),
+        })
+    }
+
+    /// Abrupt shard failure: every ticket homed on `shard` resolves to
+    /// [`ApiError::ShardLost`] immediately; the routing ring heals.
+    fn kill(&self, _shard: usize) -> Result<MembershipInfo, ApiError> {
+        Err(ApiError::BadRequest {
+            detail: "this frontend does not support membership changes".into(),
+        })
+    }
+
+    /// Membership snapshot: per-shard health/epoch + conservation
+    /// counters.
+    fn membership(&self) -> Result<MembershipInfo, ApiError> {
+        Err(ApiError::BadRequest {
+            detail: "this frontend does not support membership changes".into(),
+        })
     }
 }

@@ -85,6 +85,15 @@ pub enum Request {
     Poll { ticket: Ticket },
     /// Aggregate serving stats.
     Stats,
+    /// Admin: stop routing new work to a shard; in-flight finishes.
+    Drain { shard: usize },
+    /// Admin: (re)insert a shard into the routable set.
+    Join { shard: usize },
+    /// Admin: abrupt shard failure — every ticket homed there resolves
+    /// to [`ApiError::ShardLost`]; the ring heals around it.
+    Kill { shard: usize },
+    /// Admin: per-shard health/epoch snapshot + conservation counters.
+    Membership,
     /// Close this connection (the server keeps running; stopping the
     /// server is the owning process's call, not a network client's).
     Shutdown,
@@ -134,6 +143,94 @@ pub struct StatsSnapshot {
     pub in_flight: usize,
 }
 
+/// Lifecycle state of one shard in an elastic cluster. Shard *indices*
+/// are stable for the life of the server — membership changes flip
+/// health in place, they never renumber (`n_shards` is capacity, not
+/// live count).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardHealth {
+    /// Routable and serving.
+    Up,
+    /// No new work routed; in-flight invocations run to completion.
+    Draining,
+    /// Failed or retired: plane state discarded, tickets resolved to
+    /// [`ApiError::ShardLost`], ring healed around it.
+    Dead,
+}
+
+impl ShardHealth {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardHealth::Up => "up",
+            ShardHealth::Draining => "draining",
+            ShardHealth::Dead => "dead",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "up" => ShardHealth::Up,
+            "draining" => ShardHealth::Draining,
+            "dead" => ShardHealth::Dead,
+            _ => return None,
+        })
+    }
+}
+
+/// Per-shard row of a `membership` reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardInfo {
+    pub shard: usize,
+    pub health: ShardHealth,
+    /// Bumped on every kill: work items stamped with an older epoch are
+    /// dropped instead of touching the (rebuilt) plane.
+    pub epoch: u64,
+    pub pending: usize,
+    pub in_flight: usize,
+    pub capacity: f64,
+}
+
+/// `membership` reply: cluster epoch, per-shard health, and the
+/// invocation-conservation counters. The conservation invariant —
+/// every accepted invocation has exactly one fate — reads as
+/// `accepted == completed + failed + Σ(pending + in_flight)`,
+/// i.e. `accepted == completed + failed` at quiescence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MembershipInfo {
+    /// Bumped on every drain/join/kill (cluster-wide change counter).
+    pub epoch: u64,
+    pub shards: Vec<ShardInfo>,
+    /// Submissions that were admitted (ticket issued, plane arrival).
+    pub accepted: u64,
+    /// Accepted invocations that completed and fulfilled their ticket.
+    pub completed: u64,
+    /// Accepted invocations resolved to a structured error (shard lost).
+    pub failed: u64,
+    /// Submissions rejected at admission (no ticket outstanding).
+    pub rejected: u64,
+    /// Late work items from a retired shard epoch, dropped not counted.
+    pub stale_drops: u64,
+}
+
+impl MembershipInfo {
+    /// Accepted invocations still in the system (no fate yet).
+    pub fn outstanding(&self) -> u64 {
+        self.accepted - self.completed - self.failed
+    }
+
+    /// Conservation check at a quiescent instant (no pending/in-flight
+    /// work anywhere): every accepted invocation reached exactly one
+    /// terminal fate.
+    pub fn conserved_at_quiescence(&self) -> bool {
+        let live: usize = self
+            .shards
+            .iter()
+            .map(|s| s.pending + s.in_flight)
+            .sum();
+        live == 0 && self.accepted == self.completed + self.failed
+    }
+}
+
 /// One server reply. Every response carries `ok` on the wire; errors
 /// are a first-class variant, not a stringly-typed prefix.
 #[derive(Debug, Clone, PartialEq)]
@@ -147,6 +244,9 @@ pub enum Response {
     /// `poll` on a still-running invocation.
     Pending { ticket: Ticket },
     Stats(StatsSnapshot),
+    /// Reply to `drain`/`join`/`kill`/`membership`: the post-change
+    /// membership snapshot.
+    Membership(MembershipInfo),
     /// Connection-close acknowledgement.
     Bye,
     Error(ApiError),
@@ -159,9 +259,17 @@ pub enum ApiError {
     /// Hello requested a protocol this server cannot speak.
     UnsupportedVersion { requested: u32, supported: u32 },
     UnknownFunction { name: String },
-    UnknownTicket { ticket: Ticket },
+    /// No such ticket. `evicted: true` means the ticket *did* complete
+    /// but its unclaimed result aged out of the bounded done-table —
+    /// distinguishable from a ticket that never existed.
+    UnknownTicket { ticket: Ticket, evicted: bool },
     /// Admission control: queued work is at/over the backpressure bound.
     Overloaded { pending: usize, limit: usize },
+    /// The shard holding this ticket's invocation died before
+    /// completing it. The invocation is *not* silently requeued; the
+    /// caller decides whether to resubmit. Waiters (even those blocked
+    /// with a deadline) wake immediately when the shard is killed.
+    ShardLost { shard: usize, ticket: Ticket },
     /// A sync invoke or `wait` outlived its deadline. The invocation
     /// keeps running (run-to-completion); `ticket` is its handle, so
     /// even a deadline-tripped *sync* invoke can be redeemed with a
@@ -185,6 +293,7 @@ impl ApiError {
             ApiError::UnknownFunction { .. } => "unknown-function",
             ApiError::UnknownTicket { .. } => "unknown-ticket",
             ApiError::Overloaded { .. } => "overloaded",
+            ApiError::ShardLost { .. } => "shard-lost",
             ApiError::DeadlineExceeded { .. } => "deadline-exceeded",
             ApiError::ShuttingDown => "shutting-down",
             ApiError::BadRequest { .. } => "bad-request",
@@ -200,9 +309,18 @@ impl ApiError {
                 supported,
             } => format!("client asked for v{requested}, server speaks up to v{supported}"),
             ApiError::UnknownFunction { name } => name.clone(),
-            ApiError::UnknownTicket { ticket } => ticket.to_string(),
+            ApiError::UnknownTicket { ticket, evicted } => {
+                if *evicted {
+                    format!("{ticket} completed but its unclaimed result was evicted")
+                } else {
+                    ticket.to_string()
+                }
+            }
             ApiError::Overloaded { pending, limit } => {
                 format!("{pending} pending >= limit {limit}")
+            }
+            ApiError::ShardLost { shard, ticket } => {
+                format!("shard {shard} died holding {ticket}")
             }
             ApiError::DeadlineExceeded { waited_ms, ticket } => match ticket {
                 Some(t) => format!("waited {waited_ms} ms ({t} still running)"),
@@ -228,13 +346,39 @@ impl ApiError {
                 name: detail.to_string(),
             },
             "unknown-ticket" => ApiError::UnknownTicket {
+                // Best-effort: the ticket number leads the detail; the
+                // structured `ticket`/`evicted` wire extras (when
+                // present) overwrite both fields after this call.
                 ticket: Ticket(
-                    detail.trim_start_matches('#').parse().unwrap_or(0),
+                    detail
+                        .split_whitespace()
+                        .next()
+                        .unwrap_or("")
+                        .trim_start_matches('#')
+                        .parse()
+                        .unwrap_or(0),
                 ),
+                evicted: detail.contains("evicted"),
             },
             "overloaded" => ApiError::Overloaded {
                 pending: 0,
                 limit: 0,
+            },
+            "shard-lost" => ApiError::ShardLost {
+                // Best-effort from "shard N died holding #T"; the
+                // structured `shard`/`ticket` extras overwrite these.
+                shard: detail
+                    .split_whitespace()
+                    .nth(1)
+                    .and_then(|w| w.parse().ok())
+                    .unwrap_or(0),
+                ticket: Ticket(
+                    detail
+                        .rsplit('#')
+                        .next()
+                        .and_then(|w| w.trim().parse().ok())
+                        .unwrap_or(0),
+                ),
             },
             "deadline-exceeded" => ApiError::DeadlineExceeded {
                 waited_ms: 0,
@@ -271,10 +415,17 @@ mod tests {
                 supported: 1,
             },
             ApiError::UnknownFunction { name: "x".into() },
-            ApiError::UnknownTicket { ticket: Ticket(7) },
+            ApiError::UnknownTicket {
+                ticket: Ticket(7),
+                evicted: false,
+            },
             ApiError::Overloaded {
                 pending: 4,
                 limit: 4,
+            },
+            ApiError::ShardLost {
+                shard: 2,
+                ticket: Ticket(5),
             },
             ApiError::DeadlineExceeded {
                 waited_ms: 10,
@@ -297,6 +448,56 @@ mod tests {
     #[test]
     fn unknown_wire_code_degrades_to_bad_request() {
         assert_eq!(ApiError::from_wire("warp-failure", "x").code(), "bad-request");
+    }
+
+    #[test]
+    fn shard_lost_and_evicted_survive_detail_roundtrip() {
+        // Structured extras carry these on the real wire; the detail
+        // string alone must still rebuild the load-bearing fields.
+        let e = ApiError::ShardLost {
+            shard: 2,
+            ticket: Ticket(5),
+        };
+        assert_eq!(ApiError::from_wire(e.code(), &e.detail()), e);
+        let ev = ApiError::UnknownTicket {
+            ticket: Ticket(9),
+            evicted: true,
+        };
+        assert_eq!(ApiError::from_wire(ev.code(), &ev.detail()), ev);
+    }
+
+    #[test]
+    fn shard_health_roundtrip() {
+        for h in [ShardHealth::Up, ShardHealth::Draining, ShardHealth::Dead] {
+            assert_eq!(ShardHealth::parse(h.name()), Some(h));
+        }
+        assert_eq!(ShardHealth::parse("zombie"), None);
+    }
+
+    #[test]
+    fn conservation_identity_at_quiescence() {
+        let mk = |pending, accepted, completed, failed| MembershipInfo {
+            epoch: 3,
+            shards: vec![ShardInfo {
+                shard: 0,
+                health: ShardHealth::Up,
+                epoch: 0,
+                pending,
+                in_flight: 0,
+                capacity: 1.0,
+            }],
+            accepted,
+            completed,
+            failed,
+            rejected: 1,
+            stale_drops: 0,
+        };
+        assert!(mk(0, 10, 8, 2).conserved_at_quiescence());
+        // Work still queued: not quiescent, identity not checkable.
+        assert!(!mk(1, 10, 8, 1).conserved_at_quiescence());
+        // Quiescent but an invocation vanished without a fate.
+        assert!(!mk(0, 10, 8, 1).conserved_at_quiescence());
+        assert_eq!(mk(0, 10, 8, 1).outstanding(), 1);
     }
 
     #[test]

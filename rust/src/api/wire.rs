@@ -57,8 +57,8 @@ use std::net::TcpStream;
 use std::time::Duration;
 
 use super::types::{
-    ApiError, DescribeInfo, InvokeMode, InvokeOutcome, Request, Response, StatsSnapshot,
-    Ticket, PROTOCOL_VERSION,
+    ApiError, DescribeInfo, InvokeMode, InvokeOutcome, MembershipInfo, Request, Response,
+    ShardHealth, ShardInfo, StatsSnapshot, Ticket, PROTOCOL_VERSION,
 };
 use super::Frontend;
 use crate::types::StartKind;
@@ -521,6 +521,16 @@ enum ReqRef<'a> {
         ticket: Ticket,
     },
     Stats,
+    Drain {
+        shard: usize,
+    },
+    Join {
+        shard: usize,
+    },
+    Kill {
+        shard: usize,
+    },
+    Membership,
     Shutdown,
 }
 
@@ -571,6 +581,18 @@ fn decode_request_ref<'b>(v: &'b JVal<'_>) -> Result<ReqRef<'b>, ApiError> {
         },
         "poll" => ReqRef::Poll { ticket: ticket(v)? },
         "stats" => ReqRef::Stats,
+        "drain" | "join" | "kill" => {
+            let shard = v
+                .get_u64("shard")
+                .ok_or_else(|| bad(format!("{cmd}: missing \"shard\"")))?
+                as usize;
+            match cmd {
+                "drain" => ReqRef::Drain { shard },
+                "join" => ReqRef::Join { shard },
+                _ => ReqRef::Kill { shard },
+            }
+        }
+        "membership" => ReqRef::Membership,
         "quit" | "shutdown" => ReqRef::Shutdown,
         other => return Err(bad(format!("unknown command {other}"))),
     })
@@ -617,6 +639,19 @@ pub fn encode_request_into(req: &Request, out: &mut String) {
             push_int_field(out, "ticket", ticket.0 as i64);
         }
         Request::Stats => cmd(out, "stats"),
+        Request::Drain { shard } => {
+            cmd(out, "drain");
+            push_int_field(out, "shard", *shard as i64);
+        }
+        Request::Join { shard } => {
+            cmd(out, "join");
+            push_int_field(out, "shard", *shard as i64);
+        }
+        Request::Kill { shard } => {
+            cmd(out, "kill");
+            push_int_field(out, "shard", *shard as i64);
+        }
+        Request::Membership => cmd(out, "membership"),
         Request::Shutdown => cmd(out, "quit"),
     }
     out.push('}');
@@ -657,6 +692,10 @@ pub fn decode_request(line: &str) -> Result<Request, ApiError> {
         },
         ReqRef::Poll { ticket } => Request::Poll { ticket },
         ReqRef::Stats => Request::Stats,
+        ReqRef::Drain { shard } => Request::Drain { shard },
+        ReqRef::Join { shard } => Request::Join { shard },
+        ReqRef::Kill { shard } => Request::Kill { shard },
+        ReqRef::Membership => Request::Membership,
         ReqRef::Shutdown => Request::Shutdown,
     })
 }
@@ -725,18 +764,57 @@ pub fn encode_response_into(resp: &Response, out: &mut String) {
             push_int_field(out, "pending", s.pending as i64);
             push_int_field(out, "in_flight", s.in_flight as i64);
         }
+        Response::Membership(m) => {
+            push_str_field(out, "type", "membership");
+            push_int_field(out, "epoch", m.epoch as i64);
+            push_int_field(out, "accepted", m.accepted as i64);
+            push_int_field(out, "completed", m.completed as i64);
+            push_int_field(out, "failed", m.failed as i64);
+            push_int_field(out, "rejected", m.rejected as i64);
+            push_int_field(out, "stale_drops", m.stale_drops as i64);
+            push_key(out, "shards");
+            out.push('[');
+            for (i, s) in m.shards.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str("{\"shard\":");
+                let _ = write!(out, "{}", s.shard);
+                push_str_field(out, "state", s.health.name());
+                push_int_field(out, "epoch", s.epoch as i64);
+                push_int_field(out, "pending", s.pending as i64);
+                push_int_field(out, "in_flight", s.in_flight as i64);
+                push_num_field(out, "capacity", s.capacity);
+                out.push('}');
+            }
+            out.push(']');
+        }
         Response::Bye => push_str_field(out, "type", "bye"),
         Response::Error(e) => {
             push_str_field(out, "type", "error");
             push_str_field(out, "error", e.code());
             push_str_field(out, "detail", &e.detail());
-            // Deadline-tripped work keeps running: surface its ticket
-            // as a structured field so clients can redeem it later.
-            if let ApiError::DeadlineExceeded {
-                ticket: Some(t), ..
-            } = e
-            {
-                push_int_field(out, "ticket", t.0 as i64);
+            // Structured extras for errors clients branch on beyond the
+            // code alone.
+            match e {
+                // Deadline-tripped work keeps running: surface its
+                // ticket so clients can redeem it later.
+                ApiError::DeadlineExceeded {
+                    ticket: Some(t), ..
+                } => push_int_field(out, "ticket", t.0 as i64),
+                // Which shard died, and which ticket it stranded.
+                ApiError::ShardLost { shard, ticket } => {
+                    push_int_field(out, "shard", *shard as i64);
+                    push_int_field(out, "ticket", ticket.0 as i64);
+                }
+                // Evicted-vs-never-existed is a real distinction: the
+                // first means "your result aged out", the second a bug.
+                ApiError::UnknownTicket { ticket, evicted } => {
+                    push_int_field(out, "ticket", ticket.0 as i64);
+                    push_key(out, "evicted");
+                    out.push_str(if *evicted { "true" } else { "false" });
+                }
+                _ => {}
             }
         }
     }
@@ -757,9 +835,29 @@ pub fn decode_response(line: &str) -> Result<Response, String> {
         let code = v.get_str("error").unwrap_or("bad-request");
         let detail = v.get_str("detail").unwrap_or("");
         let mut err = ApiError::from_wire(code, detail);
-        // Structured extra: the still-running invocation's ticket.
-        if let ApiError::DeadlineExceeded { ticket, .. } = &mut err {
-            *ticket = v.get_u64("ticket").map(Ticket);
+        // Structured extras override the best-effort detail parse.
+        match &mut err {
+            // The still-running invocation's ticket.
+            ApiError::DeadlineExceeded { ticket, .. } => {
+                *ticket = v.get_u64("ticket").map(Ticket);
+            }
+            ApiError::ShardLost { shard, ticket } => {
+                if let Some(s) = v.get_u64("shard") {
+                    *shard = s as usize;
+                }
+                if let Some(t) = v.get_u64("ticket") {
+                    *ticket = Ticket(t);
+                }
+            }
+            ApiError::UnknownTicket { ticket, evicted } => {
+                if let Some(t) = v.get_u64("ticket") {
+                    *ticket = Ticket(t);
+                }
+                if let Some(JVal::Bool(b)) = v.get("evicted") {
+                    *evicted = *b;
+                }
+            }
+            _ => {}
         }
         return Ok(Response::Error(err));
     }
@@ -807,6 +905,31 @@ pub fn decode_response(line: &str) -> Result<Response, String> {
             cold_ratio: v.get_f64("cold_ratio").unwrap_or(0.0),
             pending: v.get_u64("pending").unwrap_or(0) as usize,
             in_flight: v.get_u64("in_flight").unwrap_or(0) as usize,
+        }),
+        "membership" => Response::Membership(MembershipInfo {
+            epoch: v.get_u64("epoch").unwrap_or(0),
+            accepted: v.get_u64("accepted").unwrap_or(0),
+            completed: v.get_u64("completed").unwrap_or(0),
+            failed: v.get_u64("failed").unwrap_or(0),
+            rejected: v.get_u64("rejected").unwrap_or(0),
+            stale_drops: v.get_u64("stale_drops").unwrap_or(0),
+            shards: match v.get("shards") {
+                Some(JVal::Arr(xs)) => xs
+                    .iter()
+                    .map(|x| ShardInfo {
+                        shard: x.get_u64("shard").unwrap_or(0) as usize,
+                        health: x
+                            .get_str("state")
+                            .and_then(ShardHealth::parse)
+                            .unwrap_or(ShardHealth::Up),
+                        epoch: x.get_u64("epoch").unwrap_or(0),
+                        pending: x.get_u64("pending").unwrap_or(0) as usize,
+                        in_flight: x.get_u64("in_flight").unwrap_or(0) as usize,
+                        capacity: x.get_f64("capacity").unwrap_or(1.0),
+                    })
+                    .collect(),
+                _ => Vec::new(),
+            },
         }),
         "bye" => Response::Bye,
         other => return Err(format!("unknown response type {other}")),
@@ -923,6 +1046,22 @@ fn handle_v1(frontend: &dyn Frontend, line: &str, out: &mut String) -> bool {
                 Err(e) => Response::Error(e),
             },
             ReqRef::Stats => Response::Stats(frontend.stats()),
+            ReqRef::Drain { shard } => match frontend.drain(shard) {
+                Ok(m) => Response::Membership(m),
+                Err(e) => Response::Error(e),
+            },
+            ReqRef::Join { shard } => match frontend.join(shard) {
+                Ok(m) => Response::Membership(m),
+                Err(e) => Response::Error(e),
+            },
+            ReqRef::Kill { shard } => match frontend.kill(shard) {
+                Ok(m) => Response::Membership(m),
+                Err(e) => Response::Error(e),
+            },
+            ReqRef::Membership => match frontend.membership() {
+                Ok(m) => Response::Membership(m),
+                Err(e) => Response::Error(e),
+            },
             ReqRef::Shutdown => {
                 encode_response_into(&Response::Bye, out);
                 return true;
@@ -1107,6 +1246,10 @@ mod tests {
             },
             Request::Poll { ticket: Ticket(8) },
             Request::Stats,
+            Request::Drain { shard: 2 },
+            Request::Join { shard: 2 },
+            Request::Kill { shard: 1 },
+            Request::Membership,
             Request::Shutdown,
         ];
         for req in reqs {
@@ -1278,6 +1421,68 @@ mod tests {
             ("deadline_ms".into(), Json::Int(5000)),
         ]);
         assert_eq!(encode_request(&req), req_tree.render_compact());
+    }
+
+    #[test]
+    fn membership_response_roundtrips() {
+        let m = Response::Membership(MembershipInfo {
+            epoch: 3,
+            shards: vec![
+                ShardInfo {
+                    shard: 0,
+                    health: ShardHealth::Up,
+                    epoch: 0,
+                    pending: 2,
+                    in_flight: 1,
+                    capacity: 1.0,
+                },
+                ShardInfo {
+                    shard: 1,
+                    health: ShardHealth::Dead,
+                    epoch: 2,
+                    pending: 0,
+                    in_flight: 0,
+                    capacity: 2.5,
+                },
+            ],
+            accepted: 10,
+            completed: 7,
+            failed: 2,
+            rejected: 1,
+            stale_drops: 4,
+        });
+        let line = encode_response(&m);
+        assert!(!line.contains('\n'));
+        assert_eq!(decode_response(&line).unwrap(), m, "{line}");
+        // Admin requests missing their shard are rejected, not defaulted.
+        for bad in [r#"{"cmd":"drain"}"#, r#"{"cmd":"kill"}"#, r#"{"cmd":"join"}"#] {
+            assert_eq!(decode_request(bad).unwrap_err().code(), "bad-request");
+        }
+    }
+
+    #[test]
+    fn shard_lost_and_evicted_errors_carry_structured_fields() {
+        let lost = ApiError::ShardLost {
+            shard: 2,
+            ticket: Ticket(41),
+        };
+        let line = encode_response(&Response::Error(lost.clone()));
+        let Response::Error(back) = decode_response(&line).unwrap() else {
+            panic!("expected error: {line}");
+        };
+        assert_eq!(back, lost, "{line}");
+
+        for evicted in [false, true] {
+            let e = ApiError::UnknownTicket {
+                ticket: Ticket(9),
+                evicted,
+            };
+            let line = encode_response(&Response::Error(e.clone()));
+            let Response::Error(back) = decode_response(&line).unwrap() else {
+                panic!("expected error: {line}");
+            };
+            assert_eq!(back, e, "{line}");
+        }
     }
 
     #[test]

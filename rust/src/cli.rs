@@ -11,6 +11,8 @@
 //!   aliases): single plane, or `--shards N --router R` for the
 //!   cluster frontend.
 //! * `invoke` — protocol-v1 client against a running `serve`.
+//! * `admin` — membership verbs (drain/join/kill/membership) against a
+//!   running `serve`: elastic resize and fault injection over the wire.
 //! * `validate` — golden-check every AOT artifact via PJRT.
 
 use std::collections::HashMap;
@@ -109,9 +111,19 @@ USAGE:
               --workers sizes the fixed per-shard executor pool (thread
               count is shards x workers + 1 timer, independent of load).
   mqfq-sticky invoke <fn> [--addr HOST:PORT] [--mode sync|async]
-        [--deadline-ms D] [--n N]        protocol-v1 client: run N
-              invocations against a running `serve`, print outcomes
-              and aggregate server stats
+        [--deadline-ms D] [--n N] [--retries K]   protocol-v1 client:
+              run N invocations against a running `serve`, print
+              outcomes and aggregate server stats. --retries opts into
+              bounded jittered-backoff retries of transient errors
+              (overload/transport; off by default — an Io retry can
+              double-submit a sync invoke that already executed)
+  mqfq-sticky admin drain|join|kill SHARD [--addr HOST:PORT]
+  mqfq-sticky admin membership [--addr HOST:PORT]
+              elastic membership against a running `serve --shards N`:
+              drain (stop routing, finish in-flight), join (rejoin
+              cold), kill (abrupt failure: homed tickets fail with
+              shard-lost, ring heals); membership prints per-shard
+              health/epoch and the ticket-fate conservation counters
   mqfq-sticky validate [--artifacts DIR] golden-check all artifacts
 ";
 
@@ -248,6 +260,7 @@ fn dispatch(argv: Vec<String>) -> Result<(), String> {
         "hetero" => cmd_hetero(&args),
         "serve" => cmd_serve(&args),
         "invoke" => cmd_invoke(&args),
+        "admin" => cmd_admin(&args),
         "validate" => cmd_validate(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -496,8 +509,12 @@ fn cmd_invoke(args: &Args) -> Result<(), String> {
         0 => None,
         d => Some(d as u64),
     };
+    let retries = args.get_usize("retries", 0)?;
     let mut client = crate::api::ApiClient::connect(addr)
         .map_err(|e| format!("connecting {addr}: {e}"))?;
+    if retries > 0 {
+        client.set_retry(crate::api::RetryPolicy::new(retries as u32));
+    }
     let print_outcome = |o: &crate::api::InvokeOutcome| {
         println!(
             "{} {}: {} on shard {} gpu{}  latency {:.1} ms  exec {:.1} ms",
@@ -536,6 +553,74 @@ fn cmd_invoke(args: &Args) -> Result<(), String> {
     );
     client.quit();
     Ok(())
+}
+
+/// Elastic-membership admin client: drain/join/kill/membership against
+/// a running `serve` over the v1 wire protocol.
+fn cmd_admin(args: &Args) -> Result<(), String> {
+    let verb = args
+        .positional
+        .first()
+        .ok_or("admin: which verb? (drain|join|kill|membership)")?
+        .as_str();
+    let addr = args.get("addr").unwrap_or("127.0.0.1:8077");
+    // Shard index: positional (`admin kill 1`) or `--shard 1`.
+    let shard = match args.positional.get(1) {
+        Some(s) => Some(
+            s.parse::<usize>()
+                .map_err(|_| format!("admin {verb}: bad shard {s}"))?,
+        ),
+        None => match args.get("shard") {
+            Some(s) => Some(
+                s.parse::<usize>()
+                    .map_err(|_| format!("--shard: bad integer {s}"))?,
+            ),
+            None => None,
+        },
+    };
+    let need = || format!("admin {verb}: shard required (`admin {verb} SHARD` or --shard N)");
+    let mut client = crate::api::ApiClient::connect(addr)
+        .map_err(|e| format!("connecting {addr}: {e}"))?;
+    let m = match verb {
+        "drain" => client.drain(shard.ok_or_else(need)?),
+        "join" => client.join(shard.ok_or_else(need)?),
+        "kill" => client.kill(shard.ok_or_else(need)?),
+        "membership" => client.membership(),
+        v => return Err(format!("unknown admin verb {v} (drain|join|kill|membership)")),
+    }
+    .map_err(|e| format!("admin {verb}: {e}"))?;
+    print_membership(&m);
+    client.quit();
+    Ok(())
+}
+
+fn print_membership(m: &crate::api::MembershipInfo) {
+    println!("membership epoch {}", m.epoch);
+    println!(
+        "{:<6} {:<9} {:>6} {:>8} {:>10} {:>9}",
+        "shard", "health", "epoch", "pending", "in-flight", "capacity"
+    );
+    for s in &m.shards {
+        println!(
+            "{:<6} {:<9} {:>6} {:>8} {:>10} {:>9.2}",
+            s.shard,
+            s.health.name(),
+            s.epoch,
+            s.pending,
+            s.in_flight,
+            s.capacity
+        );
+    }
+    println!(
+        "fates: accepted {} = completed {} + failed {} + outstanding {} \
+         (rejected {}, stale drops {})",
+        m.accepted,
+        m.completed,
+        m.failed,
+        m.outstanding(),
+        m.rejected,
+        m.stale_drops
+    );
 }
 
 fn cmd_validate(args: &Args) -> Result<(), String> {
@@ -678,6 +763,45 @@ mod tests {
         ))
         .unwrap();
         cmd_cluster(&a).unwrap();
+    }
+
+    #[test]
+    fn admin_verbs_roundtrip_against_live_cluster() {
+        let mut w = crate::workload::Workload::default();
+        w.register(
+            crate::workload::catalog::by_name("isoneural").unwrap(),
+            0,
+            1.0,
+        );
+        let cfg = ClusterConfig {
+            n_shards: 3,
+            router: RouterKind::RoundRobin,
+            plane: PlaneConfig::default(),
+            ..Default::default()
+        };
+        let srv = crate::server::RtCluster::new(w, cfg, None, 1e-6).unwrap();
+        let addr = srv.serve("127.0.0.1:0").unwrap();
+        for cmd in [
+            format!("drain 1 --addr {addr}"),
+            format!("join 1 --addr {addr}"),
+            format!("kill 2 --addr {addr}"),
+            format!("join 2 --addr {addr}"),
+            format!("membership --addr {addr}"),
+            format!("drain --shard 1 --addr {addr}"), // --shard form
+            format!("join 1 --addr {addr}"),
+        ] {
+            let a = Args::parse(&argv(&cmd)).unwrap();
+            cmd_admin(&a).unwrap_or_else(|e| panic!("{cmd}: {e}"));
+        }
+        // Missing shard, bad shard, and unknown verb are rejected.
+        for bad in [
+            format!("drain --addr {addr}"),
+            format!("kill nine --addr {addr}"),
+            format!("explode 1 --addr {addr}"),
+        ] {
+            let a = Args::parse(&argv(&bad)).unwrap();
+            assert!(cmd_admin(&a).is_err(), "{bad} should be rejected");
+        }
     }
 
     #[test]

@@ -40,6 +40,43 @@
 //!   capacities ignored; the ablation baseline the fig10 gate compares
 //!   against (identical to StickyCh when shards are uniform).
 //!
+//! # Elastic membership
+//!
+//! The fleet is *not* fixed at startup. Shard indices are — `n_shards`
+//! is capacity, never renumbered — but each slot carries a
+//! [`crate::api::ShardHealth`] that membership verbs flip in place:
+//!
+//! * **drain** ([`Cluster::drain_shard`]) — the shard stops receiving
+//!   new work (its [`ShardLoad::routable`] flag drops and, for
+//!   [`router::StickyCh`], its capacity-weighted vnodes leave the ring
+//!   so its arc re-homes deterministically); queued and in-flight
+//!   invocations run to completion on the draining plane.
+//! * **join** ([`Cluster::join_shard`]) — a drained or dead shard
+//!   rejoins: exactly its original vnodes are reinserted, so every
+//!   function homed elsewhere keeps its home (the consistent-hashing
+//!   guarantee); a previously dead shard comes back with a cold plane
+//!   and rebuilds warm locality from scratch.
+//! * **kill** ([`Cluster::kill_shard`]) — abrupt failure: the shard's
+//!   plane is discarded (its still-queued/in-flight invocations are
+//!   *lost*, reported back to the caller — never silently requeued),
+//!   its completed-invocation records are preserved in a graveyard
+//!   recorder, and its **epoch** is bumped.
+//!
+//! The per-shard epoch is the replay-safety device: a rebuilt plane
+//! restarts invocation ids at 0, so a completion event scheduled before
+//! the kill could otherwise be delivered to an unrelated new invocation
+//! with the same id. Drivers stamp every scheduled completion with
+//! [`Cluster::shard_epoch`] at schedule time and drop events whose
+//! epoch no longer matches. The wall-clock serving analog
+//! ([`crate::server::RtCluster`]) applies the same rule under its
+//! timer, and additionally resolves every stranded ticket to
+//! [`crate::api::ApiError::ShardLost`].
+//!
+//! The last live shard can be neither drained nor killed: a cluster
+//! that cannot accept work would turn every submit into an error with
+//! no recovery path short of a join that could no longer be requested
+//! through a (now dead) serving surface.
+//!
 //! # Determinism contract
 //!
 //! A cluster replay is a pure function of (workload, trace,
@@ -52,12 +89,16 @@
 //! shard that has work (idle shards are skipped, as in the single-plane
 //! engine). With `n_shards == 1` every router degenerates to shard 0
 //! and the replay is event-for-event identical to [`crate::sim::replay`]
-//! (property-tested in `rust/tests/prop_cluster.rs`).
+//! (property-tested in `rust/tests/prop_cluster.rs`). Membership events
+//! extend the contract: they are part of the input script (the elastic
+//! harness drives them at fixed virtual times), so a storm replays
+//! bit-identically too.
 
 pub mod router;
 
 pub use router::{Router, RouterKind, ShardLoad, ALL_ROUTERS};
 
+use crate::api::ShardHealth;
 use crate::container::pool::PoolStats;
 use crate::metrics::{InvRecord, Recorder};
 use crate::plane::{ControlPlane, PlaneConfig};
@@ -132,6 +173,18 @@ pub struct Cluster {
     capacities: Vec<f64>,
     /// Arrivals routed to each shard (routing-skew diagnostics).
     pub routed: Vec<u64>,
+    /// Kept for plane rebuilds after a kill (every shard registers the
+    /// full workload).
+    workload: Workload,
+    /// Per-shard lifecycle state (see module docs, *Elastic membership*).
+    health: Vec<ShardHealth>,
+    /// Per-shard kill counter: completion events stamped with an older
+    /// epoch must be dropped by the driver, not delivered.
+    epochs: Vec<u64>,
+    /// Completed-invocation records salvaged from killed shards, merged
+    /// into [`Self::merged_recorder`] so kills never un-count finished
+    /// work.
+    graveyard: Recorder,
 }
 
 impl Cluster {
@@ -155,6 +208,10 @@ impl Cluster {
             capacities,
             router,
             shards,
+            health: vec![ShardHealth::Up; cfg.n_shards],
+            epochs: vec![0; cfg.n_shards],
+            graveyard: Recorder::new(),
+            workload,
             cfg,
         }
     }
@@ -195,8 +252,98 @@ impl Cluster {
                 pending: p.pending(),
                 in_flight: p.in_flight(),
                 capacity: self.capacities[s],
+                routable: self.health[s] == ShardHealth::Up,
             })
             .collect()
+    }
+
+    // --- elastic membership -----------------------------------------
+
+    pub fn shard_health(&self, shard: usize) -> ShardHealth {
+        self.health[shard]
+    }
+
+    /// Current kill epoch of `shard`. Drivers stamp scheduled
+    /// completions with this and drop events whose stamp no longer
+    /// matches at delivery time (see module docs).
+    pub fn shard_epoch(&self, shard: usize) -> u64 {
+        self.epochs[shard]
+    }
+
+    fn live_count(&self) -> usize {
+        self.health
+            .iter()
+            .filter(|&&h| h == ShardHealth::Up)
+            .count()
+    }
+
+    /// Stop routing new work to `shard`; its queued/in-flight
+    /// invocations run to completion. Idempotent on an already-draining
+    /// shard; refused for a dead shard or the last live one.
+    pub fn drain_shard(&mut self, shard: usize) -> Result<(), String> {
+        if shard >= self.shards.len() {
+            return Err(format!("no shard {shard}"));
+        }
+        match self.health[shard] {
+            ShardHealth::Draining => Ok(()),
+            ShardHealth::Dead => Err(format!("shard {shard} is dead; join it first")),
+            ShardHealth::Up => {
+                if self.live_count() <= 1 {
+                    return Err("cannot drain the last live shard".into());
+                }
+                self.health[shard] = ShardHealth::Draining;
+                self.router.on_shard_removed(shard);
+                Ok(())
+            }
+        }
+    }
+
+    /// (Re)insert `shard` into the routable set. A drained shard
+    /// resumes with its warm pool intact; a killed shard comes back
+    /// cold (its plane was rebuilt at kill time). Idempotent on an Up
+    /// shard.
+    pub fn join_shard(&mut self, shard: usize) -> Result<(), String> {
+        if shard >= self.shards.len() {
+            return Err(format!("no shard {shard}"));
+        }
+        if self.health[shard] != ShardHealth::Up {
+            self.health[shard] = ShardHealth::Up;
+            self.router.on_shard_added(shard);
+        }
+        Ok(())
+    }
+
+    /// Abrupt failure of `shard`: every invocation still queued or
+    /// in flight there is lost (the count is returned — the caller
+    /// decides whether to resubmit; nothing is requeued silently), its
+    /// completed-invocation records move to the graveyard recorder, its
+    /// plane is rebuilt cold, and its epoch is bumped so stale
+    /// completion events are dropped rather than delivered to id-reusing
+    /// new invocations. Refused for the last live shard.
+    pub fn kill_shard(&mut self, shard: usize) -> Result<usize, String> {
+        if shard >= self.shards.len() {
+            return Err(format!("no shard {shard}"));
+        }
+        if self.health[shard] == ShardHealth::Dead {
+            return Err(format!("shard {shard} is already dead"));
+        }
+        if self.health[shard] == ShardHealth::Up && self.live_count() <= 1 {
+            return Err("cannot kill the last live shard".into());
+        }
+        let lost = self.shards[shard].pending() + self.shards[shard].in_flight();
+        let fresh = ControlPlane::new(
+            self.workload.clone(),
+            self.cfg.plane_for(shard).clone(),
+        );
+        let dead = std::mem::replace(&mut self.shards[shard], fresh);
+        self.graveyard.merge(&dead.recorder);
+        let was_up = self.health[shard] == ShardHealth::Up;
+        self.health[shard] = ShardHealth::Dead;
+        self.epochs[shard] += 1;
+        if was_up {
+            self.router.on_shard_removed(shard);
+        }
+        Ok(lost)
     }
 
     /// Route and ingest one arrival. Returns the chosen shard, the
@@ -270,10 +417,13 @@ impl Cluster {
         sum / self.shards.len() as f64
     }
 
-    /// Cluster-level recorder: every shard's records merged, sorted by
-    /// completion time (stable: same-instant ties keep shard order).
+    /// Cluster-level recorder: every shard's records merged — plus the
+    /// graveyard salvaged from killed shards, so a kill never un-counts
+    /// finished work — sorted by completion time (stable: same-instant
+    /// ties keep shard order).
     pub fn merged_recorder(&self) -> Recorder {
         let mut out = Recorder::new();
+        out.merge(&self.graveyard);
         for p in &self.shards {
             out.merge(&p.recorder);
         }
@@ -465,6 +615,102 @@ mod tests {
             ..Default::default()
         };
         Cluster::new(workload3(), cfg);
+    }
+
+    #[test]
+    fn drain_stops_arrivals_and_rejoin_resumes_them() {
+        let mut c = cluster(3, RouterKind::RoundRobin);
+        c.drain_shard(1).unwrap();
+        assert_eq!(c.shard_health(1), ShardHealth::Draining);
+        for i in 0..6 {
+            c.on_arrival(FuncId(0), i * SEC);
+        }
+        assert_eq!(c.routed[1], 0, "draining shard must receive nothing");
+        assert_eq!(c.routed[0] + c.routed[2], 6);
+        // Drain is idempotent; rejoin restores routing.
+        c.drain_shard(1).unwrap();
+        c.join_shard(1).unwrap();
+        assert_eq!(c.shard_health(1), ShardHealth::Up);
+        for i in 0..6 {
+            c.on_arrival(FuncId(0), (6 + i) * SEC);
+        }
+        assert!(c.routed[1] > 0, "rejoined shard must route again");
+    }
+
+    #[test]
+    fn kill_loses_queued_work_bumps_epoch_and_keeps_graveyard() {
+        let mut c = cluster(2, RouterKind::RoundRobin);
+        // Complete one invocation on shard 0, then queue another there.
+        let (s0, _, ds) = c.on_arrival(FuncId(0), 0);
+        assert_eq!(s0, 0);
+        let d = ds[0].dispatch;
+        c.on_complete(0, d.inv, d.complete_at);
+        c.on_arrival(FuncId(0), d.complete_at + SEC); // shard 1 (RR)
+        let (s2, _, _) = c.on_arrival(FuncId(0), d.complete_at + 2 * SEC);
+        assert_eq!(s2, 0);
+        assert_eq!(c.shards[0].recorder.len(), 1);
+
+        let lost = c.kill_shard(0).unwrap();
+        assert_eq!(lost, 1, "the queued invocation is lost");
+        assert_eq!(c.shard_health(0), ShardHealth::Dead);
+        assert_eq!(c.shard_epoch(0), 1);
+        assert_eq!(c.shards[0].pending() + c.shards[0].in_flight(), 0);
+        // Finished work survives the kill via the graveyard.
+        assert_eq!(c.shards[0].recorder.len(), 0);
+        assert_eq!(c.merged_recorder().len(), 1);
+        // Dead shards take no traffic; double-kill and drain are refused.
+        for i in 0..4 {
+            let (s, _, _) = c.on_arrival(FuncId(0), secs(100.0 + i as f64));
+            assert_eq!(s, 1);
+        }
+        assert!(c.kill_shard(0).is_err());
+        assert!(c.drain_shard(0).is_err());
+        // Rejoin brings it back (cold) and routable.
+        c.join_shard(0).unwrap();
+        assert_eq!(c.shard_health(0), ShardHealth::Up);
+        assert_eq!(c.shard_epoch(0), 1, "join does not bump the epoch");
+        let before = c.routed[0];
+        for i in 0..4 {
+            c.on_arrival(FuncId(0), secs(200.0 + i as f64));
+        }
+        assert!(c.routed[0] > before);
+    }
+
+    #[test]
+    fn last_live_shard_is_protected() {
+        let mut c = cluster(2, RouterKind::RoundRobin);
+        c.drain_shard(0).unwrap();
+        assert!(c.drain_shard(1).is_err());
+        assert!(c.kill_shard(1).is_err());
+        // Draining shards still count as killable (they are not live).
+        c.kill_shard(0).unwrap();
+        assert!(c.kill_shard(1).is_err(), "shard 1 is the only live one");
+        assert!(c.join_shard(0).is_ok());
+        assert!(c.kill_shard(1).is_ok(), "shard 0 is live again");
+    }
+
+    #[test]
+    fn membership_verbs_reject_out_of_range_shards() {
+        let mut c = cluster(2, RouterKind::StickyCh);
+        assert!(c.drain_shard(2).is_err());
+        assert!(c.join_shard(9).is_err());
+        assert!(c.kill_shard(7).is_err());
+    }
+
+    #[test]
+    fn sticky_rehomes_off_a_drained_shard() {
+        let mut c = cluster(4, RouterKind::StickyCh);
+        let (home, _, ds) = c.on_arrival(FuncId(1), 0);
+        for sd in ds {
+            c.on_complete(sd.shard, sd.dispatch.inv, sd.dispatch.complete_at);
+        }
+        c.drain_shard(home).unwrap();
+        let (s, _, _) = c.on_arrival(FuncId(1), secs(60.0));
+        assert_ne!(s, home, "ring healing must re-home off the drained arc");
+        // Rejoin restores the original home (exact-vnode reinsertion).
+        c.join_shard(home).unwrap();
+        let (s2, _, _) = c.on_arrival(FuncId(1), secs(6000.0));
+        assert_eq!(s2, home);
     }
 
     #[test]

@@ -58,6 +58,10 @@ pub struct ShardLoad {
     /// Static service capacity of the shard's fleet in V100-equivalents
     /// (1.0 for a single baseline GPU). Strictly positive.
     pub capacity: f64,
+    /// Whether the shard may receive *new* work. Draining and dead
+    /// shards publish `false`; every router skips them. Defaults to
+    /// `true` so a fixed fleet never has to think about membership.
+    pub routable: bool,
 }
 
 impl Default for ShardLoad {
@@ -66,6 +70,7 @@ impl Default for ShardLoad {
             pending: 0,
             in_flight: 0,
             capacity: 1.0,
+            routable: true,
         }
     }
 }
@@ -96,6 +101,18 @@ pub trait Router: Send + Sync {
     fn spills(&self) -> u64 {
         0
     }
+
+    /// Membership change: `shard` left the routable set (drain or
+    /// kill). Stateless routers need nothing beyond the per-route
+    /// [`ShardLoad::routable`] flag; [`StickyCh`] removes the shard's
+    /// virtual nodes so its ring segment re-homes deterministically.
+    /// Called under the serving path's exclusive router lock.
+    fn on_shard_removed(&mut self, _shard: usize) {}
+
+    /// Membership change: `shard` (re)joined. [`StickyCh`] reinserts
+    /// exactly the vnodes removed at departure, so every function homed
+    /// elsewhere keeps its home — the consistent-hashing guarantee.
+    fn on_shard_added(&mut self, _shard: usize) {}
 }
 
 /// Router selector used by the CLI / experiment harness.
@@ -194,7 +211,16 @@ impl Router for RoundRobin {
     }
 
     fn route(&self, _func: FuncId, loads: &[ShardLoad]) -> usize {
-        self.next.fetch_add(1, Ordering::Relaxed) % loads.len()
+        let k = self.next.fetch_add(1, Ordering::Relaxed);
+        // Walk past drained/dead shards; with a fully routable fleet the
+        // first probe hits, reproducing the plain modulo cycle exactly.
+        for i in 0..loads.len() {
+            let s = (k + i) % loads.len();
+            if loads[s].routable {
+                return s;
+            }
+        }
+        k % loads.len()
     }
 }
 
@@ -211,7 +237,23 @@ impl Router for Random {
     }
 
     fn route(&self, _func: FuncId, loads: &[ShardLoad]) -> usize {
-        self.rng.lock().unwrap().below(loads.len())
+        let mut rng = self.rng.lock().unwrap();
+        let routable = loads.iter().filter(|l| l.routable).count();
+        if routable == 0 || routable == loads.len() {
+            // Fully routable fleet: one draw over all shards, exactly
+            // the pre-membership decision stream.
+            return rng.below(loads.len());
+        }
+        let mut k = rng.below(routable);
+        for (s, l) in loads.iter().enumerate() {
+            if l.routable {
+                if k == 0 {
+                    return s;
+                }
+                k -= 1;
+            }
+        }
+        unreachable!("counted routable shards above")
     }
 }
 
@@ -226,17 +268,25 @@ impl Router for LeastLoaded {
     }
 
     fn route(&self, _func: FuncId, loads: &[ShardLoad]) -> usize {
-        let mut best = 0;
-        for (s, l) in loads.iter().enumerate().skip(1) {
+        let mut best: Option<usize> = None;
+        for (s, l) in loads.iter().enumerate() {
+            if !l.routable {
+                continue;
+            }
             // depth/capacity comparison, cross-multiplied so equal
             // capacities reduce to the exact integer depth comparison.
-            if (l.depth() as f64) * loads[best].capacity
-                < (loads[best].depth() as f64) * l.capacity
-            {
-                best = s;
-            }
+            best = Some(match best {
+                None => s,
+                Some(b)
+                    if (l.depth() as f64) * loads[b].capacity
+                        < (loads[b].depth() as f64) * l.capacity =>
+                {
+                    s
+                }
+                Some(b) => b,
+            });
         }
-        best
+        best.unwrap_or(0)
     }
 }
 
@@ -269,18 +319,34 @@ impl Router for LeastLoaded {
 /// speed-aware). If every shard is at its bound (uniform overload), it
 /// stays home — spilling could not help and would only shred locality.
 pub struct StickyCh {
-    /// (ring point, shard), sorted by point.
+    /// (ring point, shard), sorted by point. Contains only *live*
+    /// shards' points; membership changes rebuild it from the fixed
+    /// per-shard layout below.
     ring: Vec<(u64, usize)>,
     n_shards: usize,
     load_factor: f64,
-    /// Per-shard fraction of the bounded-load budget (sums to 1).
+    /// Per-shard fraction of the bounded-load budget (sums to 1 over
+    /// live shards; 0 for departed shards).
     shares: Vec<f64>,
+    /// Ring-layout seed, kept so heals reproduce construction points.
+    seed: u64,
+    /// Capacity-weighted vnode count per shard, fixed at construction.
+    /// Removal deletes exactly these points; rejoin reinserts exactly
+    /// them — every *other* function's home is untouched (the
+    /// consistent-hashing guarantee under membership change).
+    vnodes: Vec<usize>,
+    /// Capacity fraction of the full fleet (sums to 1 over all shards);
+    /// live shares are these weights renormalized over the live set.
+    weights: Vec<f64>,
+    /// Membership: shards currently owning ring points.
+    live: Vec<bool>,
     /// Reported router name ("sticky-ch", or "sticky-blind" for the
     /// capacity-ignoring ablation).
     name: &'static str,
     /// Spills observed (diagnostics; exposed via [`StickyCh::spills`]).
     /// Atomic so concurrent routes only touch the counter, never a lock
-    /// — the ring itself is immutable after construction.
+    /// — the ring is immutable between membership changes, which the
+    /// serving path applies under its exclusive router lock.
     spills: AtomicU64,
 }
 
@@ -338,12 +404,36 @@ impl StickyCh {
             let shares = capacities.iter().map(|&c| c / total).collect();
             (vnodes, shares)
         };
+        let live = vec![true; n_shards];
+        let ring = Self::build_ring(seed, &vnodes, &live);
+        Self {
+            ring,
+            n_shards,
+            load_factor,
+            weights: shares.clone(),
+            shares,
+            seed,
+            vnodes,
+            live,
+            name: "sticky-ch",
+            spills: AtomicU64::new(0),
+        }
+    }
+
+    /// Construct the sorted ring from the fixed per-shard vnode layout,
+    /// placing points only for live shards. With all shards live this
+    /// reproduces the construction ring bit-for-bit, which is what makes
+    /// a departed-then-rejoined shard restore the exact original homes.
+    fn build_ring(seed: u64, vnodes: &[usize], live: &[bool]) -> Vec<(u64, usize)> {
         let mut ring = Vec::with_capacity(vnodes.iter().sum());
-        for shard in 0..n_shards {
-            for v in 0..vnodes[shard].min(Self::VNODES) {
+        for (shard, &n) in vnodes.iter().enumerate() {
+            if !live[shard] {
+                continue;
+            }
+            for v in 0..n.min(Self::VNODES) {
                 ring.push((mix(seed, (shard * Self::VNODES + v) as u64), shard));
             }
-            for v in Self::VNODES..vnodes[shard] {
+            for v in Self::VNODES..n {
                 ring.push((
                     mix(seed ^ Self::EXTRA_SALT, (shard * Self::MAX_VNODES + v) as u64),
                     shard,
@@ -351,13 +441,28 @@ impl StickyCh {
             }
         }
         ring.sort_unstable();
-        Self {
-            ring,
-            n_shards,
-            load_factor,
-            shares,
-            name: "sticky-ch",
-            spills: AtomicU64::new(0),
+        ring
+    }
+
+    /// Re-derive ring + shares after a membership flip: departed shards
+    /// lose their points, and the bounded-load budget renormalizes over
+    /// the live capacity (a 3-of-4 uniform cluster gives each survivor a
+    /// 1/3 share, keeping the spill bound meaningful mid-heal).
+    fn rebuild(&mut self) {
+        self.ring = Self::build_ring(self.seed, &self.vnodes, &self.live);
+        let live_weight: f64 = self
+            .weights
+            .iter()
+            .zip(&self.live)
+            .filter(|(_, &l)| l)
+            .map(|(w, _)| w)
+            .sum();
+        for s in 0..self.n_shards {
+            self.shares[s] = if self.live[s] && live_weight > 0.0 {
+                self.weights[s] / live_weight
+            } else {
+                0.0
+            };
         }
     }
 
@@ -387,6 +492,12 @@ impl Router for StickyCh {
 
     fn route(&self, func: FuncId, loads: &[ShardLoad]) -> usize {
         debug_assert_eq!(loads.len(), self.n_shards);
+        if self.ring.is_empty() {
+            // Degenerate: every shard departed. The cluster layers
+            // refuse to remove the last live shard, so this only guards
+            // direct misuse; any routable shard (or 0) will do.
+            return loads.iter().position(|l| l.routable).unwrap_or(0);
+        }
         let (start, home) = self.ring_start(func);
         let total: usize = loads.iter().map(|l| l.depth()).sum();
         let budget = self.load_factor * (total as f64 + 1.0);
@@ -399,20 +510,39 @@ impl Router for StickyCh {
             }
             visited |= 1 << shard;
             seen += 1;
-            // Each shard absorbs its capacity share of the bounded-load
-            // budget (1/n when blind/uniform).
-            let bound = (budget * self.shares[shard]).ceil();
-            if (loads[shard].depth() as f64) < bound {
-                if shard != home {
-                    self.spills.fetch_add(1, Ordering::Relaxed);
+            // A shard can sit on the ring yet be momentarily
+            // unroutable (drain observed before the heal rebuilt the
+            // ring): the walk treats it like an over-bound shard.
+            if loads[shard].routable {
+                // Each shard absorbs its capacity share of the
+                // bounded-load budget (1/n when blind/uniform).
+                let bound = (budget * self.shares[shard]).ceil();
+                if (loads[shard].depth() as f64) < bound {
+                    if shard != home {
+                        self.spills.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return shard;
                 }
-                return shard;
             }
             if seen == self.n_shards {
                 break;
             }
         }
         home // uniform overload: locality beats a futile spill
+    }
+
+    fn on_shard_removed(&mut self, shard: usize) {
+        if self.live[shard] {
+            self.live[shard] = false;
+            self.rebuild();
+        }
+    }
+
+    fn on_shard_added(&mut self, shard: usize) {
+        if !self.live[shard] {
+            self.live[shard] = true;
+            self.rebuild();
+        }
     }
 }
 
@@ -441,8 +571,8 @@ mod tests {
         rows.iter()
             .map(|&(d, c)| ShardLoad {
                 pending: d,
-                in_flight: 0,
                 capacity: c,
+                ..Default::default()
             })
             .collect()
     }
@@ -550,6 +680,81 @@ mod tests {
             for f in 0..8 {
                 assert_eq!(r.route(FuncId(f), &l), 0, "{}", k.name());
             }
+        }
+    }
+
+    #[test]
+    fn every_router_skips_unroutable_shards() {
+        for k in ALL_ROUTERS.into_iter().chain([RouterKind::StickyChBlind]) {
+            let r = k.build(4, 1.25, 7, &[]);
+            let mut l = loads(&[0, 0, 0, 0]);
+            l[2].routable = false;
+            for f in 0..64 {
+                let picked = r.route(FuncId(f), &l);
+                assert_ne!(picked, 2, "{} routed to a drained shard", k.name());
+                assert!(picked < 4);
+            }
+        }
+        // Round-robin keeps cycling over the survivors.
+        let rr = RouterKind::RoundRobin.build(3, 1.25, 0, &[]);
+        let mut l = loads(&[0, 0, 0]);
+        l[1].routable = false;
+        let picks: Vec<usize> = (0..4).map(|_| rr.route(FuncId(0), &l)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+    }
+
+    #[test]
+    fn sticky_heal_rehomes_and_rejoin_restores_exact_ring() {
+        let mut s = StickyCh::new(4, 1.25, 7);
+        let original_ring = s.ring.clone();
+        let f = FuncId(5);
+        let victim = s.home(f);
+        let homes_before: Vec<usize> = (0..256).map(|g| s.home(FuncId(g))).collect();
+
+        s.on_shard_removed(victim);
+        // The victim owns no ring points: nothing homes there, and the
+        // observed function re-homes deterministically.
+        let new_home = s.home(f);
+        assert_ne!(new_home, victim);
+        for g in 0..256 {
+            assert_ne!(s.home(FuncId(g)), victim, "ring not healed for {g}");
+        }
+        // Consistent hashing: functions homed elsewhere are untouched.
+        for (g, &h) in homes_before.iter().enumerate() {
+            if h != victim {
+                assert_eq!(s.home(FuncId(g as u32)), h, "home of {g} moved");
+            }
+        }
+        // Shares renormalize over the 3 survivors.
+        let live_total: f64 = s.shares.iter().sum();
+        assert!((live_total - 1.0).abs() < 1e-12);
+        assert_eq!(s.shares[victim], 0.0);
+
+        // Rejoin restores the construction ring bit-for-bit.
+        s.on_shard_added(victim);
+        assert_eq!(s.ring, original_ring);
+        assert_eq!(s.home(f), victim);
+        for (g, &h) in homes_before.iter().enumerate() {
+            assert_eq!(s.home(FuncId(g as u32)), h);
+        }
+    }
+
+    #[test]
+    fn sticky_heal_is_capacity_weighted() {
+        // Kill the fat shard of a weighted ring: its ~4/7 arc re-homes
+        // across the survivors in proportion to *their* weights, and
+        // the surviving shares renormalize over live capacity.
+        let caps = [4.0, 1.0, 1.0, 1.0];
+        let mut s = StickyCh::weighted(4, 1.25, 7, &caps);
+        s.on_shard_removed(0);
+        let mut owned = [0usize; 4];
+        for f in 0..4096 {
+            owned[s.home(FuncId(f))] += 1;
+        }
+        assert_eq!(owned[0], 0);
+        assert!((s.shares[1] - 1.0 / 3.0).abs() < 1e-12);
+        for o in &owned[1..] {
+            assert!(*o > 0);
         }
     }
 

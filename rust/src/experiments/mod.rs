@@ -6,6 +6,7 @@
 
 pub mod ablation;
 pub mod cluster;
+pub mod elastic;
 pub mod fig1;
 pub mod fig3;
 pub mod fig4;
@@ -141,6 +142,7 @@ pub const ALL: &[(&str, fn())] = &[
     ("cluster", cluster::main),
     ("hetero", hetero::main),
     ("serving", serving::main),
+    ("elastic", elastic::main),
 ];
 
 /// Look up an experiment by name.
@@ -158,7 +160,7 @@ mod tests {
         for expect in [
             "table1", "fig1", "fig3", "fig4", "table3", "fig5a", "fig5b", "fig5c",
             "fig6a", "fig6b", "fig6c", "fig7a", "fig7b", "fig7c", "fig8a", "fig8b",
-            "fig8c", "ablation", "perf", "cluster", "hetero", "serving",
+            "fig8c", "ablation", "perf", "cluster", "hetero", "serving", "elastic",
         ] {
             assert!(names.contains(&expect), "{expect} missing");
         }

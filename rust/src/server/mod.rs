@@ -91,6 +91,56 @@
 //!   (completions, latency sum, cold starts) are maintained at
 //!   completion time, and no plane is ever locked to answer it.
 //!
+//! # Elastic membership and the epoch rule
+//!
+//! The shard set is elastic at runtime: the admin verbs `drain` /
+//! `join` / `kill` / `membership` (wire commands, [`crate::api::Frontend`]
+//! methods) flip per-shard [`crate::api::ShardHealth`] in place — shard
+//! *indices* are stable for the life of the server. Health changes and
+//! ring healing happen behind the read-mostly router lock's *write*
+//! side (membership is rare; submits keep routing in parallel through
+//! the read side):
+//!
+//! * **drain** — the shard's [`ShardLoad::routable`] flag drops and its
+//!   consistent-hash vnodes leave the ring; queued/in-flight work runs
+//!   to completion on the draining plane, then the shard idles.
+//! * **join** — the shard becomes routable again, reinserting exactly
+//!   its original vnodes (functions homed elsewhere keep their homes).
+//!   After a kill it comes back cold and rebuilds warm locality — the
+//!   elastic harness (`experiments/elastic.rs`) measures that recovery
+//!   curve.
+//! * **kill** — abrupt failure. Under the shard's plane lock: the plane
+//!   is replaced with a cold rebuild, the shard **epoch** is bumped,
+//!   and every invocation→ticket mapping is drained; each stranded
+//!   ticket then resolves to [`ApiError::ShardLost`] — waiters blocked
+//!   in `wait` wake *immediately* with the structured error, they never
+//!   hang until their deadline.
+//!
+//! The epoch is the replay-safety rule: a rebuilt plane restarts
+//! invocation ids at 0, so a timer event scheduled before the kill
+//! (an exec-start or modeled completion) could otherwise be delivered
+//! to an unrelated new invocation with a recycled id. Every
+//! [`WorkItem`] is stamped with its shard's epoch at schedule time
+//! (read under the plane lock) and re-checked under the plane lock at
+//! delivery; mismatches are counted (`stale_drops`) and dropped.
+//!
+//! **Ticket-fate conservation.** Every admitted submission gets exactly
+//! one fate — completed, failed ([`ApiError::ShardLost`]), or it is
+//! still outstanding; rejected submissions (overload, unknown function,
+//! shutdown) never enter the count. The `membership` snapshot exposes
+//! the counters (`accepted`, `completed`, `failed`, `rejected`,
+//! `stale_drops`) and [`crate::api::MembershipInfo::conserved_at_quiescence`]
+//! checks the invariant; the elastic harness gates on it after a
+//! kill storm. The kill path keeps it exact by draining the
+//! invocation→ticket map under the same plane lock the completion path
+//! uses to claim a mapping — a racing completion either claims the
+//! ticket before the kill (counted `completed`) or finds its epoch
+//! stale after it (counted `stale_drops`, ticket already `failed`).
+//!
+//! The last live shard can be neither drained nor killed: a frontend
+//! with no routable shard would turn every submit into an error with no
+//! in-band recovery path.
+//!
 //! # Ownership: handles vs the shutdown guard
 //!
 //! All serving state lives in one shared `Inner`. [`RtHandle`] is a
@@ -116,7 +166,8 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::api::types::{
-    ApiError, DescribeInfo, InvokeOutcome, StatsSnapshot, Ticket, PROTOCOL_VERSION,
+    ApiError, DescribeInfo, InvokeOutcome, MembershipInfo, ShardHealth, ShardInfo, StatsSnapshot,
+    Ticket, PROTOCOL_VERSION,
 };
 use crate::api::Frontend;
 use crate::clock::{Clock, RealClock};
@@ -142,10 +193,26 @@ struct ExecJob {
 
 /// Completion bookkeeping for one accepted invocation.
 enum TicketEntry {
-    /// Still running; waiters are woken (all of them) on completion.
-    Pending { waiters: Vec<Sender<InvokeOutcome>> },
+    /// Still running; waiters are woken (all of them) on completion —
+    /// with the outcome, or with the structured error that became the
+    /// ticket's fate (e.g. [`ApiError::ShardLost`] after a kill).
+    Pending {
+        waiters: Vec<Sender<Result<InvokeOutcome, ApiError>>>,
+    },
     /// Completed but not yet claimed by `wait`/`poll`.
     Done(InvokeOutcome),
+    /// Terminally failed (shard lost) but not yet claimed; the next
+    /// `wait`/`poll` claims the structured error exactly like a `Done`
+    /// outcome.
+    Failed(ApiError),
+}
+
+impl TicketEntry {
+    /// Terminal (unclaimed-completion) entries, counted against the
+    /// table's `max_done` bound.
+    fn is_terminal(&self) -> bool {
+        matches!(self, TicketEntry::Done(_) | TicketEntry::Failed(_))
+    }
 }
 
 /// Ticket registry slot with a bound on completed-but-unclaimed
@@ -157,13 +224,19 @@ enum TicketEntry {
 /// bounds sum to [`TicketTable::DEFAULT_MAX_DONE`].
 struct TicketTable {
     entries: HashMap<u64, TicketEntry>,
-    /// Completion order of `Done` entries; may contain stale ids of
-    /// since-claimed tickets (filtered during eviction — ids are never
-    /// reused, so staleness is unambiguous).
+    /// Completion order of terminal (`Done`/`Failed`) entries; may
+    /// contain stale ids of since-claimed tickets (filtered during
+    /// eviction — ids are never reused, so staleness is unambiguous).
     done_order: VecDeque<u64>,
-    /// Live `Done` entries (kept ≤ `max_done`).
+    /// Live terminal entries (kept ≤ `max_done`).
     done_count: usize,
     max_done: usize,
+    /// Ids whose unclaimed completion was evicted by the `max_done`
+    /// bound, so a late `wait` can be told `unknown-ticket` *with the
+    /// evicted hint* instead of looking like a typo. Bounded like the
+    /// table itself (oldest forgotten first — a very late waiter
+    /// degrades to the plain unknown-ticket answer).
+    evicted: VecDeque<u64>,
 }
 
 impl TicketTable {
@@ -177,6 +250,7 @@ impl TicketTable {
             done_order: VecDeque::new(),
             done_count: 0,
             max_done,
+            evicted: VecDeque::new(),
         }
     }
 
@@ -189,20 +263,26 @@ impl TicketTable {
         );
     }
 
-    /// Remove an entry, keeping the unclaimed-done count in sync.
+    /// Remove an entry, keeping the unclaimed-terminal count in sync.
     fn remove(&mut self, id: u64) -> Option<TicketEntry> {
         let entry = self.entries.remove(&id);
-        if matches!(entry, Some(TicketEntry::Done(_))) {
+        if entry.as_ref().is_some_and(TicketEntry::is_terminal) {
             self.done_count -= 1;
         }
         entry
     }
 
-    /// Mark `id` done, returning the displaced entry (the waiters to
-    /// wake). Evicts the oldest unclaimed completions over the bound.
-    fn complete(&mut self, id: u64, outcome: InvokeOutcome) -> Option<TicketEntry> {
-        let prev = self.entries.insert(id, TicketEntry::Done(outcome));
-        if !matches!(prev, Some(TicketEntry::Done(_))) {
+    /// Was `id`'s completed-but-unclaimed entry evicted by the bound?
+    fn was_evicted(&self, id: u64) -> bool {
+        self.evicted.contains(&id)
+    }
+
+    /// Make `id` terminal, returning the displaced entry (the waiters
+    /// to wake). Evicts the oldest unclaimed terminals over the bound.
+    fn resolve(&mut self, id: u64, entry: TicketEntry) -> Option<TicketEntry> {
+        debug_assert!(entry.is_terminal());
+        let prev = self.entries.insert(id, entry);
+        if !prev.as_ref().is_some_and(TicketEntry::is_terminal) {
             self.done_count += 1;
         }
         self.done_order.push_back(id);
@@ -210,9 +290,14 @@ impl TicketTable {
             let Some(old) = self.done_order.pop_front() else {
                 break;
             };
-            if matches!(self.entries.get(&old), Some(TicketEntry::Done(_))) {
+            if self.entries.get(&old).is_some_and(TicketEntry::is_terminal) {
                 self.entries.remove(&old);
                 self.done_count -= 1;
+                self.evicted.push_back(old);
+                // Keep the eviction memory bounded too.
+                while self.evicted.len() > self.max_done.max(64) {
+                    self.evicted.pop_front();
+                }
             }
         }
         // The order queue accumulates stale ids of promptly-claimed
@@ -221,21 +306,39 @@ impl TicketTable {
         if self.done_order.len() > self.max_done.saturating_mul(2).max(64) {
             let entries = &self.entries;
             self.done_order
-                .retain(|id| matches!(entries.get(id), Some(TicketEntry::Done(_))));
+                .retain(|id| entries.get(id).is_some_and(TicketEntry::is_terminal));
         }
         prev
     }
+
+    /// Mark `id` done (successful completion).
+    fn complete(&mut self, id: u64, outcome: InvokeOutcome) -> Option<TicketEntry> {
+        self.resolve(id, TicketEntry::Done(outcome))
+    }
+
+    /// Mark `id` terminally failed (e.g. its shard was killed).
+    fn fail(&mut self, id: u64, err: ApiError) -> Option<TicketEntry> {
+        self.resolve(id, TicketEntry::Failed(err))
+    }
 }
 
-/// Work handed to a shard's worker pool by the timer thread.
+/// Work handed to a shard's worker pool by the timer thread. Every
+/// item carries the shard epoch it was scheduled under (read beneath
+/// the plane lock); delivery re-checks it beneath the same lock and
+/// drops mismatches — a rebuilt plane restarts invocation ids, so a
+/// stale item could otherwise touch an unrelated new invocation.
 enum WorkItem {
     /// The dispatch's scaled pre-exec delay (boot + blocking) elapsed:
     /// touch the plane at the wall-clock exec start, then execute
     /// (PJRT inline, or schedule the modeled completion on the timer).
-    ExecStart(Dispatch),
+    ExecStart { d: Dispatch, epoch: u64 },
     /// The modeled service time elapsed (model mode only): complete
     /// the invocation and fulfill its ticket.
-    Complete { d: Dispatch, exec_t0: Nanos },
+    Complete {
+        d: Dispatch,
+        exec_t0: Nanos,
+        epoch: u64,
+    },
 }
 
 /// One timer-wheel entry; ordered by `(due, seq)` so same-instant
@@ -319,8 +422,37 @@ struct ShardState {
     ticks: AtomicU64,
     /// shard-local invocation id → ticket, registered under the plane
     /// lock at submit time so a racing completion can never observe an
-    /// unmapped invocation.
+    /// unmapped invocation. The kill path drains it under the plane
+    /// lock too — a completion claims its mapping before the kill, or
+    /// its epoch is stale after it; never both (ticket-fate exactness).
     inv_tickets: Mutex<HashMap<InvocationId, Ticket>>,
+    /// Lifecycle state ([`ShardHealth`] as usize); written only under
+    /// the router write lock (membership verbs), read lock-free by
+    /// routing and `membership`.
+    health: AtomicUsize,
+    /// Kill counter: bumped under the plane lock when the plane is
+    /// rebuilt; see [`WorkItem`].
+    epoch: AtomicU64,
+}
+
+const HEALTH_UP: usize = 0;
+const HEALTH_DRAINING: usize = 1;
+const HEALTH_DEAD: usize = 2;
+
+fn health_of(v: usize) -> ShardHealth {
+    match v {
+        HEALTH_DRAINING => ShardHealth::Draining,
+        HEALTH_DEAD => ShardHealth::Dead,
+        _ => ShardHealth::Up,
+    }
+}
+
+fn health_code(h: ShardHealth) -> usize {
+    match h {
+        ShardHealth::Up => HEALTH_UP,
+        ShardHealth::Draining => HEALTH_DRAINING,
+        ShardHealth::Dead => HEALTH_DEAD,
+    }
 }
 
 impl ShardState {
@@ -336,6 +468,8 @@ impl ShardState {
             gate_cv: Condvar::new(),
             ticks: AtomicU64::new(0),
             inv_tickets: Mutex::new(HashMap::new()),
+            health: AtomicUsize::new(HEALTH_UP),
+            epoch: AtomicU64::new(0),
         }
     }
 
@@ -343,11 +477,20 @@ impl ShardState {
         self.pending.load(Ordering::SeqCst) + self.in_flight.load(Ordering::SeqCst)
     }
 
+    fn health(&self) -> ShardHealth {
+        health_of(self.health.load(Ordering::SeqCst))
+    }
+
+    fn set_health(&self, h: ShardHealth) {
+        self.health.store(health_code(h), Ordering::SeqCst);
+    }
+
     fn load(&self) -> ShardLoad {
         ShardLoad {
             pending: self.pending.load(Ordering::SeqCst),
             in_flight: self.in_flight.load(Ordering::SeqCst),
             capacity: self.capacity,
+            routable: self.health.load(Ordering::SeqCst) == HEALTH_UP,
         }
     }
 
@@ -410,6 +553,19 @@ struct Inner {
     /// Executor-side threads spawned (timer + workers): a function of
     /// configuration, asserted by tests to be load-independent.
     exec_threads: AtomicUsize,
+    // --- elastic membership (see module docs) ------------------------
+    /// Kept for cold plane rebuilds after a kill.
+    workload: Workload,
+    /// Per-shard plane configs, kept for the same reason.
+    plane_cfgs: Vec<PlaneConfig>,
+    /// Cluster-wide membership change counter (drain/join/kill).
+    membership_epoch: AtomicU64,
+    // Ticket-fate conservation counters:
+    // accepted == completed + failed + outstanding, always.
+    accepted: AtomicU64,
+    failed: AtomicU64,
+    rejected: AtomicU64,
+    stale_drops: AtomicU64,
 }
 
 impl Inner {
@@ -462,6 +618,16 @@ fn describe_inner(inner: &Arc<Inner>) -> DescribeInfo {
 }
 
 fn submit_inner(inner: &Arc<Inner>, name: &str) -> Result<Ticket, ApiError> {
+    let r = submit_raw(inner, name);
+    if r.is_err() {
+        // Admission rejections leave nothing outstanding: no ticket, no
+        // plane arrival — counted apart from accepted work.
+        inner.rejected.fetch_add(1, Ordering::SeqCst);
+    }
+    r
+}
+
+fn submit_raw(inner: &Arc<Inner>, name: &str) -> Result<Ticket, ApiError> {
     if !inner.running.load(Ordering::SeqCst) {
         return Err(ApiError::ShuttingDown);
     }
@@ -477,43 +643,70 @@ fn submit_inner(inner: &Arc<Inner>, name: &str) -> Result<Ticket, ApiError> {
         static LOADS_BUF: std::cell::RefCell<Vec<ShardLoad>> =
             const { std::cell::RefCell::new(Vec::new()) };
     }
-    let shard = LOADS_BUF.with(|buf| -> Result<usize, ApiError> {
-        let mut loads = buf.borrow_mut();
-        loads.clear();
-        loads.extend(inner.shards.iter().map(|s| s.load()));
-        let pending: usize = loads.iter().map(|l| l.pending).sum();
-        let limit = inner.max_pending.load(Ordering::SeqCst);
-        if pending >= limit {
-            return Err(ApiError::Overloaded { pending, limit });
-        }
-        Ok(inner.router.read().unwrap().route(func, &loads))
-    })?;
-    debug_assert!(shard < inner.shards.len(), "router out of range");
+    let route = || {
+        LOADS_BUF.with(|buf| -> Result<usize, ApiError> {
+            let mut loads = buf.borrow_mut();
+            loads.clear();
+            loads.extend(inner.shards.iter().map(|s| s.load()));
+            let pending: usize = loads.iter().map(|l| l.pending).sum();
+            let limit = inner.max_pending.load(Ordering::SeqCst);
+            if pending >= limit {
+                return Err(ApiError::Overloaded { pending, limit });
+            }
+            Ok(inner.router.read().unwrap().route(func, &loads))
+        })
+    };
     let ticket = Ticket(inner.next_ticket.fetch_add(1, Ordering::SeqCst));
     inner
         .ticket_slot(ticket.0)
         .lock()
         .unwrap()
         .insert_pending(ticket.0);
-    let st = &inner.shards[shard];
-    let (was_idle, ds) = {
-        // The only plane lock on the submit path: the routed shard's.
-        let mut plane = st.plane.lock().unwrap();
-        // Exact idle check under the lock (a pre-lock snapshot could
-        // race a completion and leave the monitor parked with work).
-        let was_idle = plane.pending() + plane.in_flight() == 0;
-        let now = inner.clock.now();
-        let (inv, ds) = plane.on_arrival(func, now);
-        // Map under the plane lock (see ShardState::inv_tickets).
-        st.inv_tickets.lock().unwrap().insert(inv, ticket);
-        st.publish(&plane);
-        (was_idle, ds)
-    };
-    if was_idle {
-        st.wake_monitor();
+    // A kill can land between routing and the plane lock; the routed
+    // shard's health is re-checked under its plane lock (where kills
+    // flip it), and a dead hit re-routes — the healed loads now show
+    // the shard unroutable. Bounded: each retry needs a fresh kill.
+    let mut attempts = 0;
+    loop {
+        let shard = match route() {
+            Ok(s) => s,
+            Err(e) => {
+                // Nothing accepted: retract the provisional ticket.
+                inner.ticket_slot(ticket.0).lock().unwrap().remove(ticket.0);
+                return Err(e);
+            }
+        };
+        debug_assert!(shard < inner.shards.len(), "router out of range");
+        let st = &inner.shards[shard];
+        let (was_idle, ds, epoch) = {
+            // The only plane lock on the submit path: the routed shard's.
+            let mut plane = st.plane.lock().unwrap();
+            if st.health() == ShardHealth::Dead {
+                drop(plane);
+                attempts += 1;
+                if attempts > inner.shards.len() {
+                    inner.ticket_slot(ticket.0).lock().unwrap().remove(ticket.0);
+                    return Err(ApiError::ShuttingDown);
+                }
+                continue;
+            }
+            // Exact idle check under the lock (a pre-lock snapshot could
+            // race a completion and leave the monitor parked with work).
+            let was_idle = plane.pending() + plane.in_flight() == 0;
+            let now = inner.clock.now();
+            let (inv, ds) = plane.on_arrival(func, now);
+            // Map under the plane lock (see ShardState::inv_tickets).
+            st.inv_tickets.lock().unwrap().insert(inv, ticket);
+            st.publish(&plane);
+            (was_idle, ds, st.epoch.load(Ordering::SeqCst))
+        };
+        inner.accepted.fetch_add(1, Ordering::SeqCst);
+        if was_idle {
+            st.wake_monitor();
+        }
+        schedule_dispatches(inner, shard, epoch, ds);
+        return Ok(ticket);
     }
-    schedule_dispatches(inner, shard, ds);
-    Ok(ticket)
 }
 
 fn wait_inner(
@@ -524,9 +717,15 @@ fn wait_inner(
     let rx = {
         let mut tickets = inner.ticket_slot(ticket.0).lock().unwrap();
         match tickets.remove(ticket.0) {
-            None => return Err(ApiError::UnknownTicket { ticket }),
-            // Already completed: claiming removes the entry.
+            None => {
+                return Err(ApiError::UnknownTicket {
+                    ticket,
+                    evicted: tickets.was_evicted(ticket.0),
+                })
+            }
+            // Already resolved: claiming removes the entry.
             Some(TicketEntry::Done(o)) => return Ok(o),
+            Some(TicketEntry::Failed(e)) => return Err(e),
             Some(TicketEntry::Pending { mut waiters }) => {
                 let (tx, rx) = channel();
                 waiters.push(tx);
@@ -537,7 +736,7 @@ fn wait_inner(
             }
         }
     };
-    let outcome = match deadline {
+    let resolution = match deadline {
         // Expired: report the ticket so the (possibly sync-invoking)
         // client can still redeem the run-to-completion invocation.
         Some(dl) => rx.recv_timeout(dl).map_err(|_| ApiError::DeadlineExceeded {
@@ -547,18 +746,23 @@ fn wait_inner(
         // Sender-side drop (process teardown) surfaces as shutdown.
         None => rx.recv().map_err(|_| ApiError::ShuttingDown)?,
     };
-    // Claimed: reclaim the entry (concurrent waiters were all woken by
-    // the same fulfillment; whichever removes second is a no-op).
+    // Claimed — outcome or structured fate (e.g. shard-lost): reclaim
+    // the entry (concurrent waiters were all woken by the same
+    // resolution; whichever removes second is a no-op).
     inner.ticket_slot(ticket.0).lock().unwrap().remove(ticket.0);
-    Ok(outcome)
+    resolution
 }
 
 fn poll_inner(inner: &Arc<Inner>, ticket: Ticket) -> Result<Option<InvokeOutcome>, ApiError> {
     let mut tickets = inner.ticket_slot(ticket.0).lock().unwrap();
     match tickets.remove(ticket.0) {
-        None => Err(ApiError::UnknownTicket { ticket }),
-        // Done: claiming removes the entry, like a successful wait.
+        None => Err(ApiError::UnknownTicket {
+            ticket,
+            evicted: tickets.was_evicted(ticket.0),
+        }),
+        // Resolved: claiming removes the entry, like a successful wait.
         Some(TicketEntry::Done(o)) => Ok(Some(o)),
+        Some(TicketEntry::Failed(e)) => Err(e),
         Some(pending @ TicketEntry::Pending { .. }) => {
             tickets.entries.insert(ticket.0, pending);
             Ok(None)
@@ -585,6 +789,177 @@ fn stats_inner(inner: &Arc<Inner>) -> StatsSnapshot {
         s.cold_ratio = inner.cold_starts.load(Ordering::SeqCst) as f64 / n as f64;
     }
     s
+}
+
+// ---------------------------------------------------------------------
+// Elastic membership (see module docs).
+// ---------------------------------------------------------------------
+
+/// Lock-free membership snapshot: health/epoch/load per shard plus the
+/// ticket-fate conservation counters. Never locks a plane.
+fn membership_inner(inner: &Arc<Inner>) -> Result<MembershipInfo, ApiError> {
+    Ok(MembershipInfo {
+        epoch: inner.membership_epoch.load(Ordering::SeqCst),
+        shards: inner
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, st)| ShardInfo {
+                shard: i,
+                health: st.health(),
+                epoch: st.epoch.load(Ordering::SeqCst),
+                pending: st.pending.load(Ordering::SeqCst),
+                in_flight: st.in_flight.load(Ordering::SeqCst),
+                capacity: st.capacity,
+            })
+            .collect(),
+        accepted: inner.accepted.load(Ordering::SeqCst),
+        completed: inner.completed.load(Ordering::SeqCst) as u64,
+        failed: inner.failed.load(Ordering::SeqCst),
+        rejected: inner.rejected.load(Ordering::SeqCst),
+        stale_drops: inner.stale_drops.load(Ordering::SeqCst),
+    })
+}
+
+fn no_shard(shard: usize, n: usize) -> ApiError {
+    ApiError::BadRequest {
+        detail: format!("no shard {shard} (cluster has {n})"),
+    }
+}
+
+fn live_count(inner: &Arc<Inner>) -> usize {
+    inner
+        .shards
+        .iter()
+        .filter(|s| s.health() == ShardHealth::Up)
+        .count()
+}
+
+/// `drain`: stop routing new work to `shard`; queued/in-flight work
+/// runs to completion on the draining plane. Idempotent on an
+/// already-draining shard; refused for a dead shard and for the last
+/// live one.
+fn drain_inner(inner: &Arc<Inner>, shard: usize) -> Result<MembershipInfo, ApiError> {
+    if shard >= inner.shards.len() {
+        return Err(no_shard(shard, inner.shards.len()));
+    }
+    // Membership is rare: take the router's write side so the health
+    // flip and the ring heal are one atomic step for routing.
+    let mut router = inner.router.write().unwrap();
+    let st = &inner.shards[shard];
+    match st.health() {
+        ShardHealth::Draining => {}
+        ShardHealth::Dead => {
+            return Err(ApiError::BadRequest {
+                detail: format!("shard {shard} is dead; join it first"),
+            })
+        }
+        ShardHealth::Up => {
+            if live_count(inner) <= 1 {
+                return Err(ApiError::BadRequest {
+                    detail: "cannot drain the last live shard".into(),
+                });
+            }
+            st.set_health(ShardHealth::Draining);
+            router.on_shard_removed(shard);
+        }
+    }
+    drop(router);
+    inner.membership_epoch.fetch_add(1, Ordering::SeqCst);
+    membership_inner(inner)
+}
+
+/// `join`: (re)insert `shard` into the routable set — exactly its
+/// original ring vnodes come back, so no other shard's homes move. A
+/// previously killed shard rejoins cold. Idempotent on an Up shard.
+fn join_inner(inner: &Arc<Inner>, shard: usize) -> Result<MembershipInfo, ApiError> {
+    if shard >= inner.shards.len() {
+        return Err(no_shard(shard, inner.shards.len()));
+    }
+    let mut router = inner.router.write().unwrap();
+    let st = &inner.shards[shard];
+    if st.health() != ShardHealth::Up {
+        st.set_health(ShardHealth::Up);
+        router.on_shard_added(shard);
+    }
+    drop(router);
+    inner.membership_epoch.fetch_add(1, Ordering::SeqCst);
+    membership_inner(inner)
+}
+
+/// `kill`: abrupt shard failure. Under the shard's plane lock the plane
+/// is replaced cold, the epoch is bumped (stale timer/work items will
+/// be dropped, not delivered to id-recycling new invocations), and the
+/// invocation→ticket map is drained; every stranded ticket then
+/// resolves to [`ApiError::ShardLost`] — blocked waiters wake
+/// immediately. Refused for the last live shard.
+fn kill_inner(inner: &Arc<Inner>, shard: usize) -> Result<MembershipInfo, ApiError> {
+    if shard >= inner.shards.len() {
+        return Err(no_shard(shard, inner.shards.len()));
+    }
+    let mut router = inner.router.write().unwrap();
+    let st = &inner.shards[shard];
+    let was_up = match st.health() {
+        ShardHealth::Dead => {
+            return Err(ApiError::BadRequest {
+                detail: format!("shard {shard} is already dead"),
+            })
+        }
+        ShardHealth::Up => {
+            if live_count(inner) <= 1 {
+                return Err(ApiError::BadRequest {
+                    detail: "cannot kill the last live shard".into(),
+                });
+            }
+            true
+        }
+        ShardHealth::Draining => false,
+    };
+    let stranded: Vec<Ticket> = {
+        let mut plane = st.plane.lock().unwrap();
+        let fresh = ControlPlane::new(
+            inner.workload.clone(),
+            inner.plane_cfgs[shard].clone(),
+        );
+        *plane = fresh;
+        // Health, epoch, and the ticket-map drain all happen under the
+        // plane lock: a racing completion either claimed its mapping
+        // before us or sees a stale epoch after us — never both.
+        st.set_health(ShardHealth::Dead);
+        st.epoch.fetch_add(1, Ordering::SeqCst);
+        st.publish(&plane);
+        st.inv_tickets
+            .lock()
+            .unwrap()
+            .drain()
+            .map(|(_, t)| t)
+            .collect()
+    };
+    if was_up {
+        router.on_shard_removed(shard);
+    }
+    drop(router);
+    for ticket in stranded {
+        inner.failed.fetch_add(1, Ordering::SeqCst);
+        fail_ticket(inner, ticket, ApiError::ShardLost { shard, ticket });
+    }
+    inner.membership_epoch.fetch_add(1, Ordering::SeqCst);
+    membership_inner(inner)
+}
+
+/// Resolve a ticket to a structured error and wake every waiter —
+/// the failure-path twin of [`fulfill`].
+fn fail_ticket(inner: &Arc<Inner>, ticket: Ticket, err: ApiError) {
+    let prev = inner
+        .ticket_slot(ticket.0)
+        .lock()
+        .unwrap()
+        .fail(ticket.0, err.clone());
+    if let Some(TicketEntry::Pending { waiters }) = prev {
+        for w in waiters {
+            let _ = w.send(Err(err.clone()));
+        }
+    }
 }
 
 /// Single copy of the [`Frontend`] wiring, stamped onto every type that
@@ -615,6 +990,18 @@ macro_rules! impl_frontend_via_inner {
             }
             fn shutdown(&self) {
                 self.inner.running.store(false, Ordering::SeqCst);
+            }
+            fn drain(&self, shard: usize) -> Result<MembershipInfo, ApiError> {
+                drain_inner(&self.inner, shard)
+            }
+            fn join(&self, shard: usize) -> Result<MembershipInfo, ApiError> {
+                join_inner(&self.inner, shard)
+            }
+            fn kill(&self, shard: usize) -> Result<MembershipInfo, ApiError> {
+                kill_inner(&self.inner, shard)
+            }
+            fn membership(&self) -> Result<MembershipInfo, ApiError> {
+                membership_inner(&self.inner)
             }
         }
     };
@@ -722,8 +1109,8 @@ fn build_inner(
         functions.push(f.name.clone());
     }
     let planes: Vec<ControlPlane> = plane_cfgs
-        .into_iter()
-        .map(|cfg| ControlPlane::new(workload.clone(), cfg))
+        .iter()
+        .map(|cfg| ControlPlane::new(workload.clone(), cfg.clone()))
         .collect();
     let policy = planes[0].policy_name().to_string();
     let shards = planes
@@ -757,6 +1144,13 @@ fn build_inner(
         lat_sum_ns: AtomicU64::new(0),
         cold_starts: AtomicUsize::new(0),
         exec_threads: AtomicUsize::new(0),
+        workload,
+        plane_cfgs,
+        membership_epoch: AtomicU64::new(0),
+        accepted: AtomicU64::new(0),
+        failed: AtomicU64::new(0),
+        rejected: AtomicU64::new(0),
+        stale_drops: AtomicU64::new(0),
     }))
 }
 
@@ -835,9 +1229,9 @@ fn worker_loop(inner: Arc<Inner>, shard: usize) {
         };
         match item {
             None => return,
-            Some(WorkItem::ExecStart(d)) => run_exec_start(&inner, shard, d),
-            Some(WorkItem::Complete { d, exec_t0 }) => {
-                run_complete(&inner, shard, d, exec_t0)
+            Some(WorkItem::ExecStart { d, epoch }) => run_exec_start(&inner, shard, epoch, d),
+            Some(WorkItem::Complete { d, exec_t0, epoch }) => {
+                run_complete(&inner, shard, epoch, d, exec_t0)
             }
         }
     }
@@ -872,14 +1266,14 @@ fn monitor_loop(inner: Arc<Inner>, shard: usize) {
             return;
         }
         let now = inner.clock.now();
-        let ds = {
+        let (ds, epoch) = {
             let mut plane = st.plane.lock().unwrap();
             let ds = plane.on_monitor_tick(now);
             st.publish(&plane);
-            ds
+            (ds, st.epoch.load(Ordering::SeqCst))
         };
         st.ticks.fetch_add(1, Ordering::SeqCst);
-        schedule_dispatches(&inner, shard, ds);
+        schedule_dispatches(&inner, shard, epoch, ds);
     }
 }
 
@@ -930,10 +1324,11 @@ fn scaled(scale: f64, ns: Nanos) -> Duration {
     Duration::from_secs_f64(to_secs(ns) * scale)
 }
 
-/// Park each dispatch on the timer until its (scaled) exec start. The
-/// per-dispatch cost is one heap push — no thread is spawned anywhere
-/// on this path.
-fn schedule_dispatches(inner: &Arc<Inner>, shard: usize, ds: Vec<Dispatch>) {
+/// Park each dispatch on the timer until its (scaled) exec start,
+/// stamped with the shard epoch it was scheduled under (callers read it
+/// beneath the plane lock). The per-dispatch cost is one heap push —
+/// no thread is spawned anywhere on this path.
+fn schedule_dispatches(inner: &Arc<Inner>, shard: usize, epoch: u64, ds: Vec<Dispatch>) {
     if ds.is_empty() {
         return;
     }
@@ -942,17 +1337,30 @@ fn schedule_dispatches(inner: &Arc<Inner>, shard: usize, ds: Vec<Dispatch>) {
         let delay = scaled(inner.scale, d.exec_start.saturating_sub(d.at));
         inner
             .timer
-            .schedule(now + delay, shard, WorkItem::ExecStart(d));
+            .schedule(now + delay, shard, WorkItem::ExecStart { d, epoch });
     }
 }
 
 /// The dispatch reached its exec start: touch the plane (the sim
 /// engine's Touch event, live), then execute — PJRT inline on this
-/// worker, or the modeled service as a timer event.
-fn run_exec_start(inner: &Arc<Inner>, shard: usize, d: Dispatch) {
+/// worker, or the modeled service as a timer event. A stale epoch
+/// (the shard was killed since scheduling) drops the item instead:
+/// the rebuilt plane has never heard of this invocation, and its
+/// ticket was already failed by the kill.
+fn run_exec_start(inner: &Arc<Inner>, shard: usize, epoch: u64, d: Dispatch) {
+    let st = &inner.shards[shard];
     let exec_t0 = inner.clock.now();
-    // Exact utilization-integral touch at the wall-clock exec start.
-    inner.shards[shard].plane.lock().unwrap().touch(exec_t0);
+    {
+        // Exact utilization-integral touch at the wall-clock exec
+        // start; the epoch check shares the lock so a kill cannot slip
+        // between check and touch.
+        let mut plane = st.plane.lock().unwrap();
+        if st.epoch.load(Ordering::SeqCst) != epoch {
+            inner.stale_drops.fetch_add(1, Ordering::SeqCst);
+            return;
+        }
+        plane.touch(exec_t0);
+    }
     if let Some(tx) = &inner.exec_tx {
         let (rtx, rrx) = channel();
         if tx
@@ -964,29 +1372,36 @@ fn run_exec_start(inner: &Arc<Inner>, shard: usize, d: Dispatch) {
         {
             let _ = rrx.recv();
         }
-        run_complete(inner, shard, d, exec_t0);
+        run_complete(inner, shard, epoch, d, exec_t0);
     } else {
         // Model mode: the worker never sleeps — completion fires from
         // the timer after the scaled modeled service time.
         inner.timer.schedule(
             Instant::now() + scaled(inner.scale, d.exec),
             shard,
-            WorkItem::Complete { d, exec_t0 },
+            WorkItem::Complete { d, exec_t0, epoch },
         );
     }
 }
 
 /// Completion: retire the invocation on its plane, bump the stats
 /// aggregates, fulfill the submitter's ticket, and schedule any
-/// unlocked dispatches.
-fn run_complete(inner: &Arc<Inner>, shard: usize, d: Dispatch, exec_t0: Nanos) {
+/// unlocked dispatches. Epoch-guarded like [`run_exec_start`]; the
+/// ticket mapping is claimed under the plane lock so a concurrent kill
+/// can never fail a ticket this path is about to fulfill.
+fn run_complete(inner: &Arc<Inner>, shard: usize, epoch: u64, d: Dispatch, exec_t0: Nanos) {
     let st = &inner.shards[shard];
     let now = inner.clock.now();
-    let (rec, ds) = {
+    let (rec, ds, mapped) = {
         let mut plane = st.plane.lock().unwrap();
-        let r = plane.on_complete(d.inv, now);
+        if st.epoch.load(Ordering::SeqCst) != epoch {
+            inner.stale_drops.fetch_add(1, Ordering::SeqCst);
+            return;
+        }
+        let (rec, ds) = plane.on_complete(d.inv, now);
         st.publish(&plane);
-        r
+        let mapped = st.inv_tickets.lock().unwrap().remove(&d.inv);
+        (rec, ds, mapped)
     };
     // Completion matching: the plane hands back the completed
     // invocation's own record (not `records.last()`, which under
@@ -999,7 +1414,6 @@ fn run_complete(inner: &Arc<Inner>, shard: usize, d: Dispatch, exec_t0: Nanos) {
             inner.cold_starts.fetch_add(1, Ordering::SeqCst);
         }
         inner.completed.fetch_add(1, Ordering::SeqCst);
-        let mapped = st.inv_tickets.lock().unwrap().remove(&d.inv);
         if let Some(ticket) = mapped {
             fulfill(
                 inner,
@@ -1016,7 +1430,7 @@ fn run_complete(inner: &Arc<Inner>, shard: usize, d: Dispatch, exec_t0: Nanos) {
             );
         }
     }
-    schedule_dispatches(inner, shard, ds);
+    schedule_dispatches(inner, shard, epoch, ds);
 }
 
 /// Mark a ticket done and wake every waiter blocked on it.
@@ -1028,7 +1442,7 @@ fn fulfill(inner: &Arc<Inner>, ticket: Ticket, outcome: InvokeOutcome) {
         .complete(ticket.0, outcome.clone());
     if let Some(TicketEntry::Pending { waiters }) = prev {
         for w in waiters {
-            let _ = w.send(outcome.clone());
+            let _ = w.send(Ok(outcome.clone()));
         }
     }
 }
@@ -1384,14 +1798,20 @@ mod tests {
             t.insert_pending(id);
             t.complete(id, outcome(id));
         }
-        // Oldest unclaimed completions evicted down to the bound.
+        // Oldest unclaimed completions evicted down to the bound — and
+        // remembered, so a late waiter gets the evicted hint rather
+        // than a bare unknown-ticket.
         assert_eq!(t.done_count, 2);
         assert!(t.remove(0).is_none());
         assert!(t.remove(1).is_none());
         assert!(t.remove(2).is_none());
+        assert!(t.was_evicted(0) && t.was_evicted(1) && t.was_evicted(2));
+        assert!(!t.was_evicted(3) && !t.was_evicted(99));
         assert!(matches!(t.remove(3), Some(TicketEntry::Done(_))));
         assert!(matches!(t.remove(4), Some(TicketEntry::Done(_))));
         assert_eq!(t.done_count, 0);
+        // Claimed-then-gone tickets are not "evicted".
+        assert!(!t.was_evicted(3));
         // Promptly-claimed tickets leave stale order ids behind; the
         // compaction keeps both structures bounded.
         for id in 5..500 {
@@ -1402,6 +1822,170 @@ mod tests {
         assert!(t.entries.is_empty());
         assert_eq!(t.done_count, 0);
         assert!(t.done_order.len() <= t.max_done.saturating_mul(2).max(64) + 1);
+    }
+
+    /// Poll `membership` until `pred` holds or the deadline passes.
+    fn wait_membership<F: Fn(&MembershipInfo) -> bool>(
+        f: &dyn Frontend,
+        pred: F,
+    ) -> MembershipInfo {
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        loop {
+            let m = f.membership().unwrap();
+            if pred(&m) || std::time::Instant::now() > deadline {
+                return m;
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn kill_fails_stranded_tickets_immediately_and_conserves_fates() {
+        let cfg = ClusterConfig {
+            n_shards: 2,
+            router: RouterKind::RoundRobin,
+            plane: fast_cfg(),
+            ..Default::default()
+        };
+        // Slow enough (fft cold boot ≈ 2.4 s model → ≈ 480 ms wall)
+        // that all four invocations are still unresolved at kill time.
+        let srv = RtCluster::new(workload(), cfg, None, 0.2).unwrap();
+        let tickets: Vec<Ticket> = (0..4).map(|_| srv.submit("fft-0").unwrap()).collect();
+        // A waiter already blocked on a doomed ticket (RR: tickets 0, 2
+        // are shard 0's) must wake *immediately* with the structured
+        // error — not hang until its 30 s deadline.
+        let handle = srv.handle();
+        let doomed = tickets[0];
+        let waiter = thread::spawn(move || {
+            let t0 = std::time::Instant::now();
+            let r = handle.wait(doomed, Some(Duration::from_secs(30)));
+            (r, t0.elapsed())
+        });
+        thread::sleep(Duration::from_millis(10));
+        let m = srv.kill(0).unwrap();
+        assert_eq!(m.shards[0].health, ShardHealth::Dead);
+        assert_eq!(m.shards[0].epoch, 1);
+        assert_eq!(m.failed, 2, "both shard-0 tickets fail at kill time");
+        let (r, waited) = waiter.join().unwrap();
+        match r.unwrap_err() {
+            ApiError::ShardLost { shard, ticket } => {
+                assert_eq!(shard, 0);
+                assert_eq!(ticket, doomed);
+            }
+            e => panic!("expected shard-lost, got {e:?}"),
+        }
+        assert!(waited < Duration::from_secs(10), "waiter must not hang");
+        // The unclaimed doomed ticket resolves to the same fate later.
+        match srv.wait(tickets[2], WAIT).unwrap_err() {
+            ApiError::ShardLost { shard, ticket } => {
+                assert_eq!(shard, 0);
+                assert_eq!(ticket, tickets[2]);
+            }
+            e => panic!("expected shard-lost, got {e:?}"),
+        }
+        // Shard 1's work is untouched by the kill.
+        assert_eq!(srv.wait(tickets[1], WAIT).unwrap().shard, 1);
+        assert_eq!(srv.wait(tickets[3], WAIT).unwrap().shard, 1);
+        // Quiescence: every accepted invocation has exactly one fate,
+        // and the dead shard's parked timer items were dropped as
+        // stale, not delivered to the rebuilt plane.
+        let m = wait_membership(&srv, |m| {
+            m.conserved_at_quiescence() && m.stale_drops >= 2
+        });
+        assert_eq!(m.accepted, 4);
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.failed, 2);
+        assert!(m.conserved_at_quiescence(), "fate conservation: {m:?}");
+        assert!(m.stale_drops >= 2, "stale epoch items must drop: {m:?}");
+    }
+
+    #[test]
+    fn drain_stops_routing_and_join_restores_it() {
+        let cfg = ClusterConfig {
+            n_shards: 2,
+            router: RouterKind::RoundRobin,
+            plane: fast_cfg(),
+            ..Default::default()
+        };
+        let srv = RtCluster::new(workload(), cfg, None, 0.001).unwrap();
+        let m = srv.drain(1).unwrap();
+        assert_eq!(m.shards[1].health, ShardHealth::Draining);
+        assert_eq!(m.shards[1].epoch, 0, "drain does not bump the epoch");
+        for _ in 0..4 {
+            let t = srv.submit("isoneural-0").unwrap();
+            assert_eq!(srv.wait(t, WAIT).unwrap().shard, 0);
+        }
+        // The other shard is now the last live one: protected.
+        let e = srv.drain(0).unwrap_err();
+        assert_eq!(e.code(), "bad-request");
+        assert_eq!(srv.kill(0).unwrap_err().code(), "bad-request");
+        // Rejoin: round-robin reaches both shards again.
+        srv.join(1).unwrap();
+        let shards: std::collections::HashSet<usize> = (0..4)
+            .map(|_| {
+                let t = srv.submit("isoneural-0").unwrap();
+                srv.wait(t, WAIT).unwrap().shard
+            })
+            .collect();
+        assert_eq!(shards.len(), 2, "rejoined shard must serve again");
+        let m = wait_membership(&srv, MembershipInfo::conserved_at_quiescence);
+        assert_eq!(m.accepted, 8);
+        assert_eq!(m.completed, 8);
+        assert_eq!(m.failed, 0);
+    }
+
+    #[test]
+    fn membership_counts_rejections_and_validates_shards() {
+        let srv = RtServer::new(workload(), fast_cfg(), None, 0.001).unwrap();
+        let m = srv.membership().unwrap();
+        assert_eq!(m.shards.len(), 1);
+        assert_eq!(m.shards[0].health, ShardHealth::Up);
+        assert_eq!((m.accepted, m.rejected), (0, 0));
+        // Admission rejections are counted apart from accepted work.
+        assert!(srv.submit("ghost").is_err());
+        let m = srv.membership().unwrap();
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.accepted, 0);
+        // A single-plane server's only shard is its last live one.
+        assert_eq!(srv.drain(0).unwrap_err().code(), "bad-request");
+        assert_eq!(srv.kill(0).unwrap_err().code(), "bad-request");
+        // Out-of-range shards are a client error on every verb.
+        assert_eq!(srv.drain(7).unwrap_err().code(), "bad-request");
+        assert_eq!(srv.join(7).unwrap_err().code(), "bad-request");
+        assert_eq!(srv.kill(7).unwrap_err().code(), "bad-request");
+        // Membership verbs work through cloneable handles too.
+        assert!(srv.handle().membership().is_ok());
+    }
+
+    #[test]
+    fn killed_shard_rejoins_cold_and_serves() {
+        let cfg = ClusterConfig {
+            n_shards: 2,
+            router: RouterKind::RoundRobin,
+            plane: fast_cfg(),
+            ..Default::default()
+        };
+        let srv = RtCluster::new(workload(), cfg, None, 0.001).unwrap();
+        // Warm shard 0, then kill it (idle: nothing stranded).
+        let t = srv.submit("isoneural-0").unwrap();
+        assert_eq!(srv.wait(t, WAIT).unwrap().shard, 0);
+        let m = srv.kill(0).unwrap();
+        assert_eq!(m.failed, 0, "an idle kill strands nothing");
+        srv.join(0).unwrap();
+        // The rebuilt plane serves — cold again (warm pool discarded).
+        let shards: Vec<usize> = (0..2)
+            .map(|_| {
+                let t = srv.submit("isoneural-0").unwrap();
+                let o = srv.wait(t, WAIT).unwrap();
+                if o.shard == 0 {
+                    assert_eq!(o.start_kind, StartKind::Cold, "rebuilt plane is cold");
+                }
+                o.shard
+            })
+            .collect();
+        assert!(shards.contains(&0), "rejoined shard must serve");
+        let m = wait_membership(&srv, MembershipInfo::conserved_at_quiescence);
+        assert!(m.conserved_at_quiescence(), "{m:?}");
     }
 
     #[test]

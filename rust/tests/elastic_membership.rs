@@ -1,0 +1,313 @@
+//! Elastic-membership robustness suite: randomized drain/rejoin and
+//! kill conservation properties on the sim [`Cluster`] (every router),
+//! plus the wall-clock kill-storm regression over real loopback TCP —
+//! no waiter may block past its deadline window, and ticket fates must
+//! conserve at quiescence.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use mqfq::api::{ApiClient, ApiError, ShardHealth, Ticket};
+use mqfq::cluster::{Cluster, ClusterConfig, ALL_ROUTERS};
+use mqfq::plane::PlaneConfig;
+use mqfq::server::RtCluster;
+use mqfq::types::{secs, FuncId, InvocationId, Nanos, MS};
+use mqfq::util::prop::{assert_prop, Gen};
+use mqfq::workload::catalog::CATALOG;
+use mqfq::workload::Workload;
+
+// ---------------------------------------------------------------------
+// A minimal virtual-time driver over the public Cluster API: completion
+// events are epoch-stamped (the wall-clock server's timer contract), so
+// a kill's parked events drop as stale instead of resurrecting work.
+// ---------------------------------------------------------------------
+
+struct Driver {
+    c: Cluster,
+    heap: BinaryHeap<Reverse<(Nanos, u64, usize, InvocationId, u64)>>,
+    seq: u64,
+    now: Nanos,
+    completed: usize,
+}
+
+impl Driver {
+    fn new(c: Cluster) -> Self {
+        Driver { c, heap: BinaryHeap::new(), seq: 0, now: 0, completed: 0 }
+    }
+
+    fn push(&mut self, ds: Vec<mqfq::sim::ShardDispatch>) {
+        for sd in ds {
+            let epoch = self.c.shard_epoch(sd.shard);
+            self.seq += 1;
+            self.heap
+                .push(Reverse((sd.dispatch.complete_at, self.seq, sd.shard, sd.dispatch.inv, epoch)));
+        }
+    }
+
+    fn drain_until(&mut self, t: Nanos) {
+        loop {
+            match self.heap.peek() {
+                Some(Reverse(ev)) if ev.0 <= t => {}
+                _ => break,
+            }
+            let Reverse((due, _, shard, inv, epoch)) = self.heap.pop().unwrap();
+            self.now = self.now.max(due);
+            if self.c.shard_epoch(shard) != epoch {
+                continue; // stale: the shard died after scheduling this
+            }
+            let (rec, ds) = self.c.on_complete(shard, inv, due);
+            if rec.is_some() {
+                self.completed += 1;
+            }
+            self.push(ds);
+        }
+    }
+
+    fn arrive(&mut self, func: usize) {
+        let (_, _, ds) = self.c.on_arrival(FuncId(func as u32), self.now);
+        self.push(ds);
+    }
+
+    /// Run the cluster dry (bounded; returns false on a stall, which a
+    /// conservation property then reports with context).
+    fn drain_all(&mut self) -> bool {
+        let mut guard = 0;
+        while self.c.pending() + self.c.in_flight() > 0 {
+            guard += 1;
+            if guard > 500_000 {
+                return false;
+            }
+            if let Some(due) = self.heap.peek().map(|Reverse(ev)| ev.0) {
+                self.drain_until(due);
+            } else {
+                self.now += 200 * MS;
+                let ds = self.c.on_monitor_tick(self.now);
+                self.push(ds);
+            }
+        }
+        true
+    }
+}
+
+fn gen_workload(g: &mut Gen) -> (Workload, usize) {
+    let n_funcs = g.int(1, 8);
+    let mut w = Workload::default();
+    for i in 0..n_funcs {
+        let class = &CATALOG[g.int(0, CATALOG.len() - 1)];
+        w.register(class, i, g.f64(0.5, 20.0));
+    }
+    (w, n_funcs)
+}
+
+/// Drain-then-rejoin conservation, every router: a shard that leaves
+/// and comes back mid-traffic never loses or duplicates an invocation.
+#[test]
+fn prop_drain_rejoin_conserves_across_routers() {
+    assert_prop("drain/rejoin conservation", 25, |g| {
+        let (w, n_funcs) = gen_workload(g);
+        let n_shards = g.int(2, 6);
+        let router = *g.choose(&ALL_ROUTERS);
+        let cfg = ClusterConfig {
+            n_shards,
+            router,
+            plane: PlaneConfig::default(),
+            ..Default::default()
+        };
+        let ctx = format!("shards={n_shards} router={}", router.name());
+        let mut d = Driver::new(Cluster::new(w, cfg));
+        let victim = g.int(0, n_shards - 1);
+        let per_phase = g.int(5, 60);
+        let mut arrivals = 0usize;
+        for phase in 0..3 {
+            match phase {
+                1 => d.c.drain_shard(victim).map_err(|e| format!("{ctx}: {e}"))?,
+                2 => d.c.join_shard(victim).map_err(|e| format!("{ctx}: {e}"))?,
+                _ => {}
+            }
+            for i in 0..per_phase {
+                d.now += secs(g.f64(0.001, 0.5));
+                d.drain_until(d.now);
+                d.arrive(i % n_funcs);
+                arrivals += 1;
+            }
+        }
+        if !d.drain_all() {
+            return Err(format!("{ctx}: failed to drain"));
+        }
+        if d.completed != arrivals {
+            return Err(format!(
+                "{ctx}: {arrivals} arrivals but {} completions",
+                d.completed
+            ));
+        }
+        if d.c.merged_recorder().len() != arrivals {
+            return Err(format!(
+                "{ctx}: recorder holds {} records for {arrivals} arrivals",
+                d.c.merged_recorder().len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Kill conservation, every router: after an abrupt shard failure,
+/// every arrival is either completed or reported lost by the kill —
+/// exactly one fate each, and the graveyard keeps the dead shard's
+/// finished work in the merged recorder.
+#[test]
+fn prop_kill_reports_every_lost_invocation() {
+    assert_prop("kill-storm conservation", 25, |g| {
+        let (w, n_funcs) = gen_workload(g);
+        let n_shards = g.int(2, 6);
+        let router = *g.choose(&ALL_ROUTERS);
+        let cfg = ClusterConfig {
+            n_shards,
+            router,
+            plane: PlaneConfig::default(),
+            ..Default::default()
+        };
+        let ctx = format!("shards={n_shards} router={}", router.name());
+        let mut d = Driver::new(Cluster::new(w, cfg));
+        let per_phase = g.int(10, 80);
+        let mut arrivals = 0usize;
+        let mut lost = 0usize;
+        let rejoin = g.bool(0.5);
+        for phase in 0..3 {
+            if phase == 1 {
+                // Kill a random still-Up shard (keep one live).
+                let up: Vec<usize> = (0..n_shards)
+                    .filter(|&s| d.c.shard_health(s) == ShardHealth::Up)
+                    .collect();
+                if up.len() > 1 {
+                    let victim = *g.choose(&up);
+                    lost += d.c.kill_shard(victim).map_err(|e| format!("{ctx}: {e}"))?;
+                    if rejoin {
+                        d.c.join_shard(victim).map_err(|e| format!("{ctx}: {e}"))?;
+                    }
+                }
+            }
+            for i in 0..per_phase {
+                d.now += secs(g.f64(0.001, 0.5));
+                d.drain_until(d.now);
+                d.arrive(i % n_funcs);
+                arrivals += 1;
+            }
+        }
+        if !d.drain_all() {
+            return Err(format!("{ctx}: failed to drain"));
+        }
+        if d.completed + lost != arrivals {
+            return Err(format!(
+                "{ctx}: {arrivals} arrivals != {} completed + {lost} lost",
+                d.completed
+            ));
+        }
+        if d.c.merged_recorder().len() != d.completed {
+            return Err(format!(
+                "{ctx}: recorder holds {} records for {} completions",
+                d.c.merged_recorder().len(),
+                d.completed
+            ));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Wall-clock kill-storm regression over real TCP.
+// ---------------------------------------------------------------------
+
+fn storm_workload() -> Workload {
+    let mut w = Workload::default();
+    // fft's modeled cold boot (~2.4 s × scale) keeps the burst in
+    // flight when the kill lands.
+    w.register(
+        mqfq::workload::catalog::by_name("fft").unwrap(),
+        0,
+        1.0,
+    );
+    w
+}
+
+/// Kill one of four shards under concurrently-blocked waiters: every
+/// ticket resolves (completed or `shard-lost`) well inside one deadline
+/// window — zero hung waiters — and the membership counters conserve at
+/// quiescence.
+#[test]
+fn kill_storm_every_waiter_resolves_within_deadline() {
+    const DEADLINE_MS: u64 = 30_000;
+    let cfg = ClusterConfig {
+        n_shards: 4,
+        router: mqfq::cluster::RouterKind::RoundRobin,
+        plane: PlaneConfig::default(),
+        ..Default::default()
+    };
+    let srv = RtCluster::new(storm_workload(), cfg, None, 0.02).unwrap();
+    let addr = srv.serve("127.0.0.1:0").unwrap();
+    let mut sub = ApiClient::connect(addr).unwrap();
+    let n = 32usize;
+    let tickets: Vec<Ticket> = (0..n).map(|_| sub.invoke_async("fft-0").unwrap()).collect();
+    // Waiters park on every ticket *before* the kill — about a quarter
+    // of them are blocked on the doomed shard.
+    let waiters: Vec<_> = tickets
+        .chunks(8)
+        .map(|chunk| {
+            let chunk = chunk.to_vec();
+            thread::spawn(move || {
+                let mut w = ApiClient::connect(addr).unwrap();
+                let mut fates = Vec::new();
+                for t in chunk {
+                    let s = Instant::now();
+                    let r = w.wait(t, Some(DEADLINE_MS));
+                    fates.push((r, s.elapsed()));
+                }
+                fates
+            })
+        })
+        .collect();
+    thread::sleep(Duration::from_millis(10));
+    let m = sub.kill(1).expect("kill shard 1");
+    assert_eq!(m.shards[1].health, ShardHealth::Dead);
+
+    let (mut done, mut lost) = (0usize, 0usize);
+    for h in waiters {
+        for (r, elapsed) in h.join().expect("waiter panicked") {
+            // Zero hung waiters: nothing rides out the deadline window
+            // (shard-lost waiters must wake at the kill, not at expiry).
+            assert!(
+                elapsed < Duration::from_millis(DEADLINE_MS),
+                "a waiter consumed its full deadline window ({elapsed:?})"
+            );
+            match r {
+                Ok(_) => done += 1,
+                Err(ApiError::ShardLost { shard, .. }) => {
+                    assert_eq!(shard, 1, "lost ticket blamed the wrong shard");
+                    lost += 1;
+                }
+                Err(e) => panic!("unexpected ticket fate: {e:?}"),
+            }
+        }
+    }
+    assert_eq!(done + lost, n, "a ticket vanished without a fate");
+    assert!(lost > 0, "the kill stranded nothing — no in-flight work?");
+
+    // Fates conserve once the survivors drain.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let m = sub.membership().expect("membership");
+        if m.conserved_at_quiescence() {
+            assert_eq!(m.accepted, n as u64);
+            assert_eq!(m.completed, done as u64);
+            assert_eq!(m.failed, lost as u64);
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "cluster never quiesced: {m:?}"
+        );
+        thread::sleep(Duration::from_millis(10));
+    }
+    sub.quit();
+}

@@ -71,7 +71,8 @@ def flatten(value, prefix, out):
             if isinstance(sub, dict):
                 ident = [str(sub[k]) for k in ("fleet", "router", "impl", "name",
                                                "shape", "loop", "clients",
-                                               "shards", "flows", "active") if k in sub]
+                                               "shards", "flows", "active",
+                                               "phase", "window") if k in sub]
                 if ident:
                     label = ":".join(ident)
             flatten(sub, f"{prefix}[{label}]", out)

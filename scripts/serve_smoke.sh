@@ -104,7 +104,43 @@ stats = call({"cmd": "stats"})
 assert stats["invocations"] == 2 + N, stats
 assert stats["pending"] == 0 and stats["in_flight"] == 0, stats
 
+# Elastic membership round-trip: drain -> rejoin -> kill -> rejoin,
+# with routing and ticket-fate conservation asserted at each step.
+m = call({"cmd": "membership"})
+assert m["ok"] and len(m["shards"]) == 4, m
+assert all(s["state"] == "up" for s in m["shards"]), m
+assert m["accepted"] == m["completed"] + m["failed"], m
+served = m["completed"]
+
+m = call({"cmd": "drain", "shard": 1})
+assert m["ok"] and m["shards"][1]["state"] == "draining", m
+# A draining shard takes no new work; invokes land elsewhere.
+done = call({"cmd": "invoke", "func": "isoneural-0", "mode": "sync",
+             "deadline_ms": 60000})
+assert done["ok"] and done["shard"] != 1, done
+m = call({"cmd": "join", "shard": 1})
+assert m["ok"] and m["shards"][1]["state"] == "up", m
+
+# Abrupt kill of an idle shard: nothing stranded, epoch bumped, ring
+# healed; the shard then rejoins cold and the cluster still conserves.
+m = call({"cmd": "kill", "shard": 2})
+assert m["ok"] and m["shards"][2]["state"] == "dead", m
+assert m["shards"][2]["epoch"] == 1, m
+done = call({"cmd": "invoke", "func": "isoneural-0", "mode": "sync",
+             "deadline_ms": 60000})
+assert done["ok"] and done["shard"] != 2, done
+m = call({"cmd": "join", "shard": 2})
+assert m["ok"] and m["shards"][2]["state"] == "up", m
+
+# Verb taxonomy: membership verbs on an out-of-range shard reject.
+err = call({"cmd": "drain", "shard": 9})
+assert not err["ok"] and err["error"] == "bad-request", err
+
+m = call({"cmd": "membership"})
+assert m["completed"] == served + 2 and m["failed"] == 0, m
+assert m["accepted"] == m["completed"], m
+
 call({"cmd": "quit"})
-print("serve smoke: OK (sync + async + errors + legacy + %d invokes in %.2fs)"
-      % (N, wall))
+print("serve smoke: OK (sync + async + errors + legacy + membership + "
+      "%d invokes in %.2fs)" % (N, wall))
 EOF
