@@ -14,8 +14,8 @@ use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use super::types::{
-    ApiError, DescribeInfo, InvokeMode, InvokeOutcome, MembershipInfo, Request, Response,
-    StatsSnapshot, Ticket, PROTOCOL_VERSION,
+    ApiError, DescribeInfo, InvokeMode, InvokeOutcome, MembershipInfo, MetricsFormat, Request,
+    Response, StatsSnapshot, Ticket, PROTOCOL_VERSION,
 };
 use super::wire;
 use crate::util::rng::Rng;
@@ -286,6 +286,29 @@ impl ApiClient {
         match self.call(&Request::Stats)? {
             Response::Stats(s) => Ok(s),
             other => Err(unexpected("stats", &other)),
+        }
+    }
+
+    /// Telemetry: the server's metrics registry rendered in `format`
+    /// (Prometheus text or the `mqfq-metrics/v1` JSON document).
+    pub fn metrics(&mut self, format: MetricsFormat) -> Result<String, ApiError> {
+        match self.call(&Request::Metrics { format })? {
+            Response::Metrics { body, .. } => Ok(body),
+            other => Err(unexpected("metrics", &other)),
+        }
+    }
+
+    /// Telemetry: drain up to `max` lifecycle events from the server's
+    /// trace ring. Returns `(dropped, events)` — `dropped` is the
+    /// ring's cumulative overflow-drop counter. Consuming: repeated
+    /// calls page through the stream.
+    pub fn trace(
+        &mut self,
+        max: usize,
+    ) -> Result<(u64, Vec<crate::telemetry::TraceEvent>), ApiError> {
+        match self.call(&Request::Trace { max })? {
+            Response::Trace { dropped, events } => Ok((dropped, events)),
+            other => Err(unexpected("trace", &other)),
         }
     }
 

@@ -27,8 +27,8 @@ pub mod wire;
 
 pub use client::{ApiClient, RetryPolicy};
 pub use types::{
-    ApiError, DescribeInfo, InvokeMode, InvokeOutcome, MembershipInfo, Request, Response,
-    ShardHealth, ShardInfo, StatsSnapshot, Ticket, PROTOCOL_VERSION,
+    ApiError, DescribeInfo, InvokeMode, InvokeOutcome, MembershipInfo, MetricsFormat, Request,
+    Response, ShardHealth, ShardInfo, ShardStatsRow, StatsSnapshot, Ticket, PROTOCOL_VERSION,
 };
 
 use std::time::Duration;
@@ -112,6 +112,27 @@ pub trait Frontend: Send + Sync {
     fn membership(&self) -> Result<MembershipInfo, ApiError> {
         Err(ApiError::BadRequest {
             detail: "this frontend does not support membership changes".into(),
+        })
+    }
+
+    // --- telemetry (observability verbs) -----------------------------
+    //
+    // Default implementations reject: a frontend without an attached
+    // telemetry subsystem has nothing to export, and asking it is a
+    // client error, not a panic.
+
+    /// Render the metrics registry in the requested format.
+    fn metrics(&self, _format: MetricsFormat) -> Result<String, ApiError> {
+        Err(ApiError::BadRequest {
+            detail: "this frontend does not export telemetry".into(),
+        })
+    }
+
+    /// Drain up to `max` lifecycle events from the trace ring, plus the
+    /// ring's cumulative overflow-drop counter.
+    fn trace(&self, _max: usize) -> Result<(u64, Vec<crate::telemetry::TraceEvent>), ApiError> {
+        Err(ApiError::BadRequest {
+            detail: "this frontend does not export telemetry".into(),
         })
     }
 }

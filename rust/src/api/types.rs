@@ -83,8 +83,14 @@ pub enum Request {
     },
     /// Non-blocking completion check.
     Poll { ticket: Ticket },
-    /// Aggregate serving stats.
+    /// Aggregate serving stats (plus per-shard breakdown rows).
     Stats,
+    /// Telemetry snapshot: the full metrics registry, rendered as
+    /// Prometheus text exposition or structured JSON.
+    Metrics { format: MetricsFormat },
+    /// Drain up to `max` buffered lifecycle events from the trace ring
+    /// (consuming; repeated calls page through the stream).
+    Trace { max: usize },
     /// Admin: stop routing new work to a shard; in-flight finishes.
     Drain { shard: usize },
     /// Admin: (re)insert a shard into the routable set.
@@ -131,8 +137,61 @@ pub struct DescribeInfo {
     pub functions: Vec<String>,
 }
 
-/// `stats` reply: aggregate serving counters across all shards.
+/// Export format of a `metrics` reply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MetricsFormat {
+    /// Prometheus text exposition (scrape-ready).
+    #[default]
+    Prom,
+    /// Structured JSON (`mqfq-metrics/v1` schema).
+    Json,
+}
+
+impl MetricsFormat {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MetricsFormat::Prom => "prom",
+            MetricsFormat::Json => "json",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "prom" => MetricsFormat::Prom,
+            "json" => MetricsFormat::Json,
+            _ => return None,
+        })
+    }
+}
+
+/// Per-shard row of a `stats` reply: the serving breakdown a load
+/// balancer or dashboard reads without scraping full telemetry. Built
+/// entirely from already-maintained lock-free counters — no new locks.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ShardStatsRow {
+    pub shard: usize,
+    /// Queued (not yet dispatched) on this shard.
+    pub pending: usize,
+    /// Executing on this shard's devices.
+    pub in_flight: usize,
+    /// Completions served by this shard.
+    pub completed: u64,
+    /// Cold starts / completions on this shard (0 when none completed).
+    pub cold_ratio: f64,
+    pub health: ShardHealth,
+    /// Kill epoch (see [`ShardInfo::epoch`]).
+    pub epoch: u64,
+}
+
+impl Default for ShardHealth {
+    fn default() -> Self {
+        ShardHealth::Up
+    }
+}
+
+/// `stats` reply: aggregate serving counters across all shards, plus
+/// one [`ShardStatsRow`] per shard.
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct StatsSnapshot {
     pub invocations: usize,
     pub mean_latency_ms: f64,
@@ -141,6 +200,8 @@ pub struct StatsSnapshot {
     pub pending: usize,
     /// Executing on devices across all shards.
     pub in_flight: usize,
+    /// Per-shard breakdown (single-plane servers report one row).
+    pub shards: Vec<ShardStatsRow>,
 }
 
 /// Lifecycle state of one shard in an elastic cluster. Shard *indices*
@@ -244,6 +305,17 @@ pub enum Response {
     /// `poll` on a still-running invocation.
     Pending { ticket: Ticket },
     Stats(StatsSnapshot),
+    /// `metrics` reply: the registry rendered in the requested format.
+    /// The body is carried as an opaque string (Prometheus text, or a
+    /// compact-rendered JSON document) — the wire layer escapes it like
+    /// any other string field.
+    Metrics { format: MetricsFormat, body: String },
+    /// `trace` reply: lifecycle events drained from the ring
+    /// (oldest-first), plus the ring's cumulative overflow-drop count.
+    Trace {
+        dropped: u64,
+        events: Vec<crate::telemetry::TraceEvent>,
+    },
     /// Reply to `drain`/`join`/`kill`/`membership`: the post-change
     /// membership snapshot.
     Membership(MembershipInfo),
@@ -498,6 +570,15 @@ mod tests {
         // Quiescent but an invocation vanished without a fate.
         assert!(!mk(0, 10, 8, 1).conserved_at_quiescence());
         assert_eq!(mk(0, 10, 8, 1).outstanding(), 1);
+    }
+
+    #[test]
+    fn metrics_format_roundtrip() {
+        for f in [MetricsFormat::Prom, MetricsFormat::Json] {
+            assert_eq!(MetricsFormat::parse(f.name()), Some(f));
+        }
+        assert_eq!(MetricsFormat::parse("xml"), None);
+        assert_eq!(MetricsFormat::default(), MetricsFormat::Prom);
     }
 
     #[test]

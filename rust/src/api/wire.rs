@@ -57,10 +57,11 @@ use std::net::TcpStream;
 use std::time::Duration;
 
 use super::types::{
-    ApiError, DescribeInfo, InvokeMode, InvokeOutcome, MembershipInfo, Request, Response,
-    ShardHealth, ShardInfo, StatsSnapshot, Ticket, PROTOCOL_VERSION,
+    ApiError, DescribeInfo, InvokeMode, InvokeOutcome, MembershipInfo, MetricsFormat, Request,
+    Response, ShardHealth, ShardInfo, ShardStatsRow, StatsSnapshot, Ticket, PROTOCOL_VERSION,
 };
 use super::Frontend;
+use crate::telemetry::{EventKind, TraceEvent, NO_FUNC, NO_INV};
 use crate::types::StartKind;
 use crate::util::json::{self, Json};
 
@@ -111,6 +112,14 @@ impl<'a> JVal<'a> {
         match self.get(key) {
             Some(JVal::Int(i)) => Some(*i as f64),
             Some(JVal::Num(x)) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn get_i64(&self, key: &str) -> Option<i64> {
+        match self.get(key) {
+            Some(JVal::Int(i)) => Some(*i),
+            Some(JVal::Num(x)) if x.fract() == 0.0 => Some(*x as i64),
             _ => None,
         }
     }
@@ -521,6 +530,12 @@ enum ReqRef<'a> {
         ticket: Ticket,
     },
     Stats,
+    Metrics {
+        format: MetricsFormat,
+    },
+    Trace {
+        max: usize,
+    },
     Drain {
         shard: usize,
     },
@@ -581,6 +596,19 @@ fn decode_request_ref<'b>(v: &'b JVal<'_>) -> Result<ReqRef<'b>, ApiError> {
         },
         "poll" => ReqRef::Poll { ticket: ticket(v)? },
         "stats" => ReqRef::Stats,
+        "metrics" => {
+            let format = match v.get_str("format") {
+                None => MetricsFormat::Prom,
+                Some(f) => MetricsFormat::parse(f)
+                    .ok_or_else(|| bad(format!("metrics: unknown format {f}")))?,
+            };
+            ReqRef::Metrics { format }
+        }
+        "trace" => ReqRef::Trace {
+            // Absent ⇒ drain everything buffered (the ring is bounded,
+            // so "everything" is at most its capacity).
+            max: v.get_u64("max").unwrap_or(u32::MAX as u64) as usize,
+        },
         "drain" | "join" | "kill" => {
             let shard = v
                 .get_u64("shard")
@@ -639,6 +667,14 @@ pub fn encode_request_into(req: &Request, out: &mut String) {
             push_int_field(out, "ticket", ticket.0 as i64);
         }
         Request::Stats => cmd(out, "stats"),
+        Request::Metrics { format } => {
+            cmd(out, "metrics");
+            push_str_field(out, "format", format.name());
+        }
+        Request::Trace { max } => {
+            cmd(out, "trace");
+            push_int_field(out, "max", *max as i64);
+        }
         Request::Drain { shard } => {
             cmd(out, "drain");
             push_int_field(out, "shard", *shard as i64);
@@ -692,6 +728,8 @@ pub fn decode_request(line: &str) -> Result<Request, ApiError> {
         },
         ReqRef::Poll { ticket } => Request::Poll { ticket },
         ReqRef::Stats => Request::Stats,
+        ReqRef::Metrics { format } => Request::Metrics { format },
+        ReqRef::Trace { max } => Request::Trace { max },
         ReqRef::Drain { shard } => Request::Drain { shard },
         ReqRef::Join { shard } => Request::Join { shard },
         ReqRef::Kill { shard } => Request::Kill { shard },
@@ -763,6 +801,46 @@ pub fn encode_response_into(resp: &Response, out: &mut String) {
             push_num_field(out, "cold_ratio", s.cold_ratio);
             push_int_field(out, "pending", s.pending as i64);
             push_int_field(out, "in_flight", s.in_flight as i64);
+            // Appended after the aggregate fields, so the line's prefix
+            // bytes are unchanged from the pre-breakdown protocol.
+            push_key(out, "shards");
+            out.push('[');
+            for (i, row) in s.shards.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str("{\"shard\":");
+                let _ = write!(out, "{}", row.shard);
+                push_int_field(out, "pending", row.pending as i64);
+                push_int_field(out, "in_flight", row.in_flight as i64);
+                push_int_field(out, "completed", row.completed as i64);
+                push_num_field(out, "cold_ratio", row.cold_ratio);
+                push_str_field(out, "state", row.health.name());
+                push_int_field(out, "epoch", row.epoch as i64);
+                out.push('}');
+            }
+            out.push(']');
+        }
+        Response::Metrics { format, body } => {
+            push_str_field(out, "type", "metrics");
+            push_str_field(out, "format", format.name());
+            push_str_field(out, "body", body);
+        }
+        Response::Trace { dropped, events } => {
+            push_str_field(out, "type", "trace");
+            push_int_field(out, "dropped", *dropped as i64);
+            push_int_field(out, "count", events.len() as i64);
+            push_key(out, "events");
+            out.push('[');
+            for (i, ev) in events.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                // Each event is one compact JSON object — the same
+                // rendering the sim's JSONL sink writes per line.
+                ev.render_jsonl_into(out);
+            }
+            out.push(']');
         }
         Response::Membership(m) => {
             push_str_field(out, "type", "membership");
@@ -905,7 +983,55 @@ pub fn decode_response(line: &str) -> Result<Response, String> {
             cold_ratio: v.get_f64("cold_ratio").unwrap_or(0.0),
             pending: v.get_u64("pending").unwrap_or(0) as usize,
             in_flight: v.get_u64("in_flight").unwrap_or(0) as usize,
+            shards: match v.get("shards") {
+                Some(JVal::Arr(xs)) => xs
+                    .iter()
+                    .map(|x| ShardStatsRow {
+                        shard: x.get_u64("shard").unwrap_or(0) as usize,
+                        pending: x.get_u64("pending").unwrap_or(0) as usize,
+                        in_flight: x.get_u64("in_flight").unwrap_or(0) as usize,
+                        completed: x.get_u64("completed").unwrap_or(0),
+                        cold_ratio: x.get_f64("cold_ratio").unwrap_or(0.0),
+                        health: x
+                            .get_str("state")
+                            .and_then(ShardHealth::parse)
+                            .unwrap_or(ShardHealth::Up),
+                        epoch: x.get_u64("epoch").unwrap_or(0),
+                    })
+                    .collect(),
+                // Pre-breakdown servers: aggregate-only reply.
+                _ => Vec::new(),
+            },
         }),
+        "metrics" => Response::Metrics {
+            format: v
+                .get_str("format")
+                .and_then(MetricsFormat::parse)
+                .unwrap_or(MetricsFormat::Prom),
+            body: v.get_str("body").unwrap_or("").to_string(),
+        },
+        "trace" => Response::Trace {
+            dropped: v.get_u64("dropped").unwrap_or(0),
+            events: match v.get("events") {
+                Some(JVal::Arr(xs)) => xs
+                    .iter()
+                    .filter_map(|x| {
+                        Some(TraceEvent {
+                            seq: x.get_u64("seq")?,
+                            at: x.get_u64("at")?,
+                            kind: EventKind::parse(x.get_str("kind")?)?,
+                            shard: x.get_u64("shard").unwrap_or(0) as u32,
+                            inv: x.get_u64("inv").unwrap_or(NO_INV),
+                            func: x.get_u64("func").unwrap_or(NO_FUNC as u64) as u32,
+                            a: x.get_i64("a").unwrap_or(0),
+                            b: x.get_i64("b").unwrap_or(0),
+                            c: x.get_i64("c").unwrap_or(0),
+                        })
+                    })
+                    .collect(),
+                _ => Vec::new(),
+            },
+        },
         "membership" => Response::Membership(MembershipInfo {
             epoch: v.get_u64("epoch").unwrap_or(0),
             accepted: v.get_u64("accepted").unwrap_or(0),
@@ -1046,6 +1172,14 @@ fn handle_v1(frontend: &dyn Frontend, line: &str, out: &mut String) -> bool {
                 Err(e) => Response::Error(e),
             },
             ReqRef::Stats => Response::Stats(frontend.stats()),
+            ReqRef::Metrics { format } => match frontend.metrics(format) {
+                Ok(body) => Response::Metrics { format, body },
+                Err(e) => Response::Error(e),
+            },
+            ReqRef::Trace { max } => match frontend.trace(max) {
+                Ok((dropped, events)) => Response::Trace { dropped, events },
+                Err(e) => Response::Error(e),
+            },
             ReqRef::Drain { shard } => match frontend.drain(shard) {
                 Ok(m) => Response::Membership(m),
                 Err(e) => Response::Error(e),
@@ -1246,6 +1380,13 @@ mod tests {
             },
             Request::Poll { ticket: Ticket(8) },
             Request::Stats,
+            Request::Metrics {
+                format: MetricsFormat::Prom,
+            },
+            Request::Metrics {
+                format: MetricsFormat::Json,
+            },
+            Request::Trace { max: 512 },
             Request::Drain { shard: 2 },
             Request::Join { shard: 2 },
             Request::Kill { shard: 1 },
@@ -1345,7 +1486,49 @@ mod tests {
                 cold_ratio: 0.2,
                 pending: 1,
                 in_flight: 2,
+                shards: vec![
+                    ShardStatsRow {
+                        shard: 0,
+                        pending: 1,
+                        in_flight: 2,
+                        completed: 6,
+                        cold_ratio: 0.5,
+                        health: ShardHealth::Up,
+                        epoch: 0,
+                    },
+                    ShardStatsRow {
+                        shard: 1,
+                        pending: 0,
+                        in_flight: 0,
+                        completed: 4,
+                        cold_ratio: 0.0,
+                        health: ShardHealth::Dead,
+                        epoch: 2,
+                    },
+                ],
             }),
+            Response::Metrics {
+                format: MetricsFormat::Prom,
+                body: "# TYPE mqfq_completed_total counter\nmqfq_completed_total{shard=\"0\"} 3\n"
+                    .into(),
+            },
+            Response::Trace {
+                dropped: 2,
+                events: vec![
+                    TraceEvent::new(5, EventKind::Submit, 0).inv(9).func(1),
+                    TraceEvent {
+                        seq: 1,
+                        at: 8,
+                        kind: EventKind::DTokens,
+                        shard: 3,
+                        inv: NO_INV,
+                        func: NO_FUNC,
+                        a: -1,
+                        b: 16,
+                        c: 0,
+                    },
+                ],
+            },
             Response::Bye,
         ];
         for resp in resps {
@@ -1388,6 +1571,15 @@ mod tests {
             cold_ratio: 0.25,
             pending: 2,
             in_flight: 1,
+            shards: vec![ShardStatsRow {
+                shard: 0,
+                pending: 2,
+                in_flight: 1,
+                completed: 7,
+                cold_ratio: 0.25,
+                health: ShardHealth::Up,
+                epoch: 0,
+            }],
         });
         let stats_tree = Json::Obj(vec![
             ("ok".into(), Json::Bool(true)),
@@ -1397,6 +1589,18 @@ mod tests {
             ("cold_ratio".into(), Json::Num(0.25)),
             ("pending".into(), Json::Int(2)),
             ("in_flight".into(), Json::Int(1)),
+            (
+                "shards".into(),
+                Json::Arr(vec![Json::Obj(vec![
+                    ("shard".into(), Json::Int(0)),
+                    ("pending".into(), Json::Int(2)),
+                    ("in_flight".into(), Json::Int(1)),
+                    ("completed".into(), Json::Int(7)),
+                    ("cold_ratio".into(), Json::Num(0.25)),
+                    ("state".into(), Json::str("up")),
+                    ("epoch".into(), Json::Int(0)),
+                ])]),
+            ),
         ]);
         assert_eq!(encode_response(&stats), stats_tree.render_compact());
 

@@ -12,7 +12,9 @@
 //!   cluster frontend.
 //! * `invoke` — protocol-v1 client against a running `serve`.
 //! * `admin` — membership verbs (drain/join/kill/membership) against a
-//!   running `serve`: elastic resize and fault injection over the wire.
+//!   running `serve`: elastic resize and fault injection over the wire;
+//!   plus the observability verbs (metrics/trace) exporting the live
+//!   telemetry registry and lifecycle-trace ring.
 //! * `validate` — golden-check every AOT artifact via PJRT.
 
 use std::collections::HashMap;
@@ -88,6 +90,9 @@ USAGE:
         [--policy fcfs|batch|sjf|eevdf|mqfq|sfq] [--d N] [--gpus N]
         [--mem stock-uvm|madvise|prefetch-only|prefetch+swap]
         [--mode plain|mps|mig:N] [--pool N] [--t SECS] [--alpha A]
+        [--trace-out FILE]  write the invocation-lifecycle trace
+              (JSONL, one event per line; fold it with
+              scripts/trace_summarize.py)
         [--fleet SPEC[,SPEC..]]  heterogeneous fleet, overrides
               --gpus/--profile/--mode; SPEC = [NX]PROFILE[:mps|:migK][:dD]
               e.g. --fleet 2xv100,a30:mig2,v100:d1
@@ -124,6 +129,13 @@ USAGE:
               cold), kill (abrupt failure: homed tickets fail with
               shard-lost, ring heals); membership prints per-shard
               health/epoch and the ticket-fate conservation counters
+  mqfq-sticky admin metrics [--format prom|json] [--addr HOST:PORT]
+  mqfq-sticky admin trace [--max N] [--addr HOST:PORT]
+              observability against a running `serve`: metrics prints
+              the registry (Prometheus text or JSON document); trace
+              drains up to N (default all) lifecycle events from the
+              server's ring as JSONL — pipe into
+              scripts/trace_summarize.py for per-phase latency
   mqfq-sticky validate [--artifacts DIR] golden-check all artifacts
 ";
 
@@ -337,8 +349,25 @@ fn cmd_replay(args: &Args) -> Result<(), String> {
         Trace::load(path).map_err(|e| format!("loading {path}: {e}"))?;
     let cfg = plane_config(args)?;
     let label = format!("{} D={}", cfg.policy.name(), cfg.d);
+    // `--trace-out FILE`: attach a telemetry instance and sink the
+    // lifecycle trace as JSONL. The ring is sized to the trace so a sim
+    // replay never drops events (determinism makes the file a property:
+    // same trace + config ⇒ byte-identical output).
+    let tel = args.get("trace-out").map(|_| {
+        let cap = trace
+            .len()
+            .saturating_mul(32)
+            .max(crate::telemetry::DEFAULT_RING_CAPACITY);
+        let (classes, _) = crate::telemetry::workload_classes(&workload);
+        std::sync::Arc::new(crate::telemetry::Telemetry::with_ring_capacity(
+            &[cfg.n_devices()],
+            &classes,
+            cap,
+        ))
+    });
     let t0 = std::time::Instant::now();
-    let (summary, r) = crate::experiments::run(&label, workload, &trace, cfg);
+    let (summary, r) =
+        crate::experiments::run_traced(&label, workload, &trace, cfg, tel.clone());
     let wall = t0.elapsed();
     print!(
         "{}",
@@ -349,6 +378,20 @@ fn cmd_replay(args: &Args) -> Result<(), String> {
         r.events,
         r.events as f64 / wall.as_secs_f64().max(1e-9)
     );
+    if let (Some(out), Some(tel)) = (args.get("trace-out"), tel) {
+        let events = tel.trace.drain(usize::MAX);
+        let mut buf = String::with_capacity(events.len() * 96);
+        for ev in &events {
+            ev.render_jsonl_into(&mut buf);
+            buf.push('\n');
+        }
+        std::fs::write(out, buf).map_err(|e| format!("writing {out}: {e}"))?;
+        println!(
+            "wrote {} trace events to {out} ({} dropped by the ring)",
+            events.len(),
+            tel.dropped_events()
+        );
+    }
     Ok(())
 }
 
@@ -555,15 +598,48 @@ fn cmd_invoke(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// Elastic-membership admin client: drain/join/kill/membership against
-/// a running `serve` over the v1 wire protocol.
+/// Admin client over the v1 wire protocol: elastic membership
+/// (drain/join/kill/membership) and observability (metrics/trace).
 fn cmd_admin(args: &Args) -> Result<(), String> {
     let verb = args
         .positional
         .first()
-        .ok_or("admin: which verb? (drain|join|kill|membership)")?
+        .ok_or("admin: which verb? (drain|join|kill|membership|metrics|trace)")?
         .as_str();
     let addr = args.get("addr").unwrap_or("127.0.0.1:8077");
+    // Observability verbs: print-and-return, no membership snapshot.
+    if verb == "metrics" || verb == "trace" {
+        let mut client = crate::api::ApiClient::connect(addr)
+            .map_err(|e| format!("connecting {addr}: {e}"))?;
+        if verb == "metrics" {
+            let format = match args.get("format").unwrap_or("prom") {
+                "prom" => crate::api::MetricsFormat::Prom,
+                "json" => crate::api::MetricsFormat::Json,
+                f => return Err(format!("--format: prom|json, got {f}")),
+            };
+            let body = client
+                .metrics(format)
+                .map_err(|e| format!("admin metrics: {e}"))?;
+            print!("{body}");
+            if !body.ends_with('\n') {
+                println!();
+            }
+        } else {
+            let max = args.get_usize("max", usize::MAX)?;
+            let (dropped, events) = client
+                .trace(max)
+                .map_err(|e| format!("admin trace: {e}"))?;
+            let mut line = String::new();
+            for ev in &events {
+                line.clear();
+                ev.render_jsonl_into(&mut line);
+                println!("{line}");
+            }
+            eprintln!("{} events ({dropped} dropped by the ring)", events.len());
+        }
+        client.quit();
+        return Ok(());
+    }
     // Shard index: positional (`admin kill 1`) or `--shard 1`.
     let shard = match args.positional.get(1) {
         Some(s) => Some(
@@ -586,7 +662,11 @@ fn cmd_admin(args: &Args) -> Result<(), String> {
         "join" => client.join(shard.ok_or_else(need)?),
         "kill" => client.kill(shard.ok_or_else(need)?),
         "membership" => client.membership(),
-        v => return Err(format!("unknown admin verb {v} (drain|join|kill|membership)")),
+        v => {
+            return Err(format!(
+                "unknown admin verb {v} (drain|join|kill|membership|metrics|trace)"
+            ))
+        }
     }
     .map_err(|e| format!("admin {verb}: {e}"))?;
     print_membership(&m);
@@ -789,15 +869,21 @@ mod tests {
             format!("membership --addr {addr}"),
             format!("drain --shard 1 --addr {addr}"), // --shard form
             format!("join 1 --addr {addr}"),
+            // Observability verbs ride the same client.
+            format!("metrics --addr {addr}"),
+            format!("metrics --format json --addr {addr}"),
+            format!("trace --max 16 --addr {addr}"),
+            format!("trace --addr {addr}"),
         ] {
             let a = Args::parse(&argv(&cmd)).unwrap();
             cmd_admin(&a).unwrap_or_else(|e| panic!("{cmd}: {e}"));
         }
-        // Missing shard, bad shard, and unknown verb are rejected.
+        // Missing shard, bad shard, unknown verb, bad format rejected.
         for bad in [
             format!("drain --addr {addr}"),
             format!("kill nine --addr {addr}"),
             format!("explode 1 --addr {addr}"),
+            format!("metrics --format yaml --addr {addr}"),
         ] {
             let a = Args::parse(&argv(&bad)).unwrap();
             assert!(cmd_admin(&a).is_err(), "{bad} should be rejected");
@@ -818,6 +904,26 @@ mod tests {
         let b = Args::parse(&argv(&format!("--trace {} --policy mqfq", path.display())))
             .unwrap();
         cmd_replay(&b).unwrap();
+        // --trace-out sinks the lifecycle trace as JSONL; determinism
+        // makes two runs byte-identical.
+        let out1 = dir.join("t1.jsonl");
+        let out2 = dir.join("t2.jsonl");
+        for out in [&out1, &out2] {
+            let c = Args::parse(&argv(&format!(
+                "--trace {} --policy mqfq --trace-out {}",
+                path.display(),
+                out.display()
+            )))
+            .unwrap();
+            cmd_replay(&c).unwrap();
+        }
+        let j1 = std::fs::read_to_string(&out1).unwrap();
+        let j2 = std::fs::read_to_string(&out2).unwrap();
+        assert!(!j1.is_empty());
+        assert_eq!(j1, j2, "sim trace must be deterministic");
+        assert!(j1.lines().all(|l| l.starts_with("{\"seq\":")));
+        assert!(j1.contains("\"kind\":\"submit\""));
+        assert!(j1.contains("\"kind\":\"complete\""));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

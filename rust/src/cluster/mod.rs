@@ -98,11 +98,14 @@ pub mod router;
 
 pub use router::{Router, RouterKind, ShardLoad, ALL_ROUTERS};
 
+use std::sync::Arc;
+
 use crate::api::ShardHealth;
 use crate::container::pool::PoolStats;
 use crate::metrics::{InvRecord, Recorder};
 use crate::plane::{ControlPlane, PlaneConfig};
 use crate::sim::{ShardDispatch, SimTarget};
+use crate::telemetry::{EventKind, Telemetry, TraceEvent};
 use crate::types::{FuncId, InvocationId, Nanos};
 use crate::workload::Workload;
 
@@ -185,6 +188,15 @@ pub struct Cluster {
     /// into [`Self::merged_recorder`] so kills never un-count finished
     /// work.
     graveyard: Recorder,
+    /// Shared telemetry (None when not attached). Every shard plane
+    /// holds a [`crate::telemetry::ShardSink`] onto the same instance.
+    tel: Option<Arc<Telemetry>>,
+    /// Router spill count at the last arrival, so each arrival can tag
+    /// its `route` event with "did *this* decision spill".
+    last_spills: u64,
+    /// Timestamp of the last clock-bearing call; membership verbs have
+    /// no `now` parameter, so their trace events are stamped with this.
+    last_now: Nanos,
 }
 
 impl Cluster {
@@ -211,9 +223,28 @@ impl Cluster {
             health: vec![ShardHealth::Up; cfg.n_shards],
             epochs: vec![0; cfg.n_shards],
             graveyard: Recorder::new(),
+            tel: None,
+            last_spills: 0,
+            last_now: 0,
             workload,
             cfg,
         }
+    }
+
+    /// Attach a shared telemetry instance: every shard plane gets a
+    /// [`crate::telemetry::ShardSink`] carrying its index, and the
+    /// cluster itself emits `route`/`epoch` events. Pure observation —
+    /// routing and scheduling are unchanged.
+    pub fn attach_telemetry(&mut self, tel: Arc<Telemetry>) {
+        for (s, plane) in self.shards.iter_mut().enumerate() {
+            plane.attach_telemetry(tel.clone(), s as u32);
+        }
+        self.last_spills = self.router.spills();
+        self.tel = Some(tel);
+    }
+
+    pub fn telemetry(&self) -> Option<&Arc<Telemetry>> {
+        self.tel.as_ref()
     }
 
     pub fn n_shards(&self) -> usize {
@@ -331,15 +362,25 @@ impl Cluster {
             return Err("cannot kill the last live shard".into());
         }
         let lost = self.shards[shard].pending() + self.shards[shard].in_flight();
-        let fresh = ControlPlane::new(
+        let mut fresh = ControlPlane::new(
             self.workload.clone(),
             self.cfg.plane_for(shard).clone(),
         );
+        if let Some(tel) = &self.tel {
+            fresh.attach_telemetry(tel.clone(), shard as u32);
+        }
         let dead = std::mem::replace(&mut self.shards[shard], fresh);
         self.graveyard.merge(&dead.recorder);
         let was_up = self.health[shard] == ShardHealth::Up;
         self.health[shard] = ShardHealth::Dead;
         self.epochs[shard] += 1;
+        if let Some(tel) = &self.tel {
+            tel.emit(
+                TraceEvent::new(self.last_now, EventKind::Epoch, shard as u32)
+                    .a(self.epochs[shard] as i64)
+                    .b(lost as i64),
+            );
+        }
         if was_up {
             self.router.on_shard_removed(shard);
         }
@@ -353,10 +394,25 @@ impl Cluster {
         func: FuncId,
         now: Nanos,
     ) -> (usize, InvocationId, Vec<ShardDispatch>) {
+        self.last_now = now;
         let loads = self.loads();
         let shard = self.router.route(func, &loads);
         debug_assert!(shard < self.shards.len(), "router out of range");
         self.routed[shard] += 1;
+        if let Some(tel) = &self.tel {
+            let spills = self.router.spills();
+            let spilled = spills > self.last_spills;
+            self.last_spills = spills;
+            if spilled {
+                tel.registry.shard(shard as u32).spills.inc();
+            }
+            tel.emit(
+                TraceEvent::new(now, EventKind::Route, shard as u32)
+                    .func(func.0)
+                    .a(self.epochs[shard] as i64)
+                    .b(spilled as i64),
+            );
+        }
         let (id, ds) = self.shards[shard].on_arrival(func, now);
         (shard, id, tag(shard, ds))
     }
@@ -371,6 +427,7 @@ impl Cluster {
         inv: InvocationId,
         now: Nanos,
     ) -> (Option<InvRecord>, Vec<ShardDispatch>) {
+        self.last_now = now;
         let (rec, ds) = self.shards[shard].on_complete(inv, now);
         (rec, tag(shard, ds))
     }
@@ -378,6 +435,7 @@ impl Cluster {
     /// Global monitor tick: delivered to every shard that has work
     /// (pending or in flight), in shard order.
     pub fn on_monitor_tick(&mut self, now: Nanos) -> Vec<ShardDispatch> {
+        self.last_now = now;
         let mut out = Vec::new();
         for (s, plane) in self.shards.iter_mut().enumerate() {
             if plane.pending() > 0 || plane.in_flight() > 0 {
@@ -711,6 +769,43 @@ mod tests {
         c.join_shard(home).unwrap();
         let (s2, _, _) = c.on_arrival(FuncId(1), secs(6000.0));
         assert_eq!(s2, home);
+    }
+
+    #[test]
+    fn telemetry_emits_route_and_epoch_events() {
+        let mut c = cluster(2, RouterKind::RoundRobin);
+        let (classes, _) = crate::telemetry::workload_classes(&c.workload);
+        let devs: Vec<usize> = (0..c.n_shards())
+            .map(|s| c.cfg.plane_for(s).n_devices())
+            .collect();
+        let tel = Arc::new(Telemetry::new(&devs, &classes));
+        c.attach_telemetry(tel.clone());
+        let (s0, _, ds) = c.on_arrival(FuncId(0), SEC); // shard 0 (RR)
+        for sd in ds {
+            c.on_complete(sd.shard, sd.dispatch.inv, sd.dispatch.complete_at);
+        }
+        c.on_arrival(FuncId(0), 2 * SEC); // shard 1 (RR)
+        c.kill_shard(1).unwrap();
+        assert_eq!(tel.registry.shard(0).submitted.get(), 1);
+        assert_eq!(tel.registry.shard(1).submitted.get(), 1);
+        assert_eq!(tel.registry.shard(0).completed.get(), 1);
+        let evs = tel.trace.drain(100_000);
+        let routes: Vec<_> = evs.iter().filter(|e| e.kind == EventKind::Route).collect();
+        assert_eq!(routes.len(), 2);
+        assert_eq!(routes[0].shard, s0 as u32);
+        assert_eq!(routes[0].func, 0);
+        assert_eq!(routes[0].a, 0, "pre-kill epoch is 0");
+        let epochs: Vec<_> = evs.iter().filter(|e| e.kind == EventKind::Epoch).collect();
+        assert_eq!(epochs.len(), 1);
+        assert_eq!(epochs[0].shard, 1);
+        assert_eq!(epochs[0].a, 1, "epoch bumped to 1");
+        assert_eq!(epochs[0].b, 1, "one invocation lost");
+        assert_eq!(epochs[0].at, 2 * SEC, "stamped with the last clocked call");
+        // The rebuilt plane is re-instrumented: new work still counts.
+        c.join_shard(1).unwrap();
+        c.drain_shard(0).unwrap();
+        c.on_arrival(FuncId(0), 3 * SEC);
+        assert_eq!(tel.registry.shard(1).submitted.get(), 2);
     }
 
     #[test]

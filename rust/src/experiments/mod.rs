@@ -21,7 +21,7 @@ pub mod table1;
 pub mod table3;
 
 use crate::plane::PlaneConfig;
-use crate::sim::{replay, ReplayResult};
+use crate::sim::ReplayResult;
 use crate::util::csv::CsvWriter;
 use crate::util::table::Table;
 use crate::workload::{Trace, Workload};
@@ -42,7 +42,19 @@ pub struct RunSummary {
 
 /// Run one replay and summarize.
 pub fn run(label: &str, workload: Workload, trace: &Trace, cfg: PlaneConfig) -> (RunSummary, ReplayResult) {
-    let r = replay(workload, trace, cfg);
+    run_traced(label, workload, trace, cfg, None)
+}
+
+/// [`run`] with an optional telemetry attachment (the CLI's
+/// `replay --trace-out` sink).
+pub fn run_traced(
+    label: &str,
+    workload: Workload,
+    trace: &Trace,
+    cfg: PlaneConfig,
+    tel: Option<std::sync::Arc<crate::telemetry::Telemetry>>,
+) -> (RunSummary, ReplayResult) {
+    let r = crate::sim::replay_traced(workload, trace, cfg, tel);
     let rec = r.recorder();
     let p99 = crate::util::stats::percentiles(&rec.latencies_s(), &[99.0])[0];
     let summary = RunSummary {

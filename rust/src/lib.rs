@@ -22,7 +22,9 @@
 //! [`scheduler::policies`]. Real traffic enters through [`api`] — the
 //! versioned wire protocol and [`api::Frontend`] contract served by
 //! [`server::RtServer`] (one plane) and [`server::RtCluster`] (N shards
-//! behind a live router).
+//! behind a live router). Observability lives in [`telemetry`]: a
+//! lock-free metrics registry and lifecycle trace ring shared by sim
+//! and wire runs, exported over the `metrics`/`trace` verbs.
 
 pub mod api;
 pub mod cli;
@@ -39,6 +41,7 @@ pub mod scheduler;
 pub mod server;
 pub mod shim;
 pub mod sim;
+pub mod telemetry;
 pub mod types;
 pub mod util;
 pub mod workload;

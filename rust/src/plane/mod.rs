@@ -10,6 +10,7 @@
 //! dispatched function on the PJRT runtime instead.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 use crate::container::ContainerPool;
 use crate::gpu::{uniform_fleet, DevicePool, DeviceSpec, GpuProfile, MultiplexMode};
@@ -19,6 +20,7 @@ use crate::scheduler::policies::PolicyKind;
 use crate::scheduler::{
     ConcurrencyController, Invocation, MqfqConfig, Policy, PolicyCtx, QState,
 };
+use crate::telemetry::{self, EventKind, ShardSink, Telemetry};
 use crate::types::{ContainerId, DurNanos, FuncId, GpuId, InvocationId, Nanos, StartKind, MS};
 use crate::workload::Workload;
 
@@ -136,6 +138,15 @@ pub struct ControlPlane {
     /// (container pool saturated); retried before the policy.
     stash: VecDeque<Invocation>,
     next_inv: u64,
+    /// §Observability: shard-scoped telemetry sink (None = detached,
+    /// one branch per site). Pure observation — nothing here feeds back
+    /// into scheduling, so instrumented and bare runs are behaviorally
+    /// identical (the indexed-vs-naive property oracle stays valid).
+    tel: Option<ShardSink>,
+    /// Last Global_VT / D-token occupancy emitted, so the trace carries
+    /// one event per change rather than one per probe.
+    last_global_vt: f64,
+    last_d_tokens: i64,
 }
 
 impl ControlPlane {
@@ -156,11 +167,27 @@ impl ControlPlane {
             in_flight: HashMap::new(),
             stash: VecDeque::new(),
             next_inv: 0,
+            tel: None,
+            last_global_vt: 0.0,
+            last_d_tokens: 0,
             policy,
             gpus,
             workload,
             cfg,
         }
+    }
+
+    /// Attach the shared telemetry subsystem, scoped to `shard`. The
+    /// sink resolves this shard's metric slots and the workload's
+    /// function→class map once, so the hot path records with plain
+    /// indexed atomic adds.
+    pub fn attach_telemetry(&mut self, tel: Arc<Telemetry>, shard: u32) {
+        let (_, class_of) = telemetry::workload_classes(&self.workload);
+        self.tel = Some(ShardSink::new(tel, shard, class_of));
+    }
+
+    pub fn telemetry(&self) -> Option<&Arc<Telemetry>> {
+        self.tel.as_ref().map(|s| s.telemetry())
     }
 
     pub fn workload(&self) -> &Workload {
@@ -211,6 +238,10 @@ impl ControlPlane {
     pub fn on_arrival(&mut self, func: FuncId, now: Nanos) -> (InvocationId, Vec<Dispatch>) {
         let id = InvocationId(self.next_inv);
         self.next_inv += 1;
+        if let Some(tel) = &self.tel {
+            tel.metrics().submitted.inc();
+            tel.emit(tel.event(now, EventKind::Submit).inv(id.0).func(func.0));
+        }
         self.policy.enqueue(
             Invocation {
                 id,
@@ -219,6 +250,17 @@ impl ControlPlane {
             },
             now,
         );
+        if let Some(tel) = &self.tel {
+            let vt_ns = self.policy.queue_vt(func).map_or(0, |v| (v * 1e9) as i64);
+            let gvt_ns = self.policy.global_vt().map_or(0, |v| (v * 1e9) as i64);
+            tel.emit(
+                tel.event(now, EventKind::Enqueue)
+                    .inv(id.0)
+                    .func(func.0)
+                    .a(vt_ns)
+                    .b(gvt_ns),
+            );
+        }
         self.apply_state_changes(now);
         (id, self.try_dispatch(now))
     }
@@ -265,6 +307,27 @@ impl ControlPlane {
             exec: service,
         };
         self.recorder.record(rec);
+        if let Some(tel) = &self.tel {
+            let m = tel.metrics();
+            let e2e = now.saturating_sub(fli.arrived);
+            let queue_wait = fli.dispatch.at.saturating_sub(fli.arrived);
+            m.completed.inc();
+            m.queue_wait_ns.record(queue_wait);
+            m.exec_ns.record(service);
+            m.e2e_ns.record(e2e);
+            if let Some(c) = tel.class(fli.func.0) {
+                c.completed.inc();
+                c.exec_ns.record(service);
+            }
+            tel.emit(
+                tel.event(now, EventKind::Complete)
+                    .inv(inv.0)
+                    .func(fli.func.0)
+                    .a(e2e as i64)
+                    .b(service as i64)
+                    .c(fli.dispatch.gpu.0 as i64),
+            );
+        }
         self.apply_state_changes(now);
         (Some(rec), self.try_dispatch(now))
     }
@@ -376,6 +439,19 @@ impl ControlPlane {
 
     fn apply_state_changes(&mut self, now: Nanos) {
         for (func, state) in self.policy.drain_state_changes() {
+            if let Some(tel) = &self.tel {
+                let m = tel.metrics();
+                match state {
+                    QState::Active => m.flow_activations.inc(),
+                    QState::Throttled => m.flow_throttles.inc(),
+                    QState::Inactive => m.flow_deactivations.inc(),
+                }
+                tel.emit(
+                    tel.event(now, EventKind::FlowState)
+                        .func(func.0)
+                        .a(telemetry::qstate_code(state)),
+                );
+            }
             match state {
                 QState::Active => {
                     self.mem
@@ -430,7 +506,34 @@ impl ControlPlane {
         if !out.is_empty() {
             self.apply_state_changes(now);
         }
+        self.probe_scheduler_telemetry(now);
         out
+    }
+
+    /// §Observability: emit scheduler-internal facts that changed since
+    /// the last probe — Global_VT advancement and D-token occupancy.
+    /// Called after every dispatch pass; a cheap no-op when detached or
+    /// when nothing moved.
+    fn probe_scheduler_telemetry(&mut self, now: Nanos) {
+        let Some(tel) = &self.tel else { return };
+        if let Some(vt) = self.policy.global_vt() {
+            if vt.to_bits() != self.last_global_vt.to_bits() {
+                self.last_global_vt = vt;
+                let ns = (vt * 1e9) as i64;
+                tel.metrics().global_vt_ns.set(ns);
+                tel.emit(tel.event(now, EventKind::GlobalVt).a(ns));
+            }
+        }
+        let occ = self.in_flight.len() as i64;
+        if occ != self.last_d_tokens {
+            self.last_d_tokens = occ;
+            tel.metrics().d_tokens.set(occ);
+            tel.emit(
+                tel.event(now, EventKind::DTokens)
+                    .a(occ)
+                    .b(self.dctl.limit() as i64),
+            );
+        }
     }
 
     /// Place one invocation: pick GPU, acquire container, settle memory,
@@ -445,6 +548,15 @@ impl ControlPlane {
         // Destroyed LRU victims free their device memory.
         for (g, mb) in &acq.evicted {
             self.gpus.device_mut(*g).sub_resident(*mb);
+            if let Some(tel) = &self.tel {
+                let m = tel.metrics();
+                m.evictions.inc();
+                m.evicted_mb.add(*mb);
+                if let Some(d) = tel.device(g.0) {
+                    d.evictions.inc();
+                }
+                tel.emit(tel.event(now, EventKind::Evict).a(*mb as i64).c(g.0 as i64));
+            }
         }
 
         // Memory: prefetch/fault per policy; cold boot hides transfers.
@@ -483,6 +595,35 @@ impl ControlPlane {
                 dispatch,
             },
         );
+        if let Some(tel) = &self.tel {
+            let m = tel.metrics();
+            match acq.kind {
+                StartKind::Cold => m.cold_starts.inc(),
+                StartKind::HostWarm => m.host_warm_starts.inc(),
+                StartKind::GpuWarm => m.gpu_warm_starts.inc(),
+            }
+            if let Some(d) = tel.device(gpu.0) {
+                d.dispatches.inc();
+                if acq.kind == StartKind::Cold {
+                    d.cold_starts.inc();
+                }
+            }
+            tel.emit(
+                tel.event(now, EventKind::Dispatch)
+                    .inv(inv.id.0)
+                    .func(inv.func.0)
+                    .a(telemetry::start_kind_code(acq.kind))
+                    .b(acq.boot_ns as i64)
+                    .c(gpu.0 as i64),
+            );
+            tel.emit(
+                tel.event(exec_start, EventKind::ExecStart)
+                    .inv(inv.id.0)
+                    .func(inv.func.0)
+                    .a(mem_cost.blocking as i64)
+                    .c(gpu.0 as i64),
+            );
+        }
         Some(dispatch)
     }
 }
@@ -642,6 +783,41 @@ mod tests {
         let (_, more) = p.on_complete(d1[0].inv, d1[0].complete_at);
         assert_eq!(more.len(), 1);
         assert_eq!(more[0].func, FuncId(1));
+    }
+
+    #[test]
+    fn telemetry_observes_the_full_lifecycle() {
+        let w = workload2();
+        let (classes, _) = crate::telemetry::workload_classes(&w);
+        let cfg = PlaneConfig::default();
+        let tel = Arc::new(Telemetry::new(&[cfg.n_devices()], &classes));
+        let mut p = ControlPlane::new(w, cfg);
+        p.attach_telemetry(tel.clone(), 0);
+        let (_, ds) = p.on_arrival(FuncId(0), 0);
+        p.on_complete(ds[0].inv, ds[0].complete_at);
+        let m = tel.registry.shard(0);
+        assert_eq!(m.submitted.get(), 1);
+        assert_eq!(m.completed.get(), 1);
+        assert_eq!(m.cold_starts.get(), 1);
+        assert_eq!(m.e2e_ns.count(), 1);
+        assert_eq!(m.exec_ns.count(), 1);
+        assert!(m.d_tokens.get() == 0, "token gauge returns to idle");
+        // Per-class and per-device series hit the right slots.
+        assert_eq!(tel.registry.class(0).unwrap().completed.get(), 1);
+        assert_eq!(tel.registry.device(0, 0).unwrap().dispatches.get(), 1);
+        let kinds: Vec<EventKind> =
+            tel.trace.drain(10_000).iter().map(|e| e.kind).collect();
+        for k in [
+            EventKind::Submit,
+            EventKind::Enqueue,
+            EventKind::Dispatch,
+            EventKind::ExecStart,
+            EventKind::Complete,
+            EventKind::DTokens,
+        ] {
+            assert!(kinds.contains(&k), "missing {k:?} in {kinds:?}");
+        }
+        assert_eq!(tel.dropped_events(), 0);
     }
 
     #[test]

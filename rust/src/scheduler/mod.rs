@@ -63,6 +63,14 @@ pub trait Policy: Send {
     fn queue_vt(&self, _func: FuncId) -> Option<f64> {
         None
     }
+
+    /// Current Global_VT (telemetry; only fair-queueing policies report
+    /// meaningful values). Pure observation — callers must not derive
+    /// scheduling decisions from it, so instrumented and bare runs stay
+    /// behaviorally identical.
+    fn global_vt(&self) -> Option<f64> {
+        None
+    }
 }
 
 #[cfg(test)]

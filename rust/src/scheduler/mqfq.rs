@@ -455,6 +455,10 @@ impl Policy for MqfqSticky {
     fn queue_vt(&self, func: FuncId) -> Option<f64> {
         Some(self.flows[func.0 as usize].vt)
     }
+
+    fn global_vt(&self) -> Option<f64> {
+        Some(self.global_vt)
+    }
 }
 
 pub mod reference {
@@ -624,6 +628,10 @@ pub mod reference {
 
         fn queue_vt(&self, func: FuncId) -> Option<f64> {
             Some(self.flows[func.0 as usize].vt)
+        }
+
+        fn global_vt(&self) -> Option<f64> {
+            Some(self.global_vt)
         }
     }
 }

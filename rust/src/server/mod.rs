@@ -141,6 +141,31 @@
 //! with no routable shard would turn every submit into an error with no
 //! in-band recovery path.
 //!
+//! # Observability
+//!
+//! Every frontend owns one [`crate::telemetry::Telemetry`] instance,
+//! attached to each shard's [`ControlPlane`] at construction (and
+//! re-attached to the cold plane a `kill` rebuilds). The planes emit
+//! the full invocation lifecycle — the *same* event vocabulary the
+//! simulator emits, because the emission sites live in the shared
+//! plane layer — while this module adds the serving-only events:
+//! `route` at submit time (payload: shard epoch + spill flag) and
+//! `epoch`/`error` when a kill rebuilds a plane and strands tickets.
+//!
+//! Two wire verbs export the subsystem live, with no new locks on the
+//! serving path:
+//!
+//! * `metrics` — the whole registry rendered as Prometheus text or a
+//!   JSON document (reads are `Relaxed` atomic loads; rendering
+//!   allocates only in the request handler).
+//! * `trace` — drains up to `max` events from the bounded ring
+//!   (oldest-first), plus the cumulative overflow-drop counter.
+//!
+//! The per-shard `stats` breakdown (pending, in-flight, completions,
+//! cold ratio, health, epoch) reads only the published per-shard
+//! atomics — the same ones routing uses — so `stats` stays O(shards)
+//! with zero plane locks.
+//!
 //! # Ownership: handles vs the shutdown guard
 //!
 //! All serving state lives in one shared `Inner`. [`RtHandle`] is a
@@ -166,14 +191,15 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::api::types::{
-    ApiError, DescribeInfo, InvokeOutcome, MembershipInfo, ShardHealth, ShardInfo, StatsSnapshot,
-    Ticket, PROTOCOL_VERSION,
+    ApiError, DescribeInfo, InvokeOutcome, MembershipInfo, MetricsFormat, ShardHealth, ShardInfo,
+    ShardStatsRow, StatsSnapshot, Ticket, PROTOCOL_VERSION,
 };
 use crate::api::Frontend;
 use crate::clock::{Clock, RealClock};
 use crate::cluster::{ClusterConfig, Router, RouterKind, ShardLoad};
 use crate::plane::{ControlPlane, Dispatch, PlaneConfig};
 use crate::runtime::PjrtRuntime;
+use crate::telemetry::{self, EventKind, Telemetry, TraceEvent};
 use crate::types::{to_secs, FuncId, InvocationId, Nanos, StartKind};
 use crate::workload::Workload;
 
@@ -433,6 +459,11 @@ struct ShardState {
     /// Kill counter: bumped under the plane lock when the plane is
     /// rebuilt; see [`WorkItem`].
     epoch: AtomicU64,
+    /// Completions retired on this shard (survives plane rebuilds, so
+    /// the per-shard `stats` breakdown stays monotone across kills).
+    completed: AtomicU64,
+    /// Cold starts among those completions (per-shard cold ratio).
+    cold_starts: AtomicU64,
 }
 
 const HEALTH_UP: usize = 0;
@@ -470,6 +501,8 @@ impl ShardState {
             inv_tickets: Mutex::new(HashMap::new()),
             health: AtomicUsize::new(HEALTH_UP),
             epoch: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            cold_starts: AtomicU64::new(0),
         }
     }
 
@@ -566,6 +599,14 @@ struct Inner {
     failed: AtomicU64,
     rejected: AtomicU64,
     stale_drops: AtomicU64,
+    // --- observability (see module docs) ------------------------------
+    /// Shared metrics registry + trace ring; every plane holds a
+    /// [`crate::telemetry::ShardSink`] onto the same instance.
+    telemetry: Arc<Telemetry>,
+    /// Router spill watermark for the `route` trace event's spill flag.
+    /// Concurrent submits may attribute a spill to a racing neighbor —
+    /// the flag is observational; the cumulative count conserves.
+    last_spills: AtomicU64,
 }
 
 impl Inner {
@@ -644,7 +685,7 @@ fn submit_raw(inner: &Arc<Inner>, name: &str) -> Result<Ticket, ApiError> {
             const { std::cell::RefCell::new(Vec::new()) };
     }
     let route = || {
-        LOADS_BUF.with(|buf| -> Result<usize, ApiError> {
+        LOADS_BUF.with(|buf| -> Result<(usize, u64), ApiError> {
             let mut loads = buf.borrow_mut();
             loads.clear();
             loads.extend(inner.shards.iter().map(|s| s.load()));
@@ -653,7 +694,10 @@ fn submit_raw(inner: &Arc<Inner>, name: &str) -> Result<Ticket, ApiError> {
             if pending >= limit {
                 return Err(ApiError::Overloaded { pending, limit });
             }
-            Ok(inner.router.read().unwrap().route(func, &loads))
+            // Spills are read under the same router lock as the route
+            // decision, so the pair is coherent per call.
+            let router = inner.router.read().unwrap();
+            Ok((router.route(func, &loads), router.spills()))
         })
     };
     let ticket = Ticket(inner.next_ticket.fetch_add(1, Ordering::SeqCst));
@@ -668,7 +712,7 @@ fn submit_raw(inner: &Arc<Inner>, name: &str) -> Result<Ticket, ApiError> {
     // the shard unroutable. Bounded: each retry needs a fresh kill.
     let mut attempts = 0;
     loop {
-        let shard = match route() {
+        let (shard, spills) = match route() {
             Ok(s) => s,
             Err(e) => {
                 // Nothing accepted: retract the provisional ticket.
@@ -678,6 +722,21 @@ fn submit_raw(inner: &Arc<Inner>, name: &str) -> Result<Ticket, ApiError> {
         };
         debug_assert!(shard < inner.shards.len(), "router out of range");
         let st = &inner.shards[shard];
+        // Route event, emitted before the plane lock so it precedes the
+        // plane's own submit/enqueue events in ring order. A dead-shard
+        // retry emits a second route — the re-route is real.
+        {
+            let spilled = inner.last_spills.swap(spills, Ordering::SeqCst) < spills;
+            if spilled {
+                inner.telemetry.registry.shard(shard as u32).spills.inc();
+            }
+            inner.telemetry.emit(
+                TraceEvent::new(inner.clock.now(), EventKind::Route, shard as u32)
+                    .func(func.0)
+                    .a(st.epoch.load(Ordering::SeqCst) as i64)
+                    .b(spilled as i64),
+            );
+        }
         let (was_idle, ds, epoch) = {
             // The only plane lock on the submit path: the routed shard's.
             let mut plane = st.plane.lock().unwrap();
@@ -780,9 +839,27 @@ fn stats_inner(inner: &Arc<Inner>) -> StatsSnapshot {
         invocations: n,
         ..Default::default()
     };
-    for st in &inner.shards {
-        s.pending += st.pending.load(Ordering::SeqCst);
-        s.in_flight += st.in_flight.load(Ordering::SeqCst);
+    s.shards.reserve_exact(inner.shards.len());
+    for (i, st) in inner.shards.iter().enumerate() {
+        let pending = st.pending.load(Ordering::SeqCst);
+        let in_flight = st.in_flight.load(Ordering::SeqCst);
+        s.pending += pending;
+        s.in_flight += in_flight;
+        let completed = st.completed.load(Ordering::SeqCst);
+        let cold = st.cold_starts.load(Ordering::SeqCst);
+        s.shards.push(ShardStatsRow {
+            shard: i,
+            pending,
+            in_flight,
+            completed,
+            cold_ratio: if completed > 0 {
+                cold as f64 / completed as f64
+            } else {
+                0.0
+            },
+            health: st.health(),
+            epoch: st.epoch.load(Ordering::SeqCst),
+        });
     }
     if n > 0 {
         s.mean_latency_ms = inner.lat_sum_ns.load(Ordering::SeqCst) as f64 / n as f64 / 1e6;
@@ -915,36 +992,70 @@ fn kill_inner(inner: &Arc<Inner>, shard: usize) -> Result<MembershipInfo, ApiErr
         }
         ShardHealth::Draining => false,
     };
-    let stranded: Vec<Ticket> = {
+    let (stranded, new_epoch): (Vec<Ticket>, u64) = {
         let mut plane = st.plane.lock().unwrap();
-        let fresh = ControlPlane::new(
+        let mut fresh = ControlPlane::new(
             inner.workload.clone(),
             inner.plane_cfgs[shard].clone(),
         );
+        // The rebuilt plane keeps observing: same registry, same ring.
+        fresh.attach_telemetry(inner.telemetry.clone(), shard as u32);
         *plane = fresh;
         // Health, epoch, and the ticket-map drain all happen under the
         // plane lock: a racing completion either claimed its mapping
         // before us or sees a stale epoch after us — never both.
         st.set_health(ShardHealth::Dead);
-        st.epoch.fetch_add(1, Ordering::SeqCst);
+        let new_epoch = st.epoch.fetch_add(1, Ordering::SeqCst) + 1;
         st.publish(&plane);
-        st.inv_tickets
-            .lock()
-            .unwrap()
-            .drain()
-            .map(|(_, t)| t)
-            .collect()
+        (
+            st.inv_tickets
+                .lock()
+                .unwrap()
+                .drain()
+                .map(|(_, t)| t)
+                .collect(),
+            new_epoch,
+        )
     };
     if was_up {
         router.on_shard_removed(shard);
     }
     drop(router);
+    let now = inner.clock.now();
+    inner.telemetry.emit(
+        TraceEvent::new(now, EventKind::Epoch, shard as u32)
+            .a(new_epoch as i64)
+            .b(stranded.len() as i64),
+    );
+    let sm = inner.telemetry.registry.shard(shard as u32);
     for ticket in stranded {
         inner.failed.fetch_add(1, Ordering::SeqCst);
+        sm.errors.inc();
+        inner.telemetry.emit(TraceEvent::new(now, EventKind::Error, shard as u32));
         fail_ticket(inner, ticket, ApiError::ShardLost { shard, ticket });
     }
     inner.membership_epoch.fetch_add(1, Ordering::SeqCst);
     membership_inner(inner)
+}
+
+// ---------------------------------------------------------------------
+// Telemetry export (see module docs, "Observability").
+// ---------------------------------------------------------------------
+
+/// Render the metrics registry. Registry reads are `Relaxed` atomic
+/// loads; the only allocation is the response body itself.
+fn metrics_inner(inner: &Arc<Inner>, format: MetricsFormat) -> Result<String, ApiError> {
+    Ok(match format {
+        MetricsFormat::Prom => inner.telemetry.render_prometheus(),
+        MetricsFormat::Json => inner.telemetry.to_json().render_compact(),
+    })
+}
+
+/// Drain up to `max` events from the trace ring (oldest-first) plus the
+/// cumulative overflow-drop counter.
+fn trace_inner(inner: &Arc<Inner>, max: usize) -> Result<(u64, Vec<TraceEvent>), ApiError> {
+    let events = inner.telemetry.trace.drain(max);
+    Ok((inner.telemetry.dropped_events(), events))
 }
 
 /// Resolve a ticket to a structured error and wake every waiter —
@@ -1002,6 +1113,15 @@ macro_rules! impl_frontend_via_inner {
             }
             fn membership(&self) -> Result<MembershipInfo, ApiError> {
                 membership_inner(&self.inner)
+            }
+            fn metrics(&self, format: MetricsFormat) -> Result<String, ApiError> {
+                metrics_inner(&self.inner, format)
+            }
+            fn trace(
+                &self,
+                max: usize,
+            ) -> Result<(u64, Vec<crate::telemetry::TraceEvent>), ApiError> {
+                trace_inner(&self.inner, max)
             }
         }
     };
@@ -1108,11 +1228,20 @@ fn build_inner(
         class_names[f.id.0 as usize] = f.class.name;
         functions.push(f.name.clone());
     }
-    let planes: Vec<ControlPlane> = plane_cfgs
+    let mut planes: Vec<ControlPlane> = plane_cfgs
         .iter()
         .map(|cfg| ControlPlane::new(workload.clone(), cfg.clone()))
         .collect();
     let policy = planes[0].policy_name().to_string();
+    // One registry + ring for the whole frontend; each plane gets a
+    // shard-scoped sink so the wire path emits the same lifecycle
+    // vocabulary the simulator does.
+    let device_counts: Vec<usize> = plane_cfgs.iter().map(|c| c.n_devices()).collect();
+    let (class_labels, _) = telemetry::workload_classes(&workload);
+    let tel = Arc::new(Telemetry::new(&device_counts, &class_labels));
+    for (s, plane) in planes.iter_mut().enumerate() {
+        plane.attach_telemetry(tel.clone(), s as u32);
+    }
     let shards = planes
         .into_iter()
         .zip(capacities)
@@ -1151,6 +1280,8 @@ fn build_inner(
         failed: AtomicU64::new(0),
         rejected: AtomicU64::new(0),
         stale_drops: AtomicU64::new(0),
+        telemetry: tel,
+        last_spills: AtomicU64::new(0),
     }))
 }
 
@@ -1412,8 +1543,10 @@ fn run_complete(inner: &Arc<Inner>, shard: usize, epoch: u64, d: Dispatch, exec_
         inner.lat_sum_ns.fetch_add(lat_ns, Ordering::SeqCst);
         if rec.start_kind == StartKind::Cold {
             inner.cold_starts.fetch_add(1, Ordering::SeqCst);
+            st.cold_starts.fetch_add(1, Ordering::SeqCst);
         }
         inner.completed.fetch_add(1, Ordering::SeqCst);
+        st.completed.fetch_add(1, Ordering::SeqCst);
         if let Some(ticket) = mapped {
             fulfill(
                 inner,
@@ -1738,6 +1871,66 @@ mod tests {
             .collect();
         assert_eq!(shards.len(), 2, "round-robin must hit both shards");
         assert_eq!(srv.stats().invocations, 4);
+    }
+
+    #[test]
+    fn telemetry_exports_metrics_trace_and_per_shard_stats() {
+        let cfg = ClusterConfig {
+            n_shards: 2,
+            router: RouterKind::RoundRobin,
+            plane: fast_cfg(),
+            ..Default::default()
+        };
+        let srv = RtCluster::new(workload(), cfg, None, 0.001).unwrap();
+        let tickets: Vec<Ticket> = (0..4)
+            .map(|_| srv.submit("isoneural-0").unwrap())
+            .collect();
+        for t in tickets {
+            srv.wait(t, WAIT).unwrap();
+        }
+        // Per-shard stats breakdown: counts conserve against the
+        // aggregates, every shard is Up at epoch 0.
+        let s = srv.stats();
+        assert_eq!(s.shards.len(), 2);
+        assert_eq!(s.shards.iter().map(|r| r.completed).sum::<u64>(), 4);
+        for (i, row) in s.shards.iter().enumerate() {
+            assert_eq!(row.shard, i);
+            assert_eq!(row.health, ShardHealth::Up);
+            assert_eq!(row.epoch, 0);
+            assert!((row.cold_ratio - 1.0).abs() < 1e-9, "all-cold workload");
+        }
+        // Metrics registry: both formats render; the registry's own
+        // completion counters agree with the stats path.
+        let prom = srv.metrics(MetricsFormat::Prom).unwrap();
+        assert!(prom.contains("# TYPE"));
+        assert!(prom.contains("mqfq_completed_total"));
+        let json = srv.metrics(MetricsFormat::Json).unwrap();
+        assert!(json.contains("mqfq-metrics/v1"));
+        let reg = &srv.inner.telemetry.registry;
+        let completed: u64 = (0..2u32).map(|s| reg.shard(s).completed.get()).sum();
+        assert_eq!(completed, 4);
+        // Trace ring: the wire path emits the same lifecycle vocabulary
+        // the simulator does, plus the serving-only route event.
+        let (dropped, events) = srv.trace(usize::MAX).unwrap();
+        assert_eq!(dropped, 0);
+        let kinds: std::collections::HashSet<EventKind> =
+            events.iter().map(|e| e.kind).collect();
+        for k in [
+            EventKind::Route,
+            EventKind::Submit,
+            EventKind::Enqueue,
+            EventKind::Dispatch,
+            EventKind::ExecStart,
+            EventKind::Complete,
+        ] {
+            assert!(kinds.contains(&k), "missing {:?}", k);
+        }
+        assert_eq!(
+            events.iter().filter(|e| e.kind == EventKind::Route).count(),
+            4
+        );
+        // Drained is drained: a second trace call starts empty.
+        assert!(srv.trace(usize::MAX).unwrap().1.is_empty());
     }
 
     #[test]

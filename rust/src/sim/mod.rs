@@ -218,8 +218,26 @@ impl ReplayResult {
 /// invocation completed. Monitor ticks fire on the configured cadence
 /// whenever work is pending or in flight.
 pub fn replay(workload: Workload, trace: &Trace, cfg: PlaneConfig) -> ReplayResult {
+    replay_traced(workload, trace, cfg, None)
+}
+
+/// [`replay`] with an optional telemetry attachment: the plane emits
+/// the full lifecycle vocabulary into `tel`'s metrics registry and
+/// trace ring as the replay runs. Telemetry is pure observation, so a
+/// traced replay is event-for-event identical to a bare one; under
+/// virtual time the emitted trace is itself deterministic
+/// (property-tested in `rust/tests/telemetry.rs`).
+pub fn replay_traced(
+    workload: Workload,
+    trace: &Trace,
+    cfg: PlaneConfig,
+    tel: Option<std::sync::Arc<crate::telemetry::Telemetry>>,
+) -> ReplayResult {
     let monitor_period = cfg.monitor_period;
     let mut plane = ControlPlane::new(workload, cfg);
+    if let Some(tel) = tel {
+        plane.attach_telemetry(tel, 0);
+    }
     let (makespan, events) = drive(&mut plane, trace, monitor_period);
     let mean_util = plane.mean_utilization(makespan.max(1));
     ReplayResult {
@@ -259,11 +277,25 @@ impl ClusterReplayResult {
 /// the *finest* per-shard cadence — every shard is sampled at least as
 /// often as its own `monitor_period` asks.
 pub fn replay_cluster(workload: Workload, trace: &Trace, cfg: ClusterConfig) -> ClusterReplayResult {
+    replay_cluster_traced(workload, trace, cfg, None)
+}
+
+/// [`replay_cluster`] with an optional telemetry attachment: shard
+/// planes emit the lifecycle, the cluster adds `route`/`epoch` events.
+pub fn replay_cluster_traced(
+    workload: Workload,
+    trace: &Trace,
+    cfg: ClusterConfig,
+    tel: Option<std::sync::Arc<crate::telemetry::Telemetry>>,
+) -> ClusterReplayResult {
     let monitor_period = (0..cfg.n_shards)
         .map(|s| cfg.plane_for(s).monitor_period)
         .min()
         .unwrap_or(cfg.plane.monitor_period);
     let mut cluster = Cluster::new(workload, cfg);
+    if let Some(tel) = tel {
+        cluster.attach_telemetry(tel);
+    }
     let (makespan, events) = drive(&mut cluster, trace, monitor_period);
     let mean_util = cluster.mean_utilization(makespan.max(1));
     let recorder = cluster.merged_recorder();
@@ -451,6 +483,32 @@ mod tests {
         t.events[0].func = FuncId(1); // valid
         let r = replay(w, &t, PlaneConfig::default());
         assert_eq!(r.recorder().len(), 1);
+    }
+
+    #[test]
+    fn traced_replay_matches_bare_and_conserves_counts() {
+        let (w, t) = tiny_workload();
+        let (classes, _) = crate::telemetry::workload_classes(&w);
+        let cfg = PlaneConfig::default();
+        let tel = std::sync::Arc::new(crate::telemetry::Telemetry::new(
+            &[cfg.n_devices()],
+            &classes,
+        ));
+        let bare = replay(w.clone(), &t, cfg.clone());
+        let traced = replay_traced(w, &t, cfg, Some(tel.clone()));
+        // Telemetry is pure observation: identical replay.
+        assert_eq!(bare.makespan, traced.makespan);
+        assert_eq!(bare.events, traced.events);
+        assert_eq!(bare.recorder().records, traced.recorder().records);
+        // Conservation: every arrival counted in, every completion out.
+        let m = tel.registry.shard(0);
+        assert_eq!(m.submitted.get(), 20);
+        assert_eq!(m.completed.get(), 20);
+        assert_eq!(m.e2e_ns.count(), 20);
+        let class_total: u64 = (0..2)
+            .map(|c| tel.registry.class(c).unwrap().completed.get())
+            .sum();
+        assert_eq!(class_total, 20);
     }
 
     #[test]

@@ -1,0 +1,527 @@
+//! Lock-free metrics registry: atomic counters/gauges plus fixed-bucket
+//! log₂-scaled latency histograms, registered statically per shard, per
+//! device, and per flow-class at construction time.
+//!
+//! Hot-path discipline: every record is one (or a few) `Relaxed` atomic
+//! adds into preallocated storage — no locks, no allocation, no
+//! branching on registration state. Export (Prometheus text / JSON) is
+//! the slow path and reads the same atomics with `Relaxed` loads; the
+//! counters are independently monotone, so an export concurrent with
+//! recording sees a consistent-enough snapshot (conservation identities
+//! hold once the system quiesces).
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (occupancy, VT, ...).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of log₂ buckets: bucket 0 holds the value 0, bucket `i`
+/// (1 ≤ i < 63) holds `[2^(i-1), 2^i)`, bucket 63 holds everything
+/// from `2^62` up. 64 buckets cover the full `u64` range, so a
+/// nanosecond histogram spans sub-ns to ~292 years.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Fixed-bucket log₂ histogram. Recording is a single bit-scan plus
+/// three relaxed adds; quantiles are answered from the buckets with
+/// one-bucket (≤ 2×) resolution — ample for p50/p99/p999 latency
+/// tracking, and allocation-free by construction.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    fn bucket_of(v: u64) -> usize {
+        ((u64::BITS - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Inclusive upper bound of bucket `i` (the value a quantile query
+    /// reports when the target count lands in that bucket).
+    fn upper_bound(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else if i >= HIST_BUCKETS - 1 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// Bucket-resolution quantile (`q` in [0, 1]): the upper bound of
+    /// the first bucket whose cumulative count reaches `⌈q·count⌉`.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                return Self::upper_bound(i);
+            }
+        }
+        u64::MAX
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("count".into(), Json::Int(self.count() as i64)),
+            ("sum".into(), Json::Int(self.sum() as i64)),
+            ("mean".into(), Json::Num(self.mean())),
+            ("p50".into(), Json::Int(self.quantile(0.50) as i64)),
+            ("p99".into(), Json::Int(self.quantile(0.99) as i64)),
+            ("p999".into(), Json::Int(self.quantile(0.999) as i64)),
+        ])
+    }
+}
+
+/// Per-shard metric family — one instance per shard, registered at
+/// construction so the hot path indexes a fixed slot.
+#[derive(Default)]
+pub struct ShardMetrics {
+    /// Invocations accepted into this shard's plane.
+    pub submitted: Counter,
+    /// Invocations completed successfully.
+    pub completed: Counter,
+    /// Invocations failed (kill-stranded, rejected downstream).
+    pub errors: Counter,
+    /// Start-class counts at dispatch time (§4.3 taxonomy).
+    pub cold_starts: Counter,
+    pub host_warm_starts: Counter,
+    pub gpu_warm_starts: Counter,
+    /// Device-memory regions evicted / megabytes moved.
+    pub evictions: Counter,
+    pub evicted_mb: Counter,
+    /// Router decisions that spilled off the sticky home shard.
+    pub spills: Counter,
+    /// Flow queue-state transitions (the §4.2 Active/Throttled/Inactive
+    /// machine — the signals the memory manager consumes).
+    pub flow_activations: Counter,
+    pub flow_throttles: Counter,
+    pub flow_deactivations: Counter,
+    /// Instantaneous D-token occupancy (in-flight dispatches).
+    pub d_tokens: Gauge,
+    /// Last observed Global_VT, in virtual nanoseconds.
+    pub global_vt_ns: Gauge,
+    /// Lifecycle phase latencies, nanoseconds.
+    pub queue_wait_ns: Histogram,
+    pub exec_ns: Histogram,
+    pub e2e_ns: Histogram,
+}
+
+/// Per-device metric family.
+#[derive(Default)]
+pub struct DeviceMetrics {
+    pub dispatches: Counter,
+    pub cold_starts: Counter,
+    pub evictions: Counter,
+}
+
+/// Per-flow-class metric family (one per registered function class).
+pub struct ClassMetrics {
+    pub name: String,
+    pub completed: Counter,
+    pub exec_ns: Histogram,
+}
+
+/// The static registry: all metric storage preallocated at
+/// construction, so recording never observes a missing series.
+pub struct Registry {
+    shards: Vec<ShardMetrics>,
+    /// `devices[shard][gpu]`.
+    devices: Vec<Vec<DeviceMetrics>>,
+    classes: Vec<ClassMetrics>,
+}
+
+impl Registry {
+    /// `device_counts[s]` is shard `s`'s fleet size; `classes` the
+    /// workload's flow-class names.
+    pub fn new(device_counts: &[usize], classes: &[String]) -> Self {
+        Self {
+            shards: device_counts.iter().map(|_| ShardMetrics::default()).collect(),
+            devices: device_counts
+                .iter()
+                .map(|&n| (0..n).map(|_| DeviceMetrics::default()).collect())
+                .collect(),
+            classes: classes
+                .iter()
+                .map(|name| ClassMetrics {
+                    name: name.clone(),
+                    completed: Counter::default(),
+                    exec_ns: Histogram::default(),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, s: u32) -> &ShardMetrics {
+        &self.shards[s as usize]
+    }
+
+    pub fn shards(&self) -> &[ShardMetrics] {
+        &self.shards
+    }
+
+    /// Per-device slot; `None` for out-of-range ids so callers degrade
+    /// to shard-level counters rather than panicking.
+    pub fn device(&self, s: u32, gpu: u32) -> Option<&DeviceMetrics> {
+        self.devices.get(s as usize)?.get(gpu as usize)
+    }
+
+    pub fn class(&self, idx: usize) -> Option<&ClassMetrics> {
+        self.classes.get(idx)
+    }
+
+    /// Prometheus text exposition (`metrics --format prom`). Rendered
+    /// into the caller's buffer; counter families get `# TYPE` lines,
+    /// histograms render as summaries with bucket-resolution quantiles.
+    pub fn render_prometheus_into(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        macro_rules! counter_family {
+            ($name:literal, $field:ident) => {
+                let _ = writeln!(out, "# TYPE {} counter", $name);
+                for (s, m) in self.shards.iter().enumerate() {
+                    let _ = writeln!(out, "{}{{shard=\"{s}\"}} {}", $name, m.$field.get());
+                }
+            };
+        }
+        macro_rules! gauge_family {
+            ($name:literal, $field:ident) => {
+                let _ = writeln!(out, "# TYPE {} gauge", $name);
+                for (s, m) in self.shards.iter().enumerate() {
+                    let _ = writeln!(out, "{}{{shard=\"{s}\"}} {}", $name, m.$field.get());
+                }
+            };
+        }
+        macro_rules! summary_family {
+            ($name:literal, $field:ident) => {
+                let _ = writeln!(out, "# TYPE {} summary", $name);
+                for (s, m) in self.shards.iter().enumerate() {
+                    for (q, label) in [(0.5, "0.5"), (0.99, "0.99"), (0.999, "0.999")] {
+                        let _ = writeln!(
+                            out,
+                            "{}{{shard=\"{s}\",quantile=\"{label}\"}} {}",
+                            $name,
+                            m.$field.quantile(q)
+                        );
+                    }
+                    let _ = writeln!(out, "{}_sum{{shard=\"{s}\"}} {}", $name, m.$field.sum());
+                    let _ =
+                        writeln!(out, "{}_count{{shard=\"{s}\"}} {}", $name, m.$field.count());
+                }
+            };
+        }
+        counter_family!("mqfq_submitted_total", submitted);
+        counter_family!("mqfq_completed_total", completed);
+        counter_family!("mqfq_errors_total", errors);
+        counter_family!("mqfq_cold_starts_total", cold_starts);
+        counter_family!("mqfq_host_warm_starts_total", host_warm_starts);
+        counter_family!("mqfq_gpu_warm_starts_total", gpu_warm_starts);
+        counter_family!("mqfq_evictions_total", evictions);
+        counter_family!("mqfq_evicted_mb_total", evicted_mb);
+        counter_family!("mqfq_router_spills_total", spills);
+        counter_family!("mqfq_flow_activations_total", flow_activations);
+        counter_family!("mqfq_flow_throttles_total", flow_throttles);
+        counter_family!("mqfq_flow_deactivations_total", flow_deactivations);
+        gauge_family!("mqfq_d_tokens", d_tokens);
+        gauge_family!("mqfq_global_vt_ns", global_vt_ns);
+        summary_family!("mqfq_queue_wait_ns", queue_wait_ns);
+        summary_family!("mqfq_exec_ns", exec_ns);
+        summary_family!("mqfq_e2e_ns", e2e_ns);
+
+        let _ = writeln!(out, "# TYPE mqfq_device_dispatches_total counter");
+        for (s, devs) in self.devices.iter().enumerate() {
+            for (g, d) in devs.iter().enumerate() {
+                let _ = writeln!(
+                    out,
+                    "mqfq_device_dispatches_total{{shard=\"{s}\",gpu=\"{g}\"}} {}",
+                    d.dispatches.get()
+                );
+            }
+        }
+        let _ = writeln!(out, "# TYPE mqfq_device_cold_starts_total counter");
+        for (s, devs) in self.devices.iter().enumerate() {
+            for (g, d) in devs.iter().enumerate() {
+                let _ = writeln!(
+                    out,
+                    "mqfq_device_cold_starts_total{{shard=\"{s}\",gpu=\"{g}\"}} {}",
+                    d.cold_starts.get()
+                );
+            }
+        }
+        let _ = writeln!(out, "# TYPE mqfq_device_evictions_total counter");
+        for (s, devs) in self.devices.iter().enumerate() {
+            for (g, d) in devs.iter().enumerate() {
+                let _ = writeln!(
+                    out,
+                    "mqfq_device_evictions_total{{shard=\"{s}\",gpu=\"{g}\"}} {}",
+                    d.evictions.get()
+                );
+            }
+        }
+        let _ = writeln!(out, "# TYPE mqfq_class_completed_total counter");
+        for c in &self.classes {
+            let _ = writeln!(
+                out,
+                "mqfq_class_completed_total{{class=\"{}\"}} {}",
+                c.name,
+                c.completed.get()
+            );
+        }
+        let _ = writeln!(out, "# TYPE mqfq_class_exec_ns summary");
+        for c in &self.classes {
+            for (q, label) in [(0.5, "0.5"), (0.99, "0.99"), (0.999, "0.999")] {
+                let _ = writeln!(
+                    out,
+                    "mqfq_class_exec_ns{{class=\"{}\",quantile=\"{label}\"}} {}",
+                    c.name,
+                    c.exec_ns.quantile(q)
+                );
+            }
+        }
+    }
+
+    /// JSON exposition (`metrics --format json`) — the same series as
+    /// the Prometheus form, shaped for programmatic consumers.
+    pub fn to_json(&self) -> Json {
+        let shards = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(s, m)| {
+                Json::Obj(vec![
+                    ("shard".into(), Json::Int(s as i64)),
+                    ("submitted".into(), Json::Int(m.submitted.get() as i64)),
+                    ("completed".into(), Json::Int(m.completed.get() as i64)),
+                    ("errors".into(), Json::Int(m.errors.get() as i64)),
+                    ("cold_starts".into(), Json::Int(m.cold_starts.get() as i64)),
+                    (
+                        "host_warm_starts".into(),
+                        Json::Int(m.host_warm_starts.get() as i64),
+                    ),
+                    (
+                        "gpu_warm_starts".into(),
+                        Json::Int(m.gpu_warm_starts.get() as i64),
+                    ),
+                    ("evictions".into(), Json::Int(m.evictions.get() as i64)),
+                    ("evicted_mb".into(), Json::Int(m.evicted_mb.get() as i64)),
+                    ("spills".into(), Json::Int(m.spills.get() as i64)),
+                    (
+                        "flow_activations".into(),
+                        Json::Int(m.flow_activations.get() as i64),
+                    ),
+                    (
+                        "flow_throttles".into(),
+                        Json::Int(m.flow_throttles.get() as i64),
+                    ),
+                    (
+                        "flow_deactivations".into(),
+                        Json::Int(m.flow_deactivations.get() as i64),
+                    ),
+                    ("d_tokens".into(), Json::Int(m.d_tokens.get())),
+                    ("global_vt_ns".into(), Json::Int(m.global_vt_ns.get())),
+                    ("queue_wait_ns".into(), m.queue_wait_ns.to_json()),
+                    ("exec_ns".into(), m.exec_ns.to_json()),
+                    ("e2e_ns".into(), m.e2e_ns.to_json()),
+                ])
+            })
+            .collect();
+        let devices = self
+            .devices
+            .iter()
+            .enumerate()
+            .flat_map(|(s, devs)| {
+                devs.iter().enumerate().map(move |(g, d)| {
+                    Json::Obj(vec![
+                        ("shard".into(), Json::Int(s as i64)),
+                        ("gpu".into(), Json::Int(g as i64)),
+                        ("dispatches".into(), Json::Int(d.dispatches.get() as i64)),
+                        ("cold_starts".into(), Json::Int(d.cold_starts.get() as i64)),
+                        ("evictions".into(), Json::Int(d.evictions.get() as i64)),
+                    ])
+                })
+            })
+            .collect();
+        let classes = self
+            .classes
+            .iter()
+            .map(|c| {
+                Json::Obj(vec![
+                    ("class".into(), Json::str(c.name.clone())),
+                    ("completed".into(), Json::Int(c.completed.get() as i64)),
+                    ("exec_ns".into(), c.exec_ns.to_json()),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("schema".into(), Json::str("mqfq-metrics/v1")),
+            ("shards".into(), Json::Arr(shards)),
+            ("devices".into(), Json::Arr(devices)),
+            ("classes".into(), Json::Arr(classes)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::default();
+        g.set(-3);
+        assert_eq!(g.get(), -3);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile(0.5), 0, "empty histogram reports 0");
+        // 90 fast (≤ 1023 ns), 9 medium (≤ 65535 ns), 1 slow (~1 ms).
+        for _ in 0..90 {
+            h.record(1_000);
+        }
+        for _ in 0..9 {
+            h.record(60_000);
+        }
+        h.record(1_000_000);
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.sum(), 90 * 1_000 + 9 * 60_000 + 1_000_000);
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        let p999 = h.quantile(0.999);
+        // Bucket resolution: p50 lands in 1000's bucket [512,1023],
+        // p99 in 60000's bucket, p999 in the 1ms bucket.
+        assert_eq!(p50, 1023);
+        assert!((32_768..=65_535).contains(&p99), "p99={p99}");
+        assert!(p999 >= 1_000_000 / 2 && p999 >= p99, "p999={p999}");
+        assert!((h.mean() - h.sum() as f64 / 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_edge_values() {
+        let h = Histogram::default();
+        h.record(0);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.quantile(0.25), 0);
+        assert_eq!(h.quantile(1.0), u64::MAX);
+    }
+
+    #[test]
+    fn registry_renders_both_forms() {
+        let r = Registry::new(&[2, 1], &["isoneural".into(), "fft".into()]);
+        r.shard(0).submitted.add(3);
+        r.shard(0).completed.add(3);
+        r.shard(1).submitted.add(1);
+        r.shard(0).e2e_ns.record(5_000);
+        r.device(0, 1).unwrap().dispatches.inc();
+        assert!(r.device(0, 5).is_none());
+        assert!(r.device(9, 0).is_none());
+        r.class(0).unwrap().completed.add(2);
+
+        let mut prom = String::new();
+        r.render_prometheus_into(&mut prom);
+        assert!(prom.contains("# TYPE mqfq_submitted_total counter"), "{prom}");
+        assert!(prom.contains("mqfq_submitted_total{shard=\"0\"} 3"), "{prom}");
+        assert!(prom.contains("mqfq_submitted_total{shard=\"1\"} 1"), "{prom}");
+        assert!(
+            prom.contains("mqfq_e2e_ns{shard=\"0\",quantile=\"0.99\"}"),
+            "{prom}"
+        );
+        assert!(
+            prom.contains("mqfq_device_dispatches_total{shard=\"0\",gpu=\"1\"} 1"),
+            "{prom}"
+        );
+        assert!(
+            prom.contains("mqfq_class_completed_total{class=\"isoneural\"} 2"),
+            "{prom}"
+        );
+
+        let doc = r.to_json().render();
+        assert!(doc.contains("mqfq-metrics/v1"), "{doc}");
+        assert!(doc.contains("\"submitted\": 3"), "{doc}");
+        assert!(doc.contains("\"class\": \"fft\""), "{doc}");
+    }
+}

@@ -1,0 +1,353 @@
+//! Invocation lifecycle tracing: a fixed-capacity ring of structured
+//! [`TraceEvent`]s shared by the sim and the live serving path.
+//!
+//! Producers ([`crate::plane`], [`crate::cluster`], [`crate::server`])
+//! push events with [`TraceRing::push`]; consumers drain them oldest-
+//! first over the wire (`trace` verb) or into a JSONL sink
+//! (`replay --trace-out`). The ring never blocks the hot path on a
+//! slow consumer: when full it overwrites the oldest event and counts
+//! the loss in [`TraceRing::dropped_events`].
+//!
+//! Allocation discipline: a pushed event is a `Copy` struct written
+//! into a preallocated slot under a plain (allocation-free) mutex, so
+//! steady-state tracing performs zero heap events — the alloc-churn
+//! gate (`tests/alloc_churn.rs`) proves it with a counting global
+//! allocator.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::types::Nanos;
+
+/// Sentinel for "no invocation id" in [`TraceEvent::inv`].
+pub const NO_INV: u64 = u64::MAX;
+/// Sentinel for "no function id" in [`TraceEvent::func`].
+pub const NO_FUNC: u32 = u32::MAX;
+
+/// The lifecycle + scheduler-internal event vocabulary. Sim and wire
+/// runs emit the *same* kinds (the plane owns the lifecycle events), so
+/// traces from both are directly diffable. See the module docs of
+/// [`crate::telemetry`] for the payload table (what `a`/`b`/`c` mean
+/// per kind).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EventKind {
+    /// Invocation accepted by a frontend / arrived in the sim.
+    Submit,
+    /// Router decision: invocation assigned to a shard.
+    Route,
+    /// Invocation entered its flow queue.
+    Enqueue,
+    /// Policy picked the invocation and placement chose a device.
+    Dispatch,
+    /// Sandbox ready; user code starts executing.
+    ExecStart,
+    /// Invocation finished successfully.
+    Complete,
+    /// Invocation failed (e.g. stranded by a killed shard).
+    Error,
+    /// Flow Active/Throttled/Inactive transition.
+    FlowState,
+    /// Global_VT advanced.
+    GlobalVt,
+    /// D-token occupancy changed.
+    DTokens,
+    /// Device memory region evicted.
+    Evict,
+    /// Shard epoch bumped (membership change).
+    Epoch,
+}
+
+/// Every kind, for vocabulary assertions and exhaustive rendering.
+pub const ALL_KINDS: [EventKind; 12] = [
+    EventKind::Submit,
+    EventKind::Route,
+    EventKind::Enqueue,
+    EventKind::Dispatch,
+    EventKind::ExecStart,
+    EventKind::Complete,
+    EventKind::Error,
+    EventKind::FlowState,
+    EventKind::GlobalVt,
+    EventKind::DTokens,
+    EventKind::Evict,
+    EventKind::Epoch,
+];
+
+impl EventKind {
+    /// Stable wire/JSONL name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Submit => "submit",
+            EventKind::Route => "route",
+            EventKind::Enqueue => "enqueue",
+            EventKind::Dispatch => "dispatch",
+            EventKind::ExecStart => "exec_start",
+            EventKind::Complete => "complete",
+            EventKind::Error => "error",
+            EventKind::FlowState => "flow_state",
+            EventKind::GlobalVt => "global_vt",
+            EventKind::DTokens => "d_tokens",
+            EventKind::Evict => "evict",
+            EventKind::Epoch => "epoch",
+        }
+    }
+
+    /// Inverse of [`Self::name`] — wire-protocol decode.
+    pub fn parse(s: &str) -> Option<Self> {
+        ALL_KINDS.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+/// One structured trace event. `Copy` and fixed-size by design: pushes
+/// write into preallocated ring slots without touching the heap. The
+/// `a`/`b`/`c` payload words are kind-specific (see the vocabulary
+/// table in [`crate::telemetry`]); `inv`/`func` use the `NO_*`
+/// sentinels when not applicable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Ring-assigned monotone sequence number (stamped on push).
+    pub seq: u64,
+    /// Event time: sim virtual nanos or wall nanos since server start.
+    pub at: Nanos,
+    pub kind: EventKind,
+    pub shard: u32,
+    pub inv: u64,
+    pub func: u32,
+    pub a: i64,
+    pub b: i64,
+    pub c: i64,
+}
+
+impl TraceEvent {
+    /// A bare event; chain the builder methods for ids and payload.
+    pub fn new(at: Nanos, kind: EventKind, shard: u32) -> Self {
+        Self {
+            seq: 0,
+            at,
+            kind,
+            shard,
+            inv: NO_INV,
+            func: NO_FUNC,
+            a: 0,
+            b: 0,
+            c: 0,
+        }
+    }
+
+    pub fn inv(mut self, id: u64) -> Self {
+        self.inv = id;
+        self
+    }
+
+    pub fn func(mut self, f: u32) -> Self {
+        self.func = f;
+        self
+    }
+
+    pub fn a(mut self, v: i64) -> Self {
+        self.a = v;
+        self
+    }
+
+    pub fn b(mut self, v: i64) -> Self {
+        self.b = v;
+        self
+    }
+
+    pub fn c(mut self, v: i64) -> Self {
+        self.c = v;
+        self
+    }
+
+    /// Append the single-line JSONL form (no trailing newline). The
+    /// same rendering backs the sim trace sink and the wire `trace`
+    /// verb, so sim-vs-wire traces diff line-for-line.
+    pub fn render_jsonl_into(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = write!(out, "{{\"seq\":{},\"at\":{},\"kind\":\"{}\"", self.seq, self.at, self.kind.name());
+        let _ = write!(out, ",\"shard\":{}", self.shard);
+        if self.inv != NO_INV {
+            let _ = write!(out, ",\"inv\":{}", self.inv);
+        }
+        if self.func != NO_FUNC {
+            let _ = write!(out, ",\"func\":{}", self.func);
+        }
+        let _ = write!(out, ",\"a\":{},\"b\":{},\"c\":{}}}", self.a, self.b, self.c);
+    }
+}
+
+struct RingInner {
+    /// Preallocated slots; `head` is the oldest live entry.
+    buf: Box<[TraceEvent]>,
+    head: usize,
+    len: usize,
+    next_seq: u64,
+}
+
+/// Fixed-capacity drop-oldest ring of trace events.
+///
+/// Interior mutability behind one plain `Mutex`: the critical section
+/// is a couple of word writes (far shorter than the plane lock the
+/// producers already hold), and locking a `std` mutex performs no heap
+/// allocation, preserving the zero-allocation record path.
+pub struct TraceRing {
+    inner: Mutex<RingInner>,
+    dropped: AtomicU64,
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        let slot = TraceEvent::new(0, EventKind::Submit, 0);
+        Self {
+            inner: Mutex::new(RingInner {
+                buf: vec![slot; capacity].into_boxed_slice(),
+                head: 0,
+                len: 0,
+                next_seq: 0,
+            }),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Append `ev` (stamping its sequence number), overwriting the
+    /// oldest event when full. Returns the stamped sequence number.
+    pub fn push(&self, mut ev: TraceEvent) -> u64 {
+        let mut r = self.inner.lock().unwrap();
+        let seq = r.next_seq;
+        r.next_seq += 1;
+        ev.seq = seq;
+        let cap = r.buf.len();
+        if r.len == cap {
+            let head = r.head;
+            r.buf[head] = ev;
+            r.head = (head + 1) % cap;
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        } else {
+            let idx = (r.head + r.len) % cap;
+            r.buf[idx] = ev;
+            r.len += 1;
+        }
+        seq
+    }
+
+    /// Remove and return up to `max` events, oldest first. Consecutive
+    /// calls page through the stream (each event is delivered once).
+    pub fn drain(&self, max: usize) -> Vec<TraceEvent> {
+        let mut r = self.inner.lock().unwrap();
+        let n = max.min(r.len);
+        let cap = r.buf.len();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            out.push(r.buf[(r.head + i) % cap]);
+        }
+        r.head = (r.head + n) % cap;
+        r.len -= n;
+        out
+    }
+
+    /// Events overwritten before any consumer drained them.
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.lock().unwrap().buf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(at: Nanos) -> TraceEvent {
+        TraceEvent::new(at, EventKind::Submit, 0).inv(at).func(1)
+    }
+
+    #[test]
+    fn push_drain_roundtrip_in_order() {
+        let r = TraceRing::new(8);
+        for i in 0..5 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.len(), 5);
+        let got = r.drain(100);
+        assert_eq!(got.len(), 5);
+        for (i, e) in got.iter().enumerate() {
+            assert_eq!(e.seq, i as u64);
+            assert_eq!(e.at, i as Nanos);
+        }
+        assert!(r.is_empty());
+        assert_eq!(r.dropped_events(), 0);
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_counts() {
+        let r = TraceRing::new(4);
+        for i in 0..10 {
+            r.push(ev(i));
+        }
+        assert_eq!(r.dropped_events(), 6);
+        let got = r.drain(100);
+        // The four *newest* events survive, in order.
+        assert_eq!(got.iter().map(|e| e.at).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+        assert_eq!(got.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn drain_pages_through_the_stream() {
+        let r = TraceRing::new(8);
+        for i in 0..6 {
+            r.push(ev(i));
+        }
+        let first = r.drain(4);
+        let second = r.drain(4);
+        assert_eq!(first.len(), 4);
+        assert_eq!(second.len(), 2);
+        assert_eq!(second[0].seq, 4);
+        // New pushes land after a partial drain without disturbing order.
+        r.push(ev(100));
+        let third = r.drain(4);
+        assert_eq!(third.len(), 1);
+        assert_eq!(third[0].at, 100);
+        assert_eq!(third[0].seq, 6);
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in ALL_KINDS {
+            assert_eq!(EventKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(EventKind::parse("teleport"), None);
+    }
+
+    #[test]
+    fn jsonl_rendering_omits_sentinel_ids() {
+        let mut out = String::new();
+        let mut e = TraceEvent::new(42, EventKind::GlobalVt, 3).a(1_500_000_000);
+        e.seq = 7;
+        e.render_jsonl_into(&mut out);
+        assert_eq!(
+            out,
+            "{\"seq\":7,\"at\":42,\"kind\":\"global_vt\",\"shard\":3,\"a\":1500000000,\"b\":0,\"c\":0}"
+        );
+        out.clear();
+        let mut e = TraceEvent::new(1, EventKind::Complete, 0)
+            .inv(9)
+            .func(2)
+            .a(10)
+            .b(5)
+            .c(1);
+        e.seq = 8;
+        e.render_jsonl_into(&mut out);
+        assert!(out.contains("\"inv\":9") && out.contains("\"func\":2"), "{out}");
+    }
+}

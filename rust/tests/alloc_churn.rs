@@ -12,6 +12,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use mqfq::api::types::{InvokeOutcome, Response, StatsSnapshot, Ticket};
 use mqfq::api::wire;
+use mqfq::telemetry::{EventKind, Telemetry, TraceEvent};
 use mqfq::types::StartKind;
 use mqfq::util::json::Json;
 
@@ -67,6 +68,7 @@ fn wire_path_steady_state_allocation_churn() {
         cold_ratio: 0.125,
         pending: 7,
         in_flight: 5,
+        shards: Vec::new(),
     });
     let mut out = String::with_capacity(512);
     wire::encode_response_into(&done, &mut out); // warm the buffer
@@ -126,7 +128,43 @@ fn wire_path_steady_state_allocation_churn() {
         "borrowed parse churns too much: {borrowed} heap events over {ITERS} parses"
     );
 
-    // -- 4. End-to-end line handling sanity: the borrowed value really
+    // -- 4. Telemetry record path: steady-state metric recording and
+    // ring-buffered event tracing perform ZERO heap events — counters,
+    // gauges, histograms, and the trace ring (including the drop-oldest
+    // overflow path, which the small capacity forces) are all
+    // preallocated at construction.
+    let tel = Telemetry::with_ring_capacity(&[2], &["fft".to_string()], 64);
+    let m = tel.registry.shard(0);
+    tel.emit(TraceEvent::new(0, EventKind::Submit, 0)); // warm (no-op: ring is prebuilt)
+    let (n, _) = allocs_during(|| {
+        for i in 0..ITERS {
+            m.submitted.inc();
+            m.completed.inc();
+            m.d_tokens.set(2);
+            m.global_vt_ns.set(i as i64);
+            m.queue_wait_ns.record(1_000 * i);
+            m.exec_ns.record(1_000_000);
+            m.e2e_ns.record(1_001_000);
+            tel.registry.device(0, 0).unwrap().dispatches.inc();
+            tel.registry.class(0).unwrap().completed.inc();
+            tel.emit(
+                TraceEvent::new(i, EventKind::Dispatch, 0)
+                    .inv(i)
+                    .func(0)
+                    .a(1)
+                    .b(2),
+            );
+            tel.emit(TraceEvent::new(i, EventKind::Complete, 0).inv(i).func(0));
+        }
+    });
+    assert_eq!(
+        n, 0,
+        "telemetry record path must not allocate in steady state"
+    );
+    // The loop overflowed the 64-slot ring (2 events x 100 iters + warm).
+    assert!(tel.dropped_events() > 0, "overflow path was exercised");
+
+    // -- 5. End-to-end line handling sanity: the borrowed value really
     // borrows (no silent fallback to owned strings).
     let v = wire::parse_jval(line).unwrap();
     assert_eq!(v.get_str("cmd"), Some("invoke"));

@@ -1,0 +1,233 @@
+//! Telemetry integration suite: the deterministic-trace property (two
+//! sim replays of the same trace render byte-identical JSONL), ring
+//! overflow semantics (drop-oldest with an exact `dropped_events`
+//! counter), and the live wire surface — a 4-shard cluster over real
+//! TCP answering `metrics` (both formats) and `trace`, with the same
+//! lifecycle vocabulary the simulator emits and counter conservation
+//! against the per-shard `stats` breakdown.
+
+use std::collections::HashSet;
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Duration;
+
+use mqfq::api::{ApiClient, Frontend, MetricsFormat};
+use mqfq::cluster::{ClusterConfig, RouterKind};
+use mqfq::plane::PlaneConfig;
+use mqfq::server::RtCluster;
+use mqfq::sim::replay_traced;
+use mqfq::telemetry::{self, EventKind, Telemetry, TraceEvent};
+use mqfq::types::MS;
+use mqfq::workload::catalog::by_name;
+use mqfq::workload::zipf::{self, ZipfConfig};
+use mqfq::workload::Workload;
+
+fn zipf_pair() -> (Workload, mqfq::workload::Trace) {
+    zipf::generate(&ZipfConfig {
+        n_funcs: 6,
+        total_rate: 1.5,
+        duration_s: 120.0,
+        seed: 11,
+        ..Default::default()
+    })
+}
+
+fn render_all(tel: &Telemetry) -> String {
+    let mut out = String::new();
+    for ev in tel.trace.drain(usize::MAX) {
+        ev.render_jsonl_into(&mut out);
+        out.push('\n');
+    }
+    out
+}
+
+fn run_traced_jsonl() -> String {
+    let (w, t) = zipf_pair();
+    let cfg = PlaneConfig::default();
+    let (classes, _) = telemetry::workload_classes(&w);
+    let tel = Arc::new(Telemetry::with_ring_capacity(
+        &[cfg.n_devices()],
+        &classes,
+        1 << 20,
+    ));
+    let r = replay_traced(w, &t, cfg, Some(tel.clone()));
+    assert!(r.events > 0);
+    assert_eq!(tel.dropped_events(), 0, "ring sized to hold the full run");
+    render_all(&tel)
+}
+
+#[test]
+fn sim_trace_is_deterministic_and_well_formed() {
+    let a = run_traced_jsonl();
+    let b = run_traced_jsonl();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "same trace + config must render byte-identically");
+    // Well-formed JSONL: every line is one event object with the
+    // stable leading fields, and the lifecycle kinds all appear.
+    let mut kinds = HashSet::new();
+    for line in a.lines() {
+        assert!(line.starts_with("{\"seq\":"), "{line}");
+        assert!(line.ends_with('}'), "{line}");
+        let kind = line
+            .split("\"kind\":\"")
+            .nth(1)
+            .and_then(|s| s.split('"').next())
+            .unwrap_or_default();
+        assert!(EventKind::parse(kind).is_some(), "unknown kind in {line}");
+        kinds.insert(kind.to_string());
+    }
+    for k in ["submit", "enqueue", "dispatch", "exec_start", "complete"] {
+        assert!(kinds.contains(k), "lifecycle kind {k} missing from trace");
+    }
+    // Sequence numbers are the push order: strictly increasing.
+    let seqs: Vec<u64> = a
+        .lines()
+        .map(|l| {
+            l.strip_prefix("{\"seq\":")
+                .and_then(|s| s.split(',').next())
+                .and_then(|s| s.parse().ok())
+                .unwrap()
+        })
+        .collect();
+    assert!(seqs.windows(2).all(|w| w[1] > w[0]));
+}
+
+#[test]
+fn ring_overflow_drops_oldest_and_counts_exactly() {
+    let tel = Telemetry::with_ring_capacity(&[1], &["fft".to_string()], 8);
+    for i in 0..20u64 {
+        tel.emit(TraceEvent::new(i, EventKind::Submit, 0));
+    }
+    assert_eq!(tel.dropped_events(), 12);
+    let events = tel.trace.drain(usize::MAX);
+    assert_eq!(events.len(), 8);
+    // Oldest dropped: the survivors are exactly the last 8 pushes, in
+    // order, with their original sequence stamps.
+    let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+    assert_eq!(seqs, (12..20).collect::<Vec<u64>>());
+}
+
+fn live_cluster() -> (RtCluster, SocketAddr) {
+    let mut w = Workload::default();
+    w.register(by_name("isoneural").unwrap(), 0, 1.0);
+    w.register(by_name("fft").unwrap(), 0, 1.0);
+    let cfg = ClusterConfig {
+        n_shards: 4,
+        router: RouterKind::RoundRobin,
+        plane: PlaneConfig {
+            monitor_period: 20 * MS,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let srv = RtCluster::new(w, cfg, None, 0.001).unwrap();
+    let addr = srv.serve("127.0.0.1:0").unwrap();
+    (srv, addr)
+}
+
+#[test]
+fn live_cluster_exports_metrics_and_trace_over_the_wire() {
+    let (srv, addr) = live_cluster();
+    let mut client = ApiClient::connect(addr).unwrap();
+    const N: usize = 8;
+    for _ in 0..N {
+        client
+            .invoke("isoneural-0", Some(30_000))
+            .expect("invoke over the wire");
+    }
+
+    // Per-shard stats breakdown: 4 rows, counts conserving against the
+    // aggregate, every shard Up at epoch 0.
+    let s = client.stats().unwrap();
+    assert_eq!(s.invocations, N);
+    assert_eq!(s.shards.len(), 4);
+    assert_eq!(s.shards.iter().map(|r| r.completed).sum::<u64>(), N as u64);
+    for (i, row) in s.shards.iter().enumerate() {
+        assert_eq!(row.shard, i);
+        assert_eq!(row.epoch, 0);
+    }
+    // Round-robin over 4 shards: all of them saw work.
+    assert!(s.shards.iter().all(|r| r.completed == 2));
+
+    // Prometheus text: typed families, and the registry's completion
+    // counters conserve against the stats aggregate.
+    let prom = client.metrics(MetricsFormat::Prom).unwrap();
+    assert!(prom.contains("# TYPE"), "{prom}");
+    assert!(prom.contains("mqfq_completed_total"), "{prom}");
+    assert!(prom.contains("mqfq_trace_dropped_events_total"), "{prom}");
+
+    // JSON document: versioned schema.
+    let json = client.metrics(MetricsFormat::Json).unwrap();
+    assert!(json.contains("mqfq-metrics/v1"), "{json}");
+    assert!(json.contains("\"shards\""), "{json}");
+
+    // Trace: the wire path speaks the simulator's lifecycle vocabulary,
+    // plus the serving-only route event — one per accepted submit.
+    let (dropped, events) = client.trace(1 << 20).unwrap();
+    assert_eq!(dropped, 0);
+    let kinds: HashSet<EventKind> = events.iter().map(|e| e.kind).collect();
+    for k in [
+        EventKind::Route,
+        EventKind::Submit,
+        EventKind::Enqueue,
+        EventKind::Dispatch,
+        EventKind::ExecStart,
+        EventKind::Complete,
+    ] {
+        assert!(kinds.contains(&k), "missing {k:?} on the wire path");
+    }
+    assert_eq!(
+        events.iter().filter(|e| e.kind == EventKind::Route).count(),
+        N
+    );
+    assert_eq!(
+        events
+            .iter()
+            .filter(|e| e.kind == EventKind::Complete)
+            .count(),
+        N
+    );
+    // Events cover all four shards.
+    let shards: HashSet<u32> = events.iter().map(|e| e.shard).collect();
+    assert_eq!(shards.len(), 4);
+
+    // Paging: the ring was drained above; a fresh invocation produces a
+    // fresh, small batch (`max` caps the page size).
+    client.invoke("isoneural-0", Some(30_000)).unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    let (_, page) = client.trace(2).unwrap();
+    assert!(page.len() <= 2);
+    assert!(!page.is_empty());
+
+    client.quit();
+    drop(srv);
+}
+
+#[test]
+fn kill_emits_epoch_event_and_stats_row_reflects_it() {
+    let (srv, addr) = live_cluster();
+    let mut client = ApiClient::connect(addr).unwrap();
+    client.invoke("isoneural-0", Some(30_000)).unwrap();
+    client.trace(1 << 20).unwrap(); // clear the ring
+    client.kill(2).unwrap();
+    let (_, events) = client.trace(1 << 20).unwrap();
+    let epoch_ev = events
+        .iter()
+        .find(|e| e.kind == EventKind::Epoch)
+        .expect("kill emits an epoch event");
+    assert_eq!(epoch_ev.shard, 2);
+    assert_eq!(epoch_ev.a, 1, "first kill bumps shard 2 to epoch 1");
+    let s = client.stats().unwrap();
+    assert_eq!(s.shards[2].epoch, 1);
+    assert_eq!(s.shards[2].health, mqfq::api::ShardHealth::Dead);
+    // The rebuilt plane keeps observing: work routed after a rejoin
+    // still lands in the registry and the per-shard row.
+    client.join(2).unwrap();
+    for _ in 0..8 {
+        client.invoke("isoneural-0", Some(30_000)).unwrap();
+    }
+    let s = client.stats().unwrap();
+    assert!(s.shards[2].completed >= 1, "{:?}", s.shards[2]);
+    client.quit();
+    drop(srv);
+}

@@ -72,6 +72,7 @@ def flatten(value, prefix, out):
                 ident = [str(sub[k]) for k in ("fleet", "router", "impl", "name",
                                                "shape", "loop", "clients",
                                                "shards", "flows", "active",
+                                               "telemetry",
                                                "phase", "window") if k in sub]
                 if ident:
                     label = ":".join(ident)

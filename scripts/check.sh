@@ -13,4 +13,25 @@ cargo test -q
 echo "== cargo clippy -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
+echo "== trace summarizer smoke (replay --trace-out | trace_summarize.py) =="
+BIN=target/release/mqfq-sticky
+TMP="$(mktemp -d)"
+trap 'rm -rf "$TMP"' EXIT
+"$BIN" trace gen --kind zipf --funcs 4 --rate 1.0 --duration 30 --seed 7 \
+  --out "$TMP/smoke.trace"
+"$BIN" replay --trace "$TMP/smoke.trace" --policy mqfq \
+  --trace-out "$TMP/smoke.jsonl" >/dev/null
+python3 scripts/trace_summarize.py "$TMP/smoke.jsonl"
+python3 scripts/trace_summarize.py "$TMP/smoke.jsonl" --json \
+  | python3 -c '
+import json, sys
+d = json.load(sys.stdin)
+assert d["invocations_completed"] > 0, d
+for k in ("submit", "enqueue", "dispatch", "exec_start", "complete"):
+    assert k in d["kinds"], (k, d["kinds"])
+assert d["phases"]["e2e"]["count"] == d["invocations_completed"], d["phases"]
+print("trace summarizer smoke: OK (%d events, %d completed)"
+      % (d["events"], d["invocations_completed"]))
+'
+
 echo "check: OK"

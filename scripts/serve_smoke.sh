@@ -104,6 +104,39 @@ stats = call({"cmd": "stats"})
 assert stats["invocations"] == 2 + N, stats
 assert stats["pending"] == 0 and stats["in_flight"] == 0, stats
 
+# Telemetry: per-shard stats breakdown conserves against the aggregate.
+assert len(stats["shards"]) == 4, stats
+assert sum(r["completed"] for r in stats["shards"]) == stats["invocations"], stats
+assert all(r["pending"] == 0 and r["in_flight"] == 0 for r in stats["shards"]), stats
+assert all(r["state"] == "up" and r["epoch"] == 0 for r in stats["shards"]), stats
+
+# metrics round-trip, Prometheus text: typed families present.
+m = call({"cmd": "metrics", "format": "prom"})
+assert m["ok"] and m["type"] == "metrics" and m["format"] == "prom", m
+assert "# TYPE mqfq_completed_total counter" in m["body"], m["body"][:400]
+assert "mqfq_e2e_ns" in m["body"] and "mqfq_trace_dropped_events_total" in m["body"], m["body"][:400]
+
+# metrics round-trip, JSON: versioned schema, and the registry's own
+# completion counters conserve against the stats aggregate.
+m = call({"cmd": "metrics", "format": "json"})
+assert m["ok"] and m["format"] == "json", m
+doc = json.loads(m["body"])
+assert doc["schema"] == "mqfq-metrics/v1", doc
+assert sum(r["completed"] for r in doc["shards"]) == stats["invocations"], doc["shards"]
+assert sum(r["errors"] for r in doc["shards"]) == 0, doc["shards"]
+err = call({"cmd": "metrics", "format": "yaml"})
+assert not err["ok"] and err["error"] == "bad-request", err
+
+# trace: the live server speaks the simulator's lifecycle vocabulary
+# (plus the serving-only route event), one complete per invocation.
+t = call({"cmd": "trace"})
+assert t["ok"] and t["type"] == "trace" and t["count"] == len(t["events"]), t["count"]
+kinds = {e["kind"] for e in t["events"]}
+for k in ("route", "submit", "enqueue", "dispatch", "exec_start", "complete"):
+    assert k in kinds, (k, sorted(kinds))
+completes = sum(1 for e in t["events"] if e["kind"] == "complete")
+assert completes == stats["invocations"], (completes, stats["invocations"])
+
 # Elastic membership round-trip: drain -> rejoin -> kill -> rejoin,
 # with routing and ticket-fate conservation asserted at each step.
 m = call({"cmd": "membership"})
@@ -141,6 +174,6 @@ assert m["completed"] == served + 2 and m["failed"] == 0, m
 assert m["accepted"] == m["completed"], m
 
 call({"cmd": "quit"})
-print("serve smoke: OK (sync + async + errors + legacy + membership + "
-      "%d invokes in %.2fs)" % (N, wall))
+print("serve smoke: OK (sync + async + errors + legacy + telemetry + "
+      "membership + %d invokes in %.2fs)" % (N, wall))
 EOF

@@ -1,0 +1,181 @@
+#!/usr/bin/env python3
+"""Fold a lifecycle trace (JSONL) into a per-phase latency breakdown.
+
+Works on both trace sources, which share one event vocabulary:
+
+  rust/target/release/mqfq replay ... --trace-out TRACE.jsonl
+  rust/target/release/mqfq admin --host H --port P trace > TRACE.jsonl
+
+Each line is one event:
+
+  {"seq":N,"at":NS,"kind":"...","shard":S[,"inv":I][,"func":F],"a":A,"b":B,"c":C}
+
+Lifecycle joins are keyed on (shard, inv). Field semantics per kind
+(see rust/src/telemetry/trace.rs):
+
+  submit                              accepted / arrived
+  route       a=epoch b=spilled       router decision (serving path only)
+  enqueue     a=flow_vt b=global_vt   entered its flow queue
+  dispatch    a=start_kind b=boot_ns  device chosen (0=cold 1=host 2=gpu-warm)
+  exec_start  a=mem_blocking_ns       kernel actually starts
+  complete    a=e2e_ns b=exec_ns      finished
+
+Derived phases (nanoseconds in the trace, reported in ms):
+
+  queue_wait = dispatch.at - submit.at
+  boot       = dispatch.b            (container/model boot, 0 when warm)
+  mem_block  = exec_start.a          (demand-fault blocking before exec)
+  exec       = complete.at - exec_start.at
+  e2e        = complete.a
+
+Usage: trace_summarize.py [TRACE.jsonl ...] [--json]
+Reads stdin when no file is given. --json emits a machine-readable doc
+(bench_diff.sh-compatible) instead of the table.
+"""
+
+import json
+import sys
+
+START_KINDS = {0: "cold", 1: "host_warm", 2: "gpu_warm"}
+
+
+def percentile(sorted_vals, q):
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(q * (len(sorted_vals) - 1) + 0.5))
+    return sorted_vals[idx]
+
+
+def phase_stats(vals):
+    vals = sorted(vals)
+    n = len(vals)
+    return {
+        "count": n,
+        "mean_ms": (sum(vals) / n / 1e6) if n else 0.0,
+        "p50_ms": percentile(vals, 0.50) / 1e6,
+        "p99_ms": percentile(vals, 0.99) / 1e6,
+        "max_ms": (vals[-1] / 1e6) if n else 0.0,
+    }
+
+
+def read_events(paths):
+    streams = [open(p) for p in paths] if paths else [sys.stdin]
+    skipped = 0
+    for f in streams:
+        for line in f:
+            line = line.strip()
+            if not line or not line.startswith("{"):
+                continue
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError:
+                skipped += 1
+                continue
+            if "kind" not in ev or "at" not in ev:
+                skipped += 1
+                continue
+            yield ev
+        if f is not sys.stdin:
+            f.close()
+    if skipped:
+        print(f"note: skipped {skipped} non-event line(s)", file=sys.stderr)
+
+
+def summarize(events):
+    kind_counts = {}
+    start_kinds = {}
+    spills = 0
+    epochs = []
+    # (shard, inv) -> {phase timestamps / fields}
+    invs = {}
+    phases = {"queue_wait": [], "boot": [], "mem_block": [], "exec": [], "e2e": []}
+
+    for ev in events:
+        kind = ev["kind"]
+        kind_counts[kind] = kind_counts.get(kind, 0) + 1
+        if "inv" in ev:
+            key = (ev.get("shard", 0), ev["inv"])
+        else:
+            key = None
+
+        if kind == "route" and ev.get("b"):
+            spills += 1
+        elif kind == "epoch":
+            epochs.append((ev.get("shard", 0), ev.get("a", 0)))
+        elif kind == "submit" and key:
+            invs.setdefault(key, {})["submit_at"] = ev["at"]
+        elif kind == "dispatch" and key:
+            rec = invs.setdefault(key, {})
+            rec["dispatch_at"] = ev["at"]
+            sk = START_KINDS.get(ev.get("a", -1), "unknown")
+            start_kinds[sk] = start_kinds.get(sk, 0) + 1
+            boot = ev.get("b", 0)
+            if boot:
+                phases["boot"].append(boot)
+        elif kind == "exec_start" and key:
+            rec = invs.setdefault(key, {})
+            rec["exec_start_at"] = ev["at"]
+            block = ev.get("a", 0)
+            if block:
+                phases["mem_block"].append(block)
+        elif kind == "complete" and key:
+            rec = invs.setdefault(key, {})
+            rec["complete_at"] = ev["at"]
+            phases["e2e"].append(ev.get("a", 0))
+            if "exec_start_at" in rec:
+                phases["exec"].append(ev["at"] - rec["exec_start_at"])
+
+    for rec in invs.values():
+        if "submit_at" in rec and "dispatch_at" in rec:
+            phases["queue_wait"].append(rec["dispatch_at"] - rec["submit_at"])
+
+    completed = kind_counts.get("complete", 0)
+    cold = start_kinds.get("cold", 0)
+    dispatched = sum(start_kinds.values())
+    return {
+        "events": sum(kind_counts.values()),
+        "kinds": dict(sorted(kind_counts.items())),
+        "invocations_completed": completed,
+        "start_kinds": dict(sorted(start_kinds.items())),
+        "cold_ratio": (cold / dispatched) if dispatched else 0.0,
+        "router_spills": spills,
+        "epoch_changes": len(epochs),
+        "phases": {name: phase_stats(vals) for name, vals in phases.items()},
+    }
+
+
+def main():
+    argv = sys.argv[1:]
+    as_json = "--json" in argv
+    paths = [a for a in argv if a != "--json"]
+    summary = summarize(read_events(paths))
+    if summary["events"] == 0:
+        print("trace_summarize: no events found", file=sys.stderr)
+        sys.exit(1)
+
+    if as_json:
+        json.dump(summary, sys.stdout, indent=2)
+        print()
+        return
+
+    src = ", ".join(paths) if paths else "<stdin>"
+    print(f"trace summary: {src}")
+    print(f"  events: {summary['events']}  "
+          f"completed: {summary['invocations_completed']}  "
+          f"cold ratio: {summary['cold_ratio']:.3f}  "
+          f"spills: {summary['router_spills']}  "
+          f"epoch changes: {summary['epoch_changes']}")
+    print("  event kinds: "
+          + "  ".join(f"{k}={n}" for k, n in summary["kinds"].items()))
+    if summary["start_kinds"]:
+        print("  start kinds: "
+              + "  ".join(f"{k}={n}" for k, n in summary["start_kinds"].items()))
+    print(f"  {'phase':<12}{'count':>8}{'mean ms':>12}{'p50 ms':>12}"
+          f"{'p99 ms':>12}{'max ms':>12}")
+    for name, st in summary["phases"].items():
+        print(f"  {name:<12}{st['count']:>8}{st['mean_ms']:>12.3f}"
+              f"{st['p50_ms']:>12.3f}{st['p99_ms']:>12.3f}{st['max_ms']:>12.3f}")
+
+
+if __name__ == "__main__":
+    main()
