@@ -1,9 +1,12 @@
 //! `cargo bench --bench serving_throughput` — the §Serving wall-clock
 //! serving-path sweep: closed-loop + open-loop load generators over
-//! real loopback TCP (1-shard and 4-shard sticky, sync and async-ticket
-//! mixes), emitting `BENCH_serving.json` and holding the scaling gates.
-//! Thin wrapper over `mqfq::experiments::serving::main` (also:
-//! `mqfq-sticky exp serving`; `SERVING_QUICK=1` for a smoke run).
+//! real loopback TCP (1-shard and 4-shard sticky; sync, async-ticket,
+//! and push-completion mixes; a 100 → 1k → 10k connection-scaling
+//! axis on the epoll front end), emitting `BENCH_serving.json` and
+//! holding the scaling, connection-flatness, push-p99, and
+//! thread-bound gates. Thin wrapper over
+//! `mqfq::experiments::serving::main` (also: `mqfq-sticky exp
+//! serving`; `SERVING_QUICK=1` for a smoke run).
 
 fn main() {
     let t0 = std::time::Instant::now();

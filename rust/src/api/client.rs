@@ -82,9 +82,15 @@ impl RetryPolicy {
     }
 }
 
-/// A connected, version-negotiated client. One request in flight at a
-/// time (the protocol is strictly request/reply per connection); async
-/// concurrency comes from tickets, not pipelining.
+/// A connected, version-negotiated client. The classic surface is
+/// lockstep — one request in flight at a time — and stays byte-
+/// identical on the wire. Against an event-loop server the client can
+/// additionally *pipeline* ([`Self::pipeline_invoke_async`]: many
+/// tagged requests, one flush, out-of-order tagged replies) and
+/// subscribe to *push* completions ([`Self::invoke_push`] +
+/// [`Self::wait_push`]: the server sends the completion unsolicited,
+/// no polling round trips). Unsolicited push lines that interleave
+/// with other replies are parked internally until asked for.
 ///
 /// The request and reply line buffers live for the whole connection,
 /// so a tight invoke loop (the serving load generator, the CLI `--n`
@@ -97,6 +103,9 @@ pub struct ApiClient {
     wbuf: String,
     /// Reused reply-line buffer.
     rbuf: String,
+    /// Push completions that arrived interleaved with other replies,
+    /// parked until their [`Self::wait_push`].
+    pushed: Vec<InvokeOutcome>,
     /// Transient-error retry policy; [`RetryPolicy::off`] by default.
     retry: RetryPolicy,
     /// Remembered peer for reconnect-on-I/O-failure retries.
@@ -126,6 +135,7 @@ impl ApiClient {
             proto: 0,
             wbuf: String::with_capacity(128),
             rbuf: String::with_capacity(256),
+            pushed: Vec::new(),
             retry: RetryPolicy::off(),
             peer,
             rng: Rng::new(seed),
@@ -191,6 +201,9 @@ impl ApiClient {
         let writer = stream.try_clone().map_err(io_err)?;
         self.reader = BufReader::new(stream);
         self.writer = writer;
+        // Old-connection subscriptions died with the socket; parked
+        // pushes from it would otherwise satisfy a new wait_push.
+        self.pushed.clear();
         match self.call_once(&Request::Hello {
             version: PROTOCOL_VERSION,
         })? {
@@ -212,6 +225,19 @@ impl ApiClient {
         self.writer
             .write_all(self.wbuf.as_bytes())
             .map_err(io_err)?;
+        loop {
+            match self.read_response()? {
+                // Unsolicited push completions may interleave with any
+                // reply; park them for wait_push and keep reading.
+                Response::Push(o) => self.pushed.push(o),
+                Response::Error(e) => return Err(e),
+                resp => return Ok(resp),
+            }
+        }
+    }
+
+    /// Read and decode one reply line.
+    fn read_response(&mut self) -> Result<Response, ApiError> {
         self.rbuf.clear();
         let n = self.reader.read_line(&mut self.rbuf).map_err(io_err)?;
         if n == 0 {
@@ -219,10 +245,7 @@ impl ApiClient {
                 detail: "server closed the connection".into(),
             });
         }
-        match wire::decode_response(self.rbuf.trim()).map_err(io_err)? {
-            Response::Error(e) => Err(e),
-            resp => Ok(resp),
-        }
+        wire::decode_response(self.rbuf.trim()).map_err(io_err)
     }
 
     pub fn describe(&mut self) -> Result<DescribeInfo, ApiError> {
@@ -243,6 +266,7 @@ impl ApiClient {
             func: func.to_string(),
             mode: InvokeMode::Sync,
             deadline_ms,
+            push: false,
         })? {
             Response::Done(o) => Ok(o),
             other => Err(unexpected("invoke", &other)),
@@ -255,10 +279,101 @@ impl ApiClient {
             func: func.to_string(),
             mode: InvokeMode::Async,
             deadline_ms: None,
+            push: false,
         })? {
             Response::Accepted { ticket } => Ok(ticket),
             other => Err(unexpected("invoke async", &other)),
         }
+    }
+
+    /// Async invoke with a push subscription (event-loop servers):
+    /// the server sends an unsolicited `push` completion on this
+    /// connection when the invocation finishes — no polling round
+    /// trips. Redeem with [`Self::wait_push`].
+    pub fn invoke_push(&mut self, func: &str) -> Result<Ticket, ApiError> {
+        match self.call(&Request::Invoke {
+            func: func.to_string(),
+            mode: InvokeMode::Async,
+            deadline_ms: None,
+            push: true,
+        })? {
+            Response::Accepted { ticket } => Ok(ticket),
+            other => Err(unexpected("invoke push", &other)),
+        }
+    }
+
+    /// Block until `ticket`'s push completion arrives. Parked arrivals
+    /// (pushes that interleaved with earlier replies) are consumed
+    /// first; pushes for *other* tickets encountered while waiting are
+    /// parked in turn, so waits may be issued in any order.
+    pub fn wait_push(&mut self, ticket: Ticket) -> Result<InvokeOutcome, ApiError> {
+        loop {
+            if let Some(i) = self.pushed.iter().position(|o| o.ticket == ticket) {
+                return Ok(self.pushed.swap_remove(i));
+            }
+            match self.read_response()? {
+                Response::Push(o) => self.pushed.push(o),
+                Response::Error(e) => return Err(e),
+                other => return Err(unexpected("push", &other)),
+            }
+        }
+    }
+
+    /// Pipelined async submit (event-loop servers): encode every
+    /// invoke tagged `"id":0..n` into one buffer, flush once, then
+    /// read the tagged replies — which the server may deliver out of
+    /// order — and return the tickets in input order. The first
+    /// structured error aborts the batch, but only after the batch's
+    /// remaining replies are drained, so the connection stays usable.
+    pub fn pipeline_invoke_async(&mut self, funcs: &[&str]) -> Result<Vec<Ticket>, ApiError> {
+        self.wbuf.clear();
+        for (i, func) in funcs.iter().enumerate() {
+            let req = Request::Invoke {
+                func: func.to_string(),
+                mode: InvokeMode::Async,
+                deadline_ms: None,
+                push: false,
+            };
+            wire::encode_request_tagged_into(&req, i as u64, &mut self.wbuf);
+            self.wbuf.push('\n');
+        }
+        self.writer
+            .write_all(self.wbuf.as_bytes())
+            .map_err(io_err)?;
+        let mut tickets: Vec<Option<Ticket>> = vec![None; funcs.len()];
+        let mut first_err: Option<ApiError> = None;
+        let mut seen = 0usize;
+        while seen < funcs.len() {
+            self.rbuf.clear();
+            let n = self.reader.read_line(&mut self.rbuf).map_err(io_err)?;
+            if n == 0 {
+                return Err(ApiError::Io {
+                    detail: "server closed the connection".into(),
+                });
+            }
+            let (id, resp) =
+                wire::decode_response_tagged(self.rbuf.trim()).map_err(io_err)?;
+            match (id, resp) {
+                // Unsolicited pushes may interleave with the batch.
+                (_, Response::Push(o)) => self.pushed.push(o),
+                (Some(i), Response::Accepted { ticket }) if (i as usize) < funcs.len() => {
+                    tickets[i as usize] = Some(ticket);
+                    seen += 1;
+                }
+                (Some(_), Response::Error(e)) => {
+                    first_err.get_or_insert(e);
+                    seen += 1;
+                }
+                (_, other) => return Err(unexpected("pipeline", &other)),
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok(tickets
+            .into_iter()
+            .map(|t| t.expect("every batch id answered"))
+            .collect())
     }
 
     /// Redeem a ticket, blocking until completion (optionally bounded).

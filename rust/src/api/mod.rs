@@ -31,7 +31,27 @@ pub use types::{
     Response, ShardHealth, ShardInfo, ShardStatsRow, StatsSnapshot, Ticket, PROTOCOL_VERSION,
 };
 
+use std::sync::Arc;
 use std::time::Duration;
+
+/// Where a subscribed ticket's completion is delivered. Implemented by
+/// the event loop's completion bus; called from executor threads at
+/// ticket-resolution time, so implementations must be cheap and
+/// nonblocking (the bus is a short mutex push + eventfd kick).
+///
+/// `conn`/`tag` are opaque subscriber-chosen routing words (the loop
+/// packs a generation-stamped connection token and a per-connection
+/// reply tag); the sink echoes them back so the subscriber can route
+/// the completion without a lookup.
+pub trait CompletionSink: Send + Sync {
+    fn complete(
+        &self,
+        conn: u64,
+        tag: u64,
+        ticket: Ticket,
+        result: Result<InvokeOutcome, ApiError>,
+    );
+}
 
 /// A serving frontend: submit work, redeem tickets, observe stats.
 ///
@@ -77,6 +97,28 @@ pub trait Frontend: Send + Sync {
     fn invoke(&self, func: &str, deadline: Option<Duration>) -> Result<InvokeOutcome, ApiError> {
         let ticket = self.submit(func)?;
         self.wait(ticket, deadline)
+    }
+
+    /// Register a completion subscription: when `ticket` resolves,
+    /// deliver the outcome to `sink` (echoing the opaque `conn`/`tag`
+    /// routing words) instead of blocking a thread in [`Self::wait`].
+    /// An already-resolved ticket is delivered immediately *without*
+    /// claiming it — the claim happens on the subscriber's side once
+    /// the reply actually reaches a live connection, preserving the
+    /// redeem-after-deadline and redeem-after-disconnect guarantees.
+    ///
+    /// Default rejects: a frontend without push support (e.g. a test
+    /// mock) makes subscription a client error, not a panic.
+    fn subscribe(
+        &self,
+        _ticket: Ticket,
+        _sink: Arc<dyn CompletionSink>,
+        _conn: u64,
+        _tag: u64,
+    ) -> Result<(), ApiError> {
+        Err(ApiError::BadRequest {
+            detail: "this frontend does not support push completions".into(),
+        })
     }
 
     // --- elastic membership (admin verbs) ---------------------------

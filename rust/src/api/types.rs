@@ -75,6 +75,12 @@ pub enum Request {
         /// exceeded ⇒ [`ApiError::DeadlineExceeded`] (the invocation
         /// itself still runs to completion — no preemption, §4.4).
         deadline_ms: Option<u64>,
+        /// Async mode, event-loop servers only: subscribe at submit.
+        /// The `Accepted` reply is followed — on this connection,
+        /// whenever the invocation finishes — by an unsolicited
+        /// [`Response::Push`] completion notification, replacing
+        /// wait-with-deadline polling.
+        push: bool,
     },
     /// Block until the ticket's invocation completes (optionally bounded).
     Wait {
@@ -319,6 +325,10 @@ pub enum Response {
     /// Reply to `drain`/`join`/`kill`/`membership`: the post-change
     /// membership snapshot.
     Membership(MembershipInfo),
+    /// Server-push completion notification for a ticket submitted with
+    /// `push: true` — arrives unsolicited (not paired to a request
+    /// line), tagged by its ticket. Event-loop servers only.
+    Push(InvokeOutcome),
     /// Connection-close acknowledgement.
     Bye,
     Error(ApiError),
@@ -351,6 +361,12 @@ pub enum ApiError {
         ticket: Option<Ticket>,
     },
     ShuttingDown,
+    /// The client stopped reading its socket while replies kept
+    /// queueing; past the per-connection outbound high-water mark the
+    /// event loop cuts the connection (a stalled reader must not pin
+    /// server memory). Delivery of this error is best-effort — the
+    /// receiver is, by definition, not reading.
+    SlowConsumer { queued: usize, limit: usize },
     /// Malformed request (bad JSON, missing field, unknown command).
     BadRequest { detail: String },
     /// Client-side transport failure (connect/read/write).
@@ -368,6 +384,7 @@ impl ApiError {
             ApiError::ShardLost { .. } => "shard-lost",
             ApiError::DeadlineExceeded { .. } => "deadline-exceeded",
             ApiError::ShuttingDown => "shutting-down",
+            ApiError::SlowConsumer { .. } => "slow-consumer",
             ApiError::BadRequest { .. } => "bad-request",
             ApiError::Io { .. } => "io",
         }
@@ -399,6 +416,9 @@ impl ApiError {
                 None => format!("waited {waited_ms} ms"),
             },
             ApiError::ShuttingDown => "server is shutting down".into(),
+            ApiError::SlowConsumer { queued, limit } => {
+                format!("{queued} outbound bytes queued > limit {limit}")
+            }
             ApiError::BadRequest { detail } => detail.clone(),
             ApiError::Io { detail } => detail.clone(),
         }
@@ -457,6 +477,18 @@ impl ApiError {
                 ticket: None,
             },
             "shutting-down" => ApiError::ShuttingDown,
+            "slow-consumer" => ApiError::SlowConsumer {
+                queued: detail
+                    .split_whitespace()
+                    .next()
+                    .and_then(|w| w.parse().ok())
+                    .unwrap_or(0),
+                limit: detail
+                    .rsplit(' ')
+                    .next()
+                    .and_then(|w| w.parse().ok())
+                    .unwrap_or(0),
+            },
             "io" => ApiError::Io {
                 detail: detail.to_string(),
             },
@@ -504,6 +536,10 @@ mod tests {
                 ticket: Some(Ticket(3)),
             },
             ApiError::ShuttingDown,
+            ApiError::SlowConsumer {
+                queued: 300_000,
+                limit: 262_144,
+            },
             ApiError::BadRequest { detail: "d".into() },
             ApiError::Io { detail: "d".into() },
         ];
@@ -536,6 +572,11 @@ mod tests {
             evicted: true,
         };
         assert_eq!(ApiError::from_wire(ev.code(), &ev.detail()), ev);
+        let sc = ApiError::SlowConsumer {
+            queued: 300_000,
+            limit: 262_144,
+        };
+        assert_eq!(ApiError::from_wire(sc.code(), &sc.detail()), sc);
     }
 
     #[test]

@@ -123,6 +123,13 @@ impl<'a> JVal<'a> {
             _ => None,
         }
     }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        match self.get(key) {
+            Some(JVal::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
 }
 
 /// Parse one JSON document into the borrowed form (the zero-copy fast
@@ -506,6 +513,19 @@ fn push_num_field(out: &mut String, key: &str, val: f64) {
     json::write_f64(out, val);
 }
 
+/// The shared field block of `done` and `push` replies (field order is
+/// part of the pinned wire bytes).
+fn push_outcome_fields(out: &mut String, o: &InvokeOutcome) {
+    push_int_field(out, "ticket", o.ticket.0 as i64);
+    push_str_field(out, "func", &o.func);
+    push_int_field(out, "shard", o.shard as i64);
+    push_int_field(out, "gpu", o.gpu as i64);
+    push_key(out, "start");
+    let _ = write!(out, "\"{}\"", o.start_kind);
+    push_num_field(out, "latency_ms", o.latency_ms);
+    push_num_field(out, "exec_ms", o.exec_ms);
+}
+
 // ---------------------------------------------------------------------
 // Request codec.
 // ---------------------------------------------------------------------
@@ -521,6 +541,7 @@ enum ReqRef<'a> {
         func: &'a str,
         mode: InvokeMode,
         deadline_ms: Option<u64>,
+        push: bool,
     },
     Wait {
         ticket: Ticket,
@@ -584,10 +605,18 @@ fn decode_request_ref<'b>(v: &'b JVal<'_>) -> Result<ReqRef<'b>, ApiError> {
                 Some(m) => InvokeMode::parse(m)
                     .ok_or_else(|| bad(format!("invoke: unknown mode {m}")))?,
             };
+            let push = v.get_bool("push").unwrap_or(false);
+            // A push subscription needs a ticket to notify on; sync
+            // invokes already block for their outcome. Reject rather
+            // than silently downgrade.
+            if push && matches!(mode, InvokeMode::Sync) {
+                return Err(bad("invoke: push requires mode \"async\"".into()));
+            }
             ReqRef::Invoke {
                 func,
                 mode,
                 deadline_ms: v.get_u64("deadline_ms"),
+                push,
             }
         }
         "wait" => ReqRef::Wait {
@@ -644,12 +673,19 @@ pub fn encode_request_into(req: &Request, out: &mut String) {
             func,
             mode,
             deadline_ms,
+            push,
         } => {
             cmd(out, "invoke");
             push_str_field(out, "func", func);
             push_str_field(out, "mode", mode.name());
             if let Some(d) = deadline_ms {
                 push_int_field(out, "deadline_ms", *d as i64);
+            }
+            // Emitted only when set: non-push invoke lines (the only
+            // kind legacy lockstep clients send) are byte-unchanged.
+            if *push {
+                push_key(out, "push");
+                out.push_str("true");
             }
         }
         Request::Wait {
@@ -700,6 +736,19 @@ pub fn encode_request(req: &Request) -> String {
     out
 }
 
+/// Encode one request with a leading client-chosen `"id"` field — the
+/// pipelining correlation tag the server echoes back on the matching
+/// reply, so responses can be consumed out of order.
+pub fn encode_request_tagged_into(req: &Request, id: u64, out: &mut String) {
+    out.push_str("{\"id\":");
+    let _ = write!(out, "{id}");
+    let start = out.len();
+    encode_request_into(req, out);
+    // The plain encoder opened its own object; fold the two together
+    // (both bytes are single ASCII chars, so this is an in-place swap).
+    out.replace_range(start..start + 1, ",");
+}
+
 /// Decode one v1 request line (must start with `{`) into the owned
 /// [`Request`]. The server's own loop uses the borrowed decode and
 /// never materializes this form.
@@ -714,10 +763,12 @@ pub fn decode_request(line: &str) -> Result<Request, ApiError> {
             func,
             mode,
             deadline_ms,
+            push,
         } => Request::Invoke {
             func: func.to_string(),
             mode,
             deadline_ms,
+            push,
         },
         ReqRef::Wait {
             ticket,
@@ -781,14 +832,11 @@ pub fn encode_response_into(resp: &Response, out: &mut String) {
         }
         Response::Done(o) => {
             push_str_field(out, "type", "done");
-            push_int_field(out, "ticket", o.ticket.0 as i64);
-            push_str_field(out, "func", &o.func);
-            push_int_field(out, "shard", o.shard as i64);
-            push_int_field(out, "gpu", o.gpu as i64);
-            push_key(out, "start");
-            let _ = write!(out, "\"{}\"", o.start_kind);
-            push_num_field(out, "latency_ms", o.latency_ms);
-            push_num_field(out, "exec_ms", o.exec_ms);
+            push_outcome_fields(out, o);
+        }
+        Response::Push(o) => {
+            push_str_field(out, "type", "push");
+            push_outcome_fields(out, o);
         }
         Response::Pending { ticket } => {
             push_str_field(out, "type", "pending");
@@ -906,6 +954,60 @@ pub fn encode_response(resp: &Response) -> String {
     out
 }
 
+/// Encode one response, echoing the request's correlation `id` right
+/// after the `ok` flag. `id: None` produces bytes identical to
+/// [`encode_response_into`] — untagged (lockstep) requests get
+/// untagged replies.
+pub fn encode_response_tagged_into(resp: &Response, id: Option<u64>, out: &mut String) {
+    let base = out.len();
+    encode_response_into(resp, out);
+    let Some(id) = id else { return };
+    let prefix = if matches!(resp, Response::Error(_)) {
+        "{\"ok\":false".len()
+    } else {
+        "{\"ok\":true".len()
+    };
+    // Format the tag on the stack, then splice once: no heap traffic
+    // beyond the (amortized) reply buffer itself.
+    let mut buf = [0u8; 32];
+    let tag = {
+        use std::io::Write as _;
+        let mut cur = std::io::Cursor::new(&mut buf[..]);
+        let _ = write!(cur, ",\"id\":{id}");
+        let len = cur.position() as usize;
+        std::str::from_utf8(&buf[..len]).expect("ascii tag")
+    };
+    out.insert_str(base + prefix, tag);
+}
+
+/// Client-side decode of a possibly-tagged response line: the echoed
+/// correlation id (None on lockstep replies and server-push lines)
+/// plus the response itself.
+pub fn decode_response_tagged(line: &str) -> Result<(Option<u64>, Response), String> {
+    let v = parse_jval(line)?;
+    let id = v.get_u64("id");
+    decode_response(line).map(|r| (id, r))
+}
+
+/// The shared outcome body of `done` and `push` replies.
+fn decode_outcome(v: &JVal<'_>) -> Result<InvokeOutcome, String> {
+    Ok(InvokeOutcome {
+        ticket: v
+            .get_u64("ticket")
+            .map(Ticket)
+            .ok_or("missing \"ticket\"")?,
+        func: v.get_str("func").unwrap_or("").to_string(),
+        shard: v.get_u64("shard").unwrap_or(0) as usize,
+        gpu: v.get_u64("gpu").unwrap_or(0) as u32,
+        start_kind: v
+            .get_str("start")
+            .and_then(StartKind::parse)
+            .ok_or("bad \"start\"")?,
+        latency_ms: v.get_f64("latency_ms").ok_or("missing \"latency_ms\"")?,
+        exec_ms: v.get_f64("exec_ms").unwrap_or(0.0),
+    })
+}
+
 /// Decode one response line (client side).
 pub fn decode_response(line: &str) -> Result<Response, String> {
     let v = parse_jval(line)?;
@@ -964,18 +1066,8 @@ pub fn decode_response(line: &str) -> Result<Response, String> {
             },
         }),
         "ticket" => Response::Accepted { ticket: ticket(&v)? },
-        "done" => Response::Done(InvokeOutcome {
-            ticket: ticket(&v)?,
-            func: v.get_str("func").unwrap_or("").to_string(),
-            shard: v.get_u64("shard").unwrap_or(0) as usize,
-            gpu: v.get_u64("gpu").unwrap_or(0) as u32,
-            start_kind: v
-                .get_str("start")
-                .and_then(StartKind::parse)
-                .ok_or("bad \"start\"")?,
-            latency_ms: v.get_f64("latency_ms").ok_or("missing \"latency_ms\"")?,
-            exec_ms: v.get_f64("exec_ms").unwrap_or(0.0),
-        }),
+        "done" => Response::Done(decode_outcome(&v)?),
+        "push" => Response::Push(decode_outcome(&v)?),
         "pending" => Response::Pending { ticket: ticket(&v)? },
         "stats" => Response::Stats(StatsSnapshot {
             invocations: v.get_u64("invocations").unwrap_or(0) as usize,
@@ -1115,6 +1207,59 @@ fn deadline(ms: Option<u64>) -> Option<Duration> {
     ms.map(Duration::from_millis)
 }
 
+/// The verbs whose reply needs no waiting — shared between the
+/// blocking loop and the event loop. `None` for the verbs whose
+/// handling differs between the two (`invoke`, `wait`, `quit`).
+fn handle_v1_immediate(frontend: &dyn Frontend, req: &ReqRef<'_>) -> Option<Response> {
+    Some(match *req {
+        ReqRef::Hello { version } => {
+            if version == 0 || version > PROTOCOL_VERSION {
+                Response::Error(ApiError::UnsupportedVersion {
+                    requested: version,
+                    supported: PROTOCOL_VERSION,
+                })
+            } else {
+                Response::Hello {
+                    proto: version,
+                    server: frontend.describe().server,
+                }
+            }
+        }
+        ReqRef::Describe => Response::Described(frontend.describe()),
+        ReqRef::Poll { ticket } => match frontend.poll(ticket) {
+            Ok(Some(o)) => Response::Done(o),
+            Ok(None) => Response::Pending { ticket },
+            Err(e) => Response::Error(e),
+        },
+        ReqRef::Stats => Response::Stats(frontend.stats()),
+        ReqRef::Metrics { format } => match frontend.metrics(format) {
+            Ok(body) => Response::Metrics { format, body },
+            Err(e) => Response::Error(e),
+        },
+        ReqRef::Trace { max } => match frontend.trace(max) {
+            Ok((dropped, events)) => Response::Trace { dropped, events },
+            Err(e) => Response::Error(e),
+        },
+        ReqRef::Drain { shard } => match frontend.drain(shard) {
+            Ok(m) => Response::Membership(m),
+            Err(e) => Response::Error(e),
+        },
+        ReqRef::Join { shard } => match frontend.join(shard) {
+            Ok(m) => Response::Membership(m),
+            Err(e) => Response::Error(e),
+        },
+        ReqRef::Kill { shard } => match frontend.kill(shard) {
+            Ok(m) => Response::Membership(m),
+            Err(e) => Response::Error(e),
+        },
+        ReqRef::Membership => match frontend.membership() {
+            Ok(m) => Response::Membership(m),
+            Err(e) => Response::Error(e),
+        },
+        ReqRef::Invoke { .. } | ReqRef::Wait { .. } | ReqRef::Shutdown => return None,
+    })
+}
+
 /// Handle one v1 line, appending the reply to `out`. Returns whether
 /// the connection should close. Decodes through the borrowed view, so
 /// the hot invoke path hands `func` to the frontend without copying it.
@@ -1129,24 +1274,15 @@ fn handle_v1(frontend: &dyn Frontend, line: &str, out: &mut String) -> bool {
     let resp = match req {
         Err(e) => Response::Error(e),
         Ok(req) => match req {
-            ReqRef::Hello { version } => {
-                if version == 0 || version > PROTOCOL_VERSION {
-                    Response::Error(ApiError::UnsupportedVersion {
-                        requested: version,
-                        supported: PROTOCOL_VERSION,
-                    })
-                } else {
-                    Response::Hello {
-                        proto: version,
-                        server: frontend.describe().server,
-                    }
-                }
-            }
-            ReqRef::Describe => Response::Described(frontend.describe()),
+            // Blocking loop: sync invoke and wait park this
+            // connection's thread in the frontend. (`push` is an
+            // event-loop feature — there is no unsolicited write slot
+            // on a lockstep connection — so it is ignored here.)
             ReqRef::Invoke {
                 func,
                 mode,
                 deadline_ms,
+                push: _,
             } => match frontend.submit(func) {
                 Err(e) => Response::Error(e),
                 Ok(ticket) => match mode {
@@ -1166,40 +1302,11 @@ fn handle_v1(frontend: &dyn Frontend, line: &str, out: &mut String) -> bool {
                 Ok(o) => Response::Done(o),
                 Err(e) => Response::Error(e),
             },
-            ReqRef::Poll { ticket } => match frontend.poll(ticket) {
-                Ok(Some(o)) => Response::Done(o),
-                Ok(None) => Response::Pending { ticket },
-                Err(e) => Response::Error(e),
-            },
-            ReqRef::Stats => Response::Stats(frontend.stats()),
-            ReqRef::Metrics { format } => match frontend.metrics(format) {
-                Ok(body) => Response::Metrics { format, body },
-                Err(e) => Response::Error(e),
-            },
-            ReqRef::Trace { max } => match frontend.trace(max) {
-                Ok((dropped, events)) => Response::Trace { dropped, events },
-                Err(e) => Response::Error(e),
-            },
-            ReqRef::Drain { shard } => match frontend.drain(shard) {
-                Ok(m) => Response::Membership(m),
-                Err(e) => Response::Error(e),
-            },
-            ReqRef::Join { shard } => match frontend.join(shard) {
-                Ok(m) => Response::Membership(m),
-                Err(e) => Response::Error(e),
-            },
-            ReqRef::Kill { shard } => match frontend.kill(shard) {
-                Ok(m) => Response::Membership(m),
-                Err(e) => Response::Error(e),
-            },
-            ReqRef::Membership => match frontend.membership() {
-                Ok(m) => Response::Membership(m),
-                Err(e) => Response::Error(e),
-            },
             ReqRef::Shutdown => {
                 encode_response_into(&Response::Bye, out);
                 return true;
             }
+            ref other => handle_v1_immediate(frontend, other).expect("immediate verb"),
         },
     };
     encode_response_into(&resp, out);
@@ -1216,19 +1323,8 @@ fn handle_legacy(frontend: &dyn Frontend, line: &str, out: &mut String) -> bool 
         Some("invoke") => match parts.next() {
             None => out.push_str("err unknown function"),
             Some(name) => match frontend.invoke(name, None) {
-                Ok(o) => {
-                    let _ = write!(
-                        out,
-                        "ok {:.1} {:.1} {} gpu{}",
-                        o.latency_ms, o.exec_ms, o.start_kind, o.gpu
-                    );
-                }
-                Err(ApiError::UnknownFunction { .. }) => {
-                    out.push_str("err unknown function")
-                }
-                Err(e) => {
-                    let _ = write!(out, "err {}", e.code());
-                }
+                Ok(o) => encode_legacy_outcome_into(&o, out),
+                Err(e) => encode_legacy_error_into(&e, out),
             },
         },
         Some("stats") => {
@@ -1245,6 +1341,162 @@ fn handle_legacy(frontend: &dyn Frontend, line: &str, out: &mut String) -> bool 
         }
     }
     false
+}
+
+/// The legacy `ok ...` completion line (no trailing newline). Factored
+/// out so the event loop's deferred path emits byte-identical replies
+/// to the blocking loop — the legacy-compat pin covers both.
+pub fn encode_legacy_outcome_into(o: &InvokeOutcome, out: &mut String) {
+    let _ = write!(
+        out,
+        "ok {:.1} {:.1} {} gpu{}",
+        o.latency_ms, o.exec_ms, o.start_kind, o.gpu
+    );
+}
+
+/// The legacy `err ...` line for a failed invoke (no trailing newline).
+pub fn encode_legacy_error_into(e: &ApiError, out: &mut String) {
+    match e {
+        ApiError::UnknownFunction { .. } => out.push_str("err unknown function"),
+        e => {
+            let _ = write!(out, "err {}", e.code());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Deferred dispatch: the event loop's per-line entry point.
+// ---------------------------------------------------------------------
+
+/// How a deferred reply should be rendered when its ticket resolves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplyFormat {
+    /// v1 JSON line, echoing the request's correlation id (if any).
+    V1 { id: Option<u64> },
+    /// Legacy `ok ...` / `err ...` word line.
+    Legacy,
+}
+
+/// What the event loop must do after dispatching one request line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopAction {
+    /// The reply (possibly empty, e.g. legacy `quit`) is already in
+    /// `out`; optionally close after flushing it.
+    Replied { close: bool },
+    /// Nothing written yet: subscribe to `ticket` and render the reply
+    /// in `format` when it resolves (or when `deadline` fires).
+    AwaitCompletion {
+        ticket: Ticket,
+        deadline: Option<Duration>,
+        format: ReplyFormat,
+    },
+    /// The `Accepted` reply is already in `out`; additionally
+    /// subscribe to `ticket` and emit a `push` notification line
+    /// (tagged `id`) when it completes.
+    Subscribe { ticket: Ticket, id: Option<u64> },
+}
+
+/// Dispatch one request line without ever blocking: the nonblocking
+/// twin of the `handle_v1`/`handle_legacy` pair, sharing their codecs
+/// and verb handlers so replies are byte-identical. Blocking verbs
+/// (sync `invoke`, `wait`, legacy `invoke`) return
+/// [`LoopAction::AwaitCompletion`] instead of parking the thread.
+pub fn handle_line_deferred(frontend: &dyn Frontend, line: &str, out: &mut String) -> LoopAction {
+    if line.starts_with('{') {
+        handle_v1_deferred(frontend, line, out)
+    } else {
+        handle_legacy_deferred(frontend, line, out)
+    }
+}
+
+fn handle_v1_deferred(frontend: &dyn Frontend, line: &str, out: &mut String) -> LoopAction {
+    let parsed = parse_jval(line).map_err(|e| ApiError::BadRequest {
+        detail: format!("bad JSON: {e}"),
+    });
+    let (id, req) = match &parsed {
+        Err(e) => (None, Err(e.clone())),
+        Ok(v) => (v.get_u64("id"), decode_request_ref(v)),
+    };
+    let resp = match req {
+        Err(e) => Response::Error(e),
+        Ok(req) => match req {
+            ReqRef::Invoke {
+                func,
+                mode,
+                deadline_ms,
+                push,
+            } => match frontend.submit(func) {
+                Err(e) => Response::Error(e),
+                Ok(ticket) => match mode {
+                    InvokeMode::Sync => {
+                        return LoopAction::AwaitCompletion {
+                            ticket,
+                            deadline: deadline(deadline_ms),
+                            format: ReplyFormat::V1 { id },
+                        }
+                    }
+                    InvokeMode::Async => {
+                        encode_response_tagged_into(&Response::Accepted { ticket }, id, out);
+                        if push {
+                            return LoopAction::Subscribe { ticket, id };
+                        }
+                        return LoopAction::Replied { close: false };
+                    }
+                },
+            },
+            ReqRef::Wait {
+                ticket,
+                deadline_ms,
+            } => {
+                return LoopAction::AwaitCompletion {
+                    ticket,
+                    deadline: deadline(deadline_ms),
+                    format: ReplyFormat::V1 { id },
+                }
+            }
+            ReqRef::Shutdown => {
+                encode_response_tagged_into(&Response::Bye, id, out);
+                return LoopAction::Replied { close: true };
+            }
+            ref other => handle_v1_immediate(frontend, other).expect("immediate verb"),
+        },
+    };
+    encode_response_tagged_into(&resp, id, out);
+    LoopAction::Replied { close: false }
+}
+
+fn handle_legacy_deferred(frontend: &dyn Frontend, line: &str, out: &mut String) -> LoopAction {
+    let mut parts = line.split_whitespace();
+    match parts.next() {
+        // Legacy invoke is sync-with-no-deadline: defer the `ok` line
+        // to completion time instead of blocking the loop.
+        Some("invoke") => match parts.next() {
+            None => out.push_str("err unknown function"),
+            Some(name) => match frontend.submit(name) {
+                Ok(ticket) => {
+                    return LoopAction::AwaitCompletion {
+                        ticket,
+                        deadline: None,
+                        format: ReplyFormat::Legacy,
+                    }
+                }
+                Err(e) => encode_legacy_error_into(&e, out),
+            },
+        },
+        Some("stats") => {
+            let s = frontend.stats();
+            let _ = write!(
+                out,
+                "ok invocations={} mean_latency_ms={:.1} cold_ratio={:.3}",
+                s.invocations, s.mean_latency_ms, s.cold_ratio
+            );
+        }
+        Some("quit") | None => return LoopAction::Replied { close: true },
+        Some(other) => {
+            let _ = write!(out, "err unknown command {other}");
+        }
+    }
+    LoopAction::Replied { close: false }
 }
 
 #[cfg(test)]
@@ -1368,11 +1620,19 @@ mod tests {
                 func: "fft-0".into(),
                 mode: InvokeMode::Sync,
                 deadline_ms: Some(5000),
+                push: false,
             },
             Request::Invoke {
                 func: "lud-0".into(),
                 mode: InvokeMode::Async,
                 deadline_ms: None,
+                push: false,
+            },
+            Request::Invoke {
+                func: "lud-0".into(),
+                mode: InvokeMode::Async,
+                deadline_ms: None,
+                push: true,
             },
             Request::Wait {
                 ticket: Ticket(7),
@@ -1408,7 +1668,8 @@ mod tests {
             Request::Invoke {
                 func: "f".into(),
                 mode: InvokeMode::Sync,
-                deadline_ms: None
+                deadline_ms: None,
+                push: false,
             }
         );
         assert_eq!(
@@ -1423,6 +1684,8 @@ mod tests {
             r#"{"cmd":"warp"}"#,
             r#"{"cmd":"invoke"}"#,
             r#"{"cmd":"invoke","func":"f","mode":"batch"}"#,
+            r#"{"cmd":"invoke","func":"f","mode":"sync","push":true}"#,
+            r#"{"cmd":"invoke","func":"f","push":true}"#,
             r#"{"cmd":"wait"}"#,
             // A present-but-malformed hello version must not silently
             // negotiate to the default.
@@ -1478,6 +1741,15 @@ mod tests {
                 start_kind: StartKind::HostWarm,
                 latency_ms: 412.25,
                 exec_ms: 9.5,
+            }),
+            Response::Push(InvokeOutcome {
+                ticket: Ticket(5),
+                func: "lud-0".into(),
+                shard: 0,
+                gpu: 0,
+                start_kind: StartKind::GpuWarm,
+                latency_ms: 3.5,
+                exec_ms: 1.25,
             }),
             Response::Pending { ticket: Ticket(4) },
             Response::Stats(StatsSnapshot {
@@ -1617,6 +1889,7 @@ mod tests {
             func: "fft-0".into(),
             mode: InvokeMode::Sync,
             deadline_ms: Some(5000),
+            push: false,
         };
         let req_tree = Json::Obj(vec![
             ("cmd".into(), Json::str("invoke")),
@@ -1722,5 +1995,186 @@ mod tests {
             panic!("ticket lost: {line}");
         };
         assert_eq!(t, Ticket(12));
+    }
+
+    #[test]
+    fn tagged_codecs_correlate_and_stay_byte_identical_untagged() {
+        // Untagged encode is the plain encode, byte for byte.
+        let resp = Response::Accepted { ticket: Ticket(9) };
+        let mut untagged = String::new();
+        encode_response_tagged_into(&resp, None, &mut untagged);
+        assert_eq!(untagged, encode_response(&resp));
+        // Tagged: the id rides right after the ok flag and round-trips.
+        let mut tagged = String::new();
+        encode_response_tagged_into(&resp, Some(41), &mut tagged);
+        assert!(tagged.starts_with("{\"ok\":true,\"id\":41,"), "{tagged}");
+        assert_eq!(decode_response_tagged(&tagged).unwrap(), (Some(41), resp));
+        // Errors keep their false prefix in front of the id.
+        let err = Response::Error(ApiError::ShuttingDown);
+        let mut line = String::new();
+        encode_response_tagged_into(&err, Some(7), &mut line);
+        assert!(line.starts_with("{\"ok\":false,\"id\":7,"), "{line}");
+        assert_eq!(decode_response_tagged(&line).unwrap(), (Some(7), err));
+        // Requests: same correlation field, still a decodable request.
+        let req = Request::Invoke {
+            func: "fft-0".into(),
+            mode: InvokeMode::Async,
+            deadline_ms: None,
+            push: true,
+        };
+        let mut rline = String::new();
+        encode_request_tagged_into(&req, 3, &mut rline);
+        assert!(rline.starts_with("{\"id\":3,\"cmd\":\"invoke\""), "{rline}");
+        assert_eq!(decode_request(&rline).unwrap(), req);
+    }
+
+    /// Minimal deferred-dispatch frontend: one known function whose
+    /// submissions never complete on their own (so nothing blocks).
+    struct StubFrontend;
+
+    impl Frontend for StubFrontend {
+        fn describe(&self) -> DescribeInfo {
+            DescribeInfo {
+                proto: PROTOCOL_VERSION,
+                server: "stub".into(),
+                policy: "none".into(),
+                shards: 1,
+                router: "single".into(),
+                functions: vec!["fft-0".into()],
+            }
+        }
+
+        fn submit(&self, func: &str) -> Result<Ticket, ApiError> {
+            if func == "fft-0" {
+                Ok(Ticket(77))
+            } else {
+                Err(ApiError::UnknownFunction { name: func.into() })
+            }
+        }
+
+        fn wait(
+            &self,
+            _t: Ticket,
+            _d: Option<Duration>,
+        ) -> Result<InvokeOutcome, ApiError> {
+            unreachable!("deferred dispatch must not block in wait")
+        }
+
+        fn poll(&self, t: Ticket) -> Result<Option<InvokeOutcome>, ApiError> {
+            Err(ApiError::UnknownTicket {
+                ticket: t,
+                evicted: false,
+            })
+        }
+
+        fn stats(&self) -> StatsSnapshot {
+            StatsSnapshot::default()
+        }
+
+        fn shutdown(&self) {}
+    }
+
+    #[test]
+    fn deferred_dispatch_never_blocks_and_tags_replies() {
+        let f = StubFrontend;
+        let mut out = String::new();
+        // Sync invoke: no bytes yet, a deferred v1 reply carrying the id.
+        let a = handle_line_deferred(&f, r#"{"id":4,"cmd":"invoke","func":"fft-0"}"#, &mut out);
+        assert_eq!(
+            a,
+            LoopAction::AwaitCompletion {
+                ticket: Ticket(77),
+                deadline: None,
+                format: ReplyFormat::V1 { id: Some(4) },
+            }
+        );
+        assert!(out.is_empty(), "{out}");
+        // Async + push: Accepted written now, subscription requested.
+        let a = handle_line_deferred(
+            &f,
+            r#"{"id":5,"cmd":"invoke","func":"fft-0","mode":"async","push":true}"#,
+            &mut out,
+        );
+        assert_eq!(
+            a,
+            LoopAction::Subscribe {
+                ticket: Ticket(77),
+                id: Some(5),
+            }
+        );
+        assert_eq!(
+            decode_response_tagged(&out).unwrap(),
+            (Some(5), Response::Accepted { ticket: Ticket(77) })
+        );
+        // Wait defers too; sync deadline_ms rides along.
+        out.clear();
+        let a = handle_line_deferred(&f, r#"{"cmd":"wait","ticket":77,"deadline_ms":250}"#, &mut out);
+        assert_eq!(
+            a,
+            LoopAction::AwaitCompletion {
+                ticket: Ticket(77),
+                deadline: Some(Duration::from_millis(250)),
+                format: ReplyFormat::V1 { id: None },
+            }
+        );
+        // Legacy invoke defers in the legacy reply format.
+        out.clear();
+        let a = handle_line_deferred(&f, "invoke fft-0", &mut out);
+        assert_eq!(
+            a,
+            LoopAction::AwaitCompletion {
+                ticket: Ticket(77),
+                deadline: None,
+                format: ReplyFormat::Legacy,
+            }
+        );
+        assert!(out.is_empty());
+        // Immediate verbs answer inline, errors carry the id, quits close.
+        out.clear();
+        let a = handle_line_deferred(&f, r#"{"id":9,"cmd":"invoke","func":"ghost"}"#, &mut out);
+        assert_eq!(a, LoopAction::Replied { close: false });
+        let (id, resp) = decode_response_tagged(&out).unwrap();
+        assert_eq!(id, Some(9));
+        assert!(matches!(
+            resp,
+            Response::Error(ApiError::UnknownFunction { .. })
+        ));
+        out.clear();
+        assert_eq!(
+            handle_line_deferred(&f, r#"{"cmd":"quit"}"#, &mut out),
+            LoopAction::Replied { close: true }
+        );
+        assert_eq!(decode_response(&out).unwrap(), Response::Bye);
+        out.clear();
+        assert_eq!(
+            handle_line_deferred(&f, "quit", &mut out),
+            LoopAction::Replied { close: true }
+        );
+        assert!(out.is_empty(), "legacy quit is silent");
+    }
+
+    #[test]
+    fn legacy_outcome_encoder_matches_the_blocking_loop() {
+        let o = InvokeOutcome {
+            ticket: Ticket(1),
+            func: "fft-0".into(),
+            shard: 0,
+            gpu: 2,
+            start_kind: StartKind::Cold,
+            latency_ms: 412.04,
+            exec_ms: 9.16,
+        };
+        let mut out = String::new();
+        encode_legacy_outcome_into(&o, &mut out);
+        assert_eq!(out, "ok 412.0 9.2 cold gpu2");
+        out.clear();
+        encode_legacy_error_into(
+            &ApiError::UnknownFunction { name: "x".into() },
+            &mut out,
+        );
+        assert_eq!(out, "err unknown function");
+        out.clear();
+        encode_legacy_error_into(&ApiError::ShuttingDown, &mut out);
+        assert_eq!(out, "err shutting-down");
     }
 }

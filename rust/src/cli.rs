@@ -107,21 +107,33 @@ USAGE:
   mqfq-sticky serve [--addr HOST:PORT] [--artifacts DIR] [--scale X]
         [--shards N] [--router rr|random|least|sticky|sticky-blind]
         [--load-factor F] [--seed K] [--max-pending N] [--workers W]
+        [--max-outbound BYTES]
         [+ plane options incl. --policy/--d/--fleet]
               real-traffic TCP serving: protocol v1 (JSON lines, hello
-              handshake, sync/async invoke tickets, deadlines; legacy
-              `invoke <fn>`|`stats`|`quit` lines kept as aliases).
+              handshake, sync/async invoke tickets, deadlines, request
+              pipelining with id-tagged replies, push completions;
+              legacy `invoke <fn>`|`stats`|`quit` lines kept as
+              aliases). All connections are multiplexed on one epoll
+              event-loop thread — serving threads stay shards x
+              workers + O(1) regardless of connection count.
               --shards >1 (or --router) serves an RtCluster: N control
               planes behind the live capacity-weighted router.
-              --workers sizes the fixed per-shard executor pool (thread
-              count is shards x workers + 1 timer, independent of load).
+              --workers sizes the fixed per-shard executor pool.
+              --max-outbound caps a connection's queued reply bytes;
+              a slower reader is disconnected past the high-water
+              mark (slow-client protection; default 256 KiB).
   mqfq-sticky invoke <fn> [--addr HOST:PORT] [--mode sync|async]
-        [--deadline-ms D] [--n N] [--retries K]   protocol-v1 client:
+        [--deadline-ms D] [--n N] [--retries K]
+        [--push 1] [--pipeline B]   protocol-v1 client:
               run N invocations against a running `serve`, print
               outcomes and aggregate server stats. --retries opts into
               bounded jittered-backoff retries of transient errors
               (overload/transport; off by default — an Io retry can
-              double-submit a sync invoke that already executed)
+              double-submit a sync invoke that already executed).
+              --push 1 subscribes at submit: completions arrive as
+              server-push notifications (no polling round trips).
+              --pipeline B submits in pipelined batches of B tagged
+              requests per flush (replies may return out of order)
   mqfq-sticky admin drain|join|kill SHARD [--addr HOST:PORT]
   mqfq-sticky admin membership [--addr HOST:PORT]
               elastic membership against a running `serve --shards N`:
@@ -487,6 +499,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if workers == 0 {
         return Err("serve: --workers must be >= 1".into());
     }
+    // 0 = keep the event loop's default outbound high-water mark.
+    let max_outbound = args.get_usize("max-outbound", 0)?;
+    let mut loop_cfg = crate::server::event_loop::LoopConfig::default();
+    if max_outbound > 0 {
+        loop_cfg.max_outbound = max_outbound;
+    }
     // Default demo workload: one copy of each catalog function.
     let mut w = crate::workload::Workload::default();
     for class in crate::workload::catalog::CATALOG {
@@ -507,7 +525,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         if max_pending > 0 {
             srv.set_max_pending(max_pending);
         }
-        let local = srv.serve(addr).map_err(|e| format!("binding {addr}: {e}"))?;
+        let local = srv
+            .serve_cfg(addr, loop_cfg)
+            .map_err(|e| format!("binding {addr}: {e}"))?;
         println!(
             "serving rt-cluster on {local}: {} shards, router {}, scale={scale}, \
              artifacts={artifacts_label}",
@@ -523,7 +543,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         if max_pending > 0 {
             srv.set_max_pending(max_pending);
         }
-        let local = srv.serve(addr).map_err(|e| format!("binding {addr}: {e}"))?;
+        let local = srv
+            .serve_cfg(addr, loop_cfg)
+            .map_err(|e| format!("binding {addr}: {e}"))?;
         println!(
             "serving rt-server on {local} (scale={scale}, artifacts={artifacts_label})"
         );
@@ -553,6 +575,13 @@ fn cmd_invoke(args: &Args) -> Result<(), String> {
         d => Some(d as u64),
     };
     let retries = args.get_usize("retries", 0)?;
+    // `--push 1` subscribes at submit and waits on server-push
+    // completions; `--pipeline B` submits in tagged batches of B.
+    let push = matches!(args.get("push"), Some("1" | "true" | "yes" | "on"));
+    let pipeline = args.get_usize("pipeline", 0)?; // 0 = lockstep
+    if push && pipeline > 0 {
+        return Err("invoke: --push and --pipeline are mutually exclusive".into());
+    }
     let mut client = crate::api::ApiClient::connect(addr)
         .map_err(|e| format!("connecting {addr}: {e}"))?;
     if retries > 0 {
@@ -564,29 +593,60 @@ fn cmd_invoke(args: &Args) -> Result<(), String> {
             o.ticket, o.func, o.start_kind, o.shard, o.gpu, o.latency_ms, o.exec_ms
         );
     };
-    match args.get("mode").unwrap_or("sync") {
-        "sync" => {
-            for _ in 0..n {
-                let o = client
-                    .invoke(func, deadline_ms)
-                    .map_err(|e| format!("invoke {func}: {e}"))?;
-                print_outcome(&o);
-            }
+    if push {
+        let tickets: Vec<_> = (0..n)
+            .map(|_| client.invoke_push(func))
+            .collect::<Result<_, _>>()
+            .map_err(|e| format!("invoke {func}: {e}"))?;
+        println!("submitted {n} push-subscribed invocation(s) of {func}");
+        for t in tickets {
+            let o = client
+                .wait_push(t)
+                .map_err(|e| format!("wait-push {t}: {e}"))?;
+            print_outcome(&o);
         }
-        "async" => {
-            let tickets: Vec<_> = (0..n)
-                .map(|_| client.invoke_async(func))
-                .collect::<Result<_, _>>()
-                .map_err(|e| format!("invoke {func}: {e}"))?;
-            println!("submitted {n} async invocation(s) of {func}");
+    } else if pipeline > 0 {
+        let mut done = 0usize;
+        while done < n {
+            let batch = pipeline.min(n - done);
+            let funcs: Vec<&str> = std::iter::repeat(func.as_str()).take(batch).collect();
+            let tickets = client
+                .pipeline_invoke_async(&funcs)
+                .map_err(|e| format!("pipeline invoke {func}: {e}"))?;
             for t in tickets {
                 let o = client
                     .wait(t, deadline_ms)
                     .map_err(|e| format!("wait {t}: {e}"))?;
                 print_outcome(&o);
             }
+            done += batch;
         }
-        m => return Err(format!("unknown mode {m} (sync|async)")),
+        println!("pipelined {n} invocation(s) of {func} in batches of {pipeline}");
+    } else {
+        match args.get("mode").unwrap_or("sync") {
+            "sync" => {
+                for _ in 0..n {
+                    let o = client
+                        .invoke(func, deadline_ms)
+                        .map_err(|e| format!("invoke {func}: {e}"))?;
+                    print_outcome(&o);
+                }
+            }
+            "async" => {
+                let tickets: Vec<_> = (0..n)
+                    .map(|_| client.invoke_async(func))
+                    .collect::<Result<_, _>>()
+                    .map_err(|e| format!("invoke {func}: {e}"))?;
+                println!("submitted {n} async invocation(s) of {func}");
+                for t in tickets {
+                    let o = client
+                        .wait(t, deadline_ms)
+                        .map_err(|e| format!("wait {t}: {e}"))?;
+                    print_outcome(&o);
+                }
+            }
+            m => return Err(format!("unknown mode {m} (sync|async)")),
+        }
     }
     let s = client.stats().map_err(|e| format!("stats: {e}"))?;
     println!(

@@ -24,6 +24,21 @@
 //! figure. Set `SERVING_QUICK=1` for a seconds-scale smoke run
 //! (CI): smaller volumes, no gates.
 //!
+//! Two axes added with the epoll serving front end:
+//!
+//! * **Connection scaling** — the same total invoke volume spread over
+//!   100 → 1k → 10k live connections (a fixed driver pool multiplexes
+//!   them, so client-side threading stays constant while the *server*
+//!   sees the full connection count). The event loop's promise is that
+//!   throughput stays flat (within [`CONN_FLAT_GATE`]) across the axis
+//!   and serving-side threads stay `shards × workers + O(1)` — both
+//!   gated, the thread bound unconditionally (it is not
+//!   timing-sensitive).
+//! * **Push vs poll** — the async-ticket mix re-run with push
+//!   subscriptions (`invoke_push`/`wait_push`: one submit round trip,
+//!   completion pushed by the server) against the two-round-trip
+//!   ticket+wait baseline; release gate holds push p99 ≤ polling p99.
+//!
 //! Model time is scaled so far down that modeled service is negligible
 //! against the wire path — the numbers isolate the serving envelope,
 //! not the GPU model.
@@ -52,6 +67,17 @@ pub const SCALE_GATE: f64 = 2.0;
 /// release mode. Deliberately generous — loopback TCP on any modern
 /// machine clears this by orders of magnitude.
 pub const MIN_THROUGHPUT: f64 = 1_000.0;
+
+/// Release-mode connection-scaling gate: throughput at the largest
+/// connection count must hold ≥ this fraction of the smallest-count
+/// row ("flat within 20%").
+pub const CONN_FLAT_GATE: f64 = 0.8;
+
+/// O(1) slack on the serving-thread bound: timer + poller + accept-side
+/// bookkeeping. The exact expectation is `shards × workers` executors
+/// plus one monitor per shard plus timer and poller; the slack absorbs
+/// transient runtime threads without hiding a per-connection leak.
+pub const THREAD_SLACK: usize = 4;
 
 /// Functions registered for the sweep (clients round-robin over them,
 /// so sticky routing spreads load across shard homes).
@@ -104,12 +130,17 @@ fn start_target(shards: usize) -> (Target, SocketAddr) {
 /// One measured shape of the sweep.
 #[derive(Debug, Clone)]
 pub struct ServingRow {
-    /// Identity: "sync-closed" | "async-closed" | "open".
+    /// Identity: "sync-closed" | "async-closed" | "push-closed" |
+    /// "open" | "conn-scale".
     pub shape: &'static str,
     /// Identity: loop discipline, "closed" | "open".
     pub loop_mode: &'static str,
     pub shards: usize,
     pub clients: usize,
+    /// Identity: live server-side connections during the measurement
+    /// (== driving clients except on the conn-scale axis, where a
+    /// fixed driver pool multiplexes many connections).
+    pub connections: usize,
     pub invokes: usize,
     pub wall_s: f64,
     /// Completed invokes per wall second.
@@ -117,6 +148,9 @@ pub struct ServingRow {
     /// Wire latency percentiles (ms): request issue → completion reply.
     pub p50_ms: f64,
     pub p99_ms: f64,
+    /// Serving-side thread count measured with every connection open
+    /// (0 = not sampled for this shape).
+    pub server_threads: usize,
 }
 
 fn row(
@@ -134,11 +168,13 @@ fn row(
         loop_mode,
         shards,
         clients,
+        connections: clients,
         invokes: lats_ms.len(),
         wall_s,
         throughput: lats_ms.len() as f64 / wall_s,
         p50_ms: p[0],
         p99_ms: p[1],
+        server_threads: 0,
     }
 }
 
@@ -188,6 +224,102 @@ pub fn closed_loop_async(shards: usize, clients: usize, per_client: usize) -> Se
     .collect();
     let lats = join_all(clients_spawned);
     row("async-closed", "closed", shards, clients, t0.elapsed(), lats)
+}
+
+/// Closed loop, push-subscribed: each iteration submits with a push
+/// subscription and blocks on the server-push completion — one round
+/// trip plus a push line, against `async-closed`'s two round trips.
+pub fn closed_loop_push(shards: usize, clients: usize, per_client: usize) -> ServingRow {
+    let (_guard, addr) = start_target(shards);
+    let t0 = Instant::now();
+    let clients_spawned: Vec<_> = (0..clients).map(|c| {
+        thread::spawn(move || {
+            let mut cl = ApiClient::connect(addr).unwrap();
+            let func = func_name(c);
+            let mut lats = Vec::with_capacity(per_client);
+            for _ in 0..per_client {
+                let s = Instant::now();
+                let t = cl.invoke_push(&func).unwrap();
+                cl.wait_push(t).unwrap();
+                lats.push(s.elapsed().as_secs_f64() * 1e3);
+            }
+            lats
+        })
+    })
+    .collect();
+    let lats = join_all(clients_spawned);
+    row("push-closed", "closed", shards, clients, t0.elapsed(), lats)
+}
+
+/// This process's live thread count (`/proc/self/status`).
+fn process_threads() -> usize {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find_map(|l| l.strip_prefix("Threads:"))
+                .and_then(|v| v.trim().parse().ok())
+        })
+        .unwrap_or(0)
+}
+
+/// How many driver threads multiplex the conn-scale connection fleet —
+/// fixed so client-side parallelism is identical at every point on the
+/// axis and only the server-visible connection count varies.
+const CONN_DRIVERS: usize = 8;
+
+/// Connection-scaling shape: `connections` live sockets spread over
+/// [`CONN_DRIVERS`] driver threads, each driver round-robining sync
+/// invokes across its share until the fleet completes
+/// `total_invokes`. Every connection is opened (and kept open) before
+/// the clock starts, and the serving-side thread count is sampled with
+/// the whole fleet connected — the event loop must not have grown a
+/// thread per connection.
+pub fn conn_scaling(shards: usize, connections: usize, total_invokes: usize) -> ServingRow {
+    // 10k sockets need headroom over the default 1024 soft limit; both
+    // ends of every loopback connection live in this process.
+    crate::server::event_loop::raise_nofile_limit(connections as u64 * 2 + 512);
+    let base_threads = process_threads();
+    let (_guard, addr) = start_target(shards);
+    let drivers = CONN_DRIVERS.min(connections.max(1));
+    // Two rendezvous: (1) every connection open, main samples the
+    // thread count; (2) drivers released into the measured loop.
+    let barrier = std::sync::Arc::new(std::sync::Barrier::new(drivers + 1));
+    let handles: Vec<_> = (0..drivers)
+        .map(|d| {
+            let barrier = std::sync::Arc::clone(&barrier);
+            thread::spawn(move || {
+                let n_conns = connections / drivers + usize::from(d < connections % drivers);
+                let quota = total_invokes / drivers + usize::from(d < total_invokes % drivers);
+                let mut conns: Vec<ApiClient> = (0..n_conns)
+                    .map(|_| ApiClient::connect(addr).unwrap())
+                    .collect();
+                barrier.wait(); // fleet fully connected
+                barrier.wait(); // thread count sampled; measure
+                let mut lats = Vec::with_capacity(quota);
+                for k in 0..quota {
+                    let c = k % conns.len().max(1);
+                    let func = func_name(d + c * CONN_DRIVERS);
+                    let s = Instant::now();
+                    conns[c].invoke(&func, Some(60_000)).unwrap();
+                    lats.push(s.elapsed().as_secs_f64() * 1e3);
+                }
+                lats
+            })
+        })
+        .collect();
+    barrier.wait();
+    // Everything above base + drivers belongs to the serving side
+    // (executors, monitors, timer, poller) — per-connection threads
+    // would show up here.
+    let server_threads = process_threads().saturating_sub(base_threads + drivers);
+    barrier.wait();
+    let t0 = Instant::now();
+    let lats = join_all(handles);
+    let mut r = row("conn-scale", "closed", shards, drivers, t0.elapsed(), lats);
+    r.connections = connections;
+    r.server_threads = server_threads;
+    r
 }
 
 /// Open loop: each client pair is a paced submitter (async invokes on a
@@ -256,6 +388,10 @@ pub struct ServingReport {
     /// 4-shard sticky over 1-shard sync closed-loop throughput — the
     /// scaling headline the release gate holds.
     pub scale_4x1: f64,
+    /// Largest-connection-count conn-scale throughput over the
+    /// smallest — the "flat across the axis" headline
+    /// ([`CONN_FLAT_GATE`] holds this in release mode).
+    pub conn_flatness: f64,
 }
 
 fn find<'a>(rows: &'a [ServingRow], shape: &str, shards: usize) -> &'a ServingRow {
@@ -264,22 +400,54 @@ fn find<'a>(rows: &'a [ServingRow], shape: &str, shards: usize) -> &'a ServingRo
         .expect("sweep row present")
 }
 
-/// Run the sweep. `quick` shrinks volumes to a seconds-scale smoke
-/// (used by CI; gates are skipped by the caller in that mode).
+/// Run the sweep. `quick` shrinks volumes (and the connection axis) to
+/// a seconds-scale smoke (used by CI; timing gates are skipped by the
+/// caller in that mode — the thread-bound assertion still runs).
 pub fn collect(quick: bool) -> ServingReport {
     let (sync_n, async_n, open_n) = if quick { (50, 30, 40) } else { (2_000, 1_000, 800) };
     let open_rate = if quick { 200.0 } else { 500.0 };
-    let rows = vec![
+    let (conn_axis, conn_total): (&[usize], usize) = if quick {
+        (&[10, 50, 200], 800)
+    } else {
+        (&[100, 1_000, 10_000], 16_000)
+    };
+    let mut rows = vec![
         closed_loop_sync(1, 4, sync_n),
         closed_loop_sync(4, 16, sync_n),
         closed_loop_async(1, 4, async_n),
         closed_loop_async(4, 16, async_n),
+        closed_loop_push(1, 4, async_n),
+        closed_loop_push(4, 16, async_n),
         open_loop(1, 4, open_rate, open_n),
         open_loop(4, 8, open_rate, open_n),
     ];
+    for &conns in conn_axis {
+        rows.push(conn_scaling(1, conns, conn_total));
+    }
+    // The thread bound is structural, not timing-sensitive: hold it on
+    // every run (quick and debug included). A per-connection thread
+    // leak would blow this up by orders of magnitude at 10k.
+    let expected =
+        crate::server::DEFAULT_WORKERS /* executors, 1 shard */ + 1 /* monitor */ + THREAD_SLACK;
+    for r in rows.iter().filter(|r| r.shape == "conn-scale") {
+        assert!(
+            r.server_threads <= expected,
+            "serving threads grew with connections: {} threads at {} conns \
+             (bound {expected} = shards*workers + O(1))",
+            r.server_threads,
+            r.connections
+        );
+    }
     let scale_4x1 = find(&rows, "sync-closed", 4).throughput
         / find(&rows, "sync-closed", 1).throughput.max(1e-9);
-    ServingReport { rows, scale_4x1 }
+    let conn_rows: Vec<&ServingRow> = rows.iter().filter(|r| r.shape == "conn-scale").collect();
+    let conn_flatness = conn_rows.last().expect("conn-scale rows").throughput
+        / conn_rows.first().expect("conn-scale rows").throughput.max(1e-9);
+    ServingReport {
+        rows,
+        scale_4x1,
+        conn_flatness,
+    }
 }
 
 /// Machine-readable form of the report (`BENCH_serving.json`).
@@ -293,6 +461,7 @@ pub fn report_json(r: &ServingReport) -> Json {
                 ("loop".into(), Json::str(row.loop_mode)),
                 ("shards".into(), Json::Int(row.shards as i64)),
                 ("clients".into(), Json::Int(row.clients as i64)),
+                ("connections".into(), Json::Int(row.connections as i64)),
                 ("invokes".into(), Json::Int(row.invokes as i64)),
                 ("wall_s".into(), Json::Num(row.wall_s)),
                 (
@@ -301,6 +470,10 @@ pub fn report_json(r: &ServingReport) -> Json {
                 ),
                 ("p50_ms".into(), Json::Num(row.p50_ms)),
                 ("p99_ms".into(), Json::Num(row.p99_ms)),
+                (
+                    "server_threads".into(),
+                    Json::Int(row.server_threads as i64),
+                ),
             ])
         })
         .collect();
@@ -311,18 +484,31 @@ pub fn report_json(r: &ServingReport) -> Json {
             "throughput_ratio_4shard_over_1shard".into(),
             Json::Num(r.scale_4x1),
         ),
+        (
+            "conn_scale_throughput_ratio_max_over_min".into(),
+            Json::Num(r.conn_flatness),
+        ),
     ])
 }
 
 fn print_rows(rows: &[ServingRow]) {
     println!(
-        "{:<14} {:>6} {:>8} {:>9} {:>12} {:>10} {:>10}",
-        "shape", "shards", "clients", "invokes", "invokes/s", "p50(ms)", "p99(ms)"
+        "{:<14} {:>6} {:>8} {:>7} {:>9} {:>12} {:>10} {:>10} {:>8}",
+        "shape", "shards", "clients", "conns", "invokes", "invokes/s", "p50(ms)", "p99(ms)",
+        "threads"
     );
     for r in rows {
         println!(
-            "{:<14} {:>6} {:>8} {:>9} {:>12.0} {:>10.3} {:>10.3}",
-            r.shape, r.shards, r.clients, r.invokes, r.throughput, r.p50_ms, r.p99_ms
+            "{:<14} {:>6} {:>8} {:>7} {:>9} {:>12.0} {:>10.3} {:>10.3} {:>8}",
+            r.shape,
+            r.shards,
+            r.clients,
+            r.connections,
+            r.invokes,
+            r.throughput,
+            r.p50_ms,
+            r.p99_ms,
+            r.server_threads
         );
     }
 }
@@ -338,6 +524,10 @@ pub fn main() {
     println!(
         "4-shard sticky / 1-shard sync closed-loop throughput: {:.2}x",
         report.scale_4x1
+    );
+    println!(
+        "connection-scaling throughput (largest / smallest conn count): {:.2}x",
+        report.conn_flatness
     );
     match json::write_file("BENCH_serving.json", &report_json(&report)) {
         Ok(()) => println!("wrote BENCH_serving.json"),
@@ -357,6 +547,20 @@ pub fn main() {
             report.scale_4x1 >= SCALE_GATE,
             "4-shard sticky throughput only {:.2}x the 1-shard figure (gate {SCALE_GATE:.1}x)",
             report.scale_4x1
+        );
+        assert!(
+            report.conn_flatness >= CONN_FLAT_GATE,
+            "throughput at 10k connections fell to {:.2}x the 100-connection figure \
+             (gate {CONN_FLAT_GATE:.2}x)",
+            report.conn_flatness
+        );
+        let push = find(&report.rows, "push-closed", 4);
+        let poll = find(&report.rows, "async-closed", 4);
+        assert!(
+            push.p99_ms <= poll.p99_ms,
+            "push completion p99 {:.3} ms worse than ticket-polling p99 {:.3} ms",
+            push.p99_ms,
+            poll.p99_ms
         );
     }
 }
@@ -386,6 +590,29 @@ mod tests {
     }
 
     #[test]
+    fn push_loop_smoke() {
+        let p = closed_loop_push(1, 2, 5);
+        assert_eq!(p.invokes, 10);
+        assert_eq!(p.shape, "push-closed");
+        assert!(p.p99_ms >= p.p50_ms);
+    }
+
+    #[test]
+    fn conn_scaling_multiplexes_and_conserves() {
+        // 12 connections over the fixed driver pool; every invoke of
+        // the quota completes exactly once. The thread-count sample is
+        // not asserted here — the parallel test harness runs other
+        // thread-spawning tests in this process, so the bound is only
+        // meaningful in the standalone experiment binary (collect()).
+        let r = conn_scaling(1, 12, 48);
+        assert_eq!(r.invokes, 48);
+        assert_eq!(r.connections, 12);
+        assert_eq!(r.shape, "conn-scale");
+        assert!(r.clients <= CONN_DRIVERS);
+        assert!(r.throughput > 0.0);
+    }
+
+    #[test]
     fn report_json_has_identity_and_metric_keys() {
         let report = ServingReport {
             rows: vec![ServingRow {
@@ -393,13 +620,16 @@ mod tests {
                 loop_mode: "closed",
                 shards: 4,
                 clients: 16,
+                connections: 16,
                 invokes: 1000,
                 wall_s: 0.5,
                 throughput: 2000.0,
                 p50_ms: 0.4,
                 p99_ms: 1.9,
+                server_threads: 0,
             }],
             scale_4x1: 2.5,
+            conn_flatness: 0.97,
         };
         let doc = report_json(&report).render();
         for key in [
@@ -409,10 +639,13 @@ mod tests {
             "\"loop\"",
             "\"shards\"",
             "\"clients\"",
+            "\"connections\"",
             "\"throughput_invokes_per_sec\"",
             "\"p50_ms\"",
             "\"p99_ms\"",
+            "\"server_threads\"",
             "\"throughput_ratio_4shard_over_1shard\"",
+            "\"conn_scale_throughput_ratio_max_over_min\"",
         ] {
             assert!(doc.contains(key), "missing {key} in {doc}");
         }

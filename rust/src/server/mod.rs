@@ -40,6 +40,14 @@
 //! survives as legacy aliases on the same port: any line not starting
 //! with `{` is parsed as a legacy command.
 //!
+//! On the event loop a connection may also *pipeline*: send many
+//! requests without reading replies, tag each with `"id":N`, and match
+//! the echoed `"id"` on possibly out-of-order replies. Async invokes
+//! can subscribe at submit (`"push":true`) and receive an unsolicited
+//! `{"ok":true,"type":"push",...}` completion instead of polling.
+//! Untagged requests get byte-identical replies to the old lockstep
+//! loop (pinned by test), so legacy clients never notice the loop.
+//!
 //! # Threading model: fixed pools, a timer wheel, and no per-request spawns
 //!
 //! The serving engine's thread count is a function of *configuration*,
@@ -64,13 +72,33 @@
 //!   sleeps-and-locks while the shard has work, and a submit to an
 //!   idle shard wakes it. An idle server generates *zero* tick-driven
 //!   plane-lock traffic (asserted by test via [`RtServer::monitor_ticks`]).
-//! * **One accept thread + one thread per live connection** speak the
-//!   wire protocol ([`crate::api::wire::serve_connection`]).
+//! * **One event-loop (poller) thread per listening address** speaks
+//!   the wire protocol for *every* connection ([`event_loop`]): an
+//!   epoll readiness loop owns the listener, all connection sockets,
+//!   and their per-connection reuse buffers. Accepts, reads, parses,
+//!   and nonblocking batched flushes all run on this one thread —
+//!   there is no accept thread and no thread per connection, so 10k
+//!   open connections cost the same thread count as one.
 //!
-//! The previous design spawned a fresh OS thread per dispatch, so
-//! thread count — and scheduler pressure — grew with load;
-//! [`RtServer::exec_threads`] exposes the (constant) executor-side
-//! count so tests can pin the invariant under a burst.
+//! The split of work between the poller thread and the executor side:
+//!
+//! * **Poller thread** (per `serve` call): accept, read, parse
+//!   (borrowed [`crate::api::wire::JVal`]), submit (which may take one
+//!   plane lock), encode, flush, and the pending-reply bookkeeping
+//!   (reply tags, wait deadlines, push subscriptions). It never blocks
+//!   on a ticket: sync invokes and waits are parked as pending replies
+//!   and answered when the completion arrives.
+//! * **Worker/timer threads**: execution and completion bookkeeping,
+//!   exactly as below. At ticket-resolution time a completion crosses
+//!   back to the poller via the [`event_loop::CompletionBus`] (mutex
+//!   push + eventfd wake) — executors never touch a socket.
+//!
+//! The previous designs spawned a fresh OS thread per dispatch (and,
+//! until this revision, one per connection), so thread count — and
+//! scheduler pressure — grew with load; [`RtServer::exec_threads`]
+//! exposes the (constant) executor-side count so tests can pin the
+//! invariant under a burst, and total serving threads stay
+//! `shards × workers + O(1)`.
 //!
 //! # Lock discipline on the submit path
 //!
@@ -169,17 +197,19 @@
 //! # Ownership: handles vs the shutdown guard
 //!
 //! All serving state lives in one shared `Inner`. [`RtHandle`] is a
-//! cloneable `Arc` view of it — connections, the accept loop, and
-//! embedders hold handles, and dropping a handle is inert. The
-//! constructor-returned guard ([`RtServer`]/[`RtCluster`]) is the
-//! *single* owner of shutdown: only its `shutdown()`/`Drop` stops the
-//! background threads (timer, workers, monitors) and the accept loop.
+//! cloneable `Arc` view of it — the event loop and embedders hold
+//! handles, and dropping a handle is inert. The constructor-returned
+//! guard ([`RtServer`]/[`RtCluster`]) is the *single* owner of
+//! shutdown: only its `shutdown()`/`Drop` stops the background
+//! threads (timer, workers, monitors) and the event loop.
 //! Stopping the guard abandons modeled in-flight work still parked on
 //! the timer (their waiters see a deadline/unknown-ticket, exactly as
 //! under process teardown); in-flight PJRT executions finish their
 //! current job. (The historical drop bug — per-connection guard clones
 //! running `Drop::drop → shutdown()` on first disconnect — is still
 //! pinned by a regression test in `rust/tests/wire_protocol.rs`.)
+
+pub mod event_loop;
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
@@ -194,7 +224,7 @@ use crate::api::types::{
     ApiError, DescribeInfo, InvokeOutcome, MembershipInfo, MetricsFormat, ShardHealth, ShardInfo,
     ShardStatsRow, StatsSnapshot, Ticket, PROTOCOL_VERSION,
 };
-use crate::api::Frontend;
+use crate::api::{CompletionSink, Frontend};
 use crate::clock::{Clock, RealClock};
 use crate::cluster::{ClusterConfig, Router, RouterKind, ShardLoad};
 use crate::plane::{ControlPlane, Dispatch, PlaneConfig};
@@ -217,14 +247,40 @@ struct ExecJob {
     reply: Sender<Duration>,
 }
 
+/// One registered consumer of a pending ticket's resolution: a blocked
+/// `wait` call's wake channel, or a push subscription delivering to an
+/// event loop's [`CompletionSink`] (no thread blocks anywhere on the
+/// push path).
+enum Waiter {
+    Chan(Sender<Result<InvokeOutcome, ApiError>>),
+    Push {
+        sink: Arc<dyn CompletionSink>,
+        /// Opaque subscriber routing words, echoed back verbatim (the
+        /// event loop packs a generation-stamped connection token and a
+        /// per-connection reply tag).
+        conn: u64,
+        tag: u64,
+    },
+}
+
+impl Waiter {
+    /// Deliver the ticket's resolution to this waiter.
+    fn notify(self, ticket: Ticket, result: Result<InvokeOutcome, ApiError>) {
+        match self {
+            Waiter::Chan(tx) => {
+                let _ = tx.send(result);
+            }
+            Waiter::Push { sink, conn, tag } => sink.complete(conn, tag, ticket, result),
+        }
+    }
+}
+
 /// Completion bookkeeping for one accepted invocation.
 enum TicketEntry {
     /// Still running; waiters are woken (all of them) on completion —
     /// with the outcome, or with the structured error that became the
     /// ticket's fate (e.g. [`ApiError::ShardLost`] after a kill).
-    Pending {
-        waiters: Vec<Sender<Result<InvokeOutcome, ApiError>>>,
-    },
+    Pending { waiters: Vec<Waiter> },
     /// Completed but not yet claimed by `wait`/`poll`.
     Done(InvokeOutcome),
     /// Terminally failed (shard lost) but not yet claimed; the next
@@ -578,7 +634,9 @@ struct Inner {
     next_ticket: AtomicU64,
     /// Admission bound on total queued work (`usize::MAX` = unlimited).
     max_pending: AtomicUsize,
-    running: AtomicBool,
+    /// Shared with every event loop serving this frontend, so the
+    /// guard's shutdown also winds down poller threads.
+    running: Arc<AtomicBool>,
     // O(1) stats aggregates, maintained at completion time.
     completed: AtomicUsize,
     lat_sum_ns: AtomicU64,
@@ -787,7 +845,7 @@ fn wait_inner(
             Some(TicketEntry::Failed(e)) => return Err(e),
             Some(TicketEntry::Pending { mut waiters }) => {
                 let (tx, rx) = channel();
-                waiters.push(tx);
+                waiters.push(Waiter::Chan(tx));
                 tickets
                     .entries
                     .insert(ticket.0, TicketEntry::Pending { waiters });
@@ -827,6 +885,48 @@ fn poll_inner(inner: &Arc<Inner>, ticket: Ticket) -> Result<Option<InvokeOutcome
             Ok(None)
         }
     }
+}
+
+/// Register a push subscription: deliver `ticket`'s resolution to
+/// `sink` instead of blocking a thread. An already-terminal ticket is
+/// delivered immediately *without* claiming it — the subscriber claims
+/// on actual delivery to a live connection, so the ticket survives a
+/// subscriber that disconnects first (redeem-after-disconnect parity
+/// with the deadline-tripped blocking wait).
+fn subscribe_inner(
+    inner: &Arc<Inner>,
+    ticket: Ticket,
+    sink: Arc<dyn CompletionSink>,
+    conn: u64,
+    tag: u64,
+) -> Result<(), ApiError> {
+    let mut tickets = inner.ticket_slot(ticket.0).lock().unwrap();
+    // Existence is decided before taking the `get_mut` borrow the
+    // Pending arm needs (the None arm would otherwise hold it while
+    // asking `was_evicted`).
+    if !tickets.entries.contains_key(&ticket.0) {
+        return Err(ApiError::UnknownTicket {
+            ticket,
+            evicted: tickets.was_evicted(ticket.0),
+        });
+    }
+    let resolved = match tickets.entries.get_mut(&ticket.0).expect("present: checked") {
+        TicketEntry::Pending { waiters } => {
+            waiters.push(Waiter::Push {
+                sink: Arc::clone(&sink),
+                conn,
+                tag,
+            });
+            None
+        }
+        TicketEntry::Done(o) => Some(Ok(o.clone())),
+        TicketEntry::Failed(e) => Some(Err(e.clone())),
+    };
+    drop(tickets);
+    if let Some(result) = resolved {
+        sink.complete(conn, tag, ticket, result);
+    }
+    Ok(())
 }
 
 /// O(shards) over atomics — never locks a plane. The aggregates
@@ -1068,7 +1168,7 @@ fn fail_ticket(inner: &Arc<Inner>, ticket: Ticket, err: ApiError) {
         .fail(ticket.0, err.clone());
     if let Some(TicketEntry::Pending { waiters }) = prev {
         for w in waiters {
-            let _ = w.send(Err(err.clone()));
+            w.notify(ticket, Err(err.clone()));
         }
     }
 }
@@ -1095,6 +1195,15 @@ macro_rules! impl_frontend_via_inner {
             }
             fn poll(&self, ticket: Ticket) -> Result<Option<InvokeOutcome>, ApiError> {
                 poll_inner(&self.inner, ticket)
+            }
+            fn subscribe(
+                &self,
+                ticket: Ticket,
+                sink: Arc<dyn CompletionSink>,
+                conn: u64,
+                tag: u64,
+            ) -> Result<(), ApiError> {
+                subscribe_inner(&self.inner, ticket, sink, conn, tag)
             }
             fn stats(&self) -> StatsSnapshot {
                 stats_inner(&self.inner)
@@ -1145,9 +1254,20 @@ macro_rules! impl_guard {
                 }
             }
 
-            /// Serve the protocol on `addr` (port 0 picks a free one).
+            /// Serve the protocol on `addr` (port 0 picks a free one)
+            /// with default event-loop limits.
             pub fn serve(&self, addr: &str) -> anyhow::Result<std::net::SocketAddr> {
-                serve_on(self.handle(), addr)
+                self.serve_cfg(addr, event_loop::LoopConfig::default())
+            }
+
+            /// [`Self::serve`] with explicit event-loop limits (slow-
+            /// client outbound cap, line cap, connection cap).
+            pub fn serve_cfg(
+                &self,
+                addr: &str,
+                cfg: event_loop::LoopConfig,
+            ) -> anyhow::Result<std::net::SocketAddr> {
+                serve_on(self.handle(), addr, cfg)
             }
 
             /// Backpressure bound: reject (`overloaded`) when total
@@ -1268,7 +1388,7 @@ fn build_inner(
         timer: Timer::new(),
         next_ticket: AtomicU64::new(0),
         max_pending: AtomicUsize::new(usize::MAX),
-        running: AtomicBool::new(true),
+        running: Arc::new(AtomicBool::new(true)),
         completed: AtomicUsize::new(0),
         lat_sum_ns: AtomicU64::new(0),
         cold_starts: AtomicUsize::new(0),
@@ -1575,26 +1695,27 @@ fn fulfill(inner: &Arc<Inner>, ticket: Ticket, outcome: InvokeOutcome) {
         .complete(ticket.0, outcome.clone());
     if let Some(TicketEntry::Pending { waiters }) = prev {
         for w in waiters {
-            let _ = w.send(Ok(outcome.clone()));
+            w.notify(ticket, Ok(outcome.clone()));
         }
     }
 }
 
-/// Accept loop on `addr`; every connection is served over a cloned
-/// [`RtHandle`] (never the shutdown guard — see the module docs).
-fn serve_on(handle: RtHandle, addr: &str) -> anyhow::Result<std::net::SocketAddr> {
+/// Bind `addr` and serve the protocol from one event-loop (poller)
+/// thread — every connection multiplexed, no per-connection threads
+/// (see [`event_loop`]). The loop holds a cloned [`RtHandle`] (never
+/// the shutdown guard — see the module docs) and exits when the shared
+/// `running` flag clears.
+fn serve_on(
+    handle: RtHandle,
+    addr: &str,
+    cfg: event_loop::LoopConfig,
+) -> anyhow::Result<std::net::SocketAddr> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
-    thread::spawn(move || {
-        for stream in listener.incoming() {
-            if !handle.inner.running.load(Ordering::SeqCst) {
-                break;
-            }
-            let Ok(stream) = stream else { continue };
-            let conn = handle.clone();
-            thread::spawn(move || crate::api::wire::serve_connection(&conn, stream));
-        }
-    });
+    let running = Arc::clone(&handle.inner.running);
+    let tel = Some(Arc::clone(&handle.inner.telemetry));
+    let el = event_loop::EventLoop::new(handle, listener, running, tel, cfg)?;
+    thread::spawn(move || el.run());
     Ok(local)
 }
 

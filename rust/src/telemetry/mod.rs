@@ -52,9 +52,9 @@
 //! ## Adding a metric
 //!
 //! 1. Add the `Counter`/`Gauge`/`Histogram` field to the right family
-//!    in [`registry`] (`ShardMetrics`, `DeviceMetrics`, or
-//!    `ClassMetrics`) — storage is preallocated, so no registration
-//!    call exists to forget.
+//!    in [`registry`] (`ShardMetrics`, `DeviceMetrics`, `ClassMetrics`,
+//!    or the serving-front-end `ServingMetrics`) — storage is
+//!    preallocated, so no registration call exists to forget.
 //! 2. Record it from the owning layer via [`ShardSink`] (planes) or
 //!    the shared [`Telemetry`] handle (cluster/server).
 //! 3. Add it to both exports in [`registry`]
@@ -67,7 +67,8 @@ pub mod trace;
 use std::sync::Arc;
 
 pub use registry::{
-    ClassMetrics, Counter, DeviceMetrics, Gauge, Histogram, Registry, ShardMetrics,
+    ClassMetrics, Counter, DeviceMetrics, Gauge, Histogram, Registry, ServingMetrics,
+    ShardMetrics,
 };
 pub use trace::{EventKind, TraceEvent, TraceRing, ALL_KINDS, NO_FUNC, NO_INV};
 

@@ -195,6 +195,34 @@ pub struct ClassMetrics {
     pub exec_ns: Histogram,
 }
 
+/// Serving-front-end metric family — one instance per registry (the
+/// event loop is per listening address, but the counters aggregate:
+/// every loop serving a frontend records into the same family). All
+/// recording sites are on the poller thread or the completion path,
+/// and every record is a single relaxed atomic op.
+#[derive(Default)]
+pub struct ServingMetrics {
+    /// Currently open wire connections (event loop's slot occupancy).
+    pub open_connections: Gauge,
+    /// Connections accepted over the server's lifetime.
+    pub accepted_connections: Counter,
+    /// Requests dispatched per readiness batch — the pipelining
+    /// signal: a lockstep client records depth 1, a pipelined burst
+    /// records its burst size.
+    pub pipeline_depth: Histogram,
+    /// Push subscriptions registered (`"push":true` invokes).
+    pub push_subscriptions: Counter,
+    /// Push completions actually delivered to a live subscriber.
+    pub push_notifications: Counter,
+    /// Push completions dropped because the subscriber disconnected
+    /// (or its deadline already answered) — the ticket stays
+    /// redeemable, only the notification is lost.
+    pub push_dropped: Counter,
+    /// Connections force-closed past the outbound high-water mark
+    /// (slow-client protection).
+    pub slow_client_disconnects: Counter,
+}
+
 /// The static registry: all metric storage preallocated at
 /// construction, so recording never observes a missing series.
 pub struct Registry {
@@ -202,6 +230,7 @@ pub struct Registry {
     /// `devices[shard][gpu]`.
     devices: Vec<Vec<DeviceMetrics>>,
     classes: Vec<ClassMetrics>,
+    serving: ServingMetrics,
 }
 
 impl Registry {
@@ -222,7 +251,13 @@ impl Registry {
                     exec_ns: Histogram::default(),
                 })
                 .collect(),
+            serving: ServingMetrics::default(),
         }
+    }
+
+    /// The serving-front-end family (event-loop connection counters).
+    pub fn serving(&self) -> &ServingMetrics {
+        &self.serving
     }
 
     pub fn n_shards(&self) -> usize {
@@ -354,6 +389,43 @@ impl Registry {
                 );
             }
         }
+
+        // Serving front end (single unlabeled family).
+        let sv = &self.serving;
+        let _ = writeln!(out, "# TYPE mqfq_open_connections gauge");
+        let _ = writeln!(out, "mqfq_open_connections {}", sv.open_connections.get());
+        let _ = writeln!(out, "# TYPE mqfq_accepted_connections_total counter");
+        let _ = writeln!(
+            out,
+            "mqfq_accepted_connections_total {}",
+            sv.accepted_connections.get()
+        );
+        let _ = writeln!(out, "# TYPE mqfq_pipeline_depth summary");
+        for (q, label) in [(0.5, "0.5"), (0.99, "0.99"), (0.999, "0.999")] {
+            let _ = writeln!(
+                out,
+                "mqfq_pipeline_depth{{quantile=\"{label}\"}} {}",
+                sv.pipeline_depth.quantile(q)
+            );
+        }
+        let _ = writeln!(out, "mqfq_pipeline_depth_sum {}", sv.pipeline_depth.sum());
+        let _ = writeln!(
+            out,
+            "mqfq_pipeline_depth_count {}",
+            sv.pipeline_depth.count()
+        );
+        for (name, c) in [
+            ("mqfq_push_subscriptions_total", &sv.push_subscriptions),
+            ("mqfq_push_notifications_total", &sv.push_notifications),
+            ("mqfq_push_dropped_total", &sv.push_dropped),
+            (
+                "mqfq_slow_client_disconnects_total",
+                &sv.slow_client_disconnects,
+            ),
+        ] {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {}", c.get());
+        }
     }
 
     /// JSON exposition (`metrics --format json`) — the same series as
@@ -428,11 +500,40 @@ impl Registry {
                 ])
             })
             .collect();
+        let sv = &self.serving;
+        let serving = Json::Obj(vec![
+            (
+                "open_connections".into(),
+                Json::Int(sv.open_connections.get()),
+            ),
+            (
+                "accepted_connections".into(),
+                Json::Int(sv.accepted_connections.get() as i64),
+            ),
+            ("pipeline_depth".into(), sv.pipeline_depth.to_json()),
+            (
+                "push_subscriptions".into(),
+                Json::Int(sv.push_subscriptions.get() as i64),
+            ),
+            (
+                "push_notifications".into(),
+                Json::Int(sv.push_notifications.get() as i64),
+            ),
+            (
+                "push_dropped".into(),
+                Json::Int(sv.push_dropped.get() as i64),
+            ),
+            (
+                "slow_client_disconnects".into(),
+                Json::Int(sv.slow_client_disconnects.get() as i64),
+            ),
+        ]);
         Json::Obj(vec![
             ("schema".into(), Json::str("mqfq-metrics/v1")),
             ("shards".into(), Json::Arr(shards)),
             ("devices".into(), Json::Arr(devices)),
             ("classes".into(), Json::Arr(classes)),
+            ("serving".into(), serving),
         ])
     }
 }
@@ -500,6 +601,13 @@ mod tests {
         assert!(r.device(0, 5).is_none());
         assert!(r.device(9, 0).is_none());
         r.class(0).unwrap().completed.add(2);
+        r.serving().accepted_connections.add(7);
+        r.serving().open_connections.set(5);
+        r.serving().pipeline_depth.record(16);
+        r.serving().push_subscriptions.inc();
+        r.serving().push_notifications.inc();
+        r.serving().push_dropped.inc();
+        r.serving().slow_client_disconnects.inc();
 
         let mut prom = String::new();
         r.render_prometheus_into(&mut prom);
@@ -519,9 +627,22 @@ mod tests {
             "{prom}"
         );
 
+        assert!(prom.contains("mqfq_open_connections 5"), "{prom}");
+        assert!(prom.contains("mqfq_accepted_connections_total 7"), "{prom}");
+        assert!(prom.contains("mqfq_pipeline_depth_count 1"), "{prom}");
+        assert!(prom.contains("mqfq_push_subscriptions_total 1"), "{prom}");
+        assert!(prom.contains("mqfq_push_notifications_total 1"), "{prom}");
+        assert!(prom.contains("mqfq_push_dropped_total 1"), "{prom}");
+        assert!(
+            prom.contains("mqfq_slow_client_disconnects_total 1"),
+            "{prom}"
+        );
+
         let doc = r.to_json().render();
         assert!(doc.contains("mqfq-metrics/v1"), "{doc}");
         assert!(doc.contains("\"submitted\": 3"), "{doc}");
         assert!(doc.contains("\"class\": \"fft\""), "{doc}");
+        assert!(doc.contains("\"open_connections\": 5"), "{doc}");
+        assert!(doc.contains("\"slow_client_disconnects\": 1"), "{doc}");
     }
 }

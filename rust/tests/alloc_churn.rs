@@ -155,6 +155,16 @@ fn wire_path_steady_state_allocation_churn() {
                     .b(2),
             );
             tel.emit(TraceEvent::new(i, EventKind::Complete, 0).inv(i).func(0));
+            // Serving-front-end family: recorded from the event loop's
+            // accept/dispatch/push paths, same zero-alloc guarantee.
+            let sv = tel.registry.serving();
+            sv.accepted_connections.inc();
+            sv.open_connections.set(i as i64);
+            sv.pipeline_depth.record(1 + i % 16);
+            sv.push_subscriptions.inc();
+            sv.push_notifications.inc();
+            sv.push_dropped.inc();
+            sv.slow_client_disconnects.inc();
         }
     });
     assert_eq!(

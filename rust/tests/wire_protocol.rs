@@ -3,7 +3,11 @@
 //! handling, legacy line-protocol aliases, the connection-drop
 //! regression (a disconnecting client must not shut the server down),
 //! and RtServer ≡ RtCluster(1 shard) behavioral equivalence over the
-//! same wire.
+//! same wire. The event-loop front end adds: pipelined id-tagged
+//! requests with out-of-order replies, the push-completion lifecycle
+//! (including subscriber disconnect before completion), slow-client
+//! disconnection at the outbound high-water mark, and mixed
+//! legacy/tagged-v1 traffic on one connection.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -438,6 +442,313 @@ fn concurrent_clients_conserve_every_invocation() {
     assert_eq!(s.pending, 0, "no stranded queue entries");
     assert_eq!(s.in_flight, 0, "no stranded in-flight work");
     assert!(s.mean_latency_ms > 0.0);
+}
+
+// ---------------------------------------------------------------------
+// Event-loop front end: pipelining, push completions, slow clients.
+// ---------------------------------------------------------------------
+
+use mqfq::api::wire;
+use mqfq::api::{InvokeMode, MetricsFormat, Request, Response};
+
+/// Encode one id-tagged request line into `batch`.
+fn tag_line(batch: &mut String, req: &Request, id: u64) {
+    wire::encode_request_tagged_into(req, id, batch);
+    batch.push('\n');
+}
+
+#[test]
+fn pipelined_tagged_replies_return_out_of_order() {
+    // One flush carries a blocking `wait` (id 7) on a still-running
+    // ticket followed by `stats` (id 9). The event loop must answer
+    // stats immediately and deliver the wait completion later — replies
+    // arrive out of submission order, reassembled by id.
+    let (_srv, addr) = server();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    raw_call(&mut conn, r#"{"cmd":"hello","v":1}"#);
+    let accepted = raw_call(&mut conn, r#"{"cmd":"invoke","func":"fft-0","mode":"async"}"#);
+    let (_, resp) = wire::decode_response_tagged(&accepted).unwrap();
+    let Response::Accepted { ticket } = resp else {
+        panic!("async submit must be accepted: {accepted}");
+    };
+    let mut batch = String::new();
+    tag_line(
+        &mut batch,
+        &Request::Wait {
+            ticket,
+            deadline_ms: Some(30_000),
+        },
+        7,
+    );
+    tag_line(&mut batch, &Request::Stats, 9);
+    conn.write_all(batch.as_bytes()).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut read_tagged = || {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        wire::decode_response_tagged(line.trim()).unwrap()
+    };
+    let (first_id, first) = read_tagged();
+    assert_eq!(first_id, Some(9), "stats must overtake the blocked wait");
+    assert!(matches!(first, Response::Stats(_)), "{first:?}");
+    let (second_id, second) = read_tagged();
+    assert_eq!(second_id, Some(7));
+    let Response::Done(o) = second else {
+        panic!("wait completion expected: {second:?}");
+    };
+    assert_eq!(o.ticket, ticket);
+}
+
+#[test]
+fn pipeline_client_reassembles_a_burst() {
+    let (_srv, addr) = server();
+    let mut client = ApiClient::connect(addr).unwrap();
+    let funcs = ["isoneural-0", "fft-0", "isoneural-0", "fft-0"];
+    let tickets = client.pipeline_invoke_async(&funcs).unwrap();
+    assert_eq!(tickets.len(), 4);
+    let unique: std::collections::HashSet<_> = tickets.iter().collect();
+    assert_eq!(unique.len(), 4, "tickets must be distinct");
+    for (t, f) in tickets.iter().zip(funcs) {
+        let o = client.wait(*t, Some(30_000)).unwrap();
+        assert_eq!(o.ticket, *t);
+        assert_eq!(o.func, f);
+    }
+}
+
+#[test]
+fn pipeline_surfaces_first_error_after_draining_the_batch() {
+    let (_srv, addr) = server();
+    let mut client = ApiClient::connect(addr).unwrap();
+    let err = client
+        .pipeline_invoke_async(&["isoneural-0", "ghost", "fft-0"])
+        .unwrap_err();
+    assert_eq!(err.code(), "unknown-function");
+    // The whole batch was drained — the connection is still lockstep-
+    // clean and usable (no stray replies poison the next call).
+    let o = client.invoke("isoneural-0", Some(30_000)).unwrap();
+    assert_eq!(o.func, "isoneural-0");
+    // The two valid submits did run.
+    assert!(client.stats().unwrap().invocations >= 1);
+}
+
+#[test]
+fn push_lifecycle_claims_on_delivery() {
+    // Same observable behavior on RtServer and a 1-shard RtCluster:
+    // submit-with-subscribe, completion arrives as a push, and delivery
+    // claims the ticket (a later wait sees unknown-ticket).
+    let (_a, server_addr) = server();
+    let (_b, cluster_addr) = cluster(1, RouterKind::StickyCh);
+    for addr in [server_addr, cluster_addr] {
+        let mut client = ApiClient::connect(addr).unwrap();
+        let t = client.invoke_push("fft-0").unwrap();
+        let o = client.wait_push(t).unwrap();
+        assert_eq!(o.ticket, t);
+        assert_eq!(o.func, "fft-0");
+        assert_eq!(
+            client.wait(t, Some(1_000)).unwrap_err().code(),
+            "unknown-ticket",
+            "push delivery must claim the ticket"
+        );
+        // Push counters surface through the metrics verb.
+        let body = client.metrics(MetricsFormat::Json).unwrap();
+        assert!(body.contains("\"push_subscriptions\": 1"), "{body}");
+        assert!(body.contains("\"push_notifications\": 1"), "{body}");
+    }
+}
+
+#[test]
+fn push_interleaves_with_pipelined_lockstep_traffic() {
+    // A push subscription on a connection that keeps doing ordinary
+    // lockstep calls: the unsolicited push line lands between paired
+    // replies and is parked, not confused with them.
+    let (_srv, addr) = server();
+    let mut client = ApiClient::connect(addr).unwrap();
+    let t = client.invoke_push("fft-0").unwrap();
+    // Lockstep traffic while the push is in flight (cold fft takes ms
+    // of wall time at this scale).
+    for _ in 0..20 {
+        client.stats().unwrap();
+    }
+    let o = client.wait_push(t).unwrap();
+    assert_eq!(o.ticket, t);
+}
+
+#[test]
+fn push_subscriber_disconnect_leaves_ticket_redeemable() {
+    // The subscriber vanishes before its invocation completes: the
+    // completion must NOT be claimed on behalf of the dead connection —
+    // a second client still redeems the ticket (parity with the
+    // wait-then-disconnect and redeem-after-deadline guarantees).
+    let (_srv, addr) = server();
+    let ticket = {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        raw_call(&mut conn, r#"{"cmd":"hello","v":1}"#);
+        let accepted = raw_call(
+            &mut conn,
+            r#"{"cmd":"invoke","func":"fft-0","mode":"async","push":true}"#,
+        );
+        let (_, resp) = wire::decode_response_tagged(&accepted).unwrap();
+        let Response::Accepted { ticket } = resp else {
+            panic!("push submit must be accepted: {accepted}");
+        };
+        ticket
+        // Socket drops here — microseconds after accept, milliseconds
+        // before the modeled cold start finishes.
+    };
+    let mut second = ApiClient::connect(addr).unwrap();
+    let o = second.wait(ticket, Some(30_000)).unwrap();
+    assert_eq!(o.ticket, ticket);
+    // The undeliverable push is counted, not silently lost. The drop is
+    // recorded by the poller a beat after the executor resolves the
+    // ticket, so poll briefly rather than racing it.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let body = second.metrics(MetricsFormat::Json).unwrap();
+        if body.contains("\"push_dropped\": 1") {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "push_dropped never counted: {body}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn slow_client_is_disconnected_at_the_outbound_high_water_mark() {
+    // A client that requests far more reply bytes than it reads must be
+    // disconnected once its outbound queue passes the (tiny, for the
+    // test) high-water mark — not buffer the server into the ground.
+    let srv = RtServer::new(workload(), fast_cfg(), None, 0.001).unwrap();
+    let addr = srv
+        .serve_cfg(
+            "127.0.0.1:0",
+            mqfq::server::event_loop::LoopConfig {
+                max_outbound: 8 * 1024,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    raw_call(&mut conn, r#"{"cmd":"hello","v":1}"#);
+    // Each metrics reply is KBs; twenty thousand of them are far beyond
+    // any kernel socket buffering + an 8 KiB queue cap. The client
+    // never reads, so the server's flushes stall and the queue fills.
+    const REQUESTS: usize = 20_000;
+    let mut line = String::new();
+    wire::encode_request_into(&Request::Metrics { format: MetricsFormat::Prom }, &mut line);
+    line.push('\n');
+    let mut write_failed = false;
+    for _ in 0..REQUESTS {
+        if conn.write_all(line.as_bytes()).is_err() {
+            write_failed = true; // server already hung up on us
+            break;
+        }
+    }
+    // Drain whatever was delivered: the stream must end (EOF or reset)
+    // long before all replies arrive, with the structured slow-consumer
+    // error as the last complete line if it made it out.
+    let mut replies = 0usize;
+    let mut saw_slow_consumer = false;
+    let mut reader = BufReader::new(conn);
+    loop {
+        let mut buf = String::new();
+        match reader.read_line(&mut buf) {
+            Ok(0) => break,
+            Ok(_) => {
+                if buf.contains(r#""error":"slow-consumer""#) {
+                    saw_slow_consumer = true;
+                }
+                replies += 1;
+            }
+            Err(_) => break, // reset counts as disconnection too
+        }
+    }
+    assert!(
+        replies < REQUESTS,
+        "server must cut a slow client off, got all {replies} replies"
+    );
+    assert!(
+        write_failed || saw_slow_consumer || replies < REQUESTS,
+        "disconnection must be observable"
+    );
+    // The server survives and counts the disconnect.
+    let mut healthy = ApiClient::connect(addr).unwrap();
+    healthy.invoke("isoneural-0", Some(30_000)).unwrap();
+    let body = healthy.metrics(MetricsFormat::Json).unwrap();
+    assert!(body.contains("\"slow_client_disconnects\": 1"), "{body}");
+}
+
+#[test]
+fn mixed_legacy_and_tagged_v1_on_one_event_loop_connection() {
+    // Legacy lines and id-tagged v1 requests interleave on a single
+    // connection; legacy replies stay byte-shaped exactly as before.
+    let (_srv, addr) = server();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let legacy = raw_call(&mut conn, "invoke isoneural-0");
+    assert!(legacy.starts_with("ok "), "{legacy}");
+    assert!(legacy.contains("cold"), "{legacy}");
+    let mut batch = String::new();
+    tag_line(&mut batch, &Request::Stats, 3);
+    conn.write_all(batch.as_bytes()).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let (id, resp) = wire::decode_response_tagged(line.trim()).unwrap();
+    assert_eq!(id, Some(3));
+    let Response::Stats(s) = resp else {
+        panic!("tagged stats reply expected: {line}");
+    };
+    assert_eq!(s.invocations, 1, "v1 stats see the legacy invocation");
+    let legacy_stats = raw_call(&mut conn, "stats");
+    assert!(legacy_stats.contains("invocations=1"), "{legacy_stats}");
+    assert_eq!(raw_call(&mut conn, "warp 9"), "err unknown command warp");
+}
+
+#[test]
+fn untagged_invoke_still_speaks_push_false_semantics() {
+    // A v1 request without `push` behaves exactly as before the
+    // extension: accepted, no unsolicited lines ever appear, ticket
+    // redeemable by wait.
+    let (_srv, addr) = server();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    raw_call(&mut conn, r#"{"cmd":"hello","v":1}"#);
+    let accepted = raw_call(&mut conn, r#"{"cmd":"invoke","func":"isoneural-0","mode":"async"}"#);
+    let (_, resp) = wire::decode_response_tagged(&accepted).unwrap();
+    let Response::Accepted { ticket } = resp else {
+        panic!("{accepted}");
+    };
+    // The very next reply line is the wait outcome — no push slipped in.
+    let req = format!("{{\"cmd\":\"wait\",\"ticket\":{},\"deadline_ms\":30000}}", ticket.0);
+    let done = raw_call(&mut conn, &req);
+    assert!(done.contains(r#""ok":true"#), "{done}");
+    assert!(!done.contains(r#""type":"push""#), "{done}");
+}
+
+#[test]
+fn invoke_mode_vocabulary_is_unchanged() {
+    // `push` rides on async submits only; a sync submit with push set
+    // is a structured bad-request, not a silent downgrade.
+    let (_srv, addr) = server();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    raw_call(&mut conn, r#"{"cmd":"hello","v":1}"#);
+    let reply = raw_call(
+        &mut conn,
+        r#"{"cmd":"invoke","func":"isoneural-0","mode":"sync","push":true}"#,
+    );
+    assert!(reply.contains(r#""error":"bad-request""#), "{reply}");
+    // Round-trip sanity on the typed encoder: async+push encodes and
+    // decodes to itself.
+    let req = Request::Invoke {
+        func: "fft-0".into(),
+        mode: InvokeMode::Async,
+        deadline_ms: None,
+        push: true,
+    };
+    let mut line = String::new();
+    wire::encode_request_into(&req, &mut line);
+    assert_eq!(wire::decode_request(&line).unwrap(), req);
 }
 
 #[test]

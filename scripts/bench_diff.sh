@@ -71,6 +71,7 @@ def flatten(value, prefix, out):
             if isinstance(sub, dict):
                 ident = [str(sub[k]) for k in ("fleet", "router", "impl", "name",
                                                "shape", "loop", "clients",
+                                               "connections",
                                                "shards", "flows", "active",
                                                "telemetry",
                                                "phase", "window") if k in sub]

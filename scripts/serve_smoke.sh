@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # End-to-end serving smoke test: start `serve` in model mode (no PJRT
-# artifacts needed), drive sync + async invocations through an
-# independent python3 client speaking protocol v1 (plus one legacy
-# line), and assert the server's stats. Wired into `make check` and CI.
+# artifacts needed), drive sync + async + pipelined-tagged + push
+# invocations through an independent python3 client speaking protocol
+# v1 (plus one legacy line), and assert the server's stats. Wired into
+# `make check` and CI.
 # Usage: scripts/serve_smoke.sh  (or `make smoke`)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -173,7 +174,46 @@ m = call({"cmd": "membership"})
 assert m["completed"] == served + 2 and m["failed"] == 0, m
 assert m["accepted"] == m["completed"], m
 
+# Pipelined tagged requests: two lines in one flush, replies carry the
+# request id back so the client reassembles them.
+f.write((json.dumps({"id": 11, "cmd": "invoke", "func": "fft-0",
+                     "mode": "async"}) + "\n"
+         + json.dumps({"id": 12, "cmd": "stats"}) + "\n").encode())
+f.flush()
+byid = {r["id"]: r for r in (json.loads(f.readline()), json.loads(f.readline()))}
+assert byid[11]["type"] == "ticket" and byid[12]["type"] == "stats", byid
+out = call({"cmd": "wait", "ticket": byid[11]["ticket"], "deadline_ms": 60000})
+assert out["ok"] and out["type"] == "done", out
+
+# Out-of-order replies: a blocking wait on a cold function pipelined
+# ahead of stats — the immediate stats answer overtakes the deferred
+# wait completion.
+acc = call({"cmd": "invoke", "func": "lud-0", "mode": "async"})
+assert acc["ok"] and acc["type"] == "ticket", acc
+f.write((json.dumps({"id": 21, "cmd": "wait", "ticket": acc["ticket"],
+                     "deadline_ms": 60000}) + "\n"
+         + json.dumps({"id": 22, "cmd": "stats"}) + "\n").encode())
+f.flush()
+first, second = json.loads(f.readline()), json.loads(f.readline())
+assert first["id"] == 22 and first["type"] == "stats", (first, second)
+assert second["id"] == 21 and second["type"] == "done", (first, second)
+
+# Push completions: subscribe at submit, the completion arrives as an
+# unsolicited push line tagged by ticket — no polling round trip.
+acc = call({"cmd": "invoke", "func": "isoneural-0", "mode": "async",
+            "push": True})
+assert acc["ok"] and acc["type"] == "ticket", acc
+push = json.loads(f.readline())
+assert push["ok"] and push["type"] == "push", push
+assert push["ticket"] == acc["ticket"] and push["func"] == "isoneural-0", push
+
+# The serving metric family saw this connection and its pushes.
+m = call({"cmd": "metrics", "format": "json"})
+doc = json.loads(m["body"])
+assert doc["serving"]["push_notifications"] >= 1, doc["serving"]
+assert doc["serving"]["open_connections"] >= 1, doc["serving"]
+
 call({"cmd": "quit"})
-print("serve smoke: OK (sync + async + errors + legacy + telemetry + "
-      "membership + %d invokes in %.2fs)" % (N, wall))
+print("serve smoke: OK (sync + async + pipeline + push + errors + legacy "
+      "+ telemetry + membership + %d invokes in %.2fs)" % (N, wall))
 EOF
