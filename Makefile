@@ -1,6 +1,6 @@
 # Convenience targets; see ROADMAP.md for the tier-1 verify.
 
-.PHONY: check test smoke bench-perf bench-cluster bench-hetero bench-serving bench-elastic artifacts
+.PHONY: check test smoke bench-perf bench-cluster bench-hetero bench-serving bench-elastic bench-anticipate artifacts
 
 # Build + test + clippy-clean + serving smoke (the full local gate).
 check:
@@ -41,6 +41,13 @@ bench-serving:
 # Compare against a previous run: scripts/bench_diff.sh OLD.json BENCH_elastic.json
 bench-elastic:
 	cargo bench --bench elastic_membership
+
+# Regenerate the anticipatory-scheduling ablation (grace x batch x
+# estimator on the bursty and Azure traces) and BENCH_anticipate.json.
+# Quick smoke: ANTICIPATE_QUICK=1 make bench-anticipate.
+# Compare against a previous run: scripts/bench_diff.sh OLD.json BENCH_anticipate.json
+bench-anticipate:
+	cargo bench --bench anticipate_ablation
 
 # AOT-lower the python/JAX function bodies to HLO artifacts where the
 # rust runtime (rust/artifacts/) looks for them.

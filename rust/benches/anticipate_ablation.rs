@@ -1,0 +1,13 @@
+//! `cargo bench --bench anticipate_ablation` — the §Anticipate
+//! ablation: grace periods × same-flow batch dispatch × the online
+//! characteristics estimator, swept over the bursty Zipf stressor and
+//! the Azure realism trace, emitting `BENCH_anticipate.json` and
+//! holding the p50-improvement / Jain-fairness release gates.
+//! Thin wrapper over `mqfq::experiments::anticipate::main` (also:
+//! `mqfq-sticky exp anticipate`; `ANTICIPATE_QUICK=1` for a smoke run).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    mqfq::experiments::anticipate::main();
+    println!("[bench anticipate_ablation completed in {:.2?}]", t0.elapsed());
+}

@@ -90,6 +90,17 @@ USAGE:
         [--policy fcfs|batch|sjf|eevdf|mqfq|sfq] [--d N] [--gpus N]
         [--mem stock-uvm|madvise|prefetch-only|prefetch+swap]
         [--mode plain|mps|mig:N] [--pool N] [--t SECS] [--alpha A]
+        [--grace A] [--batch-max N] [--batch-marginal F]
+        [--estimator on|off] [--adaptive-d MIN:MAX]
+              anticipatory scheduling (all default off): --grace A keeps
+              an emptied flow Active for A x its predicted inter-arrival
+              time; --batch-max N coalesces up to N same-flow
+              invocations per dispatch (each rider costs
+              --batch-marginal x the head); --estimator charges virtual
+              time from the online exec-time estimate (budget-corrected
+              at completion); --adaptive-d MIN:MAX resizes the
+              concurrency tokens between the bounds by Little's law
+              (overrides --d)
         [--trace-out FILE]  write the invocation-lifecycle trace
               (JSONL, one event per line; fold it with
               scripts/trace_summarize.py)
@@ -108,7 +119,8 @@ USAGE:
         [--shards N] [--router rr|random|least|sticky|sticky-blind]
         [--load-factor F] [--seed K] [--max-pending N] [--workers W]
         [--max-outbound BYTES]
-        [+ plane options incl. --policy/--d/--fleet]
+        [+ plane options incl. --policy/--d/--fleet and the
+         anticipation knobs --grace/--batch-max/--adaptive-d]
               real-traffic TCP serving: protocol v1 (JSON lines, hello
               handshake, sync/async invoke tickets, deadlines, request
               pipelining with id-tagged replies, push completions;
@@ -256,7 +268,54 @@ pub fn plane_config(args: &Args) -> Result<PlaneConfig, String> {
         ttl_alpha: args.get_f64("alpha", 2.0)?,
         ..Default::default()
     };
+    // Anticipatory scheduling knobs (scheduler::mqfq module docs,
+    // §Anticipatory scheduling). All default off: grace 0, batch-max 1,
+    // estimator off, static D — the neutral config is bit-identical to
+    // the pre-anticipation scheduler.
+    let ant = &mut cfg.mqfq.anticipate;
+    ant.grace_alpha = args.get_f64("grace", ant.grace_alpha)?;
+    if !(ant.grace_alpha >= 0.0 && ant.grace_alpha.is_finite()) {
+        return Err(format!("--grace must be >= 0, got {}", ant.grace_alpha));
+    }
+    ant.batch_max = args.get_usize("batch-max", ant.batch_max)?;
+    if ant.batch_max == 0 {
+        return Err("--batch-max must be >= 1 (1 disables batching)".into());
+    }
+    ant.batch_marginal = args.get_f64("batch-marginal", ant.batch_marginal)?;
+    if !(ant.batch_marginal >= 0.0 && ant.batch_marginal.is_finite()) {
+        return Err(format!("--batch-marginal must be >= 0, got {}", ant.batch_marginal));
+    }
+    if let Some(v) = args.get("estimator") {
+        ant.estimator = match v {
+            "1" | "true" | "yes" | "on" => true,
+            "0" | "false" | "no" | "off" => false,
+            _ => return Err(format!("--estimator: expected on|off, got {v}")),
+        };
+    }
+    if let Some(spec) = args.get("adaptive-d") {
+        cfg.adaptive_d = Some(parse_adaptive_d(spec)?);
+    }
     Ok(cfg)
+}
+
+/// Parse `--adaptive-d MIN:MAX` (or a single `N`, meaning `N:N`): the
+/// Little's-law concurrency-controller bounds. Takes precedence over
+/// the static `--d`.
+fn parse_adaptive_d(s: &str) -> Result<(usize, usize), String> {
+    let (lo, hi) = match s.split_once(':') {
+        Some((lo, hi)) => (
+            lo.parse::<usize>().map_err(|_| format!("--adaptive-d: bad MIN in {s}"))?,
+            hi.parse::<usize>().map_err(|_| format!("--adaptive-d: bad MAX in {s}"))?,
+        ),
+        None => {
+            let n = s.parse::<usize>().map_err(|_| format!("--adaptive-d: bad bound {s}"))?;
+            (n, n)
+        }
+    };
+    if lo == 0 || hi < lo {
+        return Err(format!("--adaptive-d: need 1 <= MIN <= MAX, got {s}"));
+    }
+    Ok((lo, hi))
 }
 
 /// Entry point called by main(). Returns process exit code.
@@ -856,6 +915,48 @@ mod tests {
             "--fleet ,",
             "--mode mig:0",
             "--gpus 0",
+        ] {
+            let a = Args::parse(&argv(bad)).unwrap();
+            assert!(plane_config(&a).is_err(), "{bad} should be rejected");
+        }
+    }
+
+    #[test]
+    fn anticipation_flags_parse_into_config() {
+        // Defaults: everything off, static D.
+        let a = Args::parse(&argv("--policy mqfq")).unwrap();
+        let cfg = plane_config(&a).unwrap();
+        assert!(!cfg.mqfq.anticipate.enabled());
+        assert_eq!(cfg.adaptive_d, None);
+        // Full set.
+        let a = Args::parse(&argv(
+            "--grace 2.0 --batch-max 4 --batch-marginal 0.5 --estimator on \
+             --adaptive-d 2:8",
+        ))
+        .unwrap();
+        let cfg = plane_config(&a).unwrap();
+        assert_eq!(cfg.mqfq.anticipate.grace_alpha, 2.0);
+        assert_eq!(cfg.mqfq.anticipate.batch_max, 4);
+        assert_eq!(cfg.mqfq.anticipate.batch_marginal, 0.5);
+        assert!(cfg.mqfq.anticipate.estimator);
+        assert_eq!(cfg.adaptive_d, Some((2, 8)));
+        // Single-bound form pins MIN = MAX.
+        let a = Args::parse(&argv("--adaptive-d 4")).unwrap();
+        assert_eq!(plane_config(&a).unwrap().adaptive_d, Some((4, 4)));
+    }
+
+    #[test]
+    fn bad_anticipation_flags_rejected() {
+        for bad in [
+            "--grace -1",
+            "--grace nan",
+            "--batch-max 0",
+            "--batch-marginal -0.5",
+            "--estimator maybe",
+            "--adaptive-d 0:4",
+            "--adaptive-d 4:2",
+            "--adaptive-d a:b",
+            "--adaptive-d 0",
         ] {
             let a = Args::parse(&argv(bad)).unwrap();
             assert!(plane_config(&a).is_err(), "{bad} should be rejected");

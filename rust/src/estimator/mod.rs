@@ -1,0 +1,370 @@
+//! Online per-function characteristics estimation (anticipatory
+//! scheduling, §4.5 of the reproduction roadmap).
+//!
+//! The paper's scheduler is *anticipatory*: instead of treating exec
+//! times, arrival rates, and cold-start costs as static workload
+//! parameters, it learns them online from completion events and lets
+//! three scheduler behaviors consume the predictions:
+//!
+//! 1. **Grace periods** — a flow whose queue just emptied stays Active
+//!    (non-work-conserving) for `grace_alpha x predicted_iat`, holding
+//!    its sticky device for the anticipated next arrival.
+//! 2. **Batch dispatch** — up to `batch_max` queued invocations of one
+//!    flow coalesce into a single device submission; riders cost
+//!    `batch_marginal x predicted_exec` each (kernels and weights are
+//!    already resident).
+//! 3. **Estimated-then-corrected virtual time** — when `estimator` is
+//!    on, a dispatch advances VT by the *predicted* service time and
+//!    the prediction error is settled later as a per-flow debt (the
+//!    Iluvatar `budget` idea, re-cast so Global_VT stays monotone: VT
+//!    is never lowered retroactively; instead the signed error is
+//!    carried forward into the next dispatch's tau).
+//!
+//! [`CharacteristicsMap`] is the shared state machine. Both the
+//! indexed `MqfqSticky` and the `NaiveMqfq` oracle embed one and feed
+//! it the same event stream, so the equivalence property holds by
+//! construction rather than by duplicated arithmetic.
+
+use std::collections::VecDeque;
+
+use crate::types::{DurNanos, FuncId, StartKind};
+use crate::util::stats::Ema;
+
+/// EWMA smoothing for all estimator series. Matches the flow-queue
+/// EMAs so predictions and the legacy `avg_exec_s` path converge on
+/// the same steady state.
+const EST_ALPHA: f64 = 0.3;
+
+/// Knobs for the anticipatory scheduling subsystem. The defaults are
+/// all-neutral: with `grace_alpha = 0`, `batch_max = 1`, and
+/// `estimator = false`, the scheduler is bit-identical to the
+/// pre-anticipation dispatch core (property-tested in
+/// `tests/prop_anticipate.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AnticipateConfig {
+    /// Grace window multiplier over the predicted inter-arrival time.
+    /// 0.0 disables grace periods (keep-alive degenerates to the TTL).
+    pub grace_alpha: f64,
+    /// Max same-flow invocations coalesced per dispatch decision.
+    /// 1 disables batching.
+    pub batch_max: usize,
+    /// Marginal service-cost fraction for each batched rider relative
+    /// to the head invocation (model: weights/kernels already
+    /// resident, so riders skip setup).
+    pub batch_marginal: f64,
+    /// Drive virtual-time advances from the online exec-time estimate
+    /// (with debt correction) instead of the flow's trailing average.
+    pub estimator: bool,
+}
+
+impl Default for AnticipateConfig {
+    fn default() -> Self {
+        Self {
+            grace_alpha: 0.0,
+            batch_max: 1,
+            batch_marginal: 0.6,
+            estimator: false,
+        }
+    }
+}
+
+impl AnticipateConfig {
+    /// True when any anticipatory behavior is switched on.
+    pub fn enabled(&self) -> bool {
+        self.grace_alpha > 0.0 || self.batch_max > 1 || self.estimator
+    }
+}
+
+/// Online estimates for one function, fed by arrival and completion
+/// events.
+#[derive(Debug, Clone)]
+pub struct FuncEstimate {
+    /// EWMA exec time of warm starts (GPU-warm or host-warm), seconds.
+    warm_exec: Ema,
+    /// EWMA exec time of cold starts, seconds.
+    cold_exec: Ema,
+    /// EWMA extra cost a cold start pays over the warm estimate,
+    /// seconds (boot + init; >= 0).
+    cold_cost: Ema,
+    /// EWMA inter-arrival time, seconds.
+    iat: Ema,
+    /// EWMA of in-flight count observed at dispatch instants.
+    concurrency: Ema,
+    /// Last arrival timestamp (nanos) for IAT deltas.
+    last_arrival: Option<u64>,
+    /// Estimated service charged at dispatch, awaiting correction at
+    /// completion (FIFO approximation of dispatch->completion pairing).
+    outstanding: VecDeque<f64>,
+    /// Signed accumulated prediction error (actual - estimated),
+    /// seconds, carried forward into the next dispatch's tau.
+    vt_debt: f64,
+    arrivals: u64,
+    warm_completions: u64,
+    cold_completions: u64,
+}
+
+impl FuncEstimate {
+    fn new() -> Self {
+        Self {
+            warm_exec: Ema::new(EST_ALPHA),
+            cold_exec: Ema::new(EST_ALPHA),
+            cold_cost: Ema::new(EST_ALPHA),
+            iat: Ema::new(EST_ALPHA),
+            concurrency: Ema::new(EST_ALPHA),
+            last_arrival: None,
+            outstanding: VecDeque::new(),
+            vt_debt: 0.0,
+            arrivals: 0,
+            warm_completions: 0,
+            cold_completions: 0,
+        }
+    }
+
+    fn completions(&self) -> u64 {
+        self.warm_completions + self.cold_completions
+    }
+}
+
+/// Per-function online characteristics, keyed densely by `FuncId`.
+///
+/// Determinism: every update is a fixed sequence of f64 ops on the
+/// event stream, so replaying the same trace reproduces the same
+/// estimates bit-for-bit (property-tested).
+#[derive(Debug, Clone, Default)]
+pub struct CharacteristicsMap {
+    funcs: Vec<FuncEstimate>,
+}
+
+impl CharacteristicsMap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, func: FuncId) -> &mut FuncEstimate {
+        let idx = func.0 as usize;
+        while self.funcs.len() <= idx {
+            self.funcs.push(FuncEstimate::new());
+        }
+        &mut self.funcs[idx]
+    }
+
+    fn get(&self, func: FuncId) -> Option<&FuncEstimate> {
+        self.funcs.get(func.0 as usize)
+    }
+
+    /// Feed an arrival: updates the IAT estimate. Same-instant arrivals
+    /// (a burst) contribute no gap sample, matching the flow-queue IAT
+    /// semantics.
+    pub fn on_arrival(&mut self, func: FuncId, now: u64) {
+        let e = self.ensure(func);
+        if let Some(prev) = e.last_arrival {
+            if now > prev {
+                e.iat.push(now.saturating_sub(prev) as f64 / 1e9);
+            }
+        }
+        e.last_arrival = Some(now);
+        e.arrivals += 1;
+    }
+
+    /// Feed a dispatch: records the estimate charged to virtual time
+    /// (for later debt correction) and the observed concurrency.
+    pub fn on_dispatch(&mut self, func: FuncId, charged_est_s: f64, in_flight: usize) {
+        let e = self.ensure(func);
+        e.outstanding.push_back(charged_est_s);
+        e.concurrency.push(in_flight as f64);
+    }
+
+    /// Feed a completion: updates the warm/cold exec-time split, the
+    /// cold-start cost, and settles the oldest outstanding dispatch
+    /// estimate into the debt accumulator.
+    pub fn on_complete(&mut self, func: FuncId, service: DurNanos, start: StartKind, boot: DurNanos) {
+        let service_s = service as f64 / 1e9;
+        let e = self.ensure(func);
+        match start {
+            StartKind::Cold => {
+                e.cold_exec.push(service_s);
+                e.cold_completions += 1;
+                let warm = if e.warm_completions > 0 {
+                    e.warm_exec.get()
+                } else {
+                    service_s
+                };
+                let extra = (service_s - warm).max(0.0) + boot as f64 / 1e9;
+                e.cold_cost.push(extra);
+            }
+            StartKind::GpuWarm | StartKind::HostWarm => {
+                e.warm_exec.push(service_s);
+                e.warm_completions += 1;
+            }
+        }
+        if let Some(est) = e.outstanding.pop_front() {
+            e.vt_debt += service_s - est;
+        }
+    }
+
+    /// Predicted execution time (seconds): warm estimate when one
+    /// exists, else the cold estimate, else None (never observed).
+    pub fn predicted_exec_s(&self, func: FuncId) -> Option<f64> {
+        let e = self.get(func)?;
+        if e.warm_completions > 0 {
+            Some(e.warm_exec.get())
+        } else if e.cold_completions > 0 {
+            Some(e.cold_exec.get())
+        } else {
+            None
+        }
+    }
+
+    /// Predicted inter-arrival time (seconds); None before two
+    /// arrivals have been seen.
+    pub fn predicted_iat_s(&self, func: FuncId) -> Option<f64> {
+        let e = self.get(func)?;
+        if e.arrivals >= 2 {
+            Some(e.iat.get())
+        } else {
+            None
+        }
+    }
+
+    /// Predicted extra cost of a cold start (seconds), if observed.
+    pub fn cold_cost_s(&self, func: FuncId) -> Option<f64> {
+        let e = self.get(func)?;
+        if e.cold_completions > 0 {
+            Some(e.cold_cost.get())
+        } else {
+            None
+        }
+    }
+
+    /// Observed mean concurrency at dispatch instants.
+    pub fn observed_concurrency(&self, func: FuncId) -> f64 {
+        self.get(func).map(|e| e.concurrency.get()).unwrap_or(0.0)
+    }
+
+    /// Completions observed for `func` (both start kinds).
+    pub fn completions(&self, func: FuncId) -> u64 {
+        self.get(func).map(|e| e.completions()).unwrap_or(0)
+    }
+
+    /// Virtual-time charge (seconds) for the next dispatch of `func`:
+    /// the predicted exec time plus accumulated correction debt,
+    /// clamped at zero with any negative remainder carried forward so
+    /// VT never runs backwards (Global_VT stays monotone for the
+    /// indexed scheduler's lazy min-heap).
+    ///
+    /// `fallback` is charged (and recorded as the outstanding
+    /// estimate) before the first completion is observed — callers
+    /// pass the flow's trailing `avg_exec_s`, so the estimator path
+    /// starts where the legacy path would.
+    pub fn take_tau(&mut self, func: FuncId, fallback: f64) -> f64 {
+        let est = self.predicted_exec_s(func).unwrap_or(fallback);
+        let e = self.ensure(func);
+        let raw = est + e.vt_debt;
+        if raw >= 0.0 {
+            e.vt_debt = 0.0;
+            raw
+        } else {
+            e.vt_debt = raw;
+            0.0
+        }
+    }
+
+    /// Estimate (without debt) for telemetry / marginal-cost modeling.
+    pub fn estimate_or(&self, func: FuncId, fallback: f64) -> f64 {
+        self.predicted_exec_s(func).unwrap_or(fallback)
+    }
+
+    /// Current signed debt for a function (test/introspection).
+    pub fn debt_s(&self, func: FuncId) -> f64 {
+        self.get(func).map(|e| e.vt_debt).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::SEC;
+
+    const F: FuncId = FuncId(3);
+
+    #[test]
+    fn iat_needs_two_arrivals() {
+        let mut m = CharacteristicsMap::new();
+        assert_eq!(m.predicted_iat_s(F), None);
+        m.on_arrival(F, 0);
+        assert_eq!(m.predicted_iat_s(F), None);
+        m.on_arrival(F, 2 * SEC);
+        assert!((m.predicted_iat_s(F).unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warm_cold_split() {
+        let mut m = CharacteristicsMap::new();
+        m.on_complete(F, 10 * SEC, StartKind::Cold, SEC);
+        // Only cold observed: prediction falls back to the cold series.
+        assert!((m.predicted_exec_s(F).unwrap() - 10.0).abs() < 1e-9);
+        m.on_complete(F, 2 * SEC, StartKind::GpuWarm, 0);
+        // Warm observation takes over.
+        assert!((m.predicted_exec_s(F).unwrap() - 2.0).abs() < 1e-9);
+        // Cold cost: first cold saw no warm baseline, so extra = boot.
+        assert!((m.cold_cost_s(F).unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn debt_carries_forward_and_clamps() {
+        let mut m = CharacteristicsMap::new();
+        // Seed the warm estimate at 1.0s.
+        m.on_complete(F, SEC, StartKind::GpuWarm, 0);
+        // Dispatch charged at the estimate; actual runs 3.0s.
+        let tau = m.take_tau(F, 99.0);
+        assert!((tau - 1.0).abs() < 1e-9);
+        m.on_dispatch(F, tau, 1);
+        m.on_complete(F, 3 * SEC, StartKind::GpuWarm, 0);
+        // Debt = +2.0 (under-charged); next tau repays it on top of
+        // the refreshed estimate (ewma 1.0 -> 1.6).
+        let est = m.predicted_exec_s(F).unwrap();
+        let tau2 = m.take_tau(F, 99.0);
+        assert!((tau2 - (est + 2.0)).abs() < 1e-9);
+        assert!((m.debt_s(F)).abs() < 1e-12);
+
+        // Over-charge massively, then verify the negative remainder is
+        // clamped at zero and carried, never rewinding VT.
+        m.on_dispatch(F, 50.0, 1);
+        m.on_complete(F, SEC, StartKind::GpuWarm, 0);
+        let tau3 = m.take_tau(F, 99.0);
+        assert_eq!(tau3, 0.0);
+        assert!(m.debt_s(F) < 0.0);
+    }
+
+    #[test]
+    fn fallback_used_before_observation() {
+        let mut m = CharacteristicsMap::new();
+        assert!((m.take_tau(F, 7.5) - 7.5).abs() < 1e-9);
+        assert!((m.estimate_or(F, 1.25) - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_under_replay() {
+        let feed = |m: &mut CharacteristicsMap| {
+            for i in 0..50u64 {
+                m.on_arrival(F, i * SEC / 3);
+                let tau = m.take_tau(F, 1.0);
+                m.on_dispatch(F, tau, (i % 4) as usize);
+                let kind = if i % 5 == 0 {
+                    StartKind::Cold
+                } else {
+                    StartKind::GpuWarm
+                };
+                m.on_complete(F, (i % 7 + 1) * SEC / 2, kind, SEC / 10);
+            }
+        };
+        let mut a = CharacteristicsMap::new();
+        let mut b = CharacteristicsMap::new();
+        feed(&mut a);
+        feed(&mut b);
+        assert_eq!(a.predicted_exec_s(F), b.predicted_exec_s(F));
+        assert_eq!(a.predicted_iat_s(F), b.predicted_iat_s(F));
+        assert_eq!(a.debt_s(F).to_bits(), b.debt_s(F).to_bits());
+        assert_eq!(a.observed_concurrency(F), b.observed_concurrency(F));
+    }
+}

@@ -1,0 +1,354 @@
+//! §Anticipate: ablation sweep over the anticipatory scheduling
+//! subsystem — grace periods × same-flow batch dispatch × the online
+//! characteristics estimator — on two traces:
+//!
+//! * **bursty** — phase-shifted on/off bursts over a Zipf population
+//!   ([`crate::workload::zipf::generate_bursty`]): idle gaps near the
+//!   TTL boundary make grace periods decisive, and on-phases queue
+//!   several same-flow invocations so batching has coalescing
+//!   opportunities.
+//! * **azure** — the Table-3 medium-intensity Azure-style sample
+//!   (trace 4), the realism check: anticipation must not regress the
+//!   steady trace it was not designed for.
+//!
+//! Each grid cell runs the full sim replay with telemetry attached and
+//! reports latency percentiles, cold ratio, Jain fairness over
+//! per-function total service, and the anticipation counters
+//! (grace holds, batches, estimator error).
+//!
+//! Emits `BENCH_anticipate.json` (`mqfq-bench-anticipate/v1`),
+//! diffable via `scripts/bench_diff.sh` (identity keys: `name`,
+//! `grace`, `batch`, `estimator`). `ANTICIPATE_QUICK=1` shrinks the
+//! traces to a seconds-scale smoke run (CI) and skips the gates.
+//!
+//! Release gate (full run, release build): on the bursty trace, the
+//! grace+batch+estimator cell must beat the no-anticipation baseline
+//! on p50 latency while holding Jain fairness within 5%.
+
+use std::sync::Arc;
+
+use crate::estimator::AnticipateConfig;
+use crate::metrics::fairness::jain_index;
+use crate::plane::PlaneConfig;
+use crate::telemetry::{self, Telemetry};
+use crate::util::json::{self, Json};
+use crate::util::stats::percentiles;
+use crate::workload::azure::AzureConfig;
+use crate::workload::zipf::{BurstyConfig, ZipfConfig};
+use crate::workload::{Trace, Workload};
+
+/// Jain fairness of the anticipating cell must stay within this factor
+/// of the baseline's (the "equal fairness" half of the gate).
+pub const JAIN_GATE: f64 = 0.95;
+
+/// One cell of the ablation grid.
+#[derive(Debug, Clone)]
+pub struct GridRow {
+    /// Identity: trace name ("bursty" | "azure").
+    pub trace: &'static str,
+    /// Identity: anticipation toggles.
+    pub grace: bool,
+    pub batch: bool,
+    pub estimator: bool,
+    pub invocations: usize,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub wavg_s: f64,
+    pub cold_ratio: f64,
+    /// Jain index over per-function total service received.
+    pub jain_service: f64,
+    pub grace_holds: u64,
+    pub batch_dispatches: u64,
+    pub batched_invocations: u64,
+    /// Median |predicted − actual| exec error, ns (0 = estimator off).
+    pub est_error_p50_ns: u64,
+}
+
+fn plane_cfg(grace: bool, batch: bool, estimator: bool) -> PlaneConfig {
+    let mut cfg = PlaneConfig::default();
+    cfg.mqfq.anticipate = AnticipateConfig {
+        grace_alpha: if grace { 2.0 } else { 0.0 },
+        batch_max: if batch { 4 } else { 1 },
+        batch_marginal: 0.6,
+        estimator,
+    };
+    cfg
+}
+
+/// Run one grid cell: full sim replay with telemetry attached.
+pub fn run_cell(
+    trace_name: &'static str,
+    workload: &Workload,
+    trace: &Trace,
+    grace: bool,
+    batch: bool,
+    estimator: bool,
+) -> GridRow {
+    let cfg = plane_cfg(grace, batch, estimator);
+    let (classes, _) = telemetry::workload_classes(workload);
+    let tel = Arc::new(Telemetry::new(&[cfg.n_devices()], &classes));
+    let label = format!(
+        "{trace_name}/grace={}/batch={}/est={}",
+        grace as u8, batch as u8, estimator as u8
+    );
+    let (s, r) = super::run_traced(&label, workload.clone(), trace, cfg, Some(tel.clone()));
+    let rec = r.recorder();
+    let p = percentiles(&rec.latencies_s(), &[50.0, 99.0]);
+    let service: Vec<f64> = rec
+        .per_function()
+        .iter()
+        .map(|a| a.mean_exec_s * a.invocations as f64)
+        .collect();
+    let m = tel.registry.shard(0);
+    GridRow {
+        trace: trace_name,
+        grace,
+        batch,
+        estimator,
+        invocations: s.invocations,
+        p50_s: p[0],
+        p99_s: p[1],
+        wavg_s: s.wavg_latency_s,
+        cold_ratio: s.cold_ratio,
+        jain_service: jain_index(&service),
+        grace_holds: m.grace_holds.get(),
+        batch_dispatches: m.batch_dispatches.get(),
+        batched_invocations: m.batched_invocations.get(),
+        est_error_p50_ns: m.est_abs_error_ns.quantile(0.5),
+    }
+}
+
+/// The bursty stress trace (the gate's subject).
+pub fn bursty_trace(quick: bool) -> (Workload, Trace) {
+    crate::workload::zipf::generate_bursty(&BurstyConfig {
+        base: ZipfConfig {
+            n_funcs: if quick { 6 } else { 16 },
+            total_rate: if quick { 1.0 } else { 1.5 },
+            duration_s: if quick { 90.0 } else { 600.0 },
+            seed: 42,
+            ..Default::default()
+        },
+        burst_s: 8.0,
+        idle_s: 16.0,
+        burst_factor: 6.0,
+    })
+}
+
+/// The Azure realism trace.
+pub fn azure_trace(quick: bool) -> (Workload, Trace) {
+    crate::workload::azure::generate(&AzureConfig {
+        trace_id: 4,
+        duration_s: if quick { 90.0 } else { 600.0 },
+        load_scale: 1.0,
+    })
+}
+
+/// Run the full 2×2×2 grid on both traces.
+pub fn collect(quick: bool) -> Vec<GridRow> {
+    let mut rows = Vec::new();
+    for (name, (w, t)) in [
+        ("bursty", bursty_trace(quick)),
+        ("azure", azure_trace(quick)),
+    ] {
+        for mask in 0..8u32 {
+            let (grace, batch, est) = (mask & 1 != 0, mask & 2 != 0, mask & 4 != 0);
+            rows.push(run_cell(name, &w, &t, grace, batch, est));
+        }
+    }
+    rows
+}
+
+/// Machine-readable form (`BENCH_anticipate.json`).
+pub fn report_json(rows: &[GridRow]) -> Json {
+    let cells = rows
+        .iter()
+        .map(|r| {
+            Json::Obj(vec![
+                ("name".into(), Json::str(r.trace)),
+                ("grace".into(), Json::Bool(r.grace)),
+                ("batch".into(), Json::Bool(r.batch)),
+                ("estimator".into(), Json::Bool(r.estimator)),
+                ("invocations".into(), Json::Int(r.invocations as i64)),
+                ("p50_s".into(), Json::Num(r.p50_s)),
+                ("p99_s".into(), Json::Num(r.p99_s)),
+                ("wavg_s".into(), Json::Num(r.wavg_s)),
+                ("cold_ratio".into(), Json::Num(r.cold_ratio)),
+                ("jain_service".into(), Json::Num(r.jain_service)),
+                ("grace_holds".into(), Json::Int(r.grace_holds as i64)),
+                (
+                    "batch_dispatches".into(),
+                    Json::Int(r.batch_dispatches as i64),
+                ),
+                (
+                    "batched_invocations".into(),
+                    Json::Int(r.batched_invocations as i64),
+                ),
+                (
+                    "est_error_p50_ns".into(),
+                    Json::Int(r.est_error_p50_ns as i64),
+                ),
+            ])
+        })
+        .collect();
+    let mut doc = vec![
+        ("schema".into(), Json::str("mqfq-bench-anticipate/v1")),
+        ("rows".into(), Json::Arr(cells)),
+    ];
+    if let Some((base, full)) = gate_cells(rows) {
+        doc.push(("gate_baseline_p50_s".into(), Json::Num(base.p50_s)));
+        doc.push(("gate_anticipate_p50_s".into(), Json::Num(full.p50_s)));
+        doc.push((
+            "gate_p50_improved".into(),
+            Json::Bool(full.p50_s < base.p50_s),
+        ));
+        doc.push((
+            "gate_jain_held".into(),
+            Json::Bool(full.jain_service >= JAIN_GATE * base.jain_service),
+        ));
+    }
+    Json::Obj(doc)
+}
+
+/// The gate's two bursty cells: (baseline all-off, all-on).
+fn gate_cells(rows: &[GridRow]) -> Option<(&GridRow, &GridRow)> {
+    let base = rows
+        .iter()
+        .find(|r| r.trace == "bursty" && !r.grace && !r.batch && !r.estimator)?;
+    let full = rows
+        .iter()
+        .find(|r| r.trace == "bursty" && r.grace && r.batch && r.estimator)?;
+    Some((base, full))
+}
+
+pub fn main() {
+    let quick = std::env::var("ANTICIPATE_QUICK").is_ok();
+    println!(
+        "== §Anticipate: grace × batch × estimator ablation{} ==",
+        if quick { " (quick)" } else { "" }
+    );
+    let rows = collect(quick);
+    println!(
+        "{:<7} {:>5} {:>5} {:>4} {:>7} {:>8} {:>8} {:>6} {:>6} {:>6} {:>7} {:>8}",
+        "trace", "grace", "batch", "est", "invs", "p50(s)", "p99(s)", "cold%", "jain",
+        "holds", "batches", "est-err"
+    );
+    for r in &rows {
+        println!(
+            "{:<7} {:>5} {:>5} {:>4} {:>7} {:>8.3} {:>8.3} {:>6.1} {:>6.3} {:>6} {:>7} {:>7.1}m",
+            r.trace,
+            r.grace as u8,
+            r.batch as u8,
+            r.estimator as u8,
+            r.invocations,
+            r.p50_s,
+            r.p99_s,
+            r.cold_ratio * 100.0,
+            r.jain_service,
+            r.grace_holds,
+            r.batch_dispatches,
+            r.est_error_p50_ns as f64 / 1e6,
+        );
+    }
+    match json::write_file("BENCH_anticipate.json", &report_json(&rows)) {
+        Ok(()) => println!("wrote BENCH_anticipate.json"),
+        Err(e) => println!("BENCH_anticipate.json not written: {e}"),
+    }
+
+    let (base, full) = gate_cells(&rows).expect("grid contains the gate cells");
+    println!(
+        "gate: bursty p50 {:.3}s (all-on) vs {:.3}s (baseline); jain {:.3} vs {:.3}",
+        full.p50_s, base.p50_s, full.jain_service, base.jain_service
+    );
+    // Sanity in every mode: anticipation must actually engage on the
+    // bursty trace — a sweep that never graced or batched proves the
+    // wiring broke, not that anticipation doesn't pay.
+    assert!(full.grace_holds > 0, "grace never held a flow");
+    assert!(full.batched_invocations > 0, "batching never coalesced");
+    // Timing gates only where timing is meaningful (release, full run).
+    if !cfg!(debug_assertions) && !quick {
+        assert!(
+            full.p50_s < base.p50_s,
+            "anticipation did not improve bursty p50: {:.3}s vs {:.3}s",
+            full.p50_s,
+            base.p50_s
+        );
+        assert!(
+            full.jain_service >= JAIN_GATE * base.jain_service,
+            "anticipation sacrificed fairness: jain {:.3} vs baseline {:.3}",
+            full.jain_service,
+            base.jain_service
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_trace() -> (Workload, Trace) {
+        crate::workload::zipf::generate_bursty(&BurstyConfig {
+            base: ZipfConfig {
+                n_funcs: 3,
+                total_rate: 1.0,
+                duration_s: 40.0,
+                seed: 9,
+                ..Default::default()
+            },
+            burst_s: 5.0,
+            idle_s: 10.0,
+            burst_factor: 6.0,
+        })
+    }
+
+    #[test]
+    fn batching_engages_only_when_enabled() {
+        let (w, t) = tiny_trace();
+        let off = run_cell("bursty", &w, &t, false, false, false);
+        assert_eq!(off.batch_dispatches, 0);
+        assert_eq!(off.grace_holds, 0);
+        assert_eq!(off.est_error_p50_ns, 0, "no estimator, no error series");
+        let on = run_cell("bursty", &w, &t, true, true, true);
+        assert_eq!(on.invocations, off.invocations, "same trace replayed");
+        assert!(on.batched_invocations > 0, "bursts must coalesce");
+    }
+
+    #[test]
+    fn report_json_has_identity_and_gate_keys() {
+        let row = GridRow {
+            trace: "bursty",
+            grace: false,
+            batch: false,
+            estimator: false,
+            invocations: 10,
+            p50_s: 1.0,
+            p99_s: 2.0,
+            wavg_s: 1.2,
+            cold_ratio: 0.1,
+            jain_service: 0.9,
+            grace_holds: 0,
+            batch_dispatches: 0,
+            batched_invocations: 0,
+            est_error_p50_ns: 0,
+        };
+        let mut full = row.clone();
+        full.grace = true;
+        full.batch = true;
+        full.estimator = true;
+        full.p50_s = 0.8;
+        let doc = report_json(&[row, full]).render();
+        for key in [
+            "\"schema\"",
+            "\"name\"",
+            "\"grace\"",
+            "\"batch\"",
+            "\"estimator\"",
+            "\"p50_s\"",
+            "\"jain_service\"",
+            "\"gate_p50_improved\"",
+            "\"gate_jain_held\"",
+        ] {
+            assert!(doc.contains(key), "missing {key} in {doc}");
+        }
+        assert!(doc.contains("mqfq-bench-anticipate/v1"));
+    }
+}

@@ -5,6 +5,7 @@
 //! under `results/`.
 
 pub mod ablation;
+pub mod anticipate;
 pub mod cluster;
 pub mod elastic;
 pub mod fig1;
@@ -155,6 +156,7 @@ pub const ALL: &[(&str, fn())] = &[
     ("hetero", hetero::main),
     ("serving", serving::main),
     ("elastic", elastic::main),
+    ("anticipate", anticipate::main),
 ];
 
 /// Look up an experiment by name.
@@ -173,6 +175,7 @@ mod tests {
             "table1", "fig1", "fig3", "fig4", "table3", "fig5a", "fig5b", "fig5c",
             "fig6a", "fig6b", "fig6c", "fig7a", "fig7b", "fig7c", "fig8a", "fig8b",
             "fig8c", "ablation", "perf", "cluster", "hetero", "serving", "elastic",
+            "anticipate",
         ] {
             assert!(names.contains(&expect), "{expect} missing");
         }

@@ -177,6 +177,11 @@ pub struct Device {
     // Exact utilization integral: Σ min(1, load) dt over state changes.
     busy_integral_ns: f64,
     last_change: Nanos,
+    // Little's-law completion window (adaptive D): completions and
+    // their total service time since the window opened.
+    window_start: Nanos,
+    window_completions: u64,
+    window_service_ns: f64,
 }
 
 impl Device {
@@ -202,6 +207,9 @@ impl Device {
             resident_mb: 0,
             busy_integral_ns: 0.0,
             last_change: 0,
+            window_start: 0,
+            window_completions: 0,
+            window_service_ns: 0.0,
         }
     }
 
@@ -304,9 +312,32 @@ impl Device {
     /// Complete an invocation; returns false if it wasn't running here.
     pub fn complete(&mut self, inv: InvocationId, now: Nanos) -> bool {
         self.integrate(now);
-        let before = self.running.len();
-        self.running.retain(|r| r.inv != inv);
-        before != self.running.len()
+        match self.running.iter().position(|r| r.inv == inv) {
+            Some(pos) => {
+                let r = self.running.swap_remove(pos);
+                self.window_completions += 1;
+                self.window_service_ns += now.saturating_sub(r.started) as f64;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drain the Little's-law completion window: the mean concurrency
+    /// this device *needed* over the window to sustain its observed
+    /// throughput, L = λ·W = (total service time of completions) /
+    /// (window duration). `None` when the window saw no completions —
+    /// no evidence, so the D controller holds. Resets the window.
+    pub fn littles_demand(&mut self, now: Nanos) -> Option<f64> {
+        let window = now.saturating_sub(self.window_start);
+        let (completions, service) = (self.window_completions, self.window_service_ns);
+        self.window_start = now;
+        self.window_completions = 0;
+        self.window_service_ns = 0.0;
+        if window == 0 || completions == 0 {
+            return None;
+        }
+        Some(service / window as f64)
     }
 
     /// Mean utilization over [0, now] from the exact integral.
@@ -451,6 +482,23 @@ mod tests {
         // busy for [0,1000], idle for [1000,2000] ⇒ 50%.
         let mu = d.mean_utilization(2000);
         assert!((mu - 0.5).abs() < 1e-9, "{mu}");
+    }
+
+    #[test]
+    fn littles_window_measures_concurrency_demand() {
+        let mut d = dev();
+        let c = by_name("fft").unwrap();
+        assert_eq!(d.littles_demand(1000), None, "empty window holds");
+        d.begin(InvocationId(1), FuncId(0), c, 1000);
+        d.begin(InvocationId(2), FuncId(1), c, 1000);
+        d.complete(InvocationId(1), 2000);
+        d.complete(InvocationId(2), 3000);
+        // Window [1000, 3000]: completed service 1000 + 2000 over a
+        // 2000 ns window ⇒ demand 1.5 concurrent slots.
+        let demand = d.littles_demand(3000).unwrap();
+        assert!((demand - 1.5).abs() < 1e-9, "{demand}");
+        // Draining resets the window.
+        assert_eq!(d.littles_demand(4000), None);
     }
 
     #[test]

@@ -209,6 +209,26 @@ impl DevicePool {
         self.sticky.get(&func).copied()
     }
 
+    /// Drain every device's Little's-law completion window and average
+    /// the per-device concurrency demands (see
+    /// [`Device::littles_demand`]). `None` when no device completed
+    /// anything this window — the adaptive-D controller holds.
+    pub fn littles_demand(&mut self, now: Nanos) -> Option<f64> {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for d in &mut self.devices {
+            if let Some(demand) = d.littles_demand(now) {
+                sum += demand;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            None
+        } else {
+            Some(sum / n as f64)
+        }
+    }
+
     /// Mean utilization across devices at `now` (exact integral).
     pub fn mean_utilization(&mut self, now: Nanos) -> f64 {
         if self.devices.is_empty() {

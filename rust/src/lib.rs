@@ -31,6 +31,7 @@ pub mod cli;
 pub mod clock;
 pub mod cluster;
 pub mod container;
+pub mod estimator;
 pub mod experiments;
 pub mod gpu;
 pub mod memory;

@@ -18,7 +18,7 @@ use crate::memory::{MemPolicy, MemoryManager};
 use crate::metrics::{InvRecord, Recorder};
 use crate::scheduler::policies::PolicyKind;
 use crate::scheduler::{
-    ConcurrencyController, Invocation, MqfqConfig, Policy, PolicyCtx, QState,
+    AnticipationEvent, ConcurrencyController, Invocation, MqfqConfig, Policy, PolicyCtx, QState,
 };
 use crate::telemetry::{self, EventKind, ShardSink, Telemetry};
 use crate::types::{ContainerId, DurNanos, FuncId, GpuId, InvocationId, Nanos, StartKind, MS};
@@ -38,10 +38,15 @@ pub struct PlaneConfig {
     /// now first-class.
     pub devices: Vec<DeviceSpec>,
     /// Fixed plane-level D (per device without a spec override).
-    /// Ignored if `dynamic_d` is set.
+    /// Ignored if `dynamic_d` or `adaptive_d` is set.
     pub d: usize,
     /// Dynamic D: (max_d, utilization threshold) — §4.4.
     pub dynamic_d: Option<(usize, f64)>,
+    /// Adaptive D from the Little's-law completion tracker:
+    /// `(min_d, max_d)`. Each monitor tick drains the per-device
+    /// completion windows into a concurrency-demand estimate and steps
+    /// D one level toward it. Takes precedence over `dynamic_d`.
+    pub adaptive_d: Option<(usize, usize)>,
     /// Warm-pool capacity (paper default: 32).
     pub pool_size: usize,
     /// CUDA interposition shim enabled (Fig 3 toggles this off).
@@ -63,6 +68,7 @@ impl Default for PlaneConfig {
             devices: uniform_fleet(1, crate::gpu::V100, MultiplexMode::Plain),
             d: 2,
             dynamic_d: None,
+            adaptive_d: None,
             pool_size: 32,
             shim: true,
             monitor_period: 200 * MS,
@@ -120,6 +126,11 @@ struct InFlight {
     ctr: ContainerId,
     arrived: Nanos,
     dispatch: Dispatch,
+    /// Whether this invocation owns its device slot and container. A
+    /// same-flow batch occupies ONE slot/container, registered under
+    /// the last item of the chained timeline (it completes last and
+    /// frees both); the earlier items are riders (`false`).
+    device_bound: bool,
 }
 
 /// The control plane.
@@ -137,6 +148,12 @@ pub struct ControlPlane {
     /// Invocations popped from the policy that could not be placed
     /// (container pool saturated); retried before the policy.
     stash: VecDeque<Invocation>,
+    /// Reused batch scratch for the dispatch loop (no per-pass alloc).
+    batch_buf: Vec<Invocation>,
+    /// In-flight riders: batched invocations that hold no device slot
+    /// of their own (their batch's anchor does).
+    batch_riders: usize,
+    riders_per_func: Vec<usize>,
     next_inv: u64,
     /// §Observability: shard-scoped telemetry sink (None = detached,
     /// one branch per site). Pure observation — nothing here feeds back
@@ -154,9 +171,10 @@ impl ControlPlane {
         let n_funcs = workload.len();
         let policy = cfg.policy.build_mqfq(n_funcs, cfg.mqfq.clone());
         let gpus = DevicePool::new(cfg.devices.clone());
-        let dctl = match cfg.dynamic_d {
-            Some((max_d, thr)) => ConcurrencyController::dynamic(max_d, thr),
-            None => ConcurrencyController::fixed(cfg.d),
+        let dctl = match (cfg.adaptive_d, cfg.dynamic_d) {
+            (Some((min_d, max_d)), _) => ConcurrencyController::littles(min_d, max_d),
+            (None, Some((max_d, thr))) => ConcurrencyController::dynamic(max_d, thr),
+            (None, None) => ConcurrencyController::fixed(cfg.d),
         };
         Self {
             ctrs: ContainerPool::new(cfg.pool_size),
@@ -166,6 +184,9 @@ impl ControlPlane {
             in_flight_per_func: vec![0; n_funcs],
             in_flight: HashMap::new(),
             stash: VecDeque::new(),
+            batch_buf: Vec::new(),
+            batch_riders: 0,
+            riders_per_func: vec![0; n_funcs],
             next_inv: 0,
             tel: None,
             last_global_vt: 0.0,
@@ -283,17 +304,32 @@ impl ControlPlane {
         let Some(fli) = self.in_flight.remove(&inv) else {
             return (None, Vec::new());
         };
-        self.gpus.complete(inv, now);
-        if self.cfg.keep_warm {
-            self.ctrs.release(fli.ctr, now);
-        } else if let Some((g, mb)) = self.ctrs.destroy(fli.ctr) {
-            self.gpus.device_mut(g).sub_resident(mb);
+        if fli.device_bound {
+            self.gpus.complete(inv, now);
+            if self.cfg.keep_warm {
+                self.ctrs.release(fli.ctr, now);
+            } else if let Some((g, mb)) = self.ctrs.destroy(fli.ctr) {
+                self.gpus.device_mut(g).sub_resident(mb);
+            }
+        } else {
+            // Rider: its batch anchor owns the slot and container.
+            self.batch_riders -= 1;
+            self.riders_per_func[fli.func.0 as usize] -= 1;
         }
         self.in_flight_per_func[fli.func.0 as usize] -= 1;
         // Observed service = time since the kernel started (real mode
         // feeds measured time; sim mode reproduces the model).
         let service = now.saturating_sub(fli.dispatch.exec_start);
-        self.policy.on_complete(fli.func, service, now);
+        // Estimator accuracy is judged against the prediction *before*
+        // this completion updates it.
+        let predicted = self.policy.estimated_exec_s(fli.func);
+        self.policy.on_complete_info(
+            fli.func,
+            service,
+            Some(fli.dispatch.start_kind),
+            fli.dispatch.boot,
+            now,
+        );
         let rec = InvRecord {
             inv,
             func: fli.func,
@@ -327,6 +363,19 @@ impl ControlPlane {
                     .b(service as i64)
                     .c(fli.dispatch.gpu.0 as i64),
             );
+            if let Some(pred_s) = predicted {
+                let pred_ns = (pred_s * 1e9) as i64;
+                m.est_abs_error_ns.record((pred_ns - service as i64).unsigned_abs());
+                m.est_last_exec_ns.set(pred_ns);
+                tel.emit(
+                    tel.event(now, EventKind::Estimate)
+                        .inv(inv.0)
+                        .func(fli.func.0)
+                        .a(pred_ns)
+                        .b(service as i64)
+                        .c(fli.dispatch.gpu.0 as i64),
+                );
+            }
         }
         self.apply_state_changes(now);
         (Some(rec), self.try_dispatch(now))
@@ -337,6 +386,22 @@ impl ControlPlane {
     pub fn on_monitor_tick(&mut self, now: Nanos) -> Vec<Dispatch> {
         let util = self.gpus.utilization();
         self.dctl.on_sample(util);
+        if self.dctl.littles {
+            // Adaptive D: drain the per-device completion windows into
+            // a Little's-law concurrency-demand estimate and step D.
+            let demand = self.gpus.littles_demand(now);
+            if let Some(old) = self.dctl.on_littles_estimate(demand) {
+                if let Some(tel) = &self.tel {
+                    tel.metrics().d_resizes.inc();
+                    tel.emit(
+                        tel.event(now, EventKind::DResize)
+                            .a(self.dctl.limit() as i64)
+                            .b(old as i64)
+                            .c((demand.unwrap_or(0.0) * 1e3) as i64),
+                    );
+                }
+            }
+        }
         self.recorder.sample_util(now, util, self.dctl.limit());
         // Background memory maintenance: async swap-out of marked/LRU
         // regions keeps headroom for upcoming prefetches (§4.3).
@@ -372,9 +437,13 @@ impl ControlPlane {
         // setting. The ceiling is *per device*: MIG slices are a
         // constant 1 and spec overrides pin their own device, so a
         // mixed plane holds mixed limits side by side.
-        let plane_ceiling = match self.cfg.dynamic_d {
-            Some((max_d, _)) => max_d,
-            None => self.cfg.d,
+        let plane_ceiling = if let Some((_, max_d)) = self.cfg.adaptive_d {
+            max_d
+        } else {
+            match self.cfg.dynamic_d {
+                Some((max_d, _)) => max_d,
+                None => self.cfg.d,
+            }
         };
         for d in self.gpus.devices() {
             let limit = d.limit(plane_ceiling);
@@ -407,11 +476,17 @@ impl ControlPlane {
                 self.cfg.pool_size
             ));
         }
+        // Batched riders are invisible to the device pool (their batch
+        // anchor holds the slot), so the plane's ledgers exceed the
+        // pool's by exactly the rider counts.
         let mut per_func = vec![0usize; self.in_flight_per_func.len()];
         for d in self.gpus.devices() {
             for r in d.running() {
                 per_func[r.func.0 as usize] += 1;
             }
+        }
+        for (f, n) in per_func.iter_mut().enumerate() {
+            *n += self.riders_per_func[f];
         }
         if per_func != self.in_flight_per_func {
             return Err("per-function in-flight counters out of sync".into());
@@ -419,18 +494,19 @@ impl ControlPlane {
         // 5. the device pool's O(1) aggregates agree with the plane's
         //    own ledgers (they are maintained independently — begin/
         //    complete vs the in-flight map — so drift is detectable).
-        if self.gpus.in_flight() != self.in_flight.len() {
+        if self.gpus.in_flight() + self.batch_riders != self.in_flight.len() {
             return Err(format!(
-                "device-pool in-flight {} != plane in-flight {}",
+                "device-pool in-flight {} + riders {} != plane in-flight {}",
                 self.gpus.in_flight(),
+                self.batch_riders,
                 self.in_flight.len()
             ));
         }
         for (f, &n) in per_func.iter().enumerate() {
-            let pool_n = self.gpus.in_flight_of(FuncId(f as u32));
+            let pool_n = self.gpus.in_flight_of(FuncId(f as u32)) + self.riders_per_func[f];
             if pool_n != n {
                 return Err(format!(
-                    "device-pool in-flight-of f{f} = {pool_n}, devices say {n}"
+                    "device-pool in-flight-of f{f} (+riders) = {pool_n}, devices say {n}"
                 ));
             }
         }
@@ -472,6 +548,7 @@ impl ControlPlane {
     /// binding to a GPU).
     pub fn try_dispatch(&mut self, now: Nanos) -> Vec<Dispatch> {
         let mut out = Vec::new();
+        let mut batch = std::mem::take(&mut self.batch_buf);
         loop {
             let plane_d = self.dctl.limit();
             // Token check: any device with a free slot (per-device
@@ -479,30 +556,31 @@ impl ControlPlane {
             if !self.gpus.has_free_slot(plane_d) {
                 break;
             }
+            batch.clear();
             // Stash (placement-failed invocations) takes priority.
-            let inv = match self.stash.pop_front() {
-                Some(i) => i,
-                None => {
-                    let ctx = PolicyCtx {
-                        in_flight: &self.in_flight_per_func,
-                        d: self.policy_d(),
-                    };
-                    match self.policy.dispatch(now, &ctx) {
-                        Some(i) => i,
-                        None => break,
-                    }
-                }
-            };
-            match self.place(inv, now) {
-                Some(d) => out.push(d),
-                None => {
-                    // Container pool saturated with busy containers;
-                    // park the invocation and stop dispatching.
-                    self.stash.push_back(inv);
+            if let Some(i) = self.stash.pop_front() {
+                batch.push(i);
+            } else {
+                let ctx = PolicyCtx {
+                    in_flight: &self.in_flight_per_func,
+                    d: self.policy_d(),
+                };
+                self.policy.dispatch_batch(now, &ctx, &mut batch);
+                if batch.is_empty() {
                     break;
                 }
             }
+            if !self.place_batch(&batch, now, &mut out) {
+                // Container pool saturated with busy containers; park
+                // the invocations and stop dispatching.
+                for i in batch.drain(..) {
+                    self.stash.push_back(i);
+                }
+                break;
+            }
         }
+        batch.clear();
+        self.batch_buf = batch;
         if !out.is_empty() {
             self.apply_state_changes(now);
         }
@@ -515,7 +593,42 @@ impl ControlPlane {
     /// Called after every dispatch pass; a cheap no-op when detached or
     /// when nothing moved.
     fn probe_scheduler_telemetry(&mut self, now: Nanos) {
+        // Drain anticipation events even when detached so they can't
+        // accumulate (a take of an empty Vec performs no allocation).
+        let anticipation = self.policy.drain_anticipation();
         let Some(tel) = &self.tel else { return };
+        for ev in anticipation {
+            match ev {
+                AnticipationEvent::Grace {
+                    func,
+                    window,
+                    predicted_iat,
+                } => {
+                    tel.metrics().grace_holds.inc();
+                    tel.emit(
+                        tel.event(now, EventKind::Grace)
+                            .func(func.0)
+                            .a(window as i64)
+                            .b(predicted_iat as i64),
+                    );
+                }
+                AnticipationEvent::Batch {
+                    func,
+                    size,
+                    vt_advance,
+                } => {
+                    let m = tel.metrics();
+                    m.batch_dispatches.inc();
+                    m.batched_invocations.add(size as u64);
+                    tel.emit(
+                        tel.event(now, EventKind::Batch)
+                            .func(func.0)
+                            .a(size as i64)
+                            .b(vt_advance as i64),
+                    );
+                }
+            }
+        }
         if let Some(vt) = self.policy.global_vt() {
             if vt.to_bits() != self.last_global_vt.to_bits() {
                 self.last_global_vt = vt;
@@ -536,15 +649,27 @@ impl ControlPlane {
         }
     }
 
-    /// Place one invocation: pick GPU, acquire container, settle memory,
-    /// model the execution timeline.
-    fn place(&mut self, inv: Invocation, now: Nanos) -> Option<Dispatch> {
-        let class = self.workload.func(inv.func).class;
-        let gpu = self
+    /// Place one same-flow batch (usually a singleton): pick a GPU,
+    /// acquire ONE container, settle memory, and model a chained
+    /// execution timeline — the head runs the full modeled service,
+    /// each rider starts when its predecessor finishes and runs the
+    /// `batch_marginal` fraction (warm weights, no boot, no blocking).
+    /// The device slot and container are registered under the LAST
+    /// item, which the chained timeline completes last. Returns false
+    /// (placing nothing) when the container pool is saturated.
+    fn place_batch(&mut self, batch: &[Invocation], now: Nanos, out: &mut Vec<Dispatch>) -> bool {
+        let head = batch[0];
+        let class = self.workload.func(head.func).class;
+        let Some(gpu) = self
             .gpus
-            .pick(inv.func, class, self.dctl.limit(), self.cfg.shim)?;
+            .pick(head.func, class, self.dctl.limit(), self.cfg.shim)
+        else {
+            return false;
+        };
 
-        let acq = self.ctrs.acquire(inv.func, class, gpu, now)?;
+        let Some(acq) = self.ctrs.acquire(head.func, class, gpu, now) else {
+            return false;
+        };
         // Destroyed LRU victims free their device memory.
         for (g, mb) in &acq.evicted {
             self.gpus.device_mut(*g).sub_resident(*mb);
@@ -567,64 +692,82 @@ impl ControlPlane {
         // Execution model: frozen at dispatch from the current device
         // state (see gpu::Device::exec_time).
         let exec_model = self.gpus.device(gpu).exec_time(class, self.cfg.shim);
-        let exec = exec_model + mem_cost.fault;
-        let exec_start = now + acq.boot_ns + mem_cost.blocking;
-        let complete_at = exec_start + exec;
+        let head_exec = exec_model + mem_cost.fault;
+        let rider_exec =
+            (self.cfg.mqfq.anticipate.batch_marginal * head_exec as f64).max(0.0) as DurNanos;
+        let anchor = batch[batch.len() - 1].id;
+        self.gpus.begin(gpu, anchor, head.func, class, now);
 
-        self.gpus.begin(gpu, inv.id, inv.func, class, now);
-        self.in_flight_per_func[inv.func.0 as usize] += 1;
-        let dispatch = Dispatch {
-            inv: inv.id,
-            func: inv.func,
-            gpu,
-            ctr: acq.id,
-            at: now,
-            exec_start,
-            complete_at,
-            start_kind: acq.kind,
-            boot: acq.boot_ns,
-            blocking: mem_cost.blocking,
-            exec,
-        };
-        self.in_flight.insert(
-            inv.id,
-            InFlight {
+        let mut exec_start = now + acq.boot_ns + mem_cost.blocking;
+        for (i, inv) in batch.iter().enumerate() {
+            let is_head = i == 0;
+            let (start_kind, boot, blocking, exec) = if is_head {
+                (acq.kind, acq.boot_ns, mem_cost.blocking, head_exec)
+            } else {
+                (StartKind::GpuWarm, 0, 0, rider_exec)
+            };
+            let complete_at = exec_start + exec;
+            self.in_flight_per_func[inv.func.0 as usize] += 1;
+            if inv.id != anchor {
+                self.batch_riders += 1;
+                self.riders_per_func[inv.func.0 as usize] += 1;
+            }
+            let dispatch = Dispatch {
+                inv: inv.id,
                 func: inv.func,
+                gpu,
                 ctr: acq.id,
-                arrived: inv.arrived,
-                dispatch,
-            },
-        );
-        if let Some(tel) = &self.tel {
-            let m = tel.metrics();
-            match acq.kind {
-                StartKind::Cold => m.cold_starts.inc(),
-                StartKind::HostWarm => m.host_warm_starts.inc(),
-                StartKind::GpuWarm => m.gpu_warm_starts.inc(),
-            }
-            if let Some(d) = tel.device(gpu.0) {
-                d.dispatches.inc();
-                if acq.kind == StartKind::Cold {
-                    d.cold_starts.inc();
+                at: now,
+                exec_start,
+                complete_at,
+                start_kind,
+                boot,
+                blocking,
+                exec,
+            };
+            self.in_flight.insert(
+                inv.id,
+                InFlight {
+                    func: inv.func,
+                    ctr: acq.id,
+                    arrived: inv.arrived,
+                    dispatch,
+                    device_bound: inv.id == anchor,
+                },
+            );
+            if let Some(tel) = &self.tel {
+                let m = tel.metrics();
+                match start_kind {
+                    StartKind::Cold => m.cold_starts.inc(),
+                    StartKind::HostWarm => m.host_warm_starts.inc(),
+                    StartKind::GpuWarm => m.gpu_warm_starts.inc(),
                 }
+                if let Some(d) = tel.device(gpu.0) {
+                    d.dispatches.inc();
+                    if start_kind == StartKind::Cold {
+                        d.cold_starts.inc();
+                    }
+                }
+                tel.emit(
+                    tel.event(now, EventKind::Dispatch)
+                        .inv(inv.id.0)
+                        .func(inv.func.0)
+                        .a(telemetry::start_kind_code(start_kind))
+                        .b(boot as i64)
+                        .c(gpu.0 as i64),
+                );
+                tel.emit(
+                    tel.event(exec_start, EventKind::ExecStart)
+                        .inv(inv.id.0)
+                        .func(inv.func.0)
+                        .a(blocking as i64)
+                        .c(gpu.0 as i64),
+                );
             }
-            tel.emit(
-                tel.event(now, EventKind::Dispatch)
-                    .inv(inv.id.0)
-                    .func(inv.func.0)
-                    .a(telemetry::start_kind_code(acq.kind))
-                    .b(acq.boot_ns as i64)
-                    .c(gpu.0 as i64),
-            );
-            tel.emit(
-                tel.event(exec_start, EventKind::ExecStart)
-                    .inv(inv.id.0)
-                    .func(inv.func.0)
-                    .a(mem_cost.blocking as i64)
-                    .c(gpu.0 as i64),
-            );
+            out.push(dispatch);
+            exec_start = complete_at;
         }
-        Some(dispatch)
+        true
     }
 }
 
@@ -818,6 +961,93 @@ mod tests {
             assert!(kinds.contains(&k), "missing {k:?} in {kinds:?}");
         }
         assert_eq!(tel.dropped_events(), 0);
+    }
+
+    #[test]
+    fn batch_dispatch_chains_same_flow_on_one_slot() {
+        let mut mqfq = MqfqConfig {
+            t: 100.0,
+            ..Default::default()
+        };
+        mqfq.anticipate.batch_max = 3;
+        mqfq.anticipate.batch_marginal = 0.5;
+        let w = workload2();
+        let (classes, _) = crate::telemetry::workload_classes(&w);
+        let cfg = PlaneConfig {
+            mqfq,
+            d: 1,
+            ..Default::default()
+        };
+        let tel = Arc::new(Telemetry::new(&[cfg.n_devices()], &classes));
+        let mut p = ControlPlane::new(w, cfg);
+        p.attach_telemetry(tel.clone(), 0);
+        let (_, head) = p.on_arrival(FuncId(0), 0);
+        assert_eq!(head.len(), 1);
+        for t in 1..4 {
+            let (_, ds) = p.on_arrival(FuncId(0), t);
+            assert!(ds.is_empty(), "D=1: queue behind the head");
+        }
+        // Completing the head frees the slot; one decision coalesces
+        // the three queued invocations into a chained batch.
+        let (_, batch) = p.on_complete(head[0].inv, head[0].complete_at);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[1].exec_start, batch[0].complete_at);
+        assert_eq!(batch[2].exec_start, batch[1].complete_at);
+        for d in &batch[1..] {
+            assert_eq!(d.start_kind, StartKind::GpuWarm);
+            assert_eq!(d.boot, 0);
+            assert_eq!(d.blocking, 0);
+            assert_eq!(d.exec, batch[0].exec / 2);
+            assert_eq!(d.ctr, batch[0].ctr);
+            assert_eq!(d.gpu, batch[0].gpu);
+        }
+        assert_eq!(p.in_flight(), 3);
+        p.check_invariants().unwrap();
+        // Riders drain in order without freeing the slot; the anchor
+        // (last item) releases the device and the container.
+        for (i, d) in batch.iter().enumerate() {
+            let (rec, _) = p.on_complete(d.inv, d.complete_at);
+            assert!(rec.is_some());
+            p.check_invariants().unwrap();
+            assert_eq!(p.in_flight(), 2 - i);
+        }
+        let m = tel.registry.shard(0);
+        assert_eq!(m.batch_dispatches.get(), 1);
+        assert_eq!(m.batched_invocations.get(), 3);
+        let kinds: Vec<EventKind> =
+            tel.trace.drain(100_000).iter().map(|e| e.kind).collect();
+        assert!(kinds.contains(&EventKind::Batch), "{kinds:?}");
+    }
+
+    #[test]
+    fn adaptive_d_grows_with_littles_demand() {
+        let w = workload2();
+        let (classes, _) = crate::telemetry::workload_classes(&w);
+        let cfg = PlaneConfig {
+            adaptive_d: Some((1, 4)),
+            ..Default::default()
+        };
+        let tel = Arc::new(Telemetry::new(&[cfg.n_devices()], &classes));
+        let mut p = ControlPlane::new(w, cfg);
+        p.attach_telemetry(tel.clone(), 0);
+        assert_eq!(p.current_d(), 1, "adaptive D starts at min_d");
+        let (_, ds) = p.on_arrival(FuncId(0), 0);
+        let mut d = ds[0];
+        for _ in 0..5 {
+            let done = d.complete_at;
+            // Tick just before the completion so the next window is
+            // tiny relative to the ~1 s service: demand ≫ 1.
+            p.on_monitor_tick(done - MS);
+            p.on_complete(d.inv, done);
+            let (_, ds) = p.on_arrival(FuncId(0), done);
+            d = ds[0];
+            p.on_monitor_tick(done + MS);
+        }
+        assert_eq!(p.current_d(), 4, "demand-driven steps reach max_d");
+        assert!(tel.registry.shard(0).d_resizes.get() >= 3);
+        let kinds: Vec<EventKind> =
+            tel.trace.drain(100_000).iter().map(|e| e.kind).collect();
+        assert!(kinds.contains(&EventKind::DResize), "{kinds:?}");
     }
 
     #[test]

@@ -1,20 +1,33 @@
-//! Device concurrency control (§4.4): the D parameter, either fixed or
-//! adjusted dynamically from utilization feedback.
+//! Device concurrency control (§4.4): the D parameter — fixed, adjusted
+//! dynamically from utilization feedback, or adaptively from a
+//! Little's-law completion tracker.
 //!
 //! "We take two input parameters: the device utilization threshold (such
 //! as 90%), and the maximum parallelism level. A thread monitors
 //! real-time utilization and changes the D level dynamically to ensure
 //! the utilization is under the threshold."
+//!
+//! The Little's-law mode closes the Ilúvatar exemplar's
+//! "TODO: Little's law" loop: each monitor tick drains the per-device
+//! completion windows into a concurrency-demand estimate
+//! L = λ·W (see `gpu::Device::littles_demand`) and steps D one level
+//! toward `clamp(ceil(L), min_d, max_d)` — one step per tick, so a
+//! noisy window cannot slam the concurrency level.
 
 /// The D controller: exposes the current per-server concurrency limit.
 #[derive(Debug, Clone)]
 pub struct ConcurrencyController {
     /// Hard upper bound on D (paper: "max GPU concurrency", QoS class).
     pub max_d: usize,
+    /// Lower bound on D in Little's-law adaptive mode.
+    pub min_d: usize,
     /// Utilization threshold (paper example: 0.9).
     pub util_threshold: f64,
     /// Fixed-D mode when false (most experiments sweep fixed D).
     pub dynamic: bool,
+    /// Little's-law adaptive mode: D follows the completion-tracker
+    /// demand estimate instead of utilization hysteresis.
+    pub littles: bool,
     cur_d: usize,
     /// Consecutive samples over/under threshold (hysteresis).
     over: u32,
@@ -27,8 +40,10 @@ impl ConcurrencyController {
         assert!(d >= 1);
         Self {
             max_d: d,
+            min_d: d,
             util_threshold: 0.9,
             dynamic: false,
+            littles: false,
             cur_d: d,
             over: 0,
             under: 0,
@@ -40,9 +55,27 @@ impl ConcurrencyController {
         assert!(max_d >= 1);
         Self {
             max_d,
+            min_d: 1,
             util_threshold,
             dynamic: true,
+            littles: false,
             cur_d: 1.max(max_d / 2),
+            over: 0,
+            under: 0,
+        }
+    }
+
+    /// Little's-law adaptive D in [min_d, max_d], starting at min_d
+    /// (concurrency is granted on demonstrated demand, not assumed).
+    pub fn littles(min_d: usize, max_d: usize) -> Self {
+        assert!(min_d >= 1 && min_d <= max_d);
+        Self {
+            max_d,
+            min_d,
+            util_threshold: 0.9,
+            dynamic: false,
+            littles: true,
+            cur_d: min_d,
             over: 0,
             under: 0,
         }
@@ -51,6 +84,25 @@ impl ConcurrencyController {
     /// Current D level.
     pub fn limit(&self) -> usize {
         self.cur_d
+    }
+
+    /// Feed one Little's-law demand estimate (monitor tick; `None` when
+    /// the window saw no completions ⇒ hold). Steps D one level toward
+    /// `clamp(ceil(demand), min_d, max_d)`; returns the old D when the
+    /// level changed (for telemetry).
+    pub fn on_littles_estimate(&mut self, demand: Option<f64>) -> Option<usize> {
+        if !self.littles {
+            return None;
+        }
+        let demand = demand?;
+        let target = (demand.ceil().max(0.0) as usize).clamp(self.min_d, self.max_d);
+        let old = self.cur_d;
+        if target > self.cur_d {
+            self.cur_d += 1;
+        } else if target < self.cur_d {
+            self.cur_d -= 1;
+        }
+        (self.cur_d != old).then_some(old)
     }
 
     /// Feed one utilization sample (monitor tick, 200 ms cadence).
@@ -126,5 +178,39 @@ mod tests {
             c.on_sample(0.8); // between 0.675 and 0.9: hold
         }
         assert_eq!(c.limit(), d0);
+    }
+
+    #[test]
+    fn littles_steps_toward_demand_within_bounds() {
+        let mut c = ConcurrencyController::littles(1, 4);
+        assert_eq!(c.limit(), 1);
+        // Demand 3.2 → target 4, one step per tick.
+        assert_eq!(c.on_littles_estimate(Some(3.2)), Some(1));
+        assert_eq!(c.limit(), 2);
+        assert_eq!(c.on_littles_estimate(Some(3.2)), Some(2));
+        assert_eq!(c.on_littles_estimate(Some(3.2)), Some(3));
+        assert_eq!(c.limit(), 4);
+        // Clamped at max_d even under huge demand.
+        assert_eq!(c.on_littles_estimate(Some(50.0)), None);
+        assert_eq!(c.limit(), 4);
+        // Empty window holds; low demand steps back down to min_d.
+        assert_eq!(c.on_littles_estimate(None), None);
+        assert_eq!(c.limit(), 4);
+        for _ in 0..10 {
+            c.on_littles_estimate(Some(0.1));
+        }
+        assert_eq!(c.limit(), 1);
+        // Utilization samples are ignored in Little's mode.
+        for _ in 0..10 {
+            c.on_sample(1.0);
+        }
+        assert_eq!(c.limit(), 1);
+    }
+
+    #[test]
+    fn non_littles_controllers_ignore_estimates() {
+        let mut c = ConcurrencyController::fixed(2);
+        assert_eq!(c.on_littles_estimate(Some(10.0)), None);
+        assert_eq!(c.limit(), 2);
     }
 }

@@ -13,7 +13,7 @@ pub use dtokens::ConcurrencyController;
 pub use flowq::{FlowQueue, QState};
 pub use mqfq::{MqfqConfig, MqfqSticky};
 
-use crate::types::{DurNanos, FuncId, InvocationId, Nanos};
+use crate::types::{DurNanos, FuncId, InvocationId, Nanos, StartKind};
 
 /// One queued request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -21,6 +21,32 @@ pub struct Invocation {
     pub id: InvocationId,
     pub func: FuncId,
     pub arrived: Nanos,
+}
+
+/// Anticipatory-scheduling decisions a policy wants surfaced as
+/// telemetry (trace events + counters). Drained by the control plane;
+/// purely observational — consumers must not feed them back into
+/// scheduling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AnticipationEvent {
+    /// A flow went idle but stays Active inside its grace window
+    /// (non-work-conserving hold of its sticky device).
+    Grace {
+        func: FuncId,
+        /// Keep-alive window granted (nanos; TTL extended by grace).
+        window: DurNanos,
+        /// Predicted inter-arrival time the window was derived from.
+        predicted_iat: DurNanos,
+    },
+    /// One dispatch decision coalesced several same-flow invocations
+    /// into a single device submission.
+    Batch {
+        func: FuncId,
+        /// Invocations in the batch (head + riders), >= 2.
+        size: usize,
+        /// Aggregate virtual-time advance charged for the batch.
+        vt_advance: DurNanos,
+    },
 }
 
 /// Read-only dispatch context handed to policies.
@@ -46,8 +72,48 @@ pub trait Policy: Send {
     /// Called whenever a D-token is available.
     fn dispatch(&mut self, now: Nanos, ctx: &PolicyCtx) -> Option<Invocation>;
 
+    /// One dispatch *decision*, which may coalesce several same-flow
+    /// invocations into one device submission (anticipatory batching).
+    /// Appends the chosen invocations (head first) to `out` — a
+    /// caller-owned reusable buffer so the steady state allocates
+    /// nothing. Policies without batching inherit this single-dispatch
+    /// default.
+    fn dispatch_batch(&mut self, now: Nanos, ctx: &PolicyCtx, out: &mut Vec<Invocation>) {
+        if let Some(inv) = self.dispatch(now, ctx) {
+            out.push(inv);
+        }
+    }
+
     /// An invocation of `func` finished after `service` on device.
     fn on_complete(&mut self, func: FuncId, service: DurNanos, now: Nanos);
+
+    /// Completion with provenance: how the invocation started (warm vs
+    /// cold) and how long container boot took, so estimating policies
+    /// can split their exec-time series by start kind. The control
+    /// plane calls this; the default discards the extra context.
+    fn on_complete_info(
+        &mut self,
+        func: FuncId,
+        service: DurNanos,
+        _start: Option<StartKind>,
+        _boot: DurNanos,
+        now: Nanos,
+    ) {
+        self.on_complete(func, service, now);
+    }
+
+    /// Anticipatory decisions (grace holds, batch coalescing) since the
+    /// last call, for telemetry. Default: none.
+    fn drain_anticipation(&mut self) -> Vec<AnticipationEvent> {
+        Vec::new()
+    }
+
+    /// The online exec-time estimate for `func`, seconds — Some only
+    /// when the policy runs an estimator (telemetry compares it against
+    /// the actual service time at completion).
+    fn estimated_exec_s(&self, _func: FuncId) -> Option<f64> {
+        None
+    }
 
     /// Total queued (not yet dispatched) invocations. The sim engine and
     /// `plane.try_dispatch` consult this on every event, so every

@@ -54,15 +54,55 @@
 //! (`prop_indexed_matches_naive_reference` checks dispatch-sequence,
 //! VT, pending, and state-change-stream equality over randomized Zipf
 //! traces) and the perf-harness baseline recorded in `BENCH_perf.json`.
+//!
+//! ## Anticipatory scheduling
+//!
+//! With [`AnticipateConfig`] (nested in [`MqfqConfig::anticipate`]) the
+//! scheduler consumes online per-function estimates from a shared
+//! [`CharacteristicsMap`] — EWMA exec time split by warm/cold start
+//! kind, inter-arrival rate, cold-start cost, observed concurrency —
+//! and three behaviors switch on:
+//!
+//! * **Grace periods** (`grace_alpha > 0`): the idle keep-alive window
+//!   becomes `max(TTL, grace_alpha × predicted_IAT)`. A flow whose
+//!   queue empties stays Active (non-work-conserving) through the
+//!   window, holding its warm containers, device regions, and sticky
+//!   placement for the anticipated next arrival; the TTL deadline heap
+//!   arms at the *extended* window, so grace can never be cut short by
+//!   the plain-TTL expiry path. Empty Active flows still do not anchor
+//!   Global_VT — grace preserves locality, not a service reservation.
+//! * **Batch dispatch** (`batch_max > 1`): one dispatch decision pops
+//!   up to `batch_max` invocations of the chosen flow. The head is
+//!   charged full service; each rider charges
+//!   `batch_marginal × estimate` (weights and kernels already
+//!   resident), and riders stop early rather than carry the flow's VT
+//!   past the over-run bound, so the fairness bound (Eq. 1) is
+//!   preserved with τ_f re-read as the batch's aggregate charge.
+//! * **Estimated-then-corrected VT** (`estimator`): dispatch advances
+//!   VT by the *predicted* exec time; at completion the signed error
+//!   (actual − charged) accumulates as per-flow debt repaid by the
+//!   next dispatch's τ (the Ilúvatar `budget` idea). Debt is carried
+//!   *forward* — VT is never lowered retroactively — so Global_VT
+//!   stays monotone and the lazy min-heap stays valid.
+//!
+//! Eviction interaction: grace only stretches the Active phase of the
+//! idle window; expiry past the window still transitions the flow to
+//! Inactive, which is what signals the memory manager to evict. All
+//! three behaviors are mirrored bit-for-bit in [`reference::NaiveMqfq`]
+//! (the shared `CharacteristicsMap` does the arithmetic once), and the
+//! all-neutral config (`grace_alpha = 0`, `batch_max = 1`,
+//! `estimator = false`) is property-tested to be identical to the
+//! pre-anticipation scheduler (`tests/prop_anticipate.rs`).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use crate::types::{secs, to_secs, DurNanos, FuncId, Nanos};
+use crate::estimator::{AnticipateConfig, CharacteristicsMap};
+use crate::types::{secs, to_secs, DurNanos, FuncId, Nanos, StartKind};
 
 use super::flowq::{FlowQueue, QState};
 use super::index::{DenseSet, OrdF64};
-use super::{Invocation, Policy, PolicyCtx};
+use super::{AnticipationEvent, Invocation, Policy, PolicyCtx};
 
 /// Tunables (Table 2) + the ablation switches of §6.4.
 #[derive(Debug, Clone)]
@@ -81,6 +121,10 @@ pub struct MqfqConfig {
     /// original MQFQ's arbitrary eligible pick, here lowest-VT (§6.4
     /// ablation: disabling costs 1–30% latency).
     pub sticky: bool,
+    /// Anticipatory scheduling knobs (grace periods, batch dispatch,
+    /// estimated VT). All-neutral by default — see the module docs'
+    /// "Anticipatory scheduling" section.
+    pub anticipate: AnticipateConfig,
 }
 
 impl Default for MqfqConfig {
@@ -91,8 +135,63 @@ impl Default for MqfqConfig {
             fixed_ttl_s: None,
             vt_wall_time: true,
             sticky: true,
+            anticipate: AnticipateConfig::default(),
         }
     }
+}
+
+/// TTL for one flow (Table 2: α × IAT, or the fixed global variant).
+fn plain_ttl(cfg: &MqfqConfig, flow: &FlowQueue) -> DurNanos {
+    match cfg.fixed_ttl_s {
+        Some(s) => secs(s),
+        None => secs(cfg.ttl_alpha * flow.mean_iat_s()),
+    }
+}
+
+/// Keep-alive window for an idle flow: the TTL, extended to
+/// `grace_alpha × predicted_IAT` when grace periods are on. Shared by
+/// the indexed scheduler and the naive oracle so the grace semantics
+/// cannot drift between them. With `grace_alpha = 0` this degenerates
+/// to the plain TTL exactly.
+fn keep_alive(cfg: &MqfqConfig, chars: &CharacteristicsMap, flow: &FlowQueue) -> DurNanos {
+    let ttl = plain_ttl(cfg, flow);
+    let ga = cfg.anticipate.grace_alpha;
+    if ga <= 0.0 {
+        return ttl;
+    }
+    let iat = chars
+        .predicted_iat_s(flow.func)
+        .unwrap_or_else(|| flow.mean_iat_s());
+    ttl.max(secs(ga * iat))
+}
+
+/// Virtual-time charge for the head of a dispatch decision. With the
+/// estimator on, the predicted exec time plus accumulated correction
+/// debt (consumed here); otherwise the flow's trailing average — the
+/// legacy path, bit-for-bit.
+fn head_tau(cfg: &MqfqConfig, chars: &mut CharacteristicsMap, flow: &FlowQueue) -> f64 {
+    if !cfg.vt_wall_time {
+        return 1.0;
+    }
+    let avg = flow.avg_exec_s();
+    if cfg.anticipate.estimator {
+        chars.take_tau(flow.func, avg)
+    } else {
+        avg
+    }
+}
+
+/// Marginal virtual-time charge for one batched rider:
+/// `batch_marginal × estimate` (debt-free — debt settles on the head).
+fn rider_tau(cfg: &MqfqConfig, chars: &CharacteristicsMap, flow: &FlowQueue) -> f64 {
+    let base = if !cfg.vt_wall_time {
+        1.0
+    } else if cfg.anticipate.estimator {
+        chars.estimate_or(flow.func, flow.avg_exec_s())
+    } else {
+        flow.avg_exec_s()
+    };
+    cfg.anticipate.batch_marginal * base
 }
 
 /// The MQFQ-Sticky policy over a fixed set of registered functions,
@@ -129,6 +228,15 @@ pub struct MqfqSticky {
     /// transition, and all such flows are recorded here or covered by
     /// the heaps above).
     reclass: Vec<u32>,
+    /// Online per-function characteristics (exec time, IAT, cold cost)
+    /// feeding grace windows and estimated VT.
+    chars: CharacteristicsMap,
+    /// Anticipatory decisions awaiting telemetry drain.
+    anticipation: Vec<AnticipationEvent>,
+    /// Reusable buffer backing the single-dispatch `Policy::dispatch`
+    /// shim over the batch-capable core (steady state allocates
+    /// nothing).
+    scratch: Vec<Invocation>,
 }
 
 impl MqfqSticky {
@@ -144,6 +252,9 @@ impl MqfqSticky {
             eligible: DenseSet::new(n_funcs),
             throttled: BinaryHeap::new(),
             reclass: Vec::new(),
+            chars: CharacteristicsMap::new(),
+            anticipation: Vec::new(),
+            scratch: Vec::new(),
         }
     }
 
@@ -159,12 +270,9 @@ impl MqfqSticky {
         self.global_vt
     }
 
-    /// TTL for one flow (Table 2: α × IAT, or the fixed global variant).
-    fn ttl(&self, flow: &FlowQueue) -> DurNanos {
-        match self.cfg.fixed_ttl_s {
-            Some(s) => secs(s),
-            None => secs(self.cfg.ttl_alpha * flow.mean_iat_s()),
-        }
+    /// The online characteristics map (telemetry/introspection).
+    pub fn characteristics(&self) -> &CharacteristicsMap {
+        &self.chars
     }
 
     fn set_state(flow: &mut FlowQueue, state: QState, changes: &mut Vec<(FuncId, QState)>) {
@@ -235,9 +343,16 @@ impl MqfqSticky {
             if f.state == QState::Inactive || Self::is_backlogged(f) {
                 continue;
             }
-            let due = f.last_exec.saturating_add(self.ttl(f));
+            let due = f.last_exec.saturating_add(keep_alive(&self.cfg, &self.chars, f));
             if due <= now {
                 Self::set_state(&mut self.flows[i], QState::Inactive, &mut self.changes);
+            } else {
+                // Not yet due: the keep-alive window grew since this
+                // entry was armed (a grace window over a fresher IAT
+                // estimate). Re-arm at the true deadline so the flow
+                // still expires when the window ends — dropping the
+                // entry would leave it Active forever.
+                self.ttl_heap.push(Reverse((due, idx)));
             }
         }
     }
@@ -285,9 +400,9 @@ impl MqfqSticky {
                 continue; // reactivated only by an arrival
             }
             if self.flows[i].is_empty() && self.flows[i].in_flight == 0 {
-                let ttl = self.ttl(&self.flows[i]);
+                let window = keep_alive(&self.cfg, &self.chars, &self.flows[i]);
                 let f = &mut self.flows[i];
-                if now.saturating_sub(f.last_exec) >= ttl {
+                if now.saturating_sub(f.last_exec) >= window {
                     Self::set_state(f, QState::Inactive, &mut self.changes);
                 } else {
                     // Anticipatory: stay Active while within the grace
@@ -304,49 +419,12 @@ impl MqfqSticky {
             }
         }
     }
-}
 
-impl Policy for MqfqSticky {
-    fn name(&self) -> &'static str {
-        "mqfq-sticky"
-    }
-
-    fn enqueue(&mut self, inv: Invocation, now: Nanos) {
-        let idx = inv.func.0 as usize;
-        let was_empty = self.flows[idx].is_empty();
-        if was_empty && self.flows[idx].in_flight == 0 {
-            // A flow rejoining the backlogged set starts at the current
-            // Global_VT — it gets no credit for its idle past (standard
-            // start-time fair queueing). This applies whether it idled
-            // as Inactive or as empty-Active (anticipation preserves
-            // memory locality, not service credit). Refresh first: the
-            // cached Global_VT can be stale-low after completions
-            // removed its anchor flow from the backlogged set.
-            self.refresh_global_vt();
-            let catch_up = self.global_vt.max(self.flows[idx].vt);
-            let flow = &mut self.flows[idx];
-            flow.vt = catch_up;
-            Self::set_state(flow, QState::Active, &mut self.changes);
-            self.vt_heap.push(Reverse((OrdF64(catch_up), inv.func.0)));
-        }
-        self.flows[idx].push(inv, now);
-        self.queued += 1;
-        if was_empty {
-            // Newly non-empty: index into the candidate structures and
-            // let the next decision re-derive its state like the naive
-            // sweep would.
-            let vt = self.flows[idx].vt;
-            if Self::ineligible(vt, self.global_vt, self.cfg.t) {
-                self.throttled.push(Reverse((OrdF64(vt), inv.func.0)));
-            } else {
-                self.eligible.insert(inv.func.0);
-            }
-            self.reclass.push(inv.func.0);
-        }
-    }
-
-    /// Algorithm 1 DISPATCH, over the incremental indexes.
-    fn dispatch(&mut self, now: Nanos, ctx: &PolicyCtx) -> Option<Invocation> {
+    /// Algorithm 1 DISPATCH over the incremental indexes, batch-capable:
+    /// one decision pops the head plus up to `cap - 1` same-flow riders
+    /// (see the module docs' "Anticipatory scheduling" section). With
+    /// `cap = 1` this is exactly the pre-anticipation single dispatch.
+    fn dispatch_impl(&mut self, now: Nanos, ctx: &PolicyCtx, cap: usize, out: &mut Vec<Invocation>) {
         // The naive version recomputes Global_VT and sweeps UPDATE_STATE
         // over every flow here; the indexed equivalents touch only flows
         // whose answer can have changed.
@@ -386,16 +464,52 @@ impl Policy for MqfqSticky {
                     .then(a.cmp(&b))
             })
         };
-        let chosen = pick?;
+        let Some(chosen) = pick else { return };
         let ci = chosen as usize;
 
-        let tau = if self.cfg.vt_wall_time {
-            self.flows[ci].avg_exec_s()
-        } else {
-            1.0
+        let estimator = self.cfg.anticipate.estimator;
+        let tau = head_tau(&self.cfg, &mut self.chars, &self.flows[ci]);
+        let Some(inv) = self.flows[ci].pop_dispatch(tau, now) else {
+            return;
         };
-        let inv = self.flows[ci].pop_dispatch(tau, now);
         self.queued -= 1;
+        if estimator {
+            self.chars.on_dispatch(FuncId(chosen), tau, ctx.in_flight[ci]);
+        }
+        out.push(inv);
+        let mut batched = 1usize;
+        let mut vt_advance = tau;
+        if cap > 1 {
+            // Riders coalesce at marginal cost; the over-run guard stops
+            // the batch before it would carry the flow's VT past the
+            // fairness bound.
+            let global = self.global_vt;
+            let t = self.cfg.t;
+            let marginal = rider_tau(&self.cfg, &self.chars, &self.flows[ci]);
+            while batched < cap
+                && !self.flows[ci].is_empty()
+                && !Self::over_run(self.flows[ci].vt + marginal, global, t)
+            {
+                let Some(rider) = self.flows[ci].pop_dispatch(marginal, now) else {
+                    break;
+                };
+                self.queued -= 1;
+                if estimator {
+                    self.chars.on_dispatch(FuncId(chosen), marginal, ctx.in_flight[ci]);
+                }
+                out.push(rider);
+                batched += 1;
+                vt_advance += marginal;
+            }
+        }
+        if batched > 1 {
+            self.anticipation.push(AnticipationEvent::Batch {
+                func: FuncId(chosen),
+                size: batched,
+                vt_advance: secs(vt_advance),
+            });
+        }
+
         let new_vt = self.flows[ci].vt;
         self.vt_heap.push(Reverse((OrdF64(new_vt), chosen)));
         // The dispatch may have advanced the global minimum, pushed the
@@ -423,24 +537,120 @@ impl Policy for MqfqSticky {
                 self.throttled.push(Reverse((OrdF64(new_vt), chosen)));
             }
         }
+    }
+}
+
+impl Policy for MqfqSticky {
+    fn name(&self) -> &'static str {
+        "mqfq-sticky"
+    }
+
+    fn enqueue(&mut self, inv: Invocation, now: Nanos) {
+        let idx = inv.func.0 as usize;
+        self.chars.on_arrival(inv.func, now);
+        let was_empty = self.flows[idx].is_empty();
+        if was_empty && self.flows[idx].in_flight == 0 {
+            // A flow rejoining the backlogged set starts at the current
+            // Global_VT — it gets no credit for its idle past (standard
+            // start-time fair queueing). This applies whether it idled
+            // as Inactive or as empty-Active (anticipation preserves
+            // memory locality, not service credit). Refresh first: the
+            // cached Global_VT can be stale-low after completions
+            // removed its anchor flow from the backlogged set.
+            self.refresh_global_vt();
+            let catch_up = self.global_vt.max(self.flows[idx].vt);
+            let flow = &mut self.flows[idx];
+            flow.vt = catch_up;
+            Self::set_state(flow, QState::Active, &mut self.changes);
+            self.vt_heap.push(Reverse((OrdF64(catch_up), inv.func.0)));
+        }
+        self.flows[idx].push(inv, now);
+        self.queued += 1;
+        if was_empty {
+            // Newly non-empty: index into the candidate structures and
+            // let the next decision re-derive its state like the naive
+            // sweep would.
+            let vt = self.flows[idx].vt;
+            if Self::ineligible(vt, self.global_vt, self.cfg.t) {
+                self.throttled.push(Reverse((OrdF64(vt), inv.func.0)));
+            } else {
+                self.eligible.insert(inv.func.0);
+            }
+            self.reclass.push(inv.func.0);
+        }
+    }
+
+    /// Algorithm 1 DISPATCH, over the incremental indexes (the head-only
+    /// view of [`Self::dispatch_impl`]).
+    fn dispatch(&mut self, now: Nanos, ctx: &PolicyCtx) -> Option<Invocation> {
+        let mut buf = std::mem::take(&mut self.scratch);
+        buf.clear();
+        self.dispatch_impl(now, ctx, 1, &mut buf);
+        let inv = buf.pop();
+        self.scratch = buf;
         inv
     }
 
+    fn dispatch_batch(&mut self, now: Nanos, ctx: &PolicyCtx, out: &mut Vec<Invocation>) {
+        let cap = self.cfg.anticipate.batch_max.max(1);
+        self.dispatch_impl(now, ctx, cap, out);
+    }
+
     fn on_complete(&mut self, func: FuncId, service: DurNanos, now: Nanos) {
+        self.on_complete_info(func, service, None, 0, now);
+    }
+
+    fn on_complete_info(
+        &mut self,
+        func: FuncId,
+        service: DurNanos,
+        start: Option<StartKind>,
+        boot: DurNanos,
+        now: Nanos,
+    ) {
         let i = func.0 as usize;
+        self.chars
+            .on_complete(func, service, start.unwrap_or(StartKind::GpuWarm), boot);
         self.flows[i].complete(to_secs(service), now);
         let f = &self.flows[i];
         if f.is_empty() && f.in_flight == 0 {
-            // The flow went idle: arm its keep-alive deadline. Its TTL
-            // inputs (last_exec, mean IAT) are frozen until the next
-            // arrival or dispatch, so this deadline is exact.
-            let due = f.last_exec.saturating_add(self.ttl(f));
+            // The flow went idle: arm its keep-alive deadline. Its
+            // window inputs (last_exec, mean IAT, predicted IAT) are
+            // frozen until the next arrival or dispatch, so this
+            // deadline is exact.
+            let window = keep_alive(&self.cfg, &self.chars, f);
+            let due = f.last_exec.saturating_add(window);
             self.ttl_heap.push(Reverse((due, func.0)));
+            if window > plain_ttl(&self.cfg, f) {
+                // Grace actually extended the hold beyond the TTL:
+                // surface the non-work-conserving decision.
+                let iat = self
+                    .chars
+                    .predicted_iat_s(func)
+                    .unwrap_or_else(|| f.mean_iat_s());
+                self.anticipation.push(AnticipationEvent::Grace {
+                    func,
+                    window,
+                    predicted_iat: secs(iat),
+                });
+            }
             if f.state == QState::Throttled {
                 // The naive sweep flips idle Throttled flows to Active
                 // (anticipatory) at the next decision regardless of VT.
                 self.reclass.push(func.0);
             }
+        }
+    }
+
+    fn drain_anticipation(&mut self) -> Vec<AnticipationEvent> {
+        std::mem::take(&mut self.anticipation)
+    }
+
+    fn estimated_exec_s(&self, func: FuncId) -> Option<f64> {
+        if self.cfg.anticipate.estimator {
+            self.chars.predicted_exec_s(func)
+        } else {
+            None
         }
     }
 
@@ -482,6 +692,10 @@ pub mod reference {
         flows: Vec<FlowQueue>,
         changes: Vec<(FuncId, QState)>,
         global_vt: f64,
+        /// Mirrors the indexed scheduler's characteristics map — fed
+        /// the same event stream, so grace windows, estimated taus,
+        /// and debt evolve identically by construction.
+        chars: CharacteristicsMap,
     }
 
     impl NaiveMqfq {
@@ -493,18 +707,12 @@ pub mod reference {
                     .collect(),
                 changes: Vec::new(),
                 global_vt: 0.0,
+                chars: CharacteristicsMap::new(),
             }
         }
 
         pub fn global_vt(&self) -> f64 {
             self.global_vt
-        }
-
-        fn ttl(&self, flow: &FlowQueue) -> DurNanos {
-            match self.cfg.fixed_ttl_s {
-                Some(s) => secs(s),
-                None => secs(self.cfg.ttl_alpha * flow.mean_iat_s()),
-            }
         }
 
         /// `Global_VT ← min over backlogged flows` by full scan.
@@ -523,14 +731,14 @@ pub mod reference {
         /// Algorithm 1 UPDATE_STATE for one flow.
         fn update_state(&mut self, idx: usize, now: Nanos) {
             let global = self.global_vt;
-            let ttl = self.ttl(&self.flows[idx]);
+            let window = keep_alive(&self.cfg, &self.chars, &self.flows[idx]);
             let t = self.cfg.t;
             let flow = &mut self.flows[idx];
             if flow.state == QState::Inactive {
                 return; // reactivated only by an arrival
             }
             if flow.is_empty() && flow.in_flight == 0 {
-                if now.saturating_sub(flow.last_exec) >= ttl {
+                if now.saturating_sub(flow.last_exec) >= window {
                     MqfqSticky::set_state(flow, QState::Inactive, &mut self.changes);
                     return;
                 }
@@ -543,30 +751,20 @@ pub mod reference {
                 MqfqSticky::set_state(flow, QState::Active, &mut self.changes);
             }
         }
-    }
 
-    impl Policy for NaiveMqfq {
-        fn name(&self) -> &'static str {
-            "mqfq-sticky-naive"
-        }
-
-        fn enqueue(&mut self, inv: Invocation, now: Nanos) {
-            let idx = inv.func.0 as usize;
-            if self.flows[idx].is_empty() && self.flows[idx].in_flight == 0 {
-                self.recompute_global_vt();
-                let catch_up = self.global_vt.max(self.flows[idx].vt);
-                let flow = &mut self.flows[idx];
-                flow.vt = catch_up;
-                MqfqSticky::set_state(flow, QState::Active, &mut self.changes);
-            }
-            self.flows[idx].push(inv, now);
-        }
-
+        /// Full-scan DISPATCH, batch-capable — mirrors
+        /// `MqfqSticky::dispatch_impl` decision-for-decision.
         // The candidate `Vec` allocation is part of the historical
         // per-dispatch cost this baseline exists to measure (the index
         // rebuild eliminates it), so it is kept deliberately.
         #[allow(clippy::needless_collect)]
-        fn dispatch(&mut self, now: Nanos, ctx: &PolicyCtx) -> Option<Invocation> {
+        fn dispatch_impl(
+            &mut self,
+            now: Nanos,
+            ctx: &PolicyCtx,
+            cap: usize,
+            out: &mut Vec<Invocation>,
+        ) {
             self.recompute_global_vt();
             for idx in 0..self.flows.len() {
                 self.update_state(idx, now);
@@ -581,7 +779,7 @@ pub mod reference {
                 })
                 .collect();
             if cand.is_empty() {
-                return None;
+                return;
             }
             let pick = if self.cfg.sticky {
                 if ctx.d != 1 {
@@ -601,21 +799,96 @@ pub mod reference {
                         .then(a.cmp(&b))
                 })
             };
-            let chosen = pick?;
+            let Some(chosen) = pick else { return };
 
-            let tau = if self.cfg.vt_wall_time {
-                self.flows[chosen].avg_exec_s()
-            } else {
-                1.0
+            let estimator = self.cfg.anticipate.estimator;
+            let tau = head_tau(&self.cfg, &mut self.chars, &self.flows[chosen]);
+            let Some(inv) = self.flows[chosen].pop_dispatch(tau, now) else {
+                return;
             };
-            let inv = self.flows[chosen].pop_dispatch(tau, now);
+            if estimator {
+                self.chars
+                    .on_dispatch(FuncId(chosen as u32), tau, ctx.in_flight[chosen]);
+            }
+            out.push(inv);
+            let mut batched = 1usize;
+            if cap > 1 {
+                let marginal = rider_tau(&self.cfg, &self.chars, &self.flows[chosen]);
+                while batched < cap
+                    && !self.flows[chosen].is_empty()
+                    && !MqfqSticky::over_run(self.flows[chosen].vt + marginal, global, t)
+                {
+                    let Some(rider) = self.flows[chosen].pop_dispatch(marginal, now) else {
+                        break;
+                    };
+                    if estimator {
+                        self.chars.on_dispatch(
+                            FuncId(chosen as u32),
+                            marginal,
+                            ctx.in_flight[chosen],
+                        );
+                    }
+                    out.push(rider);
+                    batched += 1;
+                }
+            }
             self.recompute_global_vt();
             self.update_state(chosen, now);
-            inv
+        }
+    }
+
+    impl Policy for NaiveMqfq {
+        fn name(&self) -> &'static str {
+            "mqfq-sticky-naive"
+        }
+
+        fn enqueue(&mut self, inv: Invocation, now: Nanos) {
+            let idx = inv.func.0 as usize;
+            self.chars.on_arrival(inv.func, now);
+            if self.flows[idx].is_empty() && self.flows[idx].in_flight == 0 {
+                self.recompute_global_vt();
+                let catch_up = self.global_vt.max(self.flows[idx].vt);
+                let flow = &mut self.flows[idx];
+                flow.vt = catch_up;
+                MqfqSticky::set_state(flow, QState::Active, &mut self.changes);
+            }
+            self.flows[idx].push(inv, now);
+        }
+
+        fn dispatch(&mut self, now: Nanos, ctx: &PolicyCtx) -> Option<Invocation> {
+            let mut buf = Vec::with_capacity(1);
+            self.dispatch_impl(now, ctx, 1, &mut buf);
+            buf.pop()
+        }
+
+        fn dispatch_batch(&mut self, now: Nanos, ctx: &PolicyCtx, out: &mut Vec<Invocation>) {
+            let cap = self.cfg.anticipate.batch_max.max(1);
+            self.dispatch_impl(now, ctx, cap, out);
         }
 
         fn on_complete(&mut self, func: FuncId, service: DurNanos, now: Nanos) {
+            self.on_complete_info(func, service, None, 0, now);
+        }
+
+        fn on_complete_info(
+            &mut self,
+            func: FuncId,
+            service: DurNanos,
+            start: Option<StartKind>,
+            boot: DurNanos,
+            now: Nanos,
+        ) {
+            self.chars
+                .on_complete(func, service, start.unwrap_or(StartKind::GpuWarm), boot);
             self.flows[func.0 as usize].complete(to_secs(service), now);
+        }
+
+        fn estimated_exec_s(&self, func: FuncId) -> Option<f64> {
+            if self.cfg.anticipate.estimator {
+                self.chars.predicted_exec_s(func)
+            } else {
+                None
+            }
         }
 
         fn pending(&self) -> usize {
@@ -894,6 +1167,180 @@ mod tests {
         assert!(p.dispatch(0, &ctx(&inf, 2)).is_none());
     }
 
+    /// Satellite regression: a flow inside its grace window must not be
+    /// TTL-expired by the deadline heap. Gappy single-flow trace: the
+    /// arrival gap sits past the plain TTL but inside the grace window,
+    /// so the graced run stays Active across the gap while the
+    /// grace-free run goes Inactive.
+    #[test]
+    fn grace_window_outlives_ttl_expiry() {
+        let run = |grace_alpha: f64| {
+            let cfg = MqfqConfig {
+                ttl_alpha: 0.5,
+                anticipate: AnticipateConfig {
+                    grace_alpha,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let mut p = MqfqSticky::new(1, cfg);
+            let inf = [0usize];
+            // Two arrivals 2 s apart: IAT ≈ 2 s, so TTL ≈ 1 s while the
+            // grace window (α=3) is ≈ 6 s.
+            for (id, t) in [(1u64, 0u64), (2, 2 * SEC)] {
+                p.enqueue(
+                    Invocation {
+                        id: InvocationId(id),
+                        func: FuncId(0),
+                        arrived: t,
+                    },
+                    t,
+                );
+                p.dispatch(t, &ctx(&inf, 1)).unwrap();
+                p.on_complete(FuncId(0), SEC / 2, t + SEC / 2);
+            }
+            // Idle since 2.5 s; probe at 5 s (past TTL, inside grace).
+            assert!(p.dispatch(5 * SEC, &ctx(&inf, 1)).is_none());
+            p
+        };
+
+        let graced = run(3.0);
+        assert_eq!(
+            graced.flow(FuncId(0)).state,
+            QState::Active,
+            "grace window must hold the flow Active past the plain TTL"
+        );
+        let plain = run(0.0);
+        assert_eq!(
+            plain.flow(FuncId(0)).state,
+            QState::Inactive,
+            "without grace the TTL path demotes at ≈3.5 s"
+        );
+
+        // Past the grace window the flow still expires (grace stretches
+        // the hold, it does not cancel eviction).
+        let mut graced = graced;
+        let inf = [0usize];
+        assert!(graced.dispatch(20 * SEC, &ctx(&inf, 1)).is_none());
+        assert_eq!(graced.flow(FuncId(0)).state, QState::Inactive);
+    }
+
+    #[test]
+    fn grace_hold_surfaces_anticipation_event() {
+        let cfg = MqfqConfig {
+            ttl_alpha: 0.5,
+            anticipate: AnticipateConfig {
+                grace_alpha: 3.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut p = MqfqSticky::new(1, cfg);
+        let inf = [0usize];
+        for (id, t) in [(1u64, 0u64), (2, 2 * SEC)] {
+            p.enqueue(
+                Invocation {
+                    id: InvocationId(id),
+                    func: FuncId(0),
+                    arrived: t,
+                },
+                t,
+            );
+            p.dispatch(t, &ctx(&inf, 1)).unwrap();
+            p.on_complete(FuncId(0), SEC / 2, t + SEC / 2);
+        }
+        let events = p.drain_anticipation();
+        assert!(
+            events
+                .iter()
+                .any(|e| matches!(e, AnticipationEvent::Grace { func: FuncId(0), .. })),
+            "idle-with-grace must record a Grace hold: {events:?}"
+        );
+        assert!(p.drain_anticipation().is_empty(), "drain must consume");
+    }
+
+    #[test]
+    fn batch_dispatch_coalesces_same_flow() {
+        let cfg = MqfqConfig {
+            anticipate: AnticipateConfig {
+                batch_max: 3,
+                batch_marginal: 0.5,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut p = MqfqSticky::new(1, cfg);
+        enqueue_n(&mut p, 0, 5, 0, 1);
+        let inf = [0usize];
+        let mut out = Vec::new();
+        p.dispatch_batch(0, &ctx(&inf, 1), &mut out);
+        // Head + 2 riders, FIFO order; τ = 1 s (default) for the head
+        // and 0.5 s marginal per rider → VT = 2.0.
+        assert_eq!(
+            out.iter().map(|i| i.id.0).collect::<Vec<_>>(),
+            vec![1, 2, 3]
+        );
+        assert_eq!(p.pending(), 2);
+        assert!((p.queue_vt(FuncId(0)).unwrap() - 2.0).abs() < 1e-9);
+        assert_eq!(p.flow(FuncId(0)).in_flight, 3);
+        let events = p.drain_anticipation();
+        assert!(
+            events
+                .iter()
+                .any(|e| matches!(e, AnticipationEvent::Batch { size: 3, .. })),
+            "{events:?}"
+        );
+    }
+
+    #[test]
+    fn batch_riders_respect_over_run_bound() {
+        // T = 1.0 and τ defaults of 1 s: the head advances VT to 1.0
+        // (== Global_VT + T, not over), but any rider at marginal 1.0
+        // would over-run — the batch must stop at the head.
+        let cfg = MqfqConfig {
+            t: 1.0,
+            anticipate: AnticipateConfig {
+                batch_max: 8,
+                batch_marginal: 1.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut p = MqfqSticky::new(2, cfg);
+        enqueue_n(&mut p, 0, 6, 0, 1);
+        enqueue_n(&mut p, 1, 1, 0, 100); // anchors Global_VT at 0
+        let inf = [0usize, 0];
+        let mut out = Vec::new();
+        p.dispatch_batch(0, &ctx(&inf, 1), &mut out);
+        assert_eq!(out.len(), 1, "fairness guard must cap the batch: {out:?}");
+    }
+
+    #[test]
+    fn estimator_vt_charges_prediction_then_repays_debt() {
+        let cfg = MqfqConfig {
+            anticipate: AnticipateConfig {
+                estimator: true,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut p = MqfqSticky::new(1, cfg);
+        enqueue_n(&mut p, 0, 2, 0, 1);
+        let inf = [0usize];
+        // No observation yet: charged at the 1 s black-box default.
+        p.dispatch(0, &ctx(&inf, 1)).unwrap();
+        assert!((p.queue_vt(FuncId(0)).unwrap() - 1.0).abs() < 1e-9);
+        // Actual service 3 s → debt +2 s; the next dispatch charges the
+        // refreshed estimate (EWMA seeded at 3.0) plus the debt.
+        p.on_complete(FuncId(0), 3 * SEC, SEC);
+        p.dispatch(2 * SEC, &ctx(&inf, 1)).unwrap();
+        assert!(
+            (p.queue_vt(FuncId(0)).unwrap() - 6.0).abs() < 1e-9,
+            "vt {}",
+            p.queue_vt(FuncId(0)).unwrap()
+        );
+    }
+
     /// The tentpole guarantee: over randomized Zipf-popularity traces of
     /// interleaved arrivals, dispatches, and completions, the indexed
     /// implementation produces the *identical* dispatch sequence, VTs,
@@ -914,6 +1361,15 @@ mod tests {
                 },
                 vt_wall_time: g.bool(0.8),
                 sticky: g.bool(0.8),
+                // Half the cases exercise the anticipatory machinery
+                // (grace windows, rider batches, estimated-then-
+                // corrected taus); the other half stay all-neutral.
+                anticipate: AnticipateConfig {
+                    grace_alpha: if g.bool(0.5) { g.f64(0.0, 4.0) } else { 0.0 },
+                    batch_max: g.int(1, 5),
+                    batch_marginal: g.f64(0.1, 1.0),
+                    estimator: g.bool(0.5),
+                },
             };
             let d = g.int(1, 4);
             let mut fast = MqfqSticky::new(n_flows, cfg.clone());
@@ -978,14 +1434,16 @@ mod tests {
                     }
                     1 => {
                         let c = ctx(&in_flight, d);
-                        let a = fast.dispatch(now, &c);
-                        let b = oracle.dispatch(now, &c);
+                        let mut a = Vec::new();
+                        let mut b = Vec::new();
+                        fast.dispatch_batch(now, &c, &mut a);
+                        oracle.dispatch_batch(now, &c, &mut b);
                         if a != b {
                             return Err(format!(
                                 "step {step}: dispatch diverged: indexed={a:?} naive={b:?}"
                             ));
                         }
-                        if let Some(inv) = a {
+                        for inv in a {
                             in_flight[inv.func.0 as usize] += 1;
                             outstanding.push(inv);
                         }
@@ -995,8 +1453,15 @@ mod tests {
                             let k = g.int(0, outstanding.len() - 1);
                             let inv = outstanding.swap_remove(k);
                             let svc = secs(g.f64(0.01, 4.0));
-                            fast.on_complete(inv.func, svc, now);
-                            oracle.on_complete(inv.func, svc, now);
+                            let start = match g.int(0, 3) {
+                                0 => None,
+                                1 => Some(StartKind::Cold),
+                                2 => Some(StartKind::HostWarm),
+                                _ => Some(StartKind::GpuWarm),
+                            };
+                            let boot = secs(g.f64(0.0, 1.0));
+                            fast.on_complete_info(inv.func, svc, start, boot, now);
+                            oracle.on_complete_info(inv.func, svc, start, boot, now);
                             in_flight[inv.func.0 as usize] -= 1;
                         }
                     }
@@ -1027,8 +1492,10 @@ mod tests {
             // Equal up to laziness: the indexed cache refreshes on the
             // next decision, so compare through one.
             let c = ctx(&in_flight, d);
-            let a = fast.dispatch(now, &c);
-            let b = oracle.dispatch(now, &c);
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            fast.dispatch_batch(now, &c, &mut a);
+            oracle.dispatch_batch(now, &c, &mut b);
             if a != b {
                 return Err(format!("final dispatch diverged: {a:?} vs {b:?}"));
             }

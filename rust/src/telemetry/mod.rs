@@ -30,6 +30,10 @@
 //! | `d_tokens`   | tokens in use                       | current limit D | —    |
 //! | `evict`      | megabytes moved                     | —               | gpu  |
 //! | `epoch`      | new epoch                           | tickets lost    | —    |
+//! | `grace`      | grace window ns                     | predicted IAT ns | —   |
+//! | `batch`      | invocations coalesced               | VT advance, virtual ns | — |
+//! | `d_resize`   | new D                               | old D           | demand ×1e3 |
+//! | `estimate`   | predicted exec ns                   | actual exec ns  | gpu  |
 //!
 //! The per-invocation lifecycle reads `submit → [route] → enqueue →
 //! dispatch → exec_start → complete|error` (`route` appears only on

@@ -174,6 +174,20 @@ pub struct ShardMetrics {
     pub d_tokens: Gauge,
     /// Last observed Global_VT, in virtual nanoseconds.
     pub global_vt_ns: Gauge,
+    /// Anticipatory scheduling: flows held Active past their plain TTL
+    /// by an estimator-derived grace window.
+    pub grace_holds: Counter,
+    /// Dispatch decisions that coalesced >1 same-flow invocation, and
+    /// the total invocations that rode in those batches (head + riders).
+    pub batch_dispatches: Counter,
+    pub batched_invocations: Counter,
+    /// Adaptive-D controller level changes.
+    pub d_resizes: Counter,
+    /// Estimator accuracy: |predicted − actual| exec time at completion
+    /// (only recorded when the estimator had a prediction).
+    pub est_abs_error_ns: Histogram,
+    /// Last estimator exec-time prediction observed at completion, ns.
+    pub est_last_exec_ns: Gauge,
     /// Lifecycle phase latencies, nanoseconds.
     pub queue_wait_ns: Histogram,
     pub exec_ns: Histogram,
@@ -333,8 +347,14 @@ impl Registry {
         counter_family!("mqfq_flow_activations_total", flow_activations);
         counter_family!("mqfq_flow_throttles_total", flow_throttles);
         counter_family!("mqfq_flow_deactivations_total", flow_deactivations);
+        counter_family!("mqfq_grace_holds_total", grace_holds);
+        counter_family!("mqfq_batch_dispatches_total", batch_dispatches);
+        counter_family!("mqfq_batched_invocations_total", batched_invocations);
+        counter_family!("mqfq_d_resizes_total", d_resizes);
         gauge_family!("mqfq_d_tokens", d_tokens);
         gauge_family!("mqfq_global_vt_ns", global_vt_ns);
+        gauge_family!("mqfq_est_last_exec_ns", est_last_exec_ns);
+        summary_family!("mqfq_est_abs_error_ns", est_abs_error_ns);
         summary_family!("mqfq_queue_wait_ns", queue_wait_ns);
         summary_family!("mqfq_exec_ns", exec_ns);
         summary_family!("mqfq_e2e_ns", e2e_ns);
@@ -465,8 +485,23 @@ impl Registry {
                         "flow_deactivations".into(),
                         Json::Int(m.flow_deactivations.get() as i64),
                     ),
+                    ("grace_holds".into(), Json::Int(m.grace_holds.get() as i64)),
+                    (
+                        "batch_dispatches".into(),
+                        Json::Int(m.batch_dispatches.get() as i64),
+                    ),
+                    (
+                        "batched_invocations".into(),
+                        Json::Int(m.batched_invocations.get() as i64),
+                    ),
+                    ("d_resizes".into(), Json::Int(m.d_resizes.get() as i64)),
                     ("d_tokens".into(), Json::Int(m.d_tokens.get())),
                     ("global_vt_ns".into(), Json::Int(m.global_vt_ns.get())),
+                    (
+                        "est_last_exec_ns".into(),
+                        Json::Int(m.est_last_exec_ns.get()),
+                    ),
+                    ("est_abs_error_ns".into(), m.est_abs_error_ns.to_json()),
                     ("queue_wait_ns".into(), m.queue_wait_ns.to_json()),
                     ("exec_ns".into(), m.exec_ns.to_json()),
                     ("e2e_ns".into(), m.e2e_ns.to_json()),
@@ -597,6 +632,12 @@ mod tests {
         r.shard(0).completed.add(3);
         r.shard(1).submitted.add(1);
         r.shard(0).e2e_ns.record(5_000);
+        r.shard(0).grace_holds.add(2);
+        r.shard(0).batch_dispatches.inc();
+        r.shard(0).batched_invocations.add(3);
+        r.shard(0).d_resizes.inc();
+        r.shard(0).est_abs_error_ns.record(250);
+        r.shard(0).est_last_exec_ns.set(1_500);
         r.device(0, 1).unwrap().dispatches.inc();
         assert!(r.device(0, 5).is_none());
         assert!(r.device(9, 0).is_none());
@@ -626,6 +667,21 @@ mod tests {
             prom.contains("mqfq_class_completed_total{class=\"isoneural\"} 2"),
             "{prom}"
         );
+        assert!(prom.contains("mqfq_grace_holds_total{shard=\"0\"} 2"), "{prom}");
+        assert!(
+            prom.contains("mqfq_batch_dispatches_total{shard=\"0\"} 1"),
+            "{prom}"
+        );
+        assert!(
+            prom.contains("mqfq_batched_invocations_total{shard=\"0\"} 3"),
+            "{prom}"
+        );
+        assert!(prom.contains("mqfq_d_resizes_total{shard=\"0\"} 1"), "{prom}");
+        assert!(
+            prom.contains("mqfq_est_last_exec_ns{shard=\"0\"} 1500"),
+            "{prom}"
+        );
+        assert!(prom.contains("mqfq_est_abs_error_ns_count{shard=\"0\"} 1"), "{prom}");
 
         assert!(prom.contains("mqfq_open_connections 5"), "{prom}");
         assert!(prom.contains("mqfq_accepted_connections_total 7"), "{prom}");
@@ -641,6 +697,10 @@ mod tests {
         let doc = r.to_json().render();
         assert!(doc.contains("mqfq-metrics/v1"), "{doc}");
         assert!(doc.contains("\"submitted\": 3"), "{doc}");
+        assert!(doc.contains("\"grace_holds\": 2"), "{doc}");
+        assert!(doc.contains("\"batched_invocations\": 3"), "{doc}");
+        assert!(doc.contains("\"d_resizes\": 1"), "{doc}");
+        assert!(doc.contains("\"est_last_exec_ns\": 1500"), "{doc}");
         assert!(doc.contains("\"class\": \"fft\""), "{doc}");
         assert!(doc.contains("\"open_connections\": 5"), "{doc}");
         assert!(doc.contains("\"slow_client_disconnects\": 1"), "{doc}");

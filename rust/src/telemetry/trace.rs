@@ -55,10 +55,18 @@ pub enum EventKind {
     Evict,
     /// Shard epoch bumped (membership change).
     Epoch,
+    /// Flow emptied but held Active for an anticipatory grace window.
+    Grace,
+    /// One dispatch decision coalesced several same-flow invocations.
+    Batch,
+    /// Adaptive-D controller resized the concurrency level.
+    DResize,
+    /// Estimator predicted-vs-actual execution time at completion.
+    Estimate,
 }
 
 /// Every kind, for vocabulary assertions and exhaustive rendering.
-pub const ALL_KINDS: [EventKind; 12] = [
+pub const ALL_KINDS: [EventKind; 16] = [
     EventKind::Submit,
     EventKind::Route,
     EventKind::Enqueue,
@@ -71,6 +79,10 @@ pub const ALL_KINDS: [EventKind; 12] = [
     EventKind::DTokens,
     EventKind::Evict,
     EventKind::Epoch,
+    EventKind::Grace,
+    EventKind::Batch,
+    EventKind::DResize,
+    EventKind::Estimate,
 ];
 
 impl EventKind {
@@ -89,6 +101,10 @@ impl EventKind {
             EventKind::DTokens => "d_tokens",
             EventKind::Evict => "evict",
             EventKind::Epoch => "epoch",
+            EventKind::Grace => "grace",
+            EventKind::Batch => "batch",
+            EventKind::DResize => "d_resize",
+            EventKind::Estimate => "estimate",
         }
     }
 

@@ -71,6 +71,68 @@ pub fn generate(cfg: &ZipfConfig) -> (Workload, Trace) {
     (workload, trace)
 }
 
+/// Parameters of the bursty on/off variant ([`generate_bursty`]).
+#[derive(Debug, Clone)]
+pub struct BurstyConfig {
+    /// The Zipf population the bursts modulate.
+    pub base: ZipfConfig,
+    /// On-phase length, seconds.
+    pub burst_s: f64,
+    /// Off-phase (idle) length, seconds.
+    pub idle_s: f64,
+    /// Rate multiplier inside a burst (the off phase emits nothing), so
+    /// a function's burst rate is `burst_factor × its zipf rate`.
+    pub burst_factor: f64,
+}
+
+impl Default for BurstyConfig {
+    fn default() -> Self {
+        Self {
+            base: ZipfConfig::default(),
+            burst_s: 10.0,
+            idle_s: 20.0,
+            burst_factor: 6.0,
+        }
+    }
+}
+
+/// Generate a bursty on/off trace over the Zipf population: each
+/// function cycles through `burst_s` seconds of Poisson arrivals at
+/// `burst_factor ×` its zipf rate followed by `idle_s` seconds of
+/// silence, with a per-function random phase shift so bursts overlap
+/// partially rather than in lockstep. This is the anticipation
+/// stress-shape: the idle gaps sit near the TTL boundary (grace
+/// periods decide whether flows stay resident) and the on-phases queue
+/// several same-flow invocations (batch dispatch gets coalescing
+/// opportunities).
+pub fn generate_bursty(cfg: &BurstyConfig) -> (Workload, Trace) {
+    let (workload, _) = generate(&cfg.base);
+    let mut rng = Rng::new(cfg.base.seed ^ 0x6275_7273_7479); // "bursty"
+    let period = cfg.burst_s + cfg.idle_s;
+    let mut trace = Trace::default();
+    for f in &workload.funcs {
+        let burst_rate = cfg.burst_factor / f.mean_iat_s.max(1e-9);
+        let phase = rng.f64() * period;
+        let mut t = rng.exp(1.0 / burst_rate);
+        while t < cfg.base.duration_s {
+            // Position within this function's phase-shifted cycle.
+            let pos = (t + phase) % period;
+            if pos < cfg.burst_s {
+                trace.events.push(TraceEvent {
+                    at: secs(t),
+                    func: FuncId(f.id.0),
+                });
+                t += rng.exp(1.0 / burst_rate);
+            } else {
+                // Skip the off phase to the start of the next burst.
+                t += period - pos + rng.exp(1.0 / burst_rate);
+            }
+        }
+    }
+    trace.sort();
+    (workload, trace)
+}
+
 /// Build an open-loop trace with exponential IATs from per-function means.
 pub fn open_loop_poisson(workload: &Workload, duration_s: f64, rng: &mut Rng) -> Trace {
     let mut trace = Trace::default();
@@ -129,6 +191,49 @@ mod tests {
         let (_, t1) = generate(&cfg);
         let (_, t2) = generate(&cfg);
         assert_eq!(t1.events, t2.events);
+    }
+
+    #[test]
+    fn bursty_trace_has_gaps_and_bursts() {
+        let cfg = BurstyConfig {
+            base: ZipfConfig {
+                n_funcs: 4,
+                total_rate: 2.0,
+                duration_s: 300.0,
+                seed: 3,
+                ..Default::default()
+            },
+            burst_s: 10.0,
+            idle_s: 20.0,
+            burst_factor: 6.0,
+        };
+        let (w, t) = generate_bursty(&cfg);
+        assert_eq!(w.len(), 4);
+        assert!(!t.events.is_empty());
+        // Duty cycle 1/3 at 6× rate ⇒ offered load ≈ 2× the base rate.
+        let rps = t.len() as f64 / cfg.base.duration_s;
+        assert!(rps > 1.0 && rps < 10.0, "rps {rps}");
+        // The most popular function's arrival stream must show real
+        // silence (≥ half the idle phase) — the grace-period stressor.
+        let f0: Vec<u64> = t
+            .events
+            .iter()
+            .filter(|e| e.func == FuncId(0))
+            .map(|e| e.at)
+            .collect();
+        assert!(f0.len() >= 8, "popular function arrivals: {}", f0.len());
+        let max_gap = f0.windows(2).map(|p| p[1] - p[0]).max().unwrap();
+        assert!(
+            max_gap > secs(cfg.idle_s / 2.0),
+            "max gap {max_gap} too small for idle_s {}",
+            cfg.idle_s
+        );
+        // And bursts: some gap far below the burst-phase mean IAT.
+        let min_gap = f0.windows(2).map(|p| p[1] - p[0]).min().unwrap();
+        assert!(min_gap < secs(2.0), "min gap {min_gap}");
+        // Deterministic for a seed.
+        let (_, t2) = generate_bursty(&cfg);
+        assert_eq!(t.events, t2.events);
     }
 
     #[test]

@@ -1,0 +1,298 @@
+//! Property tests for the anticipatory scheduling subsystem
+//! (estimator, grace periods, batch dispatch, adaptive D — see
+//! `scheduler::mqfq` §Anticipatory scheduling).
+//!
+//! The load-bearing property: with every anticipation knob at its
+//! neutral setting (grace 0, batch-max 1, estimator off, static D) the
+//! scheduler is bit-identical to the pre-anticipation dispatch core —
+//! full `InvRecord` streams, across all policies. The knobs are pure
+//! extensions, not behavior drift.
+
+use mqfq::estimator::AnticipateConfig;
+use mqfq::gpu::{uniform_fleet, MultiplexMode};
+use mqfq::memory::MemPolicy;
+use mqfq::plane::PlaneConfig;
+use mqfq::scheduler::policies::PolicyKind;
+use mqfq::scheduler::{Invocation, MqfqConfig, MqfqSticky, Policy, PolicyCtx};
+use mqfq::sim::replay;
+use mqfq::types::{secs, FuncId, InvocationId};
+use mqfq::util::prop::{assert_prop, Gen};
+use mqfq::workload::catalog::CATALOG;
+use mqfq::workload::trace::{Trace, TraceEvent, Workload};
+
+const POLICIES: [PolicyKind; 6] = [
+    PolicyKind::Fcfs,
+    PolicyKind::Batch,
+    PolicyKind::PaellaSjf,
+    PolicyKind::Eevdf,
+    PolicyKind::Sfq,
+    PolicyKind::Mqfq,
+];
+
+/// Random workload + open-loop trace (bursty enough that grace windows
+/// and batch opportunities actually arise).
+fn gen_scenario(g: &mut Gen) -> (Workload, Trace) {
+    let n_funcs = g.int(1, 10);
+    let mut w = Workload::default();
+    for i in 0..n_funcs {
+        let class = &CATALOG[g.int(0, CATALOG.len() - 1)];
+        w.register(class, i, g.f64(0.5, 20.0));
+    }
+    let n_events = g.int(1, 140);
+    let horizon = g.f64(10.0, 240.0);
+    let mut t = Trace::default();
+    for _ in 0..n_events {
+        // Half the events land inside short bursts so same-flow
+        // back-to-back arrivals (the batching substrate) are common.
+        let at = if g.bool(0.5) {
+            g.f64(0.0, horizon)
+        } else {
+            g.f64(0.0, horizon / 8.0)
+        };
+        t.events.push(TraceEvent {
+            at: secs(at),
+            func: FuncId(g.int(0, n_funcs - 1) as u32),
+        });
+    }
+    t.sort();
+    (w, t)
+}
+
+fn gen_config(g: &mut Gen) -> PlaneConfig {
+    PlaneConfig {
+        policy: *g.choose(&POLICIES),
+        devices: uniform_fleet(
+            g.int(1, 2),
+            mqfq::gpu::V100,
+            *g.choose(&[MultiplexMode::Plain, MultiplexMode::Mps, MultiplexMode::Mig(2)]),
+        ),
+        mem_policy: *g.choose(&[MemPolicy::StockUvm, MemPolicy::Madvise]),
+        d: g.int(1, 4),
+        pool_size: g.int(2, 24),
+        mqfq: MqfqConfig {
+            t: g.f64(0.0, 20.0),
+            ttl_alpha: g.f64(0.0, 4.0),
+            vt_wall_time: g.bool(0.8),
+            sticky: g.bool(0.8),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Anticipation disabled ≡ the scheduler that shipped before it
+/// existed: the default config, an explicitly-neutral AnticipateConfig
+/// (with a varied — and therefore provably inert — batch_marginal),
+/// and an adaptive-D controller pinned to MIN = MAX = D all replay to
+/// bit-identical `InvRecord` streams, under every policy.
+#[test]
+fn prop_neutral_anticipation_is_bit_identical() {
+    assert_prop("neutral-anticipation-identity", 50, |g| {
+        let (w, t) = gen_scenario(g);
+        let base = gen_config(g);
+        let mut neutral = base.clone();
+        neutral.mqfq.anticipate = AnticipateConfig {
+            grace_alpha: 0.0,
+            batch_max: 1,
+            batch_marginal: g.f64(0.0, 2.0), // inert when batch_max = 1
+            estimator: false,
+        };
+        let mut pinned_d = base.clone();
+        pinned_d.adaptive_d = Some((base.d, base.d));
+        let label = format!("{} d={}", base.policy.name(), base.d);
+        let reference = replay(w.clone(), &t, base).recorder().records.clone();
+        for (name, cfg) in [("neutral", neutral), ("pinned-D", pinned_d)] {
+            let records = replay(w.clone(), &t, cfg).recorder().records.clone();
+            if records != reference {
+                return Err(format!(
+                    "{label}: {name} config diverged from the default \
+                     ({} vs {} records)",
+                    records.len(),
+                    reference.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `dispatch_batch` under a neutral config is the single-dispatch code
+/// path: two MqfqSticky instances fed identical arrival/completion
+/// streams — one driven through `dispatch()`, the other through
+/// `dispatch_batch()` — make identical decisions at every step, and the
+/// batch-driven one never reports an anticipation event.
+#[test]
+fn prop_batch_path_equals_serial_path_when_neutral() {
+    assert_prop("neutral-batch-path-identity", 60, |g| {
+        let n_funcs = g.int(1, 8);
+        let cfg = MqfqConfig {
+            t: g.f64(0.0, 10.0),
+            ttl_alpha: g.f64(0.0, 4.0),
+            vt_wall_time: g.bool(0.8),
+            sticky: g.bool(0.8),
+            ..Default::default()
+        };
+        assert!(!cfg.anticipate.enabled(), "default must be neutral");
+        let mut a = MqfqSticky::new(n_funcs, cfg.clone());
+        let mut b = MqfqSticky::new(n_funcs, cfg);
+        let d = g.int(1, 3);
+        let mut in_flight = vec![0usize; n_funcs];
+        let mut outstanding: Vec<Invocation> = Vec::new();
+        let mut buf = Vec::new();
+        let (mut id, mut now) = (0u64, 0u64);
+        for step in 0..g.int(10, 200) {
+            now += secs(g.f64(0.0, 2.0));
+            match g.int(0, 2) {
+                0 => {
+                    let inv = Invocation {
+                        id: InvocationId(id),
+                        func: FuncId(g.int(0, n_funcs - 1) as u32),
+                        arrived: now,
+                    };
+                    id += 1;
+                    a.enqueue(inv, now);
+                    b.enqueue(inv, now);
+                }
+                1 => {
+                    let ctx = PolicyCtx {
+                        in_flight: &in_flight,
+                        d,
+                    };
+                    let serial = a.dispatch(now, &ctx);
+                    buf.clear();
+                    b.dispatch_batch(now, &ctx, &mut buf);
+                    if buf.len() > 1 {
+                        return Err(format!(
+                            "step {step}: neutral config coalesced {} invocations",
+                            buf.len()
+                        ));
+                    }
+                    if serial != buf.first().copied() {
+                        return Err(format!(
+                            "step {step}: dispatch()={serial:?} but \
+                             dispatch_batch()={:?}",
+                            buf.first()
+                        ));
+                    }
+                    if let Some(inv) = serial {
+                        in_flight[inv.func.0 as usize] += 1;
+                        outstanding.push(inv);
+                    }
+                }
+                _ => {
+                    if !outstanding.is_empty() {
+                        let k = g.int(0, outstanding.len() - 1);
+                        let inv = outstanding.swap_remove(k);
+                        in_flight[inv.func.0 as usize] -= 1;
+                        let service = secs(g.f64(0.01, 3.0));
+                        // Different completion entry points on purpose:
+                        // the provenance-carrying hook must not change
+                        // neutral scheduling either.
+                        a.on_complete(inv.func, service, now);
+                        b.on_complete_info(inv.func, service, None, 0, now);
+                    }
+                }
+            }
+            if a.pending() != b.pending() {
+                return Err(format!(
+                    "step {step}: pending diverged {} vs {}",
+                    a.pending(),
+                    b.pending()
+                ));
+            }
+            if a.drain_state_changes() != b.drain_state_changes() {
+                return Err(format!("step {step}: state transitions diverged"));
+            }
+            if !b.drain_anticipation().is_empty() {
+                return Err(format!(
+                    "step {step}: anticipation events under a neutral config"
+                ));
+            }
+        }
+        for f in 0..n_funcs {
+            let func = FuncId(f as u32);
+            if a.queue_vt(func) != b.queue_vt(func) {
+                return Err(format!("flow {f}: virtual time diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Conservation under full anticipation: grace windows, coalesced batch
+/// dispatch, the estimator, and adaptive D never lose, duplicate, or
+/// reorder-in-time an invocation — every arrival completes exactly
+/// once, causally, and the plane's deep invariants hold drained.
+#[test]
+fn prop_batched_completions_conserved() {
+    assert_prop("anticipation-conservation", 50, |g| {
+        let (w, t) = gen_scenario(g);
+        let n = t.len();
+        let mut cfg = gen_config(g);
+        cfg.mqfq.anticipate = AnticipateConfig {
+            grace_alpha: g.f64(0.5, 4.0),
+            batch_max: g.int(2, 5),
+            batch_marginal: g.f64(0.2, 0.9),
+            estimator: g.bool(0.5),
+        };
+        if g.bool(0.5) {
+            cfg.adaptive_d = Some((1, g.int(1, 4)));
+        }
+        let label = format!(
+            "{} grace={:.1} batch={} est={} adaptive={:?}",
+            cfg.policy.name(),
+            cfg.mqfq.anticipate.grace_alpha,
+            cfg.mqfq.anticipate.batch_max,
+            cfg.mqfq.anticipate.estimator,
+            cfg.adaptive_d,
+        );
+        let r = replay(w, &t, cfg);
+        if r.recorder().len() != n {
+            return Err(format!(
+                "{label}: {n} arrivals but {} completions",
+                r.recorder().len()
+            ));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for rec in &r.recorder().records {
+            if !seen.insert(rec.inv) {
+                return Err(format!("{label}: duplicate completion {:?}", rec.inv));
+            }
+            if rec.dispatched < rec.arrived || rec.completed <= rec.dispatched {
+                return Err(format!("{label}: non-causal record {rec:?}"));
+            }
+        }
+        if r.plane.in_flight() != 0 || r.plane.pending() != 0 {
+            return Err(format!("{label}: undrained plane"));
+        }
+        r.plane
+            .check_invariants()
+            .map_err(|e| format!("{label}: {e}"))
+    });
+}
+
+/// The estimator is deterministic under replay: the same trace and the
+/// same fully-anticipating config produce byte-identical record streams
+/// on repeated runs (EWMA state is a pure function of the event
+/// sequence — no wall clocks, no ambient randomness).
+#[test]
+fn prop_estimator_replay_deterministic() {
+    assert_prop("estimator-determinism", 30, |g| {
+        let (w, t) = gen_scenario(g);
+        let mut cfg = gen_config(g);
+        cfg.policy = *g.choose(&[PolicyKind::Mqfq, PolicyKind::Sfq]);
+        cfg.mqfq.anticipate = AnticipateConfig {
+            grace_alpha: g.f64(0.5, 3.0),
+            batch_max: g.int(2, 4),
+            batch_marginal: g.f64(0.2, 0.9),
+            estimator: true,
+        };
+        cfg.adaptive_d = Some((1, 4));
+        let first = replay(w.clone(), &t, cfg.clone()).recorder().records.clone();
+        let second = replay(w, &t, cfg).recorder().records.clone();
+        if first != second {
+            return Err("two replays of one trace+config diverged".into());
+        }
+        Ok(())
+    });
+}

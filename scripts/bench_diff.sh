@@ -70,6 +70,7 @@ def flatten(value, prefix, out):
             label = str(i)
             if isinstance(sub, dict):
                 ident = [str(sub[k]) for k in ("fleet", "router", "impl", "name",
+                                               "grace", "batch", "estimator",
                                                "shape", "loop", "clients",
                                                "connections",
                                                "shards", "flows", "active",

@@ -19,6 +19,10 @@ Lifecycle joins are keyed on (shard, inv). Field semantics per kind
   dispatch    a=start_kind b=boot_ns  device chosen (0=cold 1=host 2=gpu-warm)
   exec_start  a=mem_blocking_ns       kernel actually starts
   complete    a=e2e_ns b=exec_ns      finished
+  grace       a=window_ns b=iat_ns    emptied flow held Active (anticipation)
+  batch       a=size b=vt_ns          same-flow batch dispatched
+  d_resize    a=new_d b=old_d         adaptive-D controller resized tokens
+  estimate    a=pred_ns b=actual_ns   estimator accuracy at completion
 
 Derived phases (nanoseconds in the trace, reported in ms):
 
@@ -27,6 +31,7 @@ Derived phases (nanoseconds in the trace, reported in ms):
   mem_block  = exec_start.a          (demand-fault blocking before exec)
   exec       = complete.at - exec_start.at
   e2e        = complete.a
+  est_error  = |estimate.a - estimate.b|  (predicted vs actual exec)
 
 Usage: trace_summarize.py [TRACE.jsonl ...] [--json]
 Reads stdin when no file is given. --json emits a machine-readable doc
@@ -86,9 +91,14 @@ def summarize(events):
     start_kinds = {}
     spills = 0
     epochs = []
+    grace_holds = 0
+    batch_dispatches = 0
+    batched_invocations = 0
+    d_resizes = 0
     # (shard, inv) -> {phase timestamps / fields}
     invs = {}
-    phases = {"queue_wait": [], "boot": [], "mem_block": [], "exec": [], "e2e": []}
+    phases = {"queue_wait": [], "boot": [], "mem_block": [], "exec": [],
+              "e2e": [], "est_error": []}
 
     for ev in events:
         kind = ev["kind"]
@@ -124,6 +134,15 @@ def summarize(events):
             phases["e2e"].append(ev.get("a", 0))
             if "exec_start_at" in rec:
                 phases["exec"].append(ev["at"] - rec["exec_start_at"])
+        elif kind == "grace":
+            grace_holds += 1
+        elif kind == "batch":
+            batch_dispatches += 1
+            batched_invocations += ev.get("a", 0)
+        elif kind == "d_resize":
+            d_resizes += 1
+        elif kind == "estimate":
+            phases["est_error"].append(abs(ev.get("a", 0) - ev.get("b", 0)))
 
     for rec in invs.values():
         if "submit_at" in rec and "dispatch_at" in rec:
@@ -140,6 +159,10 @@ def summarize(events):
         "cold_ratio": (cold / dispatched) if dispatched else 0.0,
         "router_spills": spills,
         "epoch_changes": len(epochs),
+        "grace_holds": grace_holds,
+        "batch_dispatches": batch_dispatches,
+        "batched_invocations": batched_invocations,
+        "d_resizes": d_resizes,
         "phases": {name: phase_stats(vals) for name, vals in phases.items()},
     }
 
@@ -165,6 +188,12 @@ def main():
           f"cold ratio: {summary['cold_ratio']:.3f}  "
           f"spills: {summary['router_spills']}  "
           f"epoch changes: {summary['epoch_changes']}")
+    if (summary["grace_holds"] or summary["batch_dispatches"]
+            or summary["d_resizes"]):
+        print(f"  anticipation: grace holds={summary['grace_holds']}  "
+              f"batches={summary['batch_dispatches']} "
+              f"(covering {summary['batched_invocations']} invocations)  "
+              f"D resizes={summary['d_resizes']}")
     print("  event kinds: "
           + "  ".join(f"{k}={n}" for k, n in summary["kinds"].items()))
     if summary["start_kinds"]:
