@@ -1,6 +1,6 @@
 # Convenience targets; see ROADMAP.md for the tier-1 verify.
 
-.PHONY: check test smoke bench-perf bench-cluster bench-hetero bench-serving bench-elastic bench-anticipate artifacts
+.PHONY: check test smoke bench-perf bench-cluster bench-hetero bench-serving bench-elastic bench-anticipate bench-faults artifacts
 
 # Build + test + clippy-clean + serving smoke (the full local gate).
 check:
@@ -48,6 +48,13 @@ bench-elastic:
 # Compare against a previous run: scripts/bench_diff.sh OLD.json BENCH_anticipate.json
 bench-anticipate:
 	cargo bench --bench anticipate_ablation
+
+# Regenerate the fault-tolerance storm (device failure/recovery,
+# transient retries, poison-tenant breaker, overload shedding — sim +
+# TCP) and BENCH_faults.json. Quick smoke: FAULTS_QUICK=1 make bench-faults.
+# Compare against a previous run: scripts/bench_diff.sh OLD.json BENCH_faults.json
+bench-faults:
+	cargo bench --bench fault_storm
 
 # AOT-lower the python/JAX function bodies to HLO artifacts where the
 # rust runtime (rust/artifacts/) looks for them.

@@ -1,0 +1,12 @@
+//! Fault-tolerance storm bench: GPU failure + recovery, transient
+//! retries, poison-tenant circuit breaking, and overload shedding,
+//! in virtual time and over real TCP. `FAULTS_QUICK=1` for a smoke
+//! run. Emits `BENCH_faults.json` (diff with `scripts/bench_diff.sh`).
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    mqfq::experiments::faults::main();
+    println!("[bench fault_storm completed in {:.2?}]", t0.elapsed());
+}

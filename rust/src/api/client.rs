@@ -5,9 +5,15 @@
 //! Optional bounded retry ([`RetryPolicy`], off by default): transient
 //! failures — `overloaded` backpressure and transport errors — are
 //! retried with jittered exponential backoff; an I/O failure
-//! reconnects and re-handshakes before the resend. Non-transient
-//! errors (unknown function, shard lost, bad request, ...) are never
-//! retried: they are answers, not weather.
+//! reconnects and re-handshakes before the resend. What may be resent
+//! depends on the verb: *idempotent* reads (`describe`, `stats`,
+//! `membership`, `poll`, `metrics`) retry both backpressure and
+//! transport faults, while `invoke` retries backpressure only — an
+//! `overloaded` reply proves the server refused the work, but a dead
+//! connection proves nothing (the first copy may already be running,
+//! and a blind resend would double-invoke). Non-transient errors
+//! (unknown function, shard lost, quarantined, bad request, ...) are
+//! never retried: they are answers, not weather.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
@@ -65,8 +71,13 @@ impl RetryPolicy {
         }
     }
 
-    /// Is this error worth retrying? Backpressure and transport faults
-    /// are transient; everything else is a real answer.
+    /// Is this error worth retrying *at all*? Backpressure and
+    /// transport faults are transient; everything else — including
+    /// `quarantined` (the server told you to stay away) and
+    /// `shard-lost` (the work is gone; resubmitting is the caller's
+    /// decision) — is a real answer. Whether a transient `io` may
+    /// actually be retried additionally depends on the verb's
+    /// idempotency; see [`ApiClient`]'s call paths.
     pub fn transient(e: &ApiError) -> bool {
         matches!(e, ApiError::Overloaded { .. } | ApiError::Io { .. })
     }
@@ -167,17 +178,41 @@ impl ApiClient {
         self.writer.set_read_timeout(timeout).map_err(io_err)
     }
 
-    /// One round trip under the retry policy: transient failures
-    /// (overload, transport) back off and retry up to
-    /// `retry.attempts` times; an I/O failure reconnects first.
+    /// One round trip under the retry policy for a **non-idempotent**
+    /// verb (submits): only `overloaded` — which proves the server
+    /// refused the work — is retried. A transport fault is surfaced
+    /// immediately: the request may already have been accepted, and a
+    /// blind resend would double-invoke.
     fn call(&mut self, req: &Request) -> Result<Response, ApiError> {
+        self.call_with(req, false)
+    }
+
+    /// One round trip under the retry policy for an **idempotent**
+    /// verb (`describe`, `stats`, `membership`, `poll`, `metrics`):
+    /// both backpressure and transport faults back off and retry up to
+    /// `retry.attempts` times; an I/O failure reconnects first.
+    fn call_idempotent(&mut self, req: &Request) -> Result<Response, ApiError> {
+        self.call_with(req, true)
+    }
+
+    fn call_with(&mut self, req: &Request, idempotent: bool) -> Result<Response, ApiError> {
         let mut attempt = 0;
         loop {
             let err = match self.call_once(req) {
                 Ok(resp) => return Ok(resp),
                 Err(e) => e,
             };
-            if attempt >= self.retry.attempts || !RetryPolicy::transient(&err) {
+            let retryable = match &err {
+                // Backpressure / shed: refused before any state change.
+                ApiError::Overloaded { .. } => true,
+                // Transport fault: resend only when a duplicate is
+                // harmless.
+                ApiError::Io { .. } => idempotent,
+                // Everything else — `quarantined`, `shard-lost`,
+                // `exec-failed`, ... — is an answer, never retried.
+                _ => false,
+            };
+            if attempt >= self.retry.attempts || !retryable {
                 return Err(err);
             }
             std::thread::sleep(self.retry.backoff(attempt, &mut self.rng));
@@ -249,7 +284,7 @@ impl ApiClient {
     }
 
     pub fn describe(&mut self) -> Result<DescribeInfo, ApiError> {
-        match self.call(&Request::Describe)? {
+        match self.call_idempotent(&Request::Describe)? {
             Response::Described(d) => Ok(d),
             other => Err(unexpected("describe", &other)),
         }
@@ -390,7 +425,7 @@ impl ApiClient {
 
     /// Non-blocking completion check: `Some` consumes the ticket.
     pub fn poll(&mut self, ticket: Ticket) -> Result<Option<InvokeOutcome>, ApiError> {
-        match self.call(&Request::Poll { ticket })? {
+        match self.call_idempotent(&Request::Poll { ticket })? {
             Response::Done(o) => Ok(Some(o)),
             Response::Pending { .. } => Ok(None),
             other => Err(unexpected("poll", &other)),
@@ -398,7 +433,7 @@ impl ApiClient {
     }
 
     pub fn stats(&mut self) -> Result<StatsSnapshot, ApiError> {
-        match self.call(&Request::Stats)? {
+        match self.call_idempotent(&Request::Stats)? {
             Response::Stats(s) => Ok(s),
             other => Err(unexpected("stats", &other)),
         }
@@ -407,7 +442,7 @@ impl ApiClient {
     /// Telemetry: the server's metrics registry rendered in `format`
     /// (Prometheus text or the `mqfq-metrics/v1` JSON document).
     pub fn metrics(&mut self, format: MetricsFormat) -> Result<String, ApiError> {
-        match self.call(&Request::Metrics { format })? {
+        match self.call_idempotent(&Request::Metrics { format })? {
             Response::Metrics { body, .. } => Ok(body),
             other => Err(unexpected("metrics", &other)),
         }
@@ -453,7 +488,15 @@ impl ApiClient {
         req: &Request,
         what: &str,
     ) -> Result<MembershipInfo, ApiError> {
-        match self.call(req)? {
+        // The membership *query* is a pure read; drain/join/kill mutate
+        // cluster state and must not be blindly resent over a dead
+        // connection.
+        let resp = if matches!(req, Request::Membership) {
+            self.call_idempotent(req)?
+        } else {
+            self.call(req)?
+        };
+        match resp {
             Response::Membership(m) => Ok(m),
             other => Err(unexpected(what, &other)),
         }
@@ -479,11 +522,13 @@ mod tests {
     use std::sync::Arc;
     use std::thread;
 
-    /// A deliberately flaky protocol server on a real TCP socket:
-    /// the first `overloads` stats requests get an `overloaded` error,
+    /// A deliberately flaky protocol server on a real TCP socket: the
+    /// first `overloads` counted requests get an `overloaded` error,
     /// the next `drops` get their connection cut before the reply (the
     /// client sees a transport error), and everything after that
-    /// succeeds. Counts every stats request it sees.
+    /// succeeds. Counts every stats/invoke request it sees; invoking
+    /// `"poison"` always answers `quarantined`, any other invoke
+    /// `bad-request`.
     fn flaky_server(overloads: usize, drops: usize) -> (SocketAddr, Arc<AtomicUsize>) {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
@@ -513,25 +558,34 @@ mod tests {
                             proto: PROTOCOL_VERSION,
                             server: "flaky-mock".to_string(),
                         },
-                        Request::Stats => {
+                        Request::Stats | Request::Invoke { .. } => {
                             seen_srv.fetch_add(1, Ordering::SeqCst);
                             if overloads > 0 {
                                 overloads -= 1;
                                 Response::Error(ApiError::Overloaded {
                                     pending: 9,
                                     limit: 1,
+                                    retry_after_ms: 0,
                                 })
                             } else if drops > 0 {
                                 drops -= 1;
                                 // Cut the connection instead of replying.
                                 break 'conn;
                             } else {
-                                Response::Stats(StatsSnapshot::default())
+                                match req {
+                                    Request::Stats => Response::Stats(StatsSnapshot::default()),
+                                    Request::Invoke { func, .. } if func == "poison" => {
+                                        Response::Error(ApiError::Quarantined {
+                                            func,
+                                            retry_after_ms: 5,
+                                        })
+                                    }
+                                    _ => Response::Error(ApiError::BadRequest {
+                                        detail: "mock serves stats only".to_string(),
+                                    }),
+                                }
                             }
                         }
-                        Request::Invoke { .. } => Response::Error(ApiError::BadRequest {
-                            detail: "mock serves stats only".to_string(),
-                        }),
                         _ => Response::Bye,
                     };
                     let mut out = String::new();
@@ -567,13 +621,26 @@ mod tests {
                 ceil / 2.0
             );
         }
-        // Transience taxonomy: backpressure and transport only.
-        assert!(RetryPolicy::transient(&ApiError::Overloaded { pending: 1, limit: 1 }));
+        // Transience taxonomy: backpressure and transport only. The
+        // fault-tolerance errors are answers — never retry fodder.
+        assert!(RetryPolicy::transient(&ApiError::Overloaded {
+            pending: 1,
+            limit: 1,
+            retry_after_ms: 0,
+        }));
         assert!(RetryPolicy::transient(&ApiError::Io { detail: "x".into() }));
         assert!(!RetryPolicy::transient(&ApiError::ShuttingDown));
         assert!(!RetryPolicy::transient(&ApiError::ShardLost {
             shard: 0,
             ticket: Ticket(1),
+        }));
+        assert!(!RetryPolicy::transient(&ApiError::Quarantined {
+            func: "f".into(),
+            retry_after_ms: 100,
+        }));
+        assert!(!RetryPolicy::transient(&ApiError::ExecFailed {
+            ticket: Ticket(2),
+            attempts: 3,
         }));
     }
 
@@ -626,5 +693,47 @@ mod tests {
         assert_eq!(seen.load(Ordering::SeqCst), 2, "dropped + resent");
         // Non-transient server answers are never retried.
         assert_eq!(c.invoke("f", None).unwrap_err().code(), "bad-request");
+    }
+
+    #[test]
+    fn invoke_is_never_resent_over_a_dropped_connection() {
+        // A submit whose connection died may already be running on the
+        // server: the transport error must surface immediately, with no
+        // reconnect-and-resend (which would double-invoke).
+        let (addr, seen) = flaky_server(0, 1);
+        let mut c = ApiClient::connect(addr).unwrap();
+        c.set_retry(RetryPolicy {
+            attempts: 3,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(5),
+        });
+        assert_eq!(c.invoke("f", None).unwrap_err().code(), "io");
+        assert_eq!(seen.load(Ordering::SeqCst), 1, "submit must not be resent");
+    }
+
+    #[test]
+    fn invoke_retries_backpressure_but_quarantine_is_final() {
+        let (addr, seen) = flaky_server(2, 0);
+        let mut c = ApiClient::connect(addr).unwrap();
+        c.set_retry(RetryPolicy {
+            attempts: 5,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(5),
+        });
+        // Two `overloaded` rejections are retried (the server refused
+        // the work; resending cannot duplicate it) — then the breaker's
+        // answer comes through on the third attempt and is final.
+        let err = c.invoke("poison", None).unwrap_err();
+        assert_eq!(err.code(), "quarantined");
+        assert_eq!(
+            seen.load(Ordering::SeqCst),
+            3,
+            "two overloads retried, quarantine surfaced immediately"
+        );
+        let ApiError::Quarantined { func, retry_after_ms } = err else {
+            panic!("structured quarantine fields lost");
+        };
+        assert_eq!(func, "poison");
+        assert_eq!(retry_after_ms, 5);
     }
 }

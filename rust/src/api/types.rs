@@ -345,8 +345,15 @@ pub enum ApiError {
     /// but its unclaimed result aged out of the bounded done-table —
     /// distinguishable from a ticket that never existed.
     UnknownTicket { ticket: Ticket, evicted: bool },
-    /// Admission control: queued work is at/over the backpressure bound.
-    Overloaded { pending: usize, limit: usize },
+    /// Admission control: queued work is at/over the backpressure bound,
+    /// or the deadline-aware shed predicts queueing past the configured
+    /// deadline. `retry_after_ms` is the server's backoff hint (0 when
+    /// the plain backpressure bound tripped, which carries no estimate).
+    Overloaded {
+        pending: usize,
+        limit: usize,
+        retry_after_ms: u64,
+    },
     /// The shard holding this ticket's invocation died before
     /// completing it. The invocation is *not* silently requeued; the
     /// caller decides whether to resubmit. Waiters (even those blocked
@@ -367,6 +374,18 @@ pub enum ApiError {
     /// server memory). Delivery of this error is best-effort — the
     /// receiver is, by definition, not reading.
     SlowConsumer { queued: usize, limit: usize },
+    /// The invocation kept faulting until its retry budget was
+    /// exhausted; every attempt (the first run plus each re-queue)
+    /// counted. Terminal — the server will not run it again.
+    ExecFailed { ticket: Ticket, attempts: u32 },
+    /// The function's circuit breaker is open (its rolling failure
+    /// rate marked it poison); submissions are refused until a
+    /// half-open probe succeeds. Not transient for *this* call — retry
+    /// no sooner than `retry_after_ms`.
+    Quarantined {
+        func: String,
+        retry_after_ms: u64,
+    },
     /// Malformed request (bad JSON, missing field, unknown command).
     BadRequest { detail: String },
     /// Client-side transport failure (connect/read/write).
@@ -385,6 +404,8 @@ impl ApiError {
             ApiError::DeadlineExceeded { .. } => "deadline-exceeded",
             ApiError::ShuttingDown => "shutting-down",
             ApiError::SlowConsumer { .. } => "slow-consumer",
+            ApiError::ExecFailed { .. } => "exec-failed",
+            ApiError::Quarantined { .. } => "quarantined",
             ApiError::BadRequest { .. } => "bad-request",
             ApiError::Io { .. } => "io",
         }
@@ -405,8 +426,16 @@ impl ApiError {
                     ticket.to_string()
                 }
             }
-            ApiError::Overloaded { pending, limit } => {
-                format!("{pending} pending >= limit {limit}")
+            ApiError::Overloaded {
+                pending,
+                limit,
+                retry_after_ms,
+            } => {
+                if *retry_after_ms > 0 {
+                    format!("{pending} pending >= limit {limit}; retry after {retry_after_ms} ms")
+                } else {
+                    format!("{pending} pending >= limit {limit}")
+                }
             }
             ApiError::ShardLost { shard, ticket } => {
                 format!("shard {shard} died holding {ticket}")
@@ -419,6 +448,13 @@ impl ApiError {
             ApiError::SlowConsumer { queued, limit } => {
                 format!("{queued} outbound bytes queued > limit {limit}")
             }
+            ApiError::ExecFailed { ticket, attempts } => {
+                format!("{ticket} failed after {attempts} attempts")
+            }
+            ApiError::Quarantined {
+                func,
+                retry_after_ms,
+            } => format!("{func} breaker open; retry after {retry_after_ms} ms"),
             ApiError::BadRequest { detail } => detail.clone(),
             ApiError::Io { detail } => detail.clone(),
         }
@@ -455,6 +491,15 @@ impl ApiError {
             "overloaded" => ApiError::Overloaded {
                 pending: 0,
                 limit: 0,
+                // Best-effort from "...; retry after N ms"; the
+                // structured `retry_after_ms` extra overwrites this.
+                retry_after_ms: detail
+                    .rsplit("retry after ")
+                    .next()
+                    .filter(|_| detail.contains("retry after"))
+                    .and_then(|w| w.split_whitespace().next())
+                    .and_then(|w| w.parse().ok())
+                    .unwrap_or(0),
             },
             "shard-lost" => ApiError::ShardLost {
                 // Best-effort from "shard N died holding #T"; the
@@ -477,6 +522,35 @@ impl ApiError {
                 ticket: None,
             },
             "shutting-down" => ApiError::ShuttingDown,
+            "exec-failed" => ApiError::ExecFailed {
+                // Best-effort from "#T failed after N attempts"; the
+                // structured `ticket`/`attempts` extras overwrite these.
+                ticket: Ticket(
+                    detail
+                        .split_whitespace()
+                        .next()
+                        .unwrap_or("")
+                        .trim_start_matches('#')
+                        .parse()
+                        .unwrap_or(0),
+                ),
+                attempts: detail
+                    .split_whitespace()
+                    .rev()
+                    .nth(1)
+                    .and_then(|w| w.parse().ok())
+                    .unwrap_or(0),
+            },
+            "quarantined" => ApiError::Quarantined {
+                // Best-effort from "<func> breaker open; retry after N ms".
+                func: detail.split_whitespace().next().unwrap_or("").to_string(),
+                retry_after_ms: detail
+                    .split_whitespace()
+                    .rev()
+                    .nth(1)
+                    .and_then(|w| w.parse().ok())
+                    .unwrap_or(0),
+            },
             "slow-consumer" => ApiError::SlowConsumer {
                 queued: detail
                     .split_whitespace()
@@ -526,6 +600,7 @@ mod tests {
             ApiError::Overloaded {
                 pending: 4,
                 limit: 4,
+                retry_after_ms: 0,
             },
             ApiError::ShardLost {
                 shard: 2,
@@ -539,6 +614,14 @@ mod tests {
             ApiError::SlowConsumer {
                 queued: 300_000,
                 limit: 262_144,
+            },
+            ApiError::ExecFailed {
+                ticket: Ticket(11),
+                attempts: 3,
+            },
+            ApiError::Quarantined {
+                func: "fft-0".into(),
+                retry_after_ms: 250,
             },
             ApiError::BadRequest { detail: "d".into() },
             ApiError::Io { detail: "d".into() },
@@ -577,6 +660,22 @@ mod tests {
             limit: 262_144,
         };
         assert_eq!(ApiError::from_wire(sc.code(), &sc.detail()), sc);
+        let ef = ApiError::ExecFailed {
+            ticket: Ticket(11),
+            attempts: 3,
+        };
+        assert_eq!(ApiError::from_wire(ef.code(), &ef.detail()), ef);
+        let q = ApiError::Quarantined {
+            func: "fft-0".into(),
+            retry_after_ms: 250,
+        };
+        assert_eq!(ApiError::from_wire(q.code(), &q.detail()), q);
+        let ov = ApiError::Overloaded {
+            pending: 0,
+            limit: 0,
+            retry_after_ms: 750,
+        };
+        assert_eq!(ApiError::from_wire(ov.code(), &ov.detail()), ov);
     }
 
     #[test]

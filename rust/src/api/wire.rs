@@ -940,6 +940,31 @@ pub fn encode_response_into(resp: &Response, out: &mut String) {
                     push_key(out, "evicted");
                     out.push_str(if *evicted { "true" } else { "false" });
                 }
+                // Retry-budget exhaustion: the ticket that died and how
+                // many attempts it burned.
+                ApiError::ExecFailed { ticket, attempts } => {
+                    push_int_field(out, "ticket", ticket.0 as i64);
+                    push_int_field(out, "attempts", *attempts as i64);
+                }
+                // Breaker rejection: the quarantined function and the
+                // server's backoff hint.
+                ApiError::Quarantined {
+                    func,
+                    retry_after_ms,
+                } => {
+                    push_str_field(out, "func", func);
+                    push_int_field(out, "retry_after_ms", *retry_after_ms as i64);
+                }
+                // Backpressure / shed: counts plus the backoff hint.
+                ApiError::Overloaded {
+                    pending,
+                    limit,
+                    retry_after_ms,
+                } => {
+                    push_int_field(out, "pending", *pending as i64);
+                    push_int_field(out, "limit", *limit as i64);
+                    push_int_field(out, "retry_after_ms", *retry_after_ms as i64);
+                }
                 _ => {}
             }
         }
@@ -1035,6 +1060,40 @@ pub fn decode_response(line: &str) -> Result<Response, String> {
                 }
                 if let Some(JVal::Bool(b)) = v.get("evicted") {
                     *evicted = *b;
+                }
+            }
+            ApiError::ExecFailed { ticket, attempts } => {
+                if let Some(t) = v.get_u64("ticket") {
+                    *ticket = Ticket(t);
+                }
+                if let Some(a) = v.get_u64("attempts") {
+                    *attempts = a as u32;
+                }
+            }
+            ApiError::Quarantined {
+                func,
+                retry_after_ms,
+            } => {
+                if let Some(f) = v.get_str("func") {
+                    *func = f.to_string();
+                }
+                if let Some(r) = v.get_u64("retry_after_ms") {
+                    *retry_after_ms = r;
+                }
+            }
+            ApiError::Overloaded {
+                pending,
+                limit,
+                retry_after_ms,
+            } => {
+                if let Some(p) = v.get_u64("pending") {
+                    *pending = p as usize;
+                }
+                if let Some(l) = v.get_u64("limit") {
+                    *limit = l as usize;
+                }
+                if let Some(r) = v.get_u64("retry_after_ms") {
+                    *retry_after_ms = r;
                 }
             }
             _ => {}
@@ -1963,6 +2022,34 @@ mod tests {
     }
 
     #[test]
+    fn fault_errors_carry_structured_fields() {
+        // The exact-once / breaker / shed errors round-trip their
+        // load-bearing fields (not just the code) — clients back off or
+        // give up based on them.
+        for e in [
+            ApiError::ExecFailed {
+                ticket: Ticket(31),
+                attempts: 4,
+            },
+            ApiError::Quarantined {
+                func: "fft-0".into(),
+                retry_after_ms: 2000,
+            },
+            ApiError::Overloaded {
+                pending: 64,
+                limit: 32,
+                retry_after_ms: 750,
+            },
+        ] {
+            let line = encode_response(&Response::Error(e.clone()));
+            let Response::Error(back) = decode_response(&line).unwrap() else {
+                panic!("expected error: {line}");
+            };
+            assert_eq!(back, e, "{line}");
+        }
+    }
+
+    #[test]
     fn error_responses_roundtrip_their_code() {
         for e in [
             ApiError::UnknownFunction { name: "ghost".into() },
@@ -1970,6 +2057,7 @@ mod tests {
             ApiError::Overloaded {
                 pending: 9,
                 limit: 8,
+                retry_after_ms: 0,
             },
             ApiError::DeadlineExceeded {
                 waited_ms: 5,

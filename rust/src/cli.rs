@@ -20,9 +20,11 @@
 use std::collections::HashMap;
 
 use crate::cluster::{ClusterConfig, RouterKind};
+use crate::fault::{BreakerConfig, FaultConfig, ShedConfig};
 use crate::gpu::{uniform_fleet, DeviceSpec, GpuProfile, MultiplexMode};
 use crate::memory::MemPolicy;
 use crate::plane::PlaneConfig;
+use crate::types::{secs, FuncId, GpuId};
 use crate::scheduler::policies::PolicyKind;
 use crate::scheduler::MqfqConfig;
 use crate::workload::azure::AzureConfig;
@@ -104,6 +106,20 @@ USAGE:
         [--trace-out FILE]  write the invocation-lifecycle trace
               (JSONL, one event per line; fold it with
               scripts/trace_summarize.py)
+        [--fault-seed K] [--fault-rate P] [--poison F:P[,F:P..]]
+        [--straggler-rate P] [--straggler-k K] [--retry-budget N]
+        [--max-faults N] [--device-fail T:G[,T:G..]]
+        [--breaker WINDOW:THRESH:COOLDOWN_S] [--shed DEADLINE_S]
+              device-level fault tolerance (all default off; any flag
+              installs a seeded deterministic fault plan): transient
+              exec faults at rate P per attempt, per-function poison
+              overrides (F = numeric function id), stragglers evacuated
+              by a K x estimated-exec watchdog, scheduled device
+              failures (gpu G drops at T seconds), exactly-once retries
+              up to --retry-budget attempts (then `exec-failed`), a
+              poison-function circuit breaker (`quarantined` while
+              Open, half-open probes re-admit), and deadline-aware
+              overload shedding (`overloaded` + retry-after hint)
         [--fleet SPEC[,SPEC..]]  heterogeneous fleet, overrides
               --gpus/--profile/--mode; SPEC = [NX]PROFILE[:mps|:migK][:dD]
               e.g. --fleet 2xv100,a30:mig2,v100:d1
@@ -119,8 +135,9 @@ USAGE:
         [--shards N] [--router rr|random|least|sticky|sticky-blind]
         [--load-factor F] [--seed K] [--max-pending N] [--workers W]
         [--max-outbound BYTES]
-        [+ plane options incl. --policy/--d/--fleet and the
-         anticipation knobs --grace/--batch-max/--adaptive-d]
+        [+ plane options incl. --policy/--d/--fleet, the anticipation
+         knobs --grace/--batch-max/--adaptive-d, and the fault knobs
+         --fault-rate/--poison/--breaker/--shed/...]
               real-traffic TCP serving: protocol v1 (JSON lines, hello
               handshake, sync/async invoke tickets, deadlines, request
               pipelining with id-tagged replies, push completions;
@@ -295,7 +312,128 @@ pub fn plane_config(args: &Args) -> Result<PlaneConfig, String> {
     if let Some(spec) = args.get("adaptive-d") {
         cfg.adaptive_d = Some(parse_adaptive_d(spec)?);
     }
+    // Device-level fault tolerance (fault module docs). No flag ⇒
+    // `faults: None` and every fault branch in the plane is untaken
+    // (bit-identical to a faultless build, property-tested).
+    cfg.faults = fault_config(args)?;
     Ok(cfg)
+}
+
+/// Flags that install a fault plan; absent all of them the plane runs
+/// with no plan at all.
+const FAULT_KEYS: [&str; 10] = [
+    "fault-seed",
+    "fault-rate",
+    "poison",
+    "straggler-rate",
+    "straggler-k",
+    "retry-budget",
+    "max-faults",
+    "device-fail",
+    "breaker",
+    "shed",
+];
+
+fn parse_rate(key: &str, v: f64) -> Result<f64, String> {
+    if !(0.0..=1.0).contains(&v) {
+        return Err(format!("--{key}: probability must be in [0,1], got {v}"));
+    }
+    Ok(v)
+}
+
+/// Build an `Option<FaultConfig>` from the `--fault-*` flag family.
+pub fn fault_config(args: &Args) -> Result<Option<FaultConfig>, String> {
+    if !FAULT_KEYS.iter().any(|k| args.get(k).is_some()) {
+        return Ok(None);
+    }
+    let mut fc = FaultConfig::default();
+    fc.seed = args.get_usize("fault-seed", fc.seed as usize)? as u64;
+    fc.transient_rate = parse_rate("fault-rate", args.get_f64("fault-rate", 0.0)?)?;
+    if let Some(s) = args.get("poison") {
+        for part in s.split(',').filter(|p| !p.is_empty()) {
+            let (f, r) = part
+                .split_once(':')
+                .ok_or_else(|| format!("--poison: expected F:RATE, got {part}"))?;
+            let func: u32 = f
+                .parse()
+                .map_err(|_| format!("--poison: bad function id in {part}"))?;
+            let rate: f64 = r
+                .parse()
+                .map_err(|_| format!("--poison: bad rate in {part}"))?;
+            fc.poison.push((FuncId(func), parse_rate("poison", rate)?));
+        }
+    }
+    fc.straggler_rate = parse_rate("straggler-rate", args.get_f64("straggler-rate", 0.0)?)?;
+    fc.straggler_k = args.get_f64("straggler-k", fc.straggler_k)?;
+    if !(fc.straggler_k > 0.0 && fc.straggler_k.is_finite()) {
+        return Err(format!("--straggler-k must be > 0, got {}", fc.straggler_k));
+    }
+    let budget = args.get_usize("retry-budget", fc.retry_budget as usize)?;
+    if budget == 0 {
+        return Err("--retry-budget must be >= 1 (the first run counts)".into());
+    }
+    fc.retry_budget = budget as u32;
+    fc.max_faults = args.get_usize("max-faults", fc.max_faults as usize)? as u64;
+    if let Some(s) = args.get("device-fail") {
+        for part in s.split(',').filter(|p| !p.is_empty()) {
+            let (t, g) = part
+                .split_once(':')
+                .ok_or_else(|| format!("--device-fail: expected T_S:GPU, got {part}"))?;
+            let t_s: f64 = t
+                .parse()
+                .map_err(|_| format!("--device-fail: bad time in {part}"))?;
+            if !(t_s >= 0.0 && t_s.is_finite()) {
+                return Err(format!("--device-fail: time must be >= 0 in {part}"));
+            }
+            let gpu: u32 = g
+                .parse()
+                .map_err(|_| format!("--device-fail: bad gpu in {part}"))?;
+            fc.device_failures.push((secs(t_s), GpuId(gpu)));
+        }
+    }
+    if let Some(s) = args.get("breaker") {
+        let parts: Vec<&str> = s.split(':').collect();
+        let [w, th, cd] = parts[..] else {
+            return Err(format!("--breaker: expected WINDOW:THRESH:COOLDOWN_S, got {s}"));
+        };
+        let window: usize = w
+            .parse()
+            .map_err(|_| format!("--breaker: bad window in {s}"))?;
+        let thresh: f64 = th
+            .parse()
+            .map_err(|_| format!("--breaker: bad threshold in {s}"))?;
+        let cooldown_s: f64 = cd
+            .parse()
+            .map_err(|_| format!("--breaker: bad cooldown in {s}"))?;
+        if window == 0 || window > 64 {
+            return Err(format!("--breaker: window must be 1..=64, got {window}"));
+        }
+        if !(thresh > 0.0 && thresh <= 1.0) {
+            return Err(format!("--breaker: threshold must be in (0,1], got {thresh}"));
+        }
+        if !(cooldown_s > 0.0 && cooldown_s.is_finite()) {
+            return Err(format!("--breaker: cooldown must be > 0 s, got {cooldown_s}"));
+        }
+        fc.breaker = Some(BreakerConfig {
+            window,
+            trip_threshold: thresh,
+            cooldown: secs(cooldown_s),
+            ..Default::default()
+        });
+    }
+    if let Some(s) = args.get("shed") {
+        let deadline_s: f64 = s
+            .parse()
+            .map_err(|_| format!("--shed: bad deadline {s}"))?;
+        if !(deadline_s > 0.0 && deadline_s.is_finite()) {
+            return Err(format!("--shed: deadline must be > 0 s, got {deadline_s}"));
+        }
+        fc.shed = Some(ShedConfig {
+            deadline_s,
+            ..Default::default()
+        });
+    }
+    Ok(Some(fc))
 }
 
 /// Parse `--adaptive-d MIN:MAX` (or a single `N`, meaning `N:N`): the
@@ -492,6 +630,7 @@ pub fn cluster_config(args: &Args) -> Result<ClusterConfig, String> {
         shard_planes: Vec::new(),
         load_factor,
         seed: args.get_usize("seed", defaults.seed as usize)? as u64,
+        graveyard_cap: defaults.graveyard_cap,
     })
 }
 
@@ -957,6 +1096,72 @@ mod tests {
             "--adaptive-d 4:2",
             "--adaptive-d a:b",
             "--adaptive-d 0",
+        ] {
+            let a = Args::parse(&argv(bad)).unwrap();
+            assert!(plane_config(&a).is_err(), "{bad} should be rejected");
+        }
+    }
+
+    #[test]
+    fn fault_flags_parse_into_config() {
+        // No fault flag at all ⇒ no plan (the bit-identical neutral path).
+        let a = Args::parse(&argv("--policy mqfq --d 2")).unwrap();
+        assert!(plane_config(&a).unwrap().faults.is_none());
+        // Full set.
+        let a = Args::parse(&argv(
+            "--fault-seed 9 --fault-rate 0.05 --poison 3:0.9,5:1.0 \
+             --straggler-rate 0.01 --straggler-k 4 --retry-budget 2 \
+             --max-faults 100 --device-fail 30:0,45.5:2 \
+             --breaker 16:0.5:10 --shed 5.0",
+        ))
+        .unwrap();
+        let fc = plane_config(&a).unwrap().faults.unwrap();
+        assert_eq!(fc.seed, 9);
+        assert_eq!(fc.transient_rate, 0.05);
+        assert_eq!(fc.poison, vec![(FuncId(3), 0.9), (FuncId(5), 1.0)]);
+        assert_eq!(fc.straggler_rate, 0.01);
+        assert_eq!(fc.straggler_k, 4.0);
+        assert_eq!(fc.retry_budget, 2);
+        assert_eq!(fc.max_faults, 100);
+        assert_eq!(
+            fc.device_failures,
+            vec![(secs(30.0), GpuId(0)), (secs(45.5), GpuId(2))]
+        );
+        let b = fc.breaker.unwrap();
+        assert_eq!(b.window, 16);
+        assert_eq!(b.trip_threshold, 0.5);
+        assert_eq!(b.cooldown, secs(10.0));
+        assert_eq!(fc.shed.unwrap().deadline_s, 5.0);
+        // A single fault flag installs a plan with defaults elsewhere.
+        let a = Args::parse(&argv("--fault-rate 0.1")).unwrap();
+        let fc = plane_config(&a).unwrap().faults.unwrap();
+        assert_eq!(fc.transient_rate, 0.1);
+        assert_eq!(fc.retry_budget, FaultConfig::default().retry_budget);
+        assert!(fc.breaker.is_none() && fc.shed.is_none());
+    }
+
+    #[test]
+    fn bad_fault_flags_rejected() {
+        for bad in [
+            "--fault-rate 1.5",
+            "--fault-rate -0.1",
+            "--poison 3",
+            "--poison a:0.5",
+            "--poison 3:2.0",
+            "--straggler-rate 2",
+            "--straggler-k 0",
+            "--retry-budget 0",
+            "--device-fail 30",
+            "--device-fail x:0",
+            "--device-fail 30:a",
+            "--device-fail -1:0",
+            "--breaker 16:0.5",
+            "--breaker 0:0.5:10",
+            "--breaker 99:0.5:10",
+            "--breaker 16:0:10",
+            "--breaker 16:0.5:0",
+            "--shed 0",
+            "--shed nope",
         ] {
             let a = Args::parse(&argv(bad)).unwrap();
             assert!(plane_config(&a).is_err(), "{bad} should be rejected");

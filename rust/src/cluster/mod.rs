@@ -102,11 +102,12 @@ use std::sync::Arc;
 
 use crate::api::ShardHealth;
 use crate::container::pool::PoolStats;
+use crate::fault::{AdmitError, FaultFate, FaultStats};
 use crate::metrics::{InvRecord, Recorder};
 use crate::plane::{ControlPlane, PlaneConfig};
 use crate::sim::{ShardDispatch, SimTarget};
 use crate::telemetry::{EventKind, Telemetry, TraceEvent};
-use crate::types::{FuncId, InvocationId, Nanos};
+use crate::types::{FuncId, GpuId, InvocationId, Nanos};
 use crate::workload::Workload;
 
 /// Cluster-level configuration: shard count, routing policy, and the
@@ -127,6 +128,16 @@ pub struct ClusterConfig {
     pub load_factor: f64,
     /// Seed for the Random router and the StickyCh ring layout.
     pub seed: u64,
+    /// Bound on the kill graveyard ([`Cluster::merged_recorder`]'s
+    /// salvage of completed records from killed shards). A long-lived
+    /// cluster riding repeated kills would otherwise grow the graveyard
+    /// without limit; past the cap the *oldest* records (by completion
+    /// time) are evicted and counted in
+    /// [`Cluster::graveyard_evicted`]. The default is far above any
+    /// harness's completed-work volume, so record-conservation
+    /// assertions (e.g. the elastic storm's `records_match`) never see
+    /// an eviction.
+    pub graveyard_cap: usize,
 }
 
 impl Default for ClusterConfig {
@@ -138,6 +149,7 @@ impl Default for ClusterConfig {
             shard_planes: Vec::new(),
             load_factor: 1.25,
             seed: 0,
+            graveyard_cap: 65_536,
         }
     }
 }
@@ -186,8 +198,12 @@ pub struct Cluster {
     epochs: Vec<u64>,
     /// Completed-invocation records salvaged from killed shards, merged
     /// into [`Self::merged_recorder`] so kills never un-count finished
-    /// work.
+    /// work. Bounded by [`ClusterConfig::graveyard_cap`].
     graveyard: Recorder,
+    /// Oldest-first records evicted from the graveyard once it
+    /// overflowed [`ClusterConfig::graveyard_cap`] — the exact count of
+    /// completed invocations [`Self::merged_recorder`] no longer holds.
+    pub graveyard_evicted: u64,
     /// Shared telemetry (None when not attached). Every shard plane
     /// holds a [`crate::telemetry::ShardSink`] onto the same instance.
     tel: Option<Arc<Telemetry>>,
@@ -223,6 +239,7 @@ impl Cluster {
             health: vec![ShardHealth::Up; cfg.n_shards],
             epochs: vec![0; cfg.n_shards],
             graveyard: Recorder::new(),
+            graveyard_evicted: 0,
             tel: None,
             last_spills: 0,
             last_now: 0,
@@ -371,6 +388,14 @@ impl Cluster {
         }
         let dead = std::mem::replace(&mut self.shards[shard], fresh);
         self.graveyard.merge(&dead.recorder);
+        if self.graveyard.len() > self.cfg.graveyard_cap {
+            // Bound the salvage: keep the newest `graveyard_cap`
+            // records by completion time, count exactly what was lost.
+            self.graveyard.sort_by_time();
+            let excess = self.graveyard.len() - self.cfg.graveyard_cap;
+            self.graveyard.records.drain(..excess);
+            self.graveyard_evicted += excess as u64;
+        }
         let was_up = self.health[shard] == ShardHealth::Up;
         self.health[shard] = ShardHealth::Dead;
         self.epochs[shard] += 1;
@@ -430,6 +455,81 @@ impl Cluster {
         self.last_now = now;
         let (rec, ds) = self.shards[shard].on_complete(inv, now);
         (rec, tag(shard, ds))
+    }
+
+    /// Attempt-stamped completion (see
+    /// [`ControlPlane::on_complete_attempt`]): a completion whose
+    /// attempt no longer matches the live in-flight attempt — the
+    /// invocation was evacuated off a failed device or re-queued after
+    /// a fault — is dropped rather than mis-settled.
+    pub fn on_complete_attempt(
+        &mut self,
+        shard: usize,
+        inv: InvocationId,
+        attempt: u32,
+        now: Nanos,
+    ) -> (Option<InvRecord>, Vec<ShardDispatch>) {
+        self.last_now = now;
+        let (rec, ds) = self.shards[shard].on_complete_attempt(inv, attempt, now);
+        (rec, tag(shard, ds))
+    }
+
+    // --- fault-tolerance pass-throughs ------------------------------
+
+    /// Admission gate for `shard` (breaker + overload shed); a no-op
+    /// `Ok(())` when the shard has no fault plan.
+    pub fn try_admit(
+        &mut self,
+        shard: usize,
+        func: FuncId,
+        now: Nanos,
+    ) -> Result<(), AdmitError> {
+        self.shards[shard].try_admit(func, now)
+    }
+
+    /// Drop one device out of `shard`'s pool (operator-driven fault
+    /// injection; scheduled failures in a [`crate::fault::FaultConfig`]
+    /// fire from each shard's own monitor tick instead).
+    pub fn fail_device(&mut self, shard: usize, gpu: GpuId, now: Nanos) -> Vec<ShardDispatch> {
+        self.last_now = now;
+        let ds = self.shards[shard].fail_device(gpu, now);
+        tag(shard, ds)
+    }
+
+    /// Return a failed device on `shard` to service (cold: its warm
+    /// pool died with it).
+    pub fn heal_device(&mut self, shard: usize, gpu: GpuId, now: Nanos) -> Vec<ShardDispatch> {
+        self.last_now = now;
+        let ds = self.shards[shard].heal_device(gpu, now);
+        tag(shard, ds)
+    }
+
+    /// Drain every shard's resolved retry-exhaustions, tagged with the
+    /// shard they died on.
+    pub fn drain_fault_fates(&mut self) -> Vec<(usize, FaultFate)> {
+        let mut out = Vec::new();
+        for (s, p) in self.shards.iter_mut().enumerate() {
+            out.extend(p.drain_fault_fates().into_iter().map(|f| (s, f)));
+        }
+        out
+    }
+
+    /// Field-wise sum of every shard's fault counters.
+    pub fn fault_stats(&self) -> FaultStats {
+        let mut t = FaultStats::default();
+        for p in &self.shards {
+            let s = p.fault_stats();
+            t.faults_device += s.faults_device;
+            t.faults_transient += s.faults_transient;
+            t.faults_straggler += s.faults_straggler;
+            t.retries += s.retries;
+            t.retry_exhausted += s.retry_exhausted;
+            t.breaker_trips += s.breaker_trips;
+            t.breaker_probes += s.breaker_probes;
+            t.quarantined += s.quarantined;
+            t.shed += s.shed;
+        }
+        t
     }
 
     /// Global monitor tick: delivered to every shard that has work
@@ -521,8 +621,14 @@ impl SimTarget for Cluster {
         ds
     }
 
-    fn sim_complete(&mut self, shard: usize, inv: InvocationId, now: Nanos) -> Vec<ShardDispatch> {
-        self.on_complete(shard, inv, now).1
+    fn sim_complete(
+        &mut self,
+        shard: usize,
+        inv: InvocationId,
+        attempt: u32,
+        now: Nanos,
+    ) -> Vec<ShardDispatch> {
+        self.on_complete_attempt(shard, inv, attempt, now).1
     }
 
     fn sim_tick(&mut self, now: Nanos) -> Vec<ShardDispatch> {
@@ -732,6 +838,46 @@ mod tests {
             c.on_arrival(FuncId(0), secs(200.0 + i as f64));
         }
         assert!(c.routed[0] > before);
+    }
+
+    #[test]
+    fn graveyard_is_bounded_and_evicts_oldest_first() {
+        let mut c = Cluster::new(
+            workload3(),
+            ClusterConfig {
+                n_shards: 3,
+                router: RouterKind::RoundRobin,
+                graveyard_cap: 1,
+                ..Default::default()
+            },
+        );
+        // One completed record per shard, at strictly increasing times
+        // (RR: arrival i lands on shard i).
+        let mut completions = Vec::new();
+        for i in 0..3u64 {
+            let (s, _, ds) = c.on_arrival(FuncId(0), i * SEC);
+            assert_eq!(s, i as usize);
+            let d = ds[0].dispatch;
+            c.on_complete(s, d.inv, d.complete_at);
+            completions.push(d.complete_at);
+        }
+        // First kill fits under the cap; the second overflows it and
+        // must evict exactly the older record.
+        c.kill_shard(0).unwrap();
+        assert_eq!(c.graveyard_evicted, 0);
+        assert_eq!(c.merged_recorder().len(), 3);
+        c.kill_shard(1).unwrap();
+        assert_eq!(c.graveyard_evicted, 1, "exact eviction count");
+        let merged = c.merged_recorder();
+        assert_eq!(merged.len(), 2, "cap keeps one salvaged + one live record");
+        // The survivor in the graveyard is the *newest* killed record.
+        assert!(merged.records.iter().any(|r| r.completed == completions[1]));
+        assert!(
+            merged.records.iter().all(|r| r.completed != completions[0]),
+            "oldest record must be the one evicted"
+        );
+        // Default cap is effectively unbounded for harness volumes.
+        assert_eq!(ClusterConfig::default().graveyard_cap, 65_536);
     }
 
     #[test]

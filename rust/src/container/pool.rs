@@ -238,6 +238,16 @@ impl ContainerPool {
     pub fn destroy(&mut self, id: ContainerId) -> Option<(GpuId, u64)> {
         self.containers.remove(&id).map(|c| (c.gpu, c.resident_mb()))
     }
+
+    /// Destroy every container homed on `gpu` — busy or idle — when the
+    /// device drops out of the pool (its contexts and memory are gone).
+    /// Returns the number destroyed; no ledger credit is due because
+    /// the device's resident accounting was zeroed by [`crate::gpu::Device::fail`].
+    pub fn destroy_on_gpu(&mut self, gpu: GpuId) -> usize {
+        let before = self.containers.len();
+        self.containers.retain(|_, c| c.gpu != gpu);
+        before - self.containers.len()
+    }
 }
 
 #[cfg(test)]
@@ -319,6 +329,20 @@ mod tests {
         assert!(p.get(a.id).unwrap().marked_evict);
         p.unmark_evict(FuncId(0));
         assert!(!p.get(a.id).unwrap().marked_evict);
+    }
+
+    #[test]
+    fn destroy_on_gpu_removes_busy_and_idle_alike() {
+        let mut p = ContainerPool::new(8);
+        let a = p.acquire(FuncId(0), class(), GpuId(0), 0).unwrap(); // busy on gpu0
+        let b = p.acquire(FuncId(1), class(), GpuId(0), 1).unwrap();
+        p.release(b.id, 10); // idle on gpu0
+        let c = p.acquire(FuncId(2), class(), GpuId(1), 2).unwrap(); // gpu1 survivor
+        assert_eq!(p.destroy_on_gpu(GpuId(0)), 2);
+        assert!(p.get(a.id).is_none());
+        assert!(p.get(b.id).is_none());
+        assert!(p.get(c.id).is_some());
+        assert_eq!(p.destroy_on_gpu(GpuId(0)), 0);
     }
 
     #[test]

@@ -269,6 +269,16 @@ impl CharacteristicsMap {
         }
     }
 
+    /// Feed a failed/evacuated attempt: the dispatch never completes,
+    /// so its outstanding charged estimate is retired *without* a debt
+    /// update — the attempt's VT advance stands (the faulty tenant
+    /// paid for the service it consumed) and no exec sample is learned
+    /// from a crashed or hung run.
+    pub fn on_fault(&mut self, func: FuncId) {
+        let e = self.ensure(func);
+        e.outstanding.pop_front();
+    }
+
     /// Estimate (without debt) for telemetry / marginal-cost modeling.
     pub fn estimate_or(&self, func: FuncId, fallback: f64) -> f64 {
         self.predicted_exec_s(func).unwrap_or(fallback)
@@ -334,6 +344,24 @@ mod tests {
         let tau3 = m.take_tau(F, 99.0);
         assert_eq!(tau3, 0.0);
         assert!(m.debt_s(F) < 0.0);
+    }
+
+    #[test]
+    fn fault_retires_outstanding_without_debt() {
+        let mut m = CharacteristicsMap::new();
+        m.on_complete(F, SEC, StartKind::GpuWarm, 0);
+        let tau = m.take_tau(F, 99.0);
+        m.on_dispatch(F, tau, 1);
+        m.on_fault(F);
+        // The charged estimate is retired with no debt: the faulted
+        // attempt's VT advance stands.
+        assert_eq!(m.debt_s(F), 0.0);
+        // The next completion settles against its own dispatch, not a
+        // stale entry from the faulted attempt.
+        let tau2 = m.take_tau(F, 99.0);
+        m.on_dispatch(F, tau2, 1);
+        m.on_complete(F, SEC, StartKind::GpuWarm, 0);
+        assert!((m.debt_s(F) - (1.0 - tau2)).abs() < 1e-9);
     }
 
     #[test]

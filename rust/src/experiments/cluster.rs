@@ -126,6 +126,7 @@ pub fn sweep(cfg: &SweepConfig) -> Vec<ClusterRow> {
                 shard_planes: Vec::new(),
                 load_factor: cfg.load_factor,
                 seed: cfg.seed,
+                ..Default::default()
             };
             let r = replay_cluster(w.clone(), &t, ccfg);
             rows.push(ClusterRow::measure(router, n, &r));

@@ -1,0 +1,1130 @@
+//! §Faults: device-level fault-tolerance storm — seeded GPU failure,
+//! transient exec faults, poison tenants, and overload shedding, in
+//! both clocks.
+//!
+//! Four storms share the seeded fault oracle (same seed ⇒ same faults,
+//! either clock; see [`crate::fault`]):
+//!
+//! * **Device storm (sim)** — a deterministic virtual-time replay with
+//!   a scheduled mid-run GPU failure and recovery plus a background
+//!   transient-fault rate. Latency is windowed by *arrival* time
+//!   (warmup / pre / fail / recover / recovered); the release gate
+//!   holds the recovered window's p99 under [`RECOVERY_GATE`] × the
+//!   pre-fault p99. Exactly-once is the standing invariant: every
+//!   arrival either completed or resolved to a terminal retry-exhausted
+//!   fate — nothing vanishes, nothing double-completes.
+//!
+//! * **Breaker storm (sim)** — one poison tenant (100 % exec-fault
+//!   rate) among eight healthy tenants, driven through the serving
+//!   admission gate ([`crate::plane::ControlPlane::try_admit`]). The
+//!   breaker must trip Open, quarantine the tenant, and re-probe after
+//!   the cooldown (half-open); the gate holds Jain fairness across the
+//!   healthy tenants at [`JAIN_GATE`] × an identical no-poison run.
+//!
+//! * **Shed storm (sim)** — the same admission gate under 2× offered
+//!   load with deadline-aware shedding calibrated from an uncontended
+//!   run. The gate holds the *admitted* p99 within [`SHED_GATE`] × the
+//!   uncontended p99; an unprotected 2× run is reported alongside to
+//!   show the queue blow-up shedding prevents.
+//!
+//! * **TCP storm (wall clock)** — the acceptance run over real
+//!   loopback TCP against a 2-shard model-mode
+//!   [`crate::server::RtCluster`] whose planes carry the fault plan:
+//!   a pre-fault latency baseline, an async burst in flight when a GPU
+//!   drops on every shard, transparent server-side retries (clients
+//!   see `done`, or `exec-failed` after the budget — never a hang),
+//!   and a post-recovery baseline holding the same [`RECOVERY_GATE`].
+//!   Fault/retry counters are scraped back over the Prometheus wire.
+//!
+//! Emits `BENCH_faults.json` (`mqfq-bench-faults/v1`) with rows keyed
+//! by `fault`/`breaker`/`shed` identities; diffable via
+//! `scripts/bench_diff.sh`. `FAULTS_QUICK=1` shrinks volumes to a
+//! seconds-scale smoke run (CI) and skips the timing gates.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::net::SocketAddr;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::api::{ApiClient, ApiError, MetricsFormat, Ticket};
+use crate::cluster::{ClusterConfig, RouterKind};
+use crate::fault::{AdmitError, BreakerConfig, FaultConfig, FaultStats, ShedConfig};
+use crate::gpu::{MultiplexMode, V100};
+use crate::metrics::{jain_index, Recorder};
+use crate::plane::{ControlPlane, Dispatch, PlaneConfig};
+use crate::server::RtCluster;
+use crate::sim::replay;
+use crate::types::{secs, InvocationId, Nanos, DurNanos};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+use crate::util::stats::percentiles;
+use crate::workload::catalog::by_name;
+use crate::workload::trace::TraceEvent;
+use crate::workload::{Trace, Workload};
+
+/// Release gate: the post-recovery p99 (sim window / TCP batches) must
+/// stay under this multiple of the pre-fault p99.
+pub const RECOVERY_GATE: f64 = 1.5;
+
+/// Release gate: healthy-tenant Jain fairness under a quarantined
+/// poison tenant must stay at this fraction of the no-poison run.
+pub const JAIN_GATE: f64 = 0.95;
+
+/// Release gate: admitted p99 under shedding at 2× offered load must
+/// stay within this multiple of the uncontended p99.
+pub const SHED_GATE: f64 = 2.0;
+
+/// Wait deadline for every TCP storm ticket (ms); the exactly-once
+/// evidence is that every wait resolves well inside one such window.
+pub const STORM_DEADLINE_MS: u64 = 60_000;
+
+/// Healthy tenants in the breaker storm (the poison tenant is the
+/// extra function with id [`N_TENANTS`]).
+pub const N_TENANTS: usize = 8;
+
+fn fault_workload(n_funcs: usize) -> Workload {
+    let mut w = Workload::default();
+    let class = by_name("isoneural").expect("catalog has isoneural");
+    for i in 0..n_funcs {
+        w.register(class, i, 1.0);
+    }
+    w
+}
+
+/// Open-loop storm trace: jittered arrivals around `mean_iat_s`,
+/// round-robin across `n_funcs` tenants, until `duration_s`.
+fn storm_trace(seed: u64, n_funcs: usize, mean_iat_s: f64, duration_s: f64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut t = Trace::default();
+    let mut at = 0.0f64;
+    let mut i = 0usize;
+    while at < duration_s {
+        at += rng.range(0.2 * mean_iat_s, 1.8 * mean_iat_s);
+        t.events.push(TraceEvent {
+            at: secs(at),
+            func: crate::types::FuncId((i % n_funcs) as u32),
+        });
+        i += 1;
+    }
+    t.sort();
+    t
+}
+
+fn p50_p99_ms(lats_s: &[f64]) -> (f64, f64) {
+    let p = percentiles(lats_s, &[50.0, 99.0]);
+    (p[0] * 1e3, p[1] * 1e3)
+}
+
+// ---------------------------------------------------------------------
+// Device storm: scheduled GPU failure + recovery under transient rate.
+// ---------------------------------------------------------------------
+
+/// One arrival-time window of the device storm.
+#[derive(Debug, Clone)]
+pub struct DevicePhaseRow {
+    /// Identity: "warmup" | "pre" | "fail" | "recover" | "recovered".
+    pub phase: &'static str,
+    pub completed: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+pub struct DeviceStorm {
+    pub rows: Vec<DevicePhaseRow>,
+    pub arrivals: usize,
+    pub completed: usize,
+    /// Terminal retry-exhausted fates (the only permitted loss mode).
+    pub exec_failed: usize,
+    /// `arrivals == completed + exec_failed` at quiescence.
+    pub conserved: bool,
+    pub stats: FaultStats,
+    /// The scheduled recovery put every device back.
+    pub fleet_healed: bool,
+    /// p99(recovered) / p99(pre).
+    pub recovery_ratio: f64,
+}
+
+/// Run the deterministic device-failure storm through the virtual-time
+/// engine: 4 GPUs, one drops a third of the way in and rejoins at two
+/// thirds, with a 5 % transient-fault rate throughout.
+pub fn device_storm(quick: bool) -> DeviceStorm {
+    // Full-run horizon is sized so the first-ever cold boots (~10 s
+    // model time x 9 tenants over 4 GPUs ≈ 22 s of boot debt, drained
+    // by ≈ t=35 s) are fully behind the warmup window before the "pre"
+    // baseline starts at dur/3.
+    let dur = if quick { 12.0 } else { 240.0 };
+    let (warm_at, fail_at, heal_at) = (dur / 6.0, dur / 3.0, 2.0 * dur / 3.0);
+    let late_at = (heal_at + dur) / 2.0;
+    let n_funcs = 9;
+    let t = storm_trace(0xFA17_0001, n_funcs, 0.02, dur);
+    let mut cfg = PlaneConfig::uniform(4, V100, MultiplexMode::Plain);
+    cfg.mqfq.anticipate.estimator = true;
+    cfg.faults = Some(FaultConfig {
+        seed: 0xFA17_0001,
+        transient_rate: 0.05,
+        retry_budget: 3,
+        device_failures: vec![(secs(fail_at), crate::types::GpuId(0))],
+        device_recoveries: vec![(secs(heal_at), crate::types::GpuId(0))],
+        ..Default::default()
+    });
+    let arrivals = t.len();
+    let mut r = replay(fault_workload(n_funcs), &t, cfg);
+    let fates = r.plane.drain_fault_fates();
+
+    let windows: [(&'static str, f64, f64); 5] = [
+        ("warmup", 0.0, warm_at),
+        ("pre", warm_at, fail_at),
+        ("fail", fail_at, heal_at),
+        ("recover", heal_at, late_at),
+        ("recovered", late_at, f64::INFINITY),
+    ];
+    let mut rows = Vec::new();
+    for (phase, lo, hi) in windows {
+        let lats: Vec<f64> = r
+            .recorder()
+            .records
+            .iter()
+            .filter(|rec| {
+                let a = crate::types::to_secs(rec.arrived);
+                a >= lo && a < hi
+            })
+            .map(|rec| rec.latency_s())
+            .collect();
+        let (p50_ms, p99_ms) = p50_p99_ms(&lats);
+        rows.push(DevicePhaseRow {
+            phase,
+            completed: lats.len(),
+            p50_ms,
+            p99_ms,
+        });
+    }
+    let pre = rows[1].p99_ms.max(1e-9);
+    let recovery_ratio = rows[4].p99_ms / pre;
+    let completed = r.recorder().len();
+    DeviceStorm {
+        rows,
+        arrivals,
+        completed,
+        exec_failed: fates.len(),
+        conserved: completed + fates.len() == arrivals,
+        stats: r.plane.fault_stats(),
+        fleet_healed: r.plane.live_devices() == 4,
+        recovery_ratio,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Admission-aware sim driver (breaker + shed storms): the serving
+// layer's try_admit gate in front of the usual virtual-time loop.
+// ---------------------------------------------------------------------
+
+struct AdmitDriver {
+    plane: ControlPlane,
+    /// Pending completions: `(due, seq, inv, attempt)`.
+    heap: BinaryHeap<Reverse<(Nanos, u64, InvocationId, u32)>>,
+    seq: u64,
+    now: Nanos,
+    tick_period: DurNanos,
+    next_tick: Nanos,
+    arrivals: usize,
+    quarantined: usize,
+    shed: usize,
+}
+
+impl AdmitDriver {
+    fn new(w: Workload, cfg: PlaneConfig) -> Self {
+        let tick_period = cfg.monitor_period.max(1);
+        Self {
+            plane: ControlPlane::new(w, cfg),
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0,
+            tick_period,
+            next_tick: tick_period,
+            arrivals: 0,
+            quarantined: 0,
+            shed: 0,
+        }
+    }
+
+    fn push(&mut self, ds: Vec<Dispatch>) {
+        for d in ds {
+            self.seq += 1;
+            self.heap
+                .push(Reverse((d.complete_at, self.seq, d.inv, d.attempt)));
+        }
+    }
+
+    /// Deliver every completion and monitor tick due at/before `t`, in
+    /// time order (ticks win ties so watchdog/maintenance runs before
+    /// same-instant completions, mirroring the wall-clock monitor).
+    fn drain_until(&mut self, t: Nanos) {
+        loop {
+            let head = self.heap.peek().map(|Reverse(e)| e.0);
+            let tick = self.next_tick;
+            let next = match head {
+                Some(h) => h.min(tick),
+                None => tick,
+            };
+            if next > t {
+                break;
+            }
+            self.now = self.now.max(next);
+            if tick <= head.unwrap_or(Nanos::MAX) {
+                let ds = self.plane.on_monitor_tick(tick);
+                self.push(ds);
+                self.next_tick = tick + self.tick_period;
+            } else {
+                let Reverse((due, _, inv, attempt)) = self.heap.pop().unwrap();
+                let (_, ds) = self.plane.on_complete_attempt(inv, attempt, due);
+                self.push(ds);
+            }
+        }
+    }
+
+    /// One arrival through the serving admission gate.
+    fn arrive(&mut self, func: crate::types::FuncId, at: Nanos) {
+        self.drain_until(at);
+        self.now = self.now.max(at);
+        self.arrivals += 1;
+        match self.plane.try_admit(func, self.now) {
+            Ok(()) => {
+                let (_, ds) = self.plane.on_arrival(func, self.now);
+                self.push(ds);
+            }
+            Err(AdmitError::Quarantined { .. }) => self.quarantined += 1,
+            Err(AdmitError::Overloaded { .. }) => self.shed += 1,
+        }
+    }
+
+    /// Run the plane dry (bounded — a conservation bug fails loudly).
+    fn drain_all(&mut self) {
+        let mut guard = 0;
+        while self.plane.pending() + self.plane.in_flight() > 0 {
+            guard += 1;
+            assert!(guard < 1_000_000, "fault storm failed to drain");
+            let t = match self.heap.peek() {
+                Some(&Reverse((due, ..))) => due,
+                None => self.next_tick,
+            };
+            self.drain_until(t);
+        }
+    }
+
+    fn run(&mut self, trace: &Trace) {
+        for ev in &trace.events {
+            self.arrive(ev.func, ev.at);
+        }
+        self.drain_all();
+    }
+}
+
+/// Jain fairness over the healthy tenants' mean latencies.
+fn healthy_jain(rec: &Recorder) -> f64 {
+    let per: Vec<f64> = rec
+        .per_function()
+        .into_iter()
+        .filter(|a| (a.func.0 as usize) < N_TENANTS)
+        .map(|a| a.mean_latency_s)
+        .collect();
+    jain_index(&per)
+}
+
+// ---------------------------------------------------------------------
+// Breaker storm: poison tenant vs circuit breaker.
+// ---------------------------------------------------------------------
+
+pub struct BreakerStorm {
+    pub arrivals: usize,
+    pub completed: usize,
+    /// Poison invocations that burned their whole retry budget.
+    pub exec_failed: usize,
+    /// Admissions rejected by the open breaker.
+    pub quarantined: usize,
+    pub stats: FaultStats,
+    /// Healthy-tenant Jain with no poison tenant misbehaving.
+    pub jain_baseline: f64,
+    /// Healthy-tenant Jain with the poison tenant quarantined.
+    pub jain_poison: f64,
+    /// `jain_poison / jain_baseline` (the [`JAIN_GATE`] metric).
+    pub jain_ratio: f64,
+    pub conserved: bool,
+}
+
+/// Run the poison-tenant storm twice — no-poison baseline, then the
+/// poison run — through the admission-aware driver.
+pub fn breaker_storm(quick: bool) -> BreakerStorm {
+    let dur = if quick { 20.0 } else { 120.0 };
+    let n_funcs = N_TENANTS + 1;
+    let t = storm_trace(0xFA17_0002, n_funcs, 0.015, dur);
+    let breaker = BreakerConfig {
+        window: 16,
+        trip_threshold: 0.5,
+        min_samples: 4,
+        cooldown: secs(if quick { 4.0 } else { 15.0 }),
+        probes: 2,
+    };
+    let mk_cfg = |poison: Vec<(crate::types::FuncId, f64)>| {
+        let mut cfg = PlaneConfig::uniform(4, V100, MultiplexMode::Plain);
+        cfg.mqfq.anticipate.estimator = true;
+        cfg.faults = Some(FaultConfig {
+            seed: 0xFA17_0002,
+            poison,
+            retry_budget: 2,
+            breaker: Some(breaker.clone()),
+            ..Default::default()
+        });
+        cfg
+    };
+
+    let mut base = AdmitDriver::new(fault_workload(n_funcs), mk_cfg(Vec::new()));
+    base.run(&t);
+    let jain_baseline = healthy_jain(&base.plane.recorder);
+
+    let poison_func = crate::types::FuncId(N_TENANTS as u32);
+    let mut d = AdmitDriver::new(fault_workload(n_funcs), mk_cfg(vec![(poison_func, 1.0)]));
+    d.run(&t);
+    let fates = d.plane.drain_fault_fates();
+    let jain_poison = healthy_jain(&d.plane.recorder);
+
+    let completed = d.plane.recorder.len();
+    BreakerStorm {
+        arrivals: d.arrivals,
+        completed,
+        exec_failed: fates.len(),
+        quarantined: d.quarantined,
+        stats: d.plane.fault_stats(),
+        jain_baseline,
+        jain_poison,
+        jain_ratio: jain_poison / jain_baseline.max(1e-9),
+        conserved: completed + fates.len() + d.quarantined + d.shed == d.arrivals,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shed storm: deadline-aware admission at 2x offered load.
+// ---------------------------------------------------------------------
+
+/// One shed-storm configuration row.
+#[derive(Debug, Clone)]
+pub struct ShedRow {
+    /// Identity: "uncontended" | "shed-2x" | "noshed-2x".
+    pub shed: &'static str,
+    pub arrivals: usize,
+    pub admitted: usize,
+    pub rejected: usize,
+    /// Admitted completions arriving after the warmup window.
+    pub measured: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+pub struct ShedStorm {
+    pub rows: Vec<ShedRow>,
+    /// Deadline the shed run was calibrated to (seconds).
+    pub deadline_s: f64,
+    /// p99(shed-2x) / p99(uncontended) — the [`SHED_GATE`] metric.
+    pub p99_ratio: f64,
+    /// p99(noshed-2x) / p99(uncontended): what the gate prevents.
+    pub unprotected_ratio: f64,
+    pub shed_count: usize,
+    pub conserved: bool,
+}
+
+/// Run the overload trio: uncontended 1×, unprotected 2×, and shed 2×
+/// (deadline calibrated from the uncontended run's post-warmup p99).
+pub fn shed_storm(quick: bool) -> ShedStorm {
+    // Cold-boot debt at 1x load (6 tenants x ~10 s boots on 2 GPUs)
+    // drains by roughly t=85 s, so the measurement window opens at
+    // dur/2 and the full horizon is long enough to leave a clean
+    // uncontended baseline behind it.
+    let dur = if quick { 15.0 } else { 240.0 };
+    let warm = dur / 2.0;
+    let n_funcs = 6;
+    // 2 GPUs serve isoneural at roughly 77/s; 18 ms mean inter-arrival
+    // is ~0.7x capacity, 9 ms is ~1.4x — a sustained 2x offered load.
+    let t1 = storm_trace(0xFA17_0003, n_funcs, 0.018, dur);
+    let t2 = storm_trace(0xFA17_0003, n_funcs, 0.009, dur);
+
+    let base_cfg = || {
+        let mut cfg = PlaneConfig::uniform(2, V100, MultiplexMode::Plain);
+        cfg.mqfq.anticipate.estimator = true;
+        cfg
+    };
+    let measure = |rec: &Recorder| -> (usize, f64, f64) {
+        let lats: Vec<f64> = rec
+            .records
+            .iter()
+            .filter(|r| crate::types::to_secs(r.arrived) >= warm)
+            .map(|r| r.latency_s())
+            .collect();
+        let (p50, p99) = p50_p99_ms(&lats);
+        (lats.len(), p50, p99)
+    };
+
+    // Uncontended reference (no fault plan at all).
+    let mut unc = AdmitDriver::new(fault_workload(n_funcs), base_cfg());
+    unc.run(&t1);
+    let (m0, p50_0, p99_0) = measure(&unc.plane.recorder);
+
+    // Unprotected 2x: same plane, double the offered load, no shed.
+    let mut raw = AdmitDriver::new(fault_workload(n_funcs), base_cfg());
+    raw.run(&t2);
+    let (m1, p50_1, p99_1) = measure(&raw.plane.recorder);
+
+    // Shed 2x: deadline calibrated to the uncontended p99. The quick
+    // horizon is too short to outrun the cold boots, so its calibration
+    // base is junk — pin a small deadline there instead (quick runs
+    // assert structure, not ratios, and a tight deadline guarantees the
+    // 2x run actually sheds).
+    let deadline_s = if quick {
+        0.25
+    } else {
+        (0.8 * p99_0 / 1e3).max(0.05)
+    };
+    let mut cfg = base_cfg();
+    cfg.faults = Some(FaultConfig {
+        seed: 0xFA17_0003,
+        shed: Some(ShedConfig {
+            deadline_s,
+            enter: 1.0,
+            exit: 0.7,
+            retry_after_ms: 250,
+        }),
+        ..Default::default()
+    });
+    let mut sh = AdmitDriver::new(fault_workload(n_funcs), cfg);
+    sh.run(&t2);
+    let (m2, p50_2, p99_2) = measure(&sh.plane.recorder);
+
+    let rows = vec![
+        ShedRow {
+            shed: "uncontended",
+            arrivals: unc.arrivals,
+            admitted: unc.arrivals,
+            rejected: 0,
+            measured: m0,
+            p50_ms: p50_0,
+            p99_ms: p99_0,
+        },
+        ShedRow {
+            shed: "noshed-2x",
+            arrivals: raw.arrivals,
+            admitted: raw.arrivals,
+            rejected: 0,
+            measured: m1,
+            p50_ms: p50_1,
+            p99_ms: p99_1,
+        },
+        ShedRow {
+            shed: "shed-2x",
+            arrivals: sh.arrivals,
+            admitted: sh.arrivals - sh.shed,
+            rejected: sh.shed,
+            measured: m2,
+            p50_ms: p50_2,
+            p99_ms: p99_2,
+        },
+    ];
+    let conserved = sh.plane.recorder.len() + sh.shed == sh.arrivals;
+    ShedStorm {
+        rows,
+        deadline_s,
+        p99_ratio: p99_2 / p99_0.max(1e-9),
+        unprotected_ratio: p99_1 / p99_0.max(1e-9),
+        shed_count: sh.shed,
+        conserved,
+    }
+}
+
+// ---------------------------------------------------------------------
+// TCP storm: wall-clock fault plan over real loopback sockets.
+// ---------------------------------------------------------------------
+
+pub struct TcpFaultStorm {
+    pub pre_p99_ms: f64,
+    pub post_p99_ms: f64,
+    /// p99(post-recovery) / p99(pre-fault).
+    pub recovery_ratio: f64,
+    /// Async burst tickets in flight across the device failure.
+    pub burst: usize,
+    pub done: usize,
+    pub exec_failed: usize,
+    /// Any other fate (must be zero: exactly-once means every ticket
+    /// resolves to done or exec-failed, never a hang or a loss).
+    pub other: usize,
+    pub max_wait_ms: f64,
+    /// Scraped from the Prometheus wire after the storm.
+    pub faults_device: u64,
+    pub faults_transient: u64,
+    pub retries: u64,
+    pub conserved: bool,
+    pub accepted: u64,
+    pub completed: u64,
+    pub failed: u64,
+}
+
+/// Sum a Prometheus counter family across its labeled series.
+fn prom_sum(body: &str, family: &str) -> u64 {
+    body.lines()
+        .filter(|l| l.starts_with(family))
+        .filter_map(|l| l.rsplit(' ').next()?.parse::<f64>().ok())
+        .sum::<f64>() as u64
+}
+
+/// One closed-loop sync batch; returns latency samples (ms) and the
+/// count of budget-exhausted `exec-failed` replies (tolerated — they
+/// are resolutions, not hangs).
+fn tcp_batch(addr: SocketAddr, clients: usize, per_client: usize) -> (Vec<f64>, usize) {
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            thread::spawn(move || {
+                let mut cl = ApiClient::connect(addr).unwrap();
+                let mut lats = Vec::with_capacity(per_client);
+                let mut failed = 0usize;
+                for i in 0..per_client {
+                    let func = format!("isoneural-{}", (c * per_client + i) % N_TENANTS);
+                    let s = Instant::now();
+                    match cl.invoke(&func, Some(STORM_DEADLINE_MS)) {
+                        Ok(_) => lats.push(s.elapsed().as_secs_f64() * 1e3),
+                        Err(ApiError::ExecFailed { .. }) => failed += 1,
+                        Err(e) => panic!("tcp batch: unexpected error {e:?}"),
+                    }
+                }
+                (lats, failed)
+            })
+        })
+        .collect();
+    let mut lats = Vec::new();
+    let mut failed = 0;
+    for h in handles {
+        let (l, f) = h.join().expect("batch client panicked");
+        lats.extend(l);
+        failed += f;
+    }
+    (lats, failed)
+}
+
+/// Run the wall-clock fault storm: transient faults throughout, one
+/// GPU per shard drops at 0.9 s and rejoins at 2.1 s while an async
+/// burst is in flight.
+pub fn tcp_storm(quick: bool) -> TcpFaultStorm {
+    let (per_client, burst_n, batches) = if quick { (6, 16, 2) } else { (25, 64, 3) };
+    let clients = 4;
+    let fail_at = Duration::from_millis(900);
+    let heal_at = Duration::from_millis(2100);
+    let mut plane = PlaneConfig::uniform(2, V100, MultiplexMode::Plain);
+    plane.faults = Some(FaultConfig {
+        seed: 0xFA17_0004,
+        transient_rate: 0.15,
+        retry_budget: 4,
+        device_failures: vec![(secs(0.9), crate::types::GpuId(0))],
+        device_recoveries: vec![(secs(2.1), crate::types::GpuId(0))],
+        ..Default::default()
+    });
+    let mut w = fault_workload(N_TENANTS);
+    // One slow class so the burst is still in flight when the GPU dies
+    // (fft's cold boot is seconds of model time; ~50 ms wall here).
+    w.register(by_name("fft").expect("catalog has fft"), 0, 1.0);
+    let cfg = ClusterConfig {
+        n_shards: 2,
+        router: RouterKind::RoundRobin,
+        plane,
+        ..Default::default()
+    };
+    let srv = RtCluster::new(w, cfg, None, 0.02).unwrap();
+    let addr = srv.serve("127.0.0.1:0").unwrap();
+    let t0 = Instant::now();
+
+    // Warm wave (cold boots excluded from the baseline), then the
+    // pre-fault baseline batches.
+    let _ = tcp_batch(addr, clients, N_TENANTS.div_ceil(clients));
+    let mut pre = Vec::new();
+    let mut exec_failed = 0usize;
+    for _ in 0..batches {
+        let (lats, f) = tcp_batch(addr, clients, per_client);
+        pre.extend(lats);
+        exec_failed += f;
+    }
+    let pre_p99 = percentiles(&pre, &[99.0])[0];
+
+    // Async burst of slow work timed to be in flight at the failure.
+    if let Some(gap) = (fail_at.saturating_sub(Duration::from_millis(150)))
+        .checked_sub(t0.elapsed())
+    {
+        thread::sleep(gap);
+    }
+    let mut sub = ApiClient::connect(addr).unwrap();
+    let tickets: Vec<Ticket> = (0..burst_n)
+        .map(|_| sub.invoke_async("fft-0").unwrap())
+        .collect();
+
+    // Every burst ticket resolves exactly once, bounded far under one
+    // deadline window — the failed device's work is re-queued (forced
+    // cold) and retried transparently.
+    let mut done = 0usize;
+    let mut other = 0usize;
+    let mut max_wait_ms = 0f64;
+    let waits: Vec<_> = tickets
+        .chunks(burst_n.div_ceil(clients).max(1))
+        .map(|chunk| {
+            let chunk = chunk.to_vec();
+            thread::spawn(move || {
+                let mut cl = ApiClient::connect(addr).unwrap();
+                let mut out = Vec::new();
+                for t in chunk {
+                    let s = Instant::now();
+                    let r = cl.wait(t, Some(STORM_DEADLINE_MS));
+                    out.push((r, s.elapsed().as_secs_f64() * 1e3));
+                }
+                out
+            })
+        })
+        .collect();
+    for h in waits {
+        for (r, ms) in h.join().expect("storm waiter panicked") {
+            max_wait_ms = max_wait_ms.max(ms);
+            match r {
+                Ok(_) => done += 1,
+                Err(ApiError::ExecFailed { .. }) => exec_failed += 1,
+                Err(_) => other += 1,
+            }
+        }
+    }
+
+    // Past the recovery (plus one monitor tick of slack), re-warm the
+    // rejoined device and measure the post-recovery baseline.
+    if let Some(gap) = (heal_at + Duration::from_millis(300)).checked_sub(t0.elapsed()) {
+        thread::sleep(gap);
+    }
+    let _ = tcp_batch(addr, clients, N_TENANTS.div_ceil(clients));
+    let mut post = Vec::new();
+    for _ in 0..batches {
+        let (lats, f) = tcp_batch(addr, clients, per_client);
+        post.extend(lats);
+        exec_failed += f;
+    }
+    let post_p99 = percentiles(&post, &[99.0])[0];
+
+    // Quiescent conservation + the fault counters over the wire.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let m = loop {
+        let m = sub.membership().expect("membership");
+        if m.conserved_at_quiescence() || Instant::now() > deadline {
+            break m;
+        }
+        thread::sleep(Duration::from_millis(10));
+    };
+    let prom = sub.metrics(MetricsFormat::Prom).expect("metrics");
+    sub.quit();
+
+    TcpFaultStorm {
+        pre_p99_ms: pre_p99,
+        post_p99_ms: post_p99,
+        recovery_ratio: post_p99 / pre_p99.max(1e-9),
+        burst: burst_n,
+        done,
+        exec_failed,
+        other,
+        max_wait_ms,
+        faults_device: prom_sum(&prom, "mqfq_faults_device_total"),
+        faults_transient: prom_sum(&prom, "mqfq_faults_transient_total"),
+        retries: prom_sum(&prom, "mqfq_retries_total"),
+        conserved: m.conserved_at_quiescence(),
+        accepted: m.accepted,
+        completed: m.completed,
+        failed: m.failed,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Report.
+// ---------------------------------------------------------------------
+
+pub struct FaultsReport {
+    pub device: DeviceStorm,
+    pub breaker: BreakerStorm,
+    pub shed: ShedStorm,
+    pub tcp: TcpFaultStorm,
+}
+
+pub fn collect(quick: bool) -> FaultsReport {
+    FaultsReport {
+        device: device_storm(quick),
+        breaker: breaker_storm(quick),
+        shed: shed_storm(quick),
+        tcp: tcp_storm(quick),
+    }
+}
+
+/// Machine-readable form (`BENCH_faults.json`).
+pub fn report_json(r: &FaultsReport) -> Json {
+    let device_rows = r
+        .device
+        .rows
+        .iter()
+        .map(|row| {
+            Json::Obj(vec![
+                ("fault".into(), Json::str("device")),
+                ("phase".into(), Json::str(row.phase)),
+                ("completed".into(), Json::Int(row.completed as i64)),
+                ("p50_ms".into(), Json::Num(row.p50_ms)),
+                ("p99_ms".into(), Json::Num(row.p99_ms)),
+            ])
+        })
+        .collect();
+    let breaker_rows = vec![
+        Json::Obj(vec![
+            ("breaker".into(), Json::str("baseline")),
+            ("jain_healthy".into(), Json::Num(r.breaker.jain_baseline)),
+        ]),
+        Json::Obj(vec![
+            ("breaker".into(), Json::str("poison")),
+            ("jain_healthy".into(), Json::Num(r.breaker.jain_poison)),
+            ("quarantined".into(), Json::Int(r.breaker.quarantined as i64)),
+            ("exec_failed".into(), Json::Int(r.breaker.exec_failed as i64)),
+            (
+                "breaker_trips".into(),
+                Json::Int(r.breaker.stats.breaker_trips as i64),
+            ),
+            (
+                "breaker_probes".into(),
+                Json::Int(r.breaker.stats.breaker_probes as i64),
+            ),
+        ]),
+    ];
+    let shed_rows = r
+        .shed
+        .rows
+        .iter()
+        .map(|row| {
+            Json::Obj(vec![
+                ("shed".into(), Json::str(row.shed)),
+                ("arrivals".into(), Json::Int(row.arrivals as i64)),
+                ("admitted".into(), Json::Int(row.admitted as i64)),
+                ("rejected".into(), Json::Int(row.rejected as i64)),
+                ("measured".into(), Json::Int(row.measured as i64)),
+                ("p50_ms".into(), Json::Num(row.p50_ms)),
+                ("p99_ms".into(), Json::Num(row.p99_ms)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("schema".into(), Json::str("mqfq-bench-faults/v1")),
+        ("device_phases".into(), Json::Arr(device_rows)),
+        (
+            "device_recovery_ratio".into(),
+            Json::Num(r.device.recovery_ratio),
+        ),
+        ("device_conserved".into(), Json::Bool(r.device.conserved)),
+        (
+            "device_exec_failed".into(),
+            Json::Int(r.device.exec_failed as i64),
+        ),
+        (
+            "device_faults_injected".into(),
+            Json::Int((r.device.stats.faults_device + r.device.stats.faults_transient) as i64),
+        ),
+        ("breaker_rows".into(), Json::Arr(breaker_rows)),
+        ("breaker_jain_ratio".into(), Json::Num(r.breaker.jain_ratio)),
+        ("breaker_conserved".into(), Json::Bool(r.breaker.conserved)),
+        ("shed_rows".into(), Json::Arr(shed_rows)),
+        ("shed_deadline_s".into(), Json::Num(r.shed.deadline_s)),
+        ("shed_p99_ratio".into(), Json::Num(r.shed.p99_ratio)),
+        (
+            "shed_unprotected_ratio".into(),
+            Json::Num(r.shed.unprotected_ratio),
+        ),
+        ("shed_conserved".into(), Json::Bool(r.shed.conserved)),
+        ("tcp_pre_p99_ms".into(), Json::Num(r.tcp.pre_p99_ms)),
+        ("tcp_post_p99_ms".into(), Json::Num(r.tcp.post_p99_ms)),
+        ("tcp_recovery_ratio".into(), Json::Num(r.tcp.recovery_ratio)),
+        (
+            "tcp_fates".into(),
+            Json::Obj(vec![
+                ("done".into(), Json::Int(r.tcp.done as i64)),
+                ("exec_failed".into(), Json::Int(r.tcp.exec_failed as i64)),
+                ("other".into(), Json::Int(r.tcp.other as i64)),
+            ]),
+        ),
+        ("tcp_max_wait_ms".into(), Json::Num(r.tcp.max_wait_ms)),
+        (
+            "tcp_faults_device".into(),
+            Json::Int(r.tcp.faults_device as i64),
+        ),
+        (
+            "tcp_faults_transient".into(),
+            Json::Int(r.tcp.faults_transient as i64),
+        ),
+        ("tcp_retries".into(), Json::Int(r.tcp.retries as i64)),
+        ("tcp_conserved".into(), Json::Bool(r.tcp.conserved)),
+        ("tcp_accepted".into(), Json::Int(r.tcp.accepted as i64)),
+        ("tcp_completed".into(), Json::Int(r.tcp.completed as i64)),
+        ("tcp_failed".into(), Json::Int(r.tcp.failed as i64)),
+    ])
+}
+
+pub fn main() {
+    let quick = std::env::var("FAULTS_QUICK").is_ok();
+    println!(
+        "== §Faults: device fault tolerance (inject/retry/breaker/shed){} ==",
+        if quick { " (quick)" } else { "" }
+    );
+    let report = collect(quick);
+
+    let d = &report.device;
+    println!("{:<10} {:>10} {:>10} {:>10}", "phase", "completed", "p50 ms", "p99 ms");
+    for row in &d.rows {
+        println!(
+            "{:<10} {:>10} {:>10.2} {:>10.2}",
+            row.phase, row.completed, row.p50_ms, row.p99_ms
+        );
+    }
+    println!(
+        "device: {} arrivals = {} completed + {} exec-failed (conserved: {}); \
+         {} device + {} transient faults, {} retries; recovery {:.2}x",
+        d.arrivals,
+        d.completed,
+        d.exec_failed,
+        d.conserved,
+        d.stats.faults_device,
+        d.stats.faults_transient,
+        d.stats.retries,
+        d.recovery_ratio
+    );
+    let b = &report.breaker;
+    println!(
+        "breaker: {} trips, {} probes, {} quarantined, {} exec-failed; \
+         healthy Jain {:.4} vs baseline {:.4} ({:.3}x)",
+        b.stats.breaker_trips,
+        b.stats.breaker_probes,
+        b.quarantined,
+        b.exec_failed,
+        b.jain_poison,
+        b.jain_baseline,
+        b.jain_ratio
+    );
+    let s = &report.shed;
+    for row in &s.rows {
+        println!(
+            "shed[{:<11}] arrivals={:<6} admitted={:<6} rejected={:<5} p99={:.2} ms",
+            row.shed, row.arrivals, row.admitted, row.rejected, row.p99_ms
+        );
+    }
+    println!(
+        "shed: deadline {:.3}s; admitted p99 {:.2}x uncontended (unprotected {:.2}x)",
+        s.deadline_s, s.p99_ratio, s.unprotected_ratio
+    );
+    let t = &report.tcp;
+    println!(
+        "tcp: burst {} -> done={} exec-failed={} other={} (max wait {:.1} ms); \
+         {} device + {} transient faults, {} retries; recovery {:.2}x (conserved: {})",
+        t.burst,
+        t.done,
+        t.exec_failed,
+        t.other,
+        t.max_wait_ms,
+        t.faults_device,
+        t.faults_transient,
+        t.retries,
+        t.recovery_ratio,
+        t.conserved
+    );
+    match json::write_file("BENCH_faults.json", &report_json(&report)) {
+        Ok(()) => println!("wrote BENCH_faults.json"),
+        Err(e) => println!("BENCH_faults.json not written: {e}"),
+    }
+
+    // Correctness invariants hold in every mode — they are the point of
+    // the harness, not perf gates. Exactly-once / conservation first.
+    assert!(report.device.conserved, "device storm lost invocations");
+    assert!(report.device.fleet_healed, "scheduled recovery never landed");
+    assert!(report.device.stats.faults_device >= 1, "device failure stranded nothing");
+    assert!(report.breaker.conserved, "breaker storm lost invocations");
+    assert!(report.breaker.stats.breaker_trips >= 1, "poison tenant never tripped the breaker");
+    assert!(report.breaker.quarantined > 0, "open breaker never quarantined an arrival");
+    assert!(report.breaker.stats.breaker_probes >= 1, "cooldown never produced a half-open probe");
+    assert!(report.shed.conserved, "shed storm lost invocations");
+    assert!(report.shed.shed_count > 0, "2x overload never shed");
+    assert!(report.tcp.conserved, "tcp ticket fates do not conserve");
+    assert_eq!(report.tcp.other, 0, "a tcp ticket resolved to an unexpected fate");
+    // Timing gates only where timing is meaningful (release, full run).
+    if !cfg!(debug_assertions) && !quick {
+        assert!(
+            report.device.recovery_ratio <= RECOVERY_GATE,
+            "sim post-recovery p99 {:.2}x pre-fault (gate {RECOVERY_GATE}x)",
+            report.device.recovery_ratio
+        );
+        assert!(
+            report.breaker.jain_ratio >= JAIN_GATE,
+            "healthy-tenant Jain {:.3}x of no-poison (gate {JAIN_GATE}x)",
+            report.breaker.jain_ratio
+        );
+        assert!(
+            report.shed.p99_ratio <= SHED_GATE,
+            "admitted p99 {:.2}x uncontended at 2x load (gate {SHED_GATE}x)",
+            report.shed.p99_ratio
+        );
+        assert!(
+            report.tcp.faults_device >= 1,
+            "tcp storm: the device failure stranded no in-flight work"
+        );
+        assert!(report.tcp.retries >= 1, "tcp storm: no transient fault was retried");
+        assert!(
+            report.tcp.max_wait_ms < STORM_DEADLINE_MS as f64,
+            "a tcp wait consumed its whole deadline window"
+        );
+        assert!(
+            report.tcp.recovery_ratio <= RECOVERY_GATE,
+            "tcp post-recovery p99 {:.2}x pre-fault (gate {RECOVERY_GATE}x)",
+            report.tcp.recovery_ratio
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_storm_conserves_and_heals() {
+        let s = device_storm(true);
+        assert_eq!(s.rows.len(), 5);
+        assert!(
+            s.conserved,
+            "{} arrivals != {} completed + {} failed",
+            s.arrivals, s.completed, s.exec_failed
+        );
+        assert!(s.fleet_healed);
+        assert!(s.stats.faults_device >= 1, "{:?}", s.stats);
+        assert!(s.stats.faults_transient >= 1, "{:?}", s.stats);
+        assert!(s.stats.retries >= 1, "{:?}", s.stats);
+        // The failure window visibly hurt relative to the pre window.
+        let pre = s.rows.iter().find(|r| r.phase == "pre").unwrap();
+        assert!(pre.completed > 0);
+    }
+
+    #[test]
+    fn breaker_storm_quarantines_and_reprobes() {
+        let s = breaker_storm(true);
+        assert!(s.conserved);
+        assert!(s.stats.breaker_trips >= 1, "{:?}", s.stats);
+        assert!(s.quarantined > 0);
+        assert!(s.stats.breaker_probes >= 1, "{:?}", s.stats);
+        assert!(s.exec_failed > 0, "poison attempts must exhaust budgets");
+        assert!(s.jain_baseline > 0.0 && s.jain_poison > 0.0);
+    }
+
+    #[test]
+    fn shed_storm_sheds_under_overload_only() {
+        let s = shed_storm(true);
+        assert_eq!(s.rows.len(), 3);
+        assert!(s.conserved);
+        assert!(s.shed_count > 0, "2x load never shed");
+        let unc = &s.rows[0];
+        assert_eq!(unc.rejected, 0, "uncontended run must not reject");
+        // Shedding keeps the admitted tail below the unprotected run.
+        assert!(
+            s.p99_ratio < s.unprotected_ratio,
+            "shed {:.2}x !< unprotected {:.2}x",
+            s.p99_ratio,
+            s.unprotected_ratio
+        );
+    }
+
+    #[test]
+    fn report_json_has_identity_and_gate_keys() {
+        let r = FaultsReport {
+            device: DeviceStorm {
+                rows: vec![DevicePhaseRow {
+                    phase: "pre",
+                    completed: 10,
+                    p50_ms: 1.0,
+                    p99_ms: 2.0,
+                }],
+                arrivals: 10,
+                completed: 10,
+                exec_failed: 0,
+                conserved: true,
+                stats: FaultStats::default(),
+                fleet_healed: true,
+                recovery_ratio: 1.1,
+            },
+            breaker: BreakerStorm {
+                arrivals: 100,
+                completed: 90,
+                exec_failed: 4,
+                quarantined: 6,
+                stats: FaultStats::default(),
+                jain_baseline: 0.99,
+                jain_poison: 0.98,
+                jain_ratio: 0.99,
+                conserved: true,
+            },
+            shed: ShedStorm {
+                rows: vec![ShedRow {
+                    shed: "uncontended",
+                    arrivals: 100,
+                    admitted: 100,
+                    rejected: 0,
+                    measured: 80,
+                    p50_ms: 1.0,
+                    p99_ms: 2.0,
+                }],
+                deadline_s: 0.05,
+                p99_ratio: 1.4,
+                unprotected_ratio: 9.0,
+                shed_count: 12,
+                conserved: true,
+            },
+            tcp: TcpFaultStorm {
+                pre_p99_ms: 1.5,
+                post_p99_ms: 1.8,
+                recovery_ratio: 1.2,
+                burst: 16,
+                done: 16,
+                exec_failed: 0,
+                other: 0,
+                max_wait_ms: 120.0,
+                faults_device: 3,
+                faults_transient: 7,
+                retries: 10,
+                conserved: true,
+                accepted: 216,
+                completed: 216,
+                failed: 0,
+            },
+        };
+        let doc = report_json(&r).render();
+        for key in [
+            "\"schema\"",
+            "\"device_phases\"",
+            "\"fault\"",
+            "\"phase\"",
+            "\"breaker_rows\"",
+            "\"breaker\"",
+            "\"breaker_jain_ratio\"",
+            "\"shed_rows\"",
+            "\"shed\"",
+            "\"shed_p99_ratio\"",
+            "\"tcp_recovery_ratio\"",
+            "\"tcp_fates\"",
+            "\"tcp_faults_device\"",
+        ] {
+            assert!(doc.contains(key), "missing {key} in {doc}");
+        }
+        assert!(doc.contains("mqfq-bench-faults/v1"));
+    }
+
+    #[test]
+    fn prom_sum_folds_labeled_series_and_skips_comments() {
+        let body = "# TYPE mqfq_retries_total counter\n\
+                    mqfq_retries_total{shard=\"0\"} 3\n\
+                    mqfq_retries_total{shard=\"1\"} 4\n\
+                    mqfq_retry_exhausted_total{shard=\"0\"} 9\n";
+        assert_eq!(prom_sum(body, "mqfq_retries_total"), 7);
+        assert_eq!(prom_sum(body, "mqfq_retry_exhausted_total"), 9);
+        assert_eq!(prom_sum(body, "mqfq_faults_device_total"), 0);
+    }
+}

@@ -252,6 +252,7 @@ pub fn sweep(cfg: &SweepConfig) -> Vec<HeteroRow> {
                 shard_planes: shard_planes.clone(),
                 load_factor: cfg.load_factor,
                 seed: cfg.seed,
+                ..Default::default()
             };
             let mut r = replay_cluster(w.clone(), &t, ccfg);
             rows.push(measure(fleet, router, &mut r));

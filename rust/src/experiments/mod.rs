@@ -8,6 +8,7 @@ pub mod ablation;
 pub mod anticipate;
 pub mod cluster;
 pub mod elastic;
+pub mod faults;
 pub mod fig1;
 pub mod fig3;
 pub mod fig4;
@@ -157,6 +158,7 @@ pub const ALL: &[(&str, fn())] = &[
     ("serving", serving::main),
     ("elastic", elastic::main),
     ("anticipate", anticipate::main),
+    ("faults", faults::main),
 ];
 
 /// Look up an experiment by name.
@@ -175,7 +177,7 @@ mod tests {
             "table1", "fig1", "fig3", "fig4", "table3", "fig5a", "fig5b", "fig5c",
             "fig6a", "fig6b", "fig6c", "fig7a", "fig7b", "fig7c", "fig8a", "fig8b",
             "fig8c", "ablation", "perf", "cluster", "hetero", "serving", "elastic",
-            "anticipate",
+            "anticipate", "faults",
         ] {
             assert!(names.contains(&expect), "{expect} missing");
         }

@@ -1,0 +1,870 @@
+//! Fault model + deterministic injection: device failures, transient
+//! execution faults, stragglers, poison-function circuit breakers, and
+//! deadline-aware overload shedding.
+//!
+//! # Failure model
+//!
+//! Three fault kinds, all driven from one seeded [`FaultConfig`]:
+//!
+//! * **Device** ([`FaultKind::Device`]) — a GPU drops out of the pool
+//!   mid-flight at a scheduled instant. Every invocation in flight on
+//!   the device is evacuated and re-queued (forced cold — its container
+//!   died with the device); the device takes no further placements
+//!   until an optional scheduled recovery.
+//! * **Transient** ([`FaultKind::Transient`]) — the attempt's container
+//!   crashes (modeled ECC/OOM): detected when the execution would have
+//!   completed, the attempt's service is thrown away and the
+//!   invocation retries cold under its budget.
+//! * **Straggler** ([`FaultKind::Straggler`]) — the execution hangs:
+//!   its completion never arrives, the device slot and D-token stay
+//!   burned until the watchdog (fed from the estimator's per-function
+//!   exec predictions) evacuates it after `straggler_k`× the expected
+//!   execution time.
+//!
+//! Injection is **deterministic and clock-agnostic**: whether an
+//! attempt faults is a pure hash of `(seed, kind, invocation,
+//! attempt)` — never of wall time — so the virtual-time sim and the
+//! real TCP serving path inject the *same* faults for the same seed,
+//! and a re-run reproduces a storm bit-for-bit.
+//!
+//! # Exactly-once retry semantics
+//!
+//! Each invocation carries an attempt counter. A failed attempt either
+//! re-queues at the head of its flow (attempts remaining) or resolves
+//! the invocation with a structured `exec-failed` error carrying the
+//! attempt count — every submit resolves exactly once, enforced by
+//! attempt-stamped completions (a late completion from a superseded
+//! attempt is dropped, never double-counted).
+//!
+//! # Circuit breaker (poison functions)
+//!
+//! A per-function [`Breaker`] tracks a rolling window of attempt
+//! outcomes. Tripping (failure fraction ≥ threshold over ≥
+//! `min_samples`) opens the breaker: admission rejects the function
+//! with `quarantined` until the cooldown elapses, then a bounded
+//! number of half-open probes re-test it — probe failures re-open,
+//! enough successes close it fresh.
+//!
+//! # Overload shedding
+//!
+//! When the estimator-implied queue wait says a new invocation cannot
+//! meet the configured deadline, admission sheds it with
+//! `overloaded` + `retry_after_ms` instead of queueing doomed work.
+//! Hysteresis (`enter`/`exit` fractions of the deadline) keeps the
+//! shedder from oscillating at the boundary.
+//!
+//! The zero-fault config ([`FaultConfig::is_neutral`]) is inert by
+//! construction: the control plane only consults fault state behind an
+//! `Option`, so "no plan" and "neutral plan" produce bit-identical
+//! dispatch streams.
+
+use std::collections::HashMap;
+
+use crate::types::{DurNanos, FuncId, GpuId, InvocationId, Nanos, SEC};
+
+/// The fault taxonomy. Payload code (`TraceEvent.a` of a `fault`
+/// event) is [`FaultKind::code`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// GPU dropped out of the pool; in-flight work evacuated.
+    Device,
+    /// Container crash / modeled ECC or OOM: attempt lost at what
+    /// would have been its completion.
+    Transient,
+    /// Execution hung; evacuated by the watchdog after k× the
+    /// estimated execution time.
+    Straggler,
+}
+
+impl FaultKind {
+    pub fn code(&self) -> i64 {
+        match self {
+            FaultKind::Device => 0,
+            FaultKind::Transient => 1,
+            FaultKind::Straggler => 2,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Device => "device",
+            FaultKind::Transient => "transient",
+            FaultKind::Straggler => "straggler",
+        }
+    }
+}
+
+/// Poison-function circuit-breaker tuning.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BreakerConfig {
+    /// Rolling outcome window (attempts), capped at 64 (one bit each).
+    pub window: usize,
+    /// Failure fraction over the window that trips the breaker Open.
+    pub trip_threshold: f64,
+    /// Minimum outcomes observed before the breaker may trip.
+    pub min_samples: u32,
+    /// Open → half-open after this long without admissions.
+    pub cooldown: DurNanos,
+    /// Half-open probe budget: successes needed to close; concurrent
+    /// probes admitted are bounded by the same number.
+    pub probes: u32,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        Self {
+            window: 32,
+            trip_threshold: 0.5,
+            min_samples: 8,
+            cooldown: 30 * SEC,
+            probes: 3,
+        }
+    }
+}
+
+/// Deadline-aware overload-shedding tuning.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShedConfig {
+    /// The deadline admitted work is expected to meet (seconds).
+    pub deadline_s: f64,
+    /// Start shedding when predicted wait > `enter` × deadline.
+    pub enter: f64,
+    /// Stop shedding when predicted wait ≤ `exit` × deadline
+    /// (`exit < enter` gives the hysteresis band).
+    pub exit: f64,
+    /// Hint returned to shed clients.
+    pub retry_after_ms: u64,
+}
+
+impl Default for ShedConfig {
+    fn default() -> Self {
+        Self {
+            deadline_s: 30.0,
+            enter: 1.0,
+            exit: 0.7,
+            retry_after_ms: 250,
+        }
+    }
+}
+
+/// The seeded fault plan: rates, schedules, budgets, and the optional
+/// breaker/shed layers. `Default` is the neutral plan (inject
+/// nothing, never reject).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Seed of the injection oracle; same seed ⇒ same faults, in
+    /// either clock.
+    pub seed: u64,
+    /// Baseline per-attempt transient-fault probability (every
+    /// function).
+    pub transient_rate: f64,
+    /// Per-function overrides (poison tenants): `(func, rate)`.
+    pub poison: Vec<(FuncId, f64)>,
+    /// Per-attempt straggler (hang) probability.
+    pub straggler_rate: f64,
+    /// Watchdog multiple: evacuate a hung attempt after
+    /// `straggler_k × max(estimated, modeled) exec time`.
+    pub straggler_k: f64,
+    /// Cap on injected exec faults (transient + straggler); 0 means
+    /// unbounded. A cap lets a storm have a recovery phase.
+    pub max_faults: u64,
+    /// Max attempts per invocation (≥1; the first run counts).
+    pub retry_budget: u32,
+    /// Scheduled device failures `(at, gpu)`.
+    pub device_failures: Vec<(Nanos, GpuId)>,
+    /// Scheduled device recoveries `(at, gpu)` — the device rejoins
+    /// empty and cold.
+    pub device_recoveries: Vec<(Nanos, GpuId)>,
+    pub breaker: Option<BreakerConfig>,
+    pub shed: Option<ShedConfig>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            transient_rate: 0.0,
+            poison: Vec::new(),
+            straggler_rate: 0.0,
+            straggler_k: 3.0,
+            max_faults: 0,
+            retry_budget: 3,
+            device_failures: Vec::new(),
+            device_recoveries: Vec::new(),
+            breaker: None,
+            shed: None,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// True when the plan can never inject a fault nor reject an
+    /// admission — the control plane with a neutral plan behaves
+    /// bit-identically to one with no plan at all (property-tested).
+    pub fn is_neutral(&self) -> bool {
+        self.transient_rate <= 0.0
+            && self.straggler_rate <= 0.0
+            && self.poison.iter().all(|(_, r)| *r <= 0.0)
+            && self.device_failures.is_empty()
+            && self.breaker.is_none()
+            && self.shed.is_none()
+    }
+
+    /// Effective per-attempt exec-fault rate for `func`.
+    fn transient_rate_of(&self, func: FuncId) -> f64 {
+        self.poison
+            .iter()
+            .find(|(f, _)| *f == func)
+            .map(|(_, r)| *r)
+            .unwrap_or(self.transient_rate)
+    }
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic uniform roll in `[0, 1)` keyed on (seed, salt,
+/// invocation, attempt) — *never* on time, so sim and wall-clock runs
+/// inject identically.
+pub fn roll(seed: u64, salt: u64, inv: InvocationId, attempt: u32) -> f64 {
+    let h = splitmix64(seed ^ splitmix64(salt ^ splitmix64(inv.0 ^ ((attempt as u64) << 48))));
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Circuit-breaker state machine states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl BreakerState {
+    /// Payload code (`TraceEvent.a` of a `breaker_state` event).
+    pub fn code(&self) -> i64 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::Open => 1,
+            BreakerState::HalfOpen => 2,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+/// Admission decision from [`Breaker::admit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerAdmit {
+    /// Closed: normal admission.
+    Allowed,
+    /// Half-open: admitted as a probe.
+    Probe,
+    /// Open (or probe budget exhausted): reject, retry after the hint.
+    Rejected { retry_after_ms: u64 },
+}
+
+/// Per-function rolling-window circuit breaker (one bit per outcome,
+/// so a 64-deep window fits a single word — zero-alloc by
+/// construction).
+#[derive(Debug, Clone)]
+pub struct Breaker {
+    pub state: BreakerState,
+    /// Outcome ring, bit 0 = newest (1 = failure).
+    ring: u64,
+    len: u32,
+    opened_at: Nanos,
+    probe_successes: u32,
+    probes_out: u32,
+}
+
+impl Default for Breaker {
+    fn default() -> Self {
+        Self {
+            state: BreakerState::Closed,
+            ring: 0,
+            len: 0,
+            opened_at: 0,
+            probe_successes: 0,
+            probes_out: 0,
+        }
+    }
+}
+
+impl Breaker {
+    fn window_mask(cfg: &BreakerConfig) -> u64 {
+        let w = cfg.window.clamp(1, 64);
+        if w == 64 {
+            u64::MAX
+        } else {
+            (1u64 << w) - 1
+        }
+    }
+
+    /// Record one attempt outcome. Returns the new state when the
+    /// outcome caused a transition.
+    pub fn record(
+        &mut self,
+        cfg: &BreakerConfig,
+        failed: bool,
+        now: Nanos,
+    ) -> Option<BreakerState> {
+        match self.state {
+            BreakerState::Closed => {
+                let mask = Self::window_mask(cfg);
+                self.ring = ((self.ring << 1) | u64::from(failed)) & mask;
+                self.len = (self.len + 1).min(cfg.window.clamp(1, 64) as u32);
+                let fails = self.ring.count_ones();
+                if self.len >= cfg.min_samples.max(1)
+                    && fails as f64 / self.len as f64 >= cfg.trip_threshold
+                {
+                    self.state = BreakerState::Open;
+                    self.opened_at = now;
+                    self.probe_successes = 0;
+                    self.probes_out = 0;
+                    return Some(BreakerState::Open);
+                }
+                None
+            }
+            BreakerState::HalfOpen => {
+                self.probes_out = self.probes_out.saturating_sub(1);
+                if failed {
+                    self.state = BreakerState::Open;
+                    self.opened_at = now;
+                    self.probe_successes = 0;
+                    self.probes_out = 0;
+                    Some(BreakerState::Open)
+                } else {
+                    self.probe_successes += 1;
+                    if self.probe_successes >= cfg.probes.max(1) {
+                        self.state = BreakerState::Closed;
+                        self.ring = 0;
+                        self.len = 0;
+                        Some(BreakerState::Closed)
+                    } else {
+                        None
+                    }
+                }
+            }
+            // A stale outcome from before the trip: no state change.
+            BreakerState::Open => None,
+        }
+    }
+
+    /// Admission check; may transition Open → HalfOpen when the
+    /// cooldown has elapsed (returned as the second tuple slot for
+    /// telemetry).
+    pub fn admit(&mut self, cfg: &BreakerConfig, now: Nanos) -> (BreakerAdmit, Option<BreakerState>) {
+        let mut transition = None;
+        if self.state == BreakerState::Open && now >= self.opened_at + cfg.cooldown {
+            self.state = BreakerState::HalfOpen;
+            self.probe_successes = 0;
+            self.probes_out = 0;
+            transition = Some(BreakerState::HalfOpen);
+        }
+        let d = match self.state {
+            BreakerState::Closed => BreakerAdmit::Allowed,
+            BreakerState::HalfOpen => {
+                if self.probes_out < cfg.probes.max(1) {
+                    self.probes_out += 1;
+                    BreakerAdmit::Probe
+                } else {
+                    // Probe slots all occupied: back off briefly.
+                    BreakerAdmit::Rejected {
+                        retry_after_ms: (cfg.cooldown / 1_000_000).max(1) / 4 + 1,
+                    }
+                }
+            }
+            BreakerState::Open => {
+                let remaining = (self.opened_at + cfg.cooldown).saturating_sub(now);
+                BreakerAdmit::Rejected {
+                    retry_after_ms: (remaining / 1_000_000).max(1),
+                }
+            }
+        };
+        (d, transition)
+    }
+}
+
+/// Fault counters surfaced through the telemetry registry and the
+/// conservation checks of the property suites.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub faults_device: u64,
+    pub faults_transient: u64,
+    pub faults_straggler: u64,
+    /// Attempts re-queued under the retry budget.
+    pub retries: u64,
+    /// Invocations that exhausted the budget (resolved `exec-failed`).
+    pub retry_exhausted: u64,
+    pub breaker_trips: u64,
+    pub breaker_probes: u64,
+    /// Admissions rejected by an open breaker.
+    pub quarantined: u64,
+    /// Admissions shed by the overload policy.
+    pub shed: u64,
+}
+
+/// Terminal failure of an invocation (budget exhausted): exactly one
+/// per failed submit, drained by the serving layer to fail the ticket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultFate {
+    pub inv: InvocationId,
+    pub func: FuncId,
+    /// Attempts consumed (≥1).
+    pub attempts: u32,
+}
+
+/// Admission rejection reasons produced by the fault layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    /// Function quarantined by its circuit breaker.
+    Quarantined { retry_after_ms: u64 },
+    /// Shed: the backlog implies the deadline cannot be met.
+    Overloaded { retry_after_ms: u64 },
+}
+
+/// Live fault-injection state owned by one control plane.
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    pub cfg: FaultConfig,
+    /// Attempts already consumed per live invocation (absent = 0).
+    attempts: HashMap<InvocationId, u32>,
+    /// Fault planned for the invocation's *current* attempt.
+    pending: HashMap<InvocationId, FaultKind>,
+    breakers: HashMap<FuncId, Breaker>,
+    shedding: bool,
+    /// Exec faults injected so far (vs `max_faults`).
+    injected: u64,
+    next_failure: usize,
+    next_recovery: usize,
+    pub stats: FaultStats,
+    /// Exhausted-budget fates awaiting the serving layer.
+    pub fates: Vec<FaultFate>,
+}
+
+impl FaultState {
+    pub fn new(mut cfg: FaultConfig) -> Self {
+        cfg.device_failures.sort_by_key(|(t, _)| *t);
+        cfg.device_recoveries.sort_by_key(|(t, _)| *t);
+        Self {
+            cfg,
+            attempts: HashMap::new(),
+            pending: HashMap::new(),
+            breakers: HashMap::new(),
+            shedding: false,
+            injected: 0,
+            next_failure: 0,
+            next_recovery: 0,
+            stats: FaultStats::default(),
+            fates: Vec::new(),
+        }
+    }
+
+    /// Attempt index the invocation's next dispatch runs as.
+    pub fn attempt_of(&self, inv: InvocationId) -> u32 {
+        self.attempts.get(&inv).copied().unwrap_or(0)
+    }
+
+    pub fn retry_budget(&self) -> u32 {
+        self.cfg.retry_budget.max(1)
+    }
+
+    /// Roll the oracle for a dispatching attempt; remembers and
+    /// returns the planned fault, honoring the `max_faults` cap.
+    pub fn plan_attempt(
+        &mut self,
+        inv: InvocationId,
+        func: FuncId,
+        attempt: u32,
+    ) -> Option<FaultKind> {
+        if self.cfg.max_faults > 0 && self.injected >= self.cfg.max_faults {
+            return None;
+        }
+        let kind = if roll(self.cfg.seed, 1, inv, attempt) < self.cfg.transient_rate_of(func) {
+            FaultKind::Transient
+        } else if roll(self.cfg.seed, 2, inv, attempt) < self.cfg.straggler_rate {
+            FaultKind::Straggler
+        } else {
+            return None;
+        };
+        self.injected += 1;
+        self.pending.insert(inv, kind);
+        Some(kind)
+    }
+
+    /// The fault planned for the invocation's current attempt, if any.
+    pub fn pending_kind(&self, inv: InvocationId) -> Option<FaultKind> {
+        self.pending.get(&inv).copied()
+    }
+
+    pub fn clear_pending(&mut self, inv: InvocationId) -> Option<FaultKind> {
+        self.pending.remove(&inv)
+    }
+
+    /// Successful completion: drop the retry bookkeeping.
+    pub fn on_success(&mut self, inv: InvocationId) {
+        self.attempts.remove(&inv);
+        self.pending.remove(&inv);
+    }
+
+    /// A failed attempt consumed `attempts_done` total attempts.
+    /// Returns true when the invocation should re-queue (budget
+    /// remaining); false records the terminal fate.
+    pub fn on_attempt_failed(
+        &mut self,
+        inv: InvocationId,
+        func: FuncId,
+        attempts_done: u32,
+    ) -> bool {
+        self.pending.remove(&inv);
+        if attempts_done < self.retry_budget() {
+            self.attempts.insert(inv, attempts_done);
+            self.stats.retries += 1;
+            true
+        } else {
+            self.attempts.remove(&inv);
+            self.stats.retry_exhausted += 1;
+            self.fates.push(FaultFate {
+                inv,
+                func,
+                attempts: attempts_done,
+            });
+            false
+        }
+    }
+
+    /// Device failures scheduled at or before `now` (each returned
+    /// once).
+    pub fn due_device_failures(&mut self, now: Nanos) -> Vec<GpuId> {
+        let mut out = Vec::new();
+        while self.next_failure < self.cfg.device_failures.len()
+            && self.cfg.device_failures[self.next_failure].0 <= now
+        {
+            out.push(self.cfg.device_failures[self.next_failure].1);
+            self.next_failure += 1;
+        }
+        out
+    }
+
+    /// Device recoveries scheduled at or before `now`.
+    pub fn due_device_recoveries(&mut self, now: Nanos) -> Vec<GpuId> {
+        let mut out = Vec::new();
+        while self.next_recovery < self.cfg.device_recoveries.len()
+            && self.cfg.device_recoveries[self.next_recovery].0 <= now
+        {
+            out.push(self.cfg.device_recoveries[self.next_recovery].1);
+            self.next_recovery += 1;
+        }
+        out
+    }
+
+    /// Watchdog threshold for one attempt: hung when
+    /// `now ≥ exec_start + straggler_k × max(estimate, modeled exec)`.
+    pub fn straggler_deadline(&self, exec_start: Nanos, est_exec: DurNanos) -> Nanos {
+        let k = self.cfg.straggler_k.max(1.0);
+        exec_start + (est_exec as f64 * k) as DurNanos
+    }
+
+    /// Breaker admission for `func`. Emits no telemetry itself; the
+    /// caller turns the returned transition into a `breaker_state`
+    /// event.
+    pub fn breaker_admit(
+        &mut self,
+        func: FuncId,
+        now: Nanos,
+    ) -> (BreakerAdmit, Option<BreakerState>) {
+        let Some(cfg) = self.cfg.breaker.clone() else {
+            return (BreakerAdmit::Allowed, None);
+        };
+        let b = self.breakers.entry(func).or_default();
+        let (d, tr) = b.admit(&cfg, now);
+        match d {
+            BreakerAdmit::Probe => self.stats.breaker_probes += 1,
+            BreakerAdmit::Rejected { .. } => self.stats.quarantined += 1,
+            BreakerAdmit::Allowed => {}
+        }
+        (d, tr)
+    }
+
+    /// Record an attempt outcome into the function's breaker.
+    pub fn breaker_record(
+        &mut self,
+        func: FuncId,
+        failed: bool,
+        now: Nanos,
+    ) -> Option<BreakerState> {
+        let cfg = self.cfg.breaker.clone()?;
+        let b = self.breakers.entry(func).or_default();
+        let tr = b.record(&cfg, failed, now);
+        if tr == Some(BreakerState::Open) {
+            self.stats.breaker_trips += 1;
+        }
+        tr
+    }
+
+    pub fn breaker_state(&self, func: FuncId) -> BreakerState {
+        self.breakers
+            .get(&func)
+            .map(|b| b.state)
+            .unwrap_or(BreakerState::Closed)
+    }
+
+    /// Overload shedder: given the estimator-implied queue wait,
+    /// decide (with hysteresis) whether to shed this admission.
+    /// Returns the rejection when shedding.
+    pub fn shed_eval(&mut self, predicted_wait_s: f64) -> Option<AdmitError> {
+        let cfg = self.cfg.shed.as_ref()?;
+        if self.shedding {
+            if predicted_wait_s <= cfg.exit * cfg.deadline_s {
+                self.shedding = false;
+            }
+        } else if predicted_wait_s > cfg.enter * cfg.deadline_s {
+            self.shedding = true;
+        }
+        if self.shedding {
+            self.stats.shed += 1;
+            Some(AdmitError::Overloaded {
+                retry_after_ms: cfg.retry_after_ms,
+            })
+        } else {
+            None
+        }
+    }
+
+    /// Currently in the shedding regime?
+    pub fn is_shedding(&self) -> bool {
+        self.shedding
+    }
+
+    /// Take the accumulated terminal fates (serving layer fails the
+    /// tickets; sim harnesses count them for conservation).
+    pub fn drain_fates(&mut self) -> Vec<FaultFate> {
+        std::mem::take(&mut self.fates)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::MS;
+
+    #[test]
+    fn roll_is_deterministic_and_uniformish() {
+        let a = roll(7, 1, InvocationId(42), 0);
+        let b = roll(7, 1, InvocationId(42), 0);
+        assert_eq!(a, b);
+        assert!(roll(7, 1, InvocationId(42), 1) != a, "attempt changes the roll");
+        assert!(roll(8, 1, InvocationId(42), 0) != a, "seed changes the roll");
+        // Coarse uniformity: mean of many rolls near 0.5.
+        let n = 10_000;
+        let sum: f64 = (0..n).map(|i| roll(3, 9, InvocationId(i), 0)).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+        assert!((0..n).all(|i| {
+            let r = roll(3, 9, InvocationId(i), 0);
+            (0.0..1.0).contains(&r)
+        }));
+    }
+
+    #[test]
+    fn neutral_config_detects_itself() {
+        assert!(FaultConfig::default().is_neutral());
+        let storm = FaultConfig {
+            transient_rate: 0.1,
+            ..Default::default()
+        };
+        assert!(!storm.is_neutral());
+        let poison = FaultConfig {
+            poison: vec![(FuncId(3), 0.9)],
+            ..Default::default()
+        };
+        assert!(!poison.is_neutral());
+        let zero_poison = FaultConfig {
+            poison: vec![(FuncId(3), 0.0)],
+            ..Default::default()
+        };
+        assert!(zero_poison.is_neutral());
+        assert!(!FaultConfig {
+            breaker: Some(BreakerConfig::default()),
+            ..Default::default()
+        }
+        .is_neutral());
+    }
+
+    #[test]
+    fn plan_respects_rates_poison_and_cap() {
+        let mut s = FaultState::new(FaultConfig {
+            seed: 11,
+            transient_rate: 0.0,
+            poison: vec![(FuncId(1), 1.0)],
+            max_faults: 2,
+            ..Default::default()
+        });
+        // Healthy func never faults.
+        for i in 0..50 {
+            assert_eq!(s.plan_attempt(InvocationId(i), FuncId(0), 0), None);
+        }
+        // Poison func faults every attempt — until the cap.
+        assert_eq!(
+            s.plan_attempt(InvocationId(100), FuncId(1), 0),
+            Some(FaultKind::Transient)
+        );
+        assert_eq!(
+            s.plan_attempt(InvocationId(101), FuncId(1), 0),
+            Some(FaultKind::Transient)
+        );
+        assert_eq!(s.plan_attempt(InvocationId(102), FuncId(1), 0), None, "cap");
+        assert_eq!(s.pending_kind(InvocationId(101)), Some(FaultKind::Transient));
+        assert_eq!(s.pending_kind(InvocationId(102)), None);
+    }
+
+    #[test]
+    fn retry_budget_requeues_then_exhausts() {
+        let mut s = FaultState::new(FaultConfig {
+            retry_budget: 2,
+            ..Default::default()
+        });
+        let inv = InvocationId(9);
+        assert_eq!(s.attempt_of(inv), 0);
+        assert!(s.on_attempt_failed(inv, FuncId(0), 1), "attempt 1 of 2 retries");
+        assert_eq!(s.attempt_of(inv), 1);
+        assert_eq!(s.stats.retries, 1);
+        assert!(!s.on_attempt_failed(inv, FuncId(0), 2), "budget exhausted");
+        assert_eq!(s.stats.retry_exhausted, 1);
+        let fates = s.drain_fates();
+        assert_eq!(
+            fates,
+            vec![FaultFate {
+                inv,
+                func: FuncId(0),
+                attempts: 2
+            }]
+        );
+        assert!(s.drain_fates().is_empty(), "fates drain once");
+        assert_eq!(s.attempt_of(inv), 0, "bookkeeping cleared");
+    }
+
+    #[test]
+    fn device_schedules_fire_once_in_order() {
+        let mut s = FaultState::new(FaultConfig {
+            device_failures: vec![(5 * MS, GpuId(1)), (2 * MS, GpuId(0))],
+            device_recoveries: vec![(9 * MS, GpuId(0))],
+            ..Default::default()
+        });
+        assert!(s.due_device_failures(MS).is_empty());
+        assert_eq!(s.due_device_failures(6 * MS), vec![GpuId(0), GpuId(1)]);
+        assert!(s.due_device_failures(100 * MS).is_empty(), "each fires once");
+        assert_eq!(s.due_device_recoveries(9 * MS), vec![GpuId(0)]);
+        assert!(s.due_device_recoveries(10 * MS).is_empty());
+    }
+
+    #[test]
+    fn breaker_trips_cools_probes_and_closes() {
+        let cfg = BreakerConfig {
+            window: 8,
+            trip_threshold: 0.5,
+            min_samples: 4,
+            cooldown: SEC,
+            probes: 2,
+        };
+        let mut b = Breaker::default();
+        // Not enough samples yet.
+        assert_eq!(b.record(&cfg, true, 0), None);
+        assert_eq!(b.record(&cfg, true, 0), None);
+        assert_eq!(b.record(&cfg, false, 0), None);
+        // 4th sample: 3/4 failures ≥ 0.5 → trips.
+        assert_eq!(b.record(&cfg, true, 10), Some(BreakerState::Open));
+        assert_eq!(b.state, BreakerState::Open);
+        // Open rejects with a retry hint until the cooldown elapses.
+        let (d, tr) = b.admit(&cfg, 10 + SEC / 2);
+        assert!(matches!(d, BreakerAdmit::Rejected { retry_after_ms } if retry_after_ms >= 1));
+        assert_eq!(tr, None);
+        // Cooldown elapsed: half-open, bounded probes.
+        let (d, tr) = b.admit(&cfg, 10 + SEC);
+        assert_eq!(d, BreakerAdmit::Probe);
+        assert_eq!(tr, Some(BreakerState::HalfOpen));
+        let (d, _) = b.admit(&cfg, 10 + SEC);
+        assert_eq!(d, BreakerAdmit::Probe);
+        let (d, _) = b.admit(&cfg, 10 + SEC);
+        assert!(matches!(d, BreakerAdmit::Rejected { .. }), "probe slots full");
+        // One probe success is not enough; the second closes it fresh.
+        assert_eq!(b.record(&cfg, false, 10 + SEC), None);
+        assert_eq!(b.record(&cfg, false, 10 + SEC), Some(BreakerState::Closed));
+        assert_eq!(b.state, BreakerState::Closed);
+        // A probe failure in half-open re-opens immediately.
+        for _ in 0..4 {
+            b.record(&cfg, true, 20);
+        }
+        assert_eq!(b.state, BreakerState::Open);
+        let (d, _) = b.admit(&cfg, 20 + SEC);
+        assert_eq!(d, BreakerAdmit::Probe);
+        assert_eq!(b.record(&cfg, true, 20 + SEC), Some(BreakerState::Open));
+    }
+
+    #[test]
+    fn shed_hysteresis_enters_and_exits() {
+        let mut s = FaultState::new(FaultConfig {
+            shed: Some(ShedConfig {
+                deadline_s: 10.0,
+                enter: 1.0,
+                exit: 0.5,
+                retry_after_ms: 99,
+            }),
+            ..Default::default()
+        });
+        assert_eq!(s.shed_eval(9.0), None, "under the deadline: admit");
+        assert!(matches!(
+            s.shed_eval(11.0),
+            Some(AdmitError::Overloaded { retry_after_ms: 99 })
+        ));
+        // Hysteresis: 7 s is under enter (10) but above exit (5) —
+        // still shedding.
+        assert!(s.shed_eval(7.0).is_some());
+        assert!(s.is_shedding());
+        // Below the exit bound: admission resumes.
+        assert_eq!(s.shed_eval(4.0), None);
+        assert!(!s.is_shedding());
+        assert_eq!(s.stats.shed, 2);
+    }
+
+    #[test]
+    fn breaker_facade_counts_trips_and_probes() {
+        let mut s = FaultState::new(FaultConfig {
+            breaker: Some(BreakerConfig {
+                window: 4,
+                trip_threshold: 0.5,
+                min_samples: 2,
+                cooldown: SEC,
+                probes: 1,
+            }),
+            ..Default::default()
+        });
+        let f = FuncId(7);
+        assert_eq!(s.breaker_record(f, true, 0), None);
+        assert_eq!(s.breaker_record(f, true, 0), Some(BreakerState::Open));
+        assert_eq!(s.stats.breaker_trips, 1);
+        assert_eq!(s.breaker_state(f), BreakerState::Open);
+        let (d, _) = s.breaker_admit(f, 0);
+        assert!(matches!(d, BreakerAdmit::Rejected { .. }));
+        assert_eq!(s.stats.quarantined, 1);
+        let (d, tr) = s.breaker_admit(f, SEC);
+        assert_eq!(d, BreakerAdmit::Probe);
+        assert_eq!(tr, Some(BreakerState::HalfOpen));
+        assert_eq!(s.stats.breaker_probes, 1);
+        // Unknown functions are closed (no entry materialized).
+        assert_eq!(s.breaker_state(FuncId(99)), BreakerState::Closed);
+        let (d, _) = s.breaker_admit(FuncId(99), 0);
+        assert_eq!(d, BreakerAdmit::Allowed);
+    }
+}

@@ -21,6 +21,20 @@
 //! mixed fleet is cost-aware (see [`pool`]): candidates are scored by
 //! estimated completion — warm locality against raw speed and current
 //! interference — instead of blindly trusting stickiness.
+//!
+//! # Failure model
+//!
+//! A device can *fail* mid-flight ([`Device::fail`], driven by the
+//! control plane's [`crate::fault`] layer): its running set is
+//! evacuated for re-queue, its resident-memory ledger zeroes (device
+//! memory dies with the device), and the pool stops routing placements
+//! to it — [`DevicePool::pick`] skips failed devices, sticky
+//! placements pointing at one are dropped, and
+//! [`DevicePool::has_free_slot`] counts only live devices. An optional
+//! scheduled recovery ([`Device::heal`]) re-admits the device empty
+//! and cold; nothing from before the failure survives. The pool keeps
+//! per-device failure state rather than removing entries so `GpuId`s
+//! stay stable for telemetry and placement history.
 
 pub mod pool;
 
@@ -171,6 +185,9 @@ pub struct Device {
     pub vram_mb: u64,
     /// Per-device D override from the spec (None ⇒ plane-level D).
     d_override: Option<usize>,
+    /// Dropped out of the pool (fault injection); no placements until
+    /// healed.
+    failed: bool,
     running: Vec<Running>,
     /// Device memory currently resident (shim ledger roll-up), MB.
     resident_mb: u64,
@@ -203,6 +220,7 @@ impl Device {
             compute_frac,
             vram_mb,
             d_override: spec.d,
+            failed: false,
             running: Vec::new(),
             resident_mb: 0,
             busy_integral_ns: 0.0,
@@ -321,6 +339,31 @@ impl Device {
             }
             None => false,
         }
+    }
+
+    pub fn is_failed(&self) -> bool {
+        self.failed
+    }
+
+    /// The device drops out mid-flight: every running invocation is
+    /// evacuated (returned so the plane can settle each attempt), the
+    /// resident-memory ledger zeroes (device memory dies with the
+    /// device), and no further placements land here until [`Self::heal`].
+    pub fn fail(&mut self, now: Nanos) -> Vec<Running> {
+        self.integrate(now);
+        self.failed = true;
+        self.resident_mb = 0;
+        std::mem::take(&mut self.running)
+    }
+
+    /// The device rejoins the pool — empty and cold, with a fresh
+    /// Little's-law window. Nothing from before the failure survives.
+    pub fn heal(&mut self, now: Nanos) {
+        self.integrate(now);
+        self.failed = false;
+        self.window_start = now;
+        self.window_completions = 0;
+        self.window_service_ns = 0.0;
     }
 
     /// Drain the Little's-law completion window: the mean concurrency
@@ -521,6 +564,26 @@ mod tests {
         assert_eq!(d.in_flight_of(FuncId(3)), 2);
         assert_eq!(d.in_flight_of(FuncId(5)), 1);
         assert_eq!(d.in_flight(), 3);
+    }
+
+    #[test]
+    fn fail_evacuates_and_heal_rejoins_cold() {
+        let mut d = dev();
+        let c = by_name("fft").unwrap();
+        d.begin(InvocationId(1), FuncId(0), c, 0);
+        d.begin(InvocationId(2), FuncId(1), c, 0);
+        d.add_resident(4_000);
+        let evicted = d.fail(1000);
+        assert_eq!(evicted.len(), 2);
+        assert!(d.is_failed());
+        assert_eq!(d.in_flight(), 0);
+        assert_eq!(d.resident_mb(), 0, "device memory dies with the device");
+        assert!(!d.complete(InvocationId(1), 2000), "nothing left to complete");
+        d.heal(5000);
+        assert!(!d.is_failed());
+        assert_eq!(d.littles_demand(6000), None, "window restarts empty");
+        d.begin(InvocationId(3), FuncId(0), c, 6000);
+        assert_eq!(d.in_flight(), 1);
     }
 
     #[test]

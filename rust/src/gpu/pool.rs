@@ -98,23 +98,67 @@ impl DevicePool {
         self.per_func_in_flight.get(&func).copied().unwrap_or(0)
     }
 
-    /// Any device with a free slot under the plane-level `plane_d`
+    /// Any live device with a free slot under the plane-level `plane_d`
     /// (each device applies its own [`Device::limit`])?
     pub fn has_free_slot(&self, plane_d: usize) -> bool {
         self.devices
             .iter()
-            .any(|d| d.in_flight() < d.limit(plane_d))
+            .any(|d| !d.is_failed() && d.in_flight() < d.limit(plane_d))
     }
 
-    /// Most permissive per-device concurrency limit on this pool under
-    /// `plane_d` — what the policy layer should treat as "the D level"
-    /// on a mixed fleet (uniform fleets: exactly the shared limit).
+    /// Most permissive per-device concurrency limit among live devices
+    /// under `plane_d` — what the policy layer should treat as "the D
+    /// level" on a mixed fleet (uniform fleets: exactly the shared
+    /// limit).
     pub fn max_limit(&self, plane_d: usize) -> usize {
         self.devices
             .iter()
+            .filter(|d| !d.is_failed())
             .map(|d| d.limit(plane_d))
             .max()
             .unwrap_or(plane_d)
+    }
+
+    /// Total concurrency slots across live devices — the capacity term
+    /// of the overload-shedding wait predictor.
+    pub fn live_slots(&self, plane_d: usize) -> usize {
+        self.devices
+            .iter()
+            .filter(|d| !d.is_failed())
+            .map(|d| d.limit(plane_d))
+            .sum()
+    }
+
+    /// Live (non-failed) device count.
+    pub fn live_devices(&self) -> usize {
+        self.devices.iter().filter(|d| !d.is_failed()).count()
+    }
+
+    /// A device drops out of the pool mid-flight: evacuate its running
+    /// set (returned so the plane settles each victim attempt exactly
+    /// once), clear their placements and aggregate counters, and drop
+    /// every sticky placement pointing at the dead device so no future
+    /// pick lands there on locality grounds.
+    pub fn fail_device(&mut self, gpu: GpuId, now: Nanos) -> Vec<Running> {
+        let victims = self.devices[gpu.0 as usize].fail(now);
+        for r in &victims {
+            if self.placements.remove(&r.inv).is_some() {
+                self.total_in_flight -= 1;
+                if let Some(n) = self.per_func_in_flight.get_mut(&r.func) {
+                    *n -= 1;
+                    if *n == 0 {
+                        self.per_func_in_flight.remove(&r.func);
+                    }
+                }
+            }
+        }
+        self.sticky.retain(|_, g| *g != gpu);
+        victims
+    }
+
+    /// A failed device rejoins the pool, empty and cold.
+    pub fn heal_device(&mut self, gpu: GpuId, now: Nanos) {
+        self.devices[gpu.0 as usize].heal(now);
     }
 
     /// Pick a device for one invocation of `func` (of class `class`),
@@ -142,7 +186,7 @@ impl DevicePool {
         plane_d: usize,
         shim: bool,
     ) -> Option<GpuId> {
-        let has_slot = |d: &Device| d.in_flight() < d.limit(plane_d);
+        let has_slot = |d: &Device| !d.is_failed() && d.in_flight() < d.limit(plane_d);
         let sticky = self.sticky.get(&func).copied();
         if self.uniform {
             if let Some(g) = sticky {
@@ -404,6 +448,41 @@ mod tests {
         pool.begin(GpuId(1), InvocationId(4), FuncId(3), c, 0);
         assert!(!pool.has_free_slot(3));
         assert_eq!(pool.pick(FuncId(0), c, 3, true), None);
+    }
+
+    #[test]
+    fn fail_device_evacuates_and_untangles_pool_state() {
+        let mut pool = DevicePool::uniform(2, V100, MultiplexMode::Plain);
+        let c = by_name("fft").unwrap();
+        let f = FuncId(0);
+        pool.begin(GpuId(0), InvocationId(1), f, c, 0);
+        pool.begin(GpuId(0), InvocationId(2), FuncId(1), c, 0);
+        pool.begin(GpuId(1), InvocationId(3), FuncId(2), c, 0);
+        assert_eq!(pool.sticky_gpu(f), Some(GpuId(0)));
+        let victims = pool.fail_device(GpuId(0), 100);
+        assert_eq!(victims.len(), 2);
+        // Counters and placements shrink to the survivor only.
+        assert_eq!(pool.in_flight(), 1);
+        assert_eq!(pool.in_flight_of(f), 0);
+        assert_eq!(pool.placement(InvocationId(1)), None);
+        assert_eq!(pool.placement(InvocationId(3)), Some(GpuId(1)));
+        // Stickiness to the dead device is gone; picks avoid it.
+        assert_eq!(pool.sticky_gpu(f), None);
+        assert_eq!(pool.pick(f, c, 2, true), Some(GpuId(1)));
+        assert_eq!(pool.live_devices(), 1);
+        assert_eq!(pool.live_slots(2), 2);
+        // With the survivor full, the pool is out of slots even though
+        // the dead device "has room".
+        pool.begin(GpuId(1), InvocationId(4), FuncId(3), c, 100);
+        assert!(!pool.has_free_slot(2));
+        assert_eq!(pool.pick(f, c, 2, true), None);
+        // A completion for an evacuated invocation is a no-op.
+        assert_eq!(pool.complete(InvocationId(1), 200), None);
+        // Healing re-admits the device, cold.
+        pool.heal_device(GpuId(0), 300);
+        assert_eq!(pool.live_devices(), 2);
+        assert!(pool.has_free_slot(2));
+        assert_eq!(pool.pick(f, c, 2, true), Some(GpuId(0)));
     }
 
     #[test]

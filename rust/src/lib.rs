@@ -24,7 +24,9 @@
 //! [`server::RtServer`] (one plane) and [`server::RtCluster`] (N shards
 //! behind a live router). Observability lives in [`telemetry`]: a
 //! lock-free metrics registry and lifecycle trace ring shared by sim
-//! and wire runs, exported over the `metrics`/`trace` verbs.
+//! and wire runs, exported over the `metrics`/`trace` verbs. Device-
+//! and invocation-level fault tolerance (seeded injection, exactly-once
+//! retry, circuit breakers, overload shedding) lives in [`fault`].
 
 pub mod api;
 pub mod cli;
@@ -33,6 +35,7 @@ pub mod cluster;
 pub mod container;
 pub mod estimator;
 pub mod experiments;
+pub mod fault;
 pub mod gpu;
 pub mod memory;
 pub mod metrics;

@@ -8,11 +8,38 @@
 //! schedules the returned [`Dispatch`] records; the real-time driver
 //! ([`crate::server`], examples) passes wall time and executes the
 //! dispatched function on the PJRT runtime instead.
+//!
+//! # Failure model
+//!
+//! With a [`FaultConfig`] installed ([`PlaneConfig::faults`]) the plane
+//! absorbs three fault kinds (see [`crate::fault`]): device loss
+//! ([`ControlPlane::fail_device`] evacuates and re-queues everything in
+//! flight on the GPU, forced cold), transient exec faults (detected at
+//! what would have been the completion; the attempt's service is
+//! discarded), and stragglers (the completion never arrives; the
+//! monitor-tick watchdog evacuates after `straggler_k`× the expected
+//! exec time). Every attempt is stamped into its [`Dispatch::attempt`]
+//! and completions are matched against the live attempt
+//! ([`ControlPlane::on_complete_attempt`]), so a late completion from a
+//! superseded attempt is dropped — each invocation resolves exactly
+//! once: a success, or a terminal [`FaultFate`] drained by the serving
+//! layer once the retry budget is spent. Failed attempts re-queue at
+//! the *head* of their flow and the failed attempt's virtual-time
+//! charge stands (no double F-advance; the retry pays its own τ).
+//! Admission-side protection — poison-function circuit breakers and
+//! deadline-aware overload shedding — gates [`ControlPlane::try_admit`].
+//! Without a plan (`faults: None`) every fault branch is untaken and
+//! the plane is bit-identical to one compiled before this layer
+//! existed (property-tested against a neutral plan).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
 use crate::container::ContainerPool;
+use crate::fault::{
+    AdmitError, BreakerAdmit, BreakerState, FaultConfig, FaultFate, FaultKind, FaultState,
+    FaultStats,
+};
 use crate::gpu::{uniform_fleet, DevicePool, DeviceSpec, GpuProfile, MultiplexMode};
 use crate::memory::{MemPolicy, MemoryManager};
 use crate::metrics::{InvRecord, Recorder};
@@ -57,6 +84,10 @@ pub struct PlaneConfig {
     /// "FCFS Naïve" nvidia-docker baseline of §6.2 (no container pool,
     /// every start cold, ~300× latency overhead).
     pub keep_warm: bool,
+    /// Fault-injection / fault-tolerance plan. `None` (the default)
+    /// keeps every fault path untouched: the plane with no plan is
+    /// bit-identical to one with a neutral plan (property-tested).
+    pub faults: Option<FaultConfig>,
 }
 
 impl Default for PlaneConfig {
@@ -73,6 +104,7 @@ impl Default for PlaneConfig {
             shim: true,
             monitor_period: 200 * MS,
             keep_warm: true,
+            faults: None,
         }
     }
 }
@@ -119,6 +151,10 @@ pub struct Dispatch {
     pub blocking: DurNanos,
     /// Modeled on-device service (incl. interference + UVM faults).
     pub exec: DurNanos,
+    /// Retry attempt this dispatch runs as (0 = first try). Completions
+    /// are attempt-stamped so a late completion from a superseded
+    /// attempt is dropped, never double-counted (exactly-once).
+    pub attempt: u32,
 }
 
 struct InFlight {
@@ -164,6 +200,10 @@ pub struct ControlPlane {
     /// one event per change rather than one per probe.
     last_global_vt: f64,
     last_d_tokens: i64,
+    /// Fault-injection + fault-tolerance state (None = no plan; every
+    /// fault-path branch sits behind this option so the neutral run is
+    /// bit-identical to an unconfigured one).
+    faults: Option<FaultState>,
 }
 
 impl ControlPlane {
@@ -191,6 +231,7 @@ impl ControlPlane {
             tel: None,
             last_global_vt: 0.0,
             last_d_tokens: 0,
+            faults: cfg.faults.clone().map(FaultState::new),
             policy,
             gpus,
             workload,
@@ -301,9 +342,50 @@ impl ControlPlane {
         inv: InvocationId,
         now: Nanos,
     ) -> (Option<InvRecord>, Vec<Dispatch>) {
-        let Some(fli) = self.in_flight.remove(&inv) else {
+        let Some(att) = self.in_flight.get(&inv).map(|f| f.dispatch.attempt) else {
             return (None, Vec::new());
         };
+        self.on_complete_attempt(inv, att, now)
+    }
+
+    /// Attempt-stamped completion: the exactly-once form. A completion
+    /// whose attempt does not match the live in-flight attempt is a
+    /// leftover from a superseded (faulted, re-queued) attempt and is
+    /// dropped. With a fault plan, a pending transient fault turns the
+    /// completion into a failed-attempt settlement, and a pending
+    /// straggler swallows it (the execution "hangs" until the watchdog
+    /// evacuates it).
+    pub fn on_complete_attempt(
+        &mut self,
+        inv: InvocationId,
+        attempt: u32,
+        now: Nanos,
+    ) -> (Option<InvRecord>, Vec<Dispatch>) {
+        match self.in_flight.get(&inv) {
+            Some(f) if f.dispatch.attempt == attempt => {}
+            _ => return (None, Vec::new()),
+        }
+        match self.faults.as_ref().and_then(|fs| fs.pending_kind(inv)) {
+            Some(FaultKind::Straggler) => return (None, Vec::new()),
+            Some(kind) => {
+                self.settle_failed_attempt(inv, kind, now, false);
+                self.apply_state_changes(now);
+                return (None, self.try_dispatch(now));
+            }
+            None => {}
+        }
+        let fli = self.in_flight.remove(&inv).unwrap();
+        if let Some(fs) = &mut self.faults {
+            fs.on_success(inv);
+            let tr = fs.breaker_record(fli.func, false, now);
+            if let (Some(state), Some(tel)) = (tr, &self.tel) {
+                tel.emit(
+                    tel.event(now, EventKind::BreakerState)
+                        .func(fli.func.0)
+                        .a(state.code()),
+                );
+            }
+        }
         if fli.device_bound {
             self.gpus.complete(inv, now);
             if self.cfg.keep_warm {
@@ -381,6 +463,228 @@ impl ControlPlane {
         (Some(rec), self.try_dispatch(now))
     }
 
+    /// Settle one failed attempt: release its device / container /
+    /// ledger accounting (skipped when the device-failure path already
+    /// cleaned up), count + trace the fault, feed the function's
+    /// breaker, and either re-queue at the head of its flow (retry
+    /// budget remaining — the policy releases the slot without learning
+    /// an exec sample and without re-advancing VT) or record the
+    /// terminal [`FaultFate`]. Returns whether the invocation
+    /// re-queued; callers run the dispatch loop afterwards.
+    fn settle_failed_attempt(
+        &mut self,
+        inv: InvocationId,
+        kind: FaultKind,
+        now: Nanos,
+        device_cleaned: bool,
+    ) -> bool {
+        let Some(fli) = self.in_flight.remove(&inv) else {
+            return false;
+        };
+        if fli.device_bound {
+            if !device_cleaned {
+                self.gpus.complete(inv, now);
+                // The attempt crashed or hung inside its sandbox:
+                // destroy it (forcing a cold restart) instead of
+                // returning it to the warm pool.
+                if let Some((g, mb)) = self.ctrs.destroy(fli.ctr) {
+                    self.gpus.device_mut(g).sub_resident(mb);
+                }
+            }
+        } else {
+            // Rider: its batch anchor owns the slot and container.
+            self.batch_riders -= 1;
+            self.riders_per_func[fli.func.0 as usize] -= 1;
+        }
+        self.in_flight_per_func[fli.func.0 as usize] -= 1;
+        let attempts_done = fli.dispatch.attempt + 1;
+        let fs = self.faults.as_mut().expect("fault settle without a plan");
+        match kind {
+            FaultKind::Device => fs.stats.faults_device += 1,
+            FaultKind::Transient => fs.stats.faults_transient += 1,
+            FaultKind::Straggler => fs.stats.faults_straggler += 1,
+        }
+        let requeue = fs.on_attempt_failed(inv, fli.func, attempts_done);
+        let breaker_tr = fs.breaker_record(fli.func, true, now);
+        if let Some(tel) = &self.tel {
+            let m = tel.metrics();
+            match kind {
+                FaultKind::Device => m.faults_device.inc(),
+                FaultKind::Transient => m.faults_transient.inc(),
+                FaultKind::Straggler => m.faults_straggler.inc(),
+            }
+            tel.emit(
+                tel.event(now, EventKind::Fault)
+                    .inv(inv.0)
+                    .func(fli.func.0)
+                    .a(kind.code())
+                    .b(fli.dispatch.attempt as i64)
+                    .c(fli.dispatch.gpu.0 as i64),
+            );
+            if requeue {
+                m.retries.inc();
+                tel.emit(
+                    tel.event(now, EventKind::Requeue)
+                        .inv(inv.0)
+                        .func(fli.func.0)
+                        .a(attempts_done as i64),
+                );
+            } else {
+                m.retry_exhausted.inc();
+            }
+            if let Some(state) = breaker_tr {
+                if state == BreakerState::Open {
+                    m.breaker_trips.inc();
+                }
+                tel.emit(
+                    tel.event(now, EventKind::BreakerState)
+                        .func(fli.func.0)
+                        .a(state.code()),
+                );
+            }
+        }
+        self.policy.on_fault(
+            Invocation {
+                id: inv,
+                func: fli.func,
+                arrived: fli.arrived,
+            },
+            now,
+            requeue,
+        );
+        requeue
+    }
+
+    /// Evacuate a dropped GPU: the pool marks it failed (untangling
+    /// placements and sticky routes), its containers are destroyed
+    /// (their device state died with it), and every in-flight attempt
+    /// on it — anchors *and* batch riders — settles as a
+    /// [`FaultKind::Device`] fault.
+    fn apply_device_failure(&mut self, gpu: GpuId, now: Nanos) {
+        let _evacuated = self.gpus.fail_device(gpu, now);
+        self.ctrs.destroy_on_gpu(gpu);
+        let stranded: Vec<InvocationId> = self
+            .in_flight
+            .iter()
+            .filter(|(_, f)| f.dispatch.gpu == gpu)
+            .map(|(id, _)| *id)
+            .collect();
+        for inv in stranded {
+            self.settle_failed_attempt(inv, FaultKind::Device, now, true);
+        }
+    }
+
+    /// A GPU dropped out (scheduled injection or an external signal):
+    /// evacuate it and dispatch the re-queued work onto the surviving
+    /// fleet. Requires a fault plan (the retry bookkeeping lives
+    /// there).
+    pub fn fail_device(&mut self, gpu: GpuId, now: Nanos) -> Vec<Dispatch> {
+        self.apply_device_failure(gpu, now);
+        self.apply_state_changes(now);
+        self.try_dispatch(now)
+    }
+
+    /// A failed GPU rejoins the pool, empty and cold.
+    pub fn heal_device(&mut self, gpu: GpuId, now: Nanos) -> Vec<Dispatch> {
+        self.gpus.heal_device(gpu, now);
+        self.try_dispatch(now)
+    }
+
+    /// Fault maintenance, run each monitor tick: fire scheduled device
+    /// failures / recoveries and evacuate hung attempts whose watchdog
+    /// deadline (`straggler_k × max(estimated, modeled) exec`) passed.
+    fn fault_maintenance(&mut self, now: Nanos) {
+        let Some(fs) = &mut self.faults else { return };
+        let failures = fs.due_device_failures(now);
+        let recoveries = fs.due_device_recoveries(now);
+        let mut hung: Vec<InvocationId> = Vec::new();
+        for (id, f) in &self.in_flight {
+            if fs.pending_kind(*id) == Some(FaultKind::Straggler) {
+                let est = self
+                    .policy
+                    .estimated_exec_s(f.func)
+                    .map(crate::types::secs)
+                    .unwrap_or(0);
+                let base = f.dispatch.exec.max(est);
+                if now >= fs.straggler_deadline(f.dispatch.exec_start, base) {
+                    hung.push(*id);
+                }
+            }
+        }
+        for gpu in failures {
+            self.apply_device_failure(gpu, now);
+        }
+        for gpu in recoveries {
+            self.gpus.heal_device(gpu, now);
+        }
+        for inv in hung {
+            self.settle_failed_attempt(inv, FaultKind::Straggler, now, false);
+        }
+    }
+
+    /// Admission gate for the serving layer: the function's circuit
+    /// breaker first, then deadline-aware overload shedding (predicted
+    /// wait = backlog × estimated service / live device slots, with
+    /// enter/exit hysteresis). Always admits without a fault plan, and
+    /// touches nothing on that path.
+    pub fn try_admit(&mut self, func: FuncId, now: Nanos) -> Result<(), AdmitError> {
+        if self.faults.is_none() {
+            return Ok(());
+        }
+        let est_s = self.policy.estimated_exec_s(func).unwrap_or(1.0);
+        let backlog = (self.pending() + self.in_flight.len()) as f64;
+        let slots = self.gpus.live_slots(self.dctl.limit()).max(1) as f64;
+        let predicted_wait_s = backlog * est_s / slots;
+        let fs = self.faults.as_mut().unwrap();
+        let (admit, transition) = fs.breaker_admit(func, now);
+        if let (Some(state), Some(tel)) = (transition, &self.tel) {
+            tel.emit(
+                tel.event(now, EventKind::BreakerState)
+                    .func(func.0)
+                    .a(state.code()),
+            );
+        }
+        if let BreakerAdmit::Rejected { retry_after_ms } = admit {
+            return Err(AdmitError::Quarantined { retry_after_ms });
+        }
+        if let Some(err) = fs.shed_eval(predicted_wait_s) {
+            let AdmitError::Overloaded { retry_after_ms } = err else {
+                unreachable!("shed_eval only sheds");
+            };
+            if let Some(tel) = &self.tel {
+                tel.metrics().shed.inc();
+                tel.emit(
+                    tel.event(now, EventKind::Shed)
+                        .func(func.0)
+                        .a((predicted_wait_s * 1e9) as i64)
+                        .b(retry_after_ms as i64),
+                );
+            }
+            return Err(err);
+        }
+        Ok(())
+    }
+
+    /// Terminal retry-exhausted fates since the last drain. The serving
+    /// layer fails the tickets (`exec-failed`); sim harnesses count
+    /// them for exactly-once conservation.
+    pub fn drain_fault_fates(&mut self) -> Vec<FaultFate> {
+        match &mut self.faults {
+            Some(fs) => fs.drain_fates(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Fault-layer counters (all zero when no plan is configured).
+    pub fn fault_stats(&self) -> FaultStats {
+        self.faults.as_ref().map(|f| f.stats).unwrap_or_default()
+    }
+
+    /// Live (non-failed) schedulable devices.
+    pub fn live_devices(&self) -> usize {
+        self.gpus.live_devices()
+    }
+
     /// 200 ms monitor tick (§4.4/§5 "Utilization monitoring"): sample
     /// utilization, adjust D, expire idle queues, dispatch.
     pub fn on_monitor_tick(&mut self, now: Nanos) -> Vec<Dispatch> {
@@ -403,6 +707,12 @@ impl ControlPlane {
             }
         }
         self.recorder.sample_util(now, util, self.dctl.limit());
+        // Fault layer (no-op without a plan): scheduled device
+        // failures/recoveries and the straggler watchdog.
+        if self.faults.is_some() {
+            self.fault_maintenance(now);
+            self.apply_state_changes(now);
+        }
         // Background memory maintenance: async swap-out of marked/LRU
         // regions keeps headroom for upcoming prefetches (§4.3).
         self.mem.maintain(&mut self.ctrs, &mut self.gpus, now);
@@ -712,6 +1022,16 @@ impl ControlPlane {
                 self.batch_riders += 1;
                 self.riders_per_func[inv.func.0 as usize] += 1;
             }
+            // Attempt stamping + fault planning (deterministic oracle;
+            // no-ops without a plan, so `attempt` stays 0).
+            let attempt = match &mut self.faults {
+                Some(fs) => {
+                    let a = fs.attempt_of(inv.id);
+                    fs.plan_attempt(inv.id, inv.func, a);
+                    a
+                }
+                None => 0,
+            };
             let dispatch = Dispatch {
                 inv: inv.id,
                 func: inv.func,
@@ -724,6 +1044,7 @@ impl ControlPlane {
                 boot,
                 blocking,
                 exec,
+                attempt,
             };
             self.in_flight.insert(
                 inv.id,
@@ -774,6 +1095,7 @@ impl ControlPlane {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fault::{BreakerConfig, ShedConfig};
     use crate::types::SEC;
     use crate::workload::catalog::by_name;
 
@@ -1048,6 +1370,291 @@ mod tests {
         let kinds: Vec<EventKind> =
             tel.trace.drain(100_000).iter().map(|e| e.kind).collect();
         assert!(kinds.contains(&EventKind::DResize), "{kinds:?}");
+    }
+
+    #[test]
+    fn transient_fault_requeues_and_retries_cold() {
+        let cfg = PlaneConfig {
+            faults: Some(FaultConfig {
+                poison: vec![(FuncId(0), 1.0)],
+                max_faults: 1,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let mut p = plane(cfg);
+        let (id, ds) = p.on_arrival(FuncId(0), 0);
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds[0].attempt, 0);
+        // The faulted attempt's "completion" becomes a retry dispatch.
+        let (rec, retry) = p.on_complete_attempt(id, 0, ds[0].complete_at);
+        assert!(rec.is_none());
+        assert_eq!(retry.len(), 1);
+        assert_eq!(retry[0].inv, id);
+        assert_eq!(retry[0].attempt, 1);
+        assert_eq!(
+            retry[0].start_kind,
+            StartKind::Cold,
+            "crashed sandbox destroyed: retry is forced cold"
+        );
+        let st = p.fault_stats();
+        assert_eq!(st.faults_transient, 1);
+        assert_eq!(st.retries, 1);
+        // A late completion stamped with the superseded attempt drops.
+        assert!(p.on_complete_attempt(id, 0, retry[0].complete_at).0.is_none());
+        assert_eq!(p.in_flight(), 1, "stale completion must not free the slot");
+        // The retry (fault cap spent) completes normally, exactly once.
+        let (rec, _) = p.on_complete_attempt(id, 1, retry[0].complete_at);
+        assert!(rec.is_some());
+        assert!(p.drain_fault_fates().is_empty());
+        assert_eq!(p.in_flight(), 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_resolves_with_a_fate() {
+        let cfg = PlaneConfig {
+            faults: Some(FaultConfig {
+                poison: vec![(FuncId(0), 1.0)],
+                retry_budget: 2,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let mut p = plane(cfg);
+        let (id, ds) = p.on_arrival(FuncId(0), 0);
+        let (_, r1) = p.on_complete_attempt(id, 0, ds[0].complete_at);
+        assert_eq!(r1.len(), 1, "first failure retries");
+        let (rec, r2) = p.on_complete_attempt(id, 1, r1[0].complete_at);
+        assert!(rec.is_none());
+        assert!(r2.is_empty(), "budget spent: no further retry");
+        let fates = p.drain_fault_fates();
+        assert_eq!(fates.len(), 1);
+        assert_eq!(fates[0].inv, id);
+        assert_eq!(fates[0].attempts, 2);
+        let st = p.fault_stats();
+        assert_eq!((st.retries, st.retry_exhausted), (1, 1));
+        assert_eq!(p.in_flight(), 0);
+        assert_eq!(p.pending(), 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn device_failure_evacuates_and_requeues_on_survivors() {
+        let cfg = PlaneConfig {
+            devices: uniform_fleet(2, crate::gpu::V100, MultiplexMode::Plain),
+            d: 1,
+            faults: Some(FaultConfig::default()),
+            ..Default::default()
+        };
+        let mut p = plane(cfg);
+        let (a, da) = p.on_arrival(FuncId(0), 0);
+        let (b, db) = p.on_arrival(FuncId(1), 1);
+        assert_eq!((da.len(), db.len()), (1, 1));
+        assert_ne!(da[0].gpu, db[0].gpu);
+        let dead = da[0].gpu;
+        let retry = p.fail_device(dead, 10 * MS);
+        // `a` re-queued but the survivor's slot is occupied by `b`.
+        assert!(retry.is_empty());
+        assert_eq!(p.pending(), 1);
+        assert_eq!(p.in_flight(), 1);
+        assert_eq!(p.fault_stats().faults_device, 1);
+        assert_eq!(p.live_devices(), 1);
+        p.check_invariants().unwrap();
+        let (_, more) = p.on_complete(b, db[0].complete_at);
+        assert_eq!(more.len(), 1);
+        assert_eq!(more[0].inv, a);
+        assert_ne!(more[0].gpu, dead, "retry avoids the failed device");
+        assert_eq!(more[0].attempt, 1);
+        assert_eq!(
+            more[0].start_kind,
+            StartKind::Cold,
+            "containers died with the device"
+        );
+        // Heal: the device takes placements again.
+        p.heal_device(dead, 20 * SEC);
+        assert_eq!(p.live_devices(), 2);
+        let (_, ds) = p.on_arrival(FuncId(0), 20 * SEC);
+        assert_eq!(ds.len(), 1);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn straggler_watchdog_evacuates_hung_attempts() {
+        let cfg = PlaneConfig {
+            faults: Some(FaultConfig {
+                straggler_rate: 1.0,
+                straggler_k: 2.0,
+                max_faults: 1,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let mut p = plane(cfg);
+        let (id, ds) = p.on_arrival(FuncId(0), 0);
+        let d = ds[0];
+        // The modeled completion is swallowed: the execution hangs.
+        let (rec, more) = p.on_complete_attempt(id, 0, d.complete_at);
+        assert!(rec.is_none() && more.is_empty());
+        assert_eq!(p.in_flight(), 1, "hung attempt keeps its slot burned");
+        // Before the k× deadline the watchdog leaves it alone.
+        p.on_monitor_tick(d.exec_start + d.exec);
+        assert_eq!(p.in_flight(), 1);
+        // Past the deadline it evacuates and the retry dispatches.
+        let retry = p.on_monitor_tick(d.exec_start + 3 * d.exec);
+        assert_eq!(p.fault_stats().faults_straggler, 1);
+        assert_eq!(retry.len(), 1);
+        assert_eq!(retry[0].inv, id);
+        assert_eq!(retry[0].attempt, 1);
+        let (rec, _) = p.on_complete_attempt(id, 1, retry[0].complete_at);
+        assert!(rec.is_some());
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn breaker_quarantines_poison_then_probes_recover() {
+        let cfg = PlaneConfig {
+            d: 4,
+            faults: Some(FaultConfig {
+                poison: vec![(FuncId(0), 1.0)],
+                max_faults: 2,
+                retry_budget: 1,
+                breaker: Some(BreakerConfig {
+                    window: 8,
+                    trip_threshold: 0.5,
+                    min_samples: 2,
+                    cooldown: SEC,
+                    probes: 1,
+                }),
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let mut p = plane(cfg);
+        assert!(p.try_admit(FuncId(0), 0).is_ok(), "closed breaker admits");
+        let mut last = 0;
+        for t in 0..2u64 {
+            let (id, ds) = p.on_arrival(FuncId(0), t);
+            let d = *ds.iter().find(|d| d.inv == id).unwrap();
+            p.on_complete_attempt(id, 0, d.complete_at);
+            last = last.max(d.complete_at);
+        }
+        assert_eq!(p.fault_stats().breaker_trips, 1);
+        assert_eq!(p.drain_fault_fates().len(), 2, "budget 1: both terminal");
+        assert!(matches!(
+            p.try_admit(FuncId(0), last),
+            Err(AdmitError::Quarantined { .. })
+        ));
+        assert_eq!(p.fault_stats().quarantined, 1);
+        // Other functions are unaffected.
+        assert!(p.try_admit(FuncId(1), last).is_ok());
+        // Cooldown elapsed: one half-open probe slot.
+        assert!(p.try_admit(FuncId(0), last + 2 * SEC).is_ok());
+        assert_eq!(p.fault_stats().breaker_probes, 1);
+        assert!(
+            matches!(
+                p.try_admit(FuncId(0), last + 2 * SEC),
+                Err(AdmitError::Quarantined { .. })
+            ),
+            "probe slots bounded"
+        );
+        // The probe runs clean (fault cap spent) and closes the breaker.
+        let (id, ds) = p.on_arrival(FuncId(0), last + 2 * SEC);
+        let d = *ds.iter().find(|d| d.inv == id).unwrap();
+        let (rec, _) = p.on_complete_attempt(id, 0, d.complete_at);
+        assert!(rec.is_some());
+        assert!(
+            p.try_admit(FuncId(0), d.complete_at).is_ok(),
+            "breaker closed after the probe success"
+        );
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn overload_shedding_rejects_with_hysteresis() {
+        let cfg = PlaneConfig {
+            d: 1,
+            faults: Some(FaultConfig {
+                shed: Some(ShedConfig {
+                    deadline_s: 2.0,
+                    enter: 1.0,
+                    exit: 0.25,
+                    retry_after_ms: 123,
+                }),
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let mut p = plane(cfg);
+        assert!(p.try_admit(FuncId(0), 0).is_ok(), "idle plane admits");
+        let mut head = None;
+        for t in 0..4 {
+            let (_, ds) = p.on_arrival(FuncId(0), t);
+            if let Some(d) = ds.first() {
+                head = Some(*d);
+            }
+        }
+        // Backlog of 4 × ~1 s against one slot ≫ the 2 s deadline.
+        match p.try_admit(FuncId(0), 5) {
+            Err(AdmitError::Overloaded { retry_after_ms }) => assert_eq!(retry_after_ms, 123),
+            other => panic!("expected shed, got {other:?}"),
+        }
+        assert_eq!(p.fault_stats().shed, 1);
+        // Drain the backlog; below the exit bound admission resumes.
+        let mut d = head.unwrap();
+        loop {
+            let (_, more) = p.on_complete(d.inv, d.complete_at);
+            match more.first() {
+                Some(n) => d = *n,
+                None => break,
+            }
+        }
+        assert_eq!(p.in_flight(), 0);
+        assert!(p.try_admit(FuncId(0), 60 * SEC).is_ok());
+        assert_eq!(p.fault_stats().shed, 1);
+    }
+
+    #[test]
+    fn neutral_fault_plan_is_bit_identical_to_none() {
+        let run = |faults: Option<FaultConfig>| {
+            let mut p = plane(PlaneConfig {
+                faults,
+                ..Default::default()
+            });
+            let mut log = Vec::new();
+            let mut due: Vec<Dispatch> = Vec::new();
+            let mut push =
+                |log: &mut Vec<(InvocationId, GpuId, Nanos, Nanos, u32)>, ds: &[Dispatch]| {
+                    log.extend(ds.iter().map(|d| (d.inv, d.gpu, d.at, d.complete_at, d.attempt)));
+                };
+            for t in 0..20u64 {
+                let now = t * 100 * MS;
+                assert!(p.try_admit(FuncId((t % 2) as u32), now).is_ok());
+                let (_, ds) = p.on_arrival(FuncId((t % 2) as u32), now);
+                push(&mut log, &ds);
+                due.extend(ds);
+                let tick = p.on_monitor_tick(now + 50 * MS);
+                push(&mut log, &tick);
+                due.extend(tick);
+                due.sort_by_key(|d| d.complete_at);
+                while let Some(d) = due.first().copied() {
+                    if d.complete_at > now {
+                        break;
+                    }
+                    due.remove(0);
+                    let (_, more) = p.on_complete(d.inv, d.complete_at);
+                    push(&mut log, &more);
+                    due.extend(more);
+                    due.sort_by_key(|d| d.complete_at);
+                }
+            }
+            assert!(p.drain_fault_fates().is_empty());
+            log
+        };
+        let bare = run(None);
+        let neutral = run(Some(FaultConfig::default()));
+        assert!(!bare.is_empty());
+        assert_eq!(bare, neutral, "neutral plan must not perturb dispatch");
     }
 
     #[test]

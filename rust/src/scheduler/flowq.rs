@@ -114,6 +114,23 @@ impl FlowQueue {
         self.avg_exec.push(service_s);
         self.last_exec = now;
     }
+
+    /// Record a failed/evacuated attempt: the in-flight slot is
+    /// released but — unlike [`FlowQueue::complete`] — no exec sample
+    /// is learned (a crashed or hung run says nothing about τ_f) and
+    /// the VT advance charged at dispatch stands.
+    pub fn fault(&mut self, now: Nanos) {
+        self.in_flight = self.in_flight.saturating_sub(1);
+        self.last_exec = now;
+    }
+
+    /// Re-queue a faulted invocation at the *head* of the flow (it
+    /// already waited its turn; retries preempt newer arrivals of the
+    /// same flow). No arrival bookkeeping: the invocation arrived
+    /// once.
+    pub fn requeue_front(&mut self, inv: Invocation) {
+        self.queue.push_front(inv);
+    }
 }
 
 #[cfg(test)]
@@ -165,6 +182,25 @@ mod tests {
         assert!((q.avg_exec_s() - 3.0).abs() < 1e-9);
         q.complete(1.0, 2 * SEC); // EMA moves toward 1.0
         assert!(q.avg_exec_s() < 3.0 && q.avg_exec_s() > 1.0);
+    }
+
+    #[test]
+    fn fault_releases_slot_without_learning() {
+        let mut q = FlowQueue::new(FuncId(0));
+        q.push(inv(1, 0), 0);
+        q.push(inv(2, 0), 0);
+        let head = q.pop_dispatch(1.5, SEC).unwrap();
+        q.fault(2 * SEC);
+        assert_eq!(q.in_flight, 0);
+        assert_eq!(q.last_exec, 2 * SEC);
+        assert_eq!(q.avg_exec_s(), 1.0, "no exec sample from a fault");
+        assert_eq!(q.vt, 1.5, "the dispatch's VT advance stands");
+        // Retry goes to the head, ahead of inv 2, with no IAT update.
+        let arrivals = q.total_arrivals;
+        q.requeue_front(head);
+        assert_eq!(q.total_arrivals, arrivals);
+        assert_eq!(q.pop_dispatch(1.0, 3 * SEC).unwrap().id, InvocationId(1));
+        assert_eq!(q.pop_dispatch(1.0, 3 * SEC).unwrap().id, InvocationId(2));
     }
 
     #[test]

@@ -102,6 +102,20 @@ pub trait Policy: Send {
         self.on_complete(func, service, now);
     }
 
+    /// An in-flight attempt of `func` failed (device loss, transient
+    /// exec fault, or straggler evacuation). The policy releases the
+    /// attempt's in-flight accounting *without* learning an exec
+    /// sample; when `requeue` is true the invocation re-enters the
+    /// queue — fair-queueing policies put it at the head of its flow,
+    /// and the attempt's virtual-time advance stands (no double
+    /// F-advance on retry: the retry dispatch charges its own τ).
+    /// Baselines inherit this default: a plain re-enqueue.
+    fn on_fault(&mut self, inv: Invocation, now: Nanos, requeue: bool) {
+        if requeue {
+            self.enqueue(inv, now);
+        }
+    }
+
     /// Anticipatory decisions (grace holds, batch coalescing) since the
     /// last call, for telemetry. Default: none.
     fn drain_anticipation(&mut self) -> Vec<AnticipationEvent> {

@@ -538,6 +538,38 @@ impl MqfqSticky {
             }
         }
     }
+
+    /// A flow just went idle (empty, nothing in flight): arm its
+    /// keep-alive deadline and surface a grace hold when anticipation
+    /// extended the window. Shared by the completion and fault paths.
+    fn arm_idle(&mut self, func: FuncId) {
+        let f = &self.flows[func.0 as usize];
+        debug_assert!(f.is_empty() && f.in_flight == 0);
+        // The flow's window inputs (last_exec, mean IAT, predicted
+        // IAT) are frozen until the next arrival or dispatch, so this
+        // deadline is exact.
+        let window = keep_alive(&self.cfg, &self.chars, f);
+        let due = f.last_exec.saturating_add(window);
+        self.ttl_heap.push(Reverse((due, func.0)));
+        if window > plain_ttl(&self.cfg, f) {
+            // Grace actually extended the hold beyond the TTL:
+            // surface the non-work-conserving decision.
+            let iat = self
+                .chars
+                .predicted_iat_s(func)
+                .unwrap_or_else(|| f.mean_iat_s());
+            self.anticipation.push(AnticipationEvent::Grace {
+                func,
+                window,
+                predicted_iat: secs(iat),
+            });
+        }
+        if f.state == QState::Throttled {
+            // The naive sweep flips idle Throttled flows to Active
+            // (anticipatory) at the next decision regardless of VT.
+            self.reclass.push(func.0);
+        }
+    }
 }
 
 impl Policy for MqfqSticky {
@@ -614,30 +646,48 @@ impl Policy for MqfqSticky {
         self.flows[i].complete(to_secs(service), now);
         let f = &self.flows[i];
         if f.is_empty() && f.in_flight == 0 {
-            // The flow went idle: arm its keep-alive deadline. Its
-            // window inputs (last_exec, mean IAT, predicted IAT) are
-            // frozen until the next arrival or dispatch, so this
-            // deadline is exact.
-            let window = keep_alive(&self.cfg, &self.chars, f);
-            let due = f.last_exec.saturating_add(window);
-            self.ttl_heap.push(Reverse((due, func.0)));
-            if window > plain_ttl(&self.cfg, f) {
-                // Grace actually extended the hold beyond the TTL:
-                // surface the non-work-conserving decision.
-                let iat = self
-                    .chars
-                    .predicted_iat_s(func)
-                    .unwrap_or_else(|| f.mean_iat_s());
-                self.anticipation.push(AnticipationEvent::Grace {
-                    func,
-                    window,
-                    predicted_iat: secs(iat),
-                });
+            self.arm_idle(func);
+        }
+    }
+
+    /// Fault recovery (device loss, transient exec fault, straggler
+    /// evacuation): release the attempt's in-flight slot without
+    /// learning an exec sample, and — under the retry budget — put the
+    /// invocation back at the *head* of its flow. The attempt's VT
+    /// advance stands (no double F-advance: the faulty tenant paid for
+    /// the service it burned, and the retry charges its own τ), and no
+    /// rejoin catch-up applies because a flow with in-flight work was
+    /// never Inactive. Mirrored in [`reference::NaiveMqfq`].
+    fn on_fault(&mut self, inv: Invocation, now: Nanos, requeue: bool) {
+        let i = inv.func.0 as usize;
+        if self.cfg.anticipate.estimator {
+            // Retire the attempt's charged estimate debt-free — no
+            // completion will ever settle it.
+            self.chars.on_fault(inv.func);
+        }
+        self.flows[i].fault(now);
+        if requeue {
+            let was_empty = self.flows[i].is_empty();
+            self.flows[i].requeue_front(inv);
+            self.queued += 1;
+            if was_empty {
+                // Newly non-empty: index into the candidate structures
+                // and re-derive state at the next decision — the same
+                // moves `enqueue` makes, minus the arrival stats and
+                // the VT catch-up (the flow stayed backlogged through
+                // the faulted attempt, so it never left the VT frontier).
+                let vt = self.flows[i].vt;
+                if Self::ineligible(vt, self.global_vt, self.cfg.t) {
+                    self.throttled.push(Reverse((OrdF64(vt), inv.func.0)));
+                } else {
+                    self.eligible.insert(inv.func.0);
+                }
+                self.reclass.push(inv.func.0);
             }
-            if f.state == QState::Throttled {
-                // The naive sweep flips idle Throttled flows to Active
-                // (anticipatory) at the next decision regardless of VT.
-                self.reclass.push(func.0);
+        } else {
+            let f = &self.flows[i];
+            if f.is_empty() && f.in_flight == 0 {
+                self.arm_idle(inv.func);
             }
         }
     }
@@ -881,6 +931,20 @@ pub mod reference {
             self.chars
                 .on_complete(func, service, start.unwrap_or(StartKind::GpuWarm), boot);
             self.flows[func.0 as usize].complete(to_secs(service), now);
+        }
+
+        /// Mirror of [`MqfqSticky::on_fault`]: identical flow-queue and
+        /// estimator arithmetic; no index maintenance because the next
+        /// decision's full sweep re-derives everything.
+        fn on_fault(&mut self, inv: Invocation, now: Nanos, requeue: bool) {
+            if self.cfg.anticipate.estimator {
+                self.chars.on_fault(inv.func);
+            }
+            let f = &mut self.flows[inv.func.0 as usize];
+            f.fault(now);
+            if requeue {
+                f.requeue_front(inv);
+            }
         }
 
         fn estimated_exec_s(&self, func: FuncId) -> Option<f64> {
@@ -1341,6 +1405,54 @@ mod tests {
         );
     }
 
+    #[test]
+    fn fault_requeues_at_head_without_double_f_advance() {
+        let mut p = mk(2);
+        enqueue_n(&mut p, 0, 2, 0, 1); // ids 1, 2
+        enqueue_n(&mut p, 1, 1, 0, 10);
+        let inf = [0usize, 0];
+        let first = p.dispatch(0, &ctx(&inf, 2)).unwrap();
+        assert_eq!(first.id, InvocationId(1));
+        let vt_after_dispatch = p.queue_vt(FuncId(0)).unwrap();
+        assert!(vt_after_dispatch > 0.0);
+        // The attempt faults and re-queues: VT unchanged (the charge
+        // stands), in-flight released, and the retry sits at the head
+        // of its flow ahead of id 2.
+        p.on_fault(first, SEC, true);
+        assert_eq!(p.queue_vt(FuncId(0)).unwrap(), vt_after_dispatch);
+        assert_eq!(p.flow(FuncId(0)).in_flight, 0);
+        assert_eq!(p.pending(), 3);
+        let retry = p.dispatch(SEC, &ctx(&inf, 2)).unwrap();
+        assert_eq!(retry.id, InvocationId(1), "retry preempts newer work");
+        // Exhausted budget: the fault drops the invocation instead.
+        p.on_fault(retry, 2 * SEC, false);
+        assert_eq!(p.pending(), 2);
+        assert_eq!(p.flow(FuncId(0)).in_flight, 0);
+    }
+
+    #[test]
+    fn fault_with_estimator_retires_outstanding_charge() {
+        let cfg = MqfqConfig {
+            anticipate: AnticipateConfig {
+                estimator: true,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut p = MqfqSticky::new(1, cfg);
+        enqueue_n(&mut p, 0, 2, 0, 1);
+        let inf = [0usize];
+        let inv = p.dispatch(0, &ctx(&inf, 1)).unwrap();
+        let vt1 = p.queue_vt(FuncId(0)).unwrap();
+        p.on_fault(inv, SEC, true);
+        // No debt was created: the next dispatch charges a fresh
+        // estimate on top of the standing VT, not a corrected one.
+        p.dispatch(SEC, &ctx(&inf, 1)).unwrap();
+        let vt2 = p.queue_vt(FuncId(0)).unwrap();
+        assert!((vt2 - 2.0 * vt1).abs() < 1e-9, "vt1={vt1} vt2={vt2}");
+        assert!(p.characteristics().debt_s(FuncId(0)).abs() < 1e-12);
+    }
+
     /// The tentpole guarantee: over randomized Zipf-popularity traces of
     /// interleaved arrivals, dispatches, and completions, the indexed
     /// implementation produces the *identical* dispatch sequence, VTs,
@@ -1419,7 +1531,10 @@ mod tests {
             let steps = g.int(10, 250);
             for step in 0..steps {
                 now += secs(g.f64(0.0, 2.5));
-                match g.int(0, 2) {
+                // Op 3 (fault: requeue-at-head or drop) extends the
+                // equivalence over fault recovery — PR 10's "no double
+                // F-advance, mirrored in NaiveMqfq" requirement.
+                match g.int(0, 3) {
                     0 => {
                         for _ in 0..g.int(1, 4) {
                             let inv = Invocation {
@@ -1446,6 +1561,16 @@ mod tests {
                         for inv in a {
                             in_flight[inv.func.0 as usize] += 1;
                             outstanding.push(inv);
+                        }
+                    }
+                    2 => {
+                        if !outstanding.is_empty() {
+                            let k = g.int(0, outstanding.len() - 1);
+                            let inv = outstanding.swap_remove(k);
+                            let requeue = g.bool(0.7);
+                            fast.on_fault(inv, now, requeue);
+                            oracle.on_fault(inv, now, requeue);
+                            in_flight[inv.func.0 as usize] -= 1;
                         }
                     }
                     _ => {

@@ -169,6 +169,41 @@
 //! with no routable shard would turn every submit into an error with no
 //! in-band recovery path.
 //!
+//! # Failure model
+//!
+//! Shard-level failure (`kill`) is handled above; *device-level* and
+//! *invocation-level* failure ride in from the plane layer when a
+//! [`crate::fault::FaultConfig`] is installed
+//! ([`crate::plane::PlaneConfig::faults`]). The serving layer adds no
+//! fault logic of its own — it maps the plane's decisions onto tickets
+//! and admission answers, preserving exactly-once ticket fates:
+//!
+//! * **Admission** — `submit` consults [`ControlPlane::try_admit`]
+//!   under the same plane lock as the arrival. A function whose
+//!   circuit breaker is Open is refused with
+//!   [`ApiError::Quarantined`] (structured `retry_after_ms` = the
+//!   remaining cooldown); deadline-aware shedding refuses with
+//!   [`ApiError::Overloaded`] carrying the configured backoff hint.
+//!   Both count as `rejected` — the provisional ticket is retracted
+//!   and nothing enters the fate ledger.
+//! * **Transient faults and stragglers** — a faulted attempt is
+//!   re-queued *inside* the plane; the invocation→ticket mapping is
+//!   claimed only when a completion carries a record, so the retry's
+//!   completion (a later attempt number) fulfills the original ticket.
+//!   Superseded completions — a stale timer item for an attempt the
+//!   watchdog already evacuated — return no record and touch nothing.
+//! * **Retry exhaustion** — the plane emits a [`FaultFate`] when an
+//!   invocation burns its whole retry budget. Fates are claimed under
+//!   the plane lock (same exactness rule as completion vs. kill) and
+//!   resolved to [`ApiError::ExecFailed`] with the attempt count;
+//!   blocked waiters wake immediately, `failed` is counted, and fate
+//!   conservation (`accepted == completed + failed + outstanding`)
+//!   still holds — an invocation is never both failed and completed.
+//!
+//! With no fault plan every hook above is a no-op and the dispatch
+//! stream is bit-identical to a server without this layer (the
+//! equivalence is property-tested at the plane and sim layers).
+//!
 //! # Observability
 //!
 //! Every frontend owns one [`crate::telemetry::Telemetry`] instance,
@@ -227,6 +262,7 @@ use crate::api::types::{
 use crate::api::{CompletionSink, Frontend};
 use crate::clock::{Clock, RealClock};
 use crate::cluster::{ClusterConfig, Router, RouterKind, ShardLoad};
+use crate::fault::{AdmitError, FaultFate};
 use crate::plane::{ControlPlane, Dispatch, PlaneConfig};
 use crate::runtime::PjrtRuntime;
 use crate::telemetry::{self, EventKind, Telemetry, TraceEvent};
@@ -750,7 +786,11 @@ fn submit_raw(inner: &Arc<Inner>, name: &str) -> Result<Ticket, ApiError> {
             let pending: usize = loads.iter().map(|l| l.pending).sum();
             let limit = inner.max_pending.load(Ordering::SeqCst);
             if pending >= limit {
-                return Err(ApiError::Overloaded { pending, limit });
+                return Err(ApiError::Overloaded {
+                    pending,
+                    limit,
+                    retry_after_ms: 0,
+                });
             }
             // Spills are read under the same router lock as the route
             // decision, so the pair is coherent per call.
@@ -807,10 +847,36 @@ fn submit_raw(inner: &Arc<Inner>, name: &str) -> Result<Ticket, ApiError> {
                 }
                 continue;
             }
+            let now = inner.clock.now();
+            // Fault-layer admission gate (circuit breaker, deadline
+            // shed) under the same lock as the arrival, so the breaker
+            // state it reads is the state the arrival would feed. A
+            // refusal is a rejection, not a fate: retract the
+            // provisional ticket, nothing entered the plane.
+            if let Err(e) = plane.try_admit(func, now) {
+                drop(plane);
+                inner.ticket_slot(ticket.0).lock().unwrap().remove(ticket.0);
+                return Err(match e {
+                    AdmitError::Quarantined { retry_after_ms } => ApiError::Quarantined {
+                        func: inner.func_names[func.0 as usize].clone(),
+                        retry_after_ms,
+                    },
+                    AdmitError::Overloaded { retry_after_ms } => {
+                        // Shed refuses at the current depth — report it
+                        // as the bound that was hit.
+                        let depth = st.pending.load(Ordering::SeqCst)
+                            + st.in_flight.load(Ordering::SeqCst);
+                        ApiError::Overloaded {
+                            pending: depth,
+                            limit: depth,
+                            retry_after_ms,
+                        }
+                    }
+                });
+            }
             // Exact idle check under the lock (a pre-lock snapshot could
             // race a completion and leave the monitor parked with work).
             let was_idle = plane.pending() + plane.in_flight() == 0;
-            let now = inner.clock.now();
             let (inv, ds) = plane.on_arrival(func, now);
             // Map under the plane lock (see ShardState::inv_tickets).
             st.inv_tickets.lock().unwrap().insert(inv, ticket);
@@ -1517,13 +1583,18 @@ fn monitor_loop(inner: Arc<Inner>, shard: usize) {
             return;
         }
         let now = inner.clock.now();
-        let (ds, epoch) = {
+        let (ds, epoch, fated) = {
             let mut plane = st.plane.lock().unwrap();
             let ds = plane.on_monitor_tick(now);
+            // The tick runs fault maintenance (scheduled device
+            // failures, the straggler watchdog); claim any resulting
+            // retry-exhausted fates under the same lock.
+            let fated = claim_fault_fates(st, &mut plane);
             st.publish(&plane);
-            (ds, st.epoch.load(Ordering::SeqCst))
+            (ds, st.epoch.load(Ordering::SeqCst), fated)
         };
         st.ticks.fetch_add(1, Ordering::SeqCst);
+        resolve_fault_fates(&inner, shard, fated);
         schedule_dispatches(&inner, shard, epoch, ds);
     }
 }
@@ -1640,20 +1711,35 @@ fn run_exec_start(inner: &Arc<Inner>, shard: usize, epoch: u64, d: Dispatch) {
 /// unlocked dispatches. Epoch-guarded like [`run_exec_start`]; the
 /// ticket mapping is claimed under the plane lock so a concurrent kill
 /// can never fail a ticket this path is about to fulfill.
+///
+/// Attempt-stamped for exactly-once under faults: the plane drops a
+/// completion whose attempt was superseded (faulted + re-queued), and
+/// a *faulted* attempt's completion returns no record — in both cases
+/// the ticket mapping is left in place for the retry (or for the
+/// retry-exhausted fate, resolved below).
 fn run_complete(inner: &Arc<Inner>, shard: usize, epoch: u64, d: Dispatch, exec_t0: Nanos) {
     let st = &inner.shards[shard];
     let now = inner.clock.now();
-    let (rec, ds, mapped) = {
+    let (rec, ds, mapped, fated) = {
         let mut plane = st.plane.lock().unwrap();
         if st.epoch.load(Ordering::SeqCst) != epoch {
             inner.stale_drops.fetch_add(1, Ordering::SeqCst);
             return;
         }
-        let (rec, ds) = plane.on_complete(d.inv, now);
+        let (rec, ds) = plane.on_complete_attempt(d.inv, d.attempt, now);
+        let fated = claim_fault_fates(st, &mut plane);
         st.publish(&plane);
-        let mapped = st.inv_tickets.lock().unwrap().remove(&d.inv);
-        (rec, ds, mapped)
+        // Claim the mapping only when this completion actually retired
+        // the invocation; a faulted/superseded attempt leaves the
+        // ticket mapped for its retry.
+        let mapped = if rec.is_some() {
+            st.inv_tickets.lock().unwrap().remove(&d.inv)
+        } else {
+            None
+        };
+        (rec, ds, mapped, fated)
     };
+    resolve_fault_fates(inner, shard, fated);
     // Completion matching: the plane hands back the completed
     // invocation's own record (not `records.last()`, which under
     // concurrent completions may belong to someone else).
@@ -1684,6 +1770,51 @@ fn run_complete(inner: &Arc<Inner>, shard: usize, epoch: u64, d: Dispatch, exec_
         }
     }
     schedule_dispatches(inner, shard, epoch, ds);
+}
+
+/// Claim tickets for retry-exhausted invocations. Must run under the
+/// plane lock: a fate's invocation→ticket mapping obeys the same
+/// exactness rule as the completion path — a racing kill either sees
+/// the mapping already claimed here, or drains it to `ShardLost`;
+/// never both.
+fn claim_fault_fates(st: &ShardState, plane: &mut ControlPlane) -> Vec<(Ticket, FaultFate)> {
+    let fates = plane.drain_fault_fates();
+    if fates.is_empty() {
+        return Vec::new();
+    }
+    let mut map = st.inv_tickets.lock().unwrap();
+    fates
+        .into_iter()
+        .filter_map(|f| map.remove(&f.inv).map(|t| (t, f)))
+        .collect()
+}
+
+/// Resolve claimed retry-exhausted fates to [`ApiError::ExecFailed`]:
+/// blocked waiters wake immediately with the structured error, exactly
+/// like the kill path's `ShardLost`. Runs after the plane lock drops.
+fn resolve_fault_fates(inner: &Arc<Inner>, shard: usize, fated: Vec<(Ticket, FaultFate)>) {
+    if fated.is_empty() {
+        return;
+    }
+    let now = inner.clock.now();
+    let sm = inner.telemetry.registry.shard(shard as u32);
+    for (ticket, fate) in fated {
+        inner.failed.fetch_add(1, Ordering::SeqCst);
+        sm.errors.inc();
+        inner.telemetry.emit(
+            TraceEvent::new(now, EventKind::Error, shard as u32)
+                .func(fate.func.0)
+                .a(fate.attempts as i64),
+        );
+        fail_ticket(
+            inner,
+            ticket,
+            ApiError::ExecFailed {
+                ticket,
+                attempts: fate.attempts,
+            },
+        );
+    }
 }
 
 /// Mark a ticket done and wake every waiter blocked on it.
@@ -1842,7 +1973,8 @@ impl_guard!(RtCluster);
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::types::MS;
+    use crate::fault::{BreakerConfig, FaultConfig, ShedConfig};
+    use crate::types::{FuncId, MS, SEC};
     use crate::workload::catalog::by_name;
 
     fn workload() -> Workload {
@@ -2396,5 +2528,135 @@ mod tests {
         assert_eq!(n, 10);
         assert!((s.mean_latency_ms - lat_sum / n as f64 * 1e3).abs() < 1e-6);
         assert!((s.cold_ratio - cold_sum / n as f64).abs() < 1e-9);
+    }
+
+    // --- failure model (see module docs) ------------------------------
+
+    #[test]
+    fn transient_fault_retries_to_completion_exactly_once() {
+        // Every attempt faults until the cap (1): the first attempt
+        // fails, the retry completes, and the submitter's ticket is
+        // fulfilled exactly once.
+        let cfg = PlaneConfig {
+            monitor_period: 20 * MS,
+            faults: Some(FaultConfig {
+                seed: 7,
+                transient_rate: 1.0,
+                max_faults: 1,
+                retry_budget: 3,
+                ..Default::default()
+            }),
+            ..fast_cfg()
+        };
+        let srv = RtServer::new(workload(), cfg, None, 0.001).unwrap();
+        let t = srv.submit("isoneural-0").unwrap();
+        let o = srv.wait(t, WAIT).unwrap();
+        assert_eq!(o.ticket, t);
+        assert_eq!(srv.stats().invocations, 1, "one completion, not two");
+        let m = wait_membership(&srv, MembershipInfo::conserved_at_quiescence);
+        assert_eq!((m.accepted, m.completed, m.failed), (1, 1, 0));
+        let fs = srv.inner.shards[0].plane.lock().unwrap().fault_stats();
+        assert_eq!(fs.faults_transient, 1);
+        assert_eq!(fs.retries, 1);
+    }
+
+    #[test]
+    fn exhausted_retry_budget_fails_the_ticket_with_exec_failed() {
+        // Unbounded faulting with a 2-attempt budget: the waiter wakes
+        // with the structured error, and fate conservation counts the
+        // invocation as failed — never completed.
+        let cfg = PlaneConfig {
+            monitor_period: 20 * MS,
+            faults: Some(FaultConfig {
+                seed: 7,
+                transient_rate: 1.0,
+                retry_budget: 2,
+                ..Default::default()
+            }),
+            ..fast_cfg()
+        };
+        let srv = RtServer::new(workload(), cfg, None, 0.001).unwrap();
+        let t = srv.submit("isoneural-0").unwrap();
+        match srv.wait(t, WAIT).unwrap_err() {
+            ApiError::ExecFailed { ticket, attempts } => {
+                assert_eq!(ticket, t);
+                assert_eq!(attempts, 2);
+            }
+            e => panic!("expected exec-failed, got {e:?}"),
+        }
+        assert_eq!(srv.stats().invocations, 0);
+        let m = wait_membership(&srv, MembershipInfo::conserved_at_quiescence);
+        assert_eq!((m.accepted, m.completed, m.failed), (1, 0, 1));
+        assert!(m.conserved_at_quiescence(), "{m:?}");
+    }
+
+    #[test]
+    fn poison_function_trips_the_breaker_into_quarantine() {
+        let cfg = PlaneConfig {
+            monitor_period: 20 * MS,
+            faults: Some(FaultConfig {
+                seed: 3,
+                poison: vec![(FuncId(1), 1.0)], // fft-0
+                retry_budget: 1,
+                breaker: Some(BreakerConfig {
+                    window: 4,
+                    trip_threshold: 0.5,
+                    min_samples: 2,
+                    cooldown: 3600 * SEC,
+                    probes: 1,
+                }),
+                ..Default::default()
+            }),
+            ..fast_cfg()
+        };
+        let srv = RtServer::new(workload(), cfg, None, 0.001).unwrap();
+        // Two observed failures trip the breaker...
+        for _ in 0..2 {
+            let t = srv.submit("fft-0").unwrap();
+            assert_eq!(srv.wait(t, WAIT).unwrap_err().code(), "exec-failed");
+        }
+        // ...so the third submit is refused before entering the plane.
+        match srv.submit("fft-0").unwrap_err() {
+            ApiError::Quarantined {
+                func,
+                retry_after_ms,
+            } => {
+                assert_eq!(func, "fft-0");
+                assert!(retry_after_ms > 0, "cooldown hint must be real");
+            }
+            e => panic!("expected quarantined, got {e:?}"),
+        }
+        // Quarantine is a rejection, not a fate; healthy tenants flow.
+        let m = srv.membership().unwrap();
+        assert_eq!(m.rejected, 1);
+        let t = srv.submit("isoneural-0").unwrap();
+        srv.wait(t, WAIT).unwrap();
+    }
+
+    #[test]
+    fn shed_rejects_with_structured_retry_hint() {
+        // A microscopic deadline: any backlog at all predicts a miss,
+        // so the second submit is shed with the configured hint.
+        let cfg = PlaneConfig {
+            monitor_period: 20 * MS,
+            faults: Some(FaultConfig {
+                shed: Some(ShedConfig {
+                    deadline_s: 1e-6,
+                    retry_after_ms: 123,
+                    ..Default::default()
+                }),
+                ..Default::default()
+            }),
+            ..fast_cfg()
+        };
+        let srv = RtServer::new(workload(), cfg, None, 0.01).unwrap();
+        let t = srv.submit("fft-0").unwrap();
+        match srv.submit("fft-0").unwrap_err() {
+            ApiError::Overloaded { retry_after_ms, .. } => assert_eq!(retry_after_ms, 123),
+            e => panic!("expected overloaded, got {e:?}"),
+        }
+        let m = srv.membership().unwrap();
+        assert_eq!((m.accepted, m.rejected), (1, 1));
+        srv.wait(t, WAIT).unwrap();
     }
 }

@@ -26,7 +26,10 @@ use crate::workload::{Trace, Workload};
 /// causes were processed), then kind for completeness.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 enum EvKind {
-    Complete(usize, InvocationId),
+    /// Completion of (shard, invocation, attempt) — attempt-stamped so
+    /// a completion left over from a faulted, re-queued attempt is
+    /// dropped by the plane instead of double-freeing the retry.
+    Complete(usize, InvocationId, u32),
     /// Exact utilization-integral touch at an exec start, per shard.
     Touch(usize),
 }
@@ -55,8 +58,13 @@ pub trait SimTarget {
     /// Work pending or in flight anywhere (monitor ticks fire only then).
     fn busy(&self) -> bool;
     fn sim_arrival(&mut self, func: FuncId, now: Nanos) -> Vec<ShardDispatch>;
-    fn sim_complete(&mut self, shard: usize, inv: InvocationId, now: Nanos)
-        -> Vec<ShardDispatch>;
+    fn sim_complete(
+        &mut self,
+        shard: usize,
+        inv: InvocationId,
+        attempt: u32,
+        now: Nanos,
+    ) -> Vec<ShardDispatch>;
     fn sim_tick(&mut self, now: Nanos) -> Vec<ShardDispatch>;
     fn sim_touch(&mut self, shard: usize, now: Nanos);
     /// (pending, in_flight) totals, for the runaway diagnostic.
@@ -77,9 +85,10 @@ impl SimTarget for ControlPlane {
         &mut self,
         _shard: usize,
         inv: InvocationId,
+        attempt: u32,
         now: Nanos,
     ) -> Vec<ShardDispatch> {
-        crate::cluster::tag(0, self.on_complete(inv, now).1)
+        crate::cluster::tag(0, self.on_complete_attempt(inv, attempt, now).1)
     }
 
     fn sim_tick(&mut self, now: Nanos) -> Vec<ShardDispatch> {
@@ -121,7 +130,12 @@ fn drive<T: SimTarget>(target: &mut T, trace: &Trace, monitor_period: DurNanos) 
             if d.exec_start > d.at {
                 push(heap, seq, d.exec_start, EvKind::Touch(sd.shard));
             }
-            push(heap, seq, d.complete_at, EvKind::Complete(sd.shard, d.inv));
+            push(
+                heap,
+                seq,
+                d.complete_at,
+                EvKind::Complete(sd.shard, d.inv, d.attempt),
+            );
         }
     };
 
@@ -183,8 +197,8 @@ fn drive<T: SimTarget>(target: &mut T, trace: &Trace, monitor_period: DurNanos) 
 
         let Reverse(ev) = heap.pop().unwrap();
         match ev.kind {
-            EvKind::Complete(shard, inv) => {
-                let ds = target.sim_complete(shard, inv, ev.at);
+            EvKind::Complete(shard, inv, attempt) => {
+                let ds = target.sim_complete(shard, inv, attempt, ev.at);
                 makespan = makespan.max(ev.at);
                 schedule_dispatches(&mut heap, &mut seq, &ds);
             }
@@ -509,6 +523,95 @@ mod tests {
             .map(|c| tel.registry.class(c).unwrap().completed.get())
             .sum();
         assert_eq!(class_total, 20);
+    }
+
+    #[test]
+    fn faulted_replay_resolves_every_invocation_exactly_once() {
+        let (w, t) = tiny_workload();
+        let cfg = PlaneConfig {
+            faults: Some(crate::fault::FaultConfig {
+                seed: 42,
+                transient_rate: 0.3,
+                straggler_rate: 0.1,
+                retry_budget: 2,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let mut r = replay(w, &t, cfg);
+        let fates = r.plane.drain_fault_fates();
+        assert_eq!(
+            r.recorder().len() + fates.len(),
+            20,
+            "every submit resolves exactly once (success or terminal fate)"
+        );
+        assert_eq!(r.plane.in_flight(), 0);
+        assert_eq!(r.plane.pending(), 0);
+        let st = r.plane.fault_stats();
+        assert!(
+            st.faults_transient + st.faults_straggler > 0,
+            "the storm must inject something at these rates: {st:?}"
+        );
+        assert_eq!(st.retry_exhausted, fates.len() as u64);
+    }
+
+    #[test]
+    fn faulted_replay_is_deterministic() {
+        let (w, t) = tiny_workload();
+        let cfg = PlaneConfig {
+            faults: Some(crate::fault::FaultConfig {
+                seed: 7,
+                transient_rate: 0.25,
+                straggler_rate: 0.1,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        let r1 = replay(w.clone(), &t, cfg.clone());
+        let r2 = replay(w, &t, cfg);
+        assert_eq!(r1.makespan, r2.makespan);
+        assert_eq!(r1.events, r2.events);
+        assert_eq!(r1.recorder().records, r2.recorder().records);
+        assert_eq!(r1.plane.fault_stats(), r2.plane.fault_stats());
+    }
+
+    #[test]
+    fn neutral_fault_plan_replay_is_bit_identical() {
+        let (w, t) = tiny_workload();
+        let bare = replay(w.clone(), &t, PlaneConfig::default());
+        let neutral = replay(
+            w,
+            &t,
+            PlaneConfig {
+                faults: Some(crate::fault::FaultConfig::default()),
+                ..Default::default()
+            },
+        );
+        assert_eq!(bare.makespan, neutral.makespan);
+        assert_eq!(bare.events, neutral.events);
+        assert_eq!(bare.recorder().records, neutral.recorder().records);
+    }
+
+    #[test]
+    fn device_failure_mid_replay_recovers() {
+        let (w, t) = tiny_workload();
+        let mut cfg = PlaneConfig::uniform(
+            2,
+            crate::gpu::V100,
+            crate::gpu::MultiplexMode::Plain,
+        );
+        cfg.faults = Some(crate::fault::FaultConfig {
+            device_failures: vec![(secs(2.0), crate::types::GpuId(0))],
+            device_recoveries: vec![(secs(8.0), crate::types::GpuId(0))],
+            ..Default::default()
+        });
+        let mut r = replay(w, &t, cfg);
+        let fates = r.plane.drain_fault_fates();
+        assert_eq!(r.recorder().len() + fates.len(), 20);
+        assert!(r.plane.fault_stats().faults_device >= 1);
+        assert_eq!(r.plane.live_devices(), 2, "scheduled recovery rejoined");
+        assert_eq!(r.plane.in_flight(), 0);
+        assert_eq!(r.plane.pending(), 0);
     }
 
     #[test]

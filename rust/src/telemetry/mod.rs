@@ -34,6 +34,10 @@
 //! | `batch`      | invocations coalesced               | VT advance, virtual ns | — |
 //! | `d_resize`   | new D                               | old D           | demand ×1e3 |
 //! | `estimate`   | predicted exec ns                   | actual exec ns  | gpu  |
+//! | `fault`      | kind (0 device, 1 transient, 2 straggler) | attempt index | gpu |
+//! | `requeue`    | attempts consumed so far            | —               | —    |
+//! | `breaker_state` | state (0 closed, 1 open, 2 half-open) | —          | —    |
+//! | `shed`       | predicted wait ns                   | retry-after ms  | —    |
 //!
 //! The per-invocation lifecycle reads `submit → [route] → enqueue →
 //! dispatch → exec_start → complete|error` (`route` appears only on

@@ -183,6 +183,16 @@ pub struct ShardMetrics {
     pub batched_invocations: Counter,
     /// Adaptive-D controller level changes.
     pub d_resizes: Counter,
+    /// Fault-tolerance layer: injected/observed attempt failures by
+    /// kind, retry outcomes, breaker activity, and shed admissions.
+    pub faults_device: Counter,
+    pub faults_transient: Counter,
+    pub faults_straggler: Counter,
+    pub retries: Counter,
+    pub retry_exhausted: Counter,
+    pub breaker_trips: Counter,
+    pub breaker_probes: Counter,
+    pub shed: Counter,
     /// Estimator accuracy: |predicted − actual| exec time at completion
     /// (only recorded when the estimator had a prediction).
     pub est_abs_error_ns: Histogram,
@@ -351,6 +361,14 @@ impl Registry {
         counter_family!("mqfq_batch_dispatches_total", batch_dispatches);
         counter_family!("mqfq_batched_invocations_total", batched_invocations);
         counter_family!("mqfq_d_resizes_total", d_resizes);
+        counter_family!("mqfq_faults_device_total", faults_device);
+        counter_family!("mqfq_faults_transient_total", faults_transient);
+        counter_family!("mqfq_faults_straggler_total", faults_straggler);
+        counter_family!("mqfq_retries_total", retries);
+        counter_family!("mqfq_retry_exhausted_total", retry_exhausted);
+        counter_family!("mqfq_breaker_trips_total", breaker_trips);
+        counter_family!("mqfq_breaker_probes_total", breaker_probes);
+        counter_family!("mqfq_shed_total", shed);
         gauge_family!("mqfq_d_tokens", d_tokens);
         gauge_family!("mqfq_global_vt_ns", global_vt_ns);
         gauge_family!("mqfq_est_last_exec_ns", est_last_exec_ns);
@@ -495,6 +513,32 @@ impl Registry {
                         Json::Int(m.batched_invocations.get() as i64),
                     ),
                     ("d_resizes".into(), Json::Int(m.d_resizes.get() as i64)),
+                    (
+                        "faults_device".into(),
+                        Json::Int(m.faults_device.get() as i64),
+                    ),
+                    (
+                        "faults_transient".into(),
+                        Json::Int(m.faults_transient.get() as i64),
+                    ),
+                    (
+                        "faults_straggler".into(),
+                        Json::Int(m.faults_straggler.get() as i64),
+                    ),
+                    ("retries".into(), Json::Int(m.retries.get() as i64)),
+                    (
+                        "retry_exhausted".into(),
+                        Json::Int(m.retry_exhausted.get() as i64),
+                    ),
+                    (
+                        "breaker_trips".into(),
+                        Json::Int(m.breaker_trips.get() as i64),
+                    ),
+                    (
+                        "breaker_probes".into(),
+                        Json::Int(m.breaker_probes.get() as i64),
+                    ),
+                    ("shed".into(), Json::Int(m.shed.get() as i64)),
                     ("d_tokens".into(), Json::Int(m.d_tokens.get())),
                     ("global_vt_ns".into(), Json::Int(m.global_vt_ns.get())),
                     (
@@ -636,6 +680,11 @@ mod tests {
         r.shard(0).batch_dispatches.inc();
         r.shard(0).batched_invocations.add(3);
         r.shard(0).d_resizes.inc();
+        r.shard(0).faults_transient.add(4);
+        r.shard(0).retries.add(3);
+        r.shard(0).retry_exhausted.inc();
+        r.shard(0).breaker_trips.inc();
+        r.shard(0).shed.add(2);
         r.shard(0).est_abs_error_ns.record(250);
         r.shard(0).est_last_exec_ns.set(1_500);
         r.device(0, 1).unwrap().dispatches.inc();
@@ -678,6 +727,20 @@ mod tests {
         );
         assert!(prom.contains("mqfq_d_resizes_total{shard=\"0\"} 1"), "{prom}");
         assert!(
+            prom.contains("mqfq_faults_transient_total{shard=\"0\"} 4"),
+            "{prom}"
+        );
+        assert!(prom.contains("mqfq_retries_total{shard=\"0\"} 3"), "{prom}");
+        assert!(
+            prom.contains("mqfq_retry_exhausted_total{shard=\"0\"} 1"),
+            "{prom}"
+        );
+        assert!(
+            prom.contains("mqfq_breaker_trips_total{shard=\"0\"} 1"),
+            "{prom}"
+        );
+        assert!(prom.contains("mqfq_shed_total{shard=\"0\"} 2"), "{prom}");
+        assert!(
             prom.contains("mqfq_est_last_exec_ns{shard=\"0\"} 1500"),
             "{prom}"
         );
@@ -700,6 +763,9 @@ mod tests {
         assert!(doc.contains("\"grace_holds\": 2"), "{doc}");
         assert!(doc.contains("\"batched_invocations\": 3"), "{doc}");
         assert!(doc.contains("\"d_resizes\": 1"), "{doc}");
+        assert!(doc.contains("\"faults_transient\": 4"), "{doc}");
+        assert!(doc.contains("\"retries\": 3"), "{doc}");
+        assert!(doc.contains("\"shed\": 2"), "{doc}");
         assert!(doc.contains("\"est_last_exec_ns\": 1500"), "{doc}");
         assert!(doc.contains("\"class\": \"fft\""), "{doc}");
         assert!(doc.contains("\"open_connections\": 5"), "{doc}");

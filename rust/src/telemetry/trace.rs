@@ -63,10 +63,20 @@ pub enum EventKind {
     DResize,
     /// Estimator predicted-vs-actual execution time at completion.
     Estimate,
+    /// An attempt failed (a = FaultKind code, b = attempt index,
+    /// c = gpu).
+    Fault,
+    /// A failed attempt re-queued at the head of its flow
+    /// (a = attempts consumed so far).
+    Requeue,
+    /// Circuit breaker transitioned (a = BreakerState code).
+    BreakerState,
+    /// Admission shed by the overload policy (a = predicted wait ns).
+    Shed,
 }
 
 /// Every kind, for vocabulary assertions and exhaustive rendering.
-pub const ALL_KINDS: [EventKind; 16] = [
+pub const ALL_KINDS: [EventKind; 20] = [
     EventKind::Submit,
     EventKind::Route,
     EventKind::Enqueue,
@@ -83,6 +93,10 @@ pub const ALL_KINDS: [EventKind; 16] = [
     EventKind::Batch,
     EventKind::DResize,
     EventKind::Estimate,
+    EventKind::Fault,
+    EventKind::Requeue,
+    EventKind::BreakerState,
+    EventKind::Shed,
 ];
 
 impl EventKind {
@@ -105,6 +119,10 @@ impl EventKind {
             EventKind::Batch => "batch",
             EventKind::DResize => "d_resize",
             EventKind::Estimate => "estimate",
+            EventKind::Fault => "fault",
+            EventKind::Requeue => "requeue",
+            EventKind::BreakerState => "breaker_state",
+            EventKind::Shed => "shed",
         }
     }
 

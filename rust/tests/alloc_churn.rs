@@ -165,6 +165,21 @@ fn wire_path_steady_state_allocation_churn() {
             sv.push_notifications.inc();
             sv.push_dropped.inc();
             sv.slow_client_disconnects.inc();
+            // Fault-tolerance family: injection, retry, breaker, and
+            // shed paths record through the same preallocated registry
+            // and ring — a fault storm must not churn the heap either.
+            m.faults_device.inc();
+            m.faults_transient.inc();
+            m.faults_straggler.inc();
+            m.retries.inc();
+            m.retry_exhausted.inc();
+            m.breaker_trips.inc();
+            m.breaker_probes.inc();
+            m.shed.inc();
+            tel.emit(TraceEvent::new(i, EventKind::Fault, 0).inv(i).func(0).a(1));
+            tel.emit(TraceEvent::new(i, EventKind::Requeue, 0).inv(i).func(0).a(2));
+            tel.emit(TraceEvent::new(i, EventKind::BreakerState, 0).func(0).a(1));
+            tel.emit(TraceEvent::new(i, EventKind::Shed, 0).func(0).a(3).b(250));
         }
     });
     assert_eq!(

@@ -80,6 +80,7 @@ fn prop_single_shard_cluster_matches_plain_replay() {
                 shard_planes: Vec::new(),
                 load_factor: g.f64(1.0, 4.0),
                 seed,
+                ..Default::default()
             },
         );
 
@@ -142,6 +143,7 @@ fn prop_cluster_conserves_invocations() {
             shard_planes: Vec::new(),
             load_factor: g.f64(1.0, 3.0),
             seed: g.int(0, 1 << 20) as u64,
+            ..Default::default()
         };
         let ctx = format!("shards={} router={}", cfg.n_shards, cfg.router.name());
         let r = replay_cluster(w, &t, cfg);
@@ -180,6 +182,7 @@ fn prop_cluster_replay_is_deterministic() {
             shard_planes: Vec::new(),
             load_factor: g.f64(1.0, 3.0),
             seed: g.int(0, 1 << 20) as u64,
+            ..Default::default()
         };
         let a = replay_cluster(w.clone(), &t, cfg.clone());
         let b = replay_cluster(w, &t, cfg.clone());

@@ -1,0 +1,252 @@
+//! Property tests for the fault-tolerance layer: exactly-once ticket
+//! fate under arbitrary seeded fault storms (every arrival resolves to
+//! exactly one completion or one terminal retry-exhausted fate, across
+//! policies and routers, with devices failing mid-run), and the
+//! neutral-plan bit-identity contract (a present-but-empty fault plan
+//! takes the fault branches yet replays bit-identically to `faults:
+//! None`).
+
+use mqfq::cluster::{ClusterConfig, ALL_ROUTERS};
+use mqfq::fault::FaultConfig;
+use mqfq::gpu::{uniform_fleet, MultiplexMode, V100};
+use mqfq::plane::PlaneConfig;
+use mqfq::scheduler::policies::PolicyKind;
+use mqfq::scheduler::MqfqConfig;
+use mqfq::sim::{replay, replay_cluster};
+use mqfq::types::{secs, FuncId, GpuId};
+use mqfq::util::prop::{assert_prop, Gen};
+use mqfq::workload::catalog::CATALOG;
+use mqfq::workload::trace::{Trace, TraceEvent, Workload};
+
+/// Random workload + open-loop trace (prop_cluster's shape).
+fn gen_scenario(g: &mut Gen) -> (Workload, Trace) {
+    let n_funcs = g.int(1, 10);
+    let mut w = Workload::default();
+    for i in 0..n_funcs {
+        let class = &CATALOG[g.int(0, CATALOG.len() - 1)];
+        w.register(class, i, g.f64(0.5, 20.0));
+    }
+    let n_events = g.int(1, 100);
+    let horizon = g.f64(10.0, 240.0);
+    let mut t = Trace::default();
+    for _ in 0..n_events {
+        t.events.push(TraceEvent {
+            at: secs(g.f64(0.0, horizon)),
+            func: FuncId(g.int(0, n_funcs - 1) as u32),
+        });
+    }
+    t.sort();
+    (w, t)
+}
+
+fn gen_plane_config(g: &mut Gen) -> PlaneConfig {
+    PlaneConfig {
+        policy: *g.choose(&[
+            PolicyKind::Fcfs,
+            PolicyKind::Batch,
+            PolicyKind::PaellaSjf,
+            PolicyKind::Eevdf,
+            PolicyKind::Sfq,
+            PolicyKind::Mqfq,
+        ]),
+        // >= 2 GPUs so a mid-run device failure always leaves a live
+        // device to evacuate to (recovery is also always scheduled).
+        devices: uniform_fleet(2, V100, MultiplexMode::Plain),
+        d: g.int(1, 3),
+        pool_size: g.int(2, 32),
+        mqfq: MqfqConfig {
+            t: g.f64(0.0, 20.0),
+            ttl_alpha: g.f64(0.0, 4.0),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Arbitrary seeded storm: transient faults, stragglers, sometimes a
+/// poison tenant, sometimes a device failure (always with a recovery).
+fn gen_fault_config(g: &mut Gen, n_funcs: usize, horizon: f64) -> FaultConfig {
+    let mut fc = FaultConfig {
+        seed: g.int(0, 1 << 20) as u64,
+        transient_rate: g.f64(0.0, 0.5),
+        straggler_rate: g.f64(0.0, 0.2),
+        straggler_k: g.f64(1.5, 5.0),
+        retry_budget: g.int(1, 4) as u32,
+        ..Default::default()
+    };
+    if g.bool(0.3) {
+        fc.poison
+            .push((FuncId(g.int(0, n_funcs - 1) as u32), g.f64(0.5, 1.0)));
+    }
+    if g.bool(0.5) {
+        let fail_at = g.f64(0.05, horizon * 0.5);
+        let heal_at = fail_at + g.f64(0.1, horizon * 0.4);
+        fc.device_failures.push((secs(fail_at), GpuId(0)));
+        fc.device_recoveries.push((secs(heal_at), GpuId(0)));
+    }
+    if g.bool(0.3) {
+        fc.max_faults = g.int(1, 50) as u64;
+    }
+    fc
+}
+
+/// Exactly-once across arbitrary storms and policies: every arrival is
+/// either one completion record or one terminal retry-exhausted fate —
+/// never both, never neither — and the plane fully drains with the
+/// fault plan (and a possibly-failed device) in play.
+#[test]
+fn prop_faulty_replay_conserves_every_invocation() {
+    assert_prop("fault-storm exactly-once", 40, |g| {
+        let (w, t) = gen_scenario(g);
+        let n = t.len();
+        let n_funcs = w.funcs.len();
+        let horizon = 240.0;
+        let mut cfg = gen_plane_config(g);
+        let fc = gen_fault_config(g, n_funcs, horizon);
+        let failed_device = !fc.device_failures.is_empty();
+        cfg.faults = Some(fc.clone());
+        let ctx = format!(
+            "policy={} seed={} rate={:.2} straggle={:.2} budget={} poison={} devfail={}",
+            cfg.policy.name(),
+            fc.seed,
+            fc.transient_rate,
+            fc.straggler_rate,
+            fc.retry_budget,
+            fc.poison.len(),
+            failed_device,
+        );
+        let mut r = replay(w, &t, cfg);
+        let fates = r.plane.drain_fault_fates();
+        let completed = r.recorder().len();
+        if completed + fates.len() != n {
+            return Err(format!(
+                "{ctx}: {n} arrivals != {completed} completions + {} fates",
+                fates.len()
+            ));
+        }
+        if r.plane.pending() != 0 || r.plane.in_flight() != 0 {
+            return Err(format!(
+                "{ctx}: not drained ({} pending, {} in flight)",
+                r.plane.pending(),
+                r.plane.in_flight()
+            ));
+        }
+        // Each fate burned its full budget, and each inv appears once
+        // across both resolution sets.
+        for f in &fates {
+            if f.attempts != fc.retry_budget {
+                return Err(format!(
+                    "{ctx}: fate {:?} resolved at {} attempts (budget {})",
+                    f.inv, f.attempts, fc.retry_budget
+                ));
+            }
+            if r.recorder().records.iter().any(|rec| rec.inv == f.inv) {
+                return Err(format!("{ctx}: {:?} both completed and fated", f.inv));
+            }
+        }
+        let stats = r.plane.fault_stats();
+        if stats.retry_exhausted != fates.len() as u64 {
+            return Err(format!(
+                "{ctx}: stats.retry_exhausted {} != {} drained fates",
+                stats.retry_exhausted,
+                fates.len()
+            ));
+        }
+        // No failure injected => the fleet never shrank.
+        if !failed_device && r.plane.live_devices() != 2 {
+            return Err(format!(
+                "{ctx}: {} live devices with no failure injected",
+                r.plane.live_devices()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Cluster-level exactly-once: the merged recorder plus the per-shard
+/// fate sum conserves arrivals under every router, with each shard
+/// running the same seeded storm.
+#[test]
+fn prop_faulty_cluster_conserves_across_routers() {
+    assert_prop("cluster fault conservation", 30, |g| {
+        let (w, t) = gen_scenario(g);
+        let n = t.len();
+        let n_funcs = w.funcs.len();
+        let mut plane = gen_plane_config(g);
+        plane.faults = Some(gen_fault_config(g, n_funcs, 240.0));
+        let cfg = ClusterConfig {
+            n_shards: g.int(1, 6),
+            router: *g.choose(&ALL_ROUTERS),
+            plane,
+            shard_planes: Vec::new(),
+            load_factor: g.f64(1.0, 3.0),
+            seed: g.int(0, 1 << 20) as u64,
+            ..Default::default()
+        };
+        let ctx = format!("shards={} router={}", cfg.n_shards, cfg.router.name());
+        let mut r = replay_cluster(w, &t, cfg);
+        let fates = r.cluster.drain_fault_fates();
+        let completed = r.recorder().len();
+        if completed + fates.len() != n {
+            return Err(format!(
+                "{ctx}: {n} arrivals != {completed} completions + {} fates",
+                fates.len()
+            ));
+        }
+        if r.cluster.pending() != 0 || r.cluster.in_flight() != 0 {
+            return Err(format!(
+                "{ctx}: not drained ({} pending, {} in flight)",
+                r.cluster.pending(),
+                r.cluster.in_flight()
+            ));
+        }
+        let stats = r.cluster.fault_stats();
+        if stats.retry_exhausted != fates.len() as u64 {
+            return Err(format!(
+                "{ctx}: summed retry_exhausted {} != {} fates",
+                stats.retry_exhausted,
+                fates.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Neutral-plan bit-identity: `faults: Some(FaultConfig::default())`
+/// (a plan with nothing to inject) must replay bit-identically to
+/// `faults: None` — same records, makespan, and event count — proving
+/// the fault branches are pure overlays on the scheduling core.
+#[test]
+fn prop_zero_fault_plan_is_bit_identical() {
+    assert_prop("zero-fault plan identity", 30, |g| {
+        let (w, t) = gen_scenario(g);
+        let base = gen_plane_config(g);
+        let mut armed = base.clone();
+        armed.faults = Some(FaultConfig::default());
+
+        let a = replay(w.clone(), &t, base.clone());
+        let mut b = replay(w, &t, armed);
+        let ctx = format!("policy={} d={}", base.policy.name(), base.d);
+        if a.events != b.events {
+            return Err(format!("{ctx}: events {} != {}", a.events, b.events));
+        }
+        if a.makespan != b.makespan {
+            return Err(format!(
+                "{ctx}: makespan {} != {}",
+                a.makespan, b.makespan
+            ));
+        }
+        if a.recorder().records != b.recorder().records {
+            return Err(format!("{ctx}: record streams diverge"));
+        }
+        let fates = b.plane.drain_fault_fates();
+        if !fates.is_empty() {
+            return Err(format!("{ctx}: empty plan produced {} fates", fates.len()));
+        }
+        let stats = b.plane.fault_stats();
+        if stats != Default::default() {
+            return Err(format!("{ctx}: empty plan moved fault stats: {stats:?}"));
+        }
+        Ok(())
+    });
+}

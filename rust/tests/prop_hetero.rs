@@ -163,6 +163,7 @@ fn prop_identical_shard_planes_match_shared_plane() {
             shard_planes: Vec::new(),
             load_factor,
             seed,
+            ..Default::default()
         };
         let explicit = ClusterConfig {
             shard_planes: vec![plane.clone(); n_shards],
@@ -211,6 +212,7 @@ fn prop_weighted_sticky_equals_blind_on_uniform_clusters() {
             shard_planes: Vec::new(),
             load_factor: g.f64(1.0, 3.0),
             seed: g.int(0, 1 << 20) as u64,
+            ..Default::default()
         };
         let blind_cfg = ClusterConfig {
             router: RouterKind::StickyChBlind,
@@ -263,6 +265,7 @@ fn prop_mixed_clusters_conserve_invocations() {
             shard_planes,
             load_factor: g.f64(1.0, 3.0),
             seed: g.int(0, 1 << 20) as u64,
+            ..Default::default()
         };
         let ctx = format!("shards={n_shards} router={}", cfg.router.name());
         let r = replay_cluster(w, &t, cfg);

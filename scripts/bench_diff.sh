@@ -75,7 +75,8 @@ def flatten(value, prefix, out):
                                                "connections",
                                                "shards", "flows", "active",
                                                "telemetry",
-                                               "phase", "window") if k in sub]
+                                               "phase", "window",
+                                               "fault", "breaker", "shed") if k in sub]
                 if ident:
                     label = ":".join(ident)
             flatten(sub, f"{prefix}[{label}]", out)

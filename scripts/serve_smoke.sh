@@ -15,11 +15,22 @@ echo "== cargo build --release (serve smoke) =="
 cargo build --release
 
 PORT="${SERVE_SMOKE_PORT:-18077}"
+FPORT=$((PORT + 1))
 LOG="$(mktemp)"
+FLOG="$(mktemp)"
 "$BIN" serve --addr "127.0.0.1:$PORT" --scale 0.001 --shards 4 --router sticky \
   >"$LOG" 2>&1 &
 SRV=$!
-trap 'kill "$SRV" 2>/dev/null || true; rm -f "$LOG"' EXIT
+# Second server with a seeded fault plan: transient exec faults retried
+# transparently, plus a poison-function circuit breaker (threshold 1.0
+# so only the all-fail poison tenant can trip it; 1 s cooldown so the
+# half-open probe path runs inside the smoke).
+"$BIN" serve --addr "127.0.0.1:$FPORT" --scale 0.001 --shards 1 \
+  --fault-seed 7 --fault-rate 0.15 --retry-budget 5 \
+  --poison 4:1.0 --breaker 8:1.0:1 \
+  >"$FLOG" 2>&1 &
+FSRV=$!
+trap 'kill "$SRV" "$FSRV" 2>/dev/null || true; rm -f "$LOG" "$FLOG"' EXIT
 
 python3 - "$PORT" <<'EOF'
 import json, socket, sys, time
@@ -216,4 +227,89 @@ assert doc["serving"]["open_connections"] >= 1, doc["serving"]
 call({"cmd": "quit"})
 print("serve smoke: OK (sync + async + pipeline + push + errors + legacy "
       "+ telemetry + membership + %d invokes in %.2fs)" % (N, wall))
+EOF
+
+# -- Fault-tolerance round-trip against the fault-configured server:
+# transient faults retried to completion, the poison tenant tripping
+# the breaker into quarantine, and the half-open probe after cooldown.
+python3 - "$FPORT" <<'EOF'
+import json, socket, sys, time
+
+port = int(sys.argv[1])
+deadline = time.time() + 30
+while True:
+    try:
+        s = socket.create_connection(("127.0.0.1", port), timeout=2)
+        break
+    except OSError:
+        if time.time() > deadline:
+            sys.exit("fault serve never came up on port %d" % port)
+        time.sleep(0.1)
+
+s.settimeout(60)
+f = s.makefile("rwb")
+
+def call(req):
+    f.write((json.dumps(req) + "\n").encode())
+    f.flush()
+    line = f.readline()
+    assert line, "fault server closed the connection"
+    return json.loads(line)
+
+def prom_sum(body, family):
+    return sum(float(l.rsplit(" ", 1)[1]) for l in body.splitlines()
+               if l.startswith(family))
+
+hello = call({"cmd": "hello", "v": 1})
+assert hello["ok"], hello
+
+# Transient faults (rate 0.15/attempt) are retried server-side: every
+# healthy sync invoke still completes — the client never sees a fault.
+for _ in range(40):
+    done = call({"cmd": "invoke", "func": "fft-0", "mode": "sync",
+                 "deadline_ms": 60000})
+    assert done["ok"] and done["type"] == "done", done
+m = call({"cmd": "metrics", "format": "prom"})
+assert prom_sum(m["body"], "mqfq_faults_transient_total") >= 1, m["body"][:400]
+assert prom_sum(m["body"], "mqfq_retries_total") >= 1, m["body"][:400]
+assert prom_sum(m["body"], "mqfq_retry_exhausted_total") == 0, m["body"][:400]
+
+# The poison tenant (isoneural-0, fault rate 1.0) burns its retry
+# budget (exec-failed), feeds the breaker all-fail samples, and trips
+# it: subsequent invokes are quarantined without consuming attempts.
+codes = []
+for _ in range(12):
+    r = call({"cmd": "invoke", "func": "isoneural-0", "mode": "sync",
+              "deadline_ms": 60000})
+    assert not r["ok"], r
+    codes.append(r["error"])
+assert "exec-failed" in codes, codes
+assert codes[-1] == "quarantined", codes
+m = call({"cmd": "metrics", "format": "prom"})
+assert prom_sum(m["body"], "mqfq_breaker_trips_total") >= 1, m["body"][:400]
+assert prom_sum(m["body"], "mqfq_retry_exhausted_total") >= 1, m["body"][:400]
+
+# After the 1 s cooldown the breaker goes half-open: the next invoke is
+# admitted as a probe (it still fails — the tenant is still poison — so
+# the breaker re-opens and the following invoke is quarantined again).
+time.sleep(1.2)
+r = call({"cmd": "invoke", "func": "isoneural-0", "mode": "sync",
+          "deadline_ms": 60000})
+assert not r["ok"] and r["error"] == "exec-failed", r
+m = call({"cmd": "metrics", "format": "prom"})
+assert prom_sum(m["body"], "mqfq_breaker_probes_total") >= 1, m["body"][:400]
+r = call({"cmd": "invoke", "func": "isoneural-0", "mode": "sync",
+          "deadline_ms": 60000})
+assert not r["ok"] and r["error"] == "quarantined", r
+
+# Healthy traffic was never quarantined and nothing is stuck.
+done = call({"cmd": "invoke", "func": "fft-0", "mode": "sync",
+             "deadline_ms": 60000})
+assert done["ok"], done
+stats = call({"cmd": "stats"})
+assert stats["pending"] == 0 and stats["in_flight"] == 0, stats
+
+call({"cmd": "quit"})
+print("serve smoke (faults): OK (transient retries + breaker trip "
+      "+ quarantine + half-open probe)")
 EOF

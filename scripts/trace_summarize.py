@@ -23,6 +23,12 @@ Lifecycle joins are keyed on (shard, inv). Field semantics per kind
   batch       a=size b=vt_ns          same-flow batch dispatched
   d_resize    a=new_d b=old_d         adaptive-D controller resized tokens
   estimate    a=pred_ns b=actual_ns   estimator accuracy at completion
+  fault       a=kind b=attempt c=gpu  attempt failed (0=device 1=transient
+                                      2=straggler)
+  requeue     a=attempts              failed attempt back at flow head
+  breaker_state a=state               breaker moved (0=closed 1=open
+                                      2=half-open)
+  shed        a=pred_wait_ns          admission shed by overload policy
 
 Derived phases (nanoseconds in the trace, reported in ms):
 
@@ -95,6 +101,12 @@ def summarize(events):
     batch_dispatches = 0
     batched_invocations = 0
     d_resizes = 0
+    FAULT_KINDS = {0: "device", 1: "transient", 2: "straggler"}
+    BREAKER_STATES = {0: "closed", 1: "open", 2: "half_open"}
+    faults = {}
+    requeues = 0
+    breaker_transitions = {}
+    sheds = 0
     # (shard, inv) -> {phase timestamps / fields}
     invs = {}
     phases = {"queue_wait": [], "boot": [], "mem_block": [], "exec": [],
@@ -143,6 +155,16 @@ def summarize(events):
             d_resizes += 1
         elif kind == "estimate":
             phases["est_error"].append(abs(ev.get("a", 0) - ev.get("b", 0)))
+        elif kind == "fault":
+            fk = FAULT_KINDS.get(ev.get("a", -1), "unknown")
+            faults[fk] = faults.get(fk, 0) + 1
+        elif kind == "requeue":
+            requeues += 1
+        elif kind == "breaker_state":
+            bs = BREAKER_STATES.get(ev.get("a", -1), "unknown")
+            breaker_transitions[bs] = breaker_transitions.get(bs, 0) + 1
+        elif kind == "shed":
+            sheds += 1
 
     for rec in invs.values():
         if "submit_at" in rec and "dispatch_at" in rec:
@@ -163,6 +185,10 @@ def summarize(events):
         "batch_dispatches": batch_dispatches,
         "batched_invocations": batched_invocations,
         "d_resizes": d_resizes,
+        "faults": dict(sorted(faults.items())),
+        "requeues": requeues,
+        "breaker_transitions": dict(sorted(breaker_transitions.items())),
+        "sheds": sheds,
         "phases": {name: phase_stats(vals) for name, vals in phases.items()},
     }
 
@@ -194,6 +220,15 @@ def main():
               f"batches={summary['batch_dispatches']} "
               f"(covering {summary['batched_invocations']} invocations)  "
               f"D resizes={summary['d_resizes']}")
+    if (summary["faults"] or summary["requeues"]
+            or summary["breaker_transitions"] or summary["sheds"]):
+        fault_str = " ".join(f"{k}={n}" for k, n in summary["faults"].items())
+        brk_str = " ".join(
+            f"{k}={n}" for k, n in summary["breaker_transitions"].items())
+        print(f"  faults: {fault_str or 'none'}  "
+              f"requeues={summary['requeues']}  "
+              f"breaker: {brk_str or 'none'}  "
+              f"sheds={summary['sheds']}")
     print("  event kinds: "
           + "  ".join(f"{k}={n}" for k, n in summary["kinds"].items()))
     if summary["start_kinds"]:
